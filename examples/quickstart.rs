@@ -1,0 +1,68 @@
+//! Quickstart: build a demo model, prune it, run the compiler, execute all
+//! three Table-1 variants on one input, and print latency + agreement.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use prt_dnn::apps::{build_app, prepare_variant, AppSpec, Variant};
+use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
+use prt_dnn::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let threads = prt_dnn::util::num_threads();
+    // A width-0.5 style-transfer model keeps the quickstart snappy.
+    let app = "style";
+    let g = build_app(app, 0.5, 42)?;
+    let spec = AppSpec::for_app(app);
+    println!(
+        "app={} ({} LR nodes, {} params), {} pruning @ {:.0}%, {} threads",
+        app,
+        g.len(),
+        g.param_count(),
+        spec.scheme_kind,
+        spec.sparsity * 100.0,
+        threads
+    );
+
+    let x = Tensor::full(&[1, 3, 256, 256], 0.5);
+    let mut table = Table::new(
+        "quickstart: measured CPU latency",
+        &["variant", "mean ms", "p50 ms", "weights"],
+    );
+    let mut outputs = Vec::new();
+    let mut base_ms = 0.0;
+    for variant in Variant::table1() {
+        let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
+        let out = eng.run(std::slice::from_ref(&x))?;
+        let s = bench_auto_ms(600.0, || {
+            let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+        });
+        if variant == Variant::Unpruned {
+            base_ms = s.mean;
+        }
+        table.row(&[
+            variant.name().to_string(),
+            format!("{} ({})", ms(s.mean), speedup(base_ms, s.mean)),
+            ms(s.p50),
+            prt_dnn::util::fmt_bytes(eng.weight_bytes),
+        ]);
+        outputs.push((variant, out));
+    }
+    table.print();
+
+    // The pruned variants share weights -> outputs must agree closely.
+    let pruned = outputs
+        .iter()
+        .find(|(v, _)| *v == Variant::Pruned)
+        .unwrap();
+    let compiled = outputs
+        .iter()
+        .find(|(v, _)| *v == Variant::PrunedCompiler)
+        .unwrap();
+    let err = pruned.1[0].max_abs_diff(&compiled.1[0]);
+    println!("pruned vs pruned+compiler max |Δ| = {:.2e} (same math, different kernels)", err);
+    assert!(err < 1e-3);
+    println!("quickstart OK");
+    Ok(())
+}

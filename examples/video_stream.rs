@@ -1,0 +1,96 @@
+//! END-TO-END VALIDATION DRIVER (experiment E2E, DESIGN.md §6).
+//!
+//! Streams 300 synthetic video frames through the serving coordinator for
+//! each Table-1 variant of the style-transfer app, proving all layers
+//! compose: app graph → ADMM-style pruning → compiler passes → compact
+//! storage + reorder → multithreaded executor → bounded-queue server.
+//! Reports fps + latency percentiles + drop counts per variant, and (if
+//! `artifacts/` exists) cross-checks the native executor against the
+//! AOT-compiled PJRT artifact on identical weights.
+//!
+//! ```bash
+//! cargo run --release --example video_stream [-- --frames 300 --fps 30]
+//! ```
+
+use prt_dnn::apps::{build_style, prepare_variant, AppSpec, Variant};
+use prt_dnn::bench::Table;
+use prt_dnn::coordinator::{ServeConfig, Server};
+use prt_dnn::image::synth::FrameStream;
+use prt_dnn::runtime::{Manifest, PjrtModel};
+use prt_dnn::tensor::Tensor;
+use prt_dnn::util::cli::Args;
+use std::sync::Mutex;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let frames = args.get_usize("frames", 300);
+    let fps = args.get_f64("fps", 30.0);
+    let threads = args.get_usize("threads", prt_dnn::util::num_threads());
+    let hw = 256;
+
+    println!(
+        "video_stream e2e: style transfer {0}x{0}, {1} frames at {2} fps, {3} compute threads",
+        hw, frames, fps, threads
+    );
+    let g = build_style(hw, 0.5, 42);
+    let spec = AppSpec::for_app("style");
+
+    let mut table = Table::new(
+        "E2E serving (style transfer, synthetic video)",
+        &["variant", "fps", "p50 ms", "p90 ms", "p99 ms", "dropped", "realtime@30"],
+    );
+    for variant in Variant::table1() {
+        let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
+        let src = Mutex::new(FrameStream::new(hw, hw, 9));
+        let report = Server::new(
+            &eng,
+            ServeConfig {
+                source_fps: fps,
+                queue_depth: 4,
+                workers: 1,
+                frames,
+            },
+        )
+        .serve(|_| src.lock().unwrap().next_frame().to_tensor())?;
+        table.row(&[
+            variant.name().to_string(),
+            format!("{:.1}", report.throughput_fps()),
+            format!("{:.1}", report.latency.p50),
+            format!("{:.1}", report.latency.p90),
+            format!("{:.1}", report.latency.p99),
+            format!("{}", report.dropped),
+            if report.is_realtime(fps) { "YES".into() } else { "no".to_string() },
+        ]);
+    }
+    table.print();
+
+    // Optional PJRT cross-check: native executor vs AOT artifact on the
+    // exported weights (requires `make artifacts`).
+    match Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(manifest) => {
+            let entry = manifest
+                .find("style_transfer", "dense")
+                .ok_or_else(|| anyhow::anyhow!("no style_transfer artifact"))?;
+            let client = PjrtModel::cpu_client()?;
+            let model = PjrtModel::load(&client, entry)?;
+            let gjson = std::path::Path::new("artifacts/style_transfer.graph.json");
+            let exported = prt_dnn::dsl::io::load(gjson)?;
+            let eng = prt_dnn::executor::Engine::new(&exported, threads)?;
+            let shape = entry.input_shapes[0].clone();
+            let x = Tensor::full(&shape, 0.5);
+            let native = eng.run(std::slice::from_ref(&x))?;
+            let pjrt = model.run(std::slice::from_ref(&x))?;
+            let err = native[0].rel_l2(&pjrt[0]);
+            println!(
+                "PJRT cross-check (jax AOT vs native executor, same weights): rel L2 = {:.3e}",
+                err
+            );
+            assert!(err < 1e-3, "executor disagrees with XLA");
+        }
+        Err(_) => {
+            println!("(artifacts/ not built — skipping PJRT cross-check; run `make artifacts`)");
+        }
+    }
+    println!("video_stream e2e OK");
+    Ok(())
+}

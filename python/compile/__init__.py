@@ -1,0 +1,6 @@
+"""prt-dnn build-time python package: L2 JAX models + ADMM structured
+pruning + L1 Pallas kernels + the AOT export pipeline.
+
+Never imported at inference time — `make artifacts` runs it once; the Rust
+binary consumes the outputs (HLO text, .npy weights, LR-graph JSON).
+"""

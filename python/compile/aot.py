@@ -1,0 +1,158 @@
+"""AOT pipeline: lower the JAX demo models to HLO **text** + export weights
+and LR graphs for the Rust runtime. Runs once via `make artifacts`.
+
+Interchange is HLO text (NOT `.serialize()`): jax ≥ 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md and gen_hlo.py).
+
+Outputs in --out-dir (default ../artifacts):
+    manifest.json                 index consumed by rust runtime::Manifest
+    <app>.hlo.txt                 dense model, Pallas kernels inlined
+    <app>_pruned.hlo.txt          ADMM-pruned weights baked in
+    <app>.graph.json + weights/   LR graph for the native executor
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import data
+from compile.export import export_graph
+from compile.models import MODELS
+from compile.pruning import project
+
+APPS = {
+    # app -> (model key, input builder, artifact hw, width)
+    "style_transfer": ("style_transfer", lambda hw: (1, 3, hw, hw), 64, 0.25),
+    "coloring": ("coloring", lambda hw: (1, 1, hw, hw), 64, 0.25),
+    "super_resolution": ("super_resolution", lambda hw: (1, 3, hw, hw), 24, 0.25),
+}
+
+APP_SCHEME = {
+    "style_transfer": ("column", 0.75),
+    "coloring": ("pattern", 0.75),
+    "super_resolution": ("pattern", 0.70),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: baked-in weights must survive the text
+    # round trip (the default elides them as `constant({...})`, which the
+    # Rust-side parser cannot reconstruct).
+    return comp.as_hlo_text(True)
+
+
+def prune_params(params, scheme_kind, sparsity):
+    """Magnitude-project all prunable convs (AOT-time hard pruning; the
+    full ADMM path lives in train.py — artifacts use the same projection
+    the Rust side verifies)."""
+    out = dict(params)
+    stem = next(
+        (f"{s}.weight" for s in ("enc1", "low1", "head") if f"{s}.weight" in params),
+        None,
+    )
+    for k, v in params.items():
+        if not k.endswith(".weight") or np.ndim(v) != 4 or k == stem:
+            continue
+        o, i, kh, kw = v.shape
+        if scheme_kind == "pattern" and ((kh, kw) != (3, 3) or o <= 4):
+            continue
+        if scheme_kind != "pattern" and i * kh * kw < 32:
+            continue
+        pruned, _ = project(np.asarray(v), scheme_kind, sparsity)
+        out[k] = jnp.asarray(pruned)
+    return out
+
+
+def lower_app(name, params, forward, in_shape, use_kernel=True):
+    def fn(x):
+        return (forward(params, x),)
+
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--apps", default="all", help="comma list or 'all'")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument(
+        "--skip-pruned", action="store_true", help="only emit dense artifacts"
+    )
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    wanted = list(APPS) if args.apps == "all" else args.apps.split(",")
+
+    models = []
+    for app in wanted:
+        key, shape_fn, hw, width = APPS[app]
+        init, forward, graph_fn = MODELS[key]
+        params = init(jax.random.PRNGKey(args.seed), width)
+        in_shape = shape_fn(hw)
+
+        # Smoke-run the forward (kernels included) before lowering.
+        x = jnp.asarray(data.app_batch(app.split("_")[0] if app != "super_resolution" else "sr", 1, hw, seed=1)[0])
+        y = forward(params, x)
+        out_shape = list(np.shape(y))
+
+        # Dense artifact.
+        hlo = lower_app(app, params, forward, in_shape)
+        hlo_name = f"{app}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_name), "w") as f:
+            f.write(hlo)
+        models.append(
+            {
+                "name": app,
+                "variant": "dense",
+                "hlo": hlo_name,
+                "inputs": [list(in_shape)],
+                "outputs": [out_shape],
+            }
+        )
+        print(f"[aot] {app}: dense HLO {len(hlo)} chars, out={out_shape}")
+
+        # Pruned artifact (projected weights baked in).
+        if not args.skip_pruned:
+            kind, sp = APP_SCHEME[app]
+            pp = prune_params(params, kind, sp)
+            hlo_p = lower_app(app, pp, forward, in_shape)
+            hlo_p_name = f"{app}_pruned.hlo.txt"
+            with open(os.path.join(out_dir, hlo_p_name), "w") as f:
+                f.write(hlo_p)
+            models.append(
+                {
+                    "name": app,
+                    "variant": "pruned",
+                    "hlo": hlo_p_name,
+                    "inputs": [list(in_shape)],
+                    "outputs": [out_shape],
+                }
+            )
+            print(f"[aot] {app}: pruned ({kind}@{sp}) HLO {len(hlo_p)} chars")
+
+        # LR graph + weights for the native executor (same weights!).
+        nodes = graph_fn(hw, width)
+        export_graph(out_dir, app, nodes, {k: np.asarray(v) for k, v in params.items()})
+        print(f"[aot] {app}: exported LR graph + {len(params)} weight arrays")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"format": "prt-dnn-artifacts", "models": models}, f, indent=2)
+    print(f"[aot] wrote manifest with {len(models)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Procedural tiny corpora — the COCO / Places / DIV2K stand-ins
+(DESIGN.md §2). Deterministic per seed; numpy only."""
+
+import numpy as np
+
+
+def synth_photo(hw, seed):
+    """One synthetic photo [3, hw, hw] in [0,1]: sky gradient + textured
+    ground + blobs (matches rust/src/image/synth.rs in spirit)."""
+    rng = np.random.default_rng(seed)
+    img = np.zeros((3, hw, hw), dtype=np.float32)
+    horizon = int(hw * rng.uniform(0.35, 0.65))
+    sky = rng.uniform(0.4, 1.0, size=3)
+    ground = rng.uniform(0.15, 0.7, size=3)
+    yy = np.arange(hw).reshape(-1, 1) / max(hw - 1, 1)
+    for c in range(3):
+        img[c, :horizon, :] = sky[c] * (1.0 - 0.3 * yy[:horizon])
+        noise = rng.random((hw - horizon, hw)).astype(np.float32)
+        img[c, horizon:, :] = ground[c] * (0.7 + 0.5 * noise)
+    for _ in range(rng.integers(2, 6)):
+        cx, cy = rng.integers(0, hw, size=2)
+        r = rng.uniform(0.08, 0.2) * hw
+        color = rng.random(3).astype(np.float32)
+        y, x = np.ogrid[:hw, :hw]
+        d2 = (x - cx) ** 2 + (y - cy) ** 2
+        a = np.clip(1.0 - d2 / (r * r), 0.0, 1.0).astype(np.float32)
+        for c in range(3):
+            img[c] = img[c] * (1 - a) + color[c] * a
+    return np.clip(img, 0.0, 1.0)
+
+
+def batch_photos(n, hw, seed):
+    """[n, 3, hw, hw] batch of synthetic photos."""
+    return np.stack([synth_photo(hw, seed * 1000 + i) for i in range(n)])
+
+
+def grayscale(batch):
+    """RGB batch -> luma batch [n, 1, h, w]."""
+    r, g, b = batch[:, 0:1], batch[:, 1:2], batch[:, 2:3]
+    return 0.299 * r + 0.587 * g + 0.114 * b
+
+
+def downsample(batch, factor):
+    """Box-filter downsample for SR pairs."""
+    n, c, h, w = batch.shape
+    return batch.reshape(n, c, h // factor, factor, w // factor, factor).mean(
+        axis=(3, 5)
+    )
+
+
+def app_batch(app, n, hw, seed=0):
+    """(input, target) training pair for an app at the given resolution.
+
+    style: identity-ish target (the dense model's own output is the real
+           distillation target; here input==reference photo)
+    coloring: gray -> RGB
+    sr: low-res -> high-res (hw is the LOW resolution; target is 4x)
+    """
+    if app in ("style", "style_transfer"):
+        x = batch_photos(n, hw, seed)
+        return x.astype(np.float32), x.astype(np.float32)
+    if app == "coloring":
+        y = batch_photos(n, hw, seed)
+        return grayscale(y).astype(np.float32), y.astype(np.float32)
+    if app in ("sr", "super_resolution"):
+        hi = batch_photos(n, hw * 4, seed)
+        return downsample(hi, 4).astype(np.float32), hi.astype(np.float32)
+    raise ValueError(f"unknown app {app}")

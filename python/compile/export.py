@@ -1,0 +1,38 @@
+"""Export JAX model params + topology to the Rust LR-graph format
+(`<name>.graph.json` + `.npy` weights) — rust/src/dsl/io.rs is the reader."""
+
+import json
+import os
+
+import numpy as np
+
+
+def write_npy(path, arr):
+    np.save(path, np.asarray(arr, dtype=np.float32), allow_pickle=False)
+
+
+def export_graph(out_dir, name, nodes, params):
+    """Write `<out_dir>/<name>.graph.json` + `<name>.weights/*.npy`.
+
+    nodes: list of node dicts (the `*_graph` functions in models/).
+    params: dict of weight arrays keyed `node.slot`.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    wdir = os.path.join(out_dir, f"{name}.weights")
+    os.makedirs(wdir, exist_ok=True)
+    param_index = {}
+    for key in sorted(params):
+        fname = f"{name}.weights/{key}.npy"
+        write_npy(os.path.join(out_dir, fname), params[key])
+        param_index[key] = fname
+    doc = {
+        "format": "prt-dnn-graph",
+        "version": 1,
+        "name": name,
+        "nodes": nodes,
+        "params": param_index,
+    }
+    json_path = os.path.join(out_dir, f"{name}.graph.json")
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return json_path

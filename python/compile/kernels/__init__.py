@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles."""
+
+from compile.kernels.column_gemm import column_pruned_matmul, matmul_pallas
+from compile.kernels.pattern_conv import build_groups, pattern_grouped_matmul
+
+__all__ = [
+    "matmul_pallas",
+    "column_pruned_matmul",
+    "pattern_grouped_matmul",
+    "build_groups",
+]

@@ -1,0 +1,94 @@
+"""Pallas GEMM kernels: the compute hot-spot of every conv in the stack.
+
+HARDWARE ADAPTATION (DESIGN.md §3): the paper's mobile-GPU insight is that
+*structured* pruning lets the inner loop stay dense. On TPU that maps to:
+gather the surviving im2col rows once (HBM→VMEM data movement expressed at
+the XLA level), then run a **dense MXU matmul** over the reduced K. The
+Pallas kernel is that dense tile matmul; `column_pruned_matmul` composes
+gather + kernel.
+
+VMEM / MXU accounting (per kernel instance, f32):
+  A tile [bm, K], B tile [K, bn], C tile [bm, bn]
+  VMEM = 4·(bm·K + K·bn + bm·bn) bytes; with bm=bn=128 and K ≤ 4608
+  (the largest layer: 512·3·3) that is ≤ 4.8 MB — well under the ~16 MB
+  VMEM budget, so no K-loop is needed at these model sizes.
+  MXU: jnp.dot on [128,K]x[K,128] f32 tiles drives the 128×128 systolic
+  array at full occupancy for K ≥ 128 (smaller K pads — documented
+  inefficiency for the 1×1-conv layers).
+
+interpret=True everywhere: the CPU-only image cannot execute Mosaic
+custom-calls; structure is validated here, MXU efficiency is estimated
+analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-shaped.
+BM = 128
+BN = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One [bm, K] x [K, bn] -> [bm, bn] tile product on the MXU."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_pallas(a, b, bm: int = BM, bn: int = BN):
+    """C[M,N] = A[M,K] @ B[K,N] via a Pallas tile kernel.
+
+    Inputs are zero-padded to tile multiples; the pad contributes zeros to
+    the products and is sliced off the output.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul_pallas: K mismatch {k} vs {k2}"
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    ap = _pad_to(a.astype(jnp.float32), 0, bm)
+    bp = _pad_to(b.astype(jnp.float32), 1, bn)
+    mp, np_ = ap.shape[0], bp.shape[1]
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-only image; see module docstring
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def column_pruned_matmul(w_packed, keep, x, bm: int = BM, bn: int = BN):
+    """Column-pruned GEMM (the style-transfer hot path).
+
+    w_packed: [M, Kp] packed kept-column weights.
+    keep:     [Kp] int32 kept GEMM-K indices.
+    x:        [K, N] full rhs (im2col patch matrix).
+
+    The gather `x[keep]` is the HBM→VMEM compaction; the matmul runs dense
+    over Kp — compute drops proportionally to the pruning rate with *zero*
+    per-element index overhead in the inner loop.
+    """
+    x_packed = jnp.take(x, keep, axis=0)
+    return matmul_pallas(w_packed, x_packed, bm=bm, bn=bn)

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything here is the *semantic definition*; `column_gemm.py` /
+`pattern_conv.py` must match these to float tolerance (pytest enforces it
+with hypothesis sweeps). The oracles are also used by the model layer when
+a conv is too small to be worth a kernel launch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a, b):
+    """C[M,N] = A[M,K] @ B[K,N], f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def column_pruned_matmul_ref(w_packed, keep, x):
+    """Column-pruned GEMM: W stored packed over kept columns.
+
+    w_packed: [M, Kp] — dense values of the kept columns.
+    keep:     [Kp] int32 — kept column (GEMM-K) indices, sorted.
+    x:        [K, N] — the full dense right-hand side (im2col patches).
+
+    Equivalent to (W_full @ x) where W_full scatters w_packed into zeros.
+    """
+    x_packed = x[keep, :]  # gather kept rows: the compiler transform
+    return matmul_ref(w_packed, x_packed)
+
+
+def pattern_grouped_matmul_ref(groups, x, out_rows):
+    """Reorder-grouped sparse GEMM (pattern pruning after compaction).
+
+    groups: list of (rows[g_m] int32, cols[g_k] int32, vals[g_m, g_k] f32).
+    x:      [K, N] dense rhs.
+    out_rows: M of the output.
+
+    Each group's rows share one column support; its inner product is dense
+    over the compacted columns (the paper's matrix-reorder execution).
+    """
+    n = x.shape[1]
+    out = jnp.zeros((out_rows, n), dtype=jnp.float32)
+    for rows, cols, vals in groups:
+        part = matmul_ref(jnp.asarray(vals), x[np.asarray(cols), :])
+        out = out.at[np.asarray(rows), :].set(part)
+    return out
+
+
+def im2col_ref(x, kh, kw, stride, pad, pad_mode="zeros"):
+    """Patch matrix [C*kh*kw, OH*OW] of a single CHW image.
+
+    Row order matches the Rust side: row index = (c*kh + r)*kw + s.
+    """
+    c, h, w = x.shape
+    if pad > 0:
+        mode = "reflect" if pad_mode == "reflect" else "constant"
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)), mode=mode)
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    rows = []
+    for ci in range(c):
+        for r in range(kh):
+            for s in range(kw):
+                patch = jax.lax.dynamic_slice(
+                    x,
+                    (ci, r, s),
+                    (1, (oh - 1) * stride + 1, (ow - 1) * stride + 1),
+                )[0, ::stride, ::stride]
+                rows.append(patch.reshape(-1))
+    return jnp.stack(rows, axis=0), (oh, ow)
+
+
+def conv2d_ref(x, w, bias=None, stride=1, pad=0, pad_mode="zeros"):
+    """NCHW conv via im2col + matmul (the conv oracle).
+
+    x: [N,C,H,W], w: [O,I,kh,kw].
+    """
+    n = x.shape[0]
+    o, i, kh, kw = w.shape
+    wm = w.reshape(o, i * kh * kw)
+    outs = []
+    for s in range(n):
+        patches, (oh, ow) = im2col_ref(x[s], kh, kw, stride, pad, pad_mode)
+        y = matmul_ref(wm, patches).reshape(o, oh, ow)
+        outs.append(y)
+    y = jnp.stack(outs, axis=0)
+    if bias is not None:
+        y = y + bias.reshape(1, -1, 1, 1)
+    return y

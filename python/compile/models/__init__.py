@@ -1,0 +1,27 @@
+"""Layer-2 JAX model definitions (mirrors rust/src/apps/builders.rs)."""
+
+from compile.models.blocks import conv2d, init_conv
+from compile.models.coloring import coloring_forward, coloring_graph, init_coloring
+from compile.models.style_transfer import init_style, style_forward, style_graph
+from compile.models.super_resolution import init_sr, sr_forward, sr_graph
+
+MODELS = {
+    "style_transfer": (init_style, style_forward, style_graph),
+    "coloring": (init_coloring, coloring_forward, coloring_graph),
+    "super_resolution": (init_sr, sr_forward, sr_graph),
+}
+
+__all__ = [
+    "MODELS",
+    "conv2d",
+    "init_conv",
+    "init_style",
+    "style_forward",
+    "style_graph",
+    "init_coloring",
+    "coloring_forward",
+    "coloring_graph",
+    "init_sr",
+    "sr_forward",
+    "sr_graph",
+]

@@ -1,0 +1,104 @@
+"""Shared building blocks: conv (via the Pallas GEMM), norms, resampling.
+
+Parameter dictionaries are keyed exactly like the Rust LR graphs
+(`"enc1.weight"`, `"enc1_in.gamma"`, …) so `export.py` can emit a graph
+JSON the Rust DSL loads verbatim, and artifact outputs are directly
+comparable against the native executor on the same weights.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.column_gemm import matmul_pallas
+from compile.kernels.ref import im2col_ref
+
+
+def he_init(rng, shape):
+    fan_in = int(np.prod(shape[1:])) if len(shape) > 1 else shape[0]
+    std = float(np.sqrt(2.0 / max(fan_in, 1)))
+    return jax.random.normal(rng, shape, dtype=jnp.float32) * std
+
+
+def init_conv(params, rng, name, out_c, in_c, k):
+    r1, _ = jax.random.split(rng)
+    params[f"{name}.weight"] = he_init(r1, (out_c, in_c, k, k))
+    params[f"{name}.bias"] = jnp.zeros((out_c,), jnp.float32)
+
+
+def init_norm(params, name, c, kind="in"):
+    params[f"{name}.gamma"] = jnp.ones((c,), jnp.float32)
+    params[f"{name}.beta"] = jnp.zeros((c,), jnp.float32)
+    if kind == "bn":
+        params[f"{name}.mean"] = jnp.zeros((c,), jnp.float32)
+        params[f"{name}.var"] = jnp.ones((c,), jnp.float32)
+
+
+def conv2d(params, name, x, stride=1, pad=None, pad_mode="zeros", use_kernel=True):
+    """NCHW conv through im2col + the Pallas GEMM (the L1 hot path).
+
+    With `use_kernel=False` falls back to lax.conv (used for gradient-time
+    training where interpret-mode pallas is slow).
+    """
+    w = params[f"{name}.weight"]
+    b = params.get(f"{name}.bias")
+    o, i, kh, kw = w.shape
+    if pad is None:
+        pad = kh // 2
+    if not use_kernel:
+        xp = x
+        if pad > 0:
+            mode = "reflect" if pad_mode == "reflect" else "constant"
+            xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)), mode=mode)
+        y = jax.lax.conv_general_dilated(
+            xp, w, (stride, stride), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+    else:
+        wm = w.reshape(o, i * kh * kw)
+        outs = []
+        for s in range(x.shape[0]):
+            patches, (oh, ow) = im2col_ref(x[s], kh, kw, stride, pad, pad_mode)
+            outs.append(matmul_pallas(wm, patches).reshape(o, oh, ow))
+        y = jnp.stack(outs, axis=0)
+    if b is not None:
+        y = y + b.reshape(1, -1, 1, 1)
+    return y
+
+
+def instance_norm(params, name, x, eps=1e-5):
+    mean = x.mean(axis=(2, 3), keepdims=True)
+    var = x.var(axis=(2, 3), keepdims=True)
+    g = params[f"{name}.gamma"].reshape(1, -1, 1, 1)
+    b = params[f"{name}.beta"].reshape(1, -1, 1, 1)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def batch_norm(params, name, x, eps=1e-5):
+    g = params[f"{name}.gamma"].reshape(1, -1, 1, 1)
+    b = params[f"{name}.beta"].reshape(1, -1, 1, 1)
+    m = params[f"{name}.mean"].reshape(1, -1, 1, 1)
+    v = params[f"{name}.var"].reshape(1, -1, 1, 1)
+    return (x - m) / jnp.sqrt(v + eps) * g + b
+
+
+def upsample_nearest(x, factor):
+    return jnp.repeat(jnp.repeat(x, factor, axis=2), factor, axis=3)
+
+
+def pixel_shuffle(x, r):
+    """[N, C·r², H, W] -> [N, C, H·r, W·r]; channel (c·r²+dy·r+dx) maps to
+    output (c, y·r+dy, x·r+dx) — identical to the Rust kernel."""
+    n, cin, h, w = x.shape
+    c = cin // (r * r)
+    x = x.reshape(n, c, r, r, h, w)
+    x = x.transpose(0, 1, 4, 2, 5, 3)  # n, c, h, dy, w, dx
+    return x.reshape(n, c, h * r, w * r)
+
+
+def global_avg_pool(x):
+    return x.mean(axis=(2, 3))  # [N, C]
+
+
+def ch(base, width):
+    return max(int(round(base * width)), 2)

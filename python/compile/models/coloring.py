@@ -1,0 +1,163 @@
+"""DNN coloring network (Iizuka et al. 2016 global+local fusion, reduced).
+
+Mirrors rust/src/apps/builders.rs::build_coloring.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.blocks import (
+    batch_norm,
+    ch,
+    conv2d,
+    global_avg_pool,
+    he_init,
+    init_conv,
+    init_norm,
+    upsample_nearest,
+)
+
+
+def init_coloring(rng, width=0.25):
+    c1, c2, c3 = ch(16, width), ch(32, width), ch(48, width)
+    params = {}
+    keys = jax.random.split(rng, 16)
+    init_conv(params, keys[0], "low1", c1, 1, 3)
+    init_norm(params, "low1_bn", c1, "bn")
+    init_conv(params, keys[1], "low2", c2, c1, 3)
+    init_norm(params, "low2_bn", c2, "bn")
+    init_conv(params, keys[2], "low3", c3, c2, 3)
+    init_norm(params, "low3_bn", c3, "bn")
+    init_conv(params, keys[3], "mid1", c3, c3, 3)
+    init_norm(params, "mid1_bn", c3, "bn")
+    init_conv(params, keys[4], "glob1", c3, c3, 3)
+    init_norm(params, "glob1_bn", c3, "bn")
+    init_conv(params, keys[5], "glob2", c3, c3, 3)
+    init_norm(params, "glob2_bn", c3, "bn")
+    params["glob_fc.weight"] = he_init(keys[6], (c3, c3))
+    params["glob_fc.bias"] = jnp.zeros((c3,), jnp.float32)
+    init_conv(params, keys[7], "fuse1", c2, 2 * c3, 1)
+    init_conv(params, keys[8], "col1", c2, c2, 3)
+    init_conv(params, keys[9], "col2", c1, c2, 3)
+    init_conv(params, keys[10], "col3", 3, c1, 3)
+    return params
+
+
+def coloring_forward(params, x, use_kernel=True):
+    """x: [N, 1, H, W] grayscale -> RGB [N, 3, H, W]."""
+    k = dict(use_kernel=use_kernel)
+    h = conv2d(params, "low1", x, stride=2, **k)
+    h = jax.nn.relu(batch_norm(params, "low1_bn", h))
+    h = conv2d(params, "low2", h, **k)
+    h = jax.nn.relu(batch_norm(params, "low2_bn", h))
+    h = conv2d(params, "low3", h, stride=2, **k)
+    low = jax.nn.relu(batch_norm(params, "low3_bn", h))
+
+    mid = conv2d(params, "mid1", low, **k)
+    mid = jax.nn.relu(batch_norm(params, "mid1_bn", mid))
+
+    g = conv2d(params, "glob1", low, stride=2, **k)
+    g = jax.nn.relu(batch_norm(params, "glob1_bn", g))
+    g = conv2d(params, "glob2", g, stride=2, **k)
+    g = jax.nn.relu(batch_norm(params, "glob2_bn", g))
+    g = global_avg_pool(g)  # [N, C]
+    g = jax.nn.relu(g @ params["glob_fc.weight"].T + params["glob_fc.bias"])
+
+    # Broadcast global features over the mid spatial grid + concat.
+    n, c = g.shape
+    _, _, mh, mw = mid.shape
+    gb = jnp.broadcast_to(g.reshape(n, c, 1, 1), (n, c, mh, mw))
+    fused = jnp.concatenate([mid, gb], axis=1)
+    h = jax.nn.relu(conv2d(params, "fuse1", fused, pad=0, **k))
+
+    h = jax.nn.relu(conv2d(params, "col1", h, **k))
+    h = upsample_nearest(h, 2)
+    h = jax.nn.relu(conv2d(params, "col2", h, **k))
+    h = upsample_nearest(h, 2)
+    h = conv2d(params, "col3", h, **k)
+    return jax.nn.sigmoid(h)
+
+
+def coloring_graph(hw, width=0.25):
+    c1, c2, c3 = ch(16, width), ch(32, width), ch(48, width)
+
+    def conv_node(name, inputs, out_c, in_c, kk, stride=1, pad=None):
+        return {
+            "name": name,
+            "op": "conv2d",
+            "inputs": inputs,
+            "attrs": {
+                "out_c": out_c,
+                "in_c": in_c,
+                "kh": kk,
+                "kw": kk,
+                "stride": stride,
+                "pad": kk // 2 if pad is None else pad,
+                "pad_mode": "zeros",
+                "fused_act": "identity",
+            },
+        }
+
+    def bn(name, inputs, c):
+        return {
+            "name": name,
+            "op": "batchnorm",
+            "inputs": inputs,
+            "attrs": {"c": c, "eps": 1e-5},
+        }
+
+    def act(name, inputs, fn="relu"):
+        return {"name": name, "op": "act", "inputs": inputs, "attrs": {"fn": fn}}
+
+    nodes = [
+        {"name": "x", "op": "input", "inputs": [], "attrs": {"shape": [1, 1, hw, hw]}},
+        conv_node("low1", ["x"], c1, 1, 3, 2),
+        bn("low1_bn", ["low1"], c1),
+        act("low1_relu", ["low1_bn"]),
+        conv_node("low2", ["low1_relu"], c2, c1, 3),
+        bn("low2_bn", ["low2"], c2),
+        act("low2_relu", ["low2_bn"]),
+        conv_node("low3", ["low2_relu"], c3, c2, 3, 2),
+        bn("low3_bn", ["low3"], c3),
+        act("low3_relu", ["low3_bn"]),
+        conv_node("mid1", ["low3_relu"], c3, c3, 3),
+        bn("mid1_bn", ["mid1"], c3),
+        act("mid1_relu", ["mid1_bn"]),
+        conv_node("glob1", ["low3_relu"], c3, c3, 3, 2),
+        bn("glob1_bn", ["glob1"], c3),
+        act("glob1_relu", ["glob1_bn"]),
+        conv_node("glob2", ["glob1_relu"], c3, c3, 3, 2),
+        bn("glob2_bn", ["glob2"], c3),
+        act("glob2_relu", ["glob2_bn"]),
+        {"name": "gap", "op": "gap", "inputs": ["glob2_relu"], "attrs": {}},
+        {
+            "name": "glob_fc",
+            "op": "dense",
+            "inputs": ["gap"],
+            "attrs": {"out_f": c3, "in_f": c3, "fused_act": "relu"},
+        },
+        {
+            "name": "fuse_broadcast",
+            "op": "broadcast",
+            "inputs": ["glob_fc", "mid1_relu"],
+            "attrs": {},
+        },
+        {
+            "name": "fuse_concat",
+            "op": "concat",
+            "inputs": ["mid1_relu", "fuse_broadcast"],
+            "attrs": {},
+        },
+        conv_node("fuse1", ["fuse_concat"], c2, 2 * c3, 1),
+        act("fuse1_relu", ["fuse1"]),
+        conv_node("col1", ["fuse1_relu"], c2, c2, 3),
+        act("col1_relu", ["col1"]),
+        {"name": "col_up1", "op": "upsample", "inputs": ["col1_relu"], "attrs": {"factor": 2}},
+        conv_node("col2", ["col_up1"], c1, c2, 3),
+        act("col2_relu", ["col2"]),
+        {"name": "col_up2", "op": "upsample", "inputs": ["col2_relu"], "attrs": {"factor": 2}},
+        conv_node("col3", ["col_up2"], 3, c1, 3),
+        act("out_sigmoid", ["col3"], "sigmoid"),
+        {"name": "out", "op": "output", "inputs": ["out_sigmoid"], "attrs": {}},
+    ]
+    return nodes

@@ -1,0 +1,142 @@
+"""Style transfer generative network (MSG-Net-style; Zhang & Dana 2017).
+
+Mirrors rust/src/apps/builders.rs::build_style exactly — same node names,
+topology, and attribute values — so exported graphs load in the Rust DSL
+and PJRT artifacts are numerically comparable with the native executor.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.blocks import (
+    ch,
+    conv2d,
+    init_conv,
+    init_norm,
+    instance_norm,
+    upsample_nearest,
+)
+
+
+def init_style(rng, width=0.25):
+    c1, c2, c3 = ch(16, width), ch(32, width), ch(64, width)
+    params = {}
+    keys = jax.random.split(rng, 16)
+    init_conv(params, keys[0], "enc1", c1, 3, 9)
+    init_norm(params, "enc1_in", c1)
+    init_conv(params, keys[1], "enc2", c2, c1, 3)
+    init_norm(params, "enc2_in", c2)
+    init_conv(params, keys[2], "enc3", c3, c2, 3)
+    init_norm(params, "enc3_in", c3)
+    for b in range(3):
+        init_conv(params, keys[3 + 2 * b], f"res{b}_c1", c3, c3, 3)
+        init_norm(params, f"res{b}_in1", c3)
+        init_conv(params, keys[4 + 2 * b], f"res{b}_c2", c3, c3, 3)
+        init_norm(params, f"res{b}_in2", c3)
+    init_conv(params, keys[10], "dec1", c2, c3, 3)
+    init_norm(params, "dec1_in", c2)
+    init_conv(params, keys[11], "dec2", c1, c2, 3)
+    init_norm(params, "dec2_in", c1)
+    init_conv(params, keys[12], "dec3", 3, c1, 9)
+    return params
+
+
+def style_forward(params, x, use_kernel=True):
+    """x: [N, 3, H, W] in [0,1] -> stylized [N, 3, H, W]."""
+    k = dict(use_kernel=use_kernel, pad_mode="reflect")
+    h = conv2d(params, "enc1", x, **k)
+    h = jax.nn.relu(instance_norm(params, "enc1_in", h))
+    h = conv2d(params, "enc2", h, stride=2, **k)
+    h = jax.nn.relu(instance_norm(params, "enc2_in", h))
+    h = conv2d(params, "enc3", h, stride=2, **k)
+    h = jax.nn.relu(instance_norm(params, "enc3_in", h))
+    for b in range(3):
+        r = conv2d(params, f"res{b}_c1", h, **k)
+        r = jax.nn.relu(instance_norm(params, f"res{b}_in1", r))
+        r = conv2d(params, f"res{b}_c2", r, **k)
+        r = instance_norm(params, f"res{b}_in2", r)
+        h = r + h
+    h = upsample_nearest(h, 2)
+    h = conv2d(params, "dec1", h, **k)
+    h = jax.nn.relu(instance_norm(params, "dec1_in", h))
+    h = upsample_nearest(h, 2)
+    h = conv2d(params, "dec2", h, **k)
+    h = jax.nn.relu(instance_norm(params, "dec2_in", h))
+    h = conv2d(params, "dec3", h, **k)
+    return jax.nn.sigmoid(h)
+
+
+def style_graph(hw, width=0.25):
+    """LR-graph node list in the rust dsl::io JSON schema."""
+    c1, c2, c3 = ch(16, width), ch(32, width), ch(64, width)
+
+    def conv_node(name, inputs, out_c, in_c, kk, stride=1):
+        return {
+            "name": name,
+            "op": "conv2d",
+            "inputs": inputs,
+            "attrs": {
+                "out_c": out_c,
+                "in_c": in_c,
+                "kh": kk,
+                "kw": kk,
+                "stride": stride,
+                "pad": kk // 2,
+                "pad_mode": "reflect",
+                "fused_act": "identity",
+            },
+        }
+
+    def in_node(name, inputs, c):
+        return {
+            "name": name,
+            "op": "instancenorm",
+            "inputs": inputs,
+            "attrs": {"c": c, "eps": 1e-5},
+        }
+
+    def act(name, inputs, fn="relu"):
+        return {"name": name, "op": "act", "inputs": inputs, "attrs": {"fn": fn}}
+
+    nodes = [
+        {"name": "x", "op": "input", "inputs": [], "attrs": {"shape": [1, 3, hw, hw]}},
+        conv_node("enc1", ["x"], c1, 3, 9),
+        in_node("enc1_in", ["enc1"], c1),
+        act("enc1_relu", ["enc1_in"]),
+        conv_node("enc2", ["enc1_relu"], c2, c1, 3, 2),
+        in_node("enc2_in", ["enc2"], c2),
+        act("enc2_relu", ["enc2_in"]),
+        conv_node("enc3", ["enc2_relu"], c3, c2, 3, 2),
+        in_node("enc3_in", ["enc3"], c3),
+        act("enc3_relu", ["enc3_in"]),
+    ]
+    prev = "enc3_relu"
+    for b in range(3):
+        nodes += [
+            conv_node(f"res{b}_c1", [prev], c3, c3, 3),
+            in_node(f"res{b}_in1", [f"res{b}_c1"], c3),
+            act(f"res{b}_relu", [f"res{b}_in1"]),
+            conv_node(f"res{b}_c2", [f"res{b}_relu"], c3, c3, 3),
+            in_node(f"res{b}_in2", [f"res{b}_c2"], c3),
+            {
+                "name": f"res{b}_add",
+                "op": "add",
+                "inputs": [f"res{b}_in2", prev],
+                "attrs": {},
+            },
+        ]
+        prev = f"res{b}_add"
+    nodes += [
+        {"name": "up1", "op": "upsample", "inputs": [prev], "attrs": {"factor": 2}},
+        conv_node("dec1", ["up1"], c2, c3, 3),
+        in_node("dec1_in", ["dec1"], c2),
+        act("dec1_relu", ["dec1_in"]),
+        {"name": "up2", "op": "upsample", "inputs": ["dec1_relu"], "attrs": {"factor": 2}},
+        conv_node("dec2", ["up2"], c1, c2, 3),
+        in_node("dec2_in", ["dec2"], c1),
+        act("dec2_relu", ["dec2_in"]),
+        conv_node("dec3", ["dec2_relu"], 3, c1, 9),
+        act("out_sigmoid", ["dec3"], "sigmoid"),
+        {"name": "out", "op": "output", "inputs": ["out_sigmoid"], "attrs": {}},
+    ]
+    return nodes

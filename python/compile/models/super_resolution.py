@@ -1,0 +1,99 @@
+"""Super resolution: WDSR-style wide-activation residual net (Yu et al. 2018).
+
+Mirrors rust/src/apps/builders.rs::build_sr.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.blocks import (
+    ch,
+    conv2d,
+    init_conv,
+    pixel_shuffle,
+    upsample_nearest,
+)
+
+
+def init_sr(rng, width=0.25, scale=4):
+    c = ch(24, width)
+    wide = c * 2
+    params = {}
+    keys = jax.random.split(rng, 10)
+    init_conv(params, keys[0], "head", c, 3, 3)
+    for b in range(3):
+        init_conv(params, keys[1 + 2 * b], f"blk{b}_expand", wide, c, 3)
+        init_conv(params, keys[2 + 2 * b], f"blk{b}_reduce", c, wide, 3)
+    init_conv(params, keys[7], "tail", 3 * scale * scale, c, 3)
+    return params
+
+
+def sr_forward(params, x, scale=4, use_kernel=True):
+    """x: [N, 3, h, w] -> [N, 3, h·scale, w·scale]."""
+    k = dict(use_kernel=use_kernel)
+    h = conv2d(params, "head", x, **k)
+    for b in range(3):
+        r = jax.nn.relu(conv2d(params, f"blk{b}_expand", h, **k))
+        r = conv2d(params, f"blk{b}_reduce", r, **k)
+        h = r + h
+    t = conv2d(params, "tail", h, **k)
+    up = pixel_shuffle(t, scale)
+    skip = upsample_nearest(x, scale)
+    return up + skip
+
+
+def sr_graph(hw, width=0.25, scale=4):
+    c = ch(24, width)
+    wide = c * 2
+
+    def conv_node(name, inputs, out_c, in_c, kk, stride=1):
+        return {
+            "name": name,
+            "op": "conv2d",
+            "inputs": inputs,
+            "attrs": {
+                "out_c": out_c,
+                "in_c": in_c,
+                "kh": kk,
+                "kw": kk,
+                "stride": stride,
+                "pad": kk // 2,
+                "pad_mode": "zeros",
+                "fused_act": "identity",
+            },
+        }
+
+    def act(name, inputs, fn="relu"):
+        return {"name": name, "op": "act", "inputs": inputs, "attrs": {"fn": fn}}
+
+    nodes = [
+        {"name": "x", "op": "input", "inputs": [], "attrs": {"shape": [1, 3, hw, hw]}},
+        conv_node("head", ["x"], c, 3, 3),
+    ]
+    prev = "head"
+    for b in range(3):
+        nodes += [
+            conv_node(f"blk{b}_expand", [prev], wide, c, 3),
+            act(f"blk{b}_relu", [f"blk{b}_expand"]),
+            conv_node(f"blk{b}_reduce", [f"blk{b}_relu"], c, wide, 3),
+            {
+                "name": f"blk{b}_add",
+                "op": "add",
+                "inputs": [f"blk{b}_reduce", prev],
+                "attrs": {},
+            },
+        ]
+        prev = f"blk{b}_add"
+    nodes += [
+        conv_node("tail", [prev], 3 * scale * scale, c, 3),
+        {
+            "name": "pixelshuffle",
+            "op": "pixelshuffle",
+            "inputs": ["tail"],
+            "attrs": {"factor": scale},
+        },
+        {"name": "skip_up", "op": "upsample", "inputs": ["x"], "attrs": {"factor": scale}},
+        {"name": "skip_add", "op": "add", "inputs": ["pixelshuffle", "skip_up"], "attrs": {}},
+        {"name": "out", "op": "output", "inputs": ["skip_add"], "attrs": {}},
+    ]
+    return nodes

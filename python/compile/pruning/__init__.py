@@ -1,0 +1,24 @@
+"""Structured pruning: constraint sets, projections, ADMM (§2 of the paper)."""
+
+from compile.pruning.admm import AdmmConfig, admm_prune
+from compile.pruning.magnitude import magnitude_prune
+from compile.pruning.projections import (
+    PCONV_PATTERNS,
+    project,
+    project_channel,
+    project_column,
+    project_filter,
+    project_pattern,
+)
+
+__all__ = [
+    "AdmmConfig",
+    "admm_prune",
+    "magnitude_prune",
+    "project",
+    "project_column",
+    "project_filter",
+    "project_channel",
+    "project_pattern",
+    "PCONV_PATTERNS",
+]

@@ -1,0 +1,36 @@
+"""One-shot magnitude structured pruning — the baseline ADMM is compared
+against in the A1 experiment (project once, fine-tune under fixed mask)."""
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.pruning.projections import project
+
+
+def magnitude_prune(
+    loss_fn: Callable[[Dict[str, jnp.ndarray]], jnp.ndarray],
+    params: Dict[str, jnp.ndarray],
+    schemes: Dict[str, Tuple[str, float]],
+    finetune_steps: int = 40,
+    lr: float = 1e-2,
+):
+    """Project by magnitude once, then fine-tune surviving weights."""
+    params = dict(params)
+    masks = {}
+    for k, (kind, sp) in schemes.items():
+        pruned, _ = project(np.asarray(params[k]), kind, sp)
+        masks[k] = np.asarray(pruned != 0, dtype=np.float32)
+        params[k] = jnp.asarray(pruned)
+
+    def masked(p):
+        return {k: v * masks[k] if k in masks else v for k, v in p.items()}
+
+    step = jax.jit(jax.value_and_grad(lambda p: loss_fn(masked(p))))
+    for _ in range(finetune_steps):
+        _, g = step(params)
+        params = {k: v - lr * g[k] for k, v in params.items()}
+    params = masked(params)
+    return params, masks, float(loss_fn(params))

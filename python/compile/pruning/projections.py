@@ -1,0 +1,109 @@
+"""Euclidean projections onto the structured constraint sets S_i (Eq. 1).
+
+Each projection takes OIHW weights and returns the closest tensor whose
+support satisfies the structure at the requested sparsity — the Z-update of
+ADMM. Mirrors rust/src/pruning/scheme.rs::project_scheme (pytest asserts
+the two agree through exported masks).
+"""
+
+import numpy as np
+
+# The canonical 4-entry 3x3 pattern dictionary (PConv-style); flat kernel
+# positions 0..8, centre = 4. Identical to rust PatternSet::pconv_3x3().
+PCONV_PATTERNS = [
+    (1, 3, 4, 5),
+    (1, 4, 5, 7),
+    (3, 4, 5, 7),
+    (1, 3, 4, 7),
+    (0, 1, 3, 4),
+    (1, 2, 4, 5),
+    (3, 4, 6, 7),
+    (4, 5, 7, 8),
+]
+
+
+def project_column(w, sparsity):
+    """Keep the strongest (1-sparsity) fraction of GEMM columns (same
+    positions across all filters)."""
+    w = np.asarray(w, dtype=np.float32)
+    o = w.shape[0]
+    cols = int(np.prod(w.shape[1:]))
+    m = w.reshape(o, cols)
+    norms = (m * m).sum(axis=0)
+    keep_n = max(int(round(cols * (1.0 - sparsity))), 1)
+    keep = np.sort(np.argsort(-norms)[:keep_n])
+    out = np.zeros_like(m)
+    out[:, keep] = m[:, keep]
+    return out.reshape(w.shape), {"kind": "column", "keep": keep.tolist()}
+
+
+def project_filter(w, sparsity):
+    """Keep the strongest filters (whole rows)."""
+    w = np.asarray(w, dtype=np.float32)
+    o = w.shape[0]
+    m = w.reshape(o, -1)
+    norms = (m * m).sum(axis=1)
+    keep_n = max(int(round(o * (1.0 - sparsity))), 1)
+    keep = np.sort(np.argsort(-norms)[:keep_n])
+    out = np.zeros_like(m)
+    out[keep, :] = m[keep, :]
+    return out.reshape(w.shape), {"kind": "filter", "keep": keep.tolist()}
+
+
+def project_channel(w, sparsity):
+    """Keep the strongest input channels."""
+    w = np.asarray(w, dtype=np.float32)
+    o, i = w.shape[0], w.shape[1]
+    m = w.reshape(o, i, -1)
+    norms = (m * m).sum(axis=(0, 2))
+    keep_n = max(int(round(i * (1.0 - sparsity))), 1)
+    keep = np.sort(np.argsort(-norms)[:keep_n])
+    out = np.zeros_like(m)
+    out[:, keep, :] = m[:, keep, :]
+    return out.reshape(w.shape), {"kind": "channel", "keep": keep.tolist()}
+
+
+def project_pattern(w, sparsity):
+    """Pattern + connectivity projection for 3x3 kernels.
+
+    Every surviving kernel keeps its best-matching 4-entry dictionary
+    pattern; the weakest kernels are removed entirely (connectivity
+    pruning) so overall density hits (1 - sparsity).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    o, i, kh, kw = w.shape
+    assert (kh, kw) == (3, 3), "pattern pruning requires 3x3 kernels"
+    ksz = 9
+    kernels = w.reshape(o * i, ksz)
+    conn_keep_frac = float(np.clip((1.0 - sparsity) * ksz / 4.0, 0.05, 1.0))
+    keep_kernels = max(int(round(o * i * conn_keep_frac)), 1)
+    norms = (kernels * kernels).sum(axis=1)
+    kept = set(np.argsort(-norms)[:keep_kernels].tolist())
+
+    pat_mat = np.zeros((len(PCONV_PATTERNS), ksz), dtype=np.float32)
+    for pi, pat in enumerate(PCONV_PATTERNS):
+        pat_mat[pi, list(pat)] = 1.0
+
+    out = np.zeros_like(kernels)
+    ids = np.full((o, i), 255, dtype=np.uint8)
+    mags = np.abs(kernels) @ pat_mat.T  # [o*i, P]: retained magnitude per pattern
+    best = np.argmax(mags, axis=1)
+    for kidx in kept:
+        pid = int(best[kidx])
+        pat = list(PCONV_PATTERNS[pid])
+        out[kidx, pat] = kernels[kidx, pat]
+        ids[kidx // i, kidx % i] = pid
+    return out.reshape(w.shape), {"kind": "pattern", "ids": ids.tolist()}
+
+
+PROJECTIONS = {
+    "column": project_column,
+    "filter": project_filter,
+    "channel": project_channel,
+    "pattern": project_pattern,
+}
+
+
+def project(w, kind, sparsity):
+    """Dispatch by scheme kind. Returns (projected weights, scheme meta)."""
+    return PROJECTIONS[kind](w, sparsity)

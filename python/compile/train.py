@@ -1,0 +1,147 @@
+"""Training + ADMM pruning driver (experiment A1).
+
+Distillation objective: the *dense* model (randomly initialised, briefly
+trained on the synthetic corpus) defines reference outputs; ADMM prunes
+while holding those outputs — validating that ADMM converges to exactly
+structured weights with a small loss delta, which is the paper's §2 claim
+at reproduction scale (DESIGN.md §2).
+
+Usage:
+    python -m compile.train --app style --width 0.25 --hw 32
+    python -m compile.train --all            # all three apps, log summary
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data
+from compile.models import MODELS
+from compile.pruning import AdmmConfig, admm_prune, magnitude_prune
+
+APP_KEY = {"style": "style_transfer", "coloring": "coloring", "sr": "super_resolution"}
+
+# Per-app scheme kinds (paper §2: column for style, kernel/pattern for the
+# other two) + sparsity targets matching rust AppSpec::for_app.
+APP_SCHEME = {"style": ("column", 0.75), "coloring": ("pattern", 0.75), "sr": ("pattern", 0.70)}
+
+
+def prunable_keys(params, kind):
+    """Weight keys eligible for pruning (mirrors rust apps::variant)."""
+    convs = [k for k in params if k.endswith(".weight") and params[k].ndim == 4]
+    # First conv (stem) stays dense.
+    order = ["enc1", "low1", "head"]
+    stem = next((f"{s}.weight" for s in order if f"{s}.weight" in params), None)
+    keys = []
+    for k in convs:
+        if k == stem:
+            continue
+        o, i, kh, kw = params[k].shape
+        if kind == "pattern":
+            if (kh, kw) == (3, 3) and o > 4:
+                keys.append(k)
+        else:
+            if i * kh * kw >= 32:
+                keys.append(k)
+    return keys
+
+
+def run_app(app, width=0.25, hw=32, seed=0, quick=False):
+    key = APP_KEY[app]
+    init, forward, _ = MODELS[key]
+    rng = jax.random.PRNGKey(seed)
+    params = init(rng, width)
+    kind, sparsity = APP_SCHEME[app]
+
+    x_np, y_np = data.app_batch(app, 4, hw, seed=seed)
+    x, y = jnp.asarray(x_np), jnp.asarray(y_np)
+
+    fwd = (lambda p, xx: forward(p, xx, use_kernel=False))
+
+    # Brief dense pre-training toward the task target.
+    def task_loss(p):
+        return jnp.mean((fwd(p, x) - y) ** 2)
+
+    step = jax.jit(jax.value_and_grad(task_loss))
+    params = dict(params)
+    pre_steps = 10 if quick else 60
+    # SR regresses 4x-resolution targets through a residual skip — larger
+    # gradients, so it needs a gentler step.
+    pre_lr = 2e-3 if app == "sr" else 2e-2
+    for _ in range(pre_steps):
+        _, g = step(params)
+        params = {k: v - pre_lr * g[k] for k, v in params.items()}
+    dense_loss = float(task_loss(params))
+
+    # Distillation target = dense model outputs.
+    ref = fwd(params, x)
+
+    def distill_loss(p):
+        return jnp.mean((fwd(p, x) - ref) ** 2)
+
+    schemes = {k: (kind, sparsity) for k in prunable_keys(params, kind)}
+    cfg = AdmmConfig(
+        lr=1e-3 if app == "sr" else 5e-3,
+        admm_iters=2 if quick else 5,
+        sgd_steps_per_iter=5 if quick else 15,
+        finetune_steps=10 if quick else 40,
+    )
+    pruned, masks, cfg = admm_prune(distill_loss, params, schemes, cfg)
+    admm_loss = float(distill_loss(pruned))
+
+    # Magnitude baseline for comparison.
+    mag, _, mag_loss = magnitude_prune(
+        distill_loss, params, schemes,
+        finetune_steps=10 if quick else 40,
+        lr=1e-3 if app == "sr" else 1e-2,
+    )
+
+    density = float(
+        np.mean([float(np.mean(masks[k])) for k in schemes]) if schemes else 1.0
+    )
+    report = {
+        "app": app,
+        "scheme": kind,
+        "target_sparsity": sparsity,
+        "layers_pruned": len(schemes),
+        "achieved_density": density,
+        "dense_task_loss": dense_loss,
+        "admm_distill_loss": admm_loss,
+        "magnitude_distill_loss": mag_loss,
+        "admm_log": cfg.log,
+    }
+    return pruned, masks, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", choices=["style", "coloring", "sr"], default="style")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--hw", type=int, default=32)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON report here")
+    args = ap.parse_args()
+
+    apps = ["style", "coloring", "sr"] if args.all else [args.app]
+    reports = []
+    for app in apps:
+        _, _, report = run_app(app, width=args.width, hw=args.hw, quick=args.quick)
+        reports.append(report)
+        print(
+            f"[{app}] scheme={report['scheme']} layers={report['layers_pruned']} "
+            f"density={report['achieved_density']:.3f} "
+            f"admm_loss={report['admm_distill_loss']:.5f} "
+            f"magnitude_loss={report['magnitude_distill_loss']:.5f}"
+        )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

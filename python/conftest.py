@@ -1,0 +1,6 @@
+"""pytest bootstrap: make `compile.*` importable regardless of cwd."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,134 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (K1).
+
+Hypothesis sweeps shapes/sparsities; assert_allclose against ref.py is THE
+core correctness signal for the compute hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    build_groups,
+    column_pruned_matmul,
+    matmul_pallas,
+    pattern_grouped_matmul,
+)
+from compile.kernels.ref import (
+    column_pruned_matmul_ref,
+    conv2d_ref,
+    im2col_ref,
+    matmul_ref,
+    pattern_grouped_matmul_ref,
+)
+from compile.pruning import project
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 90),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_pallas_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k), dtype=np.float32)
+    b = rng.standard_normal((k, n), dtype=np.float32)
+    got = matmul_pallas(jnp.asarray(a), jnp.asarray(b))
+    want = matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 32),
+    k=st.integers(8, 72),
+    n=st.integers(1, 48),
+    frac=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_column_pruned_matmul_matches_ref(m, k, n, frac, seed):
+    rng = np.random.default_rng(seed)
+    kp = max(int(k * frac), 1)
+    keep = np.sort(rng.choice(k, size=kp, replace=False)).astype(np.int32)
+    w_packed = rng.standard_normal((m, kp), dtype=np.float32)
+    x = rng.standard_normal((k, n), dtype=np.float32)
+    got = column_pruned_matmul(jnp.asarray(w_packed), jnp.asarray(keep), jnp.asarray(x))
+    want = column_pruned_matmul_ref(jnp.asarray(w_packed), keep, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    # And against the scatter-to-dense definition.
+    w_full = np.zeros((m, k), dtype=np.float32)
+    w_full[:, keep] = w_packed
+    dense = matmul_ref(jnp.asarray(w_full), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    o=st.integers(4, 16),
+    i=st.integers(1, 6),
+    n=st.integers(1, 40),
+    sparsity=st.floats(0.4, 0.8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pattern_grouped_matmul_matches_ref(o, i, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((o, i, 3, 3), dtype=np.float32)
+    wp, _ = project(w, "pattern", sparsity)
+    wm = wp.reshape(o, i * 9)
+    groups = build_groups(wm)
+    x = rng.standard_normal((i * 9, n), dtype=np.float32)
+    got = pattern_grouped_matmul(groups, jnp.asarray(x), o)
+    want = pattern_grouped_matmul_ref(groups, jnp.asarray(x), o)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+    dense = matmul_ref(jnp.asarray(wm), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride,pad,pad_mode", [(1, 1, "zeros"), (2, 1, "zeros"), (1, 1, "reflect"), (1, 4, "reflect")])
+def test_im2col_conv_matches_lax(stride, pad, pad_mode):
+    """The im2col+GEMM conv oracle agrees with lax.conv (zeros) / padded
+    lax.conv (reflect)."""
+    rng = np.random.default_rng(0)
+    k = 2 * pad + 1
+    x = rng.standard_normal((2, 3, 12, 12), dtype=np.float32)
+    w = rng.standard_normal((5, 3, k, k), dtype=np.float32)
+    got = conv2d_ref(jnp.asarray(x), jnp.asarray(w), stride=stride, pad=pad, pad_mode=pad_mode)
+    xp = jnp.asarray(x)
+    if pad > 0:
+        mode = "reflect" if pad_mode == "reflect" else "constant"
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (pad, pad), (pad, pad)), mode=mode)
+    want = jax.lax.conv_general_dilated(
+        xp, jnp.asarray(w), (stride, stride), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_row_order_matches_rust_convention():
+    """Row index = (c*kh + r)*kw + s — the layout rust kernels assume."""
+    x = jnp.arange(2 * 3 * 3, dtype=jnp.float32).reshape(2, 3, 3)
+    patches, (oh, ow) = im2col_ref(x, 1, 1, 1, 0)
+    assert (oh, ow) == (3, 3)
+    np.testing.assert_array_equal(np.asarray(patches), np.asarray(x).reshape(2, 9))
+
+
+def test_matmul_pallas_pads_tiny_shapes():
+    a = jnp.ones((1, 1), jnp.float32)
+    b = jnp.full((1, 1), 3.0, jnp.float32)
+    out = matmul_pallas(a, b)
+    assert out.shape == (1, 1)
+    assert float(out[0, 0]) == 3.0
+
+
+def test_empty_groups_give_zero_output():
+    x = jnp.ones((9, 4), jnp.float32)
+    out = pattern_grouped_matmul([], x, 3)
+    assert out.shape == (3, 4)
+    assert float(jnp.abs(out).sum()) == 0.0

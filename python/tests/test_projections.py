@@ -1,0 +1,106 @@
+"""Projection operators: structure + density guarantees (the sets S_i)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.pruning import PCONV_PATTERNS, project
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    o=st.integers(2, 24),
+    i=st.integers(1, 12),
+    sparsity=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_column_projection_structure(o, i, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((o, i, 3, 3), dtype=np.float32)
+    wp, meta = project(w, "column", sparsity)
+    m = wp.reshape(o, -1)
+    keep = meta["keep"]
+    # Kept columns identical to original, others zero.
+    np.testing.assert_array_equal(m[:, keep], w.reshape(o, -1)[:, keep])
+    dropped = [c for c in range(m.shape[1]) if c not in set(keep)]
+    assert np.all(m[:, dropped] == 0)
+    # Density close to target.
+    target = 1.0 - sparsity
+    got = len(keep) / m.shape[1]
+    assert abs(got - target) <= 1.0 / m.shape[1] + 1e-9
+
+
+@settings(**SETTINGS)
+@given(
+    o=st.integers(4, 20),
+    i=st.integers(2, 8),
+    sparsity=st.floats(0.3, 0.8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pattern_projection_structure(o, i, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((o, i, 3, 3), dtype=np.float32)
+    wp, meta = project(w, "pattern", sparsity)
+    ids = np.asarray(meta["ids"], dtype=np.int64)
+    for oo in range(o):
+        for ii in range(i):
+            kern = wp[oo, ii].reshape(9)
+            if ids[oo, ii] == 255:
+                assert np.all(kern == 0)
+            else:
+                pat = set(PCONV_PATTERNS[ids[oo, ii]])
+                nz = set(np.nonzero(kern)[0].tolist())
+                assert nz.issubset(pat), f"kernel support {nz} not in pattern {pat}"
+
+
+def test_filter_and_channel_projection():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((8, 6, 3, 3), dtype=np.float32)
+    wf, meta_f = project(w, "filter", 0.5)
+    for o in range(8):
+        row = wf[o].reshape(-1)
+        if o in meta_f["keep"]:
+            np.testing.assert_array_equal(row, w[o].reshape(-1))
+        else:
+            assert np.all(row == 0)
+    wc, meta_c = project(w, "channel", 0.5)
+    for c in range(6):
+        blk = wc[:, c]
+        if c in meta_c["keep"]:
+            np.testing.assert_array_equal(blk, w[:, c])
+        else:
+            assert np.all(blk == 0)
+
+
+def test_projection_is_idempotent():
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((8, 4, 3, 3), dtype=np.float32)
+    for kind in ("column", "filter", "channel", "pattern"):
+        wp, _ = project(w, kind, 0.6)
+        wp2, _ = project(wp, kind, 0.6)
+        np.testing.assert_allclose(wp2, wp, atol=0)
+
+
+def test_projection_minimises_distance_column():
+    """The projection keeps the max-norm columns — any other same-size
+    support is farther in Frobenius norm."""
+    rng = np.random.default_rng(5)
+    w = rng.standard_normal((6, 2, 3, 3), dtype=np.float32)
+    wp, meta = project(w, "column", 0.5)
+    dist = np.linalg.norm(w - wp)
+    m = w.reshape(6, -1)
+    cols = m.shape[1]
+    keep_n = len(meta["keep"])
+    for trial in range(10):
+        alt = np.sort(rng.choice(cols, size=keep_n, replace=False))
+        alt_w = np.zeros_like(m)
+        alt_w[:, alt] = m[:, alt]
+        assert np.linalg.norm(m - alt_w) >= dist - 1e-5
+
+
+def test_pattern_requires_3x3():
+    w = np.zeros((4, 4, 5, 5), dtype=np.float32)
+    with pytest.raises(AssertionError):
+        project(w, "pattern", 0.5)

@@ -1,0 +1,84 @@
+//! I1 — the intro's framework comparison: "TVM takes 198 ms … TFLite 268 ms"
+//! for VGG-16 on Adreno 640, vs our optimized stack. We reproduce the
+//! *ordering* with baseline-simulator configs on the same substrate:
+//!   TFLite-like  = unfused graph, dense ops
+//!   TVM-like     = fused graph, dense ops (autotuned dense codegen)
+//!   ours         = pruned + fused + compact/reorder
+//! plus the modeled Adreno-640 numbers from the roofline.
+
+use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
+use prt_dnn::bench::{bench_auto_ms, ms, Table};
+use prt_dnn::passes::PassManager;
+use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
+use prt_dnn::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let threads = prt_dnn::util::num_threads();
+    // Measured at reduced scale (VGG-16 is 15.5 GMACs at full size).
+    let width = 0.25;
+    let g = build_app("vgg16", width, 42)?;
+    let spec = AppSpec::for_app("vgg16");
+
+    let mut t = Table::new(
+        format!("I1a measured VGG-16-shaped CPU ms (width={}, {} threads)", width, threads),
+        &["config", "ms", "vs TFLite-like"],
+    );
+    let mut results: Vec<(&str, f64)> = Vec::new();
+    for (name, variant) in [
+        ("TFLite-like (unfused dense)", Variant::Unpruned),
+        ("TVM-like (fused dense)", Variant::UnprunedCompiler),
+        ("ours (pruned+compiler)", Variant::PrunedCompiler),
+    ] {
+        let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
+        let shape = eng.input_shapes()[0].clone();
+        let x = Tensor::full(&shape, 0.5);
+        let s = bench_auto_ms(1000.0, || {
+            let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+        });
+        results.push((name, s.mean));
+    }
+    let base = results[0].1;
+    for (name, v) in &results {
+        t.row(&[name.to_string(), ms(*v), format!("{:.2}x", base / v)]);
+    }
+    t.print();
+    // Measured claim: ours beats both dense baselines. (TVM-like vs
+    // TFLite-like differ only by graph fusion, which is within noise on a
+    // CPU with no kernel-launch overhead; their ordering is asserted on
+    // the modeled mobile device below, where it actually matters.)
+    assert!(
+        results[2].1 < results[0].1 && results[2].1 < results[1].1,
+        "ours must beat both baselines: {:?}",
+        results
+    );
+
+    // Modeled full-size VGG-16 on the Adreno 640 (analytic, width=1).
+    let gm = build_app("vgg16", 1.0, 42)?;
+    let device = Device::adreno640();
+    let (tfl, _) = estimate_graph(&gm, &device, VariantKind::DenseUnfused, &[])?;
+    let mut fused = gm.clone();
+    PassManager::default().run_fixpoint(&mut fused, 4);
+    let (tvm, _) = estimate_graph(&fused, &device, VariantKind::DenseFused, &[])?;
+    let mut pruned = gm.clone();
+    let schemes = prune_graph(&mut pruned, &spec);
+    PassManager::default().run_fixpoint(&mut pruned, 4);
+    let (ours, _) = estimate_graph(&pruned, &device, VariantKind::CompactFused, &schemes)?;
+
+    let mut t2 = Table::new(
+        "I1b modeled full VGG-16 on Adreno 640 (ms)",
+        &["config", "modeled", "paper"],
+    );
+    t2.row(&["TFLite-like".into(), ms(tfl * 1e3), "268".into()]);
+    t2.row(&["TVM-like".into(), ms(tvm * 1e3), "198".into()]);
+    t2.row(&["ours (pruned+compiler)".into(), ms(ours * 1e3), "n/a (<75 target)".into()]);
+    t2.print();
+    assert!(
+        ours < tvm && tvm < tfl,
+        "modeled ordering violated: ours {} tvm {} tfl {}",
+        ours,
+        tvm,
+        tfl
+    );
+    println!("\nclaim check: modeled TVM-like < TFLite-like (fusion saves launches + memory passes on the mobile device); ours fastest on both substrates.");
+    Ok(())
+}

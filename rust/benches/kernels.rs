@@ -1,0 +1,115 @@
+//! K-micro — kernel microbenchmarks: dense GEMM GFLOP/s by shape and
+//! thread count, conv tiers (dense / CSR / column-compact / reordered) on
+//! a representative layer. Feeds the §Perf iteration log.
+
+use prt_dnn::bench::{bench_ms, ms, Table};
+use prt_dnn::dsl::op::{Activation, PadMode};
+use prt_dnn::kernels::conv::{
+    conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_reordered, ConvScratch,
+};
+use prt_dnn::kernels::gemm::gemm;
+use prt_dnn::kernels::im2col::ConvGeom;
+use prt_dnn::pruning::scheme::{project_scheme, Scheme};
+use prt_dnn::pruning::verify::apply_mask;
+use prt_dnn::reorder::{ReorderPlan, Schedule};
+use prt_dnn::sparse::{ColumnCompact, Csr, GemmView};
+use prt_dnn::tensor::Tensor;
+use prt_dnn::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(23);
+    let max_threads = prt_dnn::util::num_threads();
+
+    // Dense GEMM GFLOP/s.
+    let mut t = Table::new(
+        "K-micro dense GEMM",
+        &["M", "K", "N", "threads", "ms", "GFLOP/s"],
+    );
+    for &(m, k, n) in &[(64, 576, 4096), (128, 1152, 4096), (32, 288, 16384)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        for threads in [1, max_threads] {
+            let mut c = vec![0.0f32; m * n];
+            let s = bench_ms(2, 8, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                gemm(m, k, n, &a, &b, &mut c, threads);
+            });
+            let gflops = 2.0 * (m * k * n) as f64 / (s.mean / 1e3) / 1e9;
+            t.row(&[
+                format!("{}", m),
+                format!("{}", k),
+                format!("{}", n),
+                format!("{}", threads),
+                ms(s.mean),
+                format!("{:.2}", gflops),
+            ]);
+        }
+    }
+    t.print();
+
+    // Conv execution tiers on one layer: 64x32x3x3 over 64x64.
+    let (o, ic, hw) = (64, 32, 64);
+    let x = Tensor::randn(&[1, ic, hw, hw], &mut rng);
+    let w = Tensor::randn(&[o, ic, 3, 3], &mut rng);
+    let geom = ConvGeom::new(ic, hw, hw, 3, 1, 1);
+    let mut scratch = ConvScratch::new();
+    let threads = max_threads;
+
+    let mut t = Table::new(
+        format!("K-micro conv tiers (64x32x3x3 @ {0}x{0}, {1} threads)", hw, threads),
+        &["tier", "sparsity", "ms", "vs dense"],
+    );
+    let dense_s = bench_ms(2, 8, || {
+        let _ = conv2d_dense(
+            &x, &w, None, 1, 1, PadMode::Zeros, Activation::Identity, threads, &mut scratch,
+        );
+    });
+    t.row(&["dense".into(), "0%".into(), ms(dense_s.mean), "1.00x".into()]);
+
+    for kind in ["column", "pattern"] {
+        let s = project_scheme(&w, kind, 0.7, None);
+        let wp = apply_mask(&w, &s);
+        let gv = GemmView::from_oihw(&wp);
+        let sparsity = 1.0 - gv.nnz() as f64 / (gv.rows * gv.cols) as f64;
+
+        let csr = Csr::from_dense(&gv);
+        let csr_s = bench_ms(2, 8, || {
+            let _ = conv2d_csr(
+                &x, &csr, &geom, PadMode::Zeros, None, Activation::Identity, threads,
+                &mut scratch,
+            );
+        });
+        t.row(&[
+            format!("csr/{}", kind),
+            format!("{:.0}%", sparsity * 100.0),
+            ms(csr_s.mean),
+            format!("{:.2}x", dense_s.mean / csr_s.mean),
+        ]);
+
+        let fast = if let Scheme::Column { keep } = &s {
+            let cc = ColumnCompact::encode(&gv, keep);
+            bench_ms(2, 8, || {
+                let _ = conv2d_column_compact(
+                    &x, &cc, &geom, PadMode::Zeros, None, Activation::Identity, threads,
+                    &mut scratch,
+                );
+            })
+        } else {
+            let plan = ReorderPlan::build(&gv);
+            let sched = Schedule::build(&plan, threads);
+            bench_ms(2, 8, || {
+                let _ = conv2d_reordered(
+                    &x, &plan, &sched, &geom, PadMode::Zeros, None, Activation::Identity,
+                    &mut scratch,
+                );
+            })
+        };
+        t.row(&[
+            format!("compact/{}", kind),
+            format!("{:.0}%", sparsity * 100.0),
+            ms(fast.mean),
+            format!("{:.2}x", dense_s.mean / fast.mean),
+        ]);
+    }
+    t.print();
+}

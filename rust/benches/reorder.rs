@@ -1,0 +1,93 @@
+//! R1 — §3 "Matrix reorder": grouping filters with similar patterns and
+//! compacting columns fixes load imbalance + irregular access. Measures
+//! (a) the load-imbalance metric and (b) actual sparse GEMM wall time,
+//! CSR-without-reorder vs reordered, across thread counts.
+
+use prt_dnn::bench::{bench_ms, ms, Table};
+use prt_dnn::kernels::sparse_gemm::{spmm_csr, spmm_reordered};
+use prt_dnn::pruning::scheme::project_scheme;
+use prt_dnn::pruning::verify::apply_mask;
+use prt_dnn::reorder::schedule::naive_row_loads;
+use prt_dnn::reorder::{load_imbalance, ReorderPlan, Schedule};
+use prt_dnn::sparse::{Csr, GemmView};
+use prt_dnn::tensor::Tensor;
+use prt_dnn::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(17);
+    // A pattern-pruned layer shaped like the SR expand conv at width 1.0,
+    // with extra connectivity skew to stress load balance.
+    let (o, i) = (96, 48);
+    let w = Tensor::randn(&[o, i, 3, 3], &mut rng);
+    let s = project_scheme(&w, "pattern", 0.7, None);
+    let mut wp = apply_mask(&w, &s);
+    // Skew: zero out most kernels of the second half of filters (uneven nnz
+    // per row, the worst case for block-row CSR parallelism).
+    {
+        let cols = i * 9;
+        let data = wp.data_mut();
+        for r in o / 2..o {
+            for c in 0..cols {
+                if c % 4 != 0 {
+                    data[r * cols + c] = 0.0;
+                }
+            }
+        }
+    }
+    let gv = GemmView::from_oihw(&wp);
+    let csr = Csr::from_dense(&gv);
+    let plan = ReorderPlan::build(&gv);
+    let n = 32 * 32; // output pixels
+    let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
+
+    let mut t = Table::new(
+        format!(
+            "R1 sparse GEMM {}x{} (nnz={}, groups={}) x [{}x{}]",
+            gv.rows,
+            gv.cols,
+            gv.nnz(),
+            plan.group_count(),
+            gv.cols,
+            n
+        ),
+        &["threads", "imbalance CSR", "imbalance reorder", "CSR ms", "reorder ms", "speedup"],
+    );
+    for threads in [1usize, 2, 4, 8] {
+        let sched = Schedule::build(&plan, threads);
+        let imb_naive = load_imbalance(&naive_row_loads(&csr.row_nnz(), threads));
+        let imb_ro = load_imbalance(&sched.loads());
+
+        let mut c1 = vec![0.0f32; gv.rows * n];
+        let csr_t = bench_ms(2, 12, || {
+            c1.iter_mut().for_each(|v| *v = 0.0);
+            spmm_csr(&csr, &b, n, &mut c1, threads);
+        });
+        let mut c2 = vec![0.0f32; gv.rows * n];
+        let ro_t = bench_ms(2, 12, || {
+            c2.iter_mut().for_each(|v| *v = 0.0);
+            spmm_reordered(&plan, &sched, &b, n, &mut c2);
+        });
+        // Same math.
+        let err: f32 = c1
+            .iter()
+            .zip(c2.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-3, "reorder changed results: {}", err);
+
+        t.row(&[
+            format!("{}", threads),
+            format!("{:.2}", imb_naive),
+            format!("{:.2}", imb_ro),
+            ms(csr_t.mean),
+            ms(ro_t.mean),
+            format!("{:.2}x", csr_t.mean / ro_t.mean),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nclaim check: reorder schedule imbalance ~1.0 at all thread counts (CSR block-row \
+         partition degrades as threads grow). Wall-clock speedup requires real cores; on a \
+         single-CPU host (this image) the imbalance metric carries the claim and times are equal."
+    );
+}

@@ -1,0 +1,94 @@
+//! T1 — the paper's Table 1: average inference time for style transfer /
+//! coloring / super resolution under {unpruned, pruning, pruning+compiler}.
+//!
+//! Prints (a) measured CPU latency on this machine's native executor and
+//! (b) modeled Adreno-640 latency from the roofline cost model, next to
+//! the paper's reported numbers. The reproduction target is the *shape*:
+//! ordering, per-stage gains and total speedup band (DESIGN.md §6).
+
+use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
+use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
+use prt_dnn::passes::PassManager;
+use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
+use prt_dnn::tensor::Tensor;
+
+const PAPER: &[(&str, [f64; 3])] = &[
+    ("style", [283.0, 178.0, 67.0]),
+    ("coloring", [137.0, 85.0, 38.0]),
+    ("sr", [269.0, 192.0, 73.0]),
+];
+
+fn main() -> anyhow::Result<()> {
+    let threads = prt_dnn::util::num_threads();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let width = if quick { 0.25 } else { 1.0 };
+    let budget = if quick { 300.0 } else { 1500.0 };
+
+    // (a) measured on the native executor.
+    let mut measured = Table::new(
+        format!(
+            "T1a measured CPU ms (native executor, width={}, {} threads)",
+            width, threads
+        ),
+        &["app", "unpruned", "pruning", "pruning+compiler", "speedup"],
+    );
+    for (app, _) in PAPER {
+        let g = build_app(app, width, 42)?;
+        let spec = AppSpec::for_app(app);
+        let mut row = Vec::new();
+        let mut base = 0.0;
+        let mut last = 0.0;
+        for variant in Variant::table1() {
+            let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
+            let shape = eng.input_shapes()[0].clone();
+            let x = Tensor::full(&shape, 0.5);
+            let s = bench_auto_ms(budget, || {
+                let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+            });
+            if variant == Variant::Unpruned {
+                base = s.mean;
+            }
+            last = s.mean;
+            row.push(ms(s.mean));
+        }
+        row.insert(0, app.to_string());
+        row.push(speedup(base, last));
+        measured.row(&row);
+    }
+    measured.print();
+
+    // (b) modeled on the paper's device.
+    let device = Device::adreno640();
+    let model_width = 2.8; // analytic only: paper-scale channel counts
+    let mut modeled = Table::new(
+        format!("T1b modeled Adreno-640 ms (roofline, width={})", model_width),
+        &["app", "unpruned", "pruning", "pruning+compiler", "speedup", "paper"],
+    );
+    for (app, paper) in PAPER {
+        let g = build_app(app, model_width, 42)?;
+        let spec = AppSpec::for_app(app);
+        let (t_dense, _) = estimate_graph(&g, &device, VariantKind::DenseUnfused, &[])?;
+        let mut pruned = g.clone();
+        let schemes = prune_graph(&mut pruned, &spec);
+        let (t_csr, _) = estimate_graph(&pruned, &device, VariantKind::CsrUnfused, &schemes)?;
+        let mut fused = pruned.clone();
+        PassManager::default().run_fixpoint(&mut fused, 4);
+        let (t_c, _) = estimate_graph(&fused, &device, VariantKind::CompactFused, &schemes)?;
+        modeled.row(&[
+            app.to_string(),
+            ms(t_dense * 1e3),
+            ms(t_csr * 1e3),
+            ms(t_c * 1e3),
+            speedup(t_dense * 1e3, t_c * 1e3),
+            format!(
+                "{}/{}/{} = {:.1}x",
+                paper[0], paper[1], paper[2], paper[0] / paper[2]
+            ),
+        ]);
+    }
+    modeled.print();
+    println!(
+        "\nshape check: pruning row < unpruned, compiler row < pruning row, total speedup in the 2.5-5x band."
+    );
+    Ok(())
+}

@@ -1,0 +1,359 @@
+//! Graph builders for the demo applications.
+
+use crate::dsl::op::{Activation, Op, PadMode};
+use crate::dsl::Graph;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+fn ch(base: usize, width: f64) -> usize {
+    ((base as f64 * width).round() as usize).max(2)
+}
+
+/// Add a conv node with He-init weights + zero bias.
+#[allow(clippy::too_many_arguments)]
+fn conv(
+    g: &mut Graph,
+    rng: &mut Rng,
+    name: &str,
+    from: usize,
+    in_c: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    pad_mode: PadMode,
+) -> usize {
+    let id = g.add(
+        name,
+        Op::Conv2d {
+            out_c,
+            in_c,
+            kh: k,
+            kw: k,
+            stride,
+            pad: k / 2,
+            pad_mode,
+            fused_act: Activation::Identity,
+        },
+        &[from],
+    );
+    g.set_param(format!("{}.weight", name), Tensor::randn(&[out_c, in_c, k, k], rng));
+    g.set_param(format!("{}.bias", name), Tensor::zeros(&[out_c]));
+    id
+}
+
+/// Add an instance-norm node with unit gamma / zero beta.
+fn inorm(g: &mut Graph, name: &str, from: usize, c: usize) -> usize {
+    let id = g.add(name, Op::InstanceNorm { c, eps: 1e-5 }, &[from]);
+    g.set_param(format!("{}.gamma", name), Tensor::full(&[c], 1.0));
+    g.set_param(format!("{}.beta", name), Tensor::zeros(&[c]));
+    id
+}
+
+/// Add an inference-mode batch-norm node with randomized running stats
+/// (what a trained model would carry — exercises the BN-fold pass).
+fn bnorm(g: &mut Graph, rng: &mut Rng, name: &str, from: usize, c: usize) -> usize {
+    let id = g.add(name, Op::BatchNorm { c, eps: 1e-5 }, &[from]);
+    g.set_param(
+        format!("{}.gamma", name),
+        Tensor::randn(&[c], rng).map(|v| 1.0 + 0.1 * v),
+    );
+    g.set_param(format!("{}.beta", name), Tensor::randn(&[c], rng).map(|v| 0.1 * v));
+    g.set_param(format!("{}.mean", name), Tensor::randn(&[c], rng).map(|v| 0.1 * v));
+    g.set_param(
+        format!("{}.var", name),
+        Tensor::randn(&[c], rng).map(|v| 1.0 + 0.2 * v.abs()),
+    );
+    id
+}
+
+fn act(g: &mut Graph, name: &str, from: usize, a: Activation) -> usize {
+    g.add(name, Op::Act(a), &[from])
+}
+
+/// Style transfer: MSG-Net-style encoder / residual / decoder generative
+/// network with reflection padding and instance norm. Input [1,3,H,W].
+pub fn build_style(hw: usize, width: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new("style_transfer");
+    let (c1, c2, c3) = (ch(16, width), ch(32, width), ch(64, width));
+    let x = g.add("x", Op::Input { shape: vec![1, 3, hw, hw] }, &[]);
+
+    // Encoder.
+    let e1 = conv(&mut g, &mut rng, "enc1", x, 3, c1, 9, 1, PadMode::Reflect);
+    let e1n = inorm(&mut g, "enc1_in", e1, c1);
+    let e1a = act(&mut g, "enc1_relu", e1n, Activation::Relu);
+    let e2 = conv(&mut g, &mut rng, "enc2", e1a, c1, c2, 3, 2, PadMode::Reflect);
+    let e2n = inorm(&mut g, "enc2_in", e2, c2);
+    let e2a = act(&mut g, "enc2_relu", e2n, Activation::Relu);
+    let e3 = conv(&mut g, &mut rng, "enc3", e2a, c2, c3, 3, 2, PadMode::Reflect);
+    let e3n = inorm(&mut g, "enc3_in", e3, c3);
+    let mut prev = act(&mut g, "enc3_relu", e3n, Activation::Relu);
+
+    // Residual blocks.
+    for b in 0..3 {
+        let r1 = conv(
+            &mut g,
+            &mut rng,
+            &format!("res{}_c1", b),
+            prev,
+            c3,
+            c3,
+            3,
+            1,
+            PadMode::Reflect,
+        );
+        let r1n = inorm(&mut g, &format!("res{}_in1", b), r1, c3);
+        let r1a = act(&mut g, &format!("res{}_relu", b), r1n, Activation::Relu);
+        let r2 = conv(
+            &mut g,
+            &mut rng,
+            &format!("res{}_c2", b),
+            r1a,
+            c3,
+            c3,
+            3,
+            1,
+            PadMode::Reflect,
+        );
+        let r2n = inorm(&mut g, &format!("res{}_in2", b), r2, c3);
+        prev = g.add(format!("res{}_add", b), Op::Add, &[r2n, prev]);
+    }
+
+    // Decoder.
+    let u1 = g.add("up1", Op::UpsampleNearest { factor: 2 }, &[prev]);
+    let d1 = conv(&mut g, &mut rng, "dec1", u1, c3, c2, 3, 1, PadMode::Reflect);
+    let d1n = inorm(&mut g, "dec1_in", d1, c2);
+    let d1a = act(&mut g, "dec1_relu", d1n, Activation::Relu);
+    let u2 = g.add("up2", Op::UpsampleNearest { factor: 2 }, &[d1a]);
+    let d2 = conv(&mut g, &mut rng, "dec2", u2, c2, c1, 3, 1, PadMode::Reflect);
+    let d2n = inorm(&mut g, "dec2_in", d2, c1);
+    let d2a = act(&mut g, "dec2_relu", d2n, Activation::Relu);
+    let d3 = conv(&mut g, &mut rng, "dec3", d2a, c1, 3, 9, 1, PadMode::Reflect);
+    let sig = act(&mut g, "out_sigmoid", d3, Activation::Sigmoid);
+    g.add("out", Op::Output, &[sig]);
+    g
+}
+
+/// DNN coloring: Iizuka'16-style joint global/local network. Input is
+/// grayscale [1,1,H,W]; output RGB [1,3,H,W].
+pub fn build_coloring(hw: usize, width: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0xC0105);
+    let mut g = Graph::new("coloring");
+    let (c1, c2, c3) = (ch(16, width), ch(32, width), ch(48, width));
+    let x = g.add("x", Op::Input { shape: vec![1, 1, hw, hw] }, &[]);
+
+    // Low-level features (stride-2 pyramid).
+    let l1 = conv(&mut g, &mut rng, "low1", x, 1, c1, 3, 2, PadMode::Zeros);
+    let l1b = bnorm(&mut g, &mut rng, "low1_bn", l1, c1);
+    let l1a = act(&mut g, "low1_relu", l1b, Activation::Relu);
+    let l2 = conv(&mut g, &mut rng, "low2", l1a, c1, c2, 3, 1, PadMode::Zeros);
+    let l2b = bnorm(&mut g, &mut rng, "low2_bn", l2, c2);
+    let l2a = act(&mut g, "low2_relu", l2b, Activation::Relu);
+    let l3 = conv(&mut g, &mut rng, "low3", l2a, c2, c3, 3, 2, PadMode::Zeros);
+    let l3b = bnorm(&mut g, &mut rng, "low3_bn", l3, c3);
+    let l3a = act(&mut g, "low3_relu", l3b, Activation::Relu);
+
+    // Mid-level.
+    let m1 = conv(&mut g, &mut rng, "mid1", l3a, c3, c3, 3, 1, PadMode::Zeros);
+    let m1b = bnorm(&mut g, &mut rng, "mid1_bn", m1, c3);
+    let m1a = act(&mut g, "mid1_relu", m1b, Activation::Relu);
+
+    // Global features: deeper stride-2 path + GAP + dense.
+    let g1 = conv(&mut g, &mut rng, "glob1", l3a, c3, c3, 3, 2, PadMode::Zeros);
+    let g1b = bnorm(&mut g, &mut rng, "glob1_bn", g1, c3);
+    let g1a = act(&mut g, "glob1_relu", g1b, Activation::Relu);
+    let g2 = conv(&mut g, &mut rng, "glob2", g1a, c3, c3, 3, 2, PadMode::Zeros);
+    let g2b = bnorm(&mut g, &mut rng, "glob2_bn", g2, c3);
+    let g2a = act(&mut g, "glob2_relu", g2b, Activation::Relu);
+    let gap = g.add("gap", Op::GlobalAvgPool, &[g2a]);
+    let fc = g.add(
+        "glob_fc",
+        Op::Dense { out_f: c3, in_f: c3, fused_act: Activation::Relu },
+        &[gap],
+    );
+    g.set_param("glob_fc.weight", Tensor::randn(&[c3, c3], &mut rng));
+    g.set_param("glob_fc.bias", Tensor::zeros(&[c3]));
+
+    // Fusion: broadcast global vector over mid features, concat, 1x1 conv.
+    let br = g.add("fuse_broadcast", Op::BroadcastSpatial, &[fc, m1a]);
+    let cat = g.add("fuse_concat", Op::Concat, &[m1a, br]);
+    let f1 = conv(&mut g, &mut rng, "fuse1", cat, 2 * c3, c2, 1, 1, PadMode::Zeros);
+    let f1a = act(&mut g, "fuse1_relu", f1, Activation::Relu);
+
+    // Decoder to full resolution.
+    let d1 = conv(&mut g, &mut rng, "col1", f1a, c2, c2, 3, 1, PadMode::Zeros);
+    let d1a = act(&mut g, "col1_relu", d1, Activation::Relu);
+    let u1 = g.add("col_up1", Op::UpsampleNearest { factor: 2 }, &[d1a]);
+    let d2 = conv(&mut g, &mut rng, "col2", u1, c2, c1, 3, 1, PadMode::Zeros);
+    let d2a = act(&mut g, "col2_relu", d2, Activation::Relu);
+    let u2 = g.add("col_up2", Op::UpsampleNearest { factor: 2 }, &[d2a]);
+    let d3 = conv(&mut g, &mut rng, "col3", u2, c1, 3, 3, 1, PadMode::Zeros);
+    let sig = act(&mut g, "out_sigmoid", d3, Activation::Sigmoid);
+    g.add("out", Op::Output, &[sig]);
+    g
+}
+
+/// Super resolution: WDSR-style wide-activation residual network with
+/// pixel-shuffle upsampling and a global nearest-upsample skip.
+/// Input [1,3,hw,hw], output [1,3,hw*scale,hw*scale].
+pub fn build_sr(hw: usize, scale: usize, width: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0x5C41E);
+    let mut g = Graph::new("super_resolution");
+    let c = ch(24, width);
+    let wide = c * 2; // wide activation
+    let x = g.add("x", Op::Input { shape: vec![1, 3, hw, hw] }, &[]);
+
+    let head = conv(&mut g, &mut rng, "head", x, 3, c, 3, 1, PadMode::Zeros);
+    let mut prev = head;
+    for b in 0..3 {
+        let w1 = conv(
+            &mut g,
+            &mut rng,
+            &format!("blk{}_expand", b),
+            prev,
+            c,
+            wide,
+            3,
+            1,
+            PadMode::Zeros,
+        );
+        let w1a = act(&mut g, &format!("blk{}_relu", b), w1, Activation::Relu);
+        let w2 = conv(
+            &mut g,
+            &mut rng,
+            &format!("blk{}_reduce", b),
+            w1a,
+            wide,
+            c,
+            3,
+            1,
+            PadMode::Zeros,
+        );
+        prev = g.add(format!("blk{}_add", b), Op::Add, &[w2, prev]);
+    }
+    let tail_c = 3 * scale * scale;
+    let tail = conv(&mut g, &mut rng, "tail", prev, c, tail_c, 3, 1, PadMode::Zeros);
+    // Residual-style small tail init: the untrained net starts close to
+    // the nearest-neighbour skip (standard WDSR practice), so the demo
+    // output is a plausible image rather than noise.
+    if let Some(w) = g.param_mut("tail.weight") {
+        for v in w.data_mut() {
+            *v *= 0.05;
+        }
+    }
+    let ps = g.add("pixelshuffle", Op::PixelShuffle { factor: scale }, &[tail]);
+    // Global skip: nearest upsample of the input.
+    let skip = g.add("skip_up", Op::UpsampleNearest { factor: scale }, &[x]);
+    let sum = g.add("skip_add", Op::Add, &[ps, skip]);
+    g.add("out", Op::Output, &[sum]);
+    g
+}
+
+/// VGG-16 (features + classifier head) — the intro's TVM/TFLite baseline
+/// workload. Full-size VGG is ~15.5 GMACs; `width` scales it down for
+/// CPU-measurable runs (the perf model extrapolates to full size).
+pub fn build_vgg16(hw: usize, width: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0x7663);
+    let mut g = Graph::new("vgg16");
+    let x = g.add("x", Op::Input { shape: vec![1, 3, hw, hw] }, &[]);
+    let cfg: &[(usize, usize)] =
+        &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]; // (channels, convs)
+    let mut prev = x;
+    let mut in_c = 3;
+    for (stage, &(c, convs)) in cfg.iter().enumerate() {
+        let c = ch(c, width);
+        for i in 0..convs {
+            let name = format!("conv{}_{}", stage + 1, i + 1);
+            let cv = conv(&mut g, &mut rng, &name, prev, in_c, c, 3, 1, PadMode::Zeros);
+            prev = act(&mut g, &format!("{}_relu", name), cv, Activation::Relu);
+            in_c = c;
+        }
+        prev = g.add(format!("pool{}", stage + 1), Op::MaxPool { k: 2, stride: 2 }, &[prev]);
+    }
+    // Classifier: GAP + one dense layer (the reproduction-scale head).
+    let gap = g.add("gap", Op::GlobalAvgPool, &[prev]);
+    let fc = g.add(
+        "fc",
+        Op::Dense { out_f: 100, in_f: in_c, fused_act: Activation::Identity },
+        &[gap],
+    );
+    g.set_param("fc.weight", Tensor::randn(&[100, in_c], &mut rng));
+    g.set_param("fc.bias", Tensor::zeros(&[100]));
+    g.add("out", Op::Output, &[fc]);
+    g
+}
+
+/// Build an app by name with its benchmark-default geometry.
+///
+/// `width` scales channels; 1.0 = the reproduction-scale defaults used in
+/// EXPERIMENTS.md. Input sizes follow the paper's demo setups.
+pub fn build_app(name: &str, width: f64, seed: u64) -> Result<Graph> {
+    Ok(match name {
+        "style" | "style_transfer" => build_style(256, width, seed),
+        "coloring" => build_coloring(224, width, seed),
+        "sr" | "super_resolution" => build_sr(96, 4, width, seed),
+        "vgg16" => build_vgg16(112, width, seed),
+        other => bail!("unknown app '{}' (style|coloring|sr|vgg16)", other),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::Engine;
+
+    #[test]
+    fn style_shapes() {
+        let g = build_style(64, 0.25, 1);
+        g.validate().unwrap();
+        let eng = Engine::new(&g, 2).unwrap();
+        assert_eq!(eng.output_shapes(), vec![vec![1, 3, 64, 64]]);
+        let x = Tensor::full(&[1, 3, 64, 64], 0.5);
+        let out = eng.run(&[x]).unwrap();
+        // Sigmoid output in [0, 1].
+        assert!(out[0].data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn coloring_shapes() {
+        let g = build_coloring(64, 0.25, 2);
+        g.validate().unwrap();
+        let eng = Engine::new(&g, 2).unwrap();
+        assert_eq!(eng.input_shapes(), vec![vec![1, 1, 64, 64]]);
+        assert_eq!(eng.output_shapes(), vec![vec![1, 3, 64, 64]]);
+        let x = Tensor::full(&[1, 1, 64, 64], 0.3);
+        let out = eng.run(&[x]).unwrap();
+        assert_eq!(out[0].shape(), &[1, 3, 64, 64]);
+    }
+
+    #[test]
+    fn sr_shapes() {
+        let g = build_sr(24, 4, 0.25, 3);
+        g.validate().unwrap();
+        let eng = Engine::new(&g, 2).unwrap();
+        assert_eq!(eng.output_shapes(), vec![vec![1, 3, 96, 96]]);
+    }
+
+    #[test]
+    fn vgg_runs() {
+        let g = build_vgg16(32, 0.125, 4);
+        g.validate().unwrap();
+        let eng = Engine::new(&g, 2).unwrap();
+        let x = Tensor::full(&[1, 3, 32, 32], 0.1);
+        let out = eng.run(&[x]).unwrap();
+        assert_eq!(out[0].shape(), &[1, 100]);
+    }
+
+    #[test]
+    fn width_scales_macs() {
+        let small = build_style(64, 0.25, 1).total_macs().unwrap();
+        let big = build_style(64, 0.5, 1).total_macs().unwrap();
+        assert!(big > small * 2, "big={} small={}", big, small);
+    }
+
+    #[test]
+    fn build_app_rejects_unknown() {
+        assert!(build_app("bogus", 1.0, 1).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! The three demo applications (+ the VGG-16 baseline) as LR graphs —
+//! Rust-side mirrors of `python/compile/models/*`.
+//!
+//! Architectures follow the paper's citations at reproduction scale
+//! (DESIGN.md §2): style transfer is an MSG-Net-style generative net
+//! [Zhang & Dana 2017], coloring is the Iizuka'16 global+local fusion
+//! network, super resolution is a WDSR-style wide-activation residual net
+//! [Yu et al. 2018]. A `width` multiplier scales channel counts so the
+//! same topology serves quick tests (width 0.25) and the benchmark
+//! configuration (width 1.0 ≙ the reduced-scale reproduction models).
+
+pub mod builders;
+pub mod variant;
+
+pub use builders::{build_app, build_coloring, build_sr, build_style, build_vgg16};
+pub use variant::{prepare_variant, prune_graph, AppSpec, Variant};

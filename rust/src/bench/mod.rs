@@ -1,0 +1,145 @@
+//! Micro/macro benchmark harness (no criterion in the offline toolchain).
+//!
+//! [`bench_ms`] runs warmup + timed iterations and returns a [`Summary`]
+//! in milliseconds; [`Table`] renders aligned result tables the bench
+//! binaries print (one per paper table/figure; see DESIGN.md §6).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Benchmark a closure: `warmup` unrecorded runs, then `iters` timed runs.
+pub fn bench_ms(warmup: usize, iters: usize, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Summary::from_samples(&samples)
+}
+
+/// Auto-calibrated variant: picks iteration count so the total timed runtime
+/// stays near `budget_ms`.
+pub fn bench_auto_ms(budget_ms: f64, mut f: impl FnMut()) -> Summary {
+    // One calibration run.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / once.max(1e-3)) as usize).clamp(3, 200);
+    bench_ms(1, iters, f)
+}
+
+/// Simple aligned text table.
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and append to bench_output-style sinks.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with sensible precision for ms columns.
+pub fn ms(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{:.0}", v)
+    } else if v >= 10.0 {
+        format!("{:.1}", v)
+    } else {
+        format!("{:.2}", v)
+    }
+}
+
+/// Format a speedup ratio.
+pub fn speedup(base: f64, v: f64) -> String {
+    format!("{:.1}x", base / v.max(1e-9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_times() {
+        let s = bench_ms(1, 5, || {
+            let v: Vec<u64> = (0..10_000).collect();
+            std::hint::black_box(v.iter().sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn auto_calibration_bounds_iters() {
+        let s = bench_auto_ms(5.0, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        assert!(s.n >= 3 && s.n <= 200);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["app", "ms", "speedup"]);
+        t.row(&["style".into(), "67".into(), "4.2x".into()]);
+        t.row(&["coloring".into(), "38".into(), "3.6x".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("4.2x"));
+        let lines: Vec<&str> = r.lines().filter(|l| !l.is_empty()).collect();
+        assert!(lines.len() >= 5);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(ms(283.4), "283");
+        assert_eq!(ms(38.25), "38.2");
+        assert_eq!(ms(4.237), "4.24");
+        assert_eq!(speedup(283.0, 67.0), "4.2x");
+    }
+}

@@ -1,0 +1,13 @@
+//! Frame-stream serving coordinator — the L3 runtime that turns the
+//! compiled engines into a real-time video-processing service.
+//!
+//! The paper's demo is live video (style transfer / coloring / SR) on a
+//! phone; the equivalent serving shape is: a frame source produces frames
+//! at a target rate, a bounded queue absorbs jitter, worker threads run
+//! inference, and the service reports fps + latency percentiles and drops
+//! frames under backpressure (a real-time system must shed load rather
+//! than queue unboundedly).
+
+pub mod server;
+
+pub use server::{ServeConfig, ServeReport, Server};

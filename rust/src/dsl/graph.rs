@@ -1,0 +1,414 @@
+//! The computational graph of LR nodes: construction, validation,
+//! topological ordering, and the parameter table.
+
+use crate::dsl::op::Op;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// A named LR node plus its data-edge inputs.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// DAG of LR nodes + parameter table.
+///
+/// Parameters are keyed `"{node_name}.{slot}"` (e.g. `conv1.weight`,
+/// `bn2.gamma`) so passes that fold or rewrite weights only touch the table.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    nodes: Vec<Node>,
+    by_name: HashMap<String, NodeId>,
+    params: HashMap<String, Tensor>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph { name: name.into(), ..Default::default() }
+    }
+
+    /// Append a node; inputs must already exist. Returns its id.
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: &[NodeId]) -> NodeId {
+        let name = name.into();
+        assert_eq!(
+            op.arity(),
+            inputs.len(),
+            "node '{}' ({}) expects {} inputs, got {}",
+            name,
+            op.kind(),
+            op.arity(),
+            inputs.len()
+        );
+        for &i in inputs {
+            assert!(i < self.nodes.len(), "node '{}': input {} does not exist", name, i);
+        }
+        assert!(
+            !self.by_name.contains_key(&name),
+            "duplicate node name '{}'",
+            name
+        );
+        let id = self.nodes.len();
+        self.by_name.insert(name.clone(), id);
+        self.nodes.push(Node { name, op, inputs: inputs.to_vec() });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn find(&self, name: &str) -> Option<NodeId> {
+        self.by_name.get(name).copied()
+    }
+
+    // ---- parameter table ---------------------------------------------------
+
+    pub fn set_param(&mut self, key: impl Into<String>, t: Tensor) {
+        self.params.insert(key.into(), t);
+    }
+
+    pub fn param(&self, key: &str) -> Option<&Tensor> {
+        self.params.get(key)
+    }
+
+    pub fn param_mut(&mut self, key: &str) -> Option<&mut Tensor> {
+        self.params.get_mut(key)
+    }
+
+    pub fn take_param(&mut self, key: &str) -> Option<Tensor> {
+        self.params.remove(key)
+    }
+
+    pub fn params(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.params.iter()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.values().map(|t| t.len()).sum()
+    }
+
+    // ---- structure queries ---------------------------------------------------
+
+    /// Ids of all `Input` nodes in insertion order.
+    pub fn inputs(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, Op::Input { .. }))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Ids of all `Output` nodes in insertion order.
+    pub fn outputs(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, Op::Output))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Consumer count per node (fan-out).
+    pub fn fanout(&self) -> Vec<usize> {
+        let mut f = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                f[i] += 1;
+            }
+        }
+        f
+    }
+
+    /// Topological order (nodes are appended post-order by construction, but
+    /// passes may leave dead nodes; this also validates acyclicity).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut out_edges: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for (id, node) in self.nodes.iter().enumerate() {
+            for &i in &node.inputs {
+                indeg[id] += 1;
+                out_edges[i].push(id);
+            }
+        }
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for &c in &out_edges[id] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("graph '{}' contains a cycle", self.name);
+        }
+        order.sort_unstable(); // ids are already topological by construction
+        Ok(order)
+    }
+
+    /// Validate: arities, input refs, param presence for parameterised ops.
+    pub fn validate(&self) -> Result<()> {
+        for (id, node) in self.nodes.iter().enumerate() {
+            if node.op.arity() != node.inputs.len() {
+                bail!("node '{}': arity mismatch", node.name);
+            }
+            for &i in &node.inputs {
+                if i >= id {
+                    bail!(
+                        "node '{}': forward reference to node {} (graph must be topological)",
+                        node.name,
+                        i
+                    );
+                }
+            }
+            match &node.op {
+                Op::Conv2d { out_c, in_c, kh, kw, .. } => {
+                    let w = self
+                        .param(&format!("{}.weight", node.name))
+                        .ok_or_else(|| anyhow::anyhow!("node '{}': missing weight", node.name))?;
+                    if w.shape() != [*out_c, *in_c, *kh, *kw] {
+                        bail!(
+                            "node '{}': weight shape {:?} != [{},{},{},{}]",
+                            node.name,
+                            w.shape(),
+                            out_c,
+                            in_c,
+                            kh,
+                            kw
+                        );
+                    }
+                }
+                Op::DepthwiseConv2d { c, kh, kw, .. } => {
+                    let w = self
+                        .param(&format!("{}.weight", node.name))
+                        .ok_or_else(|| anyhow::anyhow!("node '{}': missing weight", node.name))?;
+                    if w.shape() != [*c, 1, *kh, *kw] {
+                        bail!("node '{}': dw weight shape {:?}", node.name, w.shape());
+                    }
+                }
+                Op::Dense { out_f, in_f, .. } => {
+                    let w = self
+                        .param(&format!("{}.weight", node.name))
+                        .ok_or_else(|| anyhow::anyhow!("node '{}': missing weight", node.name))?;
+                    if w.shape() != [*out_f, *in_f] {
+                        bail!("node '{}': dense weight shape {:?}", node.name, w.shape());
+                    }
+                }
+                Op::BatchNorm { c, .. } => {
+                    for slot in ["gamma", "beta", "mean", "var"] {
+                        let p = self.param(&format!("{}.{}", node.name, slot)).ok_or_else(
+                            || anyhow::anyhow!("node '{}': missing bn param {}", node.name, slot),
+                        )?;
+                        if p.shape() != [*c] {
+                            bail!("node '{}': bn {} shape {:?}", node.name, slot, p.shape());
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if self.outputs().is_empty() {
+            bail!("graph '{}' has no output node", self.name);
+        }
+        Ok(())
+    }
+
+    /// Nodes reachable (backwards) from any output.
+    pub fn live_set(&self) -> HashSet<NodeId> {
+        let mut live = HashSet::new();
+        let mut stack = self.outputs();
+        while let Some(id) = stack.pop() {
+            if live.insert(id) {
+                stack.extend(self.nodes[id].inputs.iter().copied());
+            }
+        }
+        live
+    }
+
+    /// Rebuild the graph keeping only `keep` nodes (used by DCE / fusion),
+    /// remapping edges. Params of dropped nodes are removed.
+    pub fn retain(&mut self, keep: &HashSet<NodeId>) {
+        let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+        let mut new_nodes = Vec::with_capacity(keep.len());
+        for (id, node) in self.nodes.iter().enumerate() {
+            if keep.contains(&id) {
+                remap.insert(id, new_nodes.len());
+                let mut n = node.clone();
+                n.inputs = n.inputs.iter().map(|i| remap[i]).collect();
+                new_nodes.push(n);
+            }
+        }
+        let dropped: Vec<String> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(id, _)| !keep.contains(id))
+            .map(|(_, n)| n.name.clone())
+            .collect();
+        self.nodes = new_nodes;
+        self.by_name = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.clone(), i))
+            .collect();
+        for name in dropped {
+            let prefix = format!("{}.", name);
+            self.params.retain(|k, _| !k.starts_with(&prefix));
+        }
+    }
+
+    /// Total MACs for one forward pass (uses shape inference).
+    pub fn total_macs(&self) -> Result<u64> {
+        let shapes = crate::dsl::shape::infer(self)?;
+        let mut total = 0u64;
+        for (id, node) in self.nodes.iter().enumerate() {
+            let in_shape = node
+                .inputs
+                .first()
+                .map(|&i| shapes[i].as_slice())
+                .unwrap_or(&[]);
+            total += node.op.macs(in_shape, &shapes[id]);
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::op::{Activation, PadMode};
+    use crate::util::rng::Rng;
+
+    fn conv_op(out_c: usize, in_c: usize) -> Op {
+        Op::Conv2d {
+            out_c,
+            in_c,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            pad_mode: PadMode::Zeros,
+            fused_act: Activation::Identity,
+        }
+    }
+
+    fn tiny_graph() -> Graph {
+        let mut rng = Rng::new(1);
+        let mut g = Graph::new("tiny");
+        let x = g.add("x", Op::Input { shape: vec![1, 3, 8, 8] }, &[]);
+        let c1 = g.add("c1", conv_op(8, 3), &[x]);
+        g.set_param("c1.weight", Tensor::randn(&[8, 3, 3, 3], &mut rng));
+        let r = g.add("r", Op::Act(Activation::Relu), &[c1]);
+        g.add("out", Op::Output, &[r]);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny_graph();
+        assert_eq!(g.len(), 4);
+        g.validate().unwrap();
+        assert_eq!(g.inputs(), vec![0]);
+        assert_eq!(g.outputs(), vec![3]);
+    }
+
+    #[test]
+    fn validate_catches_missing_weight() {
+        let mut g = Graph::new("bad");
+        let x = g.add("x", Op::Input { shape: vec![1, 3, 8, 8] }, &[]);
+        g.add("c1", conv_op(8, 3), &[x]);
+        g.add("out", Op::Output, &[1]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_wrong_weight_shape() {
+        let mut g = tiny_graph();
+        g.set_param("c1.weight", Tensor::zeros(&[8, 3, 5, 5]));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_names_rejected() {
+        let mut g = Graph::new("dup");
+        g.add("x", Op::Input { shape: vec![1] }, &[]);
+        g.add("x", Op::Output, &[0]);
+    }
+
+    #[test]
+    fn fanout_counts_consumers() {
+        let mut g = Graph::new("fan");
+        let x = g.add("x", Op::Input { shape: vec![1, 4, 4, 4] }, &[]);
+        let a = g.add("a", Op::Act(Activation::Relu), &[x]);
+        let b = g.add("b", Op::Act(Activation::Tanh), &[x]);
+        let s = g.add("s", Op::Add, &[a, b]);
+        g.add("out", Op::Output, &[s]);
+        let f = g.fanout();
+        assert_eq!(f[x], 2);
+        assert_eq!(f[a], 1);
+        assert_eq!(f[s], 1);
+    }
+
+    #[test]
+    fn retain_drops_params_and_remaps() {
+        let mut g = tiny_graph();
+        // Drop the relu (simulate a fusion pass outcome), rewire output.
+        let out_id = g.find("out").unwrap();
+        let c1 = g.find("c1").unwrap();
+        g.node_mut(out_id).inputs = vec![c1];
+        let keep: HashSet<NodeId> =
+            [g.find("x").unwrap(), c1, out_id].into_iter().collect();
+        g.retain(&keep);
+        assert_eq!(g.len(), 3);
+        assert!(g.find("r").is_none());
+        assert!(g.param("c1.weight").is_some());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn live_set_ignores_dead_branches() {
+        let mut g = Graph::new("dead");
+        let x = g.add("x", Op::Input { shape: vec![1, 4, 4, 4] }, &[]);
+        let a = g.add("a", Op::Act(Activation::Relu), &[x]);
+        let _dead = g.add("dead", Op::Act(Activation::Tanh), &[x]);
+        g.add("out", Op::Output, &[a]);
+        let live = g.live_set();
+        assert!(live.contains(&x) && live.contains(&a));
+        assert!(!live.contains(&2));
+    }
+
+    #[test]
+    fn total_macs_positive() {
+        let g = tiny_graph();
+        assert!(g.total_macs().unwrap() > 0);
+    }
+}

@@ -1,0 +1,304 @@
+//! On-disk model format: `<model>.graph.json` + a directory of `.npy`
+//! weights. Shared with `python/compile/export.py`, which emits the same
+//! schema from the JAX model definitions.
+//!
+//! Schema (version 1):
+//! ```json
+//! {
+//!   "format": "prt-dnn-graph",
+//!   "version": 1,
+//!   "name": "style_transfer",
+//!   "nodes": [
+//!     {"name": "x", "op": "input", "inputs": [], "attrs": {"shape": [1,3,256,256]}},
+//!     {"name": "c1", "op": "conv2d", "inputs": ["x"],
+//!      "attrs": {"out_c":32,"in_c":3,"kh":9,"kw":9,"stride":1,"pad":4,
+//!                "pad_mode":"reflect","fused_act":"identity"}},
+//!     ...
+//!   ],
+//!   "params": {"c1.weight": "weights/c1.weight.npy", ...}
+//! }
+//! ```
+
+use crate::dsl::graph::Graph;
+use crate::dsl::op::{Activation, Op, PadMode};
+use crate::tensor::npy;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Serialize a graph to JSON; weights are written as `.npy` files under
+/// `weights_dir` (relative paths recorded in the JSON).
+pub fn save(g: &Graph, json_path: &Path) -> Result<()> {
+    let dir = json_path.parent().unwrap_or(Path::new("."));
+    let weights_dir = dir.join(format!("{}.weights", g.name));
+    std::fs::create_dir_all(&weights_dir)?;
+
+    let mut nodes = Vec::new();
+    for node in g.nodes() {
+        let mut o = JsonObj::new();
+        o.insert("name", node.name.as_str());
+        o.insert("op", node.op.kind());
+        o.insert(
+            "inputs",
+            Json::Arr(
+                node.inputs
+                    .iter()
+                    .map(|&i| Json::Str(g.node(i).name.clone()))
+                    .collect(),
+            ),
+        );
+        o.insert("attrs", attrs_to_json(&node.op));
+        nodes.push(Json::Obj(o));
+    }
+
+    let mut params = JsonObj::new();
+    let mut keys: Vec<&String> = g.params().map(|(k, _)| k).collect();
+    keys.sort();
+    for key in keys {
+        let t = g.param(key).unwrap();
+        let fname = format!("{}.weights/{}.npy", g.name, key);
+        npy::write_npy(&dir.join(&fname), t)?;
+        params.insert(key.clone(), fname);
+    }
+
+    let mut root = JsonObj::new();
+    root.insert("format", "prt-dnn-graph");
+    root.insert("version", 1usize);
+    root.insert("name", g.name.as_str());
+    root.insert("nodes", Json::Arr(nodes));
+    root.insert("params", params);
+    std::fs::write(json_path, Json::Obj(root).to_string_pretty())
+        .with_context(|| format!("write {}", json_path.display()))?;
+    Ok(())
+}
+
+/// Load a graph (+ weights) from a `.graph.json` file.
+pub fn load(json_path: &Path) -> Result<Graph> {
+    let text = std::fs::read_to_string(json_path)
+        .with_context(|| format!("read {}", json_path.display()))?;
+    let root = Json::parse(&text).with_context(|| format!("parse {}", json_path.display()))?;
+    if root.get("format").as_str() != Some("prt-dnn-graph") {
+        bail!("{}: not a prt-dnn-graph file", json_path.display());
+    }
+    let name = root
+        .get("name")
+        .as_str()
+        .context("graph json: missing name")?
+        .to_string();
+    let mut g = Graph::new(name);
+
+    for nj in root.get("nodes").as_arr().context("graph json: missing nodes")? {
+        let nname = nj.get("name").as_str().context("node: missing name")?;
+        let kind = nj.get("op").as_str().context("node: missing op")?;
+        let attrs = nj.get("attrs");
+        let op = op_from_json(kind, attrs)
+            .with_context(|| format!("node '{}': bad op/attrs", nname))?;
+        let inputs: Vec<usize> = nj
+            .get("inputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|v| {
+                let iname = v.as_str().context("input name must be string")?;
+                g.find(iname)
+                    .with_context(|| format!("node '{}': unknown input '{}'", nname, iname))
+            })
+            .collect::<Result<_>>()?;
+        g.add(nname.to_string(), op, &inputs);
+    }
+
+    let dir = json_path.parent().unwrap_or(Path::new("."));
+    if let Some(params) = root.get("params").as_obj() {
+        for (key, rel) in params.iter() {
+            let rel = rel.as_str().context("param path must be string")?;
+            let t = npy::read_npy(&dir.join(rel))?;
+            g.set_param(key.clone(), t);
+        }
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+fn attrs_to_json(op: &Op) -> Json {
+    let mut a = JsonObj::new();
+    match op {
+        Op::Input { shape } => a.insert("shape", shape.as_slice()),
+        Op::Conv2d { out_c, in_c, kh, kw, stride, pad, pad_mode, fused_act } => {
+            a.insert("out_c", *out_c);
+            a.insert("in_c", *in_c);
+            a.insert("kh", *kh);
+            a.insert("kw", *kw);
+            a.insert("stride", *stride);
+            a.insert("pad", *pad);
+            a.insert(
+                "pad_mode",
+                match pad_mode {
+                    PadMode::Zeros => "zeros",
+                    PadMode::Reflect => "reflect",
+                },
+            );
+            a.insert("fused_act", fused_act.name());
+        }
+        Op::DepthwiseConv2d { c, kh, kw, stride, pad, fused_act } => {
+            a.insert("c", *c);
+            a.insert("kh", *kh);
+            a.insert("kw", *kw);
+            a.insert("stride", *stride);
+            a.insert("pad", *pad);
+            a.insert("fused_act", fused_act.name());
+        }
+        Op::Dense { out_f, in_f, fused_act } => {
+            a.insert("out_f", *out_f);
+            a.insert("in_f", *in_f);
+            a.insert("fused_act", fused_act.name());
+        }
+        Op::BatchNorm { c, eps } | Op::InstanceNorm { c, eps } => {
+            a.insert("c", *c);
+            a.insert("eps", *eps as f64);
+        }
+        Op::Act(act) => a.insert("fn", act.name()),
+        Op::UpsampleNearest { factor } | Op::PixelShuffle { factor } => {
+            a.insert("factor", *factor)
+        }
+        Op::MaxPool { k, stride } => {
+            a.insert("k", *k);
+            a.insert("stride", *stride);
+        }
+        Op::Add | Op::Concat | Op::GlobalAvgPool | Op::BroadcastSpatial | Op::Output => {}
+    }
+    Json::Obj(a)
+}
+
+fn op_from_json(kind: &str, a: &Json) -> Result<Op> {
+    let act = |key: &str| -> Activation {
+        a.get(key)
+            .as_str()
+            .and_then(Activation::from_name)
+            .unwrap_or(Activation::Identity)
+    };
+    let n = |key: &str| -> Result<usize> {
+        a.get(key)
+            .as_usize()
+            .with_context(|| format!("missing attr '{}'", key))
+    };
+    Ok(match kind {
+        "input" => Op::Input {
+            shape: a.get("shape").as_usize_vec().context("input: missing shape")?,
+        },
+        "conv2d" => Op::Conv2d {
+            out_c: n("out_c")?,
+            in_c: n("in_c")?,
+            kh: n("kh")?,
+            kw: n("kw")?,
+            stride: n("stride")?,
+            pad: n("pad")?,
+            pad_mode: match a.get("pad_mode").as_str() {
+                Some("reflect") => PadMode::Reflect,
+                _ => PadMode::Zeros,
+            },
+            fused_act: act("fused_act"),
+        },
+        "dwconv2d" => Op::DepthwiseConv2d {
+            c: n("c")?,
+            kh: n("kh")?,
+            kw: n("kw")?,
+            stride: n("stride")?,
+            pad: n("pad")?,
+            fused_act: act("fused_act"),
+        },
+        "dense" => Op::Dense { out_f: n("out_f")?, in_f: n("in_f")?, fused_act: act("fused_act") },
+        "batchnorm" => Op::BatchNorm {
+            c: n("c")?,
+            eps: a.get("eps").as_f64().unwrap_or(1e-5) as f32,
+        },
+        "instancenorm" => Op::InstanceNorm {
+            c: n("c")?,
+            eps: a.get("eps").as_f64().unwrap_or(1e-5) as f32,
+        },
+        "act" => Op::Act(
+            a.get("fn")
+                .as_str()
+                .and_then(Activation::from_name)
+                .context("act: missing fn")?,
+        ),
+        "add" => Op::Add,
+        "concat" => Op::Concat,
+        "upsample" => Op::UpsampleNearest { factor: n("factor")? },
+        "pixelshuffle" => Op::PixelShuffle { factor: n("factor")? },
+        "maxpool" => Op::MaxPool { k: n("k")?, stride: n("stride")? },
+        "gap" => Op::GlobalAvgPool,
+        "broadcast" => Op::BroadcastSpatial,
+        "output" => Op::Output,
+        other => bail!("unknown op kind '{}'", other),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::tensor::Tensor;
+
+    fn demo_graph() -> Graph {
+        let mut rng = Rng::new(9);
+        let mut g = Graph::new("demo");
+        let x = g.add("x", Op::Input { shape: vec![1, 3, 16, 16] }, &[]);
+        let c1 = g.add(
+            "c1",
+            Op::Conv2d {
+                out_c: 8,
+                in_c: 3,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Reflect,
+                fused_act: Activation::Relu,
+            },
+            &[x],
+        );
+        g.set_param("c1.weight", Tensor::randn(&[8, 3, 3, 3], &mut rng));
+        g.set_param("c1.bias", Tensor::zeros(&[8]));
+        let bn = g.add("bn", Op::BatchNorm { c: 8, eps: 1e-5 }, &[c1]);
+        for slot in ["gamma", "beta", "mean", "var"] {
+            let v = if slot == "var" || slot == "gamma" { 1.0 } else { 0.0 };
+            g.set_param(format!("bn.{}", slot), Tensor::full(&[8], v));
+        }
+        let up = g.add("up", Op::UpsampleNearest { factor: 2 }, &[bn]);
+        g.add("out", Op::Output, &[up]);
+        g
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("prt_dnn_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("demo.graph.json");
+        let g = demo_graph();
+        save(&g, &p).unwrap();
+        let g2 = load(&p).unwrap();
+        assert_eq!(g2.len(), g.len());
+        for (a, b) in g.nodes().iter().zip(g2.nodes().iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+        }
+        let w1 = g.param("c1.weight").unwrap();
+        let w2 = g2.param("c1.weight").unwrap();
+        assert_eq!(w1.data(), w2.data());
+    }
+
+    #[test]
+    fn load_rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("prt_dnn_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bogus.json");
+        std::fs::write(&p, r#"{"format":"something-else"}"#).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        assert!(op_from_json("warp_drive", &Json::Obj(JsonObj::new())).is_err());
+    }
+}

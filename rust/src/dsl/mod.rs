@@ -1,0 +1,21 @@
+//! The layer-wise DSL (§3, "DSL related optimization").
+//!
+//! The paper introduces a domain-specific language whose unit is an **LR**
+//! (layer-wise representation); the DSL is "essentially equivalent to the
+//! computational graph". We model it as:
+//!
+//! * [`op::Op`] — one LR: the operator kind plus its attributes,
+//! * [`graph::Graph`] — a DAG of named LR nodes with explicit data edges,
+//! * [`shape`] — static shape inference over the graph,
+//! * [`io`] — the on-disk JSON model format (shared with `python/compile`).
+//!
+//! Compiler passes ([`crate::passes`]) rewrite the graph; the executor
+//! ([`crate::executor`]) interprets the optimized graph.
+
+pub mod op;
+pub mod graph;
+pub mod shape;
+pub mod io;
+
+pub use graph::{Graph, Node, NodeId};
+pub use op::{Activation, Op, PadMode};

@@ -1,0 +1,248 @@
+//! Operator set of the layer-wise representation (LR).
+//!
+//! Covers everything the three demo applications (style transfer, coloring,
+//! super resolution) plus the VGG-16 baseline need. Each variant stores its
+//! *attributes*; weights live in the graph's parameter table keyed by the
+//! node name so passes can rewrite weights without touching topology.
+
+use std::fmt;
+
+/// Activation kinds that can be standalone LRs or fused into a conv LR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Relu,
+    /// Leaky ReLU with fixed slope 0.2 (what the demo generators use).
+    LeakyRelu,
+    Tanh,
+    Sigmoid,
+    /// No-op activation — used as the "none" slot on fused convs.
+    Identity,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::LeakyRelu => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    0.2 * x
+                }
+            }
+            Activation::Tanh => x.tanh(),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Identity => x,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::LeakyRelu => "leaky_relu",
+            Activation::Tanh => "tanh",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Identity => "identity",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "relu" => Activation::Relu,
+            "leaky_relu" => Activation::LeakyRelu,
+            "tanh" => Activation::Tanh,
+            "sigmoid" => Activation::Sigmoid,
+            "identity" | "none" => Activation::Identity,
+            _ => return None,
+        })
+    }
+}
+
+/// Spatial padding semantics for convs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PadMode {
+    /// Zero padding of the given size on all spatial sides.
+    Zeros,
+    /// Reflection padding (style-transfer nets use this).
+    Reflect,
+}
+
+/// One layer-wise representation (LR) — the operator kind + attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input: the attribute is the static NCHW shape.
+    Input { shape: Vec<usize> },
+    /// 2-D convolution. Weights `[out_c, in_c, kh, kw]` + optional bias
+    /// in the param table. `fused_act` / `fused_bn` are set by passes.
+    Conv2d {
+        out_c: usize,
+        in_c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        pad_mode: PadMode,
+        /// Activation fused into this conv by the fusion pass.
+        fused_act: Activation,
+    },
+    /// Depthwise conv; weights `[c, 1, kh, kw]`.
+    DepthwiseConv2d {
+        c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        fused_act: Activation,
+    },
+    /// Fully connected; weights `[out_f, in_f]`.
+    Dense { out_f: usize, in_f: usize, fused_act: Activation },
+    /// Inference-mode batch norm: y = gamma * (x - mean)/sqrt(var+eps) + beta.
+    /// Params: `<name>.gamma/.beta/.mean/.var`, each `[c]`.
+    BatchNorm { c: usize, eps: f32 },
+    /// Instance norm (style transfer): per-sample, per-channel statistics.
+    InstanceNorm { c: usize, eps: f32 },
+    /// Standalone activation LR.
+    Act(Activation),
+    /// Elementwise add of two inputs (residual connections).
+    Add,
+    /// Channel concat of two inputs.
+    Concat,
+    /// Nearest-neighbour spatial upsample by integer factor.
+    UpsampleNearest { factor: usize },
+    /// Pixel shuffle (depth-to-space), factor r: [N, C*r^2, H, W] -> [N, C, H*r, W*r].
+    PixelShuffle { factor: usize },
+    /// Max pool.
+    MaxPool { k: usize, stride: usize },
+    /// Global average pool to [N, C, 1, 1].
+    GlobalAvgPool,
+    /// Broadcast a [N, C, 1, 1] tensor over the spatial dims of input 0's
+    /// mate — used by the coloring net's global-feature fusion.
+    BroadcastSpatial,
+    /// Output marker (identity); names the graph result.
+    Output,
+}
+
+impl Op {
+    /// Short kind tag used in JSON and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv2d { .. } => "conv2d",
+            Op::DepthwiseConv2d { .. } => "dwconv2d",
+            Op::Dense { .. } => "dense",
+            Op::BatchNorm { .. } => "batchnorm",
+            Op::InstanceNorm { .. } => "instancenorm",
+            Op::Act(_) => "act",
+            Op::Add => "add",
+            Op::Concat => "concat",
+            Op::UpsampleNearest { .. } => "upsample",
+            Op::PixelShuffle { .. } => "pixelshuffle",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool => "gap",
+            Op::BroadcastSpatial => "broadcast",
+            Op::Output => "output",
+        }
+    }
+
+    /// Number of data inputs this op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Input { .. } => 0,
+            Op::Add | Op::Concat | Op::BroadcastSpatial => 2,
+            _ => 1,
+        }
+    }
+
+    /// Does this op carry learned parameters?
+    pub fn has_params(&self) -> bool {
+        matches!(
+            self,
+            Op::Conv2d { .. }
+                | Op::DepthwiseConv2d { .. }
+                | Op::Dense { .. }
+                | Op::BatchNorm { .. }
+                | Op::InstanceNorm { .. }
+        )
+    }
+
+    /// Multiply-accumulate count for one forward pass given the *input*
+    /// NCHW shape. Used by the perf model and the reorder scheduler.
+    pub fn macs(&self, in_shape: &[usize], out_shape: &[usize]) -> u64 {
+        match self {
+            Op::Conv2d { in_c, kh, kw, .. } => {
+                let out_elems: u64 = out_shape.iter().product::<usize>() as u64;
+                out_elems * (*in_c as u64) * (*kh as u64) * (*kw as u64)
+            }
+            Op::DepthwiseConv2d { kh, kw, .. } => {
+                let out_elems: u64 = out_shape.iter().product::<usize>() as u64;
+                out_elems * (*kh as u64) * (*kw as u64)
+            }
+            Op::Dense { out_f, in_f, .. } => {
+                let batch = in_shape.first().copied().unwrap_or(1) as u64;
+                batch * (*out_f as u64) * (*in_f as u64)
+            }
+            // Elementwise/norm ops: one MAC-equivalent per output element.
+            _ => out_shape.iter().product::<usize>() as u64,
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.kind())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_math() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.apply(2.0), 2.0);
+        assert!((Activation::LeakyRelu.apply(-1.0) + 0.2).abs() < 1e-7);
+        assert_eq!(Activation::Identity.apply(-3.5), -3.5);
+        assert!((Activation::Sigmoid.apply(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn activation_name_roundtrip() {
+        for a in [
+            Activation::Relu,
+            Activation::LeakyRelu,
+            Activation::Tanh,
+            Activation::Sigmoid,
+            Activation::Identity,
+        ] {
+            assert_eq!(Activation::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Activation::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn conv_macs() {
+        // 3x3 conv, 16->32 channels, 8x8 output, batch 1.
+        let op = Op::Conv2d {
+            out_c: 32,
+            in_c: 16,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            pad_mode: PadMode::Zeros,
+            fused_act: Activation::Identity,
+        };
+        let macs = op.macs(&[1, 16, 8, 8], &[1, 32, 8, 8]);
+        assert_eq!(macs, (1 * 32 * 8 * 8) as u64 * 16 * 9);
+    }
+
+    #[test]
+    fn arity_matches_semantics() {
+        assert_eq!(Op::Add.arity(), 2);
+        assert_eq!(Op::Concat.arity(), 2);
+        assert_eq!(Op::Input { shape: vec![1] }.arity(), 0);
+        assert_eq!(Op::GlobalAvgPool.arity(), 1);
+    }
+}

@@ -1,0 +1,222 @@
+//! Static shape inference over an LR graph.
+//!
+//! All shapes are NCHW. Inference runs in node order (graphs are
+//! topological by construction) and is the basis for MAC counting, the
+//! memory planner and executor buffer allocation.
+
+use crate::dsl::graph::Graph;
+use crate::dsl::op::Op;
+use anyhow::{bail, Result};
+
+/// Output shape of a conv given input spatial dims.
+pub fn conv_out_hw(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    (oh, ow)
+}
+
+/// Infer the output shape of every node. Index = NodeId.
+pub fn infer(g: &Graph) -> Result<Vec<Vec<usize>>> {
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(g.len());
+    for (id, node) in g.nodes().iter().enumerate() {
+        let in_shape = |k: usize| -> &[usize] { &shapes[node.inputs[k]] };
+        let s: Vec<usize> = match &node.op {
+            Op::Input { shape } => shape.clone(),
+            Op::Conv2d { out_c, in_c, kh, kw, stride, pad, .. } => {
+                let i = in_shape(0);
+                if i.len() != 4 {
+                    bail!("node '{}': conv input must be rank-4, got {:?}", node.name, i);
+                }
+                if i[1] != *in_c {
+                    bail!(
+                        "node '{}': expects {} input channels, got {}",
+                        node.name,
+                        in_c,
+                        i[1]
+                    );
+                }
+                if *kh != *kw {
+                    bail!("node '{}': only square kernels supported", node.name);
+                }
+                let (oh, ow) = conv_out_hw(i[2], i[3], *kh, *stride, *pad);
+                vec![i[0], *out_c, oh, ow]
+            }
+            Op::DepthwiseConv2d { c, kh, stride, pad, .. } => {
+                let i = in_shape(0);
+                if i[1] != *c {
+                    bail!("node '{}': dwconv channel mismatch", node.name);
+                }
+                let (oh, ow) = conv_out_hw(i[2], i[3], *kh, *stride, *pad);
+                vec![i[0], *c, oh, ow]
+            }
+            Op::Dense { out_f, in_f, .. } => {
+                let i = in_shape(0);
+                let flat: usize = i[1..].iter().product();
+                if flat != *in_f {
+                    bail!(
+                        "node '{}': dense expects {} input features, got {} (shape {:?})",
+                        node.name,
+                        in_f,
+                        flat,
+                        i
+                    );
+                }
+                vec![i[0], *out_f]
+            }
+            Op::BatchNorm { c, .. } | Op::InstanceNorm { c, .. } => {
+                let i = in_shape(0);
+                if i[1] != *c {
+                    bail!("node '{}': norm channel mismatch ({} vs {})", node.name, c, i[1]);
+                }
+                i.to_vec()
+            }
+            Op::Act(_) | Op::Output => in_shape(0).to_vec(),
+            Op::Add => {
+                let (a, b) = (in_shape(0), in_shape(1));
+                if a != b {
+                    bail!("node '{}': add shape mismatch {:?} vs {:?}", node.name, a, b);
+                }
+                a.to_vec()
+            }
+            Op::Concat => {
+                let (a, b) = (in_shape(0), in_shape(1));
+                if a.len() != 4 || b.len() != 4 || a[0] != b[0] || a[2..] != b[2..] {
+                    bail!("node '{}': concat shape mismatch {:?} vs {:?}", node.name, a, b);
+                }
+                vec![a[0], a[1] + b[1], a[2], a[3]]
+            }
+            Op::UpsampleNearest { factor } => {
+                let i = in_shape(0);
+                vec![i[0], i[1], i[2] * factor, i[3] * factor]
+            }
+            Op::PixelShuffle { factor } => {
+                let i = in_shape(0);
+                let r2 = factor * factor;
+                if i[1] % r2 != 0 {
+                    bail!(
+                        "node '{}': pixelshuffle needs channels divisible by {}",
+                        node.name,
+                        r2
+                    );
+                }
+                vec![i[0], i[1] / r2, i[2] * factor, i[3] * factor]
+            }
+            Op::MaxPool { k, stride } => {
+                let i = in_shape(0);
+                let (oh, ow) = conv_out_hw(i[2], i[3], *k, *stride, 0);
+                vec![i[0], i[1], oh, ow]
+            }
+            Op::GlobalAvgPool => {
+                let i = in_shape(0);
+                vec![i[0], i[1], 1, 1]
+            }
+            Op::BroadcastSpatial => {
+                // input 0: [N, C] or [N, C, 1, 1] global vector;
+                // input 1: [N, C2, H, W] spatial reference.
+                let g0 = in_shape(0).to_vec();
+                let r = in_shape(1);
+                let c = g0[1];
+                vec![r[0], c, r[2], r[3]]
+            }
+        };
+        debug_assert_eq!(shapes.len(), id);
+        shapes.push(s);
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::op::{Activation, PadMode};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn conv_out_dims() {
+        assert_eq!(conv_out_hw(8, 8, 3, 1, 1), (8, 8));
+        assert_eq!(conv_out_hw(8, 8, 3, 2, 1), (4, 4));
+        assert_eq!(conv_out_hw(32, 32, 9, 1, 4), (32, 32));
+        assert_eq!(conv_out_hw(4, 4, 2, 2, 0), (2, 2));
+    }
+
+    #[test]
+    fn infer_conv_chain() {
+        let mut g = Graph::new("t");
+        let x = g.add("x", Op::Input { shape: vec![2, 3, 16, 16] }, &[]);
+        let c = g.add(
+            "c",
+            Op::Conv2d {
+                out_c: 8,
+                in_c: 3,
+                kh: 3,
+                kw: 3,
+                stride: 2,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[x],
+        );
+        g.set_param("c.weight", Tensor::zeros(&[8, 3, 3, 3]));
+        let u = g.add("u", Op::UpsampleNearest { factor: 2 }, &[c]);
+        g.add("out", Op::Output, &[u]);
+        let shapes = infer(&g).unwrap();
+        assert_eq!(shapes[c], vec![2, 8, 8, 8]);
+        assert_eq!(shapes[u], vec![2, 8, 16, 16]);
+    }
+
+    #[test]
+    fn infer_pixelshuffle() {
+        let mut g = Graph::new("ps");
+        let x = g.add("x", Op::Input { shape: vec![1, 48, 24, 24] }, &[]);
+        let p = g.add("p", Op::PixelShuffle { factor: 4 }, &[x]);
+        g.add("out", Op::Output, &[p]);
+        let shapes = infer(&g).unwrap();
+        assert_eq!(shapes[p], vec![1, 3, 96, 96]);
+    }
+
+    #[test]
+    fn infer_concat_and_broadcast() {
+        let mut g = Graph::new("cb");
+        let a = g.add("a", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        let b = g.add("b", Op::Input { shape: vec![1, 6, 8, 8] }, &[]);
+        let c = g.add("c", Op::Concat, &[a, b]);
+        let gp = g.add("gp", Op::GlobalAvgPool, &[c]);
+        let br = g.add("br", Op::BroadcastSpatial, &[gp, a]);
+        g.add("out", Op::Output, &[br]);
+        let shapes = infer(&g).unwrap();
+        assert_eq!(shapes[c], vec![1, 10, 8, 8]);
+        assert_eq!(shapes[gp], vec![1, 10, 1, 1]);
+        assert_eq!(shapes[br], vec![1, 10, 8, 8]);
+    }
+
+    #[test]
+    fn channel_mismatch_detected() {
+        let mut g = Graph::new("bad");
+        let x = g.add("x", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        g.add(
+            "c",
+            Op::Conv2d {
+                out_c: 8,
+                in_c: 3, // wrong: input has 4 channels
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[x],
+        );
+        assert!(infer(&g).is_err());
+    }
+
+    #[test]
+    fn add_shape_mismatch_detected() {
+        let mut g = Graph::new("bad2");
+        let a = g.add("a", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        let b = g.add("b", Op::Input { shape: vec![1, 4, 4, 4] }, &[]);
+        g.add("s", Op::Add, &[a, b]);
+        assert!(infer(&g).is_err());
+    }
+}

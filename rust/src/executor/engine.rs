@@ -1,0 +1,548 @@
+//! Engine: compile an LR graph to an execution plan, then interpret it.
+
+use crate::dsl::op::{Activation, Op, PadMode};
+use crate::dsl::{Graph, NodeId};
+use crate::kernels::conv::{
+    conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_reordered, dwconv2d, ConvScratch,
+};
+use crate::kernels::elementwise::{
+    act_inplace, add, batchnorm_inplace, bias_act_inplace, broadcast_spatial, concat_channels,
+    instancenorm_inplace,
+};
+use crate::kernels::im2col::ConvGeom;
+use crate::kernels::resize::{global_avg_pool, maxpool, pixel_shuffle, upsample_nearest};
+use crate::pruning::scheme::Scheme;
+use crate::reorder::{ReorderPlan, Schedule};
+use crate::sparse::{ColumnCompact, Csr, GemmView};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// How pruned conv layers are stored + executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseMode {
+    /// Dense weights, dense GEMM — the unpruned baseline (also used for
+    /// pruned weights when simulating "pruning without compiler support"
+    /// is not desired).
+    Dense,
+    /// CSR storage + indexed SpMM — "pruning, no compiler optimization".
+    Csr,
+    /// The paper's compiler path: column-compact or reorder-grouped
+    /// kernels depending on each layer's pruning scheme.
+    Compact,
+}
+
+/// Executor configuration.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    pub sparse: SparseMode,
+    pub threads: usize,
+    /// Per-layer pruning schemes (needed for `Compact` to choose the
+    /// right format; optional otherwise).
+    pub schemes: Vec<(String, Scheme)>,
+}
+
+impl ExecConfig {
+    pub fn dense(threads: usize) -> Self {
+        ExecConfig { sparse: SparseMode::Dense, threads, schemes: vec![] }
+    }
+
+    pub fn csr(threads: usize) -> Self {
+        ExecConfig { sparse: SparseMode::Csr, threads, schemes: vec![] }
+    }
+
+    pub fn compact(threads: usize, schemes: Vec<(String, Scheme)>) -> Self {
+        ExecConfig { sparse: SparseMode::Compact, threads, schemes }
+    }
+}
+
+/// Pre-compiled execution strategy for one conv node.
+enum ConvExec {
+    Dense { w: Tensor },
+    Csr { csr: Csr },
+    Column { cc: ColumnCompact },
+    /// Kernel-granularity pattern reorder (pattern schemes).
+    Pattern { plan: crate::kernels::sparse_gemm::PatternPlan },
+    /// Filter-signature reorder (fallback for undeclared structure).
+    Reordered { plan: ReorderPlan, sched: Schedule },
+}
+
+/// Pre-compiled per-node step.
+enum Step {
+    Input { index: usize },
+    Conv {
+        exec: ConvExec,
+        geom: ConvGeom,
+        pad_mode: PadMode,
+        bias: Option<Vec<f32>>,
+        act: Activation,
+    },
+    DwConv { w: Tensor, bias: Option<Vec<f32>>, stride: usize, pad: usize, act: Activation },
+    Dense { w: Tensor, bias: Option<Vec<f32>>, out_f: usize, in_f: usize, act: Activation },
+    BatchNorm { gamma: Vec<f32>, beta: Vec<f32>, mean: Vec<f32>, var: Vec<f32>, eps: f32 },
+    InstanceNorm { gamma: Option<Vec<f32>>, beta: Option<Vec<f32>>, eps: f32 },
+    Act(Activation),
+    Add,
+    Concat,
+    Upsample { factor: usize },
+    PixelShuffle { factor: usize },
+    MaxPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    BroadcastSpatial,
+    Output,
+}
+
+/// Compiled engine.
+pub struct Engine {
+    pub name: String,
+    steps: Vec<(String, Step, Vec<NodeId>)>,
+    shapes: Vec<Vec<usize>>,
+    fanout: Vec<usize>,
+    input_ids: Vec<NodeId>,
+    output_ids: Vec<NodeId>,
+    threads: usize,
+    /// Serialized weight bytes under the active storage format (reported
+    /// by the storage bench / perf model).
+    pub weight_bytes: usize,
+}
+
+impl Engine {
+    /// Compile with dense execution (baseline).
+    pub fn new(g: &Graph, threads: usize) -> Result<Self> {
+        Self::with_config(g, &ExecConfig::dense(threads))
+    }
+
+    /// Compile with an explicit configuration.
+    pub fn with_config(g: &Graph, cfg: &ExecConfig) -> Result<Self> {
+        g.validate()?;
+        let shapes = crate::dsl::shape::infer(g)?;
+        let fanout = g.fanout();
+        let mut steps = Vec::with_capacity(g.len());
+        let mut weight_bytes = 0usize;
+        let mut input_count = 0usize;
+
+        for (id, node) in g.nodes().iter().enumerate() {
+            let bias = g
+                .param(&format!("{}.bias", node.name))
+                .map(|t| t.data().to_vec());
+            let step = match &node.op {
+                Op::Input { .. } => {
+                    let s = Step::Input { index: input_count };
+                    input_count += 1;
+                    s
+                }
+                Op::Conv2d { in_c, kh, stride, pad, pad_mode, fused_act, .. } => {
+                    let in_shape = &shapes[node.inputs[0]];
+                    let geom =
+                        ConvGeom::new(*in_c, in_shape[2], in_shape[3], *kh, *stride, *pad);
+                    let w = g
+                        .param(&format!("{}.weight", node.name))
+                        .context("missing conv weight")?
+                        .clone();
+                    let scheme = cfg.schemes.iter().find(|(n, _)| n == &node.name).map(|(_, s)| s);
+                    let exec = match (cfg.sparse, scheme) {
+                        (SparseMode::Dense, _) => {
+                            weight_bytes += w.len() * 4;
+                            ConvExec::Dense { w }
+                        }
+                        (SparseMode::Csr, _) => {
+                            let csr = Csr::from_dense(&GemmView::from_oihw(&w));
+                            weight_bytes += csr.size_bytes();
+                            ConvExec::Csr { csr }
+                        }
+                        (SparseMode::Compact, Some(Scheme::Column { keep })) => {
+                            let cc =
+                                ColumnCompact::encode(&GemmView::from_oihw(&w), keep);
+                            weight_bytes += cc.size_bytes();
+                            ConvExec::Column { cc }
+                        }
+                        (SparseMode::Compact, Some(Scheme::Pattern { set, ids })) => {
+                            let s = w.shape().to_vec();
+                            let pc = crate::sparse::PatternCompact::encode(
+                                &w, set, ids, s[1], s[2], s[3],
+                            );
+                            weight_bytes += pc.size_bytes();
+                            let plan =
+                                crate::kernels::sparse_gemm::PatternPlan::build(&pc);
+                            ConvExec::Pattern { plan }
+                        }
+                        (SparseMode::Compact, _) => {
+                            // Pattern / filter / channel / undeclared: the
+                            // reorder plan handles any structured zeros.
+                            let gv = GemmView::from_oihw(&w);
+                            let plan = ReorderPlan::build(&gv);
+                            let sched = Schedule::build(&plan, cfg.threads);
+                            weight_bytes += plan.nnz() * 4 + plan.group_count() * 8;
+                            ConvExec::Reordered { plan, sched }
+                        }
+                    };
+                    Step::Conv { exec, geom, pad_mode: *pad_mode, bias, act: *fused_act }
+                }
+                Op::DepthwiseConv2d { stride, pad, fused_act, .. } => {
+                    let w = g
+                        .param(&format!("{}.weight", node.name))
+                        .context("missing dw weight")?
+                        .clone();
+                    weight_bytes += w.len() * 4;
+                    Step::DwConv { w, bias, stride: *stride, pad: *pad, act: *fused_act }
+                }
+                Op::Dense { out_f, in_f, fused_act } => {
+                    let w = g
+                        .param(&format!("{}.weight", node.name))
+                        .context("missing dense weight")?
+                        .clone();
+                    weight_bytes += w.len() * 4;
+                    Step::Dense { w, bias, out_f: *out_f, in_f: *in_f, act: *fused_act }
+                }
+                Op::BatchNorm { eps, .. } => Step::BatchNorm {
+                    gamma: g.param(&format!("{}.gamma", node.name)).unwrap().data().to_vec(),
+                    beta: g.param(&format!("{}.beta", node.name)).unwrap().data().to_vec(),
+                    mean: g.param(&format!("{}.mean", node.name)).unwrap().data().to_vec(),
+                    var: g.param(&format!("{}.var", node.name)).unwrap().data().to_vec(),
+                    eps: *eps,
+                },
+                Op::InstanceNorm { eps, .. } => Step::InstanceNorm {
+                    gamma: g
+                        .param(&format!("{}.gamma", node.name))
+                        .map(|t| t.data().to_vec()),
+                    beta: g
+                        .param(&format!("{}.beta", node.name))
+                        .map(|t| t.data().to_vec()),
+                    eps: *eps,
+                },
+                Op::Act(a) => Step::Act(*a),
+                Op::Add => Step::Add,
+                Op::Concat => Step::Concat,
+                Op::UpsampleNearest { factor } => Step::Upsample { factor: *factor },
+                Op::PixelShuffle { factor } => Step::PixelShuffle { factor: *factor },
+                Op::MaxPool { k, stride } => Step::MaxPool { k: *k, stride: *stride },
+                Op::GlobalAvgPool => Step::GlobalAvgPool,
+                Op::BroadcastSpatial => Step::BroadcastSpatial,
+                Op::Output => Step::Output,
+            };
+            steps.push((node.name.clone(), step, node.inputs.clone()));
+            let _ = id;
+        }
+
+        Ok(Engine {
+            name: g.name.clone(),
+            steps,
+            shapes,
+            fanout,
+            input_ids: g.inputs(),
+            output_ids: g.outputs(),
+            threads: cfg.threads.max(1),
+            weight_bytes,
+        })
+    }
+
+    pub fn input_shapes(&self) -> Vec<Vec<usize>> {
+        self.input_ids.iter().map(|&i| self.shapes[i].clone()).collect()
+    }
+
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        self.output_ids.iter().map(|&i| self.shapes[i].clone()).collect()
+    }
+
+    /// Execute the graph on the given inputs.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run_inner(inputs, None)
+    }
+
+    /// Execute and collect per-op wall times.
+    pub fn run_profiled(
+        &self,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, Vec<(String, std::time::Duration)>)> {
+        let mut prof = Vec::with_capacity(self.steps.len());
+        let out = self.run_inner(inputs, Some(&mut prof))?;
+        Ok((out, prof))
+    }
+
+    fn run_inner(
+        &self,
+        inputs: &[Tensor],
+        mut prof: Option<&mut Vec<(String, std::time::Duration)>>,
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.input_ids.len() {
+            bail!(
+                "engine '{}' expects {} inputs, got {}",
+                self.name,
+                self.input_ids.len(),
+                inputs.len()
+            );
+        }
+        for (k, &iid) in self.input_ids.iter().enumerate() {
+            if inputs[k].shape() != self.shapes[iid].as_slice() {
+                bail!(
+                    "input {} shape {:?} != expected {:?}",
+                    k,
+                    inputs[k].shape(),
+                    self.shapes[iid]
+                );
+            }
+        }
+
+        let n = self.steps.len();
+        let mut values: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut remaining = self.fanout.clone();
+        let mut scratch = ConvScratch::new();
+        let t = self.threads;
+
+        for (id, (name, step, node_inputs)) in self.steps.iter().enumerate() {
+            let started = std::time::Instant::now();
+            let get = |k: usize| -> &Tensor {
+                values[node_inputs[k]]
+                    .as_ref()
+                    .expect("executor: consumed input (memory planner bug)")
+            };
+            let out: Tensor = match step {
+                Step::Input { index } => inputs[*index].clone(),
+                Step::Conv { exec, geom, pad_mode, bias, act } => {
+                    let x = get(0);
+                    match exec {
+                        ConvExec::Dense { w } => conv2d_dense(
+                            x, w, bias.as_deref(), geom.stride, geom.pad, *pad_mode, *act, t,
+                            &mut scratch,
+                        ),
+                        ConvExec::Csr { csr } => conv2d_csr(
+                            x, csr, geom, *pad_mode, bias.as_deref(), *act, t, &mut scratch,
+                        ),
+                        ConvExec::Column { cc } => conv2d_column_compact(
+                            x, cc, geom, *pad_mode, bias.as_deref(), *act, t, &mut scratch,
+                        ),
+                        ConvExec::Pattern { plan } => {
+                            crate::kernels::conv::conv2d_pattern(
+                                x, plan, geom, *pad_mode, bias.as_deref(), *act, t,
+                                &mut scratch,
+                            )
+                        }
+                        ConvExec::Reordered { plan, sched } => conv2d_reordered(
+                            x, plan, sched, geom, *pad_mode, bias.as_deref(), *act,
+                            &mut scratch,
+                        ),
+                    }
+                }
+                Step::DwConv { w, bias, stride, pad, act } => {
+                    dwconv2d(get(0), w, bias.as_deref(), *stride, *pad, *act, t)
+                }
+                Step::Dense { w, bias, out_f, in_f, act } => {
+                    let x = get(0);
+                    let batch = x.dim(0);
+                    let mut out = Tensor::zeros(&[batch, *out_f]);
+                    // C[b, o] = W[o, i] · X[b, i]ᵀ: run as GEMM with A=X.
+                    // A = x [batch, in_f], Bᵀ layout: we need W·xᵀ; compute
+                    // per batch row: out[b] = W (out_f×in_f) * x_b.
+                    for b in 0..batch {
+                        let xb = &x.data()[b * in_f..(b + 1) * in_f];
+                        let ob = &mut out.data_mut()[b * out_f..(b + 1) * out_f];
+                        crate::util::threadpool::parallel_chunks(
+                            *out_f,
+                            t,
+                            |os, oe, _| {
+                                // SAFETY: disjoint output rows.
+                                let ob_ptr = ob.as_ptr() as *mut f32;
+                                for o in os..oe {
+                                    let wrow = &w.data()[o * in_f..(o + 1) * in_f];
+                                    let mut acc = 0.0f32;
+                                    for i in 0..*in_f {
+                                        acc += wrow[i] * xb[i];
+                                    }
+                                    unsafe { *ob_ptr.add(o) = acc };
+                                }
+                            },
+                        );
+                    }
+                    bias_act_inplace(out.data_mut(), bias.as_deref(), *out_f, 1, *act);
+                    out
+                }
+                Step::BatchNorm { gamma, beta, mean, var, eps } => {
+                    let mut x = get(0).clone();
+                    let c = gamma.len();
+                    let px = x.len() / (x.dim(0) * c);
+                    batchnorm_inplace(
+                        x.data_mut(),
+                        c,
+                        px,
+                        gamma,
+                        beta,
+                        mean,
+                        var,
+                        *eps,
+                        Activation::Identity,
+                    );
+                    x
+                }
+                Step::InstanceNorm { gamma, beta, eps } => {
+                    let mut x = get(0).clone();
+                    let c = x.dim(1);
+                    let px = x.dim(2) * x.dim(3);
+                    instancenorm_inplace(
+                        x.data_mut(),
+                        c,
+                        px,
+                        gamma.as_deref(),
+                        beta.as_deref(),
+                        *eps,
+                    );
+                    x
+                }
+                Step::Act(a) => {
+                    let mut x = get(0).clone();
+                    act_inplace(x.data_mut(), *a);
+                    x
+                }
+                Step::Add => add(get(0), get(1)),
+                Step::Concat => concat_channels(get(0), get(1)),
+                Step::Upsample { factor } => upsample_nearest(get(0), *factor),
+                Step::PixelShuffle { factor } => pixel_shuffle(get(0), *factor),
+                Step::MaxPool { k, stride } => maxpool(get(0), *k, *stride),
+                Step::GlobalAvgPool => global_avg_pool(get(0)),
+                Step::BroadcastSpatial => broadcast_spatial(get(0), get(1)),
+                Step::Output => get(0).clone(),
+            };
+            if let Some(p) = prof.as_deref_mut() {
+                p.push((name.clone(), started.elapsed()));
+            }
+            values[id] = Some(out);
+            // Memory planner: free inputs whose consumers are all done.
+            for &inp in node_inputs {
+                remaining[inp] -= 1;
+                if remaining[inp] == 0 && !self.output_ids.contains(&inp) {
+                    values[inp] = None;
+                }
+            }
+        }
+
+        Ok(self
+            .output_ids
+            .iter()
+            .map(|&oid| values[oid].take().expect("output computed"))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::op::PadMode;
+    use crate::pruning::scheme::project_scheme;
+    use crate::pruning::verify::apply_mask;
+    use crate::util::rng::Rng;
+
+    fn build_net(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new("net");
+        let x = g.add("x", Op::Input { shape: vec![1, 3, 16, 16] }, &[]);
+        let c1 = g.add(
+            "c1",
+            Op::Conv2d {
+                out_c: 8,
+                in_c: 3,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Relu,
+            },
+            &[x],
+        );
+        g.set_param("c1.weight", Tensor::randn(&[8, 3, 3, 3], rng));
+        g.set_param("c1.bias", Tensor::randn(&[8], rng).map(|v| v * 0.1));
+        let c2 = g.add(
+            "c2",
+            Op::Conv2d {
+                out_c: 8,
+                in_c: 8,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[c1],
+        );
+        g.set_param("c2.weight", Tensor::randn(&[8, 8, 3, 3], rng));
+        let s = g.add("s", Op::Add, &[c2, c1]);
+        let up = g.add("up", Op::UpsampleNearest { factor: 2 }, &[s]);
+        g.add("out", Op::Output, &[up]);
+        g
+    }
+
+    #[test]
+    fn engine_runs_and_shapes_match() {
+        let mut rng = Rng::new(121);
+        let g = build_net(&mut rng);
+        let eng = Engine::new(&g, 2).unwrap();
+        assert_eq!(eng.input_shapes(), vec![vec![1, 3, 16, 16]]);
+        assert_eq!(eng.output_shapes(), vec![vec![1, 8, 32, 32]]);
+        let x = Tensor::randn(&[1, 3, 16, 16], &mut rng);
+        let out = eng.run(&[x]).unwrap();
+        assert_eq!(out[0].shape(), &[1, 8, 32, 32]);
+    }
+
+    #[test]
+    fn sparse_modes_agree_with_dense() {
+        let mut rng = Rng::new(122);
+        let mut g = build_net(&mut rng);
+        // Prune both convs.
+        let mut schemes = Vec::new();
+        for name in ["c1", "c2"] {
+            let w = g.param(&format!("{}.weight", name)).unwrap().clone();
+            let s = project_scheme(&w, "pattern", 0.6, None);
+            g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
+            schemes.push((name.to_string(), s));
+        }
+        let x = Tensor::randn(&[1, 3, 16, 16], &mut rng);
+        let dense = Engine::new(&g, 2).unwrap().run(&[x.clone()]).unwrap();
+        let csr = Engine::with_config(&g, &ExecConfig::csr(2))
+            .unwrap()
+            .run(&[x.clone()])
+            .unwrap();
+        let compact = Engine::with_config(&g, &ExecConfig::compact(2, schemes))
+            .unwrap()
+            .run(&[x])
+            .unwrap();
+        assert!(dense[0].max_abs_diff(&csr[0]) < 1e-3);
+        assert!(dense[0].max_abs_diff(&compact[0]) < 1e-3);
+    }
+
+    #[test]
+    fn compact_weights_smaller_than_dense() {
+        let mut rng = Rng::new(123);
+        let mut g = build_net(&mut rng);
+        let mut schemes = Vec::new();
+        for name in ["c1", "c2"] {
+            let w = g.param(&format!("{}.weight", name)).unwrap().clone();
+            let s = project_scheme(&w, "column", 0.6, None);
+            g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
+            schemes.push((name.to_string(), s));
+        }
+        let dense = Engine::new(&g, 1).unwrap().weight_bytes;
+        let compact = Engine::with_config(&g, &ExecConfig::compact(1, schemes))
+            .unwrap()
+            .weight_bytes;
+        assert!(compact < dense / 2, "compact={} dense={}", compact, dense);
+    }
+
+    #[test]
+    fn wrong_input_shape_rejected() {
+        let mut rng = Rng::new(124);
+        let g = build_net(&mut rng);
+        let eng = Engine::new(&g, 1).unwrap();
+        let bad = Tensor::zeros(&[1, 3, 8, 8]);
+        assert!(eng.run(&[bad]).is_err());
+        assert!(eng.run(&[]).is_err());
+    }
+
+    #[test]
+    fn profiled_run_reports_all_ops() {
+        let mut rng = Rng::new(125);
+        let g = build_net(&mut rng);
+        let eng = Engine::new(&g, 1).unwrap();
+        let x = Tensor::randn(&[1, 3, 16, 16], &mut rng);
+        let (_, prof) = eng.run_profiled(&[x]).unwrap();
+        assert_eq!(prof.len(), g.len());
+        assert!(prof.iter().any(|(n, _)| n == "c1"));
+    }
+}

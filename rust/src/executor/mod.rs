@@ -1,0 +1,14 @@
+//! Graph executor — the "mobile device" inference engine.
+//!
+//! [`Engine::new`] *compiles* an LR graph into a per-node execution plan:
+//! shape inference, kernel selection per conv (dense / CSR / column-compact
+//! / reordered, driven by [`ExecConfig`]), weight-format encoding and
+//! scratch allocation all happen once; [`Engine::run`] then only executes
+//! kernels. Intermediate buffers are reference-counted and dropped as soon
+//! as their last consumer has run (the memory planner).
+
+pub mod engine;
+pub mod profile;
+
+pub use engine::{Engine, ExecConfig, SparseMode};
+pub use profile::{OpProfile, RunProfile};

@@ -1,0 +1,100 @@
+//! Per-op profiling report over one or more engine runs.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Aggregated timing for one op across runs.
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    pub name: String,
+    pub calls: usize,
+    pub total: Duration,
+}
+
+impl OpProfile {
+    pub fn mean_ms(&self) -> f64 {
+        self.total.as_secs_f64() * 1e3 / self.calls.max(1) as f64
+    }
+}
+
+/// Accumulates per-op timings across runs and renders a hot-spot table.
+#[derive(Debug, Default)]
+pub struct RunProfile {
+    ops: HashMap<String, OpProfile>,
+    order: Vec<String>,
+}
+
+impl RunProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn absorb(&mut self, run: &[(String, Duration)]) {
+        for (name, d) in run {
+            match self.ops.get_mut(name) {
+                Some(p) => {
+                    p.calls += 1;
+                    p.total += *d;
+                }
+                None => {
+                    self.order.push(name.clone());
+                    self.ops.insert(
+                        name.clone(),
+                        OpProfile { name: name.clone(), calls: 1, total: *d },
+                    );
+                }
+            }
+        }
+    }
+
+    /// Ops sorted by total time, descending.
+    pub fn hottest(&self) -> Vec<&OpProfile> {
+        let mut v: Vec<&OpProfile> = self.ops.values().collect();
+        v.sort_by(|a, b| b.total.cmp(&a.total));
+        v
+    }
+
+    pub fn total(&self) -> Duration {
+        self.ops.values().map(|p| p.total).sum()
+    }
+
+    /// Render a table of the top `n` hot ops.
+    pub fn table(&self, n: usize) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut s = format!("{:<24} {:>8} {:>10} {:>7}\n", "op", "calls", "mean ms", "share");
+        for p in self.hottest().into_iter().take(n) {
+            s.push_str(&format!(
+                "{:<24} {:>8} {:>10.3} {:>6.1}%\n",
+                p.name,
+                p.calls,
+                p.mean_ms(),
+                100.0 * p.total.as_secs_f64() / total
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_and_rank() {
+        let mut rp = RunProfile::new();
+        rp.absorb(&[
+            ("a".into(), Duration::from_millis(5)),
+            ("b".into(), Duration::from_millis(10)),
+        ]);
+        rp.absorb(&[
+            ("a".into(), Duration::from_millis(5)),
+            ("b".into(), Duration::from_millis(10)),
+        ]);
+        let hot = rp.hottest();
+        assert_eq!(hot[0].name, "b");
+        assert_eq!(hot[0].calls, 2);
+        assert_eq!(rp.total(), Duration::from_millis(30));
+        let t = rp.table(5);
+        assert!(t.contains('b') && t.contains('a'));
+    }
+}

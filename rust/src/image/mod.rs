@@ -1,0 +1,259 @@
+//! Image I/O + quality metrics for the demo applications (Figure 1).
+//!
+//! PNG writing uses flate2 (zlib); PPM is supported for zero-dependency
+//! round trips. Pixels are RGB8; conversion to/from NCHW f32 tensors in
+//! [0, 1] is provided. [`psnr`] and [`ssim`] score the super-resolution /
+//! coloring outputs.
+
+pub mod png;
+pub mod synth;
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// 8-bit RGB image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    /// RGB interleaved, row-major.
+    pub pixels: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Self {
+        Image { width, height, pixels: vec![0; width * height * 3] }
+    }
+
+    /// Convert to a [1, 3, H, W] tensor in [0, 1].
+    pub fn to_tensor(&self) -> Tensor {
+        let (h, w) = (self.height, self.width);
+        let mut t = Tensor::zeros(&[1, 3, h, w]);
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..3 {
+                    let v = self.pixels[(y * w + x) * 3 + c] as f32 / 255.0;
+                    t.set4(0, c, y, x, v);
+                }
+            }
+        }
+        t
+    }
+
+    /// Build from a [1, 3, H, W] (or [1, 1, H, W] grayscale) tensor,
+    /// clamping to [0, 1].
+    pub fn from_tensor(t: &Tensor) -> Self {
+        let (c, h, w) = (t.dim(1), t.dim(2), t.dim(3));
+        let mut img = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..3 {
+                    let src_c = if c == 1 { 0 } else { ch };
+                    let v = t.at4(0, src_c, y, x).clamp(0.0, 1.0);
+                    img.pixels[(y * w + x) * 3 + ch] = (v * 255.0 + 0.5) as u8;
+                }
+            }
+        }
+        img
+    }
+
+    /// Grayscale copy (luma), kept as RGB with equal channels — the input
+    /// to the coloring app.
+    pub fn to_grayscale(&self) -> Image {
+        let mut out = self.clone();
+        for px in out.pixels.chunks_mut(3) {
+            let y = (0.299 * px[0] as f32 + 0.587 * px[1] as f32 + 0.114 * px[2] as f32) as u8;
+            px[0] = y;
+            px[1] = y;
+            px[2] = y;
+        }
+        out
+    }
+
+    /// Box-filter downsample by integer factor (for SR input generation).
+    pub fn downsample(&self, factor: usize) -> Image {
+        let (w, h) = (self.width / factor, self.height / factor);
+        let mut out = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..3 {
+                    let mut acc = 0u32;
+                    for dy in 0..factor {
+                        for dx in 0..factor {
+                            acc += self.pixels
+                                [((y * factor + dy) * self.width + x * factor + dx) * 3 + c]
+                                as u32;
+                        }
+                    }
+                    out.pixels[(y * w + x) * 3 + c] = (acc / (factor * factor) as u32) as u8;
+                }
+            }
+        }
+        out
+    }
+
+    // ---- PPM ---------------------------------------------------------------
+
+    pub fn save_ppm(&self, path: &Path) -> Result<()> {
+        let mut buf = format!("P6\n{} {}\n255\n", self.width, self.height).into_bytes();
+        buf.extend_from_slice(&self.pixels);
+        std::fs::write(path, buf).with_context(|| format!("write {}", path.display()))
+    }
+
+    pub fn load_ppm(path: &Path) -> Result<Image> {
+        let data = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        let header_end = data
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == b'\n')
+            .map(|(i, _)| i)
+            .nth(2)
+            .context("ppm: truncated header")?;
+        let header = std::str::from_utf8(&data[..header_end]).context("ppm: bad header")?;
+        let mut lines = header.lines();
+        if lines.next() != Some("P6") {
+            bail!("ppm: not P6");
+        }
+        let dims: Vec<usize> = lines
+            .next()
+            .context("ppm: missing dims")?
+            .split_whitespace()
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        if dims.len() != 2 {
+            bail!("ppm: bad dims");
+        }
+        let (width, height) = (dims[0], dims[1]);
+        let pixels = data[header_end + 1..].to_vec();
+        if pixels.len() < width * height * 3 {
+            bail!("ppm: truncated pixel data");
+        }
+        Ok(Image { width, height, pixels: pixels[..width * height * 3].to_vec() })
+    }
+
+    /// Save as PNG (flate2-compressed).
+    pub fn save_png(&self, path: &Path) -> Result<()> {
+        png::write_png(path, self)
+    }
+}
+
+/// Peak signal-to-noise ratio between two images, in dB.
+pub fn psnr(a: &Image, b: &Image) -> f64 {
+    assert_eq!((a.width, a.height), (b.width, b.height));
+    let mse: f64 = a
+        .pixels
+        .iter()
+        .zip(b.pixels.iter())
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.pixels.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (255.0f64 * 255.0 / mse).log10()
+}
+
+/// Global (single-window) SSIM over luma — coarse but monotone quality
+/// signal for the demo metrics.
+pub fn ssim(a: &Image, b: &Image) -> f64 {
+    assert_eq!((a.width, a.height), (b.width, b.height));
+    let luma = |img: &Image| -> Vec<f64> {
+        img.pixels
+            .chunks(3)
+            .map(|p| 0.299 * p[0] as f64 + 0.587 * p[1] as f64 + 0.114 * p[2] as f64)
+            .collect()
+    };
+    let (la, lb) = (luma(a), luma(b));
+    let n = la.len() as f64;
+    let (ma, mb) = (la.iter().sum::<f64>() / n, lb.iter().sum::<f64>() / n);
+    let va = la.iter().map(|x| (x - ma) * (x - ma)).sum::<f64>() / n;
+    let vb = lb.iter().map(|x| (x - mb) * (x - mb)).sum::<f64>() / n;
+    let cov = la
+        .iter()
+        .zip(lb.iter())
+        .map(|(x, y)| (x - ma) * (y - mb))
+        .sum::<f64>()
+        / n;
+    let (c1, c2) = (6.5025, 58.5225); // (0.01*255)^2, (0.03*255)^2
+    ((2.0 * ma * mb + c1) * (2.0 * cov + c2)) / ((ma * ma + mb * mb + c1) * (va + vb + c2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gradient(w: usize, h: usize) -> Image {
+        let mut img = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                img.pixels[(y * w + x) * 3] = (x * 255 / w.max(1)) as u8;
+                img.pixels[(y * w + x) * 3 + 1] = (y * 255 / h.max(1)) as u8;
+                img.pixels[(y * w + x) * 3 + 2] = 128;
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let img = gradient(8, 6);
+        let t = img.to_tensor();
+        assert_eq!(t.shape(), &[1, 3, 6, 8]);
+        let back = Image::from_tensor(&t);
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn ppm_roundtrip() {
+        let dir = std::env::temp_dir().join("prt_dnn_img_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.ppm");
+        let img = gradient(16, 9);
+        img.save_ppm(&p).unwrap();
+        let back = Image::load_ppm(&p).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn psnr_identity_and_noise() {
+        let img = gradient(16, 16);
+        assert!(psnr(&img, &img).is_infinite());
+        let mut noisy = img.clone();
+        for (i, p) in noisy.pixels.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *p = p.wrapping_add(10);
+            }
+        }
+        let v = psnr(&img, &noisy);
+        assert!(v > 20.0 && v < 60.0, "psnr={}", v);
+    }
+
+    #[test]
+    fn ssim_bounds() {
+        let img = gradient(16, 16);
+        let s = ssim(&img, &img);
+        assert!((s - 1.0).abs() < 1e-9);
+        let inv = Image {
+            width: 16,
+            height: 16,
+            pixels: img.pixels.iter().map(|&p| 255 - p).collect(),
+        };
+        assert!(ssim(&img, &inv) < 0.5);
+    }
+
+    #[test]
+    fn grayscale_and_downsample() {
+        let img = gradient(8, 8);
+        let g = img.to_grayscale();
+        for px in g.pixels.chunks(3) {
+            assert_eq!(px[0], px[1]);
+            assert_eq!(px[1], px[2]);
+        }
+        let d = img.downsample(2);
+        assert_eq!((d.width, d.height), (4, 4));
+    }
+}

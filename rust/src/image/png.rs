@@ -1,0 +1,68 @@
+//! Minimal PNG encoder (8-bit RGB, zlib via flate2, filter type 0).
+
+use crate::image::Image;
+use anyhow::{Context, Result};
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::Write;
+use std::path::Path;
+
+fn chunk(out: &mut Vec<u8>, kind: &[u8; 4], payload: &[u8]) {
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(kind);
+    out.extend_from_slice(payload);
+    let mut hasher = crc32fast::Hasher::new();
+    hasher.update(kind);
+    hasher.update(payload);
+    out.extend_from_slice(&hasher.finalize().to_be_bytes());
+}
+
+/// Write an RGB8 PNG.
+pub fn write_png(path: &Path, img: &Image) -> Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"\x89PNG\r\n\x1a\n");
+
+    // IHDR
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&(img.width as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(img.height as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 2, 0, 0, 0]); // depth 8, color RGB
+    chunk(&mut out, b"IHDR", &ihdr);
+
+    // IDAT: each scanline prefixed with filter byte 0.
+    let stride = img.width * 3;
+    let mut raw = Vec::with_capacity((stride + 1) * img.height);
+    for y in 0..img.height {
+        raw.push(0u8);
+        raw.extend_from_slice(&img.pixels[y * stride..(y + 1) * stride]);
+    }
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(&raw)?;
+    let compressed = enc.finish()?;
+    chunk(&mut out, b"IDAT", &compressed);
+    chunk(&mut out, b"IEND", &[]);
+
+    std::fs::write(path, out).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn png_has_valid_signature_and_chunks() {
+        let dir = std::env::temp_dir().join("prt_dnn_png_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.png");
+        let mut img = Image::new(4, 3);
+        for (i, px) in img.pixels.iter_mut().enumerate() {
+            *px = (i * 7 % 256) as u8;
+        }
+        write_png(&p, &img).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], b"\x89PNG\r\n\x1a\n");
+        assert_eq!(&bytes[12..16], b"IHDR");
+        assert!(bytes.windows(4).any(|w| w == b"IDAT"));
+        assert!(bytes.ends_with(&[0xAE, 0x42, 0x60, 0x82])); // IEND crc
+    }
+}

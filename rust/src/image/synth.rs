@@ -1,0 +1,200 @@
+//! Procedural test images — the stand-in for COCO / Places / DIV2K frames
+//! (see DESIGN.md §2 substitutions). Images have natural-image-like
+//! structure: smooth gradients, edges, textures and blobs, so the demo
+//! apps produce visually meaningful outputs and SR/coloring metrics are
+//! non-trivial.
+
+use crate::image::Image;
+use crate::util::rng::Rng;
+
+/// A synthetic "photo": sky gradient + textured ground + colored blobs +
+/// a few hard edges. Deterministic per seed.
+pub fn photo(width: usize, height: usize, seed: u64) -> Image {
+    let mut rng = Rng::new(seed);
+    let mut img = Image::new(width, height);
+    let horizon = height as f32 * rng.range_f32(0.35, 0.65);
+    let sky = [rng.range(100, 200), rng.range(140, 220), rng.range(200, 255)];
+    let ground = [rng.range(60, 140), rng.range(100, 180), rng.range(40, 100)];
+
+    for y in 0..height {
+        for x in 0..width {
+            let fy = y as f32;
+            let px = &mut img.pixels[(y * width + x) * 3..(y * width + x) * 3 + 3];
+            if fy < horizon {
+                let t = fy / horizon.max(1.0);
+                for c in 0..3 {
+                    px[c] = (sky[c] as f32 * (1.0 - 0.3 * t)) as u8;
+                }
+            } else {
+                // Textured ground: value noise via hashed lattice.
+                let n = value_noise(x as f32 * 0.15, y as f32 * 0.15, seed);
+                for c in 0..3 {
+                    px[c] = (ground[c] as f32 * (0.7 + 0.5 * n)).min(255.0) as u8;
+                }
+            }
+        }
+    }
+
+    // Blobs (objects).
+    let blobs = rng.range(3, 7);
+    for _ in 0..blobs {
+        let cx = rng.below(width) as f32;
+        let cy = rng.below(height) as f32;
+        let r = rng.range_f32(0.05, 0.18) * width as f32;
+        let color = [rng.below(256) as f32, rng.below(256) as f32, rng.below(256) as f32];
+        for y in 0..height {
+            for x in 0..width {
+                let d = ((x as f32 - cx).powi(2) + (y as f32 - cy).powi(2)).sqrt();
+                if d < r {
+                    let a = 1.0 - (d / r).powi(2);
+                    let px = &mut img.pixels[(y * width + x) * 3..(y * width + x) * 3 + 3];
+                    for c in 0..3 {
+                        px[c] = (px[c] as f32 * (1.0 - a) + color[c] * a) as u8;
+                    }
+                }
+            }
+        }
+    }
+
+    // A couple of hard vertical edges (buildings / poles).
+    let poles = rng.range(1, 4);
+    for _ in 0..poles {
+        let x0 = rng.below(width.saturating_sub(4).max(1));
+        let w = rng.range(1, 4);
+        let shade = rng.below(90) as u8;
+        for y in (horizon as usize).min(height)..height {
+            for dx in 0..w.min(width - x0) {
+                let px = &mut img.pixels[(y * width + x0 + dx) * 3..(y * width + x0 + dx) * 3 + 3];
+                px[0] = shade;
+                px[1] = shade;
+                px[2] = shade;
+            }
+        }
+    }
+    img
+}
+
+/// A synthetic "painting" for the style-transfer style reference: bold
+/// color bands with swirls.
+pub fn painting(width: usize, height: usize, seed: u64) -> Image {
+    let mut rng = Rng::new(seed ^ 0xA5A5);
+    let mut img = Image::new(width, height);
+    let bands = rng.range(4, 8);
+    let palette: Vec<[u8; 3]> = (0..bands)
+        .map(|_| [rng.below(256) as u8, rng.below(256) as u8, rng.below(256) as u8])
+        .collect();
+    for y in 0..height {
+        for x in 0..width {
+            let swirl =
+                ((x as f32 * 0.07).sin() * 8.0 + (y as f32 * 0.05).cos() * 6.0) as isize;
+            let band = (((y as isize + swirl).rem_euclid(height as isize)) as usize * bands
+                / height.max(1))
+            .min(bands - 1);
+            let c = palette[band];
+            let px = &mut img.pixels[(y * width + x) * 3..(y * width + x) * 3 + 3];
+            px.copy_from_slice(&c);
+        }
+    }
+    img
+}
+
+/// Hash-based 2-D value noise in [0, 1].
+fn value_noise(x: f32, y: f32, seed: u64) -> f32 {
+    let xi = x.floor() as i64;
+    let yi = y.floor() as i64;
+    let (fx, fy) = (x - xi as f32, y - yi as f32);
+    let h = |ix: i64, iy: i64| -> f32 {
+        let mut v = (ix as u64).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (iy as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+            ^ seed;
+        v ^= v >> 33;
+        v = v.wrapping_mul(0xFF51AFD7ED558CCD);
+        v ^= v >> 33;
+        (v & 0xFFFF) as f32 / 65535.0
+    };
+    let lerp = |a: f32, b: f32, t: f32| a + (b - a) * t;
+    let sx = fx * fx * (3.0 - 2.0 * fx);
+    let sy = fy * fy * (3.0 - 2.0 * fy);
+    lerp(
+        lerp(h(xi, yi), h(xi + 1, yi), sx),
+        lerp(h(xi, yi + 1), h(xi + 1, yi + 1), sx),
+        sy,
+    )
+}
+
+/// A deterministic stream of synthetic video frames (slow pan over a photo
+/// twice the requested size) — the serving workload.
+pub struct FrameStream {
+    base: Image,
+    width: usize,
+    height: usize,
+    frame: usize,
+}
+
+impl FrameStream {
+    pub fn new(width: usize, height: usize, seed: u64) -> Self {
+        FrameStream { base: photo(width * 2, height * 2, seed), width, height, frame: 0 }
+    }
+
+    /// Next frame: crop that pans diagonally across the base image.
+    pub fn next_frame(&mut self) -> Image {
+        let max_dx = self.base.width - self.width;
+        let max_dy = self.base.height - self.height;
+        // Advance at least one pixel per frame so consecutive frames differ.
+        let dx = (self.frame * 2) % (max_dx + 1);
+        let dy = self.frame % (max_dy + 1);
+        self.frame += 1;
+        let mut img = Image::new(self.width, self.height);
+        for y in 0..self.height {
+            let src = ((y + dy) * self.base.width + dx) * 3;
+            let dst = y * self.width * 3;
+            img.pixels[dst..dst + self.width * 3]
+                .copy_from_slice(&self.base.pixels[src..src + self.width * 3]);
+        }
+        img
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn photo_is_deterministic_and_structured() {
+        let a = photo(64, 48, 7);
+        let b = photo(64, 48, 7);
+        assert_eq!(a, b);
+        let c = photo(64, 48, 8);
+        assert_ne!(a, c);
+        // Non-trivial content: pixel variance above threshold.
+        let mean: f64 =
+            a.pixels.iter().map(|&p| p as f64).sum::<f64>() / a.pixels.len() as f64;
+        let var: f64 = a
+            .pixels
+            .iter()
+            .map(|&p| (p as f64 - mean).powi(2))
+            .sum::<f64>()
+            / a.pixels.len() as f64;
+        assert!(var > 100.0, "variance {}", var);
+    }
+
+    #[test]
+    fn frame_stream_pans() {
+        let mut fs = FrameStream::new(32, 32, 1);
+        let f0 = fs.next_frame();
+        let f1 = fs.next_frame();
+        assert_eq!(f0.width, 32);
+        assert_ne!(f0, f1, "panning frames must differ");
+    }
+
+    #[test]
+    fn painting_uses_multiple_colors() {
+        let p = painting(64, 64, 3);
+        let distinct: std::collections::HashSet<[u8; 3]> = p
+            .pixels
+            .chunks(3)
+            .map(|c| [c[0], c[1], c[2]])
+            .collect();
+        assert!(distinct.len() >= 4);
+    }
+}

@@ -1,0 +1,489 @@
+//! Convolution drivers: tie im2col + (sparse) GEMM + fused bias/activation
+//! together. One entry point per execution tier so the ablation bench can
+//! time them separately:
+//!
+//! * [`conv2d_dense`] — unpruned baseline (full im2col + dense GEMM),
+//! * [`conv2d_csr`] — pruned weights, no compiler opts (CSR SpMM over the
+//!   full patch matrix),
+//! * [`conv2d_column_compact`] — column pruning + compiler (pruned im2col,
+//!   dense reduced-K GEMM),
+//! * [`conv2d_reordered`] — pattern pruning + compiler (full patch matrix,
+//!   group-compacted weights, balanced schedule),
+//! * [`dwconv2d`] — direct depthwise convolution.
+//!
+//! All drivers fuse per-channel bias + activation into the output pass when
+//! requested (the DSL fusion pass sets `fused_act` on the conv LR).
+
+use crate::dsl::op::{Activation, PadMode};
+use crate::kernels::elementwise::bias_act_inplace;
+use crate::kernels::gemm;
+use crate::kernels::im2col::{im2col, im2col_pruned, ConvGeom};
+use crate::kernels::sparse_gemm;
+use crate::reorder::{ReorderPlan, Schedule};
+use crate::sparse::{ColumnCompact, Csr};
+use crate::tensor::Tensor;
+
+/// Scratch buffers reused across conv calls (memory-planner owned).
+#[derive(Debug, Default)]
+pub struct ConvScratch {
+    patch: Vec<f32>,
+}
+
+impl ConvScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn patch_buf(&mut self, len: usize) -> &mut [f32] {
+        if self.patch.len() < len {
+            self.patch.resize(len, 0.0);
+        }
+        &mut self.patch[..len]
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv_common(
+    x: &Tensor,
+    out_c: usize,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    scratch: &mut ConvScratch,
+    mut gemm_fn: impl FnMut(&[f32], &mut [f32]),
+    build_patch: impl Fn(&[f32], &mut [f32]),
+    patch_rows: usize,
+) -> Tensor {
+    let n = x.dim(0);
+    let chw = geom.in_c * geom.in_h * geom.in_w;
+    let opx = geom.out_px();
+    let mut out = Tensor::zeros(&[n, out_c, geom.out_h, geom.out_w]);
+    let patch_len = patch_rows * opx;
+    for s in 0..n {
+        let xin = &x.data()[s * chw..(s + 1) * chw];
+        let patch = scratch.patch_buf(patch_len);
+        build_patch(xin, patch);
+        let cdst = &mut out.data_mut()[s * out_c * opx..(s + 1) * out_c * opx];
+        gemm_fn(&scratch.patch[..patch_len], cdst);
+    }
+    bias_act_inplace(out.data_mut(), bias, out_c, opx, act);
+    let _ = pad_mode;
+    out
+}
+
+/// Unpruned baseline: full im2col + dense multi-threaded GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_dense(
+    x: &Tensor,
+    w: &Tensor, // OIHW
+    bias: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+    pad_mode: PadMode,
+    act: Activation,
+    threads: usize,
+    scratch: &mut ConvScratch,
+) -> Tensor {
+    let (out_c, in_c, kh, _kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let geom = ConvGeom::new(in_c, x.dim(2), x.dim(3), kh, stride, pad);
+    let cols = geom.cols();
+    let opx = geom.out_px();
+    conv_common(
+        x,
+        out_c,
+        &geom,
+        pad_mode,
+        bias,
+        act,
+        scratch,
+        |patch, cdst| gemm::gemm(out_c, cols, opx, w.data(), patch, cdst, threads),
+        |xin, patch| im2col(xin, &geom, pad_mode, patch),
+        cols,
+    )
+}
+
+/// Pruned, no compiler: CSR SpMM over the full patch matrix.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_csr(
+    x: &Tensor,
+    csr: &Csr,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    threads: usize,
+    scratch: &mut ConvScratch,
+) -> Tensor {
+    let out_c = csr.rows;
+    let opx = geom.out_px();
+    conv_common(
+        x,
+        out_c,
+        geom,
+        pad_mode,
+        bias,
+        act,
+        scratch,
+        |patch, cdst| sparse_gemm::spmm_csr(csr, patch, opx, cdst, threads),
+        |xin, patch| im2col(xin, geom, pad_mode, patch),
+        geom.cols(),
+    )
+}
+
+/// Column pruning + compiler: build only kept patch rows, dense reduced GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_column_compact(
+    x: &Tensor,
+    cc: &ColumnCompact,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    threads: usize,
+    scratch: &mut ConvScratch,
+) -> Tensor {
+    let out_c = cc.rows;
+    let kept = cc.kept();
+    let opx = geom.out_px();
+    conv_common(
+        x,
+        out_c,
+        geom,
+        pad_mode,
+        bias,
+        act,
+        scratch,
+        |patch, cdst| {
+            sparse_gemm::spmm_column_compact(&cc.values, out_c, kept, patch, opx, cdst, threads)
+        },
+        |xin, patch| im2col_pruned(xin, geom, pad_mode, &cc.keep, patch),
+        kept,
+    )
+}
+
+/// Pattern pruning + compiler: full patch matrix, reordered group GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_reordered(
+    x: &Tensor,
+    plan: &ReorderPlan,
+    sched: &Schedule,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    scratch: &mut ConvScratch,
+) -> Tensor {
+    let out_c = plan.rows;
+    let opx = geom.out_px();
+    conv_common(
+        x,
+        out_c,
+        geom,
+        pad_mode,
+        bias,
+        act,
+        scratch,
+        |patch, cdst| sparse_gemm::spmm_reordered(plan, sched, patch, opx, cdst),
+        |xin, patch| im2col(xin, geom, pad_mode, patch),
+        geom.cols(),
+    )
+}
+
+/// Pattern pruning + compiler, kernel-granularity reorder: full patch
+/// matrix, (channel, pattern)-grouped fused passes.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_pattern(
+    x: &Tensor,
+    plan: &sparse_gemm::PatternPlan,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    threads: usize,
+    scratch: &mut ConvScratch,
+) -> Tensor {
+    let out_c = plan.out_c;
+    let opx = geom.out_px();
+    conv_common(
+        x,
+        out_c,
+        geom,
+        pad_mode,
+        bias,
+        act,
+        scratch,
+        |patch, cdst| sparse_gemm::spmm_pattern(plan, patch, opx, cdst, threads),
+        |xin, patch| im2col(xin, geom, pad_mode, patch),
+        geom.cols(),
+    )
+}
+
+/// Direct depthwise conv (no im2col — each channel convolves independently).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d(
+    x: &Tensor,
+    w: &Tensor, // [C,1,kh,kw]
+    bias: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+    act: Activation,
+    threads: usize,
+) -> Tensor {
+    let (n, c, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let k = w.dim(2);
+    let (oh, ow) = crate::dsl::shape::conv_out_hw(h, win, k, stride, pad);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+    let total = n * c;
+    crate::util::threadpool::parallel_chunks(total, threads, |cs, ce, _| {
+        let out_all = unsafe { std::slice::from_raw_parts_mut(out_ptr.get(), n * c * oh * ow) };
+        for sc in cs..ce {
+            let (s, ch) = (sc / c, sc % c);
+            let plane = &x.data()[(s * c + ch) * h * win..(s * c + ch + 1) * h * win];
+            let ker = &w.data()[ch * k * k..(ch + 1) * k * k];
+            let obase = (s * c + ch) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for dy in 0..k {
+                        let iy = (oy * stride + dy) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for dx in 0..k {
+                            let ix = (ox * stride + dx) as isize - pad as isize;
+                            if ix < 0 || ix >= win as isize {
+                                continue;
+                            }
+                            acc += ker[dy * k + dx] * plane[iy as usize * win + ix as usize];
+                        }
+                    }
+                    out_all[obase + oy * ow + ox] = acc;
+                }
+            }
+        }
+    });
+    bias_act_inplace(out.data_mut(), bias, c, oh * ow, act);
+    out
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Accessor that forces the closure to capture the whole wrapper
+    /// (edition-2021 closures capture individual fields otherwise,
+    /// defeating the Send/Sync impls).
+    #[inline]
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Reference conv (naive 7-loop) — the oracle all drivers are tested against.
+pub fn conv2d_ref(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+    pad_mode: PadMode,
+    act: Activation,
+) -> Tensor {
+    let (n, in_c, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (out_c, _, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let (oh, ow) = crate::dsl::shape::conv_out_hw(h, win, kh, stride, pad);
+    let mut out = Tensor::zeros(&[n, out_c, oh, ow]);
+    let reflect = |v: isize, nn: isize| -> isize {
+        if nn == 1 {
+            return 0;
+        }
+        let mut v = v;
+        while v < 0 || v >= nn {
+            if v < 0 {
+                v = -v;
+            }
+            if v >= nn {
+                v = 2 * (nn - 1) - v;
+            }
+        }
+        v
+    };
+    for s in 0..n {
+        for oc in 0..out_c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..in_c {
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                let mut iy = (oy * stride + dy) as isize - pad as isize;
+                                let mut ix = (ox * stride + dx) as isize - pad as isize;
+                                let v = match pad_mode {
+                                    PadMode::Zeros => {
+                                        if iy < 0
+                                            || ix < 0
+                                            || iy >= h as isize
+                                            || ix >= win as isize
+                                        {
+                                            0.0
+                                        } else {
+                                            x.at4(s, ic, iy as usize, ix as usize)
+                                        }
+                                    }
+                                    PadMode::Reflect => {
+                                        iy = reflect(iy, h as isize);
+                                        ix = reflect(ix, win as isize);
+                                        x.at4(s, ic, iy as usize, ix as usize)
+                                    }
+                                };
+                                acc += v * w.at4(oc, ic, dy, dx);
+                            }
+                        }
+                    }
+                    let b = bias.map(|b| b[oc]).unwrap_or(0.0);
+                    out.set4(s, oc, oy, ox, act.apply(acc + b));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::scheme::{project_scheme, Scheme};
+    use crate::pruning::verify::apply_mask;
+    use crate::sparse::GemmView;
+    use crate::util::rng::{check_prop, Rng};
+
+    fn rand_input(rng: &mut Rng, n: usize, c: usize, h: usize, w: usize) -> Tensor {
+        Tensor::randn(&[n, c, h, w], rng)
+    }
+
+    #[test]
+    fn dense_matches_ref() {
+        check_prop("conv2d_dense == ref", 8, |rng| {
+            let (n, ic, oc) = (rng.range(1, 3), rng.range(1, 5), rng.range(1, 9));
+            let h = rng.range(4, 12);
+            let w = rng.range(4, 12);
+            let k = [1, 3, 5][rng.below(3)];
+            let stride = rng.range(1, 3);
+            let pad = k / 2;
+            let pm = if rng.below(2) == 0 { PadMode::Zeros } else { PadMode::Reflect };
+            let x = rand_input(rng, n, ic, h, w);
+            let wt = Tensor::randn(&[oc, ic, k, k], rng);
+            let bias: Vec<f32> = (0..oc).map(|_| rng.normal()).collect();
+            let mut scratch = ConvScratch::new();
+            let got = conv2d_dense(
+                &x, &wt, Some(&bias), stride, pad, pm, Activation::Relu,
+                rng.range(1, 4), &mut scratch,
+            );
+            let want = conv2d_ref(&x, &wt, Some(&bias), stride, pad, pm, Activation::Relu);
+            let err = got.max_abs_diff(&want);
+            assert!(err < 1e-3, "err={} k={} s={} pm={:?}", err, k, stride, pm);
+        });
+    }
+
+    #[test]
+    fn csr_and_reordered_match_ref() {
+        check_prop("sparse convs == ref", 6, |rng| {
+            let (ic, oc) = (rng.range(2, 6), rng.range(4, 12));
+            let x = rand_input(rng, 1, ic, 8, 8);
+            let wt = Tensor::randn(&[oc, ic, 3, 3], rng);
+            let s = project_scheme(&wt, "pattern", 0.6, None);
+            let wp = apply_mask(&wt, &s);
+            let geom = ConvGeom::new(ic, 8, 8, 3, 1, 1);
+            let mut scratch = ConvScratch::new();
+
+            let want =
+                conv2d_ref(&x, &wp, None, 1, 1, PadMode::Zeros, Activation::Identity);
+
+            let gv = GemmView::from_oihw(&wp);
+            let csr = Csr::from_dense(&gv);
+            let got_csr = conv2d_csr(
+                &x, &csr, &geom, PadMode::Zeros, None, Activation::Identity, 2, &mut scratch,
+            );
+            assert!(got_csr.max_abs_diff(&want) < 1e-3);
+
+            let plan = ReorderPlan::build(&gv);
+            let sched = Schedule::build(&plan, 2);
+            let got_ro = conv2d_reordered(
+                &x, &plan, &sched, &geom, PadMode::Zeros, None, Activation::Identity,
+                &mut scratch,
+            );
+            assert!(got_ro.max_abs_diff(&want) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn column_compact_matches_ref() {
+        let mut rng = Rng::new(91);
+        let (ic, oc) = (4, 16);
+        let x = rand_input(&mut rng, 2, ic, 10, 10);
+        let wt = Tensor::randn(&[oc, ic, 3, 3], &mut rng);
+        let s = project_scheme(&wt, "column", 0.5, None);
+        let wp = apply_mask(&wt, &s);
+        let keep = match &s {
+            Scheme::Column { keep } => keep.clone(),
+            _ => unreachable!(),
+        };
+        let gv = GemmView::from_oihw(&wp);
+        let cc = ColumnCompact::encode(&gv, &keep);
+        let geom = ConvGeom::new(ic, 10, 10, 3, 1, 1);
+        let bias: Vec<f32> = (0..oc).map(|_| rng.normal()).collect();
+        let mut scratch = ConvScratch::new();
+        let got = conv2d_column_compact(
+            &x, &cc, &geom, PadMode::Reflect, Some(&bias), Activation::Relu, 2, &mut scratch,
+        );
+        let want = conv2d_ref(&x, &wp, Some(&bias), 1, 1, PadMode::Reflect, Activation::Relu);
+        assert!(got.max_abs_diff(&want) < 1e-3, "err={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn dwconv_matches_ref_via_grouped_dense() {
+        let mut rng = Rng::new(92);
+        let c = 6;
+        let x = rand_input(&mut rng, 1, c, 9, 9);
+        let w = Tensor::randn(&[c, 1, 3, 3], &mut rng);
+        let got = dwconv2d(&x, &w, None, 1, 1, Activation::Identity, 2);
+        // Reference: per-channel 1-in-1-out conv.
+        for ch in 0..c {
+            let xc = Tensor::from_vec(
+                &[1, 1, 9, 9],
+                x.data()[ch * 81..(ch + 1) * 81].to_vec(),
+            );
+            let wc = Tensor::from_vec(&[1, 1, 3, 3], w.data()[ch * 9..(ch + 1) * 9].to_vec());
+            let want =
+                conv2d_ref(&xc, &wc, None, 1, 1, PadMode::Zeros, Activation::Identity);
+            let got_c = &got.data()[ch * 81..(ch + 1) * 81];
+            for (a, b) in got_c.iter().zip(want.data().iter()) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_safe() {
+        // Two different geometries sharing one scratch must not interfere.
+        let mut rng = Rng::new(93);
+        let mut scratch = ConvScratch::new();
+        let x1 = rand_input(&mut rng, 1, 3, 16, 16);
+        let w1 = Tensor::randn(&[8, 3, 3, 3], &mut rng);
+        let big = conv2d_dense(
+            &x1, &w1, None, 1, 1, PadMode::Zeros, Activation::Identity, 1, &mut scratch,
+        );
+        let x2 = rand_input(&mut rng, 1, 2, 6, 6);
+        let w2 = Tensor::randn(&[4, 2, 3, 3], &mut rng);
+        let small = conv2d_dense(
+            &x2, &w2, None, 1, 1, PadMode::Zeros, Activation::Identity, 1, &mut scratch,
+        );
+        let want_small =
+            conv2d_ref(&x2, &w2, None, 1, 1, PadMode::Zeros, Activation::Identity);
+        assert!(small.max_abs_diff(&want_small) < 1e-4);
+        assert_eq!(big.shape(), &[1, 8, 16, 16]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Elementwise / normalisation kernels: activations, bias, add, batch norm
+//! (inference mode), instance norm. All operate in place where possible —
+//! the executor's memory planner relies on that.
+
+use crate::dsl::op::Activation;
+use crate::tensor::Tensor;
+
+/// Apply activation in place.
+pub fn act_inplace(x: &mut [f32], a: Activation) {
+    match a {
+        Activation::Identity => {}
+        Activation::Relu => {
+            for v in x.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Activation::LeakyRelu => {
+            for v in x.iter_mut() {
+                if *v < 0.0 {
+                    *v *= 0.2;
+                }
+            }
+        }
+        _ => {
+            for v in x.iter_mut() {
+                *v = a.apply(*v);
+            }
+        }
+    }
+}
+
+/// Add per-channel bias (and optional fused activation) to an NCHW tensor
+/// laid out as consecutive channel planes of `px` pixels.
+pub fn bias_act_inplace(x: &mut [f32], bias: Option<&[f32]>, channels: usize, px: usize, a: Activation) {
+    match bias {
+        Some(b) => {
+            debug_assert_eq!(b.len(), channels);
+            debug_assert_eq!(x.len() % (channels * px), 0);
+            let samples = x.len() / (channels * px);
+            for s in 0..samples {
+                for c in 0..channels {
+                    let base = (s * channels + c) * px;
+                    let bv = b[c];
+                    for v in &mut x[base..base + px] {
+                        *v = a.apply(*v + bv);
+                    }
+                }
+            }
+        }
+        None => act_inplace(x, a),
+    }
+}
+
+/// y = a + b elementwise (shapes must match), returning a new tensor.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    a.zip(b, |x, y| x + y)
+}
+
+/// Inference-mode batch norm, in place, optionally folded with activation:
+/// y = gamma*(x-mean)/sqrt(var+eps) + beta.
+pub fn batchnorm_inplace(
+    x: &mut [f32],
+    channels: usize,
+    px: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+    a: Activation,
+) {
+    let samples = x.len() / (channels * px);
+    for s in 0..samples {
+        for c in 0..channels {
+            let scale = gamma[c] / (var[c] + eps).sqrt();
+            let shift = beta[c] - mean[c] * scale;
+            let base = (s * channels + c) * px;
+            for v in &mut x[base..base + px] {
+                *v = a.apply(*v * scale + shift);
+            }
+        }
+    }
+}
+
+/// Instance norm (per-sample, per-channel statistics), in place.
+/// gamma/beta optional (None = 1/0).
+pub fn instancenorm_inplace(
+    x: &mut [f32],
+    channels: usize,
+    px: usize,
+    gamma: Option<&[f32]>,
+    beta: Option<&[f32]>,
+    eps: f32,
+) {
+    let samples = x.len() / (channels * px);
+    for s in 0..samples {
+        for c in 0..channels {
+            let base = (s * channels + c) * px;
+            let plane = &mut x[base..base + px];
+            let mean: f32 = plane.iter().sum::<f32>() / px as f32;
+            let var: f32 =
+                plane.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / px as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            let g = gamma.map(|g| g[c]).unwrap_or(1.0);
+            let b = beta.map(|b| b[c]).unwrap_or(0.0);
+            for v in plane.iter_mut() {
+                *v = (*v - mean) * inv * g + b;
+            }
+        }
+    }
+}
+
+/// Channel concat of two NCHW tensors along C.
+pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, ca, h, w) = (a.dim(0), a.dim(1), a.dim(2), a.dim(3));
+    let cb = b.dim(1);
+    assert_eq!(b.dim(0), n);
+    assert_eq!((b.dim(2), b.dim(3)), (h, w));
+    let mut out = Tensor::zeros(&[n, ca + cb, h, w]);
+    let px = h * w;
+    for s in 0..n {
+        let dst_base = s * (ca + cb) * px;
+        let a_base = s * ca * px;
+        let b_base = s * cb * px;
+        out.data_mut()[dst_base..dst_base + ca * px]
+            .copy_from_slice(&a.data()[a_base..a_base + ca * px]);
+        out.data_mut()[dst_base + ca * px..dst_base + (ca + cb) * px]
+            .copy_from_slice(&b.data()[b_base..b_base + cb * px]);
+    }
+    out
+}
+
+/// Broadcast a [N, C, 1, 1] (or [N, C]) tensor over the spatial dims of a
+/// reference [N, _, H, W] tensor.
+pub fn broadcast_spatial(g: &Tensor, reference: &Tensor) -> Tensor {
+    let n = g.dim(0);
+    let c = g.dim(1);
+    let (h, w) = (reference.dim(2), reference.dim(3));
+    let mut out = Tensor::zeros(&[n, c, h, w]);
+    let px = h * w;
+    for s in 0..n {
+        for ch in 0..c {
+            let v = g.data()[s * c + ch];
+            let base = (s * c + ch) * px;
+            for o in &mut out.data_mut()[base..base + px] {
+                *o = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_inplace() {
+        let mut x = vec![-1.0, 0.5, -0.2, 2.0];
+        act_inplace(&mut x, Activation::Relu);
+        assert_eq!(x, vec![0.0, 0.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn bias_then_act() {
+        // 1 sample, 2 channels, 2 px.
+        let mut x = vec![0.0, 0.0, 0.0, 0.0];
+        bias_act_inplace(&mut x, Some(&[1.0, -1.0]), 2, 2, Activation::Relu);
+        assert_eq!(x, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn batchnorm_normalises() {
+        // gamma=1, beta=0, mean=2, var=4 -> y = (x-2)/2.
+        let mut x = vec![2.0, 4.0, 6.0, 0.0];
+        batchnorm_inplace(
+            &mut x,
+            1,
+            4,
+            &[1.0],
+            &[0.0],
+            &[2.0],
+            &[4.0],
+            0.0,
+            Activation::Identity,
+        );
+        assert_eq!(x, vec![0.0, 1.0, 2.0, -1.0]);
+    }
+
+    #[test]
+    fn instancenorm_zero_mean_unit_var() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        instancenorm_inplace(&mut x, 2, 4, None, None, 1e-9);
+        for plane in x.chunks(4) {
+            let mean: f32 = plane.iter().sum::<f32>() / 4.0;
+            let var: f32 = plane.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn concat_layout() {
+        let a = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[1, 2, 2, 2], (5..13).map(|v| v as f32).collect());
+        let c = concat_channels(&a, &b);
+        assert_eq!(c.shape(), &[1, 3, 2, 2]);
+        assert_eq!(&c.data()[0..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&c.data()[4..12], b.data());
+    }
+
+    #[test]
+    fn broadcast_fills_planes() {
+        let g = Tensor::from_vec(&[1, 2, 1, 1], vec![3.0, 7.0]);
+        let r = Tensor::zeros(&[1, 5, 2, 2]);
+        let out = broadcast_spatial(&g, &r);
+        assert_eq!(out.shape(), &[1, 2, 2, 2]);
+        assert_eq!(&out.data()[0..4], &[3.0; 4]);
+        assert_eq!(&out.data()[4..8], &[7.0; 4]);
+    }
+}

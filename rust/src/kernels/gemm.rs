@@ -1,0 +1,275 @@
+//! Blocked, multi-threaded dense GEMM: C[M,N] = A[M,K] · B[K,N] (+ C).
+//!
+//! Cache-blocked over K and N with an 8-wide inner loop the compiler can
+//! vectorise; rows are partitioned across threads (M is the filter count,
+//! independent per row). This is the workhorse of both the unpruned
+//! baseline (im2col conv) and each reordered group's dense inner loop.
+
+use crate::util::threadpool::parallel_chunks;
+
+/// Tunable blocking parameters (fitted to L1/L2 on the test machine during
+/// the perf pass; see EXPERIMENTS.md §Perf).
+pub const MC: usize = 64; // rows of A per macro-tile
+pub const KC: usize = 256; // K-panel
+pub const NC: usize = 1024; // N-panel
+
+/// C = A·B, single-threaded, blocked. `a` is MxK row-major, `b` is KxN
+/// row-major, `c` is MxN row-major and is *accumulated into* (caller zeroes).
+pub fn gemm_st(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for kb in (0..k).step_by(KC) {
+        let ke = (kb + KC).min(k);
+        for nb in (0..n).step_by(NC) {
+            let ne = (nb + NC).min(n);
+            for mb in (0..m).step_by(MC) {
+                let me = (mb + MC).min(m);
+                block(a, b, c, k, n, mb, me, kb, ke, nb, ne);
+            }
+        }
+    }
+}
+
+/// Inner macro-kernel: row-by-row AXPY over the K panel. For each (i, p)
+/// the scalar a[i,p] broadcasts against a contiguous b-row slice — this
+/// auto-vectorises well and is exactly the shape the reordered sparse
+/// kernel reuses (with packed columns).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn block(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    n: usize,
+    mb: usize,
+    me: usize,
+    kb: usize,
+    ke: usize,
+    nb: usize,
+    ne: usize,
+) {
+    // 2-row micro-kernel: both C rows consume the same four B rows per
+    // pass, halving B traffic (perf log §Perf iter 4).
+    let mut i = mb;
+    while i + 2 <= me {
+        let (head, tail) = c.split_at_mut((i + 1) * n);
+        let crow0 = &mut head[i * n + nb..i * n + ne];
+        let crow1 = &mut tail[nb..ne];
+        let arow0 = &a[i * k..(i + 1) * k];
+        let arow1 = &a[(i + 1) * k..(i + 2) * k];
+        let mut p = kb;
+        while p + 4 <= ke {
+            let (x0, x1, x2, x3) = (arow0[p], arow0[p + 1], arow0[p + 2], arow0[p + 3]);
+            let (y0, y1, y2, y3) = (arow1[p], arow1[p + 1], arow1[p + 2], arow1[p + 3]);
+            let b0 = &b[p * n + nb..p * n + ne];
+            let b1 = &b[(p + 1) * n + nb..(p + 1) * n + ne];
+            let b2 = &b[(p + 2) * n + nb..(p + 2) * n + ne];
+            let b3 = &b[(p + 3) * n + nb..(p + 3) * n + ne];
+            let len = crow0.len();
+            for j in 0..len {
+                let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
+                crow0[j] += x0 * v0 + x1 * v1 + x2 * v2 + x3 * v3;
+                crow1[j] += y0 * v0 + y1 * v1 + y2 * v2 + y3 * v3;
+            }
+            p += 4;
+        }
+        while p < ke {
+            let (x, y) = (arow0[p], arow1[p]);
+            let brow = &b[p * n + nb..p * n + ne];
+            if x != 0.0 {
+                axpy(x, brow, crow0);
+            }
+            if y != 0.0 {
+                axpy(y, brow, crow1);
+            }
+            p += 1;
+        }
+        i += 2;
+    }
+    while i < me {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n + nb..i * n + ne];
+        // 4-way K unroll: one pass over the C row per 4 K values quarters
+        // the C load/store traffic vs plain AXPY (perf log §Perf iter 3).
+        let mut p = kb;
+        while p + 4 <= ke {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                let b0 = &b[p * n + nb..p * n + ne];
+                let b1 = &b[(p + 1) * n + nb..(p + 1) * n + ne];
+                let b2 = &b[(p + 2) * n + nb..(p + 2) * n + ne];
+                let b3 = &b[(p + 3) * n + nb..(p + 3) * n + ne];
+                let len = crow.len();
+                for j in 0..len {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+            }
+            p += 4;
+        }
+        while p < ke {
+            let av = arow[p];
+            if av != 0.0 {
+                axpy(av, &b[p * n + nb..p * n + ne], crow);
+            }
+            p += 1;
+        }
+        i += 1;
+    }
+}
+
+/// crow += av * brow, with an 8-wide unrolled loop.
+#[inline]
+pub fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let len = crow.len().min(brow.len());
+    let chunks = len / 8;
+    // Unrolled body.
+    for ch in 0..chunks {
+        let o = ch * 8;
+        let b8 = &brow[o..o + 8];
+        let c8 = &mut crow[o..o + 8];
+        c8[0] += av * b8[0];
+        c8[1] += av * b8[1];
+        c8[2] += av * b8[2];
+        c8[3] += av * b8[3];
+        c8[4] += av * b8[4];
+        c8[5] += av * b8[5];
+        c8[6] += av * b8[6];
+        c8[7] += av * b8[7];
+    }
+    for i in chunks * 8..len {
+        crow[i] += av * brow[i];
+    }
+}
+
+/// Multi-threaded GEMM: partitions M across threads.
+pub fn gemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    if threads <= 1 || m == 1 {
+        gemm_st(m, k, n, a, b, c);
+        return;
+    }
+    // SAFETY-free parallelism: split C by row ranges via chunks of rows.
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, threads, |ms, me, _| {
+        let rows = me - ms;
+        // Each thread works on a disjoint row range of A and C.
+        let a_sub = &a[ms * k..me * k];
+        let c_sub = unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(ms * n), rows * n) };
+        gemm_st(rows, k, n, a_sub, b, c_sub);
+    });
+}
+
+/// Wrapper to move a raw pointer into threads; safe because row ranges are
+/// disjoint by construction.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Accessor that forces the closure to capture the whole wrapper
+    /// (edition-2021 closures capture individual fields otherwise,
+    /// defeating the Send/Sync impls).
+    #[inline]
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Reference (naive) GEMM used as the kernel test oracle.
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{check_prop, Rng};
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Vec<f32> {
+        (0..r * c).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let mut rng = Rng::new(71);
+        let (m, k, n) = (7, 13, 9);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_st(m, k, n, &a, &b, &mut c1);
+        gemm_ref(m, k, n, &a, &b, &mut c2);
+        for (x, y) in c1.iter().zip(c2.iter()) {
+            assert!((x - y).abs() < 1e-4, "{} vs {}", x, y);
+        }
+    }
+
+    #[test]
+    fn property_random_shapes_match_reference() {
+        check_prop("gemm matches ref", 25, |rng| {
+            let m = rng.range(1, 40);
+            let k = rng.range(1, 300);
+            let n = rng.range(1, 80);
+            let a = rand_mat(rng, m, k);
+            let b = rand_mat(rng, k, n);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            let threads = rng.range(1, 5);
+            gemm(m, k, n, &a, &b, &mut c1, threads);
+            gemm_ref(m, k, n, &a, &b, &mut c2);
+            let max: f32 = c1
+                .iter()
+                .zip(c2.iter())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max);
+            assert!(max < 1e-3, "m={} k={} n={} t={} err={}", m, k, n, threads, max);
+        });
+    }
+
+    #[test]
+    fn multithreaded_matches_single() {
+        let mut rng = Rng::new(73);
+        let (m, k, n) = (33, 130, 65);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c4 = vec![0.0; m * n];
+        gemm(m, k, n, &a, &b, &mut c1, 1);
+        gemm(m, k, n, &a, &b, &mut c4, 4);
+        assert_eq!(c1, c4); // identical fp order per row -> bitwise equal
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = vec![1.0, 0.0, 0.0, 1.0]; // I2
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let mut c = vec![1.0; 4];
+        gemm_st(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn axpy_tail_handled() {
+        let b = [1.0f32; 11];
+        let mut c = [0.0f32; 11];
+        axpy(2.0, &b, &mut c);
+        assert!(c.iter().all(|&x| x == 2.0));
+    }
+}

@@ -1,0 +1,211 @@
+//! im2col lowering for convolution.
+//!
+//! Dense variant builds the full `[in_c·kh·kw, out_h·out_w]` patch matrix.
+//! The **pruned variant** builds only the rows corresponding to *kept* GEMM
+//! columns — this is where column pruning turns into real time savings in
+//! the compiler path (less patch-matrix construction *and* a smaller dense
+//! GEMM K dimension).
+
+use crate::dsl::op::PadMode;
+use crate::tensor::Tensor;
+
+/// Parameters of one conv lowering.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+impl ConvGeom {
+    pub fn new(in_c: usize, in_h: usize, in_w: usize, k: usize, stride: usize, pad: usize) -> Self {
+        let (out_h, out_w) = crate::dsl::shape::conv_out_hw(in_h, in_w, k, stride, pad);
+        ConvGeom { in_c, in_h, in_w, kh: k, kw: k, stride, pad, out_h, out_w }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.in_c * self.kh * self.kw
+    }
+
+    pub fn out_px(&self) -> usize {
+        self.out_h * self.out_w
+    }
+}
+
+/// Input pixel fetch with padding semantics.
+#[inline]
+fn fetch(x: &[f32], geom: &ConvGeom, c: usize, ih: isize, iw: isize, pad_mode: PadMode) -> f32 {
+    let (h, w) = (geom.in_h as isize, geom.in_w as isize);
+    let (ih, iw) = match pad_mode {
+        PadMode::Zeros => {
+            if ih < 0 || iw < 0 || ih >= h || iw >= w {
+                return 0.0;
+            }
+            (ih, iw)
+        }
+        PadMode::Reflect => {
+            let r = |v: isize, n: isize| -> isize {
+                if n == 1 {
+                    return 0;
+                }
+                let mut v = v;
+                while v < 0 || v >= n {
+                    if v < 0 {
+                        v = -v;
+                    }
+                    if v >= n {
+                        v = 2 * (n - 1) - v;
+                    }
+                }
+                v
+            };
+            (r(ih, h), r(iw, w))
+        }
+    };
+    x[(c * geom.in_h + ih as usize) * geom.in_w + iw as usize]
+}
+
+/// Full im2col: out is `[cols(), out_px()]` row-major. `x` is one sample's
+/// CHW data.
+pub fn im2col(x: &[f32], geom: &ConvGeom, pad_mode: PadMode, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), geom.cols() * geom.out_px());
+    let opx = geom.out_px();
+    for c in 0..geom.in_c {
+        for r in 0..geom.kh {
+            for s in 0..geom.kw {
+                let row = (c * geom.kh + r) * geom.kw + s;
+                let dst = &mut out[row * opx..(row + 1) * opx];
+                let mut i = 0usize;
+                for oh in 0..geom.out_h {
+                    let ih = (oh * geom.stride + r) as isize - geom.pad as isize;
+                    for ow in 0..geom.out_w {
+                        let iw = (ow * geom.stride + s) as isize - geom.pad as isize;
+                        dst[i] = fetch(x, geom, c, ih, iw, pad_mode);
+                        i += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pruned im2col: materialise only the given GEMM rows (kept columns of the
+/// weight matrix). `out` is `[keep.len(), out_px()]`.
+pub fn im2col_pruned(
+    x: &[f32],
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    keep: &[u32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), keep.len() * geom.out_px());
+    let opx = geom.out_px();
+    let ksz = geom.kh * geom.kw;
+    for (j, &col) in keep.iter().enumerate() {
+        let col = col as usize;
+        let c = col / ksz;
+        let r = (col % ksz) / geom.kw;
+        let s = col % geom.kw;
+        let dst = &mut out[j * opx..(j + 1) * opx];
+        let mut i = 0usize;
+        for oh in 0..geom.out_h {
+            let ih = (oh * geom.stride + r) as isize - geom.pad as isize;
+            for ow in 0..geom.out_w {
+                let iw = (ow * geom.stride + s) as isize - geom.pad as isize;
+                dst[i] = fetch(x, geom, c, ih, iw, pad_mode);
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Convenience: im2col over a full NCHW tensor, one sample at a time,
+/// calling `f(sample_index, patch_matrix)`.
+pub fn for_each_sample(
+    x: &Tensor,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    mut f: impl FnMut(usize, &[f32]),
+) {
+    let n = x.dim(0);
+    let chw = geom.in_c * geom.in_h * geom.in_w;
+    let mut patch = vec![0.0f32; geom.cols() * geom.out_px()];
+    for s in 0..n {
+        im2col(&x.data()[s * chw..(s + 1) * chw], geom, pad_mode, &mut patch);
+        f(s, &patch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1() {
+        let geom = ConvGeom::new(2, 2, 2, 1, 1, 0);
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut out = vec![0.0; geom.cols() * geom.out_px()];
+        im2col(&x, &geom, PadMode::Zeros, &mut out);
+        // 1x1 kernel -> patch matrix is just the channels stacked.
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn zero_pad_borders() {
+        let geom = ConvGeom::new(1, 2, 2, 3, 1, 1);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut out = vec![0.0; geom.cols() * geom.out_px()];
+        im2col(&x, &geom, PadMode::Zeros, &mut out);
+        // Row 0 = kernel position (0,0): value at (oh-1, ow-1).
+        assert_eq!(&out[0..4], &[0.0, 0.0, 0.0, 1.0]);
+        // Row 4 = centre: the image itself.
+        assert_eq!(&out[16..20], &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reflect_pad() {
+        let geom = ConvGeom::new(1, 3, 3, 3, 1, 1);
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut out = vec![0.0; geom.cols() * geom.out_px()];
+        im2col(&x, &geom, PadMode::Reflect, &mut out);
+        // Kernel position (0,0) at output (0,0) reads input (-1,-1) ->
+        // reflected to (1,1) = 5.
+        assert_eq!(out[0], 5.0);
+        // Centre row is the image.
+        assert_eq!(&out[4 * 9..5 * 9], x.as_slice());
+    }
+
+    #[test]
+    fn pruned_rows_match_full() {
+        let geom = ConvGeom::new(3, 5, 4, 3, 1, 1);
+        let x: Vec<f32> = (0..3 * 5 * 4).map(|v| (v as f32).sin()).collect();
+        let mut full = vec![0.0; geom.cols() * geom.out_px()];
+        im2col(&x, &geom, PadMode::Zeros, &mut full);
+        let keep: Vec<u32> = vec![0, 5, 9, 13, 26];
+        let mut pruned = vec![0.0; keep.len() * geom.out_px()];
+        im2col_pruned(&x, &geom, PadMode::Zeros, &keep, &mut pruned);
+        let opx = geom.out_px();
+        for (j, &col) in keep.iter().enumerate() {
+            assert_eq!(
+                &pruned[j * opx..(j + 1) * opx],
+                &full[col as usize * opx..(col as usize + 1) * opx],
+                "row {}",
+                col
+            );
+        }
+    }
+
+    #[test]
+    fn strided_geometry() {
+        let geom = ConvGeom::new(1, 8, 8, 3, 2, 1);
+        assert_eq!((geom.out_h, geom.out_w), (4, 4));
+        assert_eq!(geom.cols(), 9);
+        assert_eq!(geom.out_px(), 16);
+    }
+}

@@ -1,0 +1,22 @@
+//! Native compute kernels — the Rust "mobile device" executor's hot paths.
+//!
+//! The paper generates OpenCL/CPU code per layer; we provide the equivalent
+//! hand-optimized kernels the executor dispatches to:
+//!
+//! * [`gemm`] — blocked, multi-threaded dense GEMM (the unpruned baseline
+//!   and the post-compaction inner loop),
+//! * [`im2col`] — convolution lowering (with a column-pruned variant that
+//!   only materialises *kept* rows — the compiler win for column pruning),
+//! * [`conv`] — conv2d / depthwise conv drivers in dense, CSR-sparse and
+//!   compact+reordered flavours,
+//! * [`sparse_gemm`] — CSR SpMM (pruned-no-compiler baseline) and the
+//!   reordered group GEMM (pruned+compiler),
+//! * [`elementwise`] — activations, add, batch/instance norm, bias,
+//! * [`resize`] — nearest upsample, pixel shuffle, max/global-avg pooling.
+
+pub mod gemm;
+pub mod im2col;
+pub mod conv;
+pub mod sparse_gemm;
+pub mod elementwise;
+pub mod resize;

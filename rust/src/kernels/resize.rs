@@ -1,0 +1,154 @@
+//! Spatial resize / pooling kernels: nearest upsample, pixel shuffle,
+//! max pool, global average pool.
+
+use crate::tensor::Tensor;
+
+/// Nearest-neighbour upsample by integer factor.
+pub fn upsample_nearest(x: &Tensor, factor: usize) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = (h * factor, w * factor);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for s in 0..n {
+        for ch in 0..c {
+            for y in 0..oh {
+                let sy = y / factor;
+                let src = (s * c + ch) * h * w + sy * w;
+                let dst = (s * c + ch) * oh * ow + y * ow;
+                for xx in 0..ow {
+                    out.data_mut()[dst + xx] = x.data()[src + xx / factor];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pixel shuffle (depth-to-space): [N, C·r², H, W] -> [N, C, H·r, W·r].
+/// Channel (c·r² + dy·r + dx) maps to output (c, y·r+dy, x·r+dx).
+pub fn pixel_shuffle(x: &Tensor, r: usize) -> Tensor {
+    let (n, cin, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let r2 = r * r;
+    assert_eq!(cin % r2, 0, "pixel_shuffle: channels {} not divisible by {}", cin, r2);
+    let c = cin / r2;
+    let (oh, ow) = (h * r, w * r);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for s in 0..n {
+        for oc in 0..c {
+            for dy in 0..r {
+                for dx in 0..r {
+                    let ic = oc * r2 + dy * r + dx;
+                    for y in 0..h {
+                        let src = ((s * cin + ic) * h + y) * w;
+                        let dst = ((s * c + oc) * oh + y * r + dy) * ow + dx;
+                        for xx in 0..w {
+                            out.data_mut()[dst + xx * r] = x.data()[src + xx];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Max pool k×k stride s (no padding).
+pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = crate::dsl::shape::conv_out_hw(h, w, k, stride, 0);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for s in 0..n {
+        for ch in 0..c {
+            let plane = &x.data()[(s * c + ch) * h * w..(s * c + ch + 1) * h * w];
+            let obase = (s * c + ch) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::MIN;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let v = plane[(oy * stride + dy) * w + ox * stride + dx];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    out.data_mut()[obase + oy * ow + ox] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool to [N, C, 1, 1].
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let px = h * w;
+    let mut out = Tensor::zeros(&[n, c, 1, 1]);
+    for s in 0..n {
+        for ch in 0..c {
+            let base = (s * c + ch) * px;
+            let sum: f32 = x.data()[base..base + px].iter().sum();
+            out.data_mut()[s * c + ch] = sum / px as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upsample_2x() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = upsample_nearest(&x, 2);
+        assert_eq!(y.shape(), &[1, 1, 4, 4]);
+        assert_eq!(
+            y.data(),
+            &[1.0, 1.0, 2.0, 2.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 4.0, 4.0, 3.0, 3.0, 4.0, 4.0]
+        );
+    }
+
+    #[test]
+    fn pixel_shuffle_r2() {
+        // 4 channels, 1x1 spatial, r=2 -> 1 channel 2x2.
+        let x = Tensor::from_vec(&[1, 4, 1, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = pixel_shuffle(&x, 2);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        // channel order: (dy,dx) = (0,0),(0,1),(1,0),(1,1)
+        assert_eq!(y.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            (0..16).map(|v| v as f32).collect(),
+        );
+        let y = maxpool(&x, 2, 2);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1.0, 2.0, 3.0, 4.0, 10.0, 10.0, 10.0, 10.0]);
+        let y = global_avg_pool(&x);
+        assert_eq!(y.shape(), &[1, 2, 1, 1]);
+        assert_eq!(y.data(), &[2.5, 10.0]);
+    }
+
+    #[test]
+    fn pixel_shuffle_inverts_space_to_depth() {
+        // Property: applying pixel_shuffle to a structured ramp keeps all
+        // values (it is a permutation).
+        let x = Tensor::from_vec(&[1, 8, 2, 3], (0..48).map(|v| v as f32).collect());
+        let y = pixel_shuffle(&x, 2);
+        assert_eq!(y.shape(), &[1, 2, 4, 6]);
+        let mut a = x.data().to_vec();
+        let mut b = y.data().to_vec();
+        a.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        b.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,387 @@
+//! Sparse GEMM kernels: C[M,N] = W_sparse[M,K] · B[K,N].
+//!
+//! Three tiers matching the paper's ablation:
+//! * [`spmm_csr`] — per-nnz indexed accumulate over CSR: the
+//!   "pruning, no compiler" configuration. Irregular B-row access, load
+//!   imbalance across threads (block row partition).
+//! * [`spmm_reordered`] — the "pruning + compiler" configuration: iterate
+//!   [`ReorderPlan`] groups with packed weights; each group's inner loop is
+//!   a *dense* GEMM over its compacted columns, and work is distributed by
+//!   the balanced [`Schedule`].
+//! * [`spmm_column_compact`] — special case for column pruning where the
+//!   caller already gathered B's kept rows (`im2col_pruned`): a plain dense
+//!   GEMM over the reduced K — zero sparse overhead at run time.
+
+use crate::reorder::{ReorderPlan, Schedule};
+use crate::sparse::Csr;
+
+use super::gemm::axpy;
+
+/// CSR SpMM, single-threaded over a row range [ms, me).
+fn spmm_csr_rows(w: &Csr, b: &[f32], n: usize, c: &mut [f32], ms: usize, me: usize) {
+    for r in ms..me {
+        let (cols, vals) = w.row(r);
+        let crow = &mut c[r * n..(r + 1) * n];
+        for (ci, &col) in cols.iter().enumerate() {
+            let av = vals[ci];
+            let brow = &b[col as usize * n..col as usize * n + n];
+            axpy(av, brow, crow);
+        }
+    }
+}
+
+/// CSR SpMM with contiguous block row partition across threads (the naive
+/// parallelisation whose imbalance the reorder pass fixes).
+pub fn spmm_csr(w: &Csr, b: &[f32], n: usize, c: &mut [f32], threads: usize) {
+    debug_assert_eq!(b.len(), w.cols * n);
+    debug_assert_eq!(c.len(), w.rows * n);
+    if threads <= 1 {
+        spmm_csr_rows(w, b, n, c, 0, w.rows);
+        return;
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    crate::util::threadpool::parallel_chunks(w.rows, threads, |ms, me, _| {
+        let c_all = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), w.rows * n) };
+        spmm_csr_rows(w, b, n, c_all, ms, me);
+    });
+}
+
+/// Reordered SpMM: execute the plan's groups under a balanced schedule.
+/// Each `WorkItem` covers rows of one group; its inner loop is dense over
+/// the group's packed columns.
+pub fn spmm_reordered(
+    plan: &ReorderPlan,
+    sched: &Schedule,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(b.len(), plan.cols * n);
+    debug_assert_eq!(c.len(), plan.rows * n);
+    let threads = sched.threads();
+    if threads <= 1 {
+        for item in sched.items.iter().flatten() {
+            run_item(plan, item, b, n, c);
+        }
+        return;
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let items = &sched.items[t];
+            scope.spawn(move || {
+                let c_all = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), plan.rows * n) };
+                for item in items {
+                    run_item(plan, item, b, n, c_all);
+                }
+            });
+        }
+    });
+}
+
+/// Execute one work item: rows [row_start, row_end) of one group.
+/// Different work items touch disjoint C rows (each original row appears in
+/// exactly one group), so parallel execution is race-free.
+fn run_item(
+    plan: &ReorderPlan,
+    item: &crate::reorder::schedule::WorkItem,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+) {
+    let grp = &plan.groups[item.group];
+    let k = grp.cols.len();
+    let rows = item.row_end - item.row_start;
+    // Column compaction at run time: when several rows share the support,
+    // gather the group's B rows into one contiguous panel so every row's
+    // inner loop streams packed weights against packed activations (this
+    // is the paper's "compacts the weights in the column direction"
+    // executed on the activation side too). For single-row items the
+    // gather cannot amortise; fall back to indirect AXPY.
+    if rows >= 2 && k >= 4 {
+        let mut b_packed = vec![0.0f32; k * n];
+        for (j, &col) in grp.cols.iter().enumerate() {
+            let col = col as usize;
+            b_packed[j * n..(j + 1) * n].copy_from_slice(&b[col * n..col * n + n]);
+        }
+        for i in item.row_start..item.row_end {
+            let out_row = grp.rows[i] as usize;
+            let wrow = grp.packed_row(i);
+            let crow = &mut c[out_row * n..(out_row + 1) * n];
+            // 4-way unroll over the compacted columns (one C pass per 4
+            // weights — mirrors the dense micro-kernel; §Perf iter 5).
+            let mut j = 0;
+            while j + 4 <= k {
+                let (a0, a1, a2, a3) = (wrow[j], wrow[j + 1], wrow[j + 2], wrow[j + 3]);
+                let b0 = &b_packed[j * n..(j + 1) * n];
+                let b1 = &b_packed[(j + 1) * n..(j + 2) * n];
+                let b2 = &b_packed[(j + 2) * n..(j + 3) * n];
+                let b3 = &b_packed[(j + 3) * n..(j + 4) * n];
+                for t in 0..n {
+                    crow[t] += a0 * b0[t] + a1 * b1[t] + a2 * b2[t] + a3 * b3[t];
+                }
+                j += 4;
+            }
+            while j < k {
+                axpy(wrow[j], &b_packed[j * n..(j + 1) * n], crow);
+                j += 1;
+            }
+        }
+    } else {
+        for i in item.row_start..item.row_end {
+            let out_row = grp.rows[i] as usize;
+            let wrow = grp.packed_row(i);
+            let crow = &mut c[out_row * n..(out_row + 1) * n];
+            for j in 0..k {
+                let av = wrow[j];
+                let col = grp.cols[j] as usize;
+                axpy(av, &b[col * n..col * n + n], crow);
+            }
+        }
+    }
+}
+
+/// Pattern-kernel execution plan: kernels grouped by (input channel,
+/// pattern id) — the *kernel-granularity* matrix reorder. All kernels in a
+/// group read the same ≤ k·k patch rows; each surviving kernel then costs
+/// exactly one fused pass over its output row (4-way MAC for the 4-entry
+/// PConv patterns). This is how the paper's reorder keeps pattern-pruned
+/// inference regular: 8 patterns/layer ⇒ high group reuse, no per-nnz
+/// indices in the inner loop.
+#[derive(Debug, Clone)]
+pub struct PatternPlan {
+    pub out_c: usize,
+    /// Groups: (patch-row indices of the pattern in channel ic, kernels).
+    /// Each kernel: (output filter, packed weights, pattern length).
+    groups: Vec<(Vec<u32>, Vec<(u32, [f32; 9], u8)>)>,
+}
+
+impl PatternPlan {
+    /// Build from a pattern-compact stored layer.
+    pub fn build(pc: &crate::sparse::PatternCompact) -> Self {
+        use std::collections::HashMap;
+        let ksz = pc.kh * pc.kw;
+        let mut map: HashMap<(usize, Vec<usize>), Vec<(u32, [f32; 9], u8)>> = HashMap::new();
+        for o in 0..pc.out_c {
+            for i in 0..pc.in_c {
+                if let Some((pat, vals)) = pc.kernel(o, i) {
+                    let mut w = [0.0f32; 9];
+                    w[..vals.len()].copy_from_slice(vals);
+                    map.entry((i, pat.to_vec()))
+                        .or_default()
+                        .push((o as u32, w, vals.len() as u8));
+                }
+            }
+        }
+        let mut groups: Vec<(Vec<u32>, Vec<(u32, [f32; 9], u8)>)> = map
+            .into_iter()
+            .map(|((ic, pat), items)| {
+                let rows: Vec<u32> = pat.iter().map(|&p| (ic * ksz + p) as u32).collect();
+                (rows, items)
+            })
+            .collect();
+        groups.sort_by(|a, b| a.0.cmp(&b.0));
+        PatternPlan { out_c: pc.out_c, groups }
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Pattern-kernel SpMM over the full patch matrix `b` [K, N].
+/// Threads partition output filters (disjoint C rows).
+pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], threads: usize) {
+    debug_assert_eq!(c.len(), plan.out_c * n);
+    let run = |c_all: &mut [f32], lo: usize, hi: usize| {
+        for (rows, items) in &plan.groups {
+            // The 4-entry PConv fast path dominates; general path for
+            // other pattern sizes.
+            if rows.len() == 4 {
+                let b0 = &b[rows[0] as usize * n..rows[0] as usize * n + n];
+                let b1 = &b[rows[1] as usize * n..rows[1] as usize * n + n];
+                let b2 = &b[rows[2] as usize * n..rows[2] as usize * n + n];
+                let b3 = &b[rows[3] as usize * n..rows[3] as usize * n + n];
+                for (o, w, _) in items {
+                    let o = *o as usize;
+                    if o < lo || o >= hi {
+                        continue;
+                    }
+                    let crow = &mut c_all[o * n..(o + 1) * n];
+                    let (w0, w1, w2, w3) = (w[0], w[1], w[2], w[3]);
+                    for j in 0..n {
+                        crow[j] += w0 * b0[j] + w1 * b1[j] + w2 * b2[j] + w3 * b3[j];
+                    }
+                }
+            } else {
+                for (o, w, len) in items {
+                    let o = *o as usize;
+                    if o < lo || o >= hi {
+                        continue;
+                    }
+                    let crow = &mut c_all[o * n..(o + 1) * n];
+                    for (j, &row) in rows.iter().enumerate().take(*len as usize) {
+                        axpy(w[j], &b[row as usize * n..row as usize * n + n], crow);
+                    }
+                }
+            }
+        }
+    };
+    if threads <= 1 {
+        run(c, 0, plan.out_c);
+        return;
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    crate::util::threadpool::parallel_chunks(plan.out_c, threads, |lo, hi, _| {
+        let c_all = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), plan.out_c * n) };
+        run(c_all, lo, hi);
+    });
+}
+
+/// Column-compact SpMM: `b_packed` already contains only the kept K rows
+/// (built by `im2col_pruned`), so this is a dense GEMM of shape
+/// `[M, kept] × [kept, N]`.
+pub fn spmm_column_compact(
+    packed_w: &[f32],
+    m: usize,
+    kept: usize,
+    b_packed: &[f32],
+    n: usize,
+    c: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(packed_w.len(), m * kept);
+    debug_assert_eq!(b_packed.len(), kept * n);
+    super::gemm::gemm(m, kept, n, packed_w, b_packed, c, threads);
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Accessor that forces the closure to capture the whole wrapper
+    /// (edition-2021 closures capture individual fields otherwise,
+    /// defeating the Send/Sync impls).
+    #[inline]
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::gemm_ref;
+    use crate::pruning::scheme::{project_scheme, Scheme};
+    use crate::pruning::verify::apply_mask;
+    use crate::sparse::{ColumnCompact, GemmView};
+    use crate::tensor::Tensor;
+    use crate::util::rng::{check_prop, Rng};
+
+    fn pruned_gv(rng: &mut Rng, o: usize, i: usize, kind: &str, sp: f64) -> (GemmView, Scheme) {
+        let w = Tensor::randn(&[o, i, 3, 3], rng);
+        let s = project_scheme(&w, kind, sp, None);
+        let wp = apply_mask(&w, &s);
+        (GemmView::from_oihw(&wp), s)
+    }
+
+    #[test]
+    fn csr_matches_dense_ref() {
+        check_prop("spmm_csr == dense ref", 15, |rng| {
+            let (o, i) = (rng.range(2, 24), rng.range(1, 8));
+            let (gv, _) = pruned_gv(rng, o, i, "pattern", 0.6);
+            let n = rng.range(1, 40);
+            let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
+            let mut c1 = vec![0.0; gv.rows * n];
+            let mut c2 = vec![0.0; gv.rows * n];
+            let csr = Csr::from_dense(&gv);
+            spmm_csr(&csr, &b, n, &mut c1, rng.range(1, 5));
+            gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
+            let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+            assert!(err < 1e-3, "err={}", err);
+        });
+    }
+
+    #[test]
+    fn reordered_matches_dense_ref() {
+        check_prop("spmm_reordered == dense ref", 15, |rng| {
+            let kind = if rng.below(2) == 0 { "pattern" } else { "column" };
+            let (o, i) = (rng.range(4, 32), rng.range(1, 8));
+            let (gv, _) = pruned_gv(rng, o, i, kind, 0.55);
+            let n = rng.range(1, 48);
+            let threads = rng.range(1, 5);
+            let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
+            let plan = ReorderPlan::build(&gv);
+            let sched = Schedule::build(&plan, threads);
+            let mut c1 = vec![0.0; gv.rows * n];
+            let mut c2 = vec![0.0; gv.rows * n];
+            spmm_reordered(&plan, &sched, &b, n, &mut c1);
+            gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
+            let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+            assert!(err < 1e-3, "kind={} err={}", kind, err);
+        });
+    }
+
+    #[test]
+    fn column_compact_matches() {
+        let mut rng = Rng::new(81);
+        let (gv, s) = pruned_gv(&mut rng, 16, 4, "column", 0.5);
+        let keep = match &s {
+            Scheme::Column { keep } => keep.clone(),
+            _ => unreachable!(),
+        };
+        let cc = ColumnCompact::encode(&gv, &keep);
+        let n = 25;
+        let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
+        // Gather kept rows of b (what im2col_pruned produces).
+        let mut bp = vec![0.0; cc.kept() * n];
+        for (j, &col) in cc.keep.iter().enumerate() {
+            bp[j * n..(j + 1) * n].copy_from_slice(&b[col as usize * n..col as usize * n + n]);
+        }
+        let mut c1 = vec![0.0; gv.rows * n];
+        let mut c2 = vec![0.0; gv.rows * n];
+        spmm_column_compact(&cc.values, gv.rows, cc.kept(), &bp, n, &mut c1, 2);
+        gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
+        let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(err < 1e-3, "err={}", err);
+    }
+
+    #[test]
+    fn pattern_plan_matches_dense_ref() {
+        check_prop("spmm_pattern == dense ref", 10, |rng| {
+            let (o, i) = (rng.range(4, 24), rng.range(2, 8));
+            let w = Tensor::randn(&[o, i, 3, 3], rng);
+            let s = project_scheme(&w, "pattern", 0.6, None);
+            let wp = apply_mask(&w, &s);
+            let (set, ids) = match &s {
+                Scheme::Pattern { set, ids } => (set, ids),
+                _ => unreachable!(),
+            };
+            let pc = crate::sparse::PatternCompact::encode(&wp, set, ids, i, 3, 3);
+            let plan = PatternPlan::build(&pc);
+            assert!(plan.group_count() <= 8 * i, "groups bounded by patterns x channels");
+            let gv = GemmView::from_oihw(&wp);
+            let n = rng.range(1, 40);
+            let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
+            let mut c1 = vec![0.0; o * n];
+            let mut c2 = vec![0.0; o * n];
+            spmm_pattern(&plan, &b, n, &mut c1, rng.range(1, 4));
+            gemm_ref(o, gv.cols, n, &gv.data, &b, &mut c2);
+            let err: f32 =
+                c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+            assert!(err < 1e-3, "err={}", err);
+        });
+    }
+
+    #[test]
+    fn fully_pruned_rows_yield_zero_output() {
+        let gv = GemmView { rows: 3, cols: 4, data: vec![0.0; 12] };
+        let plan = ReorderPlan::build(&gv);
+        let sched = Schedule::build(&plan, 2);
+        let b = vec![1.0; 4 * 5];
+        let mut c = vec![0.0; 15];
+        spmm_reordered(&plan, &sched, &b, 5, &mut c);
+        assert!(c.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,44 @@
+//! # prt-dnn — Real-Time DNN Inference with Model Pruning and Compiler Optimization
+//!
+//! Reproduction of *"Towards Real-Time DNN Inference on Mobile Platforms with
+//! Model Pruning and Compiler Optimization"* (Niu, Zhao, Zhan, Lin, Wang, Ren —
+//! IJCAI 2020).
+//!
+//! The library is organised as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the mobile-inference *compiler + executor*:
+//!   a layer-wise DSL ([`dsl`]), graph optimization passes ([`passes`]),
+//!   compact sparse model storage ([`sparse`]), the matrix-reorder transform
+//!   ([`reorder`]), a multi-threaded native executor ([`executor`] +
+//!   [`kernels`]), a PJRT runtime for AOT-compiled dense baselines
+//!   ([`runtime`]), a frame-stream serving coordinator ([`coordinator`]) and a
+//!   mobile-GPU analytical cost model ([`perfmodel`]).
+//! * **Layer 2 (python/compile)** — the three demo DNNs (style transfer,
+//!   coloring, super resolution) in JAX, plus ADMM structured pruning;
+//!   lowered once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the
+//!   column-pruned GEMM / pattern-pruned convolution hot spots, validated
+//!   against a pure-jnp oracle.
+//!
+//! Python never runs on the inference path: `make artifacts` lowers the JAX
+//! models to `artifacts/*.hlo.txt` + weight blobs + LR-graph JSON, and the
+//! Rust binary is self-contained afterwards.
+
+pub mod util;
+pub mod tensor;
+pub mod dsl;
+pub mod pruning;
+pub mod sparse;
+pub mod reorder;
+pub mod passes;
+pub mod kernels;
+pub mod executor;
+pub mod runtime;
+pub mod perfmodel;
+pub mod coordinator;
+pub mod apps;
+pub mod image;
+pub mod bench;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

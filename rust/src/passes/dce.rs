@@ -1,0 +1,52 @@
+//! Dead-code elimination: drop nodes unreachable from any output, and their
+//! parameters.
+
+use crate::dsl::Graph;
+
+/// Remove unreachable nodes. Returns how many were removed.
+pub fn dce(g: &mut Graph) -> usize {
+    let live = g.live_set();
+    let before = g.len();
+    if live.len() == before {
+        return 0;
+    }
+    g.retain(&live);
+    before - g.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::op::{Activation, Op};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn removes_dead_branch_and_params() {
+        let mut g = Graph::new("d");
+        let x = g.add("x", Op::Input { shape: vec![1, 2, 4, 4] }, &[]);
+        let a = g.add("a", Op::Act(Activation::Relu), &[x]);
+        let dead = g.add(
+            "dead",
+            Op::InstanceNorm { c: 2, eps: 1e-5 },
+            &[x],
+        );
+        g.set_param("dead.gamma", Tensor::zeros(&[2]));
+        let _ = dead;
+        g.add("out", Op::Output, &[a]);
+        let removed = dce(&mut g);
+        assert_eq!(removed, 1);
+        assert!(g.find("dead").is_none());
+        assert!(g.param("dead.gamma").is_none());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn noop_on_fully_live_graph() {
+        let mut g = Graph::new("l");
+        let x = g.add("x", Op::Input { shape: vec![1, 2, 4, 4] }, &[]);
+        let a = g.add("a", Op::Act(Activation::Relu), &[x]);
+        g.add("out", Op::Output, &[a]);
+        assert_eq!(dce(&mut g), 0);
+        assert_eq!(g.len(), 3);
+    }
+}

@@ -1,0 +1,251 @@
+//! Fusion passes: Conv(+Dw)/Dense + BatchNorm + Activation.
+//!
+//! `fold_bn` rewrites weights: for conv output channel `o`,
+//!   scale_o = gamma_o / sqrt(var_o + eps)
+//!   W'[o,...] = W[o,...] * scale_o
+//!   b'_o      = (b_o - mean_o) * scale_o + beta_o
+//! after which the BN node becomes an identity edge. Structured sparsity is
+//! *preserved*: scaling a row never makes a zero non-zero, so pruning
+//! structure survives fusion (asserted in tests).
+//!
+//! `fuse_activation` moves a following `Act` node into the conv/dense LR's
+//! `fused_act` slot (only when the conv's current slot is `Identity` and the
+//! act is its sole consumer).
+
+use crate::dsl::{Graph, Op};
+use crate::tensor::Tensor;
+
+/// Fold BatchNorm nodes into their producing conv/dwconv/dense. Returns the
+/// number of BN nodes folded.
+pub fn fold_bn(g: &mut Graph) -> usize {
+    let mut folded = 0usize;
+    let fanout = g.fanout();
+    // Identify (bn_id, conv_id) candidates: BN whose single input is a
+    // conv-like node, and the conv's only consumer is this BN.
+    let mut rewires: Vec<(usize, usize)> = Vec::new();
+    for (id, node) in g.nodes().iter().enumerate() {
+        if let Op::BatchNorm { .. } = node.op {
+            let src = node.inputs[0];
+            let src_is_conv = matches!(
+                g.node(src).op,
+                Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. }
+            );
+            if src_is_conv && fanout[src] == 1 {
+                rewires.push((id, src));
+            }
+        }
+    }
+    for (bn_id, conv_id) in rewires.clone() {
+        let bn_name = g.node(bn_id).name.clone();
+        let conv_name = g.node(conv_id).name.clone();
+        let eps = match g.node(bn_id).op {
+            Op::BatchNorm { eps, .. } => eps,
+            _ => unreachable!(),
+        };
+        let gamma = g.param(&format!("{}.gamma", bn_name)).unwrap().clone();
+        let beta = g.param(&format!("{}.beta", bn_name)).unwrap().clone();
+        let mean = g.param(&format!("{}.mean", bn_name)).unwrap().clone();
+        let var = g.param(&format!("{}.var", bn_name)).unwrap().clone();
+        let c = gamma.len();
+
+        // Scale conv weights per output channel.
+        let wkey = format!("{}.weight", conv_name);
+        let w = g.param(&wkey).unwrap().clone();
+        let row = w.len() / c;
+        let mut wd = w.data().to_vec();
+        let mut scale = vec![0.0f32; c];
+        for o in 0..c {
+            scale[o] = gamma.data()[o] / (var.data()[o] + eps).sqrt();
+            for v in &mut wd[o * row..(o + 1) * row] {
+                *v *= scale[o];
+            }
+        }
+        g.set_param(wkey, Tensor::from_vec(w.shape(), wd));
+
+        // Fold into bias (create if missing).
+        let bkey = format!("{}.bias", conv_name);
+        let old_bias = g
+            .param(&bkey)
+            .map(|t| t.data().to_vec())
+            .unwrap_or_else(|| vec![0.0; c]);
+        let new_bias: Vec<f32> = (0..c)
+            .map(|o| (old_bias[o] - mean.data()[o]) * scale[o] + beta.data()[o])
+            .collect();
+        g.set_param(bkey, Tensor::from_vec(&[c], new_bias));
+
+        // Rewire: BN consumers read from the conv directly.
+        for nid in 0..g.len() {
+            let node = g.node_mut(nid);
+            for inp in &mut node.inputs {
+                if *inp == bn_id {
+                    *inp = conv_id;
+                }
+            }
+        }
+        folded += 1;
+    }
+    if folded > 0 {
+        // BN nodes are now dead; prune them.
+        super::dce::dce(g);
+    }
+    folded
+}
+
+/// Fuse standalone activation LRs into the preceding conv/dwconv/dense.
+/// Returns the number of activations fused.
+pub fn fuse_activation(g: &mut Graph) -> usize {
+    let mut fused = 0usize;
+    let fanout = g.fanout();
+    let mut rewires: Vec<(usize, usize)> = Vec::new();
+    for (id, node) in g.nodes().iter().enumerate() {
+        if let Op::Act(_) = node.op {
+            let src = node.inputs[0];
+            let slot_free = match &g.node(src).op {
+                Op::Conv2d { fused_act, .. }
+                | Op::DepthwiseConv2d { fused_act, .. }
+                | Op::Dense { fused_act, .. } => {
+                    *fused_act == crate::dsl::op::Activation::Identity
+                }
+                _ => false,
+            };
+            if slot_free && fanout[src] == 1 {
+                rewires.push((id, src));
+            }
+        }
+    }
+    for (act_id, conv_id) in rewires {
+        let a = match g.node(act_id).op {
+            Op::Act(a) => a,
+            _ => unreachable!(),
+        };
+        match &mut g.node_mut(conv_id).op {
+            Op::Conv2d { fused_act, .. }
+            | Op::DepthwiseConv2d { fused_act, .. }
+            | Op::Dense { fused_act, .. } => *fused_act = a,
+            _ => unreachable!(),
+        }
+        for nid in 0..g.len() {
+            let node = g.node_mut(nid);
+            for inp in &mut node.inputs {
+                if *inp == act_id {
+                    *inp = conv_id;
+                }
+            }
+        }
+        fused += 1;
+    }
+    if fused > 0 {
+        super::dce::dce(g);
+    }
+    fused
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::op::{Activation, PadMode};
+    use crate::executor::Engine;
+    use crate::pruning::scheme::project_scheme;
+    use crate::pruning::verify::{apply_mask, verify_structure};
+    use crate::util::rng::Rng;
+
+    fn conv_bn_relu_graph(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new("cbr");
+        let x = g.add("x", Op::Input { shape: vec![1, 3, 8, 8] }, &[]);
+        let c = g.add(
+            "c",
+            Op::Conv2d {
+                out_c: 8,
+                in_c: 3,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[x],
+        );
+        g.set_param("c.weight", Tensor::randn(&[8, 3, 3, 3], rng));
+        g.set_param("c.bias", Tensor::randn(&[8], rng).map(|v| v * 0.1));
+        let bn = g.add("bn", Op::BatchNorm { c: 8, eps: 1e-5 }, &[c]);
+        g.set_param("bn.gamma", Tensor::randn(&[8], rng).map(|v| 1.0 + 0.1 * v));
+        g.set_param("bn.beta", Tensor::randn(&[8], rng).map(|v| 0.1 * v));
+        g.set_param("bn.mean", Tensor::randn(&[8], rng).map(|v| 0.2 * v));
+        g.set_param("bn.var", Tensor::randn(&[8], rng).map(|v| 1.0 + 0.3 * v.abs()));
+        let r = g.add("r", Op::Act(Activation::Relu), &[bn]);
+        g.add("out", Op::Output, &[r]);
+        g
+    }
+
+    #[test]
+    fn fold_bn_preserves_semantics() {
+        let mut rng = Rng::new(101);
+        let g0 = conv_bn_relu_graph(&mut rng);
+        let x = Tensor::randn(&[1, 3, 8, 8], &mut rng);
+        let before = Engine::new(&g0, 1).unwrap().run(&[x.clone()]).unwrap();
+
+        let mut g = g0.clone();
+        let folded = fold_bn(&mut g);
+        assert_eq!(folded, 1);
+        assert!(g.find("bn").is_none(), "bn node removed");
+        let after = Engine::new(&g, 1).unwrap().run(&[x]).unwrap();
+        let err = before[0].max_abs_diff(&after[0]);
+        assert!(err < 1e-4, "err={}", err);
+    }
+
+    #[test]
+    fn fuse_activation_preserves_semantics() {
+        let mut rng = Rng::new(102);
+        let g0 = conv_bn_relu_graph(&mut rng);
+        let x = Tensor::randn(&[1, 3, 8, 8], &mut rng);
+        let before = Engine::new(&g0, 1).unwrap().run(&[x.clone()]).unwrap();
+
+        let mut g = g0.clone();
+        fold_bn(&mut g);
+        let fused = fuse_activation(&mut g);
+        assert_eq!(fused, 1);
+        assert_eq!(g.len(), 3, "only input, conv, output remain");
+        let after = Engine::new(&g, 1).unwrap().run(&[x]).unwrap();
+        assert!(before[0].max_abs_diff(&after[0]) < 1e-4);
+    }
+
+    #[test]
+    fn fold_bn_preserves_pruning_structure() {
+        let mut rng = Rng::new(103);
+        let mut g = conv_bn_relu_graph(&mut rng);
+        let w = g.param("c.weight").unwrap().clone();
+        let s = project_scheme(&w, "column", 0.5, None);
+        g.set_param("c.weight", apply_mask(&w, &s));
+        fold_bn(&mut g);
+        verify_structure(g.param("c.weight").unwrap(), &s).unwrap();
+    }
+
+    #[test]
+    fn no_fuse_across_fanout() {
+        let mut rng = Rng::new(104);
+        let mut g = Graph::new("fan");
+        let x = g.add("x", Op::Input { shape: vec![1, 3, 8, 8] }, &[]);
+        let c = g.add(
+            "c",
+            Op::Conv2d {
+                out_c: 4,
+                in_c: 3,
+                kh: 1,
+                kw: 1,
+                stride: 1,
+                pad: 0,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[x],
+        );
+        g.set_param("c.weight", Tensor::randn(&[4, 3, 1, 1], &mut rng));
+        // Conv feeds BOTH an activation and an add -> cannot fuse the act.
+        let r = g.add("r", Op::Act(Activation::Relu), &[c]);
+        let s = g.add("s", Op::Add, &[r, c]);
+        g.add("out", Op::Output, &[s]);
+        assert_eq!(fuse_activation(&mut g), 0);
+        assert!(g.find("r").is_some());
+    }
+}

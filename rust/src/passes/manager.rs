@@ -1,0 +1,173 @@
+//! Pass manager: ordered pipeline with per-pass statistics, mirroring the
+//! paper's "DSL related optimization" stage of the compiler.
+
+use crate::dsl::Graph;
+
+/// Statistics of one pass application.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PassStats {
+    pub pass: &'static str,
+    /// Pass-specific count (nodes folded / fused / removed).
+    pub changed: usize,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+}
+
+/// Ordered optimization pipeline.
+pub struct PassManager {
+    passes: Vec<(&'static str, fn(&mut Graph) -> usize)>,
+}
+
+impl Default for PassManager {
+    /// The full pipeline the paper's compiler applies:
+    /// BN folding → activation fusion → DCE.
+    fn default() -> Self {
+        PassManager {
+            passes: vec![
+                ("fold_bn", super::fuse::fold_bn as fn(&mut Graph) -> usize),
+                ("fuse_activation", super::fuse::fuse_activation),
+                ("dce", super::dce::dce),
+            ],
+        }
+    }
+}
+
+impl PassManager {
+    /// Empty pipeline (the "no compiler" baseline).
+    pub fn none() -> Self {
+        PassManager { passes: vec![] }
+    }
+
+    /// Pipeline with only the named passes, in the given order.
+    pub fn with(names: &[&str]) -> Self {
+        let all = PassManager::default();
+        PassManager {
+            passes: all
+                .passes
+                .into_iter()
+                .filter(|(n, _)| names.contains(n))
+                .collect(),
+        }
+    }
+
+    pub fn pass_names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Run all passes once, in order. Returns per-pass stats.
+    pub fn run(&self, g: &mut Graph) -> Vec<PassStats> {
+        let mut stats = Vec::with_capacity(self.passes.len());
+        for (name, f) in &self.passes {
+            let before = g.len();
+            let changed = f(g);
+            stats.push(PassStats {
+                pass: name,
+                changed,
+                nodes_before: before,
+                nodes_after: g.len(),
+            });
+        }
+        stats
+    }
+
+    /// Run to fixpoint (max `limit` iterations).
+    pub fn run_fixpoint(&self, g: &mut Graph, limit: usize) -> Vec<PassStats> {
+        let mut all = Vec::new();
+        for _ in 0..limit {
+            let stats = self.run(g);
+            let changed: usize = stats.iter().map(|s| s.changed).sum();
+            all.extend(stats);
+            if changed == 0 {
+                break;
+            }
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::op::{Activation, Op, PadMode};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn deep_graph(rng: &mut Rng, blocks: usize) -> Graph {
+        let mut g = Graph::new("deep");
+        let mut prev = g.add("x", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        for b in 0..blocks {
+            let c = g.add(
+                format!("c{}", b),
+                Op::Conv2d {
+                    out_c: 4,
+                    in_c: 4,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    pad_mode: PadMode::Zeros,
+                    fused_act: Activation::Identity,
+                },
+                &[prev],
+            );
+            g.set_param(format!("c{}.weight", b), Tensor::randn(&[4, 4, 3, 3], rng));
+            let bn = g.add(format!("bn{}", b), Op::BatchNorm { c: 4, eps: 1e-5 }, &[c]);
+            for (slot, v) in [("gamma", 1.0), ("beta", 0.0), ("mean", 0.0), ("var", 1.0)] {
+                g.set_param(format!("bn{}.{}", b, slot), Tensor::full(&[4], v));
+            }
+            prev = g.add(format!("r{}", b), Op::Act(Activation::Relu), &[bn]);
+        }
+        g.add("out", Op::Output, &[prev]);
+        g
+    }
+
+    #[test]
+    fn full_pipeline_collapses_blocks() {
+        let mut rng = Rng::new(111);
+        let mut g = deep_graph(&mut rng, 4);
+        let before = g.len(); // 1 + 4*3 + 1 = 14
+        let stats = PassManager::default().run(&mut g);
+        // Every block collapses to a single fused conv.
+        assert_eq!(g.len(), 1 + 4 + 1);
+        assert!(g.len() < before);
+        let fold: usize = stats.iter().filter(|s| s.pass == "fold_bn").map(|s| s.changed).sum();
+        let fuse: usize =
+            stats.iter().filter(|s| s.pass == "fuse_activation").map(|s| s.changed).sum();
+        assert_eq!(fold, 4);
+        assert_eq!(fuse, 4);
+    }
+
+    #[test]
+    fn none_pipeline_is_identity() {
+        let mut rng = Rng::new(112);
+        let mut g = deep_graph(&mut rng, 2);
+        let before = g.len();
+        let stats = PassManager::none().run(&mut g);
+        assert!(stats.is_empty());
+        assert_eq!(g.len(), before);
+    }
+
+    #[test]
+    fn selective_pipeline() {
+        let mut rng = Rng::new(113);
+        let mut g = deep_graph(&mut rng, 2);
+        PassManager::with(&["fold_bn"]).run(&mut g);
+        // BN gone, relu still standalone.
+        assert!(g.find("bn0").is_none());
+        assert!(g.find("r0").is_some());
+    }
+
+    #[test]
+    fn fixpoint_terminates() {
+        let mut rng = Rng::new(114);
+        let mut g = deep_graph(&mut rng, 3);
+        let stats = PassManager::default().run_fixpoint(&mut g, 10);
+        assert!(!stats.is_empty());
+        // Second iteration must report zero changes.
+        let per_iter = 3; // 3 passes per iteration
+        if stats.len() > per_iter {
+            let last: usize = stats[stats.len() - per_iter..].iter().map(|s| s.changed).sum();
+            assert_eq!(last, 0);
+        }
+    }
+}

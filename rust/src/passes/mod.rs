@@ -1,0 +1,23 @@
+//! Computational-graph transformation passes over the LR DSL (§3, "DSL
+//! related optimization").
+//!
+//! The paper's headline transformation is operator fusion ("a combination
+//! of Convolution layer/Depthwise Convolution layer + BatchNorm layer +
+//! Activation layer") "to reduce the data movement and increase instruction
+//! level parallelism". We implement:
+//!
+//! * [`fold_bn`] — fold inference-mode BatchNorm into the preceding conv's
+//!   weights/bias (removes the BN's memory pass entirely),
+//! * [`fuse_activation`] — fuse a following activation LR into the conv /
+//!   dense LR's output loop,
+//! * [`dce`] — dead-code elimination of unreachable nodes,
+//! * [`constant_fold`] — evaluate subgraphs whose inputs are constants,
+//! * [`PassManager`] — ordered pipeline with per-pass statistics.
+
+pub mod fuse;
+pub mod dce;
+pub mod manager;
+
+pub use dce::dce;
+pub use fuse::{fold_bn, fuse_activation};
+pub use manager::{PassManager, PassStats};

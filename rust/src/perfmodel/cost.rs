@@ -1,0 +1,212 @@
+//! Per-op roofline cost estimation over an LR graph.
+
+use crate::dsl::{Graph, Op};
+use crate::perfmodel::device::Device;
+use crate::pruning::scheme::Scheme;
+use crate::sparse::Stored;
+use anyhow::Result;
+
+/// How conv layers execute for costing purposes (mirrors
+/// `executor::SparseMode` + pass pipeline state).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantKind {
+    DenseUnfused,
+    /// Pruned, CSR storage, unfused graph.
+    CsrUnfused,
+    /// Pruned, compact storage + reorder, fused graph.
+    CompactFused,
+    /// Dense weights but fused graph (compiler-only ablation).
+    DenseFused,
+}
+
+/// Cost breakdown for one node.
+#[derive(Debug, Clone)]
+pub struct OpCost {
+    pub name: String,
+    pub kind: &'static str,
+    pub flops: f64,
+    pub bytes: f64,
+    pub seconds: f64,
+    pub bound: &'static str, // "compute" | "memory" | "overhead"
+}
+
+/// Estimate per-op and total seconds for a graph under a device + variant.
+///
+/// `schemes` supplies pruning structure so weight traffic uses the stored
+/// format's true byte count and compute uses effective (nonzero) MACs.
+pub fn estimate_graph(
+    g: &Graph,
+    device: &Device,
+    variant: VariantKind,
+    schemes: &[(String, Scheme)],
+) -> Result<(f64, Vec<OpCost>)> {
+    let shapes = crate::dsl::shape::infer(g)?;
+    let mut costs = Vec::with_capacity(g.len());
+    let fused = matches!(variant, VariantKind::CompactFused | VariantKind::DenseFused);
+
+    for (id, node) in g.nodes().iter().enumerate() {
+        let out_elems: f64 = shapes[id].iter().product::<usize>() as f64;
+        let in_elems: f64 = node
+            .inputs
+            .iter()
+            .map(|&i| shapes[i].iter().product::<usize>() as f64)
+            .sum();
+        let in_shape = node
+            .inputs
+            .first()
+            .map(|&i| shapes[i].as_slice())
+            .unwrap_or(&[]);
+        let dense_macs = node.op.macs(in_shape, &shapes[id]) as f64;
+
+        // Fusable elementwise/norm ops vanish in fused variants (their work
+        // rides along with the producing conv's output pass). In unfused
+        // variants they cost a full read+write memory pass + a launch.
+        // BN folds into weights; activations and instance norm fuse into
+        // the producing conv's output epilogue (what the paper's codegen
+        // does); bias-add likewise.
+        let is_fusable_glue = matches!(
+            node.op,
+            Op::BatchNorm { .. } | Op::Act(_) | Op::InstanceNorm { .. }
+        );
+        if fused && is_fusable_glue {
+            costs.push(OpCost {
+                name: node.name.clone(),
+                kind: node.op.kind(),
+                flops: 0.0,
+                bytes: 0.0,
+                seconds: 0.0,
+                bound: "fused",
+            });
+            continue;
+        }
+
+        let is_conv_like = matches!(
+            node.op,
+            Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. }
+        );
+
+        let (flops, weight_bytes, eff) = if is_conv_like {
+            let w = g.param(&format!("{}.weight", node.name));
+            let scheme = schemes.iter().find(|(n, _)| n == &node.name).map(|(_, s)| s);
+            let nnz_frac = w
+                .map(|w| {
+                    let nz = w.data().iter().filter(|&&v| v != 0.0).count();
+                    nz as f64 / w.len().max(1) as f64
+                })
+                .unwrap_or(1.0);
+            match variant {
+                VariantKind::DenseUnfused | VariantKind::DenseFused => {
+                    let wb = w.map(|w| w.len() as f64 * 4.0).unwrap_or(0.0);
+                    (2.0 * dense_macs, wb, device.eff_dense)
+                }
+                VariantKind::CsrUnfused => {
+                    // CSR: effective MACs but indexed access; value + index
+                    // bytes per nnz + row pointers.
+                    let nnz = w.map(|w| w.len() as f64 * nnz_frac).unwrap_or(0.0);
+                    let rows = w.map(|w| w.shape()[0] as f64).unwrap_or(1.0);
+                    let wb = nnz * 8.0 + (rows + 1.0) * 4.0;
+                    (2.0 * dense_macs * nnz_frac, wb, device.eff_csr)
+                }
+                VariantKind::CompactFused => {
+                    let wb = match (w, scheme) {
+                        (Some(w), Some(s)) if w.rank() == 4 => {
+                            Stored::encode(w, s).size_bytes() as f64
+                        }
+                        (Some(w), _) => {
+                            // Undeclared scheme (or dense 2-D weights):
+                            // nnz values + small metadata.
+                            let nnz = w.data().iter().filter(|&&v| v != 0.0).count();
+                            (nnz * 4) as f64 + 64.0
+                        }
+                        _ => 0.0,
+                    };
+                    (2.0 * dense_macs * nnz_frac, wb, device.eff_compact)
+                }
+            }
+        } else {
+            // Non-conv ops are memory-bound data movement.
+            (out_elems, 0.0, device.eff_dense)
+        };
+
+        let act_bytes = (in_elems + out_elems) * 4.0;
+        let bytes = act_bytes + weight_bytes;
+        let t_compute = flops / (device.peak_flops * eff);
+        let t_memory = bytes / (device.bandwidth * device.eff_bw);
+        let t = t_compute.max(t_memory) + device.launch_overhead;
+        let bound = if t_compute > t_memory { "compute" } else { "memory" };
+        costs.push(OpCost {
+            name: node.name.clone(),
+            kind: node.op.kind(),
+            flops,
+            bytes,
+            seconds: t,
+            bound,
+        });
+    }
+    let total = costs.iter().map(|c| c.seconds).sum();
+    Ok((total, costs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::builders::build_style;
+    use crate::apps::variant::{prune_graph, AppSpec};
+    use crate::passes::PassManager;
+
+    fn table1_row(app_graph: &Graph, spec: &AppSpec) -> (f64, f64, f64) {
+        let d = Device::adreno640();
+        let (t_dense, _) =
+            estimate_graph(app_graph, &d, VariantKind::DenseUnfused, &[]).unwrap();
+        let mut pruned = app_graph.clone();
+        let schemes = prune_graph(&mut pruned, spec);
+        let (t_csr, _) =
+            estimate_graph(&pruned, &d, VariantKind::CsrUnfused, &schemes).unwrap();
+        let mut fused = pruned.clone();
+        PassManager::default().run_fixpoint(&mut fused, 4);
+        let (t_compact, _) =
+            estimate_graph(&fused, &d, VariantKind::CompactFused, &schemes).unwrap();
+        (t_dense * 1e3, t_csr * 1e3, t_compact * 1e3)
+    }
+
+    #[test]
+    fn table1_shape_holds_for_style() {
+        let g = build_style(256, 1.0, 42);
+        let spec = AppSpec::for_app("style");
+        let (dense, csr, compact) = table1_row(&g, &spec);
+        // Pruning alone helps but modestly (CSR penalty); compiler stacks a
+        // further >1.8x; total speedup in the paper's 3-5x band.
+        assert!(csr < dense, "csr {} < dense {}", csr, dense);
+        assert!(compact < csr / 1.5, "compact {} vs csr {}", compact, csr);
+        let total = dense / compact;
+        assert!(total > 2.5 && total < 8.0, "total speedup {}", total);
+    }
+
+    #[test]
+    fn fused_glue_costs_nothing() {
+        let g = build_style(64, 0.25, 1);
+        let d = Device::adreno640();
+        let (_, costs) =
+            estimate_graph(&g, &d, VariantKind::CompactFused, &[]).unwrap();
+        for c in costs.iter().filter(|c| c.kind == "act" || c.kind == "batchnorm") {
+            assert_eq!(c.seconds, 0.0, "{}", c.name);
+        }
+        let (_, costs_unfused) =
+            estimate_graph(&g, &d, VariantKind::DenseUnfused, &[]).unwrap();
+        let glue: f64 = costs_unfused
+            .iter()
+            .filter(|c| c.kind == "act" || c.kind == "instancenorm")
+            .map(|c| c.seconds)
+            .sum();
+        assert!(glue > 0.0);
+    }
+
+    #[test]
+    fn launch_overhead_counted_per_op() {
+        let g = build_style(64, 0.25, 2);
+        let d = Device::adreno640();
+        let (total, costs) =
+            estimate_graph(&g, &d, VariantKind::DenseUnfused, &[]).unwrap();
+        assert!(total >= costs.len() as f64 * d.launch_overhead * 0.99);
+    }
+}

@@ -1,0 +1,23 @@
+//! Analytical mobile-GPU cost model — the stand-in for the paper's Samsung
+//! Galaxy S10 (Adreno 640) testbed (DESIGN.md §2).
+//!
+//! A per-op roofline: every LR node costs
+//! `max(flops / (peak_flops · eff), bytes / (bw · eff_bw)) + launch_overhead`
+//! where `bytes` covers activations in/out plus weights (in their *stored*
+//! format) and `eff` depends on how the op executes:
+//!
+//! * dense GEMM conv — high MXU/ALU efficiency,
+//! * CSR sparse conv — index-chasing wrecks efficiency (the paper's "stall
+//!   or complex workload" on parallel architectures) and adds index bytes,
+//! * compact+reordered conv — near-dense efficiency on the effective MACs
+//!   (regular packed inner loop, balanced threads), tiny metadata traffic.
+//!
+//! Unfused graphs pay `launch_overhead` + a full activation read/write per
+//! elementwise node; the fusion pass removes those nodes, which is exactly
+//! how the paper's DSL optimization "reduces data movement".
+
+pub mod device;
+pub mod cost;
+
+pub use cost::{estimate_graph, OpCost, VariantKind};
+pub use device::Device;

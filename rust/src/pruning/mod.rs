@@ -1,0 +1,15 @@
+//! Structured pruning descriptors (§2 of the paper).
+//!
+//! The ADMM optimizer itself lives in `python/compile/pruning` (it needs
+//! autodiff); the Rust side owns the *structure* semantics: the constraint
+//! sets `S_i`, mask generation from trained weights, verification that a
+//! weight tensor actually satisfies its declared structure, and sparsity
+//! accounting. These are what the compiler (storage format + reorder)
+//! consumes.
+
+pub mod scheme;
+pub mod verify;
+pub mod stats;
+
+pub use scheme::{LayerPruning, PatternSet, Scheme};
+pub use stats::{graph_sparsity_report, LayerSparsity};

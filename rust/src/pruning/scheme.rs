@@ -1,0 +1,375 @@
+//! Pruning scheme definitions — the constraint sets `S_i` of Eq. (1).
+//!
+//! Four structured schemes from the paper (§2):
+//! * **Filter pruning** — whole output filters removed.
+//! * **Channel pruning** — whole input channels removed.
+//! * **Column pruning** — the same (in_c, kh, kw) position removed from
+//!   *every* filter of a layer; in the GEMM view (rows = filters,
+//!   cols = in_c·kh·kw) this deletes matrix columns.
+//! * **Pattern + connectivity pruning** — every 3×3 kernel keeps only a
+//!   small fixed pattern of entries drawn from a per-layer dictionary
+//!   (pattern pruning), and some kernels are removed entirely
+//!   (connectivity pruning). The paper calls this "kernel pruning" for the
+//!   coloring / super-resolution apps.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A dictionary of kernel patterns: each pattern is a sorted list of kept
+/// positions within a kh×kw kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PatternSet {
+    pub kh: usize,
+    pub kw: usize,
+    /// Each inner vec: kept flat positions (r*kw+c), sorted.
+    pub patterns: Vec<Vec<usize>>,
+}
+
+impl PatternSet {
+    /// The canonical 4-entry 3×3 pattern dictionary used by PConv-style
+    /// pruning: patterns keep the centre plus three adjacent entries.
+    pub fn pconv_3x3() -> Self {
+        // Positions: 0 1 2 / 3 4 5 / 6 7 8 — centre = 4.
+        PatternSet {
+            kh: 3,
+            kw: 3,
+            patterns: vec![
+                vec![1, 3, 4, 5],
+                vec![1, 4, 5, 7],
+                vec![3, 4, 5, 7],
+                vec![1, 3, 4, 7],
+                vec![0, 1, 3, 4],
+                vec![1, 2, 4, 5],
+                vec![3, 4, 6, 7],
+                vec![4, 5, 7, 8],
+            ],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.patterns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.patterns.is_empty()
+    }
+
+    /// Index of the dictionary pattern best matching a kernel by retained
+    /// magnitude (the projection step of pattern pruning).
+    pub fn best_for(&self, kernel: &[f32]) -> usize {
+        debug_assert_eq!(kernel.len(), self.kh * self.kw);
+        let mut best = 0usize;
+        let mut best_mag = f32::MIN;
+        for (pi, pat) in self.patterns.iter().enumerate() {
+            let mag: f32 = pat.iter().map(|&p| kernel[p].abs()).sum();
+            if mag > best_mag {
+                best_mag = mag;
+                best = pi;
+            }
+        }
+        best
+    }
+}
+
+/// Structured pruning scheme for one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scheme {
+    /// No pruning.
+    Dense,
+    /// Keep only the listed output filters (rows of the GEMM view).
+    Filter { keep: Vec<usize> },
+    /// Keep only the listed input channels.
+    Channel { keep: Vec<usize> },
+    /// Keep only the listed GEMM-view columns (same positions across all
+    /// filters). Column index = (ic*kh + r)*kw + c.
+    Column { keep: Vec<usize> },
+    /// Pattern + connectivity: per (filter, in-channel) kernel either a
+    /// pattern id into `set` or `None` (kernel pruned by connectivity).
+    Pattern {
+        set: PatternSet,
+        /// `ids[o][i]` — pattern choice for kernel (o, i).
+        ids: Vec<Vec<Option<u8>>>,
+    },
+}
+
+impl Scheme {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Scheme::Dense => "dense",
+            Scheme::Filter { .. } => "filter",
+            Scheme::Channel { .. } => "channel",
+            Scheme::Column { .. } => "column",
+            Scheme::Pattern { .. } => "pattern",
+        }
+    }
+
+    /// Build a 0/1 mask tensor with the same OIHW shape as `w`.
+    pub fn mask(&self, w_shape: &[usize]) -> Tensor {
+        let (o, i, kh, kw) = (w_shape[0], w_shape[1], w_shape[2], w_shape[3]);
+        let cols = i * kh * kw;
+        let mut m = Tensor::full(w_shape, 1.0);
+        match self {
+            Scheme::Dense => {}
+            Scheme::Filter { keep } => {
+                let keep: std::collections::HashSet<usize> = keep.iter().copied().collect();
+                for oc in 0..o {
+                    if !keep.contains(&oc) {
+                        for v in &mut m.data_mut()[oc * cols..(oc + 1) * cols] {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+            Scheme::Channel { keep } => {
+                let keep: std::collections::HashSet<usize> = keep.iter().copied().collect();
+                let ksz = kh * kw;
+                for oc in 0..o {
+                    for ic in 0..i {
+                        if !keep.contains(&ic) {
+                            let base = (oc * i + ic) * ksz;
+                            for v in &mut m.data_mut()[base..base + ksz] {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                }
+            }
+            Scheme::Column { keep } => {
+                let keep: std::collections::HashSet<usize> = keep.iter().copied().collect();
+                for oc in 0..o {
+                    for col in 0..cols {
+                        if !keep.contains(&col) {
+                            m.data_mut()[oc * cols + col] = 0.0;
+                        }
+                    }
+                }
+            }
+            Scheme::Pattern { set, ids } => {
+                let ksz = kh * kw;
+                for oc in 0..o {
+                    for ic in 0..i {
+                        let base = (oc * i + ic) * ksz;
+                        match ids[oc][ic] {
+                            None => {
+                                for v in &mut m.data_mut()[base..base + ksz] {
+                                    *v = 0.0;
+                                }
+                            }
+                            Some(pid) => {
+                                let pat = &set.patterns[pid as usize];
+                                for p in 0..ksz {
+                                    if !pat.contains(&p) {
+                                        m.data_mut()[base + p] = 0.0;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Fraction of weights kept (1 - sparsity) for a given weight shape.
+    pub fn density(&self, w_shape: &[usize]) -> f64 {
+        let m = self.mask(w_shape);
+        let kept = m.data().iter().filter(|&&x| x != 0.0).count();
+        kept as f64 / m.len() as f64
+    }
+}
+
+/// Derive a magnitude-based structured scheme from trained weights — the
+/// projection onto `S_i` (used both as the ADMM projection oracle on the
+/// Rust side for tests, and to prune synthetic rust-side models).
+pub fn project_scheme(w: &Tensor, kind: &str, sparsity: f64, rng: Option<&mut Rng>) -> Scheme {
+    let s = w.shape();
+    let (o, i, kh, kw) = (s[0], s[1], s[2], s[3]);
+    let cols = i * kh * kw;
+    match kind {
+        "dense" => Scheme::Dense,
+        "filter" => {
+            // Rank filters by L2 norm; keep the strongest.
+            let keep_n = ((o as f64) * (1.0 - sparsity)).round().max(1.0) as usize;
+            let mut norms: Vec<(usize, f32)> = (0..o)
+                .map(|oc| {
+                    let row = &w.data()[oc * cols..(oc + 1) * cols];
+                    (oc, row.iter().map(|x| x * x).sum::<f32>())
+                })
+                .collect();
+            norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut keep: Vec<usize> = norms[..keep_n].iter().map(|&(i, _)| i).collect();
+            keep.sort_unstable();
+            Scheme::Filter { keep }
+        }
+        "channel" => {
+            let keep_n = ((i as f64) * (1.0 - sparsity)).round().max(1.0) as usize;
+            let ksz = kh * kw;
+            let mut norms: Vec<(usize, f32)> = (0..i)
+                .map(|ic| {
+                    let mut s = 0.0f32;
+                    for oc in 0..o {
+                        let base = (oc * i + ic) * ksz;
+                        s += w.data()[base..base + ksz].iter().map(|x| x * x).sum::<f32>();
+                    }
+                    (ic, s)
+                })
+                .collect();
+            norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut keep: Vec<usize> = norms[..keep_n].iter().map(|&(i, _)| i).collect();
+            keep.sort_unstable();
+            Scheme::Channel { keep }
+        }
+        "column" => {
+            let keep_n = ((cols as f64) * (1.0 - sparsity)).round().max(1.0) as usize;
+            let mut norms: Vec<(usize, f32)> = (0..cols)
+                .map(|c| {
+                    let mut s = 0.0f32;
+                    for oc in 0..o {
+                        let v = w.data()[oc * cols + c];
+                        s += v * v;
+                    }
+                    (c, s)
+                })
+                .collect();
+            norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut keep: Vec<usize> = norms[..keep_n].iter().map(|&(i, _)| i).collect();
+            keep.sort_unstable();
+            Scheme::Column { keep }
+        }
+        "pattern" => {
+            let set = PatternSet::pconv_3x3();
+            assert_eq!((kh, kw), (3, 3), "pattern pruning requires 3x3 kernels");
+            let ksz = kh * kw;
+            // Connectivity: prune the weakest kernels so that total density
+            // (pattern keeps 4/9 of survivors) reaches the target.
+            // density = conn_keep_frac * 4/9  =>  conn_keep_frac = (1-sparsity)*9/4.
+            let conn_keep_frac = ((1.0 - sparsity) * ksz as f64
+                / set.patterns[0].len() as f64)
+                .clamp(0.05, 1.0);
+            let total_kernels = o * i;
+            let keep_kernels =
+                ((total_kernels as f64) * conn_keep_frac).round().max(1.0) as usize;
+            let mut kernel_norms: Vec<(usize, f32)> = (0..total_kernels)
+                .map(|k| {
+                    let base = k * ksz;
+                    (k, w.data()[base..base + ksz].iter().map(|x| x * x).sum::<f32>())
+                })
+                .collect();
+            kernel_norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let kept: std::collections::HashSet<usize> =
+                kernel_norms[..keep_kernels].iter().map(|&(k, _)| k).collect();
+            let _ = rng; // deterministic projection; rng reserved for tie-break variants
+            let mut ids = vec![vec![None; i]; o];
+            for oc in 0..o {
+                for ic in 0..i {
+                    let k = oc * i + ic;
+                    if kept.contains(&k) {
+                        let base = k * ksz;
+                        let pid = set.best_for(&w.data()[base..base + ksz]);
+                        ids[oc][ic] = Some(pid as u8);
+                    }
+                }
+            }
+            Scheme::Pattern { set, ids }
+        }
+        other => panic!("unknown pruning scheme '{}'", other),
+    }
+}
+
+/// Per-layer pruning assignment for a whole model.
+#[derive(Debug, Clone)]
+pub struct LayerPruning {
+    /// node name -> scheme
+    pub layers: Vec<(String, Scheme)>,
+}
+
+impl LayerPruning {
+    pub fn get(&self, name: &str) -> Option<&Scheme> {
+        self.layers.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(o: usize, i: usize) -> Tensor {
+        let mut rng = Rng::new(11);
+        Tensor::randn(&[o, i, 3, 3], &mut rng)
+    }
+
+    #[test]
+    fn column_mask_density() {
+        let w = w(8, 4);
+        let s = project_scheme(&w, "column", 0.5, None);
+        let d = s.density(w.shape());
+        assert!((d - 0.5).abs() < 0.03, "density={}", d);
+        if let Scheme::Column { keep } = &s {
+            assert_eq!(keep.len(), 18); // 36 cols * 0.5
+        } else {
+            panic!("wrong scheme");
+        }
+    }
+
+    #[test]
+    fn filter_mask_zeroes_whole_rows() {
+        let w = w(8, 4);
+        let s = project_scheme(&w, "filter", 0.25, None);
+        let m = s.mask(w.shape());
+        // Each filter row must be all-zero or all-one.
+        let cols = 4 * 9;
+        for oc in 0..8 {
+            let row = &m.data()[oc * cols..(oc + 1) * cols];
+            let sum: f32 = row.iter().sum();
+            assert!(sum == 0.0 || sum == cols as f32);
+        }
+        assert!((s.density(w.shape()) - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pattern_keeps_4_of_9() {
+        let w = w(6, 6);
+        let s = project_scheme(&w, "pattern", 0.6, None);
+        let m = s.mask(w.shape());
+        // Every unpruned kernel has exactly 4 surviving entries.
+        for k in 0..36 {
+            let slice = &m.data()[k * 9..(k + 1) * 9];
+            let kept = slice.iter().filter(|&&x| x != 0.0).count();
+            assert!(kept == 0 || kept == 4, "kernel {} kept {}", k, kept);
+        }
+        let d = s.density(w.shape());
+        assert!((d - 0.4).abs() < 0.08, "density={}", d);
+    }
+
+    #[test]
+    fn pattern_projection_picks_max_magnitude() {
+        let set = PatternSet::pconv_3x3();
+        // Kernel with large values at positions 1,3,4,5 -> pattern 0.
+        let mut k = [0.01f32; 9];
+        for p in [1, 3, 4, 5] {
+            k[p] = 1.0;
+        }
+        assert_eq!(set.best_for(&k), 0);
+    }
+
+    #[test]
+    fn channel_scheme_masks_all_filters_same() {
+        let w = w(4, 8);
+        let s = project_scheme(&w, "channel", 0.5, None);
+        let m = s.mask(w.shape());
+        for ic in 0..8 {
+            let first = m.at4(0, ic, 0, 0);
+            for oc in 1..4 {
+                assert_eq!(m.at4(oc, ic, 0, 0), first);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_scheme_keeps_everything() {
+        let w = w(2, 2);
+        let s = Scheme::Dense;
+        assert_eq!(s.density(w.shape()), 1.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Sparsity / MACs accounting per layer and per model — feeds the perf
+//! model and the experiment reports.
+
+use crate::dsl::{Graph, Op};
+use crate::pruning::scheme::Scheme;
+use anyhow::Result;
+
+/// Per-layer sparsity report entry.
+#[derive(Debug, Clone)]
+pub struct LayerSparsity {
+    pub name: String,
+    pub kind: &'static str,
+    pub scheme: &'static str,
+    pub params: usize,
+    pub nonzero: usize,
+    pub dense_macs: u64,
+    pub effective_macs: u64,
+}
+
+impl LayerSparsity {
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nonzero as f64 / self.params.max(1) as f64
+    }
+}
+
+/// Walk the graph and report per-conv/dense-layer sparsity + MACs, using
+/// the actual zero patterns in the weight table (post-pruning) and the
+/// declared schemes where available.
+pub fn graph_sparsity_report(
+    g: &Graph,
+    schemes: &[(String, Scheme)],
+) -> Result<Vec<LayerSparsity>> {
+    let shapes = crate::dsl::shape::infer(g)?;
+    let mut out = Vec::new();
+    for (id, node) in g.nodes().iter().enumerate() {
+        if !matches!(
+            node.op,
+            Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. }
+        ) {
+            continue;
+        }
+        let w = match g.param(&format!("{}.weight", node.name)) {
+            Some(w) => w,
+            None => continue,
+        };
+        let nonzero = w.data().iter().filter(|&&x| x != 0.0).count();
+        let in_shape = node
+            .inputs
+            .first()
+            .map(|&i| shapes[i].as_slice())
+            .unwrap_or(&[]);
+        let dense_macs = node.op.macs(in_shape, &shapes[id]);
+        let density = nonzero as f64 / w.len().max(1) as f64;
+        let scheme = schemes
+            .iter()
+            .find(|(n, _)| n == &node.name)
+            .map(|(_, s)| s.kind())
+            .unwrap_or("dense");
+        out.push(LayerSparsity {
+            name: node.name.clone(),
+            kind: node.op.kind(),
+            scheme,
+            params: w.len(),
+            nonzero,
+            dense_macs,
+            effective_macs: (dense_macs as f64 * density).round() as u64,
+        });
+    }
+    Ok(out)
+}
+
+/// Model-level aggregate of a report.
+pub fn aggregate(report: &[LayerSparsity]) -> (usize, usize, u64, u64) {
+    let params: usize = report.iter().map(|l| l.params).sum();
+    let nonzero: usize = report.iter().map(|l| l.nonzero).sum();
+    let dense: u64 = report.iter().map(|l| l.dense_macs).sum();
+    let eff: u64 = report.iter().map(|l| l.effective_macs).sum();
+    (params, nonzero, dense, eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::op::{Activation, PadMode};
+    use crate::pruning::scheme::project_scheme;
+    use crate::pruning::verify::apply_mask;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn report_reflects_pruning() {
+        let mut rng = Rng::new(21);
+        let mut g = Graph::new("t");
+        let x = g.add("x", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        let c = g.add(
+            "c",
+            Op::Conv2d {
+                out_c: 8,
+                in_c: 4,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[x],
+        );
+        let w = Tensor::randn(&[8, 4, 3, 3], &mut rng);
+        let s = project_scheme(&w, "column", 0.5, None);
+        g.set_param("c.weight", apply_mask(&w, &s));
+        let _ = c;
+        g.add("out", Op::Output, &[c]);
+
+        let report = graph_sparsity_report(&g, &[("c".to_string(), s)]).unwrap();
+        assert_eq!(report.len(), 1);
+        let l = &report[0];
+        assert_eq!(l.scheme, "column");
+        assert!((l.sparsity() - 0.5).abs() < 0.05);
+        assert!(l.effective_macs < l.dense_macs);
+        let (params, nonzero, dense, eff) = aggregate(&report);
+        assert_eq!(params, 288);
+        assert!(nonzero < params);
+        assert!(eff < dense);
+    }
+}

@@ -1,0 +1,86 @@
+//! Structure verification: check that a weight tensor actually lies in the
+//! constraint set `S_i` its scheme declares. Used as a test oracle for the
+//! python ADMM output and as a guard before the compiler applies
+//! structure-dependent optimizations (compact storage assumes structure!).
+
+use crate::pruning::scheme::Scheme;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Verify `w` (OIHW) satisfies `scheme`. Zero entries are allowed anywhere
+/// (extra sparsity never violates a structure), but *non-zero* entries must
+/// only appear where the scheme's mask is 1.
+pub fn verify_structure(w: &Tensor, scheme: &Scheme) -> Result<()> {
+    if w.rank() != 4 {
+        bail!("verify_structure expects OIHW weights, got rank {}", w.rank());
+    }
+    let mask = scheme.mask(w.shape());
+    for (idx, (&v, &m)) in w.data().iter().zip(mask.data().iter()).enumerate() {
+        if v != 0.0 && m == 0.0 {
+            bail!(
+                "structure violation: non-zero weight {} at flat index {} outside {} structure",
+                v,
+                idx,
+                scheme.kind()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Apply a scheme's mask to weights (hard projection).
+pub fn apply_mask(w: &Tensor, scheme: &Scheme) -> Tensor {
+    let mask = scheme.mask(w.shape());
+    w.zip(&mask, |a, m| a * m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::scheme::project_scheme;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn masked_weights_pass_verification() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[8, 4, 3, 3], &mut rng);
+        for kind in ["filter", "channel", "column", "pattern"] {
+            let s = project_scheme(&w, kind, 0.5, None);
+            let wp = apply_mask(&w, &s);
+            verify_structure(&wp, &s).unwrap_or_else(|e| panic!("{}: {}", kind, e));
+        }
+    }
+
+    #[test]
+    fn violation_detected() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[8, 4, 3, 3], &mut rng);
+        let s = project_scheme(&w, "column", 0.5, None);
+        let mut wp = apply_mask(&w, &s);
+        // Poke a non-zero into a pruned column.
+        if let Scheme::Column { keep } = &s {
+            let pruned_col = (0..36).find(|c| !keep.contains(c)).unwrap();
+            wp.data_mut()[pruned_col] = 1.0;
+        }
+        assert!(verify_structure(&wp, &s).is_err());
+    }
+
+    #[test]
+    fn extra_zeros_are_fine() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(&[4, 4, 3, 3], &mut rng);
+        let s = project_scheme(&w, "pattern", 0.6, None);
+        let mut wp = apply_mask(&w, &s);
+        for v in wp.data_mut().iter_mut().take(40) {
+            *v = 0.0; // extra sparsity
+        }
+        verify_structure(&wp, &s).unwrap();
+    }
+
+    #[test]
+    fn dense_always_verifies() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(&[2, 2, 3, 3], &mut rng);
+        verify_structure(&w, &Scheme::Dense).unwrap();
+    }
+}

@@ -1,0 +1,17 @@
+//! Matrix reorder (§3, "Matrix reorder").
+//!
+//! After structured pruning, sparse matrix multiplication still suffers
+//! "heavy load imbalance among each thread, and irregular memory accesses".
+//! The paper's fix: (1) **reorder rows** (filters) "by arranging the ones
+//! with the same or similar patterns together", then (2) **compact the
+//! weights in the column direction** so each group's inner loop is dense.
+//!
+//! Output is a [`ReorderPlan`]: a row permutation, filter *groups* whose
+//! rows share a column support, per-group packed column lists, and a
+//! balanced thread [`Schedule`] (greedy LPT over group MAC costs).
+
+pub mod plan;
+pub mod schedule;
+
+pub use plan::{FilterGroup, ReorderPlan};
+pub use schedule::{load_imbalance, Schedule};

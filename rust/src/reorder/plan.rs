@@ -1,0 +1,174 @@
+//! Row grouping + column compaction — the data-layout half of reorder.
+
+use crate::sparse::GemmView;
+
+/// A group of filters (rows) sharing one column support.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FilterGroup {
+    /// Original row indices in this group (post-sort order).
+    pub rows: Vec<u32>,
+    /// The shared column support, sorted ascending.
+    pub cols: Vec<u32>,
+    /// Packed values `rows.len() × cols.len()`, row-major, dense.
+    pub values: Vec<f32>,
+}
+
+impl FilterGroup {
+    /// MACs this group contributes per GEMM output column.
+    pub fn macs_per_n(&self) -> u64 {
+        (self.rows.len() * self.cols.len()) as u64
+    }
+
+    pub fn packed_row(&self, i: usize) -> &[f32] {
+        let k = self.cols.len();
+        &self.values[i * k..(i + 1) * k]
+    }
+}
+
+/// Full reorder plan for one weight matrix.
+#[derive(Debug, Clone)]
+pub struct ReorderPlan {
+    pub rows: usize,
+    pub cols: usize,
+    pub groups: Vec<FilterGroup>,
+}
+
+impl ReorderPlan {
+    /// Build a plan from a (pruned) dense GEMM view.
+    ///
+    /// Rows are keyed by their column-support signature; rows with equal
+    /// signatures form a group (the paper's "same pattern"); groups are
+    /// then sorted by signature so *similar* patterns are adjacent in
+    /// memory. Empty rows (fully pruned filters) are dropped.
+    pub fn build(g: &GemmView) -> Self {
+        // Signature = sorted list of nnz columns per row.
+        let mut keyed: Vec<(Vec<u32>, u32)> = (0..g.rows)
+            .map(|r| {
+                let support: Vec<u32> = (0..g.cols)
+                    .filter(|&c| g.at(r, c) != 0.0)
+                    .map(|c| c as u32)
+                    .collect();
+                (support, r as u32)
+            })
+            .filter(|(s, _)| !s.is_empty())
+            .collect();
+        // Sort rows by signature => identical supports adjacent, similar
+        // supports (shared prefixes) near each other.
+        keyed.sort();
+
+        let mut groups: Vec<FilterGroup> = Vec::new();
+        for (support, row) in keyed {
+            match groups.last_mut() {
+                Some(last) if last.cols == support => last.rows.push(row),
+                _ => groups.push(FilterGroup { rows: vec![row], cols: support, values: vec![] }),
+            }
+        }
+        // Column compaction: pack each group's values densely.
+        for grp in &mut groups {
+            grp.values.reserve(grp.rows.len() * grp.cols.len());
+            for &r in &grp.rows {
+                for &c in &grp.cols {
+                    grp.values.push(g.at(r as usize, c as usize));
+                }
+            }
+        }
+        ReorderPlan { rows: g.rows, cols: g.cols, groups }
+    }
+
+    /// Total nnz across groups.
+    pub fn nnz(&self) -> usize {
+        self.groups.iter().map(|g| g.values.len()).sum()
+    }
+
+    /// Number of groups (1 = perfectly regular, rows = fully irregular).
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Reconstruct the dense matrix (test oracle).
+    pub fn to_dense(&self) -> GemmView {
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        for grp in &self.groups {
+            let k = grp.cols.len();
+            for (i, &r) in grp.rows.iter().enumerate() {
+                for (j, &c) in grp.cols.iter().enumerate() {
+                    data[r as usize * self.cols + c as usize] = grp.values[i * k + j];
+                }
+            }
+        }
+        GemmView { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::scheme::project_scheme;
+    use crate::pruning::verify::apply_mask;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn column_pruned_matrix_is_one_group() {
+        let mut rng = Rng::new(51);
+        let w = Tensor::randn(&[16, 8, 3, 3], &mut rng);
+        let s = project_scheme(&w, "column", 0.5, None);
+        let wp = apply_mask(&w, &s);
+        let plan = ReorderPlan::build(&GemmView::from_oihw(&wp));
+        // All filters share the same kept columns -> exactly one group.
+        assert_eq!(plan.group_count(), 1);
+        assert_eq!(plan.groups[0].rows.len(), 16);
+        assert_eq!(plan.to_dense().data, GemmView::from_oihw(&wp).data);
+    }
+
+    #[test]
+    fn pattern_pruned_matrix_groups_by_signature() {
+        let mut rng = Rng::new(52);
+        let w = Tensor::randn(&[32, 4, 3, 3], &mut rng);
+        let s = project_scheme(&w, "pattern", 0.6, None);
+        let wp = apply_mask(&w, &s);
+        let gv = GemmView::from_oihw(&wp);
+        let plan = ReorderPlan::build(&gv);
+        // Far fewer groups than rows (patterns repeat), and roundtrip holds.
+        assert!(plan.group_count() <= 32);
+        assert_eq!(plan.to_dense().data, gv.data);
+        // Every group's support is sorted and shared by its rows.
+        for grp in &plan.groups {
+            for w in grp.cols.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for (i, &r) in grp.rows.iter().enumerate() {
+                for (j, &c) in grp.cols.iter().enumerate() {
+                    assert_eq!(grp.packed_row(i)[j], gv.at(r as usize, c as usize));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_dropped() {
+        let g = GemmView {
+            rows: 3,
+            cols: 2,
+            data: vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0],
+        };
+        let plan = ReorderPlan::build(&g);
+        let total_rows: usize = plan.groups.iter().map(|g| g.rows.len()).sum();
+        assert_eq!(total_rows, 2);
+        assert_eq!(plan.to_dense().data, g.data);
+    }
+
+    #[test]
+    fn identical_rows_grouped() {
+        // Rows 0 and 2 share support {0,1}; row 1 has support {2}.
+        let g = GemmView {
+            rows: 3,
+            cols: 3,
+            data: vec![1.0, 2.0, 0.0, 0.0, 0.0, 5.0, 3.0, 4.0, 0.0],
+        };
+        let plan = ReorderPlan::build(&g);
+        assert_eq!(plan.group_count(), 2);
+        let big = plan.groups.iter().find(|g| g.rows.len() == 2).unwrap();
+        assert_eq!(big.cols, vec![0, 1]);
+    }
+}

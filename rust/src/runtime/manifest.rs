@@ -1,0 +1,102 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by aot.py.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled model artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub variant: String,
+    pub hlo_path: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// The artifact directory index.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first?)", path.display()))?;
+        let root = Json::parse(&text).context("manifest parse error")?;
+        if root.get("format").as_str() != Some("prt-dnn-artifacts") {
+            bail!("{}: not a prt-dnn artifact manifest", path.display());
+        }
+        let mut entries = Vec::new();
+        for m in root.get("models").as_arr().context("manifest: missing models")? {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                m.get(key)
+                    .as_arr()
+                    .context("manifest: missing shapes")?
+                    .iter()
+                    .map(|s| s.as_usize_vec().context("bad shape"))
+                    .collect()
+            };
+            entries.push(ArtifactEntry {
+                name: m.get("name").as_str().context("model: missing name")?.to_string(),
+                variant: m
+                    .get("variant")
+                    .as_str()
+                    .unwrap_or("dense")
+                    .to_string(),
+                hlo_path: dir.join(m.get("hlo").as_str().context("model: missing hlo")?),
+                input_shapes: shapes("inputs")?,
+                output_shapes: shapes("outputs")?,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn find(&self, name: &str, variant: &str) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.variant == variant)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .map(|e| format!("{}:{}", e.name, e.variant))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_and_find() {
+        let dir = std::env::temp_dir().join("prt_dnn_manifest_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"prt-dnn-artifacts","models":[
+                {"name":"style","variant":"dense","hlo":"style.hlo.txt",
+                 "inputs":[[1,3,64,64]],"outputs":[[1,3,64,64]]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("style", "dense").unwrap();
+        assert_eq!(e.input_shapes, vec![vec![1, 3, 64, 64]]);
+        assert!(m.find("style", "pruned").is_none());
+        assert_eq!(m.names(), vec!["style:dense"]);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("prt_dnn_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"nope"}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

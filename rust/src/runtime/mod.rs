@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from Rust — the L2→L3 bridge.
+//!
+//! Interchange is **HLO text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use pjrt::PjrtModel;

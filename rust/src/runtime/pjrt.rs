@@ -1,0 +1,90 @@
+//! PJRT model wrapper: compile once, execute many times.
+
+use crate::runtime::manifest::ArtifactEntry;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// A compiled PJRT executable + its I/O signature.
+pub struct PjrtModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    input_shapes: Vec<Vec<usize>>,
+}
+
+impl PjrtModel {
+    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+    pub fn load(client: &xla::PjRtClient, entry: &ArtifactEntry) -> Result<PjrtModel> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.hlo_path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", entry.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", entry.name))?;
+        Ok(PjrtModel {
+            name: format!("{}:{}", entry.name, entry.variant),
+            exe,
+            input_shapes: entry.input_shapes.clone(),
+        })
+    }
+
+    /// Create the shared CPU client.
+    pub fn cpu_client() -> Result<xla::PjRtClient> {
+        xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))
+    }
+
+    /// Execute on f32 tensors. Artifacts are lowered with
+    /// `return_tuple=True`, so the single output is a tuple we unpack.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            if t.shape() != self.input_shapes[i].as_slice() {
+                bail!(
+                    "{}: input {} shape {:?} != {:?}",
+                    self.name,
+                    i,
+                    t.shape(),
+                    self.input_shapes[i]
+                );
+            }
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(t.data())
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // Unpack the output tuple.
+        let elems = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let mut tensors = Vec::with_capacity(elems.len());
+        for lit in elems {
+            let shape = lit
+                .array_shape()
+                .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            tensors.push(Tensor::from_vec(&dims, data));
+        }
+        Ok(tensors)
+    }
+}
+
+// PJRT round-trip integration tests live in rust/tests/pjrt_roundtrip.rs
+// (they need artifacts/ built by `make artifacts`).

@@ -1,0 +1,118 @@
+//! Compressed Sparse Row — the baseline the paper's compact format beats.
+//!
+//! Layout: `values[nnz] (f32)` + `col_idx[nnz] (u32)` + `row_ptr[rows+1]
+//! (u32)`. Size accounting matches that serialization exactly.
+
+use crate::sparse::GemmView;
+
+/// CSR matrix over f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub values: Vec<f32>,
+    pub col_idx: Vec<u32>,
+    pub row_ptr: Vec<u32>,
+}
+
+impl Csr {
+    pub fn from_dense(g: &GemmView) -> Self {
+        let mut values = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut row_ptr = Vec::with_capacity(g.rows + 1);
+        row_ptr.push(0u32);
+        for r in 0..g.rows {
+            for c in 0..g.cols {
+                let v = g.at(r, c);
+                if v != 0.0 {
+                    values.push(v);
+                    col_idx.push(c as u32);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Csr { rows: g.rows, cols: g.cols, values, col_idx, row_ptr }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Exact serialized size: f32 values + u32 col indices + u32 row ptrs.
+    pub fn size_bytes(&self) -> usize {
+        self.values.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    pub fn to_dense(&self) -> GemmView {
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for k in s..e {
+                data[r * self.cols + self.col_idx[k] as usize] = self.values[k];
+            }
+        }
+        GemmView { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Row slice: (col_indices, values) of row r.
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+
+    /// Per-row nnz — the load-imbalance driver the reorder pass fixes.
+    pub fn row_nnz(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| (self.row_ptr[r + 1] - self.row_ptr[r]) as usize)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> GemmView {
+        // 3x4 matrix with mixed sparsity.
+        GemmView {
+            rows: 3,
+            cols: 4,
+            data: vec![
+                1.0, 0.0, 2.0, 0.0, //
+                0.0, 0.0, 0.0, 0.0, //
+                3.0, 4.0, 0.0, 5.0,
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = sample();
+        let csr = Csr::from_dense(&g);
+        assert_eq!(csr.nnz(), 5);
+        assert_eq!(csr.to_dense().data, g.data);
+    }
+
+    #[test]
+    fn row_access() {
+        let csr = Csr::from_dense(&sample());
+        let (cols, vals) = csr.row(2);
+        assert_eq!(cols, &[0, 1, 3]);
+        assert_eq!(vals, &[3.0, 4.0, 5.0]);
+        let (cols, _) = csr.row(1);
+        assert!(cols.is_empty());
+    }
+
+    #[test]
+    fn size_accounting() {
+        let csr = Csr::from_dense(&sample());
+        // 5 values*4 + 5 idx*4 + 4 ptr*4 = 56
+        assert_eq!(csr.size_bytes(), 56);
+    }
+
+    #[test]
+    fn row_nnz_matches() {
+        let csr = Csr::from_dense(&sample());
+        assert_eq!(csr.row_nnz(), vec![2, 0, 3]);
+    }
+}

@@ -1,0 +1,195 @@
+//! NumPy `.npy` (format 1.0) reader/writer for f32 arrays — the weight
+//! interchange format between `python/compile/aot.py` and the Rust runtime.
+//!
+//! Only little-endian f32 C-contiguous arrays are supported, which is what
+//! the export path emits. A directory of `.npy` files plus a JSON manifest
+//! plays the role of `.npz` (no zip dependency needed).
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Write a tensor as `.npy` v1.0.
+pub fn write_npy(path: &Path, t: &Tensor) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let shape_str = match t.shape().len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", t.shape()[0]),
+        _ => format!(
+            "({})",
+            t.shape().iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {}, }}",
+        shape_str
+    );
+    // Pad with spaces so that magic+version+len+header is a multiple of 64,
+    // terminated by '\n' (per the npy spec).
+    let base = MAGIC.len() + 2 + 2;
+    let total = (base + header.len() + 1 + 63) / 64 * 64;
+    while base + header.len() + 1 < total {
+        header.push(' ');
+    }
+    header.push('\n');
+    f.write_all(MAGIC)?;
+    f.write_all(&[0x01, 0x00])?; // version 1.0
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut buf = Vec::with_capacity(t.len() * 4);
+    for v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read an `.npy` file into a tensor. Accepts `<f4` (f32) and `<f8`
+/// (f64, converted) little-endian C-contiguous arrays.
+pub fn read_npy(path: &Path) -> Result<Tensor> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an npy file", path.display());
+    }
+    let mut ver = [0u8; 2];
+    f.read_exact(&mut ver)?;
+    let header_len = match ver[0] {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("unsupported npy version {}", v),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header not utf-8")?;
+
+    let descr = extract_quoted(&header, "descr").context("npy: missing descr")?;
+    let fortran = header.contains("'fortran_order': True");
+    if fortran {
+        bail!("npy: fortran_order not supported");
+    }
+    let shape = extract_shape(&header).context("npy: missing shape")?;
+    let n: usize = shape.iter().product();
+
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let data: Vec<f32> = match descr.as_str() {
+        "<f4" | "|f4" => {
+            if raw.len() < n * 4 {
+                bail!("npy: truncated payload ({} < {})", raw.len(), n * 4);
+            }
+            raw.chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<f8" => {
+            if raw.len() < n * 8 {
+                bail!("npy: truncated payload");
+            }
+            raw.chunks_exact(8)
+                .take(n)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect()
+        }
+        d => bail!("npy: unsupported dtype {}", d),
+    };
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{}':", key);
+    let at = header.find(&pat)? + pat.len();
+    let rest = header[at..].trim_start();
+    let rest = rest.strip_prefix('\'')?;
+    let end = rest.find('\'')?;
+    Some(rest[..end].to_string())
+}
+
+fn extract_shape(header: &str) -> Option<Vec<usize>> {
+    let at = header.find("'shape':")? + "'shape':".len();
+    let rest = header[at..].trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let end = rest.find(')')?;
+    let inner = &rest[..end];
+    let dims: Vec<usize> = inner
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().ok())
+        .collect::<Option<Vec<_>>>()?;
+    Some(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("prt_dnn_npy_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_4d() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::randn(&[2, 3, 5, 7], &mut rng);
+        let p = tmp("a.npy");
+        write_npy(&p, &t).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn roundtrip_1d_and_scalar_shapes() {
+        let t = Tensor::from_vec(&[3], vec![1.0, -2.0, 0.5]);
+        let p = tmp("b.npy");
+        write_npy(&p, &t).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(back.shape(), &[3]);
+        assert_eq!(back.data(), &[1.0, -2.0, 0.5]);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let t = Tensor::zeros(&[4, 4]);
+        let p = tmp("c.npy");
+        write_npy(&p, &t).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_non_npy() {
+        let p = tmp("d.npy");
+        std::fs::write(&p, b"not an npy file").unwrap();
+        assert!(read_npy(&p).is_err());
+    }
+
+    #[test]
+    fn shape_parser_variants() {
+        assert_eq!(extract_shape("{'shape': (3,), }"), Some(vec![3]));
+        assert_eq!(extract_shape("{'shape': (2, 4), }"), Some(vec![2, 4]));
+        assert_eq!(extract_shape("{'shape': (), }"), Some(vec![]));
+    }
+}

@@ -1,0 +1,55 @@
+//! Foundation utilities: JSON codec, PRNG, statistics, thread pool, CLI.
+//!
+//! These exist because the offline build environment has no `serde`,
+//! `rayon`, `clap` or `criterion`; each submodule is a small, fully-tested
+//! substrate the rest of the crate builds on.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod cli;
+
+/// Number of worker threads to use for compute kernels.
+///
+/// Honours `PRT_DNN_THREADS` if set; otherwise uses available parallelism
+/// capped at 8 (the paper's mobile target is a big.LITTLE part with 8 cores).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("PRT_DNN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+/// Human-readable byte count (KiB/MiB).
+pub fn fmt_bytes(n: usize) -> String {
+    if n >= 1 << 20 {
+        format!("{:.2} MiB", n as f64 / (1 << 20) as f64)
+    } else if n >= 1 << 10 {
+        format!("{:.2} KiB", n as f64 / (1 << 10) as f64)
+    } else {
+        format!("{} B", n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+    }
+}

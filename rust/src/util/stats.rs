@@ -1,0 +1,135 @@
+//! Latency statistics: percentiles, mean, a streaming histogram — shared by
+//! the bench harness and the serving coordinator's metrics.
+
+use std::time::Duration;
+
+/// Summary statistics over a sample of durations (or any f64 metric).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from raw samples (not required to be sorted).
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary over empty sample set");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: percentile_sorted(&s, 0.50),
+            p90: percentile_sorted(&s, 0.90),
+            p99: percentile_sorted(&s, 0.99),
+            max: s[n - 1],
+        }
+    }
+
+    pub fn from_durations(ds: &[Duration]) -> Self {
+        let ms: Vec<f64> = ds.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+        Self::from_samples(&ms)
+    }
+}
+
+/// Linear-interpolated percentile over a sorted slice; q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Streaming counter for throughput/latency in the serving loop.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ms.is_empty()
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples_ms.is_empty() {
+            None
+        } else {
+            Some(Summary::from_samples(&self.samples_ms))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_uniform_ramp() {
+        let s: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 0.5), 50.0);
+        assert_eq!(percentile_sorted(&s, 1.0), 100.0);
+        assert!((percentile_sorted(&s, 0.9) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn recorder_roundtrip() {
+        let mut r = LatencyRecorder::new();
+        assert!(r.summary().is_none());
+        for i in 1..=10 {
+            r.record(Duration::from_millis(i));
+        }
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 10);
+        assert!(s.mean > 5.0 && s.mean < 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        let _ = Summary::from_samples(&[]);
+    }
+}

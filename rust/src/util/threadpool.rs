@@ -1,0 +1,180 @@
+//! Scoped fork-join helpers over `std::thread` (no rayon offline).
+//!
+//! The compute kernels need exactly one primitive: *split an index range
+//! into chunks and run a closure on each chunk on its own thread*. For the
+//! serving coordinator a long-lived [`WorkerPool`] with a shared injector
+//! queue is provided.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Run `f(chunk_start, chunk_end, chunk_index)` over `n` items split into
+/// `threads` contiguous chunks, in parallel, blocking until all complete.
+///
+/// Chunks are balanced to within one item. `threads == 1` or tiny `n`
+/// degrades to an inline call (no spawn overhead on the hot path).
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        f(0, n, 0);
+        return;
+    }
+    let base = n / threads;
+    let rem = n % threads;
+    std::thread::scope(|scope| {
+        let mut start = 0usize;
+        for t in 0..threads {
+            let len = base + usize::from(t < rem);
+            let end = start + len;
+            let fr = &f;
+            scope.spawn(move || fr(start, end, t));
+            start = end;
+        }
+    });
+}
+
+/// Dynamic work-stealing-ish variant: threads pull block indices from a
+/// shared atomic counter. Better for irregular per-block cost (sparse GEMM
+/// before reorder balances it).
+pub fn parallel_dynamic<F>(blocks: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(blocks.max(1));
+    if threads == 1 {
+        for b in 0..blocks {
+            f(b);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let fr = &f;
+            let nx = &next;
+            scope.spawn(move || loop {
+                let b = nx.fetch_add(1, Ordering::Relaxed);
+                if b >= blocks {
+                    break;
+                }
+                fr(b);
+            });
+        }
+    });
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived worker pool for the serving coordinator.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub size: usize,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("prt-worker-{}", i))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles, size }
+    }
+
+    /// Submit a job; panics if the pool is shut down.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker pool channel closed");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        let hits = AtomicU64::new(0);
+        parallel_chunks(1003, 7, |s, e, _| {
+            hits.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1003);
+    }
+
+    #[test]
+    fn chunks_single_thread_inline() {
+        let hits = AtomicU64::new(0);
+        parallel_chunks(10, 1, |s, e, t| {
+            assert_eq!((s, e, t), (0, 10, 0));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dynamic_visits_every_block_once() {
+        let n = 257;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_dynamic(n, 5, |b| {
+            counts[b].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_pool_executes_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (done_tx, done_rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = done_tx.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            done_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        parallel_chunks(0, 4, |_, _, _| panic!("should not run with n=0 chunk"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Cross-module integration tests: apps × variants × compiler pipeline,
+//! graph file round trips, serving, sparsity accounting.
+
+use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
+use prt_dnn::coordinator::{ServeConfig, Server};
+use prt_dnn::dsl::io;
+use prt_dnn::executor::Engine;
+use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
+use prt_dnn::pruning::{graph_sparsity_report, verify::verify_structure};
+use prt_dnn::tensor::Tensor;
+
+fn input_for(eng: &Engine) -> Tensor {
+    Tensor::full(&eng.input_shapes()[0], 0.5)
+}
+
+#[test]
+fn all_apps_all_variants_agree() {
+    // The three pruned variants share weights; outputs must agree to float
+    // tolerance across completely different kernel implementations.
+    for app in ["style", "coloring", "sr"] {
+        let g = build_app(app, 0.25, 42).unwrap();
+        let spec = AppSpec::for_app(app);
+        let mut reference: Option<Tensor> = None;
+        for variant in [Variant::Pruned, Variant::PrunedFusedOnly, Variant::PrunedCompiler] {
+            let (eng, _) = prepare_variant(&g, variant, &spec, 2).unwrap();
+            let out = eng.run(&[input_for(&eng)]).unwrap().remove(0);
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => {
+                    let err = r.max_abs_diff(&out);
+                    assert!(err < 2e-3, "{} {:?}: err={}", app, variant.name(), err);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_weights_satisfy_declared_structure() {
+    for app in ["style", "coloring", "sr", "vgg16"] {
+        let mut g = build_app(app, 0.25, 1).unwrap();
+        let spec = AppSpec::for_app(app);
+        let schemes = prune_graph(&mut g, &spec);
+        assert!(!schemes.is_empty(), "{}: nothing pruned", app);
+        for (name, s) in &schemes {
+            let w = g.param(&format!("{}.weight", name)).unwrap();
+            verify_structure(w, s).unwrap_or_else(|e| panic!("{}/{}: {}", app, name, e));
+        }
+        let report = graph_sparsity_report(&g, &schemes).unwrap();
+        let pruned_layers = report.iter().filter(|l| l.sparsity() > 0.3).count();
+        assert!(pruned_layers >= schemes.len(), "{}: sparsity not reflected", app);
+    }
+}
+
+#[test]
+fn graph_file_roundtrip_preserves_semantics() {
+    let dir = std::env::temp_dir().join("prt_dnn_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let g = build_app("sr", 0.25, 5).unwrap();
+    let path = dir.join(format!("{}.graph.json", g.name));
+    io::save(&g, &path).unwrap();
+    let g2 = io::load(&path).unwrap();
+
+    let e1 = Engine::new(&g, 1).unwrap();
+    let e2 = Engine::new(&g2, 1).unwrap();
+    let x = input_for(&e1);
+    let o1 = e1.run(std::slice::from_ref(&x)).unwrap();
+    let o2 = e2.run(std::slice::from_ref(&x)).unwrap();
+    assert_eq!(o1[0].data(), o2[0].data(), "roundtrip changed outputs");
+}
+
+#[test]
+fn serving_all_apps_realtime_judgement_runs() {
+    for app in ["style", "coloring"] {
+        let g = build_app(app, 0.25, 9).unwrap();
+        let spec = AppSpec::for_app(app);
+        let (eng, _) = prepare_variant(&g, Variant::PrunedCompiler, &spec, 2).unwrap();
+        let shape = eng.input_shapes()[0].clone();
+        let report = Server::new(
+            &eng,
+            ServeConfig { source_fps: 100.0, queue_depth: 4, workers: 1, frames: 12 },
+        )
+        .serve(|_| Tensor::full(&shape, 0.5))
+        .unwrap();
+        assert!(report.processed >= 1, "{}: {}", app, report.render());
+    }
+}
+
+#[test]
+fn cost_model_orders_variants_for_every_app() {
+    let device = Device::adreno640();
+    for app in ["style", "coloring", "sr"] {
+        let g = build_app(app, 1.0, 42).unwrap();
+        let spec = AppSpec::for_app(app);
+        let (dense, _) = estimate_graph(&g, &device, VariantKind::DenseUnfused, &[]).unwrap();
+        let mut pruned = g.clone();
+        let schemes = prune_graph(&mut pruned, &spec);
+        let (csr, _) =
+            estimate_graph(&pruned, &device, VariantKind::CsrUnfused, &schemes).unwrap();
+        let mut fused = pruned.clone();
+        prt_dnn::passes::PassManager::default().run_fixpoint(&mut fused, 4);
+        let (compact, _) =
+            estimate_graph(&fused, &device, VariantKind::CompactFused, &schemes).unwrap();
+        assert!(csr < dense, "{}: pruning must help ({} vs {})", app, csr, dense);
+        assert!(compact < csr, "{}: compiler must help ({} vs {})", app, compact, csr);
+        let speedup = dense / compact;
+        assert!(
+            (2.0..8.0).contains(&speedup),
+            "{}: total speedup {} outside the paper's band",
+            app,
+            speedup
+        );
+    }
+}
+
+#[test]
+fn fusion_reduces_modeled_data_movement() {
+    let device = Device::adreno640();
+    let g = build_app("coloring", 1.0, 3).unwrap();
+    let (_, unfused) = estimate_graph(&g, &device, VariantKind::DenseUnfused, &[]).unwrap();
+    let (_, fused) = estimate_graph(&g, &device, VariantKind::DenseFused, &[]).unwrap();
+    let bytes_unfused: f64 = unfused.iter().map(|c| c.bytes).sum();
+    let bytes_fused: f64 = fused.iter().map(|c| c.bytes).sum();
+    assert!(
+        bytes_fused < bytes_unfused * 0.9,
+        "fusion should cut >10% of traffic: {} vs {}",
+        bytes_fused,
+        bytes_unfused
+    );
+}

@@ -1,0 +1,111 @@
+//! PJRT integration: load the AOT artifacts produced by `make artifacts`,
+//! execute them on the CPU PJRT client, and cross-check against the native
+//! executor running the exported LR graph with the SAME weights.
+//!
+//! These tests are skipped (with a message) when artifacts/ is absent so
+//! `cargo test` works before the python step; `make test` runs both.
+
+use prt_dnn::dsl::io;
+use prt_dnn::executor::Engine;
+use prt_dnn::runtime::{Manifest, PjrtModel};
+use prt_dnn::tensor::Tensor;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // Tests run from the crate root.
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_path_buf())
+    } else {
+        eprintln!("skipping PJRT test: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn artifacts_load_and_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    assert!(!manifest.entries.is_empty());
+    let client = PjrtModel::cpu_client().unwrap();
+    for entry in &manifest.entries {
+        let model = PjrtModel::load(&client, entry)
+            .unwrap_or_else(|e| panic!("{}: {:#}", entry.name, e));
+        let inputs: Vec<Tensor> = entry
+            .input_shapes
+            .iter()
+            .map(|s| Tensor::full(s, 0.5))
+            .collect();
+        let out = model.run(&inputs).unwrap();
+        assert_eq!(out.len(), entry.output_shapes.len(), "{}", entry.name);
+        for (o, expect) in out.iter().zip(entry.output_shapes.iter()) {
+            assert_eq!(o.shape(), expect.as_slice(), "{}", entry.name);
+            assert!(
+                o.data().iter().all(|v| v.is_finite()),
+                "{}: non-finite outputs",
+                entry.name
+            );
+        }
+    }
+}
+
+#[test]
+fn native_executor_matches_pjrt_on_same_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = PjrtModel::cpu_client().unwrap();
+    for app in ["style_transfer", "coloring", "super_resolution"] {
+        let Some(entry) = manifest.find(app, "dense") else { continue };
+        let graph_path = dir.join(format!("{}.graph.json", app));
+        if !graph_path.exists() {
+            continue;
+        }
+        let g = io::load(&graph_path).unwrap();
+        let eng = Engine::new(&g, 2).unwrap();
+        let model = PjrtModel::load(&client, entry).unwrap();
+
+        // Structured, non-constant input.
+        let shape = entry.input_shapes[0].clone();
+        let mut x = Tensor::zeros(&shape);
+        for (i, v) in x.data_mut().iter_mut().enumerate() {
+            *v = 0.5 + 0.4 * ((i as f32) * 0.37).sin();
+        }
+        let native = eng.run(std::slice::from_ref(&x)).unwrap();
+        let pjrt = model.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(native[0].shape(), pjrt[0].shape(), "{}", app);
+        let err = native[0].rel_l2(&pjrt[0]);
+        assert!(
+            err < 1e-3,
+            "{}: native executor vs XLA rel-L2 {} (kernels disagree with jax)",
+            app,
+            err
+        );
+        println!("{}: native vs PJRT rel-L2 = {:.3e}", app, err);
+    }
+}
+
+#[test]
+fn pruned_artifacts_execute_and_differ_from_dense() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = PjrtModel::cpu_client().unwrap();
+    for app in ["style_transfer", "super_resolution"] {
+        let (Some(dense), Some(pruned)) =
+            (manifest.find(app, "dense"), manifest.find(app, "pruned"))
+        else {
+            continue;
+        };
+        let dm = PjrtModel::load(&client, dense).unwrap();
+        let pm = PjrtModel::load(&client, pruned).unwrap();
+        // Structured input: a constant image is nulled by instance norm
+        // (mean removal), which would make all weight changes invisible.
+        let mut x = Tensor::zeros(&dense.input_shapes[0]);
+        for (i, v) in x.data_mut().iter_mut().enumerate() {
+            *v = 0.5 + 0.4 * ((i as f32) * 0.11).cos();
+        }
+        let od = dm.run(std::slice::from_ref(&x)).unwrap();
+        let op = pm.run(std::slice::from_ref(&x)).unwrap();
+        let diff = od[0].max_abs_diff(&op[0]);
+        assert!(diff > 0.0, "{}: pruning left outputs identical", app);
+    }
+}
