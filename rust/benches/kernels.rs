@@ -53,6 +53,7 @@ fn main() {
     let w = Tensor::randn(&[o, ic, 3, 3], &mut rng);
     let geom = ConvGeom::new(ic, hw, hw, 3, 1, 1);
     let mut scratch = ConvScratch::new();
+    let mut out = vec![0.0f32; o * geom.out_px()];
     let threads = max_threads;
 
     let mut t = Table::new(
@@ -60,8 +61,9 @@ fn main() {
         &["tier", "sparsity", "ms", "vs dense"],
     );
     let dense_s = bench_ms(2, 8, || {
-        let _ = conv2d_dense(
-            &x, &w, None, 1, 1, PadMode::Zeros, Activation::Identity, threads, &mut scratch,
+        conv2d_dense(
+            x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity, threads,
+            &mut scratch, &mut out,
         );
     });
     t.row(&["dense".into(), "0%".into(), ms(dense_s.mean), "1.00x".into()]);
@@ -74,9 +76,9 @@ fn main() {
 
         let csr = Csr::from_dense(&gv);
         let csr_s = bench_ms(2, 8, || {
-            let _ = conv2d_csr(
-                &x, &csr, &geom, PadMode::Zeros, None, Activation::Identity, threads,
-                &mut scratch,
+            conv2d_csr(
+                x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity,
+                threads, &mut scratch, &mut out,
             );
         });
         t.row(&[
@@ -89,18 +91,18 @@ fn main() {
         let fast = if let Scheme::Column { keep } = &s {
             let cc = ColumnCompact::encode(&gv, keep);
             bench_ms(2, 8, || {
-                let _ = conv2d_column_compact(
-                    &x, &cc, &geom, PadMode::Zeros, None, Activation::Identity, threads,
-                    &mut scratch,
+                conv2d_column_compact(
+                    x.data(), 1, &cc, &geom, PadMode::Zeros, None, Activation::Identity,
+                    threads, &mut scratch, &mut out,
                 );
             })
         } else {
             let plan = ReorderPlan::build(&gv);
             let sched = Schedule::build(&plan, threads);
             bench_ms(2, 8, || {
-                let _ = conv2d_reordered(
-                    &x, &plan, &sched, &geom, PadMode::Zeros, None, Activation::Identity,
-                    &mut scratch,
+                conv2d_reordered(
+                    x.data(), 1, &plan, &sched, &geom, PadMode::Zeros, None,
+                    Activation::Identity, &mut scratch, &mut out,
                 );
             })
         };

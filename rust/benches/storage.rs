@@ -1,14 +1,19 @@
 //! S1 — §3 "Sparse model storage": the compact formats beat CSR's
 //! compression ratio by removing the per-nnz indices structured pruning
 //! makes redundant. Sweeps sparsity and reports bytes + ratio vs dense for
-//! every pruned layer of the three apps.
+//! every pruned layer of the three apps, plus the planned executor's
+//! whole-model `peak_bytes` (weights + activation arena + scratch) so the
+//! perf trajectory tracks memory alongside storage. `S1-JSON` lines carry
+//! the same numbers machine-readably.
 
 use prt_dnn::apps::{build_app, prune_graph, AppSpec};
-use prt_dnn::bench::Table;
+use prt_dnn::bench::{mem_json, Table};
+use prt_dnn::executor::{Engine, ExecConfig};
 use prt_dnn::pruning::scheme::project_scheme;
 use prt_dnn::pruning::verify::apply_mask;
 use prt_dnn::sparse::{Csr, GemmView, Stored};
 use prt_dnn::tensor::Tensor;
+use prt_dnn::util::json::{Json, JsonObj};
 use prt_dnn::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -38,11 +43,13 @@ fn main() -> anyhow::Result<()> {
     }
     sweep.print();
 
-    // Whole-model storage for the three apps at their Table-1 config.
+    // Whole-model storage for the three apps at their Table-1 config,
+    // plus the planned executor's static peak memory.
     let mut apps = Table::new(
-        "S1b whole-model weight storage (width=0.5)",
-        &["app", "scheme", "dense B", "CSR B", "compact B", "x vs dense", "x vs CSR"],
+        "S1b whole-model weight storage + planned peak (width=0.5)",
+        &["app", "scheme", "dense B", "CSR B", "compact B", "x vs dense", "x vs CSR", "peak B"],
     );
+    let mut json_lines: Vec<Json> = Vec::new();
     for app in ["style", "coloring", "sr"] {
         let mut g = build_app(app, 0.5, 42)?;
         let spec = AppSpec::for_app(app);
@@ -57,6 +64,8 @@ fn main() -> anyhow::Result<()> {
             csr += Csr::from_dense(&gv).size_bytes();
             compact += Stored::encode(w, s).size_bytes();
         }
+        let eng = Engine::with_config(&g, &ExecConfig::compact(1, schemes.clone()))?;
+        let mem = eng.memory();
         apps.row(&[
             app.to_string(),
             spec.scheme_kind.to_string(),
@@ -65,11 +74,23 @@ fn main() -> anyhow::Result<()> {
             format!("{}", compact),
             format!("{:.2}x", dense as f64 / compact as f64),
             format!("{:.2}x", csr as f64 / compact as f64),
+            format!("{}", mem.peak_bytes),
         ]);
+        let mut j = JsonObj::new();
+        j.insert("app", app.to_string());
+        j.insert("scheme", spec.scheme_kind);
+        j.insert("dense_bytes", dense);
+        j.insert("csr_bytes", csr);
+        j.insert("compact_bytes", compact);
+        j.insert("memory", mem_json(&mem));
+        json_lines.push(Json::Obj(j));
         // The paper's claim: compact < CSR, always.
         assert!(compact < csr, "{}: compact must beat CSR", app);
     }
     apps.print();
+    for line in &json_lines {
+        println!("S1-JSON {}", line);
+    }
     println!("\nclaim check: compact/CSR < 1.0 at every sparsity level and for every app.");
     Ok(())
 }

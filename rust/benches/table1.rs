@@ -1,16 +1,42 @@
 //! T1 — the paper's Table 1: average inference time for style transfer /
 //! coloring / super resolution under {unpruned, pruning, pruning+compiler}.
 //!
-//! Prints (a) measured CPU latency on this machine's native executor and
-//! (b) modeled Adreno-640 latency from the roofline cost model, next to
-//! the paper's reported numbers. The reproduction target is the *shape*:
-//! ordering, per-stage gains and total speedup band (DESIGN.md §6).
+//! Prints (a) measured CPU latency on this machine's native executor —
+//! plus the plan's static `peak_bytes` and the *measured*
+//! allocations-per-frame of a reusable `ExecContext` (zero in steady
+//! state) — and (b) modeled Adreno-640 latency from the roofline cost
+//! model, next to the paper's reported numbers. The reproduction target is
+//! the *shape*: ordering, per-stage gains and total speedup band
+//! (DESIGN.md §6). Machine-readable `T1-JSON` lines carry latency and
+//! memory together so the perf trajectory tracks both.
 
 use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
-use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
+use prt_dnn::bench::{bench_auto_ms, bytes, mem_json, ms, speedup, summary_json, Table};
+use prt_dnn::executor::{Engine, ExecContext};
 use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
 use prt_dnn::tensor::Tensor;
+use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
+use prt_dnn::util::json::{Json, JsonObj};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Measured heap allocations per frame of a warm, single-context
+/// `run_into` loop (zero for the planned executor with threads=1; kernel
+/// thread spawns show up at higher thread counts).
+fn allocs_per_frame(eng: &Engine, x: &Tensor, frames: usize) -> f64 {
+    let plan = eng.plan();
+    let mut ctx = ExecContext::for_plan(plan);
+    let mut outs: Vec<Tensor> =
+        plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+    let _ = ctx.run_into(plan, std::slice::from_ref(x), &mut outs);
+    let before = alloc_count();
+    for _ in 0..frames {
+        let _ = ctx.run_into(plan, std::slice::from_ref(x), &mut outs);
+    }
+    (alloc_count() - before) as f64 / frames as f64
+}
 
 const PAPER: &[(&str, [f64; 3])] = &[
     ("style", [283.0, 178.0, 67.0]),
@@ -23,6 +49,7 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let width = if quick { 0.25 } else { 1.0 };
     let budget = if quick { 300.0 } else { 1500.0 };
+    let alloc_frames = if quick { 3 } else { 10 };
 
     // (a) measured on the native executor.
     let mut measured = Table::new(
@@ -30,14 +57,17 @@ fn main() -> anyhow::Result<()> {
             "T1a measured CPU ms (native executor, width={}, {} threads)",
             width, threads
         ),
-        &["app", "unpruned", "pruning", "pruning+compiler", "speedup"],
+        &["app", "unpruned", "pruning", "pruning+compiler", "speedup", "peak", "allocs/frame"],
     );
+    let mut json_lines: Vec<Json> = Vec::new();
     for (app, _) in PAPER {
         let g = build_app(app, width, 42)?;
         let spec = AppSpec::for_app(app);
         let mut row = Vec::new();
         let mut base = 0.0;
         let mut last = 0.0;
+        let mut peak = 0usize;
+        let mut apf = 0.0f64;
         for variant in Variant::table1() {
             let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
             let shape = eng.input_shapes()[0].clone();
@@ -50,12 +80,30 @@ fn main() -> anyhow::Result<()> {
             }
             last = s.mean;
             row.push(ms(s.mean));
+            if variant == Variant::PrunedCompiler {
+                peak = eng.memory().peak_bytes;
+                // Alloc accounting on a single-thread plan: kernel thread
+                // spawns would otherwise dominate the counter.
+                let (eng1, _) = prepare_variant(&g, variant, &spec, 1)?;
+                apf = allocs_per_frame(&eng1, &x, alloc_frames);
+            }
+            let mut j = JsonObj::new();
+            j.insert("app", app.to_string());
+            j.insert("variant", variant.name());
+            j.insert("latency", summary_json(&s));
+            j.insert("memory", mem_json(&eng.memory()));
+            json_lines.push(Json::Obj(j));
         }
         row.insert(0, app.to_string());
         row.push(speedup(base, last));
+        row.push(bytes(peak));
+        row.push(format!("{:.1}", apf));
         measured.row(&row);
     }
     measured.print();
+    for line in &json_lines {
+        println!("T1-JSON {}", line);
+    }
 
     // (b) modeled on the paper's device.
     let device = Device::adreno640();

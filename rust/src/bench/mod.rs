@@ -3,7 +3,12 @@
 //! [`bench_ms`] runs warmup + timed iterations and returns a [`Summary`]
 //! in milliseconds; [`Table`] renders aligned result tables the bench
 //! binaries print (one per paper table/figure; see DESIGN.md §6).
+//! [`summary_json`] and [`mem_json`] feed the machine-readable `*-JSON`
+//! lines the bench binaries emit so the perf trajectory can track memory
+//! (`peak_bytes`) alongside latency.
 
+use crate::executor::MemoryUsage;
+use crate::util::json::{Json, JsonObj};
 use crate::util::stats::Summary;
 use std::time::Instant;
 
@@ -86,6 +91,33 @@ impl Table {
     }
 }
 
+/// Machine-readable form of a latency [`Summary`] (milliseconds).
+pub fn summary_json(s: &Summary) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("n", s.n);
+    o.insert("mean_ms", s.mean);
+    o.insert("p50_ms", s.p50);
+    o.insert("p90_ms", s.p90);
+    o.insert("p99_ms", s.p99);
+    o.insert("min_ms", s.min);
+    o.insert("max_ms", s.max);
+    Json::Obj(o)
+}
+
+/// Machine-readable form of a plan's [`MemoryUsage`].
+pub fn mem_json(m: &MemoryUsage) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("dedicated_bytes", m.dedicated_bytes);
+    o.insert("shared_bytes", m.shared_bytes);
+    o.insert("peak_bytes", m.peak_bytes);
+    Json::Obj(o)
+}
+
+/// Format a byte count for table columns.
+pub fn bytes(n: usize) -> String {
+    crate::util::fmt_bytes(n)
+}
+
 /// Format a float with sensible precision for ms columns.
 pub fn ms(v: f64) -> String {
     if v >= 100.0 {
@@ -141,5 +173,20 @@ mod tests {
         assert_eq!(ms(38.25), "38.2");
         assert_eq!(ms(4.237), "4.24");
         assert_eq!(speedup(283.0, 67.0), "4.2x");
+        assert_eq!(bytes(2048), "2.00 KiB");
+    }
+
+    #[test]
+    fn json_helpers_roundtrip() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0]);
+        let j = summary_json(&s);
+        assert_eq!(j.get("n").as_usize(), Some(3));
+        assert!(j.get("mean_ms").as_f64().unwrap() > 0.0);
+        let m = MemoryUsage::new(100, 24);
+        let jm = mem_json(&m);
+        assert_eq!(jm.get("peak_bytes").as_usize(), Some(124));
+        // Emitted JSON reparses.
+        let back = crate::util::json::Json::parse(&jm.to_string()).unwrap();
+        assert_eq!(back.get("dedicated_bytes").as_usize(), Some(100));
     }
 }

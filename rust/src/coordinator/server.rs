@@ -1,7 +1,12 @@
 //! The serving loop: bounded queue + worker pool + metrics.
+//!
+//! Each worker owns one [`ExecContext`] and a set of preallocated output
+//! tensors, so steady-state serving performs zero heap allocations for
+//! intermediates (the arena is sized once from the engine's plan).
 
-use crate::executor::Engine;
+use crate::executor::{Engine, ExecContext};
 use crate::tensor::Tensor;
+use crate::util::json::{Json, JsonObj};
 use crate::util::stats::{LatencyRecorder, Summary};
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -40,6 +45,11 @@ pub struct ServeReport {
     pub latency: Summary,
     /// Pure inference time per processed frame.
     pub inference: Summary,
+    /// Static peak memory of this serving configuration: the plan's
+    /// dedicated weight bytes (shared across workers) plus one
+    /// arena+scratch allotment **per worker** (each worker owns an
+    /// [`ExecContext`]).
+    pub peak_bytes: usize,
 }
 
 impl ServeReport {
@@ -57,7 +67,7 @@ impl ServeReport {
     pub fn render(&self) -> String {
         format!(
             "processed={} dropped={} wall={:.2}s fps={:.1} \
-             latency ms p50={:.1} p90={:.1} p99={:.1} | infer ms mean={:.1}",
+             latency ms p50={:.1} p90={:.1} p99={:.1} | infer ms mean={:.1} | peak={}",
             self.processed,
             self.dropped,
             self.wall.as_secs_f64(),
@@ -66,7 +76,23 @@ impl ServeReport {
             self.latency.p90,
             self.latency.p99,
             self.inference.mean,
+            crate::util::fmt_bytes(self.peak_bytes),
         )
+    }
+
+    /// Machine-readable report (bench sinks / perf trajectory tracking).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("processed", self.processed);
+        o.insert("dropped", self.dropped);
+        o.insert("wall_s", self.wall.as_secs_f64());
+        o.insert("fps", self.throughput_fps());
+        o.insert("latency_p50_ms", self.latency.p50);
+        o.insert("latency_p90_ms", self.latency.p90);
+        o.insert("latency_p99_ms", self.latency.p99);
+        o.insert("infer_mean_ms", self.inference.mean);
+        o.insert("peak_bytes", self.peak_bytes);
+        Json::Obj(o)
     }
 }
 
@@ -172,7 +198,9 @@ impl<'e> Server<'e> {
                 q.close();
             });
 
-            // Workers.
+            // Workers: each owns one ExecContext + preallocated output
+            // buffers, so the steady-state loop never allocates
+            // intermediates (the arena is sized once from the plan).
             for _ in 0..self.cfg.workers.max(1) {
                 let q = &queue;
                 let eng = self.engine;
@@ -180,9 +208,16 @@ impl<'e> Server<'e> {
                 let inf = &inference;
                 let done = &processed;
                 scope.spawn(move || {
+                    let plan = eng.plan();
+                    let mut ctx = ExecContext::for_plan(plan);
+                    let mut outs: Vec<Tensor> =
+                        plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
                     while let Some((_id, frame, enqueued)) = q.pop() {
                         let t0 = Instant::now();
-                        if eng.run(&[frame]).is_ok() {
+                        if ctx
+                            .run_into(plan, std::slice::from_ref(&frame), &mut outs)
+                            .is_ok()
+                        {
                             let now = Instant::now();
                             inf.lock().unwrap().record(now - t0);
                             lat.lock().unwrap().record(now - enqueued);
@@ -200,12 +235,15 @@ impl<'e> Server<'e> {
         if processed == 0 {
             anyhow::bail!("no frames processed");
         }
+        let mem = self.engine.memory();
         Ok(ServeReport {
             processed,
             dropped: queue.dropped.load(Ordering::Relaxed),
             wall,
             latency: latency.summary().unwrap(),
             inference: inference.summary().unwrap(),
+            // Weights are shared; every worker owns one arena + scratch.
+            peak_bytes: mem.dedicated_bytes + self.cfg.workers.max(1) * mem.shared_bytes,
         })
     }
 }
@@ -231,7 +269,14 @@ mod tests {
         assert!(report.processed + report.dropped >= 28);
         assert!(report.latency.p50 > 0.0);
         assert!(report.throughput_fps() > 0.0);
-        let _ = report.render();
+        // cfg.workers = 2: weights counted once, arena+scratch per worker.
+        let mem = eng.memory();
+        assert_eq!(report.peak_bytes, mem.dedicated_bytes + 2 * mem.shared_bytes);
+        assert!(report.peak_bytes > 0);
+        assert!(report.render().contains("peak="));
+        let j = report.to_json();
+        assert_eq!(j.get("peak_bytes").as_usize(), Some(report.peak_bytes));
+        assert_eq!(j.get("processed").as_usize(), Some(report.processed));
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Reusable per-worker execution state: the activation arena + all kernel
+//! scratch. One [`ExecContext`] per worker thread; the shared
+//! [`ExecutionPlan`] is passed by reference into every run.
+//!
+//! Steady-state inference performs **zero heap allocations for
+//! intermediates**: the arena and the im2col scratch are sized once from
+//! the plan, every kernel writes into a planner-assigned arena range, and
+//! [`ExecContext::run_into`] even writes the final outputs into
+//! caller-provided tensors. (With `threads > 1` the kernels still spawn
+//! scoped worker threads per call, and the `Reordered` fallback for
+//! filter/channel schemes packs a per-group panel; the three demo apps'
+//! compiled paths hit neither.)
+
+use crate::dsl::op::Activation;
+use crate::executor::plan::{ConvExec, ExecutionPlan, Step, ValueSlot};
+use crate::kernels::conv::{
+    conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_pattern, conv2d_reordered, dwconv2d,
+    ConvScratch,
+};
+use crate::kernels::elementwise::{
+    act_inplace, add_assign, add_into, batchnorm_inplace, broadcast_spatial_into,
+    concat_channels_into, instancenorm_inplace,
+};
+use crate::kernels::gemm::dense_forward;
+use crate::kernels::resize::{
+    global_avg_pool_into, maxpool_into, pixel_shuffle_into, upsample_nearest_into,
+};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Shared view of one arena range.
+///
+/// # Safety
+/// `ptr` must point at an allocation covering `slot`, and no `&mut` view of
+/// an overlapping range may coexist (the planner's layout invariant).
+unsafe fn slice_at<'a>(ptr: *const f32, slot: ValueSlot) -> &'a [f32] {
+    std::slice::from_raw_parts(ptr.add(slot.offset), slot.len)
+}
+
+/// Mutable view of one arena range.
+///
+/// # Safety
+/// `ptr` must point at an allocation covering `slot`, and no other view of
+/// an overlapping range may coexist (the planner's layout invariant).
+unsafe fn slice_at_mut<'a>(ptr: *mut f32, slot: ValueSlot) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(ptr.add(slot.offset), slot.len)
+}
+
+/// Per-worker execution state (arena + kernel scratch), reusable across
+/// frames without reallocation.
+pub struct ExecContext {
+    arena: Vec<f32>,
+    scratch: ConvScratch,
+}
+
+impl ExecContext {
+    /// Build a context sized for `plan` — allocates the arena and scratch
+    /// once; subsequent runs against the same plan never reallocate.
+    pub fn for_plan(plan: &ExecutionPlan) -> Self {
+        let mut scratch = ConvScratch::new();
+        scratch.ensure(plan.scratch_len());
+        ExecContext { arena: vec![0.0; plan.arena_len()], scratch }
+    }
+
+    /// Current arena capacity in f32 elements (arena-reuse tests).
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Current scratch capacity in f32 elements (arena-reuse tests).
+    pub fn scratch_len(&self) -> usize {
+        self.scratch.capacity()
+    }
+
+    /// Copy the finished output slots out of the arena into owned tensors.
+    fn collect_outputs(&self, plan: &ExecutionPlan) -> Vec<Tensor> {
+        plan.output_ids
+            .iter()
+            .map(|&oid| {
+                let slot = plan.values[oid];
+                Tensor::from_vec(
+                    &plan.shapes[oid],
+                    self.arena[slot.offset..slot.offset + slot.len].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Execute the plan, returning freshly allocated output tensors.
+    pub fn run(&mut self, plan: &ExecutionPlan, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run_inner(plan, inputs, None)?;
+        Ok(self.collect_outputs(plan))
+    }
+
+    /// Execute the plan and copy outputs into caller-provided tensors —
+    /// the fully allocation-free steady-state entry point (used by the
+    /// serving workers).
+    pub fn run_into(
+        &mut self,
+        plan: &ExecutionPlan,
+        inputs: &[Tensor],
+        outputs: &mut [Tensor],
+    ) -> Result<()> {
+        if outputs.len() != plan.output_ids.len() {
+            bail!(
+                "plan '{}' produces {} outputs, got {} buffers",
+                plan.name,
+                plan.output_ids.len(),
+                outputs.len()
+            );
+        }
+        for (k, &oid) in plan.output_ids.iter().enumerate() {
+            if outputs[k].shape() != plan.shapes[oid].as_slice() {
+                bail!(
+                    "output {} buffer shape {:?} != expected {:?}",
+                    k,
+                    outputs[k].shape(),
+                    plan.shapes[oid]
+                );
+            }
+        }
+        self.run_inner(plan, inputs, None)?;
+        for (k, &oid) in plan.output_ids.iter().enumerate() {
+            let slot = plan.values[oid];
+            outputs[k]
+                .data_mut()
+                .copy_from_slice(&self.arena[slot.offset..slot.offset + slot.len]);
+        }
+        Ok(())
+    }
+
+    /// Execute and collect per-op wall times.
+    pub fn run_profiled(
+        &mut self,
+        plan: &ExecutionPlan,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, Vec<(String, std::time::Duration)>)> {
+        let mut prof = Vec::with_capacity(plan.len());
+        self.run_inner(plan, inputs, Some(&mut prof))?;
+        Ok((self.collect_outputs(plan), prof))
+    }
+
+    fn run_inner(
+        &mut self,
+        plan: &ExecutionPlan,
+        inputs: &[Tensor],
+        mut prof: Option<&mut Vec<(String, std::time::Duration)>>,
+    ) -> Result<()> {
+        if inputs.len() != plan.input_ids.len() {
+            bail!(
+                "plan '{}' expects {} inputs, got {}",
+                plan.name,
+                plan.input_ids.len(),
+                inputs.len()
+            );
+        }
+        for (k, &iid) in plan.input_ids.iter().enumerate() {
+            if inputs[k].shape() != plan.shapes[iid].as_slice() {
+                bail!(
+                    "input {} shape {:?} != expected {:?}",
+                    k,
+                    inputs[k].shape(),
+                    plan.shapes[iid]
+                );
+            }
+        }
+        if self.arena.len() < plan.arena_len() {
+            // Context built for a smaller plan: grow once.
+            self.arena.resize(plan.arena_len(), 0.0);
+        }
+        self.scratch.ensure(plan.scratch_len());
+
+        let t = plan.threads;
+        // SAFETY (all `slice_at` / `slice_at_mut` calls below): the planner
+        // guarantees a step's output range is disjoint from all of its
+        // input ranges unless the step is flagged in-place, in which case
+        // only the mutable view is created
+        // (`ExecutionPlan::validate_layout` checks the invariant).
+        let arena_ptr = self.arena.as_mut_ptr();
+        macro_rules! val {
+            ($slot:expr) => {
+                unsafe { slice_at(arena_ptr as *const f32, $slot) }
+            };
+        }
+        macro_rules! val_mut {
+            ($slot:expr) => {
+                unsafe { slice_at_mut(arena_ptr, $slot) }
+            };
+        }
+
+        for (id, st) in plan.steps.iter().enumerate() {
+            let started = std::time::Instant::now();
+            let out_slot = plan.values[id];
+            let in_slot = |k: usize| plan.values[st.inputs[k]];
+            let in_shape = |k: usize| &plan.shapes[st.inputs[k]];
+            match &st.step {
+                Step::Input { index } => {
+                    val_mut!(out_slot).copy_from_slice(inputs[*index].data());
+                }
+                Step::Conv { exec, geom, pad_mode, bias, act } => {
+                    let x = val!(in_slot(0));
+                    let n = in_shape(0)[0];
+                    let out = val_mut!(out_slot);
+                    let scratch = &mut self.scratch;
+                    match exec {
+                        ConvExec::Dense { w } => conv2d_dense(
+                            x, n, w, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                        ),
+                        ConvExec::Csr { csr } => conv2d_csr(
+                            x, n, csr, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                        ),
+                        ConvExec::Column { cc } => conv2d_column_compact(
+                            x, n, cc, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                        ),
+                        ConvExec::Pattern { plan: pp } => conv2d_pattern(
+                            x, n, pp, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                        ),
+                        ConvExec::Reordered { plan: rp, sched } => conv2d_reordered(
+                            x, n, rp, sched, geom, *pad_mode, bias.as_deref(), *act, scratch,
+                            out,
+                        ),
+                    }
+                }
+                Step::DwConv { w, bias, stride, pad, act } => {
+                    let s = in_shape(0);
+                    let (n, c, h, win) = (s[0], s[1], s[2], s[3]);
+                    dwconv2d(
+                        val!(in_slot(0)),
+                        n,
+                        c,
+                        h,
+                        win,
+                        w,
+                        bias.as_deref(),
+                        *stride,
+                        *pad,
+                        *act,
+                        t,
+                        val_mut!(out_slot),
+                    );
+                }
+                Step::Dense { w, bias, out_f, in_f, act } => {
+                    let batch = in_shape(0)[0];
+                    dense_forward(
+                        w.data(),
+                        bias.as_deref(),
+                        *act,
+                        val!(in_slot(0)),
+                        batch,
+                        *in_f,
+                        *out_f,
+                        t,
+                        val_mut!(out_slot),
+                    );
+                }
+                Step::BatchNorm { gamma, beta, mean, var, eps } => {
+                    let x = val_mut!(out_slot);
+                    if !st.inplace {
+                        x.copy_from_slice(val!(in_slot(0)));
+                    }
+                    let c = gamma.len();
+                    let px = x.len() / (in_shape(0)[0] * c);
+                    batchnorm_inplace(
+                        x,
+                        c,
+                        px,
+                        gamma,
+                        beta,
+                        mean,
+                        var,
+                        *eps,
+                        Activation::Identity,
+                    );
+                }
+                Step::InstanceNorm { gamma, beta, eps } => {
+                    let s = in_shape(0);
+                    let (c, px) = (s[1], s[2] * s[3]);
+                    let x = val_mut!(out_slot);
+                    if !st.inplace {
+                        x.copy_from_slice(val!(in_slot(0)));
+                    }
+                    instancenorm_inplace(x, c, px, gamma.as_deref(), beta.as_deref(), *eps);
+                }
+                Step::Act(a) => {
+                    let x = val_mut!(out_slot);
+                    if !st.inplace {
+                        x.copy_from_slice(val!(in_slot(0)));
+                    }
+                    act_inplace(x, *a);
+                }
+                Step::Add => {
+                    if st.inplace {
+                        add_assign(val_mut!(out_slot), val!(in_slot(1)));
+                    } else {
+                        add_into(val_mut!(out_slot), val!(in_slot(0)), val!(in_slot(1)));
+                    }
+                }
+                Step::Concat => {
+                    let (a, b) = (in_shape(0), in_shape(1));
+                    concat_channels_into(
+                        val_mut!(out_slot),
+                        val!(in_slot(0)),
+                        val!(in_slot(1)),
+                        a[0],
+                        a[1],
+                        b[1],
+                        a[2] * a[3],
+                    );
+                }
+                Step::Upsample { factor } => {
+                    let s = in_shape(0);
+                    upsample_nearest_into(
+                        val_mut!(out_slot),
+                        val!(in_slot(0)),
+                        s[0],
+                        s[1],
+                        s[2],
+                        s[3],
+                        *factor,
+                    );
+                }
+                Step::PixelShuffle { factor } => {
+                    let s = in_shape(0);
+                    pixel_shuffle_into(
+                        val_mut!(out_slot),
+                        val!(in_slot(0)),
+                        s[0],
+                        s[1],
+                        s[2],
+                        s[3],
+                        *factor,
+                    );
+                }
+                Step::MaxPool { k, stride } => {
+                    let s = in_shape(0);
+                    maxpool_into(
+                        val_mut!(out_slot),
+                        val!(in_slot(0)),
+                        s[0],
+                        s[1],
+                        s[2],
+                        s[3],
+                        *k,
+                        *stride,
+                    );
+                }
+                Step::GlobalAvgPool => {
+                    let s = in_shape(0);
+                    global_avg_pool_into(
+                        val_mut!(out_slot),
+                        val!(in_slot(0)),
+                        s[0],
+                        s[1],
+                        s[2] * s[3],
+                    );
+                }
+                Step::BroadcastSpatial => {
+                    let o = &plan.shapes[id];
+                    broadcast_spatial_into(
+                        val_mut!(out_slot),
+                        val!(in_slot(0)),
+                        o[0],
+                        o[1],
+                        o[2] * o[3],
+                    );
+                }
+                Step::Output => {
+                    if !st.inplace {
+                        val_mut!(out_slot).copy_from_slice(val!(in_slot(0)));
+                    }
+                }
+            }
+            if let Some(p) = prof.as_deref_mut() {
+                p.push((st.name.clone(), started.elapsed()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::builders::build_style;
+    use crate::executor::plan::{ExecConfig, Planner};
+
+    #[test]
+    fn context_runs_and_is_stable_across_frames() {
+        let g = build_style(32, 0.25, 13);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        let mut ctx = ExecContext::for_plan(&plan);
+        let (arena0, scratch0) = (ctx.arena_len(), ctx.scratch_len());
+        let x = Tensor::full(&[1, 3, 32, 32], 0.5);
+        let o1 = ctx.run(&plan, &[x.clone()]).unwrap();
+        let o2 = ctx.run(&plan, &[x]).unwrap();
+        assert_eq!(o1[0].data(), o2[0].data(), "context reuse changed results");
+        assert_eq!(ctx.arena_len(), arena0, "arena grew between frames");
+        assert_eq!(ctx.scratch_len(), scratch0, "scratch grew between frames");
+    }
+
+    #[test]
+    fn run_into_matches_run() {
+        let g = build_style(32, 0.25, 14);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        let mut ctx = ExecContext::for_plan(&plan);
+        let x = Tensor::full(&[1, 3, 32, 32], 0.4);
+        let o = ctx.run(&plan, &[x.clone()]).unwrap();
+        let mut bufs: Vec<Tensor> =
+            plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        ctx.run_into(&plan, &[x], &mut bufs).unwrap();
+        assert_eq!(o[0].data(), bufs[0].data());
+    }
+
+    #[test]
+    fn run_into_rejects_bad_buffers() {
+        let g = build_style(32, 0.25, 15);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        let mut ctx = ExecContext::for_plan(&plan);
+        let x = Tensor::full(&[1, 3, 32, 32], 0.4);
+        let mut wrong = vec![Tensor::zeros(&[1, 3, 16, 16])];
+        assert!(ctx.run_into(&plan, &[x.clone()], &mut wrong).is_err());
+        let mut none: Vec<Tensor> = vec![];
+        assert!(ctx.run_into(&plan, &[x], &mut none).is_err());
+    }
+}

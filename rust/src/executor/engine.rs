@@ -1,108 +1,32 @@
-//! Engine: compile an LR graph to an execution plan, then interpret it.
+//! Engine: the stable facade over Planner → ExecutionPlan → ExecContext.
+//!
+//! [`Engine::with_config`] compiles a graph once (kernel selection, weight
+//! encoding, static memory planning); [`Engine::run`] executes it using a
+//! small pool of reusable [`ExecContext`]s, so repeated calls — including
+//! concurrent calls from several threads — reuse arenas instead of
+//! allocating intermediates. Workers that want exclusive, allocation-free
+//! state (the serving coordinator) build their own context from
+//! [`Engine::plan`] and call [`ExecContext::run_into`] directly.
 
-use crate::dsl::op::{Activation, Op, PadMode};
-use crate::dsl::{Graph, NodeId};
-use crate::kernels::conv::{
-    conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_reordered, dwconv2d, ConvScratch,
-};
-use crate::kernels::elementwise::{
-    act_inplace, add, batchnorm_inplace, bias_act_inplace, broadcast_spatial, concat_channels,
-    instancenorm_inplace,
-};
-use crate::kernels::im2col::ConvGeom;
-use crate::kernels::resize::{global_avg_pool, maxpool, pixel_shuffle, upsample_nearest};
-use crate::pruning::scheme::Scheme;
-use crate::reorder::{ReorderPlan, Schedule};
-use crate::sparse::{ColumnCompact, Csr, GemmView};
+use crate::dsl::Graph;
+use crate::executor::context::ExecContext;
+use crate::executor::memory::MemoryUsage;
+use crate::executor::plan::{ExecutionPlan, Planner};
 use crate::tensor::Tensor;
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+use std::sync::Mutex;
 
-/// How pruned conv layers are stored + executed.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SparseMode {
-    /// Dense weights, dense GEMM — the unpruned baseline (also used for
-    /// pruned weights when simulating "pruning without compiler support"
-    /// is not desired).
-    Dense,
-    /// CSR storage + indexed SpMM — "pruning, no compiler optimization".
-    Csr,
-    /// The paper's compiler path: column-compact or reorder-grouped
-    /// kernels depending on each layer's pruning scheme.
-    Compact,
-}
+pub use crate::executor::plan::{ExecConfig, SparseMode};
 
-/// Executor configuration.
-#[derive(Debug, Clone)]
-pub struct ExecConfig {
-    pub sparse: SparseMode,
-    pub threads: usize,
-    /// Per-layer pruning schemes (needed for `Compact` to choose the
-    /// right format; optional otherwise).
-    pub schemes: Vec<(String, Scheme)>,
-}
-
-impl ExecConfig {
-    pub fn dense(threads: usize) -> Self {
-        ExecConfig { sparse: SparseMode::Dense, threads, schemes: vec![] }
-    }
-
-    pub fn csr(threads: usize) -> Self {
-        ExecConfig { sparse: SparseMode::Csr, threads, schemes: vec![] }
-    }
-
-    pub fn compact(threads: usize, schemes: Vec<(String, Scheme)>) -> Self {
-        ExecConfig { sparse: SparseMode::Compact, threads, schemes }
-    }
-}
-
-/// Pre-compiled execution strategy for one conv node.
-enum ConvExec {
-    Dense { w: Tensor },
-    Csr { csr: Csr },
-    Column { cc: ColumnCompact },
-    /// Kernel-granularity pattern reorder (pattern schemes).
-    Pattern { plan: crate::kernels::sparse_gemm::PatternPlan },
-    /// Filter-signature reorder (fallback for undeclared structure).
-    Reordered { plan: ReorderPlan, sched: Schedule },
-}
-
-/// Pre-compiled per-node step.
-enum Step {
-    Input { index: usize },
-    Conv {
-        exec: ConvExec,
-        geom: ConvGeom,
-        pad_mode: PadMode,
-        bias: Option<Vec<f32>>,
-        act: Activation,
-    },
-    DwConv { w: Tensor, bias: Option<Vec<f32>>, stride: usize, pad: usize, act: Activation },
-    Dense { w: Tensor, bias: Option<Vec<f32>>, out_f: usize, in_f: usize, act: Activation },
-    BatchNorm { gamma: Vec<f32>, beta: Vec<f32>, mean: Vec<f32>, var: Vec<f32>, eps: f32 },
-    InstanceNorm { gamma: Option<Vec<f32>>, beta: Option<Vec<f32>>, eps: f32 },
-    Act(Activation),
-    Add,
-    Concat,
-    Upsample { factor: usize },
-    PixelShuffle { factor: usize },
-    MaxPool { k: usize, stride: usize },
-    GlobalAvgPool,
-    BroadcastSpatial,
-    Output,
-}
-
-/// Compiled engine.
+/// Compiled engine: an immutable [`ExecutionPlan`] plus a pool of reusable
+/// execution contexts.
 pub struct Engine {
     pub name: String,
-    steps: Vec<(String, Step, Vec<NodeId>)>,
-    shapes: Vec<Vec<usize>>,
-    fanout: Vec<usize>,
-    input_ids: Vec<NodeId>,
-    output_ids: Vec<NodeId>,
-    threads: usize,
     /// Serialized weight bytes under the active storage format (reported
-    /// by the storage bench / perf model).
+    /// by the storage bench / perf model). Mirrors `plan().weight_bytes`.
     pub weight_bytes: usize,
+    plan: ExecutionPlan,
+    pool: Mutex<Vec<ExecContext>>,
 }
 
 impl Engine {
@@ -113,139 +37,51 @@ impl Engine {
 
     /// Compile with an explicit configuration.
     pub fn with_config(g: &Graph, cfg: &ExecConfig) -> Result<Self> {
-        g.validate()?;
-        let shapes = crate::dsl::shape::infer(g)?;
-        let fanout = g.fanout();
-        let mut steps = Vec::with_capacity(g.len());
-        let mut weight_bytes = 0usize;
-        let mut input_count = 0usize;
-
-        for (id, node) in g.nodes().iter().enumerate() {
-            let bias = g
-                .param(&format!("{}.bias", node.name))
-                .map(|t| t.data().to_vec());
-            let step = match &node.op {
-                Op::Input { .. } => {
-                    let s = Step::Input { index: input_count };
-                    input_count += 1;
-                    s
-                }
-                Op::Conv2d { in_c, kh, stride, pad, pad_mode, fused_act, .. } => {
-                    let in_shape = &shapes[node.inputs[0]];
-                    let geom =
-                        ConvGeom::new(*in_c, in_shape[2], in_shape[3], *kh, *stride, *pad);
-                    let w = g
-                        .param(&format!("{}.weight", node.name))
-                        .context("missing conv weight")?
-                        .clone();
-                    let scheme = cfg.schemes.iter().find(|(n, _)| n == &node.name).map(|(_, s)| s);
-                    let exec = match (cfg.sparse, scheme) {
-                        (SparseMode::Dense, _) => {
-                            weight_bytes += w.len() * 4;
-                            ConvExec::Dense { w }
-                        }
-                        (SparseMode::Csr, _) => {
-                            let csr = Csr::from_dense(&GemmView::from_oihw(&w));
-                            weight_bytes += csr.size_bytes();
-                            ConvExec::Csr { csr }
-                        }
-                        (SparseMode::Compact, Some(Scheme::Column { keep })) => {
-                            let cc =
-                                ColumnCompact::encode(&GemmView::from_oihw(&w), keep);
-                            weight_bytes += cc.size_bytes();
-                            ConvExec::Column { cc }
-                        }
-                        (SparseMode::Compact, Some(Scheme::Pattern { set, ids })) => {
-                            let s = w.shape().to_vec();
-                            let pc = crate::sparse::PatternCompact::encode(
-                                &w, set, ids, s[1], s[2], s[3],
-                            );
-                            weight_bytes += pc.size_bytes();
-                            let plan =
-                                crate::kernels::sparse_gemm::PatternPlan::build(&pc);
-                            ConvExec::Pattern { plan }
-                        }
-                        (SparseMode::Compact, _) => {
-                            // Pattern / filter / channel / undeclared: the
-                            // reorder plan handles any structured zeros.
-                            let gv = GemmView::from_oihw(&w);
-                            let plan = ReorderPlan::build(&gv);
-                            let sched = Schedule::build(&plan, cfg.threads);
-                            weight_bytes += plan.nnz() * 4 + plan.group_count() * 8;
-                            ConvExec::Reordered { plan, sched }
-                        }
-                    };
-                    Step::Conv { exec, geom, pad_mode: *pad_mode, bias, act: *fused_act }
-                }
-                Op::DepthwiseConv2d { stride, pad, fused_act, .. } => {
-                    let w = g
-                        .param(&format!("{}.weight", node.name))
-                        .context("missing dw weight")?
-                        .clone();
-                    weight_bytes += w.len() * 4;
-                    Step::DwConv { w, bias, stride: *stride, pad: *pad, act: *fused_act }
-                }
-                Op::Dense { out_f, in_f, fused_act } => {
-                    let w = g
-                        .param(&format!("{}.weight", node.name))
-                        .context("missing dense weight")?
-                        .clone();
-                    weight_bytes += w.len() * 4;
-                    Step::Dense { w, bias, out_f: *out_f, in_f: *in_f, act: *fused_act }
-                }
-                Op::BatchNorm { eps, .. } => Step::BatchNorm {
-                    gamma: g.param(&format!("{}.gamma", node.name)).unwrap().data().to_vec(),
-                    beta: g.param(&format!("{}.beta", node.name)).unwrap().data().to_vec(),
-                    mean: g.param(&format!("{}.mean", node.name)).unwrap().data().to_vec(),
-                    var: g.param(&format!("{}.var", node.name)).unwrap().data().to_vec(),
-                    eps: *eps,
-                },
-                Op::InstanceNorm { eps, .. } => Step::InstanceNorm {
-                    gamma: g
-                        .param(&format!("{}.gamma", node.name))
-                        .map(|t| t.data().to_vec()),
-                    beta: g
-                        .param(&format!("{}.beta", node.name))
-                        .map(|t| t.data().to_vec()),
-                    eps: *eps,
-                },
-                Op::Act(a) => Step::Act(*a),
-                Op::Add => Step::Add,
-                Op::Concat => Step::Concat,
-                Op::UpsampleNearest { factor } => Step::Upsample { factor: *factor },
-                Op::PixelShuffle { factor } => Step::PixelShuffle { factor: *factor },
-                Op::MaxPool { k, stride } => Step::MaxPool { k: *k, stride: *stride },
-                Op::GlobalAvgPool => Step::GlobalAvgPool,
-                Op::BroadcastSpatial => Step::BroadcastSpatial,
-                Op::Output => Step::Output,
-            };
-            steps.push((node.name.clone(), step, node.inputs.clone()));
-            let _ = id;
-        }
-
+        let plan = Planner::plan(g, cfg)?;
         Ok(Engine {
-            name: g.name.clone(),
-            steps,
-            shapes,
-            fanout,
-            input_ids: g.inputs(),
-            output_ids: g.outputs(),
-            threads: cfg.threads.max(1),
-            weight_bytes,
+            name: plan.name.clone(),
+            weight_bytes: plan.weight_bytes,
+            plan,
+            pool: Mutex::new(Vec::new()),
         })
     }
 
+    /// The immutable compiled plan (share it to build per-worker contexts).
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// Static memory accounting of the compiled plan.
+    pub fn memory(&self) -> MemoryUsage {
+        self.plan.memory()
+    }
+
     pub fn input_shapes(&self) -> Vec<Vec<usize>> {
-        self.input_ids.iter().map(|&i| self.shapes[i].clone()).collect()
+        self.plan.input_shapes()
     }
 
     pub fn output_shapes(&self) -> Vec<Vec<usize>> {
-        self.output_ids.iter().map(|&i| self.shapes[i].clone()).collect()
+        self.plan.output_shapes()
+    }
+
+    fn checkout(&self) -> ExecContext {
+        self.pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| ExecContext::for_plan(&self.plan))
+    }
+
+    fn checkin(&self, ctx: ExecContext) {
+        self.pool.lock().unwrap().push(ctx);
     }
 
     /// Execute the graph on the given inputs.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.run_inner(inputs, None)
+        let mut ctx = self.checkout();
+        let result = ctx.run(&self.plan, inputs);
+        self.checkin(ctx);
+        result
     }
 
     /// Execute and collect per-op wall times.
@@ -253,178 +89,17 @@ impl Engine {
         &self,
         inputs: &[Tensor],
     ) -> Result<(Vec<Tensor>, Vec<(String, std::time::Duration)>)> {
-        let mut prof = Vec::with_capacity(self.steps.len());
-        let out = self.run_inner(inputs, Some(&mut prof))?;
-        Ok((out, prof))
-    }
-
-    fn run_inner(
-        &self,
-        inputs: &[Tensor],
-        mut prof: Option<&mut Vec<(String, std::time::Duration)>>,
-    ) -> Result<Vec<Tensor>> {
-        if inputs.len() != self.input_ids.len() {
-            bail!(
-                "engine '{}' expects {} inputs, got {}",
-                self.name,
-                self.input_ids.len(),
-                inputs.len()
-            );
-        }
-        for (k, &iid) in self.input_ids.iter().enumerate() {
-            if inputs[k].shape() != self.shapes[iid].as_slice() {
-                bail!(
-                    "input {} shape {:?} != expected {:?}",
-                    k,
-                    inputs[k].shape(),
-                    self.shapes[iid]
-                );
-            }
-        }
-
-        let n = self.steps.len();
-        let mut values: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
-        let mut remaining = self.fanout.clone();
-        let mut scratch = ConvScratch::new();
-        let t = self.threads;
-
-        for (id, (name, step, node_inputs)) in self.steps.iter().enumerate() {
-            let started = std::time::Instant::now();
-            let get = |k: usize| -> &Tensor {
-                values[node_inputs[k]]
-                    .as_ref()
-                    .expect("executor: consumed input (memory planner bug)")
-            };
-            let out: Tensor = match step {
-                Step::Input { index } => inputs[*index].clone(),
-                Step::Conv { exec, geom, pad_mode, bias, act } => {
-                    let x = get(0);
-                    match exec {
-                        ConvExec::Dense { w } => conv2d_dense(
-                            x, w, bias.as_deref(), geom.stride, geom.pad, *pad_mode, *act, t,
-                            &mut scratch,
-                        ),
-                        ConvExec::Csr { csr } => conv2d_csr(
-                            x, csr, geom, *pad_mode, bias.as_deref(), *act, t, &mut scratch,
-                        ),
-                        ConvExec::Column { cc } => conv2d_column_compact(
-                            x, cc, geom, *pad_mode, bias.as_deref(), *act, t, &mut scratch,
-                        ),
-                        ConvExec::Pattern { plan } => {
-                            crate::kernels::conv::conv2d_pattern(
-                                x, plan, geom, *pad_mode, bias.as_deref(), *act, t,
-                                &mut scratch,
-                            )
-                        }
-                        ConvExec::Reordered { plan, sched } => conv2d_reordered(
-                            x, plan, sched, geom, *pad_mode, bias.as_deref(), *act,
-                            &mut scratch,
-                        ),
-                    }
-                }
-                Step::DwConv { w, bias, stride, pad, act } => {
-                    dwconv2d(get(0), w, bias.as_deref(), *stride, *pad, *act, t)
-                }
-                Step::Dense { w, bias, out_f, in_f, act } => {
-                    let x = get(0);
-                    let batch = x.dim(0);
-                    let mut out = Tensor::zeros(&[batch, *out_f]);
-                    // C[b, o] = W[o, i] · X[b, i]ᵀ: run as GEMM with A=X.
-                    // A = x [batch, in_f], Bᵀ layout: we need W·xᵀ; compute
-                    // per batch row: out[b] = W (out_f×in_f) * x_b.
-                    for b in 0..batch {
-                        let xb = &x.data()[b * in_f..(b + 1) * in_f];
-                        let ob = &mut out.data_mut()[b * out_f..(b + 1) * out_f];
-                        crate::util::threadpool::parallel_chunks(
-                            *out_f,
-                            t,
-                            |os, oe, _| {
-                                // SAFETY: disjoint output rows.
-                                let ob_ptr = ob.as_ptr() as *mut f32;
-                                for o in os..oe {
-                                    let wrow = &w.data()[o * in_f..(o + 1) * in_f];
-                                    let mut acc = 0.0f32;
-                                    for i in 0..*in_f {
-                                        acc += wrow[i] * xb[i];
-                                    }
-                                    unsafe { *ob_ptr.add(o) = acc };
-                                }
-                            },
-                        );
-                    }
-                    bias_act_inplace(out.data_mut(), bias.as_deref(), *out_f, 1, *act);
-                    out
-                }
-                Step::BatchNorm { gamma, beta, mean, var, eps } => {
-                    let mut x = get(0).clone();
-                    let c = gamma.len();
-                    let px = x.len() / (x.dim(0) * c);
-                    batchnorm_inplace(
-                        x.data_mut(),
-                        c,
-                        px,
-                        gamma,
-                        beta,
-                        mean,
-                        var,
-                        *eps,
-                        Activation::Identity,
-                    );
-                    x
-                }
-                Step::InstanceNorm { gamma, beta, eps } => {
-                    let mut x = get(0).clone();
-                    let c = x.dim(1);
-                    let px = x.dim(2) * x.dim(3);
-                    instancenorm_inplace(
-                        x.data_mut(),
-                        c,
-                        px,
-                        gamma.as_deref(),
-                        beta.as_deref(),
-                        *eps,
-                    );
-                    x
-                }
-                Step::Act(a) => {
-                    let mut x = get(0).clone();
-                    act_inplace(x.data_mut(), *a);
-                    x
-                }
-                Step::Add => add(get(0), get(1)),
-                Step::Concat => concat_channels(get(0), get(1)),
-                Step::Upsample { factor } => upsample_nearest(get(0), *factor),
-                Step::PixelShuffle { factor } => pixel_shuffle(get(0), *factor),
-                Step::MaxPool { k, stride } => maxpool(get(0), *k, *stride),
-                Step::GlobalAvgPool => global_avg_pool(get(0)),
-                Step::BroadcastSpatial => broadcast_spatial(get(0), get(1)),
-                Step::Output => get(0).clone(),
-            };
-            if let Some(p) = prof.as_deref_mut() {
-                p.push((name.clone(), started.elapsed()));
-            }
-            values[id] = Some(out);
-            // Memory planner: free inputs whose consumers are all done.
-            for &inp in node_inputs {
-                remaining[inp] -= 1;
-                if remaining[inp] == 0 && !self.output_ids.contains(&inp) {
-                    values[inp] = None;
-                }
-            }
-        }
-
-        Ok(self
-            .output_ids
-            .iter()
-            .map(|&oid| values[oid].take().expect("output computed"))
-            .collect())
+        let mut ctx = self.checkout();
+        let result = ctx.run_profiled(&self.plan, inputs);
+        self.checkin(ctx);
+        result
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dsl::op::PadMode;
+    use crate::dsl::op::{Activation, Op, PadMode};
     use crate::pruning::scheme::project_scheme;
     use crate::pruning::verify::apply_mask;
     use crate::util::rng::Rng;
@@ -544,5 +219,41 @@ mod tests {
         let (_, prof) = eng.run_profiled(&[x]).unwrap();
         assert_eq!(prof.len(), g.len());
         assert!(prof.iter().any(|(n, _)| n == "c1"));
+    }
+
+    #[test]
+    fn repeated_runs_are_deterministic_and_reuse_contexts() {
+        let mut rng = Rng::new(126);
+        let g = build_net(&mut rng);
+        let eng = Engine::new(&g, 1).unwrap();
+        let x = Tensor::randn(&[1, 3, 16, 16], &mut rng);
+        let a = eng.run(&[x.clone()]).unwrap();
+        let b = eng.run(&[x]).unwrap();
+        assert_eq!(a[0].data(), b[0].data());
+        // The pool retains exactly one warm context after serial runs.
+        assert_eq!(eng.pool.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn memory_usage_reported() {
+        let mut rng = Rng::new(127);
+        let g = build_net(&mut rng);
+        let eng = Engine::new(&g, 1).unwrap();
+        let m = eng.memory();
+        assert!(m.dedicated_bytes > 0);
+        assert!(m.shared_bytes > 0);
+        assert_eq!(m.peak_bytes, m.dedicated_bytes + m.shared_bytes);
+        // Arena reuse: the residual net's plan needs less shared memory
+        // than the sum of all intermediate tensors.
+        let naive: usize = {
+            let shapes = crate::dsl::shape::infer(&g).unwrap();
+            shapes.iter().map(|s| s.iter().product::<usize>() * 4).sum()
+        };
+        assert!(
+            eng.plan().arena_len() * 4 < naive,
+            "arena {} >= naive {}",
+            eng.plan().arena_len() * 4,
+            naive
+        );
     }
 }

@@ -1,0 +1,209 @@
+//! Static memory planning for the executor: a liveness-driven arena
+//! allocator and the plan-level memory accounting.
+//!
+//! The planner walks the step list once. Every value (one per graph node)
+//! receives an `(offset, len)` range inside a single shared f32 arena;
+//! ranges are recycled as soon as the last consumer of a value has run, and
+//! unary "epilogue" steps (activation / norm / output) plus residual adds
+//! claim their input's range for **in-place** execution when the input has
+//! no other consumer. The resulting [`MemoryUsage`] makes peak memory a
+//! compile-time constant instead of an emergent runtime property.
+
+/// Memory footprint of one [`super::ExecutionPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryUsage {
+    /// Bytes pinned for the lifetime of the plan: encoded weights in their
+    /// active storage format (dense / CSR / compact / reordered).
+    pub dedicated_bytes: usize,
+    /// Bytes of reusable per-context memory: the activation arena plus the
+    /// worst-case im2col scratch panel.
+    pub shared_bytes: usize,
+    /// Total steady-state peak: `dedicated_bytes + shared_bytes`.
+    pub peak_bytes: usize,
+}
+
+impl MemoryUsage {
+    pub fn new(dedicated_bytes: usize, shared_bytes: usize) -> Self {
+        MemoryUsage {
+            dedicated_bytes,
+            shared_bytes,
+            peak_bytes: dedicated_bytes + shared_bytes,
+        }
+    }
+}
+
+/// Planner knobs — mainly for differential testing: a plan built with
+/// `PlanOptions::no_reuse()` gives every value a private range and never
+/// aliases, which is semantically identical to the historical
+/// one-`Tensor`-per-node interpreter.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    /// Recycle arena ranges once a value's last consumer has run.
+    pub reuse: bool,
+    /// Let eligible steps write in place over their input's range.
+    pub inplace: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { reuse: true, inplace: true }
+    }
+}
+
+impl PlanOptions {
+    /// Every value gets a private, never-recycled range (differential-test
+    /// oracle configuration).
+    pub fn no_reuse() -> Self {
+        PlanOptions { reuse: false, inplace: false }
+    }
+}
+
+/// Best-fit free-list allocator over an abstract `[0, top)` element range.
+/// Offsets and lengths are in f32 elements, not bytes.
+#[derive(Debug, Default)]
+pub struct ArenaPlanner {
+    /// Free ranges `(offset, len)`, sorted by offset, coalesced.
+    free: Vec<(usize, usize)>,
+    /// High-water mark: total arena length required so far.
+    top: usize,
+}
+
+impl ArenaPlanner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate `len` elements: best-fit over the free list, else extend
+    /// the arena top.
+    pub fn alloc(&mut self, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        let mut best: Option<usize> = None;
+        for (i, &(_, flen)) in self.free.iter().enumerate() {
+            if flen >= len && best.map_or(true, |b| self.free[b].1 > flen) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let (off, flen) = self.free[i];
+                if flen == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + len, flen - len);
+                }
+                off
+            }
+            None => {
+                let off = self.top;
+                self.top += len;
+                off
+            }
+        }
+    }
+
+    /// Return a range to the free list, coalescing with neighbours.
+    pub fn release(&mut self, off: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let idx = self.free.partition_point(|&(o, _)| o < off);
+        self.free.insert(idx, (off, len));
+        if idx + 1 < self.free.len()
+            && self.free[idx].0 + self.free[idx].1 == self.free[idx + 1].0
+        {
+            self.free[idx].1 += self.free[idx + 1].1;
+            self.free.remove(idx + 1);
+        }
+        if idx > 0 && self.free[idx - 1].0 + self.free[idx - 1].1 == self.free[idx].0 {
+            self.free[idx - 1].1 += self.free[idx].1;
+            self.free.remove(idx);
+        }
+    }
+
+    /// Total arena length required (elements).
+    pub fn high_water(&self) -> usize {
+        self.top
+    }
+
+    /// Number of disjoint free ranges (diagnostics / tests).
+    pub fn fragments(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_allocates_when_empty() {
+        let mut a = ArenaPlanner::new();
+        assert_eq!(a.alloc(10), 0);
+        assert_eq!(a.alloc(5), 10);
+        assert_eq!(a.high_water(), 15);
+    }
+
+    #[test]
+    fn released_range_is_reused() {
+        let mut a = ArenaPlanner::new();
+        let x = a.alloc(8);
+        let _y = a.alloc(8);
+        a.release(x, 8);
+        // Same-size request reuses the freed range instead of growing.
+        assert_eq!(a.alloc(8), x);
+        assert_eq!(a.high_water(), 16);
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_range() {
+        let mut a = ArenaPlanner::new();
+        // Separator allocations keep the freed holes from coalescing.
+        let big = a.alloc(100);
+        let _s1 = a.alloc(1);
+        let mid = a.alloc(10);
+        let _s2 = a.alloc(1);
+        let small = a.alloc(4);
+        a.release(big, 100);
+        a.release(mid, 10);
+        a.release(small, 4);
+        // A 4-element request must take the 4-element hole, not split 100.
+        assert_eq!(a.alloc(4), small);
+        // A 9-element request takes the 10-element hole.
+        assert_eq!(a.alloc(9), mid);
+        // A 50-element request splits the big hole.
+        assert_eq!(a.alloc(50), big);
+    }
+
+    #[test]
+    fn coalescing_merges_neighbours() {
+        let mut a = ArenaPlanner::new();
+        let x = a.alloc(4);
+        let y = a.alloc(4);
+        let z = a.alloc(4);
+        a.release(x, 4);
+        a.release(z, 4);
+        assert_eq!(a.fragments(), 2);
+        a.release(y, 4);
+        assert_eq!(a.fragments(), 1);
+        // The merged 12-element range satisfies a 12-element request.
+        assert_eq!(a.alloc(12), x);
+        assert_eq!(a.high_water(), 12);
+    }
+
+    #[test]
+    fn zero_len_is_noop() {
+        let mut a = ArenaPlanner::new();
+        assert_eq!(a.alloc(0), 0);
+        a.release(0, 0);
+        assert_eq!(a.high_water(), 0);
+        assert_eq!(a.fragments(), 0);
+    }
+
+    #[test]
+    fn memory_usage_sums() {
+        let m = MemoryUsage::new(1000, 200);
+        assert_eq!(m.peak_bytes, 1200);
+    }
+}

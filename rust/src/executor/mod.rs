@@ -1,14 +1,30 @@
-//! Graph executor — the "mobile device" inference engine.
+//! Graph executor — the "mobile device" inference engine, split into three
+//! explicit stages:
 //!
-//! [`Engine::new`] *compiles* an LR graph into a per-node execution plan:
-//! shape inference, kernel selection per conv (dense / CSR / column-compact
-//! / reordered, driven by [`ExecConfig`]), weight-format encoding and
-//! scratch allocation all happen once; [`Engine::run`] then only executes
-//! kernels. Intermediate buffers are reference-counted and dropped as soon
-//! as their last consumer has run (the memory planner).
+//! * [`Planner`] ([`plan`]) *compiles* an LR graph: shape inference, kernel
+//!   selection per conv (dense / CSR / column-compact / reordered, driven
+//!   by [`ExecConfig`]), weight-format encoding, **and static memory
+//!   planning** — liveness analysis assigns every intermediate an offset in
+//!   a shared arena, reusing ranges once fanout is exhausted and claiming
+//!   in-place execution for activation/norm/add/output steps whose input
+//!   has a single consumer ([`memory`]).
+//! * [`ExecutionPlan`] is the immutable product: steps + arena layout +
+//!   [`MemoryUsage`] accounting. Peak memory is a compile-time constant.
+//! * [`ExecContext`] ([`context`]) holds the per-worker arena and kernel
+//!   scratch; steady-state [`ExecContext::run_into`] performs zero heap
+//!   allocations for intermediates.
+//!
+//! [`Engine`] is the stable facade (compile + context pool) that the CLI,
+//! benches and examples use.
 
+pub mod context;
 pub mod engine;
+pub mod memory;
+pub mod plan;
 pub mod profile;
 
-pub use engine::{Engine, ExecConfig, SparseMode};
+pub use context::ExecContext;
+pub use engine::Engine;
+pub use memory::{MemoryUsage, PlanOptions};
+pub use plan::{ExecConfig, ExecutionPlan, Planner, SparseMode};
 pub use profile::{OpProfile, RunProfile};

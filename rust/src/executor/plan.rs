@@ -1,0 +1,510 @@
+//! The Planner and its product, the immutable [`ExecutionPlan`].
+//!
+//! Compilation is split from execution: [`Planner::plan`] runs shape
+//! inference, kernel selection, weight-format encoding **and static memory
+//! planning** (liveness analysis + arena layout, see
+//! [`super::memory`]) exactly once; the resulting [`ExecutionPlan`] is an
+//! immutable description that any number of per-worker
+//! [`super::ExecContext`]s can execute concurrently with zero per-frame
+//! heap allocations for intermediates.
+
+use crate::dsl::op::{Activation, Op, PadMode};
+use crate::dsl::{Graph, NodeId};
+use crate::executor::memory::{ArenaPlanner, MemoryUsage, PlanOptions};
+use crate::kernels::im2col::ConvGeom;
+use crate::pruning::scheme::Scheme;
+use crate::reorder::{ReorderPlan, Schedule};
+use crate::sparse::{ColumnCompact, Csr, GemmView};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+
+/// How pruned conv layers are stored + executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseMode {
+    /// Dense weights, dense GEMM — the unpruned baseline (also used for
+    /// pruned weights when simulating "pruning without compiler support"
+    /// is not desired).
+    Dense,
+    /// CSR storage + indexed SpMM — "pruning, no compiler optimization".
+    Csr,
+    /// The paper's compiler path: column-compact or reorder-grouped
+    /// kernels depending on each layer's pruning scheme.
+    Compact,
+}
+
+/// Executor configuration.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    pub sparse: SparseMode,
+    pub threads: usize,
+    /// Per-layer pruning schemes (needed for `Compact` to choose the
+    /// right format; optional otherwise).
+    pub schemes: Vec<(String, Scheme)>,
+}
+
+impl ExecConfig {
+    pub fn dense(threads: usize) -> Self {
+        ExecConfig { sparse: SparseMode::Dense, threads, schemes: vec![] }
+    }
+
+    pub fn csr(threads: usize) -> Self {
+        ExecConfig { sparse: SparseMode::Csr, threads, schemes: vec![] }
+    }
+
+    pub fn compact(threads: usize, schemes: Vec<(String, Scheme)>) -> Self {
+        ExecConfig { sparse: SparseMode::Compact, threads, schemes }
+    }
+}
+
+/// Pre-compiled execution strategy for one conv node.
+pub(crate) enum ConvExec {
+    Dense { w: Tensor },
+    Csr { csr: Csr },
+    Column { cc: ColumnCompact },
+    /// Kernel-granularity pattern reorder (pattern schemes).
+    Pattern { plan: crate::kernels::sparse_gemm::PatternPlan },
+    /// Filter-signature reorder (fallback for undeclared structure).
+    Reordered { plan: ReorderPlan, sched: Schedule },
+}
+
+/// Pre-compiled per-node step.
+pub(crate) enum Step {
+    Input { index: usize },
+    Conv {
+        exec: ConvExec,
+        geom: ConvGeom,
+        pad_mode: PadMode,
+        bias: Option<Vec<f32>>,
+        act: Activation,
+    },
+    DwConv { w: Tensor, bias: Option<Vec<f32>>, stride: usize, pad: usize, act: Activation },
+    Dense { w: Tensor, bias: Option<Vec<f32>>, out_f: usize, in_f: usize, act: Activation },
+    BatchNorm { gamma: Vec<f32>, beta: Vec<f32>, mean: Vec<f32>, var: Vec<f32>, eps: f32 },
+    InstanceNorm { gamma: Option<Vec<f32>>, beta: Option<Vec<f32>>, eps: f32 },
+    Act(Activation),
+    Add,
+    Concat,
+    Upsample { factor: usize },
+    PixelShuffle { factor: usize },
+    MaxPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    BroadcastSpatial,
+    Output,
+}
+
+/// One compiled step: kernel dispatch info + dataflow edges + whether its
+/// output slot aliases its first input (in-place execution).
+pub(crate) struct PlanStep {
+    pub name: String,
+    pub step: Step,
+    pub inputs: Vec<NodeId>,
+    pub inplace: bool,
+}
+
+/// Arena range of one value, in f32 elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct ValueSlot {
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Immutable compiled execution plan: steps + shapes + arena layout +
+/// memory accounting. Shared (by reference) across worker contexts.
+pub struct ExecutionPlan {
+    pub name: String,
+    /// Serialized weight bytes under the active storage format (reported
+    /// by the storage bench / perf model).
+    pub weight_bytes: usize,
+    pub(crate) steps: Vec<PlanStep>,
+    pub(crate) values: Vec<ValueSlot>,
+    pub(crate) shapes: Vec<Vec<usize>>,
+    pub(crate) input_ids: Vec<NodeId>,
+    pub(crate) output_ids: Vec<NodeId>,
+    pub(crate) threads: usize,
+    arena_len: usize,
+    scratch_len: usize,
+    memory: MemoryUsage,
+}
+
+impl ExecutionPlan {
+    pub fn input_shapes(&self) -> Vec<Vec<usize>> {
+        self.input_ids.iter().map(|&i| self.shapes[i].clone()).collect()
+    }
+
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        self.output_ids.iter().map(|&i| self.shapes[i].clone()).collect()
+    }
+
+    /// Number of compiled steps (== graph nodes).
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Compute threads each context uses inside kernels.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Shared activation-arena length in f32 elements.
+    pub fn arena_len(&self) -> usize {
+        self.arena_len
+    }
+
+    /// Worst-case im2col scratch length in f32 elements.
+    pub fn scratch_len(&self) -> usize {
+        self.scratch_len
+    }
+
+    /// Static memory accounting for this plan.
+    pub fn memory(&self) -> MemoryUsage {
+        self.memory
+    }
+
+    /// Number of steps executing in place (aliasing their input's slot).
+    pub fn inplace_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.inplace).count()
+    }
+
+    /// Layout invariant check (used by tests): a step's output range never
+    /// overlaps any of its live input ranges unless the step was planned
+    /// in-place, in which case it aliases input 0 exactly.
+    pub fn validate_layout(&self) -> Result<()> {
+        let overlap = |a: ValueSlot, b: ValueSlot| -> bool {
+            a.offset < b.offset + b.len && b.offset < a.offset + a.len
+        };
+        for (id, st) in self.steps.iter().enumerate() {
+            let out = self.values[id];
+            if st.inplace {
+                let v0 = self.values[st.inputs[0]];
+                if out.offset != v0.offset {
+                    anyhow::bail!("step '{}': in-place output does not alias input", st.name);
+                }
+            }
+            // Even for in-place steps, the *other* inputs must stay disjoint
+            // from the output range (input 0 is the sanctioned alias).
+            let skip = if st.inplace { 1 } else { 0 };
+            for (k, &inp) in st.inputs.iter().enumerate().skip(skip) {
+                if out.len > 0 && overlap(out, self.values[inp]) {
+                    anyhow::bail!(
+                        "step '{}': output range overlaps input {} (planner bug)",
+                        st.name,
+                        k
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Graph → [`ExecutionPlan`] compiler.
+pub struct Planner;
+
+impl Planner {
+    /// Compile with default memory planning (arena reuse + in-place).
+    pub fn plan(g: &Graph, cfg: &ExecConfig) -> Result<ExecutionPlan> {
+        Self::plan_with(g, cfg, PlanOptions::default())
+    }
+
+    /// Compile with explicit planner options.
+    pub fn plan_with(g: &Graph, cfg: &ExecConfig, opts: PlanOptions) -> Result<ExecutionPlan> {
+        g.validate()?;
+        let shapes = crate::dsl::shape::infer(g)?;
+        let mut steps = Vec::with_capacity(g.len());
+        let mut weight_bytes = 0usize;
+        let mut scratch_len = 0usize;
+        let mut input_count = 0usize;
+
+        for node in g.nodes().iter() {
+            let bias = g
+                .param(&format!("{}.bias", node.name))
+                .map(|t| t.data().to_vec());
+            let step = match &node.op {
+                Op::Input { .. } => {
+                    let s = Step::Input { index: input_count };
+                    input_count += 1;
+                    s
+                }
+                Op::Conv2d { in_c, kh, stride, pad, pad_mode, fused_act, .. } => {
+                    let in_shape = &shapes[node.inputs[0]];
+                    let geom =
+                        ConvGeom::new(*in_c, in_shape[2], in_shape[3], *kh, *stride, *pad);
+                    let w = g
+                        .param(&format!("{}.weight", node.name))
+                        .context("missing conv weight")?
+                        .clone();
+                    let scheme = cfg.schemes.iter().find(|(n, _)| n == &node.name).map(|(_, s)| s);
+                    let exec = match (cfg.sparse, scheme) {
+                        (SparseMode::Dense, _) => {
+                            weight_bytes += w.len() * 4;
+                            ConvExec::Dense { w }
+                        }
+                        (SparseMode::Csr, _) => {
+                            let csr = Csr::from_dense(&GemmView::from_oihw(&w));
+                            weight_bytes += csr.size_bytes();
+                            ConvExec::Csr { csr }
+                        }
+                        (SparseMode::Compact, Some(Scheme::Column { keep })) => {
+                            let cc =
+                                ColumnCompact::encode(&GemmView::from_oihw(&w), keep);
+                            weight_bytes += cc.size_bytes();
+                            ConvExec::Column { cc }
+                        }
+                        (SparseMode::Compact, Some(Scheme::Pattern { set, ids })) => {
+                            let s = w.shape().to_vec();
+                            let pc = crate::sparse::PatternCompact::encode(
+                                &w, set, ids, s[1], s[2], s[3],
+                            );
+                            weight_bytes += pc.size_bytes();
+                            let plan =
+                                crate::kernels::sparse_gemm::PatternPlan::build(&pc);
+                            ConvExec::Pattern { plan }
+                        }
+                        (SparseMode::Compact, None)
+                        | (SparseMode::Compact, Some(Scheme::Dense)) => {
+                            // No declared structure (unpruned stem / head):
+                            // plain dense GEMM beats a one-group reorder
+                            // and keeps the hot path allocation-free.
+                            weight_bytes += w.len() * 4;
+                            ConvExec::Dense { w }
+                        }
+                        (SparseMode::Compact, Some(_)) => {
+                            // Filter / channel schemes: the reorder plan
+                            // handles any structured zeros.
+                            let gv = GemmView::from_oihw(&w);
+                            let plan = ReorderPlan::build(&gv);
+                            let sched = Schedule::build(&plan, cfg.threads);
+                            weight_bytes += plan.nnz() * 4 + plan.group_count() * 8;
+                            ConvExec::Reordered { plan, sched }
+                        }
+                    };
+                    // Worst-case im2col panel for the context's scratch.
+                    let patch_rows = match &exec {
+                        ConvExec::Column { cc } => cc.kept(),
+                        _ => geom.cols(),
+                    };
+                    scratch_len = scratch_len.max(patch_rows * geom.out_px());
+                    Step::Conv { exec, geom, pad_mode: *pad_mode, bias, act: *fused_act }
+                }
+                Op::DepthwiseConv2d { stride, pad, fused_act, .. } => {
+                    let w = g
+                        .param(&format!("{}.weight", node.name))
+                        .context("missing dw weight")?
+                        .clone();
+                    weight_bytes += w.len() * 4;
+                    Step::DwConv { w, bias, stride: *stride, pad: *pad, act: *fused_act }
+                }
+                Op::Dense { out_f, in_f, fused_act } => {
+                    let w = g
+                        .param(&format!("{}.weight", node.name))
+                        .context("missing dense weight")?
+                        .clone();
+                    weight_bytes += w.len() * 4;
+                    Step::Dense { w, bias, out_f: *out_f, in_f: *in_f, act: *fused_act }
+                }
+                Op::BatchNorm { eps, .. } => Step::BatchNorm {
+                    gamma: g.param(&format!("{}.gamma", node.name)).unwrap().data().to_vec(),
+                    beta: g.param(&format!("{}.beta", node.name)).unwrap().data().to_vec(),
+                    mean: g.param(&format!("{}.mean", node.name)).unwrap().data().to_vec(),
+                    var: g.param(&format!("{}.var", node.name)).unwrap().data().to_vec(),
+                    eps: *eps,
+                },
+                Op::InstanceNorm { eps, .. } => Step::InstanceNorm {
+                    gamma: g
+                        .param(&format!("{}.gamma", node.name))
+                        .map(|t| t.data().to_vec()),
+                    beta: g
+                        .param(&format!("{}.beta", node.name))
+                        .map(|t| t.data().to_vec()),
+                    eps: *eps,
+                },
+                Op::Act(a) => Step::Act(*a),
+                Op::Add => Step::Add,
+                Op::Concat => Step::Concat,
+                Op::UpsampleNearest { factor } => Step::Upsample { factor: *factor },
+                Op::PixelShuffle { factor } => Step::PixelShuffle { factor: *factor },
+                Op::MaxPool { k, stride } => Step::MaxPool { k: *k, stride: *stride },
+                Op::GlobalAvgPool => Step::GlobalAvgPool,
+                Op::BroadcastSpatial => Step::BroadcastSpatial,
+                Op::Output => Step::Output,
+            };
+            steps.push(PlanStep {
+                name: node.name.clone(),
+                step,
+                inputs: node.inputs.clone(),
+                inplace: false,
+            });
+        }
+
+        // ---- static memory planning: liveness + arena layout --------------
+        let n = steps.len();
+        let fanout = g.fanout();
+        let elems: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
+        let mut arena = ArenaPlanner::new();
+        let mut values = vec![ValueSlot { offset: 0, len: 0 }; n];
+        // Does this value currently own its arena range? Ownership moves to
+        // the consumer on an in-place claim and lapses on release.
+        let mut owns = vec![false; n];
+        let mut remaining = fanout.clone();
+
+        for id in 0..n {
+            let len = elems[id];
+            let inplace = opts.inplace && {
+                let st = &steps[id];
+                let candidate = matches!(
+                    st.step,
+                    Step::Act(_)
+                        | Step::BatchNorm { .. }
+                        | Step::InstanceNorm { .. }
+                        | Step::Add
+                        | Step::Output
+                );
+                candidate && {
+                    let v = st.inputs[0];
+                    fanout[v] == 1 && elems[v] == len && owns[v]
+                }
+            };
+            if inplace {
+                let v = steps[id].inputs[0];
+                values[id] = ValueSlot { offset: values[v].offset, len };
+                owns[v] = false;
+                owns[id] = true;
+                steps[id].inplace = true;
+            } else {
+                values[id] = ValueSlot { offset: arena.alloc(len), len };
+                owns[id] = true;
+            }
+            // Release inputs whose consumers are all done. This runs after
+            // the output allocation, so a step's output can never overlap
+            // its own (still live) inputs.
+            if opts.reuse {
+                for k in 0..steps[id].inputs.len() {
+                    let v = steps[id].inputs[k];
+                    remaining[v] -= 1;
+                    if remaining[v] == 0 && owns[v] {
+                        arena.release(values[v].offset, values[v].len);
+                        owns[v] = false;
+                    }
+                }
+            }
+        }
+
+        let arena_len = arena.high_water();
+        let memory = MemoryUsage::new(weight_bytes, (arena_len + scratch_len) * 4);
+
+        let plan = ExecutionPlan {
+            name: g.name.clone(),
+            weight_bytes,
+            steps,
+            values,
+            shapes,
+            input_ids: g.inputs(),
+            output_ids: g.outputs(),
+            threads: cfg.threads.max(1),
+            arena_len,
+            scratch_len,
+            memory,
+        };
+        debug_assert!(plan.validate_layout().is_ok());
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::builders::build_style;
+    use crate::util::rng::Rng;
+
+    fn residual_graph(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new("res");
+        let x = g.add("x", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        let c1 = g.add(
+            "c1",
+            Op::Conv2d {
+                out_c: 4,
+                in_c: 4,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Relu,
+            },
+            &[x],
+        );
+        g.set_param("c1.weight", Tensor::randn(&[4, 4, 3, 3], rng));
+        let r = g.add("r", Op::Act(Activation::Relu), &[c1]);
+        let s = g.add("s", Op::Add, &[r, x]);
+        g.add("out", Op::Output, &[s]);
+        g
+    }
+
+    #[test]
+    fn layout_is_consistent_and_reuses_memory() {
+        let mut rng = Rng::new(7);
+        let g = residual_graph(&mut rng);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        plan.validate_layout().unwrap();
+        let no_reuse = Planner::plan_with(&g, &ExecConfig::dense(1), PlanOptions::no_reuse())
+            .unwrap();
+        no_reuse.validate_layout().unwrap();
+        // Reuse + aliasing must need strictly less arena than one slot per
+        // value.
+        assert!(plan.arena_len() < no_reuse.arena_len());
+        // `r` (act, sole consumer of c1) and `out` run in place.
+        assert!(plan.inplace_steps() >= 2, "inplace={}", plan.inplace_steps());
+    }
+
+    #[test]
+    fn style_plan_reuses_arena_heavily() {
+        let g = build_style(32, 0.25, 3);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        plan.validate_layout().unwrap();
+        let naive: usize = plan.shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        assert!(
+            plan.arena_len() < naive / 2,
+            "arena {} should be far below naive {}",
+            plan.arena_len(),
+            naive
+        );
+        let m = plan.memory();
+        assert_eq!(m.peak_bytes, m.dedicated_bytes + m.shared_bytes);
+        assert!(m.shared_bytes >= plan.arena_len() * 4);
+    }
+
+    #[test]
+    fn output_step_does_not_copy() {
+        // The Output step aliases its producer when it is the sole
+        // consumer — the historical `get(0).clone()` copy is gone.
+        let mut rng = Rng::new(8);
+        let g = residual_graph(&mut rng);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        let out_step = plan.steps.last().unwrap();
+        assert!(matches!(out_step.step, Step::Output));
+        assert!(out_step.inplace, "output should alias its producer");
+    }
+
+    #[test]
+    fn fanout_blocks_inplace() {
+        let mut g = Graph::new("fan");
+        let x = g.add("x", Op::Input { shape: vec![1, 2, 4, 4] }, &[]);
+        // x feeds both branches: neither act may claim it in place.
+        let a = g.add("a", Op::Act(Activation::Relu), &[x]);
+        let b = g.add("b", Op::Act(Activation::Tanh), &[x]);
+        let s = g.add("s", Op::Add, &[a, b]);
+        g.add("out", Op::Output, &[s]);
+        let _ = (a, b, s);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        plan.validate_layout().unwrap();
+        assert!(!plan.steps[1].inplace);
+        assert!(!plan.steps[2].inplace);
+        // The add consumes `a` (fanout 1) in place; output aliases the add.
+        assert!(plan.steps[3].inplace);
+        assert!(plan.steps[4].inplace);
+    }
+}

@@ -1,9 +1,9 @@
 //! Image I/O + quality metrics for the demo applications (Figure 1).
 //!
-//! PNG writing uses flate2 (zlib); PPM is supported for zero-dependency
-//! round trips. Pixels are RGB8; conversion to/from NCHW f32 tensors in
-//! [0, 1] is provided. [`psnr`] and [`ssim`] score the super-resolution /
-//! coloring outputs.
+//! PNG writing uses a self-contained stored-deflate zlib stream (see
+//! [`png`]); PPM is supported for zero-dependency round trips. Pixels are
+//! RGB8; conversion to/from NCHW f32 tensors in [0, 1] is provided.
+//! [`psnr`] and [`ssim`] score the super-resolution / coloring outputs.
 
 pub mod png;
 pub mod synth;
@@ -132,7 +132,7 @@ impl Image {
         Ok(Image { width, height, pixels: pixels[..width * height * 3].to_vec() })
     }
 
-    /// Save as PNG (flate2-compressed).
+    /// Save as PNG (stored-deflate zlib stream).
     pub fn save_png(&self, path: &Path) -> Result<()> {
         png::write_png(path, self)
     }

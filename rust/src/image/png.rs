@@ -1,20 +1,68 @@
-//! Minimal PNG encoder (8-bit RGB, zlib via flate2, filter type 0).
+//! Minimal PNG encoder (8-bit RGB, filter type 0) with a self-contained
+//! zlib "stored" stream — no flate2/crc32fast in the offline toolchain.
+//! Stored (uncompressed) deflate blocks are a perfectly valid zlib stream;
+//! viewers decode it like any other PNG, it is just not size-optimal.
 
 use crate::image::Image;
 use anyhow::{Context, Result};
-use flate2::write::ZlibEncoder;
-use flate2::Compression;
-use std::io::Write;
 use std::path::Path;
+
+/// Bitwise CRC-32 (IEEE 802.3, reflected). `crc` carries running state
+/// initialised to `0xFFFF_FFFF`; finalize by XOR with `0xFFFF_FFFF`.
+fn crc32_update(mut crc: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    crc
+}
+
+/// Adler-32 checksum (zlib trailer).
+fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let (mut a, mut b) = (1u32, 0u32);
+    for chunk in data.chunks(4096) {
+        for &x in chunk {
+            a += x as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+/// Wrap raw bytes in a zlib stream of stored (BTYPE=00) deflate blocks.
+fn zlib_stored(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(raw.len() + raw.len() / 65535 * 5 + 16);
+    out.push(0x78); // CMF: deflate, 32K window
+    out.push(0x01); // FLG: check bits, no dict ((0x7801 % 31) == 0)
+    let mut chunks = raw.chunks(65535).peekable();
+    if raw.is_empty() {
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xFF, 0xFF]);
+    }
+    while let Some(chunk) = chunks.next() {
+        let last = chunks.peek().is_none();
+        out.push(u8::from(last)); // BFINAL bit, BTYPE=00 (stored)
+        let len = chunk.len() as u16;
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out.extend_from_slice(&adler32(raw).to_be_bytes());
+    out
+}
 
 fn chunk(out: &mut Vec<u8>, kind: &[u8; 4], payload: &[u8]) {
     out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
     out.extend_from_slice(kind);
     out.extend_from_slice(payload);
-    let mut hasher = crc32fast::Hasher::new();
-    hasher.update(kind);
-    hasher.update(payload);
-    out.extend_from_slice(&hasher.finalize().to_be_bytes());
+    let mut crc = crc32_update(0xFFFF_FFFF, kind);
+    crc = crc32_update(crc, payload);
+    out.extend_from_slice(&(crc ^ 0xFFFF_FFFF).to_be_bytes());
 }
 
 /// Write an RGB8 PNG.
@@ -36,10 +84,7 @@ pub fn write_png(path: &Path, img: &Image) -> Result<()> {
         raw.push(0u8);
         raw.extend_from_slice(&img.pixels[y * stride..(y + 1) * stride]);
     }
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(&raw)?;
-    let compressed = enc.finish()?;
-    chunk(&mut out, b"IDAT", &compressed);
+    chunk(&mut out, b"IDAT", &zlib_stored(&raw));
     chunk(&mut out, b"IEND", &[]);
 
     std::fs::write(path, out).with_context(|| format!("write {}", path.display()))
@@ -64,5 +109,37 @@ mod tests {
         assert_eq!(&bytes[12..16], b"IHDR");
         assert!(bytes.windows(4).any(|w| w == b"IDAT"));
         assert!(bytes.ends_with(&[0xAE, 0x42, 0x60, 0x82])); // IEND crc
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        let crc = |d: &[u8]| crc32_update(0xFFFF_FFFF, d) ^ 0xFFFF_FFFF;
+        assert_eq!(crc(b""), 0);
+        assert_eq!(crc(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc(b"IEND"), 0xAE42_6082);
+    }
+
+    #[test]
+    fn adler32_known_vectors() {
+        assert_eq!(adler32(b""), 1);
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+    }
+
+    #[test]
+    fn zlib_stored_roundtrips_structure() {
+        // One block for small input; header + BFINAL/LEN/NLEN + data + adler.
+        let raw = vec![7u8; 10];
+        let z = zlib_stored(&raw);
+        assert_eq!(&z[..2], &[0x78, 0x01]);
+        assert_eq!(z[2], 1); // final stored block
+        assert_eq!(u16::from_le_bytes([z[3], z[4]]), 10);
+        assert_eq!(u16::from_le_bytes([z[5], z[6]]), !10u16);
+        assert_eq!(&z[7..17], raw.as_slice());
+        assert_eq!(z.len(), 7 + 10 + 4);
+        // Multi-block for >64KiB inputs, only the last flagged final.
+        let big = vec![1u8; 70_000];
+        let zb = zlib_stored(&big);
+        assert_eq!(zb[2], 0);
+        assert_eq!(u16::from_le_bytes([zb[3], zb[4]]), 65535);
     }
 }

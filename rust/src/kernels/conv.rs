@@ -12,7 +12,11 @@
 //! * [`dwconv2d`] — direct depthwise convolution.
 //!
 //! All drivers fuse per-channel bias + activation into the output pass when
-//! requested (the DSL fusion pass sets `fused_act` on the conv LR).
+//! requested (the DSL fusion pass sets `fused_act` on the conv LR), and all
+//! of them **write into a caller-provided output slice** — the execution
+//! planner owns every intermediate buffer, so steady-state inference does
+//! not allocate. Inputs are raw NCHW slices (`x`, batch `n`) with geometry
+//! carried by [`ConvGeom`].
 
 use crate::dsl::op::{Activation, PadMode};
 use crate::kernels::elementwise::bias_act_inplace;
@@ -23,7 +27,9 @@ use crate::reorder::{ReorderPlan, Schedule};
 use crate::sparse::{ColumnCompact, Csr};
 use crate::tensor::Tensor;
 
-/// Scratch buffers reused across conv calls (memory-planner owned).
+/// Scratch buffers reused across conv calls (owned by the exec context's
+/// memory plan; pre-sized via [`ConvScratch::ensure`], so a correctly sized
+/// scratch never reallocates at run time).
 #[derive(Debug, Default)]
 pub struct ConvScratch {
     patch: Vec<f32>,
@@ -34,17 +40,29 @@ impl ConvScratch {
         Self::default()
     }
 
-    fn patch_buf(&mut self, len: usize) -> &mut [f32] {
+    /// Pre-size the patch buffer (exec contexts call this once at build
+    /// time with the plan's worst-case im2col size).
+    pub fn ensure(&mut self, len: usize) {
         if self.patch.len() < len {
             self.patch.resize(len, 0.0);
         }
+    }
+
+    /// Current patch capacity in elements (used by the arena-reuse tests).
+    pub fn capacity(&self) -> usize {
+        self.patch.len()
+    }
+
+    fn patch_buf(&mut self, len: usize) -> &mut [f32] {
+        self.ensure(len);
         &mut self.patch[..len]
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn conv_common(
-    x: &Tensor,
+    x: &[f32],
+    n: usize,
     out_c: usize,
     geom: &ConvGeom,
     pad_mode: PadMode,
@@ -54,59 +72,65 @@ fn conv_common(
     mut gemm_fn: impl FnMut(&[f32], &mut [f32]),
     build_patch: impl Fn(&[f32], &mut [f32]),
     patch_rows: usize,
-) -> Tensor {
-    let n = x.dim(0);
+    out: &mut [f32],
+) {
     let chw = geom.in_c * geom.in_h * geom.in_w;
     let opx = geom.out_px();
-    let mut out = Tensor::zeros(&[n, out_c, geom.out_h, geom.out_w]);
+    debug_assert_eq!(x.len(), n * chw);
+    debug_assert_eq!(out.len(), n * out_c * opx);
+    // The GEMM kernels accumulate into C; the output slice may hold stale
+    // arena contents.
+    out.fill(0.0);
     let patch_len = patch_rows * opx;
     for s in 0..n {
-        let xin = &x.data()[s * chw..(s + 1) * chw];
+        let xin = &x[s * chw..(s + 1) * chw];
         let patch = scratch.patch_buf(patch_len);
         build_patch(xin, patch);
-        let cdst = &mut out.data_mut()[s * out_c * opx..(s + 1) * out_c * opx];
+        let cdst = &mut out[s * out_c * opx..(s + 1) * out_c * opx];
         gemm_fn(&scratch.patch[..patch_len], cdst);
     }
-    bias_act_inplace(out.data_mut(), bias, out_c, opx, act);
+    bias_act_inplace(out, bias, out_c, opx, act);
     let _ = pad_mode;
-    out
 }
 
 /// Unpruned baseline: full im2col + dense multi-threaded GEMM.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_dense(
-    x: &Tensor,
+    x: &[f32],
+    n: usize,
     w: &Tensor, // OIHW
-    bias: Option<&[f32]>,
-    stride: usize,
-    pad: usize,
+    geom: &ConvGeom,
     pad_mode: PadMode,
+    bias: Option<&[f32]>,
     act: Activation,
     threads: usize,
     scratch: &mut ConvScratch,
-) -> Tensor {
-    let (out_c, in_c, kh, _kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
-    let geom = ConvGeom::new(in_c, x.dim(2), x.dim(3), kh, stride, pad);
+    out: &mut [f32],
+) {
+    let out_c = w.dim(0);
     let cols = geom.cols();
     let opx = geom.out_px();
     conv_common(
         x,
+        n,
         out_c,
-        &geom,
+        geom,
         pad_mode,
         bias,
         act,
         scratch,
         |patch, cdst| gemm::gemm(out_c, cols, opx, w.data(), patch, cdst, threads),
-        |xin, patch| im2col(xin, &geom, pad_mode, patch),
+        |xin, patch| im2col(xin, geom, pad_mode, patch),
         cols,
+        out,
     )
 }
 
 /// Pruned, no compiler: CSR SpMM over the full patch matrix.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_csr(
-    x: &Tensor,
+    x: &[f32],
+    n: usize,
     csr: &Csr,
     geom: &ConvGeom,
     pad_mode: PadMode,
@@ -114,11 +138,13 @@ pub fn conv2d_csr(
     act: Activation,
     threads: usize,
     scratch: &mut ConvScratch,
-) -> Tensor {
+    out: &mut [f32],
+) {
     let out_c = csr.rows;
     let opx = geom.out_px();
     conv_common(
         x,
+        n,
         out_c,
         geom,
         pad_mode,
@@ -128,13 +154,15 @@ pub fn conv2d_csr(
         |patch, cdst| sparse_gemm::spmm_csr(csr, patch, opx, cdst, threads),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
+        out,
     )
 }
 
 /// Column pruning + compiler: build only kept patch rows, dense reduced GEMM.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_column_compact(
-    x: &Tensor,
+    x: &[f32],
+    n: usize,
     cc: &ColumnCompact,
     geom: &ConvGeom,
     pad_mode: PadMode,
@@ -142,12 +170,14 @@ pub fn conv2d_column_compact(
     act: Activation,
     threads: usize,
     scratch: &mut ConvScratch,
-) -> Tensor {
+    out: &mut [f32],
+) {
     let out_c = cc.rows;
     let kept = cc.kept();
     let opx = geom.out_px();
     conv_common(
         x,
+        n,
         out_c,
         geom,
         pad_mode,
@@ -159,13 +189,15 @@ pub fn conv2d_column_compact(
         },
         |xin, patch| im2col_pruned(xin, geom, pad_mode, &cc.keep, patch),
         kept,
+        out,
     )
 }
 
 /// Pattern pruning + compiler: full patch matrix, reordered group GEMM.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_reordered(
-    x: &Tensor,
+    x: &[f32],
+    n: usize,
     plan: &ReorderPlan,
     sched: &Schedule,
     geom: &ConvGeom,
@@ -173,11 +205,13 @@ pub fn conv2d_reordered(
     bias: Option<&[f32]>,
     act: Activation,
     scratch: &mut ConvScratch,
-) -> Tensor {
+    out: &mut [f32],
+) {
     let out_c = plan.rows;
     let opx = geom.out_px();
     conv_common(
         x,
+        n,
         out_c,
         geom,
         pad_mode,
@@ -187,6 +221,7 @@ pub fn conv2d_reordered(
         |patch, cdst| sparse_gemm::spmm_reordered(plan, sched, patch, opx, cdst),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
+        out,
     )
 }
 
@@ -194,7 +229,8 @@ pub fn conv2d_reordered(
 /// matrix, (channel, pattern)-grouped fused passes.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_pattern(
-    x: &Tensor,
+    x: &[f32],
+    n: usize,
     plan: &sparse_gemm::PatternPlan,
     geom: &ConvGeom,
     pad_mode: PadMode,
@@ -202,11 +238,13 @@ pub fn conv2d_pattern(
     act: Activation,
     threads: usize,
     scratch: &mut ConvScratch,
-) -> Tensor {
+    out: &mut [f32],
+) {
     let out_c = plan.out_c;
     let opx = geom.out_px();
     conv_common(
         x,
+        n,
         out_c,
         geom,
         pad_mode,
@@ -216,31 +254,38 @@ pub fn conv2d_pattern(
         |patch, cdst| sparse_gemm::spmm_pattern(plan, patch, opx, cdst, threads),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
+        out,
     )
 }
 
 /// Direct depthwise conv (no im2col — each channel convolves independently).
+/// `x` is `n×c×h×win` NCHW data; `out` must be `n×c×oh×ow`.
 #[allow(clippy::too_many_arguments)]
 pub fn dwconv2d(
-    x: &Tensor,
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    win: usize,
     w: &Tensor, // [C,1,kh,kw]
     bias: Option<&[f32]>,
     stride: usize,
     pad: usize,
     act: Activation,
     threads: usize,
-) -> Tensor {
-    let (n, c, h, win) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    out: &mut [f32],
+) {
     let k = w.dim(2);
     let (oh, ow) = crate::dsl::shape::conv_out_hw(h, win, k, stride, pad);
-    let mut out = Tensor::zeros(&[n, c, oh, ow]);
-    let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+    debug_assert_eq!(x.len(), n * c * h * win);
+    debug_assert_eq!(out.len(), n * c * oh * ow);
+    let out_ptr = SendPtr(out.as_mut_ptr());
     let total = n * c;
     crate::util::threadpool::parallel_chunks(total, threads, |cs, ce, _| {
         let out_all = unsafe { std::slice::from_raw_parts_mut(out_ptr.get(), n * c * oh * ow) };
         for sc in cs..ce {
             let (s, ch) = (sc / c, sc % c);
-            let plane = &x.data()[(s * c + ch) * h * win..(s * c + ch + 1) * h * win];
+            let plane = &x[(s * c + ch) * h * win..(s * c + ch + 1) * h * win];
             let ker = &w.data()[ch * k * k..(ch + 1) * k * k];
             let obase = (s * c + ch) * oh * ow;
             for oy in 0..oh {
@@ -264,8 +309,7 @@ pub fn dwconv2d(
             }
         }
     });
-    bias_act_inplace(out.data_mut(), bias, c, oh * ow, act);
-    out
+    bias_act_inplace(out, bias, c, oh * ow, act);
 }
 
 #[derive(Clone, Copy)]
@@ -364,6 +408,28 @@ mod tests {
         Tensor::randn(&[n, c, h, w], rng)
     }
 
+    /// Slice-API helper: run `conv2d_dense` into a fresh tensor.
+    #[allow(clippy::too_many_arguments)]
+    fn dense_alloc(
+        x: &Tensor,
+        w: &Tensor,
+        bias: Option<&[f32]>,
+        stride: usize,
+        pad: usize,
+        pm: PadMode,
+        act: Activation,
+        threads: usize,
+        scratch: &mut ConvScratch,
+    ) -> Tensor {
+        let geom = ConvGeom::new(w.dim(1), x.dim(2), x.dim(3), w.dim(2), stride, pad);
+        let n = x.dim(0);
+        let mut out = Tensor::zeros(&[n, w.dim(0), geom.out_h, geom.out_w]);
+        conv2d_dense(
+            x.data(), n, w, &geom, pm, bias, act, threads, scratch, out.data_mut(),
+        );
+        out
+    }
+
     #[test]
     fn dense_matches_ref() {
         check_prop("conv2d_dense == ref", 8, |rng| {
@@ -378,7 +444,7 @@ mod tests {
             let wt = Tensor::randn(&[oc, ic, k, k], rng);
             let bias: Vec<f32> = (0..oc).map(|_| rng.normal()).collect();
             let mut scratch = ConvScratch::new();
-            let got = conv2d_dense(
+            let got = dense_alloc(
                 &x, &wt, Some(&bias), stride, pad, pm, Activation::Relu,
                 rng.range(1, 4), &mut scratch,
             );
@@ -404,16 +470,19 @@ mod tests {
 
             let gv = GemmView::from_oihw(&wp);
             let csr = Csr::from_dense(&gv);
-            let got_csr = conv2d_csr(
-                &x, &csr, &geom, PadMode::Zeros, None, Activation::Identity, 2, &mut scratch,
+            let mut got_csr = Tensor::zeros(&[1, oc, 8, 8]);
+            conv2d_csr(
+                x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity, 2,
+                &mut scratch, got_csr.data_mut(),
             );
             assert!(got_csr.max_abs_diff(&want) < 1e-3);
 
             let plan = ReorderPlan::build(&gv);
             let sched = Schedule::build(&plan, 2);
-            let got_ro = conv2d_reordered(
-                &x, &plan, &sched, &geom, PadMode::Zeros, None, Activation::Identity,
-                &mut scratch,
+            let mut got_ro = Tensor::zeros(&[1, oc, 8, 8]);
+            conv2d_reordered(
+                x.data(), 1, &plan, &sched, &geom, PadMode::Zeros, None,
+                Activation::Identity, &mut scratch, got_ro.data_mut(),
             );
             assert!(got_ro.max_abs_diff(&want) < 1e-3);
         });
@@ -436,8 +505,10 @@ mod tests {
         let geom = ConvGeom::new(ic, 10, 10, 3, 1, 1);
         let bias: Vec<f32> = (0..oc).map(|_| rng.normal()).collect();
         let mut scratch = ConvScratch::new();
-        let got = conv2d_column_compact(
-            &x, &cc, &geom, PadMode::Reflect, Some(&bias), Activation::Relu, 2, &mut scratch,
+        let mut got = Tensor::zeros(&[2, oc, 10, 10]);
+        conv2d_column_compact(
+            x.data(), 2, &cc, &geom, PadMode::Reflect, Some(&bias), Activation::Relu, 2,
+            &mut scratch, got.data_mut(),
         );
         let want = conv2d_ref(&x, &wp, Some(&bias), 1, 1, PadMode::Reflect, Activation::Relu);
         assert!(got.max_abs_diff(&want) < 1e-3, "err={}", got.max_abs_diff(&want));
@@ -449,7 +520,10 @@ mod tests {
         let c = 6;
         let x = rand_input(&mut rng, 1, c, 9, 9);
         let w = Tensor::randn(&[c, 1, 3, 3], &mut rng);
-        let got = dwconv2d(&x, &w, None, 1, 1, Activation::Identity, 2);
+        let mut got = Tensor::zeros(&[1, c, 9, 9]);
+        dwconv2d(
+            x.data(), 1, c, 9, 9, &w, None, 1, 1, Activation::Identity, 2, got.data_mut(),
+        );
         // Reference: per-channel 1-in-1-out conv.
         for ch in 0..c {
             let xc = Tensor::from_vec(
@@ -473,17 +547,39 @@ mod tests {
         let mut scratch = ConvScratch::new();
         let x1 = rand_input(&mut rng, 1, 3, 16, 16);
         let w1 = Tensor::randn(&[8, 3, 3, 3], &mut rng);
-        let big = conv2d_dense(
+        let big = dense_alloc(
             &x1, &w1, None, 1, 1, PadMode::Zeros, Activation::Identity, 1, &mut scratch,
         );
         let x2 = rand_input(&mut rng, 1, 2, 6, 6);
         let w2 = Tensor::randn(&[4, 2, 3, 3], &mut rng);
-        let small = conv2d_dense(
+        let small = dense_alloc(
             &x2, &w2, None, 1, 1, PadMode::Zeros, Activation::Identity, 1, &mut scratch,
         );
         let want_small =
             conv2d_ref(&x2, &w2, None, 1, 1, PadMode::Zeros, Activation::Identity);
         assert!(small.max_abs_diff(&want_small) < 1e-4);
         assert_eq!(big.shape(), &[1, 8, 16, 16]);
+    }
+
+    #[test]
+    fn output_slice_is_cleared_before_accumulate() {
+        // Stale arena contents in `out` must not leak into results.
+        let mut rng = Rng::new(94);
+        let x = rand_input(&mut rng, 1, 2, 6, 6);
+        let w = Tensor::randn(&[3, 2, 3, 3], &mut rng);
+        let geom = ConvGeom::new(2, 6, 6, 3, 1, 1);
+        let mut scratch = ConvScratch::new();
+        let mut dirty = vec![42.0f32; 3 * 36];
+        conv2d_dense(
+            x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity, 1,
+            &mut scratch, &mut dirty,
+        );
+        let want = conv2d_ref(&x, &w, None, 1, 1, PadMode::Zeros, Activation::Identity);
+        let err = dirty
+            .iter()
+            .zip(want.data().iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-4, "stale output leaked: err={}", err);
     }
 }

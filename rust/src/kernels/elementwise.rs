@@ -53,9 +53,31 @@ pub fn bias_act_inplace(x: &mut [f32], bias: Option<&[f32]>, channels: usize, px
     }
 }
 
+/// out = a + b elementwise into a caller-provided slice (all same length,
+/// `out` disjoint from both inputs — the planner guarantees this).
+pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// dst += b elementwise — the in-place form the planner uses when the
+/// output slot aliases the first input.
+pub fn add_assign(dst: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(dst.len(), b.len());
+    for (d, &v) in dst.iter_mut().zip(b.iter()) {
+        *d += v;
+    }
+}
+
 /// y = a + b elementwise (shapes must match), returning a new tensor.
 pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
-    a.zip(b, |x, y| x + y)
+    assert_eq!(a.shape(), b.shape(), "add shape mismatch");
+    let mut out = Tensor::zeros(a.shape());
+    add_into(out.data_mut(), a.data(), b.data());
+    out
 }
 
 /// Inference-mode batch norm, in place, optionally folded with activation:
@@ -112,6 +134,29 @@ pub fn instancenorm_inplace(
     }
 }
 
+/// Channel concat of two NCHW slices along C, into a caller-provided slice.
+pub fn concat_channels_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    ca: usize,
+    cb: usize,
+    px: usize,
+) {
+    debug_assert_eq!(a.len(), n * ca * px);
+    debug_assert_eq!(b.len(), n * cb * px);
+    debug_assert_eq!(out.len(), n * (ca + cb) * px);
+    for s in 0..n {
+        let dst_base = s * (ca + cb) * px;
+        let a_base = s * ca * px;
+        let b_base = s * cb * px;
+        out[dst_base..dst_base + ca * px].copy_from_slice(&a[a_base..a_base + ca * px]);
+        out[dst_base + ca * px..dst_base + (ca + cb) * px]
+            .copy_from_slice(&b[b_base..b_base + cb * px]);
+    }
+}
+
 /// Channel concat of two NCHW tensors along C.
 pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, ca, h, w) = (a.dim(0), a.dim(1), a.dim(2), a.dim(3));
@@ -119,17 +164,24 @@ pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(b.dim(0), n);
     assert_eq!((b.dim(2), b.dim(3)), (h, w));
     let mut out = Tensor::zeros(&[n, ca + cb, h, w]);
-    let px = h * w;
-    for s in 0..n {
-        let dst_base = s * (ca + cb) * px;
-        let a_base = s * ca * px;
-        let b_base = s * cb * px;
-        out.data_mut()[dst_base..dst_base + ca * px]
-            .copy_from_slice(&a.data()[a_base..a_base + ca * px]);
-        out.data_mut()[dst_base + ca * px..dst_base + (ca + cb) * px]
-            .copy_from_slice(&b.data()[b_base..b_base + cb * px]);
-    }
+    concat_channels_into(out.data_mut(), a.data(), b.data(), n, ca, cb, h * w);
     out
+}
+
+/// Broadcast a per-channel vector (`g`, `n×c` values) over `px` spatial
+/// positions per channel, into a caller-provided slice.
+pub fn broadcast_spatial_into(out: &mut [f32], g: &[f32], n: usize, c: usize, px: usize) {
+    debug_assert!(g.len() >= n * c);
+    debug_assert_eq!(out.len(), n * c * px);
+    for s in 0..n {
+        for ch in 0..c {
+            let v = g[s * c + ch];
+            let base = (s * c + ch) * px;
+            for o in &mut out[base..base + px] {
+                *o = v;
+            }
+        }
+    }
 }
 
 /// Broadcast a [N, C, 1, 1] (or [N, C]) tensor over the spatial dims of a
@@ -139,16 +191,7 @@ pub fn broadcast_spatial(g: &Tensor, reference: &Tensor) -> Tensor {
     let c = g.dim(1);
     let (h, w) = (reference.dim(2), reference.dim(3));
     let mut out = Tensor::zeros(&[n, c, h, w]);
-    let px = h * w;
-    for s in 0..n {
-        for ch in 0..c {
-            let v = g.data()[s * c + ch];
-            let base = (s * c + ch) * px;
-            for o in &mut out.data_mut()[base..base + px] {
-                *o = v;
-            }
-        }
-    }
+    broadcast_spatial_into(out.data_mut(), g.data(), n, c, h * w);
     out
 }
 
@@ -199,6 +242,17 @@ mod tests {
             assert!(mean.abs() < 1e-5);
             assert!((var - 1.0).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn add_into_and_assign_agree() {
+        let a = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[4], vec![10.0, 20.0, 30.0, 40.0]);
+        let sum = add(&a, &b);
+        assert_eq!(sum.data(), &[11.0, 22.0, 33.0, 44.0]);
+        let mut dst = a.data().to_vec();
+        add_assign(&mut dst, b.data());
+        assert_eq!(dst.as_slice(), sum.data());
     }
 
     #[test]

@@ -185,6 +185,43 @@ impl SendPtr {
     }
 }
 
+/// Fully-connected forward pass into a caller-provided output slice:
+/// `out[b, o] = act(W[o, :] · x[b, :] + bias[o])` with `W` row-major
+/// `[out_f, in_f]`. Output rows are partitioned across threads.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_forward(
+    w: &[f32],
+    bias: Option<&[f32]>,
+    act: crate::dsl::op::Activation,
+    x: &[f32],
+    batch: usize,
+    in_f: usize,
+    out_f: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), out_f * in_f);
+    debug_assert_eq!(x.len(), batch * in_f);
+    debug_assert_eq!(out.len(), batch * out_f);
+    for b in 0..batch {
+        let xb = &x[b * in_f..(b + 1) * in_f];
+        let ob_ptr = SendPtr(out[b * out_f..(b + 1) * out_f].as_mut_ptr());
+        parallel_chunks(out_f, threads, |os, oe, _| {
+            // SAFETY: disjoint output rows per chunk.
+            let ob = unsafe { std::slice::from_raw_parts_mut(ob_ptr.get(), out_f) };
+            for o in os..oe {
+                let wrow = &w[o * in_f..(o + 1) * in_f];
+                let mut acc = 0.0f32;
+                for i in 0..in_f {
+                    acc += wrow[i] * xb[i];
+                }
+                ob[o] = acc;
+            }
+        });
+    }
+    crate::kernels::elementwise::bias_act_inplace(out, bias, out_f, 1, act);
+}
+
 /// Reference (naive) GEMM used as the kernel test oracle.
 pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for i in 0..m {
@@ -263,6 +300,29 @@ mod tests {
         let mut c = vec![1.0; 4];
         gemm_st(2, 2, 2, &a, &b, &mut c);
         assert_eq!(c, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn dense_forward_matches_naive() {
+        use crate::dsl::op::Activation;
+        let mut rng = Rng::new(74);
+        let (batch, in_f, out_f) = (3, 17, 11);
+        let w = rand_mat(&mut rng, out_f, in_f);
+        let x = rand_mat(&mut rng, batch, in_f);
+        let bias: Vec<f32> = (0..out_f).map(|_| rng.normal()).collect();
+        let mut got = vec![0.0f32; batch * out_f];
+        dense_forward(&w, Some(&bias), Activation::Relu, &x, batch, in_f, out_f, 2, &mut got);
+        for b in 0..batch {
+            for o in 0..out_f {
+                let mut acc = bias[o];
+                for i in 0..in_f {
+                    acc += w[o * in_f + i] * x[b * in_f + i];
+                }
+                let want = acc.max(0.0);
+                let diff = (got[b * out_f + o] - want).abs();
+                assert!(diff < 1e-4, "b={} o={} diff={}", b, o, diff);
+            }
+        }
     }
 
     #[test]

@@ -1,13 +1,26 @@
 //! Spatial resize / pooling kernels: nearest upsample, pixel shuffle,
 //! max pool, global average pool.
+//!
+//! Each kernel has a slice-based `*_into` entry point that writes into a
+//! caller-provided output buffer (what the planned executor dispatches to)
+//! plus a Tensor-returning convenience wrapper.
 
 use crate::tensor::Tensor;
 
-/// Nearest-neighbour upsample by integer factor.
-pub fn upsample_nearest(x: &Tensor, factor: usize) -> Tensor {
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+/// Nearest-neighbour upsample by integer factor, into `out`
+/// (`n×c×(h·factor)×(w·factor)`).
+pub fn upsample_nearest_into(
+    out: &mut [f32],
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    factor: usize,
+) {
     let (oh, ow) = (h * factor, w * factor);
-    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    debug_assert_eq!(x.len(), n * c * h * w);
+    debug_assert_eq!(out.len(), n * c * oh * ow);
     for s in 0..n {
         for ch in 0..c {
             for y in 0..oh {
@@ -15,23 +28,39 @@ pub fn upsample_nearest(x: &Tensor, factor: usize) -> Tensor {
                 let src = (s * c + ch) * h * w + sy * w;
                 let dst = (s * c + ch) * oh * ow + y * ow;
                 for xx in 0..ow {
-                    out.data_mut()[dst + xx] = x.data()[src + xx / factor];
+                    out[dst + xx] = x[src + xx / factor];
                 }
             }
         }
     }
+}
+
+/// Nearest-neighbour upsample by integer factor.
+pub fn upsample_nearest(x: &Tensor, factor: usize) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let mut out = Tensor::zeros(&[n, c, h * factor, w * factor]);
+    upsample_nearest_into(out.data_mut(), x.data(), n, c, h, w, factor);
     out
 }
 
-/// Pixel shuffle (depth-to-space): [N, C·r², H, W] -> [N, C, H·r, W·r].
+/// Pixel shuffle (depth-to-space) into `out`:
+/// `[N, C·r², H, W] -> [N, C, H·r, W·r]`.
 /// Channel (c·r² + dy·r + dx) maps to output (c, y·r+dy, x·r+dx).
-pub fn pixel_shuffle(x: &Tensor, r: usize) -> Tensor {
-    let (n, cin, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+pub fn pixel_shuffle_into(
+    out: &mut [f32],
+    x: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+) {
     let r2 = r * r;
     assert_eq!(cin % r2, 0, "pixel_shuffle: channels {} not divisible by {}", cin, r2);
     let c = cin / r2;
     let (oh, ow) = (h * r, w * r);
-    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    debug_assert_eq!(x.len(), n * cin * h * w);
+    debug_assert_eq!(out.len(), n * c * oh * ow);
     for s in 0..n {
         for oc in 0..c {
             for dy in 0..r {
@@ -41,24 +70,43 @@ pub fn pixel_shuffle(x: &Tensor, r: usize) -> Tensor {
                         let src = ((s * cin + ic) * h + y) * w;
                         let dst = ((s * c + oc) * oh + y * r + dy) * ow + dx;
                         for xx in 0..w {
-                            out.data_mut()[dst + xx * r] = x.data()[src + xx];
+                            out[dst + xx * r] = x[src + xx];
                         }
                     }
                 }
             }
         }
     }
+}
+
+/// Pixel shuffle (depth-to-space): [N, C·r², H, W] -> [N, C, H·r, W·r].
+pub fn pixel_shuffle(x: &Tensor, r: usize) -> Tensor {
+    let (n, cin, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let r2 = r * r;
+    assert_eq!(cin % r2, 0, "pixel_shuffle: channels {} not divisible by {}", cin, r2);
+    let mut out = Tensor::zeros(&[n, cin / r2, h * r, w * r]);
+    pixel_shuffle_into(out.data_mut(), x.data(), n, cin, h, w, r);
     out
 }
 
-/// Max pool k×k stride s (no padding).
-pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+/// Max pool k×k stride s (no padding) into `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_into(
+    out: &mut [f32],
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+) {
     let (oh, ow) = crate::dsl::shape::conv_out_hw(h, w, k, stride, 0);
-    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    debug_assert_eq!(x.len(), n * c * h * w);
+    debug_assert_eq!(out.len(), n * c * oh * ow);
     for s in 0..n {
         for ch in 0..c {
-            let plane = &x.data()[(s * c + ch) * h * w..(s * c + ch + 1) * h * w];
+            let plane = &x[(s * c + ch) * h * w..(s * c + ch + 1) * h * w];
             let obase = (s * c + ch) * oh * ow;
             for oy in 0..oh {
                 for ox in 0..ow {
@@ -71,26 +119,40 @@ pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
                             }
                         }
                     }
-                    out.data_mut()[obase + oy * ow + ox] = m;
+                    out[obase + oy * ow + ox] = m;
                 }
             }
         }
     }
+}
+
+/// Max pool k×k stride s (no padding).
+pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = crate::dsl::shape::conv_out_hw(h, w, k, stride, 0);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    maxpool_into(out.data_mut(), x.data(), n, c, h, w, k, stride);
     out
+}
+
+/// Global average pool (`px = h·w` pixels per channel) into `out` (`n×c`).
+pub fn global_avg_pool_into(out: &mut [f32], x: &[f32], n: usize, c: usize, px: usize) {
+    debug_assert_eq!(x.len(), n * c * px);
+    debug_assert_eq!(out.len(), n * c);
+    for s in 0..n {
+        for ch in 0..c {
+            let base = (s * c + ch) * px;
+            let sum: f32 = x[base..base + px].iter().sum();
+            out[s * c + ch] = sum / px as f32;
+        }
+    }
 }
 
 /// Global average pool to [N, C, 1, 1].
 pub fn global_avg_pool(x: &Tensor) -> Tensor {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
-    let px = h * w;
     let mut out = Tensor::zeros(&[n, c, 1, 1]);
-    for s in 0..n {
-        for ch in 0..c {
-            let base = (s * c + ch) * px;
-            let sum: f32 = x.data()[base..base + px].iter().sum();
-            out.data_mut()[s * c + ch] = sum / px as f32;
-        }
-    }
+    global_avg_pool_into(out.data_mut(), x.data(), n, c, h * w);
     out
 }
 

@@ -146,8 +146,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let s = bench_auto_ms(800.0, || {
         let _ = eng.run(std::slice::from_ref(&x)).unwrap();
     });
+    let mem = eng.memory();
     println!(
-        "{} [{}] threads={} input={:?}: mean {} ms (p50 {}, p99 {}; n={})",
+        "{} [{}] threads={} input={:?}: mean {} ms (p50 {}, p99 {}; n={}) | \
+         peak {} (weights {} + arena/scratch {})",
         app,
         variant.name(),
         threads,
@@ -155,7 +157,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         ms(s.mean),
         ms(s.p50),
         ms(s.p99),
-        s.n
+        s.n,
+        prt_dnn::util::fmt_bytes(mem.peak_bytes),
+        prt_dnn::util::fmt_bytes(mem.dedicated_bytes),
+        prt_dnn::util::fmt_bytes(mem.shared_bytes),
     );
     Ok(())
 }
@@ -202,6 +207,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     })?;
     println!("{}", report.render());
+    if args.has_flag("json") {
+        println!("{}", report.to_json());
+    }
     println!(
         "real-time at {} fps: {}",
         fps,

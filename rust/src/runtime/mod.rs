@@ -9,4 +9,4 @@ pub mod manifest;
 pub mod pjrt;
 
 pub use manifest::{ArtifactEntry, Manifest};
-pub use pjrt::PjrtModel;
+pub use pjrt::{PjrtClient, PjrtModel};

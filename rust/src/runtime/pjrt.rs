@@ -1,88 +1,143 @@
 //! PJRT model wrapper: compile once, execute many times.
+//!
+//! The real implementation binds the `xla` crate, which the offline build
+//! image does not ship; it is therefore gated behind the `pjrt` cargo
+//! feature (enabling it additionally requires adding the `xla` dependency
+//! to Cargo.toml by hand). Without the feature, a stub with the same API
+//! compiles everywhere and reports a clear error at run time — the PJRT
+//! round-trip tests skip themselves when `artifacts/` is absent, so the
+//! stub never runs in CI.
 
 use crate::runtime::manifest::ArtifactEntry;
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-/// A compiled PJRT executable + its I/O signature.
-pub struct PjrtModel {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    input_shapes: Vec<Vec<usize>>,
-}
+#[cfg(feature = "pjrt")]
+pub use real::{PjrtClient, PjrtModel};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtClient, PjrtModel};
 
-impl PjrtModel {
-    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
-    pub fn load(client: &xla::PjRtClient, entry: &ArtifactEntry) -> Result<PjrtModel> {
-        let proto = xla::HloModuleProto::from_text_file(&entry.hlo_path)
-            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", entry.hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", entry.name))?;
-        Ok(PjrtModel {
-            name: format!("{}:{}", entry.name, entry.variant),
-            exe,
-            input_shapes: entry.input_shapes.clone(),
-        })
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::*;
+    use anyhow::bail;
+
+    /// The shared PJRT client handle.
+    pub type PjrtClient = xla::PjRtClient;
+
+    /// A compiled PJRT executable + its I/O signature.
+    pub struct PjrtModel {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+        input_shapes: Vec<Vec<usize>>,
     }
 
-    /// Create the shared CPU client.
-    pub fn cpu_client() -> Result<xla::PjRtClient> {
-        xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))
-    }
-
-    /// Execute on f32 tensors. Artifacts are lowered with
-    /// `return_tuple=True`, so the single output is a tuple we unpack.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != self.input_shapes.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.input_shapes.len(),
-                inputs.len()
-            );
+    impl PjrtModel {
+        /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+        pub fn load(client: &PjrtClient, entry: &ArtifactEntry) -> Result<PjrtModel> {
+            let proto = xla::HloModuleProto::from_text_file(&entry.hlo_path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", entry.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", entry.name))?;
+            Ok(PjrtModel {
+                name: format!("{}:{}", entry.name, entry.variant),
+                exe,
+                input_shapes: entry.input_shapes.clone(),
+            })
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, t) in inputs.iter().enumerate() {
-            if t.shape() != self.input_shapes[i].as_slice() {
+
+        /// Create the shared CPU client.
+        pub fn cpu_client() -> Result<PjrtClient> {
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))
+        }
+
+        /// Execute on f32 tensors. Artifacts are lowered with
+        /// `return_tuple=True`, so the single output is a tuple we unpack.
+        pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            if inputs.len() != self.input_shapes.len() {
                 bail!(
-                    "{}: input {} shape {:?} != {:?}",
+                    "{}: expected {} inputs, got {}",
                     self.name,
-                    i,
-                    t.shape(),
-                    self.input_shapes[i]
+                    self.input_shapes.len(),
+                    inputs.len()
                 );
             }
-            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(t.data())
-                .reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?;
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, t) in inputs.iter().enumerate() {
+                if t.shape() != self.input_shapes[i].as_slice() {
+                    bail!(
+                        "{}: input {} shape {:?} != {:?}",
+                        self.name,
+                        i,
+                        t.shape(),
+                        self.input_shapes[i]
+                    );
+                }
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+            // Unpack the output tuple.
+            let elems = out
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            let mut tensors = Vec::with_capacity(elems.len());
+            for lit in elems {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                tensors.push(Tensor::from_vec(&dims, data));
+            }
+            Ok(tensors)
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
-        // Unpack the output tuple.
-        let elems = out
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        let mut tensors = Vec::with_capacity(elems.len());
-        for lit in elems {
-            let shape = lit
-                .array_shape()
-                .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-            tensors.push(Tensor::from_vec(&dims, data));
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+    use anyhow::bail;
+
+    const UNAVAILABLE: &str =
+        "prt-dnn was built without the `pjrt` feature (the xla runtime is \
+         unavailable in the offline toolchain); rebuild with \
+         `--features pjrt` and an `xla` dependency to run AOT artifacts";
+
+    /// Placeholder for the PJRT client handle.
+    pub struct PjrtClient;
+
+    /// Stub model: same API as the real wrapper, errors at run time.
+    pub struct PjrtModel {
+        pub name: String,
+    }
+
+    impl PjrtModel {
+        pub fn load(_client: &PjrtClient, _entry: &ArtifactEntry) -> Result<PjrtModel> {
+            bail!("{}", UNAVAILABLE)
         }
-        Ok(tensors)
+
+        pub fn cpu_client() -> Result<PjrtClient> {
+            bail!("{}", UNAVAILABLE)
+        }
+
+        pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            bail!("{}", UNAVAILABLE)
+        }
     }
 }
 

@@ -1,0 +1,39 @@
+//! Allocation-counting wrapper around the system allocator.
+//!
+//! Used by the zero-alloc acceptance test and the table1 bench to measure
+//! allocations-per-frame of the planned executor. The wrapper type lives
+//! here so both binaries share one implementation; each binary still has
+//! to install it itself (Rust requires the `#[global_allocator]` static to
+//! be declared in the binary crate):
+//!
+//! ```ignore
+//! use prt_dnn::util::alloc_count::CountingAlloc;
+//! #[global_allocator]
+//! static GLOBAL: CountingAlloc = CountingAlloc;
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide allocation counter (meaningful once [`CountingAlloc`] is
+/// installed as the global allocator).
+pub static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+/// Counting wrapper around the system allocator.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocations observed so far.
+pub fn alloc_count() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}

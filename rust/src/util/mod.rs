@@ -4,6 +4,7 @@
 //! `rayon`, `clap` or `criterion`; each submodule is a small, fully-tested
 //! substrate the rest of the crate builds on.
 
+pub mod alloc_count;
 pub mod json;
 pub mod rng;
 pub mod stats;
