@@ -15,6 +15,7 @@ use prt_dnn::reorder::{ReorderPlan, Schedule};
 use prt_dnn::sparse::{ColumnCompact, Csr, GemmView};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::util::rng::Rng;
+use prt_dnn::util::threadpool::ComputePool;
 
 fn main() {
     let mut rng = Rng::new(23);
@@ -29,10 +30,11 @@ fn main() {
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
         for threads in [1, max_threads] {
+            let pool = ComputePool::new(threads);
             let mut c = vec![0.0f32; m * n];
             let s = bench_ms(2, 8, || {
                 c.iter_mut().for_each(|v| *v = 0.0);
-                gemm(m, k, n, &a, &b, &mut c, threads);
+                gemm(m, k, n, &a, &b, &mut c, &pool);
             });
             let gflops = 2.0 * (m * k * n) as f64 / (s.mean / 1e3) / 1e9;
             t.row(&[
@@ -55,6 +57,7 @@ fn main() {
     let mut scratch = ConvScratch::new();
     let mut out = vec![0.0f32; o * geom.out_px()];
     let threads = max_threads;
+    let pool = ComputePool::new(threads);
 
     let mut t = Table::new(
         format!("K-micro conv tiers (64x32x3x3 @ {0}x{0}, {1} threads)", hw, threads),
@@ -62,7 +65,7 @@ fn main() {
     );
     let dense_s = bench_ms(2, 8, || {
         conv2d_dense(
-            x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity, threads,
+            x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity, &pool,
             &mut scratch, &mut out,
         );
     });
@@ -78,7 +81,7 @@ fn main() {
         let csr_s = bench_ms(2, 8, || {
             conv2d_csr(
                 x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity,
-                threads, &mut scratch, &mut out,
+                &pool, &mut scratch, &mut out,
             );
         });
         t.row(&[
@@ -93,7 +96,7 @@ fn main() {
             bench_ms(2, 8, || {
                 conv2d_column_compact(
                     x.data(), 1, &cc, &geom, PadMode::Zeros, None, Activation::Identity,
-                    threads, &mut scratch, &mut out,
+                    &pool, &mut scratch, &mut out,
                 );
             })
         } else {
@@ -102,7 +105,7 @@ fn main() {
             bench_ms(2, 8, || {
                 conv2d_reordered(
                     x.data(), 1, &plan, &sched, &geom, PadMode::Zeros, None,
-                    Activation::Identity, &mut scratch, &mut out,
+                    Activation::Identity, &pool, &mut scratch, &mut out,
                 );
             })
         };

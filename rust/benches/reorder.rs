@@ -12,6 +12,7 @@ use prt_dnn::reorder::{load_imbalance, ReorderPlan, Schedule};
 use prt_dnn::sparse::{Csr, GemmView};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::util::rng::Rng;
+use prt_dnn::util::threadpool::ComputePool;
 
 fn main() {
     let mut rng = Rng::new(17);
@@ -53,6 +54,7 @@ fn main() {
         &["threads", "imbalance CSR", "imbalance reorder", "CSR ms", "reorder ms", "speedup"],
     );
     for threads in [1usize, 2, 4, 8] {
+        let pool = ComputePool::new(threads);
         let sched = Schedule::build(&plan, threads);
         let imb_naive = load_imbalance(&naive_row_loads(&csr.row_nnz(), threads));
         let imb_ro = load_imbalance(&sched.loads());
@@ -60,12 +62,12 @@ fn main() {
         let mut c1 = vec![0.0f32; gv.rows * n];
         let csr_t = bench_ms(2, 12, || {
             c1.iter_mut().for_each(|v| *v = 0.0);
-            spmm_csr(&csr, &b, n, &mut c1, threads);
+            spmm_csr(&csr, &b, n, &mut c1, &pool);
         });
         let mut c2 = vec![0.0f32; gv.rows * n];
         let ro_t = bench_ms(2, 12, || {
             c2.iter_mut().for_each(|v| *v = 0.0);
-            spmm_reordered(&plan, &sched, &b, n, &mut c2);
+            spmm_reordered(&plan, &sched, &b, n, &mut c2, &pool);
         });
         // Same math.
         let err: f32 = c1

@@ -2,13 +2,17 @@
 //! coloring / super resolution under {unpruned, pruning, pruning+compiler}.
 //!
 //! Prints (a) measured CPU latency on this machine's native executor —
-//! plus the plan's static `peak_bytes` and the *measured*
-//! allocations-per-frame of a reusable `ExecContext` (zero in steady
-//! state) — and (b) modeled Adreno-640 latency from the roofline cost
-//! model, next to the paper's reported numbers. The reproduction target is
-//! the *shape*: ordering, per-stage gains and total speedup band
-//! (DESIGN.md §6). Machine-readable `T1-JSON` lines carry latency and
-//! memory together so the perf trajectory tracks both.
+//! plus the plan's static `peak_bytes`, the **cold-start (warm-up) frame
+//! time** of a fresh context (compute-pool spawn + first-touch) next to
+//! the steady-state mean, and the *measured* allocations-per-frame of a
+//! reusable `ExecContext` (zero in steady state at every thread count,
+//! now that kernels fork-join on the persistent pool) — and (b) modeled
+//! Adreno-640 latency from the roofline cost model, next to the paper's
+//! reported numbers. The reproduction target is the *shape*: ordering,
+//! per-stage gains and total speedup band (DESIGN.md §6).
+//! Machine-readable `T1-JSON` lines carry latency, memory, warm-up and
+//! allocation counts together so the perf trajectory tracks them all
+//! (fields documented in docs/BENCH_SCHEMA.md).
 
 use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, bytes, mem_json, ms, speedup, summary_json, Table};
@@ -18,13 +22,15 @@ use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
 use prt_dnn::util::json::{Json, JsonObj};
+use std::time::Instant;
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// Measured heap allocations per frame of a warm, single-context
-/// `run_into` loop (zero for the planned executor with threads=1; kernel
-/// thread spawns show up at higher thread counts).
+/// `run_into` loop. Zero for the planned executor at every thread count:
+/// kernels dispatch on the context's persistent compute pool, so no
+/// per-frame thread spawns show up in the counter.
 fn allocs_per_frame(eng: &Engine, x: &Tensor, frames: usize) -> f64 {
     let plan = eng.plan();
     let mut ctx = ExecContext::for_plan(plan);
@@ -36,6 +42,18 @@ fn allocs_per_frame(eng: &Engine, x: &Tensor, frames: usize) -> f64 {
         let _ = ctx.run_into(plan, std::slice::from_ref(x), &mut outs);
     }
     (alloc_count() - before) as f64 / frames as f64
+}
+
+/// Cold-start cost of a fresh context: pool spawn + arena/scratch
+/// allocation + first frame (first-touch page faults), in ms.
+fn warmup_frame_ms(eng: &Engine, x: &Tensor) -> f64 {
+    let plan = eng.plan();
+    let t0 = Instant::now();
+    let mut ctx = ExecContext::for_plan(plan);
+    let mut outs: Vec<Tensor> =
+        plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+    let _ = ctx.run_into(plan, std::slice::from_ref(x), &mut outs);
+    t0.elapsed().as_secs_f64() * 1e3
 }
 
 const PAPER: &[(&str, [f64; 3])] = &[
@@ -57,7 +75,16 @@ fn main() -> anyhow::Result<()> {
             "T1a measured CPU ms (native executor, width={}, {} threads)",
             width, threads
         ),
-        &["app", "unpruned", "pruning", "pruning+compiler", "speedup", "peak", "allocs/frame"],
+        &[
+            "app",
+            "unpruned",
+            "pruning",
+            "pruning+compiler",
+            "speedup",
+            "peak",
+            "warmup",
+            "allocs/frame",
+        ],
     );
     let mut json_lines: Vec<Json> = Vec::new();
     for (app, _) in PAPER {
@@ -68,13 +95,20 @@ fn main() -> anyhow::Result<()> {
         let mut last = 0.0;
         let mut peak = 0usize;
         let mut apf = 0.0f64;
+        let mut warm = 0.0f64;
         for variant in Variant::table1() {
             let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
             let shape = eng.input_shapes()[0].clone();
             let x = Tensor::full(&shape, 0.5);
+            // Cold start first: fresh context = pool spawn + first frame.
+            let warm_ms = warmup_frame_ms(&eng, &x);
             let s = bench_auto_ms(budget, || {
                 let _ = eng.run(std::slice::from_ref(&x)).unwrap();
             });
+            // Alloc accounting at the full thread count: the persistent
+            // pool keeps the steady state allocation-free even at
+            // threads > 1 (the old scoped-spawn executor could not).
+            let variant_apf = allocs_per_frame(&eng, &x, alloc_frames);
             if variant == Variant::Unpruned {
                 base = s.mean;
             }
@@ -82,21 +116,23 @@ fn main() -> anyhow::Result<()> {
             row.push(ms(s.mean));
             if variant == Variant::PrunedCompiler {
                 peak = eng.memory().peak_bytes;
-                // Alloc accounting on a single-thread plan: kernel thread
-                // spawns would otherwise dominate the counter.
-                let (eng1, _) = prepare_variant(&g, variant, &spec, 1)?;
-                apf = allocs_per_frame(&eng1, &x, alloc_frames);
+                apf = variant_apf;
+                warm = warm_ms;
             }
             let mut j = JsonObj::new();
             j.insert("app", app.to_string());
             j.insert("variant", variant.name());
+            j.insert("threads", threads);
             j.insert("latency", summary_json(&s));
             j.insert("memory", mem_json(&eng.memory()));
+            j.insert("warmup_ms", warm_ms);
+            j.insert("allocs_per_frame", variant_apf);
             json_lines.push(Json::Obj(j));
         }
         row.insert(0, app.to_string());
         row.push(speedup(base, last));
         row.push(bytes(peak));
+        row.push(ms(warm));
         row.push(format!("{:.1}", apf));
         measured.row(&row);
     }

@@ -30,6 +30,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Stable variant name used in CLI flags and JSON lines.
     pub fn name(self) -> &'static str {
         match self {
             Variant::Unpruned => "unpruned",
@@ -40,6 +41,7 @@ impl Variant {
         }
     }
 
+    /// The three rows of the paper's Table 1, in order.
     pub fn table1() -> [Variant; 3] {
         [Variant::Unpruned, Variant::Pruned, Variant::PrunedCompiler]
     }
@@ -49,12 +51,16 @@ impl Variant {
 /// kernel pruning for coloring and super resolution").
 #[derive(Debug, Clone)]
 pub struct AppSpec {
+    /// App name.
     pub app: String,
+    /// Pruning-scheme kind the paper assigns this app.
     pub scheme_kind: &'static str,
+    /// Target sparsity for the pruned layers.
     pub sparsity: f64,
 }
 
 impl AppSpec {
+    /// The paper's pruning spec for an app name.
     pub fn for_app(app: &str) -> AppSpec {
         let (scheme_kind, sparsity) = match app {
             "style" | "style_transfer" => ("column", 0.75),

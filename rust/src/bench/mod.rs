@@ -39,12 +39,14 @@ pub fn bench_auto_ms(budget_ms: f64, mut f: impl FnMut()) -> Summary {
 
 /// Simple aligned text table.
 pub struct Table {
+    /// Table title, printed above the header.
     pub title: String,
     header: Vec<String>,
     rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given title and column header.
     pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
         Table {
             title: title.into(),
@@ -53,11 +55,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render the aligned text table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {

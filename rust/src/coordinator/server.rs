@@ -1,8 +1,10 @@
 //! The serving loop: bounded queue + worker pool + metrics.
 //!
-//! Each worker owns one [`ExecContext`] and a set of preallocated output
-//! tensors, so steady-state serving performs zero heap allocations for
-//! intermediates (the arena is sized once from the engine's plan).
+//! Each worker owns one [`ExecContext`] — arena, scratch **and its own
+//! persistent compute pool** — plus a set of preallocated output tensors,
+//! so steady-state serving performs zero heap allocations at any kernel
+//! thread count and workers never contend on a shared pool (the arena and
+//! pool are sized once from the engine's plan).
 
 use crate::executor::{Engine, ExecContext};
 use crate::tensor::Tensor;
@@ -38,8 +40,11 @@ impl Default for ServeConfig {
 /// Result of a serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Frames that completed inference.
     pub processed: usize,
+    /// Frames shed by the bounded queue.
     pub dropped: usize,
+    /// Wall-clock duration of the serve run.
     pub wall: Duration,
     /// Queue-to-completion latency per processed frame.
     pub latency: Summary,
@@ -53,6 +58,7 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Processed frames per wall-clock second.
     pub fn throughput_fps(&self) -> f64 {
         self.processed as f64 / self.wall.as_secs_f64().max(1e-9)
     }
@@ -64,6 +70,7 @@ impl ServeReport {
             && (self.dropped as f64) < 0.02 * (self.processed + self.dropped) as f64
     }
 
+    /// One-line human-readable report.
     pub fn render(&self) -> String {
         format!(
             "processed={} dropped={} wall={:.2}s fps={:.1} \
@@ -158,6 +165,7 @@ pub struct Server<'e> {
 }
 
 impl<'e> Server<'e> {
+    /// Coordinator over a compiled engine.
     pub fn new(engine: &'e Engine, cfg: ServeConfig) -> Self {
         Server { engine, cfg }
     }
@@ -198,9 +206,10 @@ impl<'e> Server<'e> {
                 q.close();
             });
 
-            // Workers: each owns one ExecContext + preallocated output
-            // buffers, so the steady-state loop never allocates
-            // intermediates (the arena is sized once from the plan).
+            // Workers: each owns one ExecContext (arena + scratch + its
+            // own compute pool, spawned here once) + preallocated output
+            // buffers, so the steady-state loop never allocates and the
+            // workers' kernel fork-joins never contend on a shared pool.
             for _ in 0..self.cfg.workers.max(1) {
                 let q = &queue;
                 let eng = self.engine;

@@ -12,8 +12,11 @@ pub type NodeId = usize;
 /// A named LR node plus its data-edge inputs.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// Unique node (or graph) name.
     pub name: String,
+    /// The operation this node computes.
     pub op: Op,
+    /// Producer nodes, in argument order.
     pub inputs: Vec<NodeId>,
 }
 
@@ -23,6 +26,7 @@ pub struct Node {
 /// `bn2.gamma`) so passes that fold or rewrite weights only touch the table.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// Unique node (or graph) name.
     pub name: String,
     nodes: Vec<Node>,
     by_name: HashMap<String, NodeId>,
@@ -30,6 +34,7 @@ pub struct Graph {
 }
 
 impl Graph {
+    /// Empty graph with the given name.
     pub fn new(name: impl Into<String>) -> Self {
         Graph { name: name.into(), ..Default::default() }
     }
@@ -60,52 +65,64 @@ impl Graph {
         id
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the graph has no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// Node by id.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id]
     }
 
+    /// Mutable node by id.
     pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
         &mut self.nodes[id]
     }
 
+    /// All nodes in topological (insertion) order.
     pub fn nodes(&self) -> &[Node] {
         &self.nodes
     }
 
+    /// Node id by name.
     pub fn find(&self, name: &str) -> Option<NodeId> {
         self.by_name.get(name).copied()
     }
 
     // ---- parameter table ---------------------------------------------------
 
+    /// Insert or replace a parameter tensor (e.g. `conv1.weight`).
     pub fn set_param(&mut self, key: impl Into<String>, t: Tensor) {
         self.params.insert(key.into(), t);
     }
 
+    /// Parameter tensor by key.
     pub fn param(&self, key: &str) -> Option<&Tensor> {
         self.params.get(key)
     }
 
+    /// Mutable parameter tensor by key.
     pub fn param_mut(&mut self, key: &str) -> Option<&mut Tensor> {
         self.params.get_mut(key)
     }
 
+    /// Remove and return a parameter tensor.
     pub fn take_param(&mut self, key: &str) -> Option<Tensor> {
         self.params.remove(key)
     }
 
+    /// Iterate all (key, tensor) parameters.
     pub fn params(&self) -> impl Iterator<Item = (&String, &Tensor)> {
         self.params.iter()
     }
 
+    /// Total parameter element count across all tensors.
     pub fn param_count(&self) -> usize {
         self.params.values().map(|t| t.len()).sum()
     }

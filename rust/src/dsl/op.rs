@@ -10,10 +10,13 @@ use std::fmt;
 /// Activation kinds that can be standalone LRs or fused into a conv LR.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Activation {
+    /// max(x, 0).
     Relu,
     /// Leaky ReLU with fixed slope 0.2 (what the demo generators use).
     LeakyRelu,
+    /// Hyperbolic tangent.
     Tanh,
+    /// Logistic sigmoid.
     Sigmoid,
     /// No-op activation — used as the "none" slot on fused convs.
     Identity,
@@ -21,6 +24,7 @@ pub enum Activation {
 
 impl Activation {
     #[inline]
+    /// Apply the activation to one value.
     pub fn apply(self, x: f32) -> f32 {
         match self {
             Activation::Relu => x.max(0.0),
@@ -37,6 +41,7 @@ impl Activation {
         }
     }
 
+    /// Stable lowercase name (graph JSON round trip).
     pub fn name(self) -> &'static str {
         match self {
             Activation::Relu => "relu",
@@ -47,6 +52,7 @@ impl Activation {
         }
     }
 
+    /// Parse a name produced by [`Activation::name`].
     pub fn from_name(s: &str) -> Option<Self> {
         Some(match s {
             "relu" => Activation::Relu,

@@ -1,18 +1,22 @@
-//! Reusable per-worker execution state: the activation arena + all kernel
-//! scratch. One [`ExecContext`] per worker thread; the shared
-//! [`ExecutionPlan`] is passed by reference into every run.
+//! Reusable per-worker execution state: the activation arena, the kernel
+//! scratch, and the persistent [`ComputePool`] every kernel dispatches on.
+//! One [`ExecContext`] per worker thread; the shared [`ExecutionPlan`] is
+//! passed by reference into every run.
 //!
-//! Steady-state inference performs **zero heap allocations for
-//! intermediates**: the arena and the im2col scratch are sized once from
-//! the plan, every kernel writes into a planner-assigned arena range, and
-//! [`ExecContext::run_into`] even writes the final outputs into
-//! caller-provided tensors. (With `threads > 1` the kernels still spawn
-//! scoped worker threads per call, and the `Reordered` fallback for
-//! filter/channel schemes packs a per-group panel; the three demo apps'
-//! compiled paths hit neither.)
+//! Steady-state inference performs **zero heap allocations** at any
+//! thread count: the arena and the im2col scratch are sized once from the
+//! plan, every kernel writes into a planner-assigned arena range,
+//! [`ExecContext::run_into`] writes the final outputs into
+//! caller-provided tensors, and multi-threaded kernels fork-join on the
+//! context's compute pool (spawned once at construction) instead of
+//! spawning scoped threads per call. Verified by `rust/tests/zero_alloc.rs`
+//! at `threads = 1` and `threads = 4`. (Known exception: the `Reordered`
+//! fallback for filter/channel schemes packs a per-group activation panel
+//! on the heap; the three demo apps' compiled paths never hit it.)
 
 use crate::dsl::op::Activation;
 use crate::executor::plan::{ConvExec, ExecutionPlan, Step, ValueSlot};
+use crate::util::threadpool::ComputePool;
 use crate::kernels::conv::{
     conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_pattern, conv2d_reordered, dwconv2d,
     ConvScratch,
@@ -46,20 +50,33 @@ unsafe fn slice_at_mut<'a>(ptr: *mut f32, slot: ValueSlot) -> &'a mut [f32] {
     std::slice::from_raw_parts_mut(ptr.add(slot.offset), slot.len)
 }
 
-/// Per-worker execution state (arena + kernel scratch), reusable across
-/// frames without reallocation.
+/// Per-worker execution state (arena + kernel scratch + compute pool),
+/// reusable across frames without reallocation.
 pub struct ExecContext {
     arena: Vec<f32>,
     scratch: ConvScratch,
+    pool: ComputePool,
 }
 
 impl ExecContext {
     /// Build a context sized for `plan` — allocates the arena and scratch
-    /// once; subsequent runs against the same plan never reallocate.
+    /// and spawns the compute pool (sized from the plan's thread budget)
+    /// once; subsequent runs against the same plan never reallocate and
+    /// never spawn.
     pub fn for_plan(plan: &ExecutionPlan) -> Self {
         let mut scratch = ConvScratch::new();
         scratch.ensure(plan.scratch_len());
-        ExecContext { arena: vec![0.0; plan.arena_len()], scratch }
+        ExecContext {
+            arena: vec![0.0; plan.arena_len()],
+            scratch,
+            pool: ComputePool::new(plan.threads()),
+        }
+    }
+
+    /// The context's persistent compute pool (spawned at construction;
+    /// every kernel this context runs dispatches on it).
+    pub fn pool(&self) -> &ComputePool {
+        &self.pool
     }
 
     /// Current arena capacity in f32 elements (arena-reuse tests).
@@ -170,7 +187,7 @@ impl ExecContext {
         }
         self.scratch.ensure(plan.scratch_len());
 
-        let t = plan.threads;
+        let pool = &self.pool;
         // SAFETY (all `slice_at` / `slice_at_mut` calls below): the planner
         // guarantees a step's output range is disjoint from all of its
         // input ranges unless the step is flagged in-place, in which case
@@ -204,20 +221,24 @@ impl ExecContext {
                     let scratch = &mut self.scratch;
                     match exec {
                         ConvExec::Dense { w } => conv2d_dense(
-                            x, n, w, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                            x, n, w, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
+                            out,
                         ),
                         ConvExec::Csr { csr } => conv2d_csr(
-                            x, n, csr, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                            x, n, csr, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
+                            out,
                         ),
                         ConvExec::Column { cc } => conv2d_column_compact(
-                            x, n, cc, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                            x, n, cc, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
+                            out,
                         ),
                         ConvExec::Pattern { plan: pp } => conv2d_pattern(
-                            x, n, pp, geom, *pad_mode, bias.as_deref(), *act, t, scratch, out,
+                            x, n, pp, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
+                            out,
                         ),
                         ConvExec::Reordered { plan: rp, sched } => conv2d_reordered(
-                            x, n, rp, sched, geom, *pad_mode, bias.as_deref(), *act, scratch,
-                            out,
+                            x, n, rp, sched, geom, *pad_mode, bias.as_deref(), *act, pool,
+                            scratch, out,
                         ),
                     }
                 }
@@ -235,7 +256,7 @@ impl ExecContext {
                         *stride,
                         *pad,
                         *act,
-                        t,
+                        pool,
                         val_mut!(out_slot),
                     );
                 }
@@ -249,7 +270,7 @@ impl ExecContext {
                         batch,
                         *in_f,
                         *out_f,
-                        t,
+                        pool,
                         val_mut!(out_slot),
                     );
                 }
@@ -270,6 +291,7 @@ impl ExecContext {
                         var,
                         *eps,
                         Activation::Identity,
+                        pool,
                     );
                 }
                 Step::InstanceNorm { gamma, beta, eps } => {
@@ -279,20 +301,28 @@ impl ExecContext {
                     if !st.inplace {
                         x.copy_from_slice(val!(in_slot(0)));
                     }
-                    instancenorm_inplace(x, c, px, gamma.as_deref(), beta.as_deref(), *eps);
+                    instancenorm_inplace(
+                        x,
+                        c,
+                        px,
+                        gamma.as_deref(),
+                        beta.as_deref(),
+                        *eps,
+                        pool,
+                    );
                 }
                 Step::Act(a) => {
                     let x = val_mut!(out_slot);
                     if !st.inplace {
                         x.copy_from_slice(val!(in_slot(0)));
                     }
-                    act_inplace(x, *a);
+                    act_inplace(x, *a, pool);
                 }
                 Step::Add => {
                     if st.inplace {
-                        add_assign(val_mut!(out_slot), val!(in_slot(1)));
+                        add_assign(val_mut!(out_slot), val!(in_slot(1)), pool);
                     } else {
-                        add_into(val_mut!(out_slot), val!(in_slot(0)), val!(in_slot(1)));
+                        add_into(val_mut!(out_slot), val!(in_slot(0)), val!(in_slot(1)), pool);
                     }
                 }
                 Step::Concat => {
@@ -305,6 +335,7 @@ impl ExecContext {
                         a[1],
                         b[1],
                         a[2] * a[3],
+                        pool,
                     );
                 }
                 Step::Upsample { factor } => {
@@ -317,6 +348,7 @@ impl ExecContext {
                         s[2],
                         s[3],
                         *factor,
+                        pool,
                     );
                 }
                 Step::PixelShuffle { factor } => {
@@ -329,6 +361,7 @@ impl ExecContext {
                         s[2],
                         s[3],
                         *factor,
+                        pool,
                     );
                 }
                 Step::MaxPool { k, stride } => {
@@ -342,6 +375,7 @@ impl ExecContext {
                         s[3],
                         *k,
                         *stride,
+                        pool,
                     );
                 }
                 Step::GlobalAvgPool => {
@@ -352,6 +386,7 @@ impl ExecContext {
                         s[0],
                         s[1],
                         s[2] * s[3],
+                        pool,
                     );
                 }
                 Step::BroadcastSpatial => {
@@ -362,6 +397,7 @@ impl ExecContext {
                         o[0],
                         o[1],
                         o[2] * o[3],
+                        pool,
                     );
                 }
                 Step::Output => {
@@ -409,6 +445,22 @@ mod tests {
             plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
         ctx.run_into(&plan, &[x], &mut bufs).unwrap();
         assert_eq!(o[0].data(), bufs[0].data());
+    }
+
+    #[test]
+    fn multithreaded_context_matches_single_bitwise() {
+        // The pool partitions rows/planes but never changes any element's
+        // fp expression or order, so thread count must not move a bit.
+        let g = build_style(32, 0.25, 16);
+        let p1 = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        let p4 = Planner::plan(&g, &ExecConfig::dense(4)).unwrap();
+        let x = Tensor::full(&[1, 3, 32, 32], 0.3);
+        let mut c1 = ExecContext::for_plan(&p1);
+        let mut c4 = ExecContext::for_plan(&p4);
+        assert_eq!(c4.pool().threads(), 4);
+        let o1 = c1.run(&p1, std::slice::from_ref(&x)).unwrap();
+        let o4 = c4.run(&p4, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(o1[0].data(), o4[0].data(), "thread count changed results");
     }
 
     #[test]

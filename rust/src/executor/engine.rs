@@ -3,10 +3,12 @@
 //! [`Engine::with_config`] compiles a graph once (kernel selection, weight
 //! encoding, static memory planning); [`Engine::run`] executes it using a
 //! small pool of reusable [`ExecContext`]s, so repeated calls — including
-//! concurrent calls from several threads — reuse arenas instead of
-//! allocating intermediates. Workers that want exclusive, allocation-free
-//! state (the serving coordinator) build their own context from
-//! [`Engine::plan`] and call [`ExecContext::run_into`] directly.
+//! concurrent calls from several threads — reuse arenas **and compute
+//! pools** instead of allocating intermediates or spawning kernel
+//! threads. Workers that want exclusive, allocation-free state (the
+//! serving coordinator) build their own context from [`Engine::plan`] and
+//! call [`ExecContext::run_into`] directly — each such context owns its
+//! own compute pool, so serving workers never contend on one.
 
 use crate::dsl::Graph;
 use crate::executor::context::ExecContext;
@@ -21,6 +23,7 @@ pub use crate::executor::plan::{ExecConfig, SparseMode};
 /// Compiled engine: an immutable [`ExecutionPlan`] plus a pool of reusable
 /// execution contexts.
 pub struct Engine {
+    /// Graph name the engine was compiled from.
     pub name: String,
     /// Serialized weight bytes under the active storage format (reported
     /// by the storage bench / perf model). Mirrors `plan().weight_bytes`.
@@ -56,24 +59,41 @@ impl Engine {
         self.plan.memory()
     }
 
+    /// Input tensor shapes, in call order.
     pub fn input_shapes(&self) -> Vec<Vec<usize>> {
         self.plan.input_shapes()
     }
 
+    /// Output tensor shapes, in result order.
     pub fn output_shapes(&self) -> Vec<Vec<usize>> {
         self.plan.output_shapes()
     }
 
+    /// Idle contexts retained for reuse. Each context now owns OS threads
+    /// (its compute pool), not just an arena, so a transient concurrency
+    /// spike must not pin threads for the engine's lifetime: contexts
+    /// beyond this cap are dropped on check-in (joining their workers).
+    /// Sustained `run` concurrency above the cap degrades to per-call
+    /// context construction — callers at that scale should hold their own
+    /// context via [`Engine::plan`] + [`ExecContext::for_plan`], as the
+    /// serving coordinator does.
+    const MAX_IDLE_CONTEXTS: usize = 16;
+
     fn checkout(&self) -> ExecContext {
-        self.pool
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| ExecContext::for_plan(&self.plan))
+        // Pop under the lock, construct outside it: building a context
+        // spawns pool workers and zeroes the arena, which must not block
+        // concurrent callers that would hit an idle context.
+        let idle = self.pool.lock().unwrap().pop();
+        idle.unwrap_or_else(|| ExecContext::for_plan(&self.plan))
     }
 
     fn checkin(&self, ctx: ExecContext) {
-        self.pool.lock().unwrap().push(ctx);
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < Self::MAX_IDLE_CONTEXTS {
+            pool.push(ctx);
+        }
+        // Else: `ctx` drops after the guard (locals drop before
+        // parameters), joining its workers without holding the lock.
     }
 
     /// Execute the graph on the given inputs.

@@ -23,6 +23,7 @@ pub struct MemoryUsage {
 }
 
 impl MemoryUsage {
+    /// Accounting from weight bytes + per-worker shared bytes.
     pub fn new(dedicated_bytes: usize, shared_bytes: usize) -> Self {
         MemoryUsage {
             dedicated_bytes,
@@ -69,6 +70,7 @@ pub struct ArenaPlanner {
 }
 
 impl ArenaPlanner {
+    /// Empty planner (no free ranges, zero high-water mark).
     pub fn new() -> Self {
         Self::default()
     }

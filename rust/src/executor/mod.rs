@@ -10,9 +10,10 @@
 //!   has a single consumer ([`memory`]).
 //! * [`ExecutionPlan`] is the immutable product: steps + arena layout +
 //!   [`MemoryUsage`] accounting. Peak memory is a compile-time constant.
-//! * [`ExecContext`] ([`context`]) holds the per-worker arena and kernel
-//!   scratch; steady-state [`ExecContext::run_into`] performs zero heap
-//!   allocations for intermediates.
+//! * [`ExecContext`] ([`context`]) holds the per-worker arena, kernel
+//!   scratch and persistent compute pool; steady-state
+//!   [`ExecContext::run_into`] performs zero heap allocations at any
+//!   thread count (kernels fork-join on the pool instead of spawning).
 //!
 //! [`Engine`] is the stable facade (compile + context pool) that the CLI,
 //! benches and examples use.

@@ -35,7 +35,13 @@ pub enum SparseMode {
 /// Executor configuration.
 #[derive(Debug, Clone)]
 pub struct ExecConfig {
+    /// How pruned conv layers are stored + executed.
     pub sparse: SparseMode,
+    /// Compute-thread budget, recorded on the plan: each
+    /// [`super::ExecContext`] spawns a persistent
+    /// [`ComputePool`](crate::util::threadpool::ComputePool) of this size
+    /// at construction, and every kernel fork-joins on it (kernels never
+    /// spawn threads themselves).
     pub threads: usize,
     /// Per-layer pruning schemes (needed for `Compact` to choose the
     /// right format; optional otherwise).
@@ -43,14 +49,17 @@ pub struct ExecConfig {
 }
 
 impl ExecConfig {
+    /// Dense storage + dense GEMM at the given thread budget.
     pub fn dense(threads: usize) -> Self {
         ExecConfig { sparse: SparseMode::Dense, threads, schemes: vec![] }
     }
 
+    /// CSR storage ("pruning, no compiler") at the given thread budget.
     pub fn csr(threads: usize) -> Self {
         ExecConfig { sparse: SparseMode::Csr, threads, schemes: vec![] }
     }
 
+    /// Compact storage + compiler kernels for the given per-layer schemes.
     pub fn compact(threads: usize, schemes: Vec<(String, Scheme)>) -> Self {
         ExecConfig { sparse: SparseMode::Compact, threads, schemes }
     }
@@ -111,6 +120,7 @@ pub(crate) struct ValueSlot {
 /// Immutable compiled execution plan: steps + shapes + arena layout +
 /// memory accounting. Shared (by reference) across worker contexts.
 pub struct ExecutionPlan {
+    /// Graph name the plan was compiled from.
     pub name: String,
     /// Serialized weight bytes under the active storage format (reported
     /// by the storage bench / perf model).
@@ -127,10 +137,12 @@ pub struct ExecutionPlan {
 }
 
 impl ExecutionPlan {
+    /// Input tensor shapes, in call order.
     pub fn input_shapes(&self) -> Vec<Vec<usize>> {
         self.input_ids.iter().map(|&i| self.shapes[i].clone()).collect()
     }
 
+    /// Output tensor shapes, in result order.
     pub fn output_shapes(&self) -> Vec<Vec<usize>> {
         self.output_ids.iter().map(|&i| self.shapes[i].clone()).collect()
     }
@@ -140,11 +152,13 @@ impl ExecutionPlan {
         self.steps.len()
     }
 
+    /// Whether the plan has no steps.
     pub fn is_empty(&self) -> bool {
         self.steps.is_empty()
     }
 
-    /// Compute threads each context uses inside kernels.
+    /// Compute-thread budget recorded at plan time: the size of the
+    /// persistent pool each [`super::ExecContext`] spawns for this plan.
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -6,12 +6,16 @@ use std::time::Duration;
 /// Aggregated timing for one op across runs.
 #[derive(Debug, Clone)]
 pub struct OpProfile {
+    /// Op name.
     pub name: String,
+    /// Number of recorded executions.
     pub calls: usize,
+    /// Total wall time across all executions.
     pub total: Duration,
 }
 
 impl OpProfile {
+    /// Mean wall time per call, in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.total.as_secs_f64() * 1e3 / self.calls.max(1) as f64
     }
@@ -25,10 +29,12 @@ pub struct RunProfile {
 }
 
 impl RunProfile {
+    /// Empty profile.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one run's per-op timings into the aggregate.
     pub fn absorb(&mut self, run: &[(String, Duration)]) {
         for (name, d) in run {
             match self.ops.get_mut(name) {

@@ -15,13 +15,16 @@ use std::path::Path;
 /// 8-bit RGB image.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Image {
+    /// Width in pixels.
     pub width: usize,
+    /// Height in pixels.
     pub height: usize,
     /// RGB interleaved, row-major.
     pub pixels: Vec<u8>,
 }
 
 impl Image {
+    /// Black image of the given size.
     pub fn new(width: usize, height: usize) -> Self {
         Image { width, height, pixels: vec![0; width * height * 3] }
     }
@@ -95,12 +98,14 @@ impl Image {
 
     // ---- PPM ---------------------------------------------------------------
 
+    /// Write as binary PPM (P6).
     pub fn save_ppm(&self, path: &Path) -> Result<()> {
         let mut buf = format!("P6\n{} {}\n255\n", self.width, self.height).into_bytes();
         buf.extend_from_slice(&self.pixels);
         std::fs::write(path, buf).with_context(|| format!("write {}", path.display()))
     }
 
+    /// Read a binary PPM (P6) file.
     pub fn load_ppm(path: &Path) -> Result<Image> {
         let data = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
         let header_end = data

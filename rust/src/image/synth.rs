@@ -132,6 +132,7 @@ pub struct FrameStream {
 }
 
 impl FrameStream {
+    /// Stream of synthetic frames of the given size, seeded.
     pub fn new(width: usize, height: usize, seed: u64) -> Self {
         FrameStream { base: photo(width * 2, height * 2, seed), width, height, frame: 0 }
     }

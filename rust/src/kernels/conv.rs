@@ -15,8 +15,9 @@
 //! requested (the DSL fusion pass sets `fused_act` on the conv LR), and all
 //! of them **write into a caller-provided output slice** — the execution
 //! planner owns every intermediate buffer, so steady-state inference does
-//! not allocate. Inputs are raw NCHW slices (`x`, batch `n`) with geometry
-//! carried by [`ConvGeom`].
+//! not allocate. Multi-threaded execution goes through the caller's
+//! persistent [`ComputePool`]; no driver ever spawns a thread. Inputs are
+//! raw NCHW slices (`x`, batch `n`) with geometry carried by [`ConvGeom`].
 
 use crate::dsl::op::{Activation, PadMode};
 use crate::kernels::elementwise::bias_act_inplace;
@@ -26,6 +27,7 @@ use crate::kernels::sparse_gemm;
 use crate::reorder::{ReorderPlan, Schedule};
 use crate::sparse::{ColumnCompact, Csr};
 use crate::tensor::Tensor;
+use crate::util::threadpool::{ComputePool, SendPtr};
 
 /// Scratch buffers reused across conv calls (owned by the exec context's
 /// memory plan; pre-sized via [`ConvScratch::ensure`], so a correctly sized
@@ -36,6 +38,7 @@ pub struct ConvScratch {
 }
 
 impl ConvScratch {
+    /// Empty scratch (grown on first use or via `ensure`).
     pub fn new() -> Self {
         Self::default()
     }
@@ -68,6 +71,7 @@ fn conv_common(
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
+    pool: &ComputePool,
     scratch: &mut ConvScratch,
     mut gemm_fn: impl FnMut(&[f32], &mut [f32]),
     build_patch: impl Fn(&[f32], &mut [f32]),
@@ -89,7 +93,7 @@ fn conv_common(
         let cdst = &mut out[s * out_c * opx..(s + 1) * out_c * opx];
         gemm_fn(&scratch.patch[..patch_len], cdst);
     }
-    bias_act_inplace(out, bias, out_c, opx, act);
+    bias_act_inplace(out, bias, out_c, opx, act, pool);
     let _ = pad_mode;
 }
 
@@ -103,7 +107,7 @@ pub fn conv2d_dense(
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
-    threads: usize,
+    pool: &ComputePool,
     scratch: &mut ConvScratch,
     out: &mut [f32],
 ) {
@@ -118,8 +122,9 @@ pub fn conv2d_dense(
         pad_mode,
         bias,
         act,
+        pool,
         scratch,
-        |patch, cdst| gemm::gemm(out_c, cols, opx, w.data(), patch, cdst, threads),
+        |patch, cdst| gemm::gemm(out_c, cols, opx, w.data(), patch, cdst, pool),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         cols,
         out,
@@ -136,7 +141,7 @@ pub fn conv2d_csr(
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
-    threads: usize,
+    pool: &ComputePool,
     scratch: &mut ConvScratch,
     out: &mut [f32],
 ) {
@@ -150,8 +155,9 @@ pub fn conv2d_csr(
         pad_mode,
         bias,
         act,
+        pool,
         scratch,
-        |patch, cdst| sparse_gemm::spmm_csr(csr, patch, opx, cdst, threads),
+        |patch, cdst| sparse_gemm::spmm_csr(csr, patch, opx, cdst, pool),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
         out,
@@ -168,7 +174,7 @@ pub fn conv2d_column_compact(
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
-    threads: usize,
+    pool: &ComputePool,
     scratch: &mut ConvScratch,
     out: &mut [f32],
 ) {
@@ -183,9 +189,10 @@ pub fn conv2d_column_compact(
         pad_mode,
         bias,
         act,
+        pool,
         scratch,
         |patch, cdst| {
-            sparse_gemm::spmm_column_compact(&cc.values, out_c, kept, patch, opx, cdst, threads)
+            sparse_gemm::spmm_column_compact(&cc.values, out_c, kept, patch, opx, cdst, pool)
         },
         |xin, patch| im2col_pruned(xin, geom, pad_mode, &cc.keep, patch),
         kept,
@@ -204,6 +211,7 @@ pub fn conv2d_reordered(
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
+    pool: &ComputePool,
     scratch: &mut ConvScratch,
     out: &mut [f32],
 ) {
@@ -217,8 +225,9 @@ pub fn conv2d_reordered(
         pad_mode,
         bias,
         act,
+        pool,
         scratch,
-        |patch, cdst| sparse_gemm::spmm_reordered(plan, sched, patch, opx, cdst),
+        |patch, cdst| sparse_gemm::spmm_reordered(plan, sched, patch, opx, cdst, pool),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
         out,
@@ -236,7 +245,7 @@ pub fn conv2d_pattern(
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
-    threads: usize,
+    pool: &ComputePool,
     scratch: &mut ConvScratch,
     out: &mut [f32],
 ) {
@@ -250,8 +259,9 @@ pub fn conv2d_pattern(
         pad_mode,
         bias,
         act,
+        pool,
         scratch,
-        |patch, cdst| sparse_gemm::spmm_pattern(plan, patch, opx, cdst, threads),
+        |patch, cdst| sparse_gemm::spmm_pattern(plan, patch, opx, cdst, pool),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
         out,
@@ -272,22 +282,26 @@ pub fn dwconv2d(
     stride: usize,
     pad: usize,
     act: Activation,
-    threads: usize,
+    pool: &ComputePool,
     out: &mut [f32],
 ) {
     let k = w.dim(2);
     let (oh, ow) = crate::dsl::shape::conv_out_hw(h, win, k, stride, pad);
     debug_assert_eq!(x.len(), n * c * h * win);
     debug_assert_eq!(out.len(), n * c * oh * ow);
-    let out_ptr = SendPtr(out.as_mut_ptr());
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
     let total = n * c;
-    crate::util::threadpool::parallel_chunks(total, threads, |cs, ce, _| {
-        let out_all = unsafe { std::slice::from_raw_parts_mut(out_ptr.get(), n * c * oh * ow) };
+    pool.parallel_chunks(total, |cs, ce, _| {
+        // SAFETY: each chunk materialises only its own disjoint
+        // channel-plane range of `out` (planes cs..ce are contiguous).
+        let out_all = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr.get().add(cs * oh * ow), (ce - cs) * oh * ow)
+        };
         for sc in cs..ce {
             let (s, ch) = (sc / c, sc % c);
             let plane = &x[(s * c + ch) * h * win..(s * c + ch + 1) * h * win];
             let ker = &w.data()[ch * k * k..(ch + 1) * k * k];
-            let obase = (s * c + ch) * oh * ow;
+            let obase = (sc - cs) * oh * ow;
             for oy in 0..oh {
                 for ox in 0..ow {
                     let mut acc = 0.0f32;
@@ -309,21 +323,7 @@ pub fn dwconv2d(
             }
         }
     });
-    bias_act_inplace(out, bias, c, oh * ow, act);
-}
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    /// Accessor that forces the closure to capture the whole wrapper
-    /// (edition-2021 closures capture individual fields otherwise,
-    /// defeating the Send/Sync impls).
-    #[inline]
-    fn get(self) -> *mut f32 {
-        self.0
-    }
+    bias_act_inplace(out, bias, c, oh * ow, act, pool);
 }
 
 /// Reference conv (naive 7-loop) — the oracle all drivers are tested against.
@@ -418,14 +418,14 @@ mod tests {
         pad: usize,
         pm: PadMode,
         act: Activation,
-        threads: usize,
+        pool: &ComputePool,
         scratch: &mut ConvScratch,
     ) -> Tensor {
         let geom = ConvGeom::new(w.dim(1), x.dim(2), x.dim(3), w.dim(2), stride, pad);
         let n = x.dim(0);
         let mut out = Tensor::zeros(&[n, w.dim(0), geom.out_h, geom.out_w]);
         conv2d_dense(
-            x.data(), n, w, &geom, pm, bias, act, threads, scratch, out.data_mut(),
+            x.data(), n, w, &geom, pm, bias, act, pool, scratch, out.data_mut(),
         );
         out
     }
@@ -446,7 +446,7 @@ mod tests {
             let mut scratch = ConvScratch::new();
             let got = dense_alloc(
                 &x, &wt, Some(&bias), stride, pad, pm, Activation::Relu,
-                rng.range(1, 4), &mut scratch,
+                &ComputePool::new(rng.range(1, 4)), &mut scratch,
             );
             let want = conv2d_ref(&x, &wt, Some(&bias), stride, pad, pm, Activation::Relu);
             let err = got.max_abs_diff(&want);
@@ -470,9 +470,10 @@ mod tests {
 
             let gv = GemmView::from_oihw(&wp);
             let csr = Csr::from_dense(&gv);
+            let pool = ComputePool::new(2);
             let mut got_csr = Tensor::zeros(&[1, oc, 8, 8]);
             conv2d_csr(
-                x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity, 2,
+                x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity, &pool,
                 &mut scratch, got_csr.data_mut(),
             );
             assert!(got_csr.max_abs_diff(&want) < 1e-3);
@@ -482,7 +483,7 @@ mod tests {
             let mut got_ro = Tensor::zeros(&[1, oc, 8, 8]);
             conv2d_reordered(
                 x.data(), 1, &plan, &sched, &geom, PadMode::Zeros, None,
-                Activation::Identity, &mut scratch, got_ro.data_mut(),
+                Activation::Identity, &pool, &mut scratch, got_ro.data_mut(),
             );
             assert!(got_ro.max_abs_diff(&want) < 1e-3);
         });
@@ -507,8 +508,8 @@ mod tests {
         let mut scratch = ConvScratch::new();
         let mut got = Tensor::zeros(&[2, oc, 10, 10]);
         conv2d_column_compact(
-            x.data(), 2, &cc, &geom, PadMode::Reflect, Some(&bias), Activation::Relu, 2,
-            &mut scratch, got.data_mut(),
+            x.data(), 2, &cc, &geom, PadMode::Reflect, Some(&bias), Activation::Relu,
+            &ComputePool::new(2), &mut scratch, got.data_mut(),
         );
         let want = conv2d_ref(&x, &wp, Some(&bias), 1, 1, PadMode::Reflect, Activation::Relu);
         assert!(got.max_abs_diff(&want) < 1e-3, "err={}", got.max_abs_diff(&want));
@@ -522,7 +523,8 @@ mod tests {
         let w = Tensor::randn(&[c, 1, 3, 3], &mut rng);
         let mut got = Tensor::zeros(&[1, c, 9, 9]);
         dwconv2d(
-            x.data(), 1, c, 9, 9, &w, None, 1, 1, Activation::Identity, 2, got.data_mut(),
+            x.data(), 1, c, 9, 9, &w, None, 1, 1, Activation::Identity,
+            &ComputePool::new(2), got.data_mut(),
         );
         // Reference: per-channel 1-in-1-out conv.
         for ch in 0..c {
@@ -547,13 +549,14 @@ mod tests {
         let mut scratch = ConvScratch::new();
         let x1 = rand_input(&mut rng, 1, 3, 16, 16);
         let w1 = Tensor::randn(&[8, 3, 3, 3], &mut rng);
+        let pool = ComputePool::serial();
         let big = dense_alloc(
-            &x1, &w1, None, 1, 1, PadMode::Zeros, Activation::Identity, 1, &mut scratch,
+            &x1, &w1, None, 1, 1, PadMode::Zeros, Activation::Identity, &pool, &mut scratch,
         );
         let x2 = rand_input(&mut rng, 1, 2, 6, 6);
         let w2 = Tensor::randn(&[4, 2, 3, 3], &mut rng);
         let small = dense_alloc(
-            &x2, &w2, None, 1, 1, PadMode::Zeros, Activation::Identity, 1, &mut scratch,
+            &x2, &w2, None, 1, 1, PadMode::Zeros, Activation::Identity, &pool, &mut scratch,
         );
         let want_small =
             conv2d_ref(&x2, &w2, None, 1, 1, PadMode::Zeros, Activation::Identity);
@@ -571,8 +574,8 @@ mod tests {
         let mut scratch = ConvScratch::new();
         let mut dirty = vec![42.0f32; 3 * 36];
         conv2d_dense(
-            x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity, 1,
-            &mut scratch, &mut dirty,
+            x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity,
+            &ComputePool::serial(), &mut scratch, &mut dirty,
         );
         let want = conv2d_ref(&x, &w, None, 1, 1, PadMode::Zeros, Activation::Identity);
         let err = dirty

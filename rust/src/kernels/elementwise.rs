@@ -1,12 +1,36 @@
 //! Elementwise / normalisation kernels: activations, bias, add, batch norm
 //! (inference mode), instance norm. All operate in place where possible —
 //! the executor's memory planner relies on that.
+//!
+//! Every kernel takes the executor's persistent [`ComputePool`] and splits
+//! its work across it when the tensor is large enough to amortise the
+//! dispatch (small tensors run inline). Parallelism never changes results:
+//! the split is at element or channel-plane granularity and every element
+//! is computed by exactly one thread with the same expression, so outputs
+//! are bitwise-identical at every thread count.
 
 use crate::dsl::op::Activation;
+use crate::kernels::MIN_PAR_ELEMS;
 use crate::tensor::Tensor;
+use crate::util::threadpool::{ComputePool, SendPtr};
 
-/// Apply activation in place.
-pub fn act_inplace(x: &mut [f32], a: Activation) {
+/// Split a mutable slice into contiguous per-thread ranges and apply `f`
+/// to each in parallel (inline when below [`MIN_PAR_ELEMS`]).
+fn par_ranges(pool: &ComputePool, x: &mut [f32], f: impl Fn(&mut [f32]) + Sync) {
+    if pool.threads() <= 1 || x.len() < MIN_PAR_ELEMS {
+        f(x);
+        return;
+    }
+    let ptr = SendPtr::new(x.as_mut_ptr());
+    pool.parallel_chunks(x.len(), |s, e, _| {
+        // SAFETY: chunks are disjoint subranges of `x`.
+        let sub = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(s), e - s) };
+        f(sub);
+    });
+}
+
+/// Scalar activation loop over one contiguous range.
+fn act_range(x: &mut [f32], a: Activation) {
     match a {
         Activation::Identity => {}
         Activation::Relu => {
@@ -31,33 +55,85 @@ pub fn act_inplace(x: &mut [f32], a: Activation) {
     }
 }
 
+/// Apply activation in place, parallel over contiguous ranges.
+pub fn act_inplace(x: &mut [f32], a: Activation, pool: &ComputePool) {
+    if matches!(a, Activation::Identity) {
+        return;
+    }
+    par_ranges(pool, x, |sub| act_range(sub, a));
+}
+
+/// Bias + activation over channel planes `[ps, pe)` of the flattened
+/// `(sample, channel)` plane list; `sub` starts at plane `ps`.
+fn bias_act_planes(
+    sub: &mut [f32],
+    b: &[f32],
+    channels: usize,
+    px: usize,
+    a: Activation,
+    ps: usize,
+    pe: usize,
+) {
+    for p in ps..pe {
+        let bv = b[p % channels];
+        let base = (p - ps) * px;
+        for v in &mut sub[base..base + px] {
+            *v = a.apply(*v + bv);
+        }
+    }
+}
+
 /// Add per-channel bias (and optional fused activation) to an NCHW tensor
-/// laid out as consecutive channel planes of `px` pixels.
-pub fn bias_act_inplace(x: &mut [f32], bias: Option<&[f32]>, channels: usize, px: usize, a: Activation) {
+/// laid out as consecutive channel planes of `px` pixels, parallel over
+/// planes.
+pub fn bias_act_inplace(
+    x: &mut [f32],
+    bias: Option<&[f32]>,
+    channels: usize,
+    px: usize,
+    a: Activation,
+    pool: &ComputePool,
+) {
     match bias {
         Some(b) => {
             debug_assert_eq!(b.len(), channels);
             debug_assert_eq!(x.len() % (channels * px), 0);
-            let samples = x.len() / (channels * px);
-            for s in 0..samples {
-                for c in 0..channels {
-                    let base = (s * channels + c) * px;
-                    let bv = b[c];
-                    for v in &mut x[base..base + px] {
-                        *v = a.apply(*v + bv);
-                    }
-                }
+            let planes = x.len() / px;
+            if pool.threads() <= 1 || planes < 2 || x.len() < MIN_PAR_ELEMS {
+                bias_act_planes(x, b, channels, px, a, 0, planes);
+                return;
             }
+            let ptr = SendPtr::new(x.as_mut_ptr());
+            pool.parallel_chunks(planes, |ps, pe, _| {
+                // SAFETY: chunks are disjoint plane ranges of `x`.
+                let sub = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.get().add(ps * px), (pe - ps) * px)
+                };
+                bias_act_planes(sub, b, channels, px, a, ps, pe);
+            });
         }
-        None => act_inplace(x, a),
+        None => act_inplace(x, a, pool),
     }
 }
 
 /// out = a + b elementwise into a caller-provided slice (all same length,
 /// `out` disjoint from both inputs — the planner guarantees this).
-pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32], pool: &ComputePool) {
     debug_assert_eq!(out.len(), a.len());
     debug_assert_eq!(out.len(), b.len());
+    if pool.threads() <= 1 || out.len() < MIN_PAR_ELEMS {
+        add_range(out, a, b);
+        return;
+    }
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(out.len(), |s, e, _| {
+        // SAFETY: chunks are disjoint subranges of `out`.
+        let sub = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(s), e - s) };
+        add_range(sub, &a[s..e], &b[s..e]);
+    });
+}
+
+fn add_range(out: &mut [f32], a: &[f32], b: &[f32]) {
     for i in 0..out.len() {
         out[i] = a[i] + b[i];
     }
@@ -65,8 +141,21 @@ pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
 
 /// dst += b elementwise — the in-place form the planner uses when the
 /// output slot aliases the first input.
-pub fn add_assign(dst: &mut [f32], b: &[f32]) {
+pub fn add_assign(dst: &mut [f32], b: &[f32], pool: &ComputePool) {
     debug_assert_eq!(dst.len(), b.len());
+    if pool.threads() <= 1 || dst.len() < MIN_PAR_ELEMS {
+        add_assign_range(dst, b);
+        return;
+    }
+    let ptr = SendPtr::new(dst.as_mut_ptr());
+    pool.parallel_chunks(dst.len(), |s, e, _| {
+        // SAFETY: chunks are disjoint subranges of `dst`.
+        let sub = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(s), e - s) };
+        add_assign_range(sub, &b[s..e]);
+    });
+}
+
+fn add_assign_range(dst: &mut [f32], b: &[f32]) {
     for (d, &v) in dst.iter_mut().zip(b.iter()) {
         *d += v;
     }
@@ -76,12 +165,39 @@ pub fn add_assign(dst: &mut [f32], b: &[f32]) {
 pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.shape(), b.shape(), "add shape mismatch");
     let mut out = Tensor::zeros(a.shape());
-    add_into(out.data_mut(), a.data(), b.data());
+    add_into(out.data_mut(), a.data(), b.data(), &ComputePool::serial());
     out
 }
 
+/// Batch norm over channel planes `[ps, pe)`; `sub` starts at plane `ps`.
+#[allow(clippy::too_many_arguments)]
+fn batchnorm_planes(
+    sub: &mut [f32],
+    channels: usize,
+    px: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+    a: Activation,
+    ps: usize,
+    pe: usize,
+) {
+    for p in ps..pe {
+        let c = p % channels;
+        let scale = gamma[c] / (var[c] + eps).sqrt();
+        let shift = beta[c] - mean[c] * scale;
+        let base = (p - ps) * px;
+        for v in &mut sub[base..base + px] {
+            *v = a.apply(*v * scale + shift);
+        }
+    }
+}
+
 /// Inference-mode batch norm, in place, optionally folded with activation:
-/// y = gamma*(x-mean)/sqrt(var+eps) + beta.
+/// y = gamma*(x-mean)/sqrt(var+eps) + beta. Parallel over channel planes.
+#[allow(clippy::too_many_arguments)]
 pub fn batchnorm_inplace(
     x: &mut [f32],
     channels: usize,
@@ -92,22 +208,52 @@ pub fn batchnorm_inplace(
     var: &[f32],
     eps: f32,
     a: Activation,
+    pool: &ComputePool,
 ) {
-    let samples = x.len() / (channels * px);
-    for s in 0..samples {
-        for c in 0..channels {
-            let scale = gamma[c] / (var[c] + eps).sqrt();
-            let shift = beta[c] - mean[c] * scale;
-            let base = (s * channels + c) * px;
-            for v in &mut x[base..base + px] {
-                *v = a.apply(*v * scale + shift);
-            }
+    let planes = x.len() / px;
+    if pool.threads() <= 1 || planes < 2 || x.len() < MIN_PAR_ELEMS {
+        batchnorm_planes(x, channels, px, gamma, beta, mean, var, eps, a, 0, planes);
+        return;
+    }
+    let ptr = SendPtr::new(x.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        // SAFETY: chunks are disjoint plane ranges of `x`.
+        let sub =
+            unsafe { std::slice::from_raw_parts_mut(ptr.get().add(ps * px), (pe - ps) * px) };
+        batchnorm_planes(sub, channels, px, gamma, beta, mean, var, eps, a, ps, pe);
+    });
+}
+
+/// Instance norm over channel planes `[ps, pe)`; `sub` starts at plane
+/// `ps`. Statistics are computed per plane, so the plane split cannot
+/// change the summation order.
+fn instancenorm_planes(
+    sub: &mut [f32],
+    channels: usize,
+    px: usize,
+    gamma: Option<&[f32]>,
+    beta: Option<&[f32]>,
+    eps: f32,
+    ps: usize,
+    pe: usize,
+) {
+    for p in ps..pe {
+        let c = p % channels;
+        let base = (p - ps) * px;
+        let plane = &mut sub[base..base + px];
+        let mean: f32 = plane.iter().sum::<f32>() / px as f32;
+        let var: f32 = plane.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / px as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let g = gamma.map(|g| g[c]).unwrap_or(1.0);
+        let b = beta.map(|b| b[c]).unwrap_or(0.0);
+        for v in plane.iter_mut() {
+            *v = (*v - mean) * inv * g + b;
         }
     }
 }
 
-/// Instance norm (per-sample, per-channel statistics), in place.
-/// gamma/beta optional (None = 1/0).
+/// Instance norm (per-sample, per-channel statistics), in place, parallel
+/// over channel planes. gamma/beta optional (None = 1/0).
 pub fn instancenorm_inplace(
     x: &mut [f32],
     channels: usize,
@@ -115,26 +261,25 @@ pub fn instancenorm_inplace(
     gamma: Option<&[f32]>,
     beta: Option<&[f32]>,
     eps: f32,
+    pool: &ComputePool,
 ) {
-    let samples = x.len() / (channels * px);
-    for s in 0..samples {
-        for c in 0..channels {
-            let base = (s * channels + c) * px;
-            let plane = &mut x[base..base + px];
-            let mean: f32 = plane.iter().sum::<f32>() / px as f32;
-            let var: f32 =
-                plane.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / px as f32;
-            let inv = 1.0 / (var + eps).sqrt();
-            let g = gamma.map(|g| g[c]).unwrap_or(1.0);
-            let b = beta.map(|b| b[c]).unwrap_or(0.0);
-            for v in plane.iter_mut() {
-                *v = (*v - mean) * inv * g + b;
-            }
-        }
+    let planes = x.len() / px;
+    if pool.threads() <= 1 || planes < 2 || x.len() < MIN_PAR_ELEMS {
+        instancenorm_planes(x, channels, px, gamma, beta, eps, 0, planes);
+        return;
     }
+    let ptr = SendPtr::new(x.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        // SAFETY: chunks are disjoint plane ranges of `x`.
+        let sub =
+            unsafe { std::slice::from_raw_parts_mut(ptr.get().add(ps * px), (pe - ps) * px) };
+        instancenorm_planes(sub, channels, px, gamma, beta, eps, ps, pe);
+    });
 }
 
-/// Channel concat of two NCHW slices along C, into a caller-provided slice.
+/// Channel concat of two NCHW slices along C, into a caller-provided
+/// slice, parallel over samples.
+#[allow(clippy::too_many_arguments)]
 pub fn concat_channels_into(
     out: &mut [f32],
     a: &[f32],
@@ -143,18 +288,38 @@ pub fn concat_channels_into(
     ca: usize,
     cb: usize,
     px: usize,
+    pool: &ComputePool,
 ) {
     debug_assert_eq!(a.len(), n * ca * px);
     debug_assert_eq!(b.len(), n * cb * px);
     debug_assert_eq!(out.len(), n * (ca + cb) * px);
-    for s in 0..n {
-        let dst_base = s * (ca + cb) * px;
-        let a_base = s * ca * px;
-        let b_base = s * cb * px;
-        out[dst_base..dst_base + ca * px].copy_from_slice(&a[a_base..a_base + ca * px]);
-        out[dst_base + ca * px..dst_base + (ca + cb) * px]
-            .copy_from_slice(&b[b_base..b_base + cb * px]);
+    // Output plane p holds sample p / (ca+cb), channel p % (ca+cb) — the
+    // plane split parallelises even at batch 1 (the common case).
+    let copy_plane = |p: usize, dst: &mut [f32]| {
+        let (s, k) = (p / (ca + cb), p % (ca + cb));
+        let src = if k < ca {
+            &a[(s * ca + k) * px..(s * ca + k + 1) * px]
+        } else {
+            let kb = k - ca;
+            &b[(s * cb + kb) * px..(s * cb + kb + 1) * px]
+        };
+        dst.copy_from_slice(src);
+    };
+    let planes = n * (ca + cb);
+    if pool.threads() <= 1 || planes < 2 || out.len() < MIN_PAR_ELEMS {
+        for p in 0..planes {
+            copy_plane(p, &mut out[p * px..(p + 1) * px]);
+        }
+        return;
     }
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        for p in ps..pe {
+            // SAFETY: each plane writes a disjoint range of `out`.
+            let dst = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(p * px), px) };
+            copy_plane(p, dst);
+        }
+    });
 }
 
 /// Channel concat of two NCHW tensors along C.
@@ -164,24 +329,53 @@ pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(b.dim(0), n);
     assert_eq!((b.dim(2), b.dim(3)), (h, w));
     let mut out = Tensor::zeros(&[n, ca + cb, h, w]);
-    concat_channels_into(out.data_mut(), a.data(), b.data(), n, ca, cb, h * w);
+    concat_channels_into(
+        out.data_mut(),
+        a.data(),
+        b.data(),
+        n,
+        ca,
+        cb,
+        h * w,
+        &ComputePool::serial(),
+    );
     out
 }
 
 /// Broadcast a per-channel vector (`g`, `n×c` values) over `px` spatial
-/// positions per channel, into a caller-provided slice.
-pub fn broadcast_spatial_into(out: &mut [f32], g: &[f32], n: usize, c: usize, px: usize) {
+/// positions per channel, into a caller-provided slice, parallel over
+/// channel planes.
+pub fn broadcast_spatial_into(
+    out: &mut [f32],
+    g: &[f32],
+    n: usize,
+    c: usize,
+    px: usize,
+    pool: &ComputePool,
+) {
     debug_assert!(g.len() >= n * c);
     debug_assert_eq!(out.len(), n * c * px);
-    for s in 0..n {
-        for ch in 0..c {
-            let v = g[s * c + ch];
-            let base = (s * c + ch) * px;
-            for o in &mut out[base..base + px] {
+    let planes = n * c;
+    if pool.threads() <= 1 || planes < 2 || out.len() < MIN_PAR_ELEMS {
+        for p in 0..planes {
+            let v = g[p];
+            for o in &mut out[p * px..(p + 1) * px] {
                 *o = v;
             }
         }
+        return;
     }
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        for p in ps..pe {
+            let v = g[p];
+            // SAFETY: each plane writes a disjoint range of `out`.
+            let plane = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(p * px), px) };
+            for o in plane.iter_mut() {
+                *o = v;
+            }
+        }
+    });
 }
 
 /// Broadcast a [N, C, 1, 1] (or [N, C]) tensor over the spatial dims of a
@@ -191,7 +385,7 @@ pub fn broadcast_spatial(g: &Tensor, reference: &Tensor) -> Tensor {
     let c = g.dim(1);
     let (h, w) = (reference.dim(2), reference.dim(3));
     let mut out = Tensor::zeros(&[n, c, h, w]);
-    broadcast_spatial_into(out.data_mut(), g.data(), n, c, h * w);
+    broadcast_spatial_into(out.data_mut(), g.data(), n, c, h * w, &ComputePool::serial());
     out
 }
 
@@ -202,7 +396,7 @@ mod tests {
     #[test]
     fn relu_inplace() {
         let mut x = vec![-1.0, 0.5, -0.2, 2.0];
-        act_inplace(&mut x, Activation::Relu);
+        act_inplace(&mut x, Activation::Relu, &ComputePool::serial());
         assert_eq!(x, vec![0.0, 0.5, 0.0, 2.0]);
     }
 
@@ -210,7 +404,8 @@ mod tests {
     fn bias_then_act() {
         // 1 sample, 2 channels, 2 px.
         let mut x = vec![0.0, 0.0, 0.0, 0.0];
-        bias_act_inplace(&mut x, Some(&[1.0, -1.0]), 2, 2, Activation::Relu);
+        let pool = ComputePool::serial();
+        bias_act_inplace(&mut x, Some(&[1.0, -1.0]), 2, 2, Activation::Relu, &pool);
         assert_eq!(x, vec![1.0, 1.0, 0.0, 0.0]);
     }
 
@@ -228,6 +423,7 @@ mod tests {
             &[4.0],
             0.0,
             Activation::Identity,
+            &ComputePool::serial(),
         );
         assert_eq!(x, vec![0.0, 1.0, 2.0, -1.0]);
     }
@@ -235,7 +431,7 @@ mod tests {
     #[test]
     fn instancenorm_zero_mean_unit_var() {
         let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
-        instancenorm_inplace(&mut x, 2, 4, None, None, 1e-9);
+        instancenorm_inplace(&mut x, 2, 4, None, None, 1e-9, &ComputePool::serial());
         for plane in x.chunks(4) {
             let mean: f32 = plane.iter().sum::<f32>() / 4.0;
             let var: f32 = plane.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
@@ -251,7 +447,7 @@ mod tests {
         let sum = add(&a, &b);
         assert_eq!(sum.data(), &[11.0, 22.0, 33.0, 44.0]);
         let mut dst = a.data().to_vec();
-        add_assign(&mut dst, b.data());
+        add_assign(&mut dst, b.data(), &ComputePool::serial());
         assert_eq!(dst.as_slice(), sum.data());
     }
 
@@ -273,5 +469,50 @@ mod tests {
         assert_eq!(out.shape(), &[1, 2, 2, 2]);
         assert_eq!(&out.data()[0..4], &[3.0; 4]);
         assert_eq!(&out.data()[4..8], &[7.0; 4]);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        // The pool split must not change a single bit, large or small.
+        let pool = ComputePool::new(4);
+        let n = 4 * MIN_PAR_ELEMS; // over the inline threshold
+        let src: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37).sin()).collect();
+
+        let mut a1 = src.clone();
+        let mut a4 = src.clone();
+        act_inplace(&mut a1, Activation::LeakyRelu, &ComputePool::serial());
+        act_inplace(&mut a4, Activation::LeakyRelu, &pool);
+        assert_eq!(a1, a4);
+
+        let mut s1 = src.clone();
+        let mut s4 = src.clone();
+        add_assign(&mut s1, &a1, &ComputePool::serial());
+        add_assign(&mut s4, &a1, &pool);
+        assert_eq!(s1, s4);
+
+        // 8 channels of px pixels: plane-parallel batch norm.
+        let channels = 8;
+        let px = n / channels;
+        let gamma: Vec<f32> = (0..channels).map(|c| 1.0 + c as f32 * 0.1).collect();
+        let beta: Vec<f32> = (0..channels).map(|c| c as f32 * 0.01).collect();
+        let mean = vec![0.1f32; channels];
+        let var = vec![0.9f32; channels];
+        let mut b1 = src.clone();
+        let mut b4 = src.clone();
+        batchnorm_inplace(
+            &mut b1, channels, px, &gamma, &beta, &mean, &var, 1e-5,
+            Activation::Relu, &ComputePool::serial(),
+        );
+        batchnorm_inplace(
+            &mut b4, channels, px, &gamma, &beta, &mean, &var, 1e-5,
+            Activation::Relu, &pool,
+        );
+        assert_eq!(b1, b4);
+
+        let mut i1 = src.clone();
+        let mut i4 = src;
+        instancenorm_inplace(&mut i1, channels, px, None, None, 1e-5, &ComputePool::serial());
+        instancenorm_inplace(&mut i4, channels, px, None, None, 1e-5, &pool);
+        assert_eq!(i1, i4);
     }
 }

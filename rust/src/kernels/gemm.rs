@@ -1,17 +1,20 @@
 //! Blocked, multi-threaded dense GEMM: C[M,N] = A[M,K] · B[K,N] (+ C).
 //!
 //! Cache-blocked over K and N with an 8-wide inner loop the compiler can
-//! vectorise; rows are partitioned across threads (M is the filter count,
-//! independent per row). This is the workhorse of both the unpruned
-//! baseline (im2col conv) and each reordered group's dense inner loop.
+//! vectorise; rows are partitioned across the persistent [`ComputePool`]
+//! (M is the filter count, independent per row). This is the workhorse of
+//! both the unpruned baseline (im2col conv) and each reordered group's
+//! dense inner loop.
 
-use crate::util::threadpool::parallel_chunks;
+use crate::util::threadpool::{ComputePool, SendPtr};
 
 /// Tunable blocking parameters (fitted to L1/L2 on the test machine during
 /// the perf pass; see EXPERIMENTS.md §Perf).
 pub const MC: usize = 64; // rows of A per macro-tile
-pub const KC: usize = 256; // K-panel
-pub const NC: usize = 1024; // N-panel
+/// K-panel blocking size (see [`MC`]).
+pub const KC: usize = 256;
+/// N-panel blocking size (see [`MC`]).
+pub const NC: usize = 1024;
 
 /// C = A·B, single-threaded, blocked. `a` is MxK row-major, `b` is KxN
 /// row-major, `c` is MxN row-major and is *accumulated into* (caller zeroes).
@@ -143,7 +146,10 @@ pub fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
     }
 }
 
-/// Multi-threaded GEMM: partitions M across threads.
+/// Multi-threaded GEMM: partitions M across the pool's threads. Each row
+/// of C is produced by exactly one thread with the same instruction
+/// sequence as [`gemm_st`], so results are bitwise-identical at every
+/// thread count.
 pub fn gemm(
     m: usize,
     k: usize,
@@ -151,43 +157,27 @@ pub fn gemm(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
-    threads: usize,
+    pool: &ComputePool,
 ) {
     debug_assert_eq!(c.len(), m * n);
-    if threads <= 1 || m == 1 {
+    if pool.threads() <= 1 || m == 1 {
         gemm_st(m, k, n, a, b, c);
         return;
     }
-    // SAFETY-free parallelism: split C by row ranges via chunks of rows.
-    let c_ptr = SendPtr(c.as_mut_ptr());
-    parallel_chunks(m, threads, |ms, me, _| {
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_chunks(m, |ms, me, _| {
         let rows = me - ms;
-        // Each thread works on a disjoint row range of A and C.
+        // SAFETY: each chunk works a disjoint row range of A and C.
         let a_sub = &a[ms * k..me * k];
-        let c_sub = unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(ms * n), rows * n) };
+        let c_sub =
+            unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(ms * n), rows * n) };
         gemm_st(rows, k, n, a_sub, b, c_sub);
     });
 }
 
-/// Wrapper to move a raw pointer into threads; safe because row ranges are
-/// disjoint by construction.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    /// Accessor that forces the closure to capture the whole wrapper
-    /// (edition-2021 closures capture individual fields otherwise,
-    /// defeating the Send/Sync impls).
-    #[inline]
-    fn get(self) -> *mut f32 {
-        self.0
-    }
-}
-
 /// Fully-connected forward pass into a caller-provided output slice:
 /// `out[b, o] = act(W[o, :] · x[b, :] + bias[o])` with `W` row-major
-/// `[out_f, in_f]`. Output rows are partitioned across threads.
+/// `[out_f, in_f]`. Output rows are partitioned across the pool.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_forward(
     w: &[f32],
@@ -197,7 +187,7 @@ pub fn dense_forward(
     batch: usize,
     in_f: usize,
     out_f: usize,
-    threads: usize,
+    pool: &ComputePool,
     out: &mut [f32],
 ) {
     debug_assert_eq!(w.len(), out_f * in_f);
@@ -205,21 +195,22 @@ pub fn dense_forward(
     debug_assert_eq!(out.len(), batch * out_f);
     for b in 0..batch {
         let xb = &x[b * in_f..(b + 1) * in_f];
-        let ob_ptr = SendPtr(out[b * out_f..(b + 1) * out_f].as_mut_ptr());
-        parallel_chunks(out_f, threads, |os, oe, _| {
-            // SAFETY: disjoint output rows per chunk.
-            let ob = unsafe { std::slice::from_raw_parts_mut(ob_ptr.get(), out_f) };
+        let ob_ptr = SendPtr::new(out[b * out_f..(b + 1) * out_f].as_mut_ptr());
+        pool.parallel_chunks(out_f, |os, oe, _| {
+            // SAFETY: each chunk materialises only its own disjoint output
+            // row range.
+            let ob = unsafe { std::slice::from_raw_parts_mut(ob_ptr.get().add(os), oe - os) };
             for o in os..oe {
                 let wrow = &w[o * in_f..(o + 1) * in_f];
                 let mut acc = 0.0f32;
                 for i in 0..in_f {
                     acc += wrow[i] * xb[i];
                 }
-                ob[o] = acc;
+                ob[o - os] = acc;
             }
         });
     }
-    crate::kernels::elementwise::bias_act_inplace(out, bias, out_f, 1, act);
+    crate::kernels::elementwise::bias_act_inplace(out, bias, out_f, 1, act, pool);
 }
 
 /// Reference (naive) GEMM used as the kernel test oracle.
@@ -269,7 +260,8 @@ mod tests {
             let mut c1 = vec![0.0; m * n];
             let mut c2 = vec![0.0; m * n];
             let threads = rng.range(1, 5);
-            gemm(m, k, n, &a, &b, &mut c1, threads);
+            let pool = ComputePool::new(threads);
+            gemm(m, k, n, &a, &b, &mut c1, &pool);
             gemm_ref(m, k, n, &a, &b, &mut c2);
             let max: f32 = c1
                 .iter()
@@ -288,8 +280,8 @@ mod tests {
         let b = rand_mat(&mut rng, k, n);
         let mut c1 = vec![0.0; m * n];
         let mut c4 = vec![0.0; m * n];
-        gemm(m, k, n, &a, &b, &mut c1, 1);
-        gemm(m, k, n, &a, &b, &mut c4, 4);
+        gemm(m, k, n, &a, &b, &mut c1, &ComputePool::new(1));
+        gemm(m, k, n, &a, &b, &mut c4, &ComputePool::new(4));
         assert_eq!(c1, c4); // identical fp order per row -> bitwise equal
     }
 
@@ -311,7 +303,10 @@ mod tests {
         let x = rand_mat(&mut rng, batch, in_f);
         let bias: Vec<f32> = (0..out_f).map(|_| rng.normal()).collect();
         let mut got = vec![0.0f32; batch * out_f];
-        dense_forward(&w, Some(&bias), Activation::Relu, &x, batch, in_f, out_f, 2, &mut got);
+        let pool = ComputePool::new(2);
+        dense_forward(
+            &w, Some(&bias), Activation::Relu, &x, batch, in_f, out_f, &pool, &mut got,
+        );
         for b in 0..batch {
             for o in 0..out_f {
                 let mut acc = bias[o];

@@ -12,27 +12,39 @@ use crate::tensor::Tensor;
 /// Parameters of one conv lowering.
 #[derive(Debug, Clone, Copy)]
 pub struct ConvGeom {
+    /// Input channels.
     pub in_c: usize,
+    /// Input height.
     pub in_h: usize,
+    /// Input width.
     pub in_w: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Stride (same in both dims).
     pub stride: usize,
+    /// Padding (same on all sides).
     pub pad: usize,
+    /// Output height.
     pub out_h: usize,
+    /// Output width.
     pub out_w: usize,
 }
 
 impl ConvGeom {
+    /// Geometry for a square-kernel conv over an `in_h × in_w` input.
     pub fn new(in_c: usize, in_h: usize, in_w: usize, k: usize, stride: usize, pad: usize) -> Self {
         let (out_h, out_w) = crate::dsl::shape::conv_out_hw(in_h, in_w, k, stride, pad);
         ConvGeom { in_c, in_h, in_w, kh: k, kw: k, stride, pad, out_h, out_w }
     }
 
+    /// Patch-matrix row count = GEMM K = in_c·kh·kw.
     pub fn cols(&self) -> usize {
         self.in_c * self.kh * self.kw
     }
 
+    /// Output pixels per channel = GEMM N = out_h·out_w.
     pub fn out_px(&self) -> usize {
         self.out_h * self.out_w
     }

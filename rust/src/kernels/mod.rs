@@ -13,6 +13,12 @@
 //!   reordered group GEMM (pruned+compiler),
 //! * [`elementwise`] — activations, add, batch/instance norm, bias,
 //! * [`resize`] — nearest upsample, pixel shuffle, max/global-avg pooling.
+//!
+//! Every kernel entry point takes the executor's persistent
+//! [`ComputePool`](crate::util::threadpool::ComputePool) and splits its
+//! work across it — no kernel ever spawns a thread itself, so the
+//! per-frame hot path performs zero system allocations at any thread
+//! count.
 
 pub mod gemm;
 pub mod im2col;
@@ -20,3 +26,10 @@ pub mod conv;
 pub mod sparse_gemm;
 pub mod elementwise;
 pub mod resize;
+
+/// Minimum element count before an elementwise / resize kernel fans out
+/// over the compute pool; below this the dispatch overhead exceeds the
+/// work, so the kernel runs inline on the caller. The split never changes
+/// results (every element is computed by exactly one thread with the same
+/// expression), so the threshold is purely a latency knob.
+pub(crate) const MIN_PAR_ELEMS: usize = 8 * 1024;

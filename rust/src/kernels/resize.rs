@@ -3,12 +3,19 @@
 //!
 //! Each kernel has a slice-based `*_into` entry point that writes into a
 //! caller-provided output buffer (what the planned executor dispatches to)
-//! plus a Tensor-returning convenience wrapper.
+//! plus a Tensor-returning convenience wrapper. The `*_into` forms take
+//! the executor's persistent [`ComputePool`] and split their work by
+//! output channel plane when large enough; every output element is
+//! computed by exactly one thread with the same expression, so results
+//! are bitwise-identical at every thread count.
 
+use crate::kernels::MIN_PAR_ELEMS;
 use crate::tensor::Tensor;
+use crate::util::threadpool::{ComputePool, SendPtr};
 
 /// Nearest-neighbour upsample by integer factor, into `out`
-/// (`n×c×(h·factor)×(w·factor)`).
+/// (`n×c×(h·factor)×(w·factor)`), parallel over channel planes.
+#[allow(clippy::too_many_arguments)]
 pub fn upsample_nearest_into(
     out: &mut [f32],
     x: &[f32],
@@ -17,35 +24,61 @@ pub fn upsample_nearest_into(
     h: usize,
     w: usize,
     factor: usize,
+    pool: &ComputePool,
 ) {
     let (oh, ow) = (h * factor, w * factor);
     debug_assert_eq!(x.len(), n * c * h * w);
     debug_assert_eq!(out.len(), n * c * oh * ow);
-    for s in 0..n {
-        for ch in 0..c {
-            for y in 0..oh {
-                let sy = y / factor;
-                let src = (s * c + ch) * h * w + sy * w;
-                let dst = (s * c + ch) * oh * ow + y * ow;
-                for xx in 0..ow {
-                    out[dst + xx] = x[src + xx / factor];
-                }
+    let run = |plane: usize, dst: &mut [f32]| {
+        // One (sample, channel) plane: dst is its oh×ow output window.
+        let src_base = plane * h * w;
+        for y in 0..oh {
+            let src = src_base + (y / factor) * w;
+            let drow = &mut dst[y * ow..(y + 1) * ow];
+            for (xx, d) in drow.iter_mut().enumerate() {
+                *d = x[src + xx / factor];
             }
         }
+    };
+    let planes = n * c;
+    if pool.threads() <= 1 || planes < 2 || out.len() < MIN_PAR_ELEMS {
+        for p in 0..planes {
+            run(p, &mut out[p * oh * ow..(p + 1) * oh * ow]);
+        }
+        return;
     }
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        for p in ps..pe {
+            // SAFETY: each plane writes a disjoint range of `out`.
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(ptr.get().add(p * oh * ow), oh * ow) };
+            run(p, dst);
+        }
+    });
 }
 
 /// Nearest-neighbour upsample by integer factor.
 pub fn upsample_nearest(x: &Tensor, factor: usize) -> Tensor {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let mut out = Tensor::zeros(&[n, c, h * factor, w * factor]);
-    upsample_nearest_into(out.data_mut(), x.data(), n, c, h, w, factor);
+    upsample_nearest_into(
+        out.data_mut(),
+        x.data(),
+        n,
+        c,
+        h,
+        w,
+        factor,
+        &ComputePool::serial(),
+    );
     out
 }
 
 /// Pixel shuffle (depth-to-space) into `out`:
-/// `[N, C·r², H, W] -> [N, C, H·r, W·r]`.
-/// Channel (c·r² + dy·r + dx) maps to output (c, y·r+dy, x·r+dx).
+/// `[N, C·r², H, W] -> [N, C, H·r, W·r]`, parallel over output channel
+/// planes. Channel (c·r² + dy·r + dx) maps to output (c, y·r+dy, x·r+dx).
+#[allow(clippy::too_many_arguments)]
 pub fn pixel_shuffle_into(
     out: &mut [f32],
     x: &[f32],
@@ -54,6 +87,7 @@ pub fn pixel_shuffle_into(
     h: usize,
     w: usize,
     r: usize,
+    pool: &ComputePool,
 ) {
     let r2 = r * r;
     assert_eq!(cin % r2, 0, "pixel_shuffle: channels {} not divisible by {}", cin, r2);
@@ -61,22 +95,38 @@ pub fn pixel_shuffle_into(
     let (oh, ow) = (h * r, w * r);
     debug_assert_eq!(x.len(), n * cin * h * w);
     debug_assert_eq!(out.len(), n * c * oh * ow);
-    for s in 0..n {
-        for oc in 0..c {
-            for dy in 0..r {
-                for dx in 0..r {
-                    let ic = oc * r2 + dy * r + dx;
-                    for y in 0..h {
-                        let src = ((s * cin + ic) * h + y) * w;
-                        let dst = ((s * c + oc) * oh + y * r + dy) * ow + dx;
-                        for xx in 0..w {
-                            out[dst + xx * r] = x[src + xx];
-                        }
+    let run = |plane: usize, dst: &mut [f32]| {
+        // One (sample, out-channel) plane: gather its r² input channels.
+        let (s, oc) = (plane / c, plane % c);
+        for dy in 0..r {
+            for dx in 0..r {
+                let ic = oc * r2 + dy * r + dx;
+                for y in 0..h {
+                    let src = ((s * cin + ic) * h + y) * w;
+                    let drow = (y * r + dy) * ow + dx;
+                    for xx in 0..w {
+                        dst[drow + xx * r] = x[src + xx];
                     }
                 }
             }
         }
+    };
+    let planes = n * c;
+    if pool.threads() <= 1 || planes < 2 || out.len() < MIN_PAR_ELEMS {
+        for p in 0..planes {
+            run(p, &mut out[p * oh * ow..(p + 1) * oh * ow]);
+        }
+        return;
     }
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        for p in ps..pe {
+            // SAFETY: each plane writes a disjoint range of `out`.
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(ptr.get().add(p * oh * ow), oh * ow) };
+            run(p, dst);
+        }
+    });
 }
 
 /// Pixel shuffle (depth-to-space): [N, C·r², H, W] -> [N, C, H·r, W·r].
@@ -85,11 +135,12 @@ pub fn pixel_shuffle(x: &Tensor, r: usize) -> Tensor {
     let r2 = r * r;
     assert_eq!(cin % r2, 0, "pixel_shuffle: channels {} not divisible by {}", cin, r2);
     let mut out = Tensor::zeros(&[n, cin / r2, h * r, w * r]);
-    pixel_shuffle_into(out.data_mut(), x.data(), n, cin, h, w, r);
+    pixel_shuffle_into(out.data_mut(), x.data(), n, cin, h, w, r, &ComputePool::serial());
     out
 }
 
-/// Max pool k×k stride s (no padding) into `out`.
+/// Max pool k×k stride s (no padding) into `out`, parallel over channel
+/// planes.
 #[allow(clippy::too_many_arguments)]
 pub fn maxpool_into(
     out: &mut [f32],
@@ -100,30 +151,44 @@ pub fn maxpool_into(
     w: usize,
     k: usize,
     stride: usize,
+    pool: &ComputePool,
 ) {
     let (oh, ow) = crate::dsl::shape::conv_out_hw(h, w, k, stride, 0);
     debug_assert_eq!(x.len(), n * c * h * w);
     debug_assert_eq!(out.len(), n * c * oh * ow);
-    for s in 0..n {
-        for ch in 0..c {
-            let plane = &x[(s * c + ch) * h * w..(s * c + ch + 1) * h * w];
-            let obase = (s * c + ch) * oh * ow;
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut m = f32::MIN;
-                    for dy in 0..k {
-                        for dx in 0..k {
-                            let v = plane[(oy * stride + dy) * w + ox * stride + dx];
-                            if v > m {
-                                m = v;
-                            }
+    let run = |plane: usize, dst: &mut [f32]| {
+        let src = &x[plane * h * w..(plane + 1) * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f32::MIN;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let v = src[(oy * stride + dy) * w + ox * stride + dx];
+                        if v > m {
+                            m = v;
                         }
                     }
-                    out[obase + oy * ow + ox] = m;
                 }
+                dst[oy * ow + ox] = m;
             }
         }
+    };
+    let planes = n * c;
+    if pool.threads() <= 1 || planes < 2 || x.len() < MIN_PAR_ELEMS {
+        for p in 0..planes {
+            run(p, &mut out[p * oh * ow..(p + 1) * oh * ow]);
+        }
+        return;
     }
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        for p in ps..pe {
+            // SAFETY: each plane writes a disjoint range of `out`.
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(ptr.get().add(p * oh * ow), oh * ow) };
+            run(p, dst);
+        }
+    });
 }
 
 /// Max pool k×k stride s (no padding).
@@ -131,28 +196,47 @@ pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let (oh, ow) = crate::dsl::shape::conv_out_hw(h, w, k, stride, 0);
     let mut out = Tensor::zeros(&[n, c, oh, ow]);
-    maxpool_into(out.data_mut(), x.data(), n, c, h, w, k, stride);
+    maxpool_into(out.data_mut(), x.data(), n, c, h, w, k, stride, &ComputePool::serial());
     out
 }
 
-/// Global average pool (`px = h·w` pixels per channel) into `out` (`n×c`).
-pub fn global_avg_pool_into(out: &mut [f32], x: &[f32], n: usize, c: usize, px: usize) {
+/// Global average pool (`px = h·w` pixels per channel) into `out` (`n×c`),
+/// parallel over channel planes (each plane's summation order is fixed,
+/// so the split cannot change results).
+pub fn global_avg_pool_into(
+    out: &mut [f32],
+    x: &[f32],
+    n: usize,
+    c: usize,
+    px: usize,
+    pool: &ComputePool,
+) {
     debug_assert_eq!(x.len(), n * c * px);
     debug_assert_eq!(out.len(), n * c);
-    for s in 0..n {
-        for ch in 0..c {
-            let base = (s * c + ch) * px;
-            let sum: f32 = x[base..base + px].iter().sum();
-            out[s * c + ch] = sum / px as f32;
+    let planes = n * c;
+    if pool.threads() <= 1 || planes < 2 || x.len() < MIN_PAR_ELEMS {
+        for p in 0..planes {
+            let sum: f32 = x[p * px..(p + 1) * px].iter().sum();
+            out[p] = sum / px as f32;
         }
+        return;
     }
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        // SAFETY: each chunk writes a disjoint range of `out`.
+        let dst = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(ps), pe - ps) };
+        for p in ps..pe {
+            let sum: f32 = x[p * px..(p + 1) * px].iter().sum();
+            dst[p - ps] = sum / px as f32;
+        }
+    });
 }
 
 /// Global average pool to [N, C, 1, 1].
 pub fn global_avg_pool(x: &Tensor) -> Tensor {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let mut out = Tensor::zeros(&[n, c, 1, 1]);
-    global_avg_pool_into(out.data_mut(), x.data(), n, c, h * w);
+    global_avg_pool_into(out.data_mut(), x.data(), n, c, h * w, &ComputePool::serial());
     out
 }
 
@@ -212,5 +296,38 @@ mod tests {
         a.sort_by(|p, q| p.partial_cmp(q).unwrap());
         b.sort_by(|p, q| p.partial_cmp(q).unwrap());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        // Plane-parallel resize kernels must not change a single bit.
+        let pool = ComputePool::new(4);
+        let (n, c, h, w) = (2, 8, 24, 24);
+        let x: Vec<f32> = (0..n * c * h * w).map(|i| ((i as f32) * 0.13).cos()).collect();
+
+        let mut u1 = vec![0.0f32; n * c * 4 * h * w];
+        let mut u4 = u1.clone();
+        upsample_nearest_into(&mut u1, &x, n, c, h, w, 2, &ComputePool::serial());
+        upsample_nearest_into(&mut u4, &x, n, c, h, w, 2, &pool);
+        assert_eq!(u1, u4);
+
+        let mut p1 = vec![0.0f32; n * (c / 4) * 4 * h * w];
+        let mut p4 = p1.clone();
+        pixel_shuffle_into(&mut p1, &x, n, c, h, w, 2, &ComputePool::serial());
+        pixel_shuffle_into(&mut p4, &x, n, c, h, w, 2, &pool);
+        assert_eq!(p1, p4);
+
+        let (oh, ow) = crate::dsl::shape::conv_out_hw(h, w, 2, 2, 0);
+        let mut m1 = vec![0.0f32; n * c * oh * ow];
+        let mut m4 = m1.clone();
+        maxpool_into(&mut m1, &x, n, c, h, w, 2, 2, &ComputePool::serial());
+        maxpool_into(&mut m4, &x, n, c, h, w, 2, 2, &pool);
+        assert_eq!(m1, m4);
+
+        let mut g1 = vec![0.0f32; n * c];
+        let mut g4 = g1.clone();
+        global_avg_pool_into(&mut g1, &x, n, c, h * w, &ComputePool::serial());
+        global_avg_pool_into(&mut g4, &x, n, c, h * w, &pool);
+        assert_eq!(g1, g4);
     }
 }

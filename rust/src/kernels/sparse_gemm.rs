@@ -14,14 +14,17 @@
 
 use crate::reorder::{ReorderPlan, Schedule};
 use crate::sparse::Csr;
+use crate::util::threadpool::{ComputePool, SendPtr};
 
 use super::gemm::axpy;
 
-/// CSR SpMM, single-threaded over a row range [ms, me).
-fn spmm_csr_rows(w: &Csr, b: &[f32], n: usize, c: &mut [f32], ms: usize, me: usize) {
+/// CSR SpMM over rows [ms, me); `c_sub` holds exactly those rows (so the
+/// serial path passes the whole C with `ms = 0`).
+fn spmm_csr_rows(w: &Csr, b: &[f32], n: usize, c_sub: &mut [f32], ms: usize, me: usize) {
+    debug_assert_eq!(c_sub.len(), (me - ms) * n);
     for r in ms..me {
         let (cols, vals) = w.row(r);
-        let crow = &mut c[r * n..(r + 1) * n];
+        let crow = &mut c_sub[(r - ms) * n..(r - ms + 1) * n];
         for (ci, &col) in cols.iter().enumerate() {
             let av = vals[ci];
             let brow = &b[col as usize * n..col as usize * n + n];
@@ -30,64 +33,72 @@ fn spmm_csr_rows(w: &Csr, b: &[f32], n: usize, c: &mut [f32], ms: usize, me: usi
     }
 }
 
-/// CSR SpMM with contiguous block row partition across threads (the naive
+/// CSR SpMM with contiguous block row partition across the pool (the naive
 /// parallelisation whose imbalance the reorder pass fixes).
-pub fn spmm_csr(w: &Csr, b: &[f32], n: usize, c: &mut [f32], threads: usize) {
+pub fn spmm_csr(w: &Csr, b: &[f32], n: usize, c: &mut [f32], pool: &ComputePool) {
     debug_assert_eq!(b.len(), w.cols * n);
     debug_assert_eq!(c.len(), w.rows * n);
-    if threads <= 1 {
+    if pool.threads() <= 1 {
         spmm_csr_rows(w, b, n, c, 0, w.rows);
         return;
     }
-    let c_ptr = SendPtr(c.as_mut_ptr());
-    crate::util::threadpool::parallel_chunks(w.rows, threads, |ms, me, _| {
-        let c_all = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), w.rows * n) };
-        spmm_csr_rows(w, b, n, c_all, ms, me);
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_chunks(w.rows, |ms, me, _| {
+        // SAFETY: each chunk materialises only its own disjoint row range
+        // of C.
+        let c_sub =
+            unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(ms * n), (me - ms) * n) };
+        spmm_csr_rows(w, b, n, c_sub, ms, me);
     });
 }
 
 /// Reordered SpMM: execute the plan's groups under a balanced schedule.
 /// Each `WorkItem` covers rows of one group; its inner loop is dense over
-/// the group's packed columns.
+/// the group's packed columns. Every schedule lane runs entirely on one
+/// pool thread (striding when the schedule has more lanes than the pool),
+/// so results are bitwise-identical at every pool size.
 pub fn spmm_reordered(
     plan: &ReorderPlan,
     sched: &Schedule,
     b: &[f32],
     n: usize,
     c: &mut [f32],
+    pool: &ComputePool,
 ) {
     debug_assert_eq!(b.len(), plan.cols * n);
     debug_assert_eq!(c.len(), plan.rows * n);
-    let threads = sched.threads();
-    if threads <= 1 {
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    let lanes = sched.threads();
+    if lanes <= 1 || pool.threads() <= 1 {
         for item in sched.items.iter().flatten() {
-            run_item(plan, item, b, n, c);
+            run_item(plan, item, b, n, c_ptr);
         }
         return;
     }
-    let c_ptr = SendPtr(c.as_mut_ptr());
-    std::thread::scope(|scope| {
-        for t in 0..threads {
-            let items = &sched.items[t];
-            scope.spawn(move || {
-                let c_all = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), plan.rows * n) };
-                for item in items {
-                    run_item(plan, item, b, n, c_all);
-                }
-            });
+    pool.parallel_parts(lanes, |lane| {
+        // Lanes write disjoint, non-contiguous C rows: every original row
+        // appears in exactly one group, each group row range in exactly
+        // one work item, and each item in exactly one lane. `run_item`
+        // materialises one row slice at a time, so no lane ever holds a
+        // view covering another lane's rows.
+        for item in &sched.items[lane] {
+            run_item(plan, item, b, n, c_ptr);
         }
     });
 }
 
 /// Execute one work item: rows [row_start, row_end) of one group.
 /// Different work items touch disjoint C rows (each original row appears in
-/// exactly one group), so parallel execution is race-free.
+/// exactly one group), so parallel execution is race-free. `c` is passed as
+/// a raw base pointer and each output row is materialised as its own
+/// n-element slice, so concurrent items never hold overlapping `&mut`
+/// views.
 fn run_item(
     plan: &ReorderPlan,
     item: &crate::reorder::schedule::WorkItem,
     b: &[f32],
     n: usize,
-    c: &mut [f32],
+    c: SendPtr<f32>,
 ) {
     let grp = &plan.groups[item.group];
     let k = grp.cols.len();
@@ -107,7 +118,10 @@ fn run_item(
         for i in item.row_start..item.row_end {
             let out_row = grp.rows[i] as usize;
             let wrow = grp.packed_row(i);
-            let crow = &mut c[out_row * n..(out_row + 1) * n];
+            // SAFETY: `out_row`s of distinct items are disjoint and `c`
+            // covers `plan.rows * n` elements.
+            let crow =
+                unsafe { std::slice::from_raw_parts_mut(c.get().add(out_row * n), n) };
             // 4-way unroll over the compacted columns (one C pass per 4
             // weights — mirrors the dense micro-kernel; §Perf iter 5).
             let mut j = 0;
@@ -131,7 +145,9 @@ fn run_item(
         for i in item.row_start..item.row_end {
             let out_row = grp.rows[i] as usize;
             let wrow = grp.packed_row(i);
-            let crow = &mut c[out_row * n..(out_row + 1) * n];
+            // SAFETY: as above — disjoint rows, in-bounds.
+            let crow =
+                unsafe { std::slice::from_raw_parts_mut(c.get().add(out_row * n), n) };
             for j in 0..k {
                 let av = wrow[j];
                 let col = grp.cols[j] as usize;
@@ -150,6 +166,7 @@ fn run_item(
 /// indices in the inner loop.
 #[derive(Debug, Clone)]
 pub struct PatternPlan {
+    /// Output filter count (C's row count).
     pub out_c: usize,
     /// Groups: (patch-row indices of the pattern in channel ic, kernels).
     /// Each kernel: (output filter, packed weights, pattern length).
@@ -184,16 +201,20 @@ impl PatternPlan {
         PatternPlan { out_c: pc.out_c, groups }
     }
 
+    /// Number of (channel, pattern) groups (bench reporting).
     pub fn group_count(&self) -> usize {
         self.groups.len()
     }
 }
 
 /// Pattern-kernel SpMM over the full patch matrix `b` [K, N].
-/// Threads partition output filters (disjoint C rows).
-pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], threads: usize) {
+/// Pool threads partition output filters (disjoint C rows).
+pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], pool: &ComputePool) {
     debug_assert_eq!(c.len(), plan.out_c * n);
-    let run = |c_all: &mut [f32], lo: usize, hi: usize| {
+    // `c_sub` holds exactly the filter rows [lo, hi) — the serial path
+    // passes the whole C with lo = 0.
+    let run = |c_sub: &mut [f32], lo: usize, hi: usize| {
+        debug_assert_eq!(c_sub.len(), (hi - lo) * n);
         for (rows, items) in &plan.groups {
             // The 4-entry PConv fast path dominates; general path for
             // other pattern sizes.
@@ -207,7 +228,7 @@ pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], thre
                     if o < lo || o >= hi {
                         continue;
                     }
-                    let crow = &mut c_all[o * n..(o + 1) * n];
+                    let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
                     let (w0, w1, w2, w3) = (w[0], w[1], w[2], w[3]);
                     for j in 0..n {
                         crow[j] += w0 * b0[j] + w1 * b1[j] + w2 * b2[j] + w3 * b3[j];
@@ -219,7 +240,7 @@ pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], thre
                     if o < lo || o >= hi {
                         continue;
                     }
-                    let crow = &mut c_all[o * n..(o + 1) * n];
+                    let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
                     for (j, &row) in rows.iter().enumerate().take(*len as usize) {
                         axpy(w[j], &b[row as usize * n..row as usize * n + n], crow);
                     }
@@ -227,14 +248,17 @@ pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], thre
             }
         }
     };
-    if threads <= 1 {
+    if pool.threads() <= 1 {
         run(c, 0, plan.out_c);
         return;
     }
-    let c_ptr = SendPtr(c.as_mut_ptr());
-    crate::util::threadpool::parallel_chunks(plan.out_c, threads, |lo, hi, _| {
-        let c_all = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), plan.out_c * n) };
-        run(c_all, lo, hi);
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_chunks(plan.out_c, |lo, hi, _| {
+        // SAFETY: each chunk materialises only its own disjoint filter
+        // range of C.
+        let c_sub =
+            unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(lo * n), (hi - lo) * n) };
+        run(c_sub, lo, hi);
     });
 }
 
@@ -248,25 +272,11 @@ pub fn spmm_column_compact(
     b_packed: &[f32],
     n: usize,
     c: &mut [f32],
-    threads: usize,
+    pool: &ComputePool,
 ) {
     debug_assert_eq!(packed_w.len(), m * kept);
     debug_assert_eq!(b_packed.len(), kept * n);
-    super::gemm::gemm(m, kept, n, packed_w, b_packed, c, threads);
-}
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    /// Accessor that forces the closure to capture the whole wrapper
-    /// (edition-2021 closures capture individual fields otherwise,
-    /// defeating the Send/Sync impls).
-    #[inline]
-    fn get(self) -> *mut f32 {
-        self.0
-    }
+    super::gemm::gemm(m, kept, n, packed_w, b_packed, c, pool);
 }
 
 #[cfg(test)]
@@ -296,7 +306,7 @@ mod tests {
             let mut c1 = vec![0.0; gv.rows * n];
             let mut c2 = vec![0.0; gv.rows * n];
             let csr = Csr::from_dense(&gv);
-            spmm_csr(&csr, &b, n, &mut c1, rng.range(1, 5));
+            spmm_csr(&csr, &b, n, &mut c1, &ComputePool::new(rng.range(1, 5)));
             gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
             let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
             assert!(err < 1e-3, "err={}", err);
@@ -316,7 +326,9 @@ mod tests {
             let sched = Schedule::build(&plan, threads);
             let mut c1 = vec![0.0; gv.rows * n];
             let mut c2 = vec![0.0; gv.rows * n];
-            spmm_reordered(&plan, &sched, &b, n, &mut c1);
+            // Pool size deliberately independent of the schedule's lane
+            // count: lanes stride over pool threads.
+            spmm_reordered(&plan, &sched, &b, n, &mut c1, &ComputePool::new(rng.range(1, 4)));
             gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
             let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
             assert!(err < 1e-3, "kind={} err={}", kind, err);
@@ -341,7 +353,7 @@ mod tests {
         }
         let mut c1 = vec![0.0; gv.rows * n];
         let mut c2 = vec![0.0; gv.rows * n];
-        spmm_column_compact(&cc.values, gv.rows, cc.kept(), &bp, n, &mut c1, 2);
+        spmm_column_compact(&cc.values, gv.rows, cc.kept(), &bp, n, &mut c1, &ComputePool::new(2));
         gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
         let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
         assert!(err < 1e-3, "err={}", err);
@@ -366,7 +378,7 @@ mod tests {
             let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
             let mut c1 = vec![0.0; o * n];
             let mut c2 = vec![0.0; o * n];
-            spmm_pattern(&plan, &b, n, &mut c1, rng.range(1, 4));
+            spmm_pattern(&plan, &b, n, &mut c1, &ComputePool::new(rng.range(1, 4)));
             gemm_ref(o, gv.cols, n, &gv.data, &b, &mut c2);
             let err: f32 =
                 c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
@@ -381,7 +393,7 @@ mod tests {
         let sched = Schedule::build(&plan, 2);
         let b = vec![1.0; 4 * 5];
         let mut c = vec![0.0; 15];
-        spmm_reordered(&plan, &sched, &b, 5, &mut c);
+        spmm_reordered(&plan, &sched, &b, 5, &mut c, &ComputePool::new(2));
         assert!(c.iter().all(|&x| x == 0.0));
     }
 }

@@ -24,6 +24,8 @@
 //! models to `artifacts/*.hlo.txt` + weight blobs + LR-graph JSON, and the
 //! Rust binary is self-contained afterwards.
 
+#![warn(missing_docs)]
+
 pub mod util;
 pub mod tensor;
 pub mod dsl;

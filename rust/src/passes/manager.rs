@@ -6,10 +6,13 @@ use crate::dsl::Graph;
 /// Statistics of one pass application.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PassStats {
+    /// Pass name.
     pub pass: &'static str,
     /// Pass-specific count (nodes folded / fused / removed).
     pub changed: usize,
+    /// Graph node count before the pass ran.
     pub nodes_before: usize,
+    /// Graph node count after the pass ran.
     pub nodes_after: usize,
 }
 
@@ -50,6 +53,7 @@ impl PassManager {
         }
     }
 
+    /// Names of the registered passes, in run order.
     pub fn pass_names(&self) -> Vec<&'static str> {
         self.passes.iter().map(|(n, _)| *n).collect()
     }

@@ -10,6 +10,7 @@ use anyhow::Result;
 /// `executor::SparseMode` + pass pipeline state).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum VariantKind {
+    /// Dense weights, no graph fusion — the unpruned baseline.
     DenseUnfused,
     /// Pruned, CSR storage, unfused graph.
     CsrUnfused,
@@ -22,11 +23,17 @@ pub enum VariantKind {
 /// Cost breakdown for one node.
 #[derive(Debug, Clone)]
 pub struct OpCost {
+    /// Node name.
     pub name: String,
+    /// Op kind.
     pub kind: &'static str,
+    /// Floating-point operations modeled for the node.
     pub flops: f64,
+    /// Memory traffic modeled for the node.
     pub bytes: f64,
+    /// Modeled execution time.
     pub seconds: f64,
+    /// Which roofline term dominates: "compute", "memory" or "overhead".
     pub bound: &'static str, // "compute" | "memory" | "overhead"
 }
 

@@ -3,6 +3,7 @@
 /// A mobile accelerator roofline description.
 #[derive(Debug, Clone)]
 pub struct Device {
+    /// Device name (shown in bench tables).
     pub name: &'static str,
     /// Peak fp32 throughput, FLOP/s.
     pub peak_flops: f64,

@@ -19,7 +19,9 @@ use crate::util::rng::Rng;
 /// positions within a kh×kw kernel.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PatternSet {
+    /// Kernel height the patterns index into.
     pub kh: usize,
+    /// Kernel width the patterns index into.
     pub kw: usize,
     /// Each inner vec: kept flat positions (r*kw+c), sorted.
     pub patterns: Vec<Vec<usize>>,
@@ -46,10 +48,12 @@ impl PatternSet {
         }
     }
 
+    /// Number of patterns in the dictionary.
     pub fn len(&self) -> usize {
         self.patterns.len()
     }
 
+    /// Whether the dictionary is empty.
     pub fn is_empty(&self) -> bool {
         self.patterns.is_empty()
     }
@@ -93,6 +97,7 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Stable lowercase scheme-kind name.
     pub fn kind(&self) -> &'static str {
         match self {
             Scheme::Dense => "dense",
@@ -285,6 +290,7 @@ pub struct LayerPruning {
 }
 
 impl LayerPruning {
+    /// Scheme for a layer name, if recorded.
     pub fn get(&self, name: &str) -> Option<&Scheme> {
         self.layers.iter().find(|(n, _)| n == name).map(|(_, s)| s)
     }

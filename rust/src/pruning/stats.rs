@@ -8,16 +8,24 @@ use anyhow::Result;
 /// Per-layer sparsity report entry.
 #[derive(Debug, Clone)]
 pub struct LayerSparsity {
+    /// Layer name.
     pub name: String,
+    /// Op kind (e.g. `conv2d`).
     pub kind: &'static str,
+    /// Pruning-scheme kind applied to the layer.
     pub scheme: &'static str,
+    /// Total parameter count of the layer.
     pub params: usize,
+    /// Surviving (nonzero) parameter count.
     pub nonzero: usize,
+    /// MACs of the dense (unpruned) layer.
     pub dense_macs: u64,
+    /// MACs actually executed after pruning.
     pub effective_macs: u64,
 }
 
 impl LayerSparsity {
+    /// Fraction of parameters pruned away.
     pub fn sparsity(&self) -> f64 {
         1.0 - self.nonzero as f64 / self.params.max(1) as f64
     }

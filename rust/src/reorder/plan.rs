@@ -19,6 +19,7 @@ impl FilterGroup {
         (self.rows.len() * self.cols.len()) as u64
     }
 
+    /// Packed weights of the group's i-th row (over the group's columns).
     pub fn packed_row(&self, i: usize) -> &[f32] {
         let k = self.cols.len();
         &self.values[i * k..(i + 1) * k]
@@ -28,8 +29,11 @@ impl FilterGroup {
 /// Full reorder plan for one weight matrix.
 #[derive(Debug, Clone)]
 pub struct ReorderPlan {
+    /// Row count of the original matrix.
     pub rows: usize,
+    /// Column count of the original matrix.
     pub cols: usize,
+    /// Filter groups, each with a shared column support.
     pub groups: Vec<FilterGroup>,
 }
 

@@ -10,15 +10,20 @@ use crate::reorder::plan::ReorderPlan;
 /// One contiguous span of rows within one group, assigned to a thread.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkItem {
+    /// Index into the plan's group list.
     pub group: usize,
+    /// First group-row this item covers.
     pub row_start: usize,
+    /// One past the last group-row this item covers.
     pub row_end: usize,
+    /// Work estimate (MACs) of the item.
     pub macs: u64,
 }
 
 /// Thread schedule: `items[t]` = work items for thread t.
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// Per-lane work lists; lane `t` executes `items[t]` in order.
     pub items: Vec<Vec<WorkItem>>,
 }
 
@@ -61,6 +66,7 @@ impl Schedule {
         Schedule { items }
     }
 
+    /// Number of lanes the schedule was balanced for.
     pub fn threads(&self) -> usize {
         self.items.len()
     }

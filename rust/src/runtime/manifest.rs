@@ -7,16 +7,22 @@ use std::path::{Path, PathBuf};
 /// One AOT-compiled model artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Model name (e.g. `style`).
     pub name: String,
+    /// Variant tag the artifact was lowered under.
     pub variant: String,
+    /// Path to the lowered HLO text file.
     pub hlo_path: PathBuf,
+    /// Input tensor shapes, in call order.
     pub input_shapes: Vec<Vec<usize>>,
+    /// Output tensor shapes, in result order.
     pub output_shapes: Vec<Vec<usize>>,
 }
 
 /// The artifact directory index.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// All artifacts listed by the manifest file.
     pub entries: Vec<ArtifactEntry>,
 }
 
@@ -55,12 +61,14 @@ impl Manifest {
         Ok(Manifest { entries })
     }
 
+    /// Entry by (name, variant), if present.
     pub fn find(&self, name: &str, variant: &str) -> Option<&ArtifactEntry> {
         self.entries
             .iter()
             .find(|e| e.name == name && e.variant == variant)
     }
 
+    /// Distinct artifact names, in manifest order.
     pub fn names(&self) -> Vec<String> {
         self.entries
             .iter()

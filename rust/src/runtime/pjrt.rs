@@ -123,18 +123,22 @@ mod stub {
 
     /// Stub model: same API as the real wrapper, errors at run time.
     pub struct PjrtModel {
+        /// Model name from the manifest entry.
         pub name: String,
     }
 
     impl PjrtModel {
+        /// Load a compiled artifact (always errors: feature disabled).
         pub fn load(_client: &PjrtClient, _entry: &ArtifactEntry) -> Result<PjrtModel> {
             bail!("{}", UNAVAILABLE)
         }
 
+        /// Create a CPU client (always errors: feature disabled).
         pub fn cpu_client() -> Result<PjrtClient> {
             bail!("{}", UNAVAILABLE)
         }
 
+        /// Execute the artifact (always errors: feature disabled).
         pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
             bail!("{}", UNAVAILABLE)
         }

@@ -8,14 +8,20 @@ use crate::sparse::GemmView;
 /// CSR matrix over f32.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
+    /// Row count (output filters M).
     pub rows: usize,
+    /// Column count (GEMM K).
     pub cols: usize,
+    /// Nonzero values, row-major.
     pub values: Vec<f32>,
+    /// Column index per nonzero.
     pub col_idx: Vec<u32>,
+    /// Start offset into `values`/`col_idx` per row (len rows+1).
     pub row_ptr: Vec<u32>,
 }
 
 impl Csr {
+    /// Build from a dense GEMM view, keeping only nonzeros.
     pub fn from_dense(g: &GemmView) -> Self {
         let mut values = Vec::new();
         let mut col_idx = Vec::new();
@@ -34,6 +40,7 @@ impl Csr {
         Csr { rows: g.rows, cols: g.cols, values, col_idx, row_ptr }
     }
 
+    /// Number of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -43,6 +50,7 @@ impl Csr {
         self.values.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
     }
 
+    /// Expand back to a dense GEMM view (testing / verification).
     pub fn to_dense(&self) -> GemmView {
         let mut data = vec![0.0f32; self.rows * self.cols];
         for r in 0..self.rows {

@@ -68,30 +68,37 @@ impl Tensor {
         t
     }
 
+    /// Dimension sizes.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Flat row-major data.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major data.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the flat data vector.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -122,11 +129,13 @@ impl Tensor {
     }
 
     #[inline]
+    /// NCHW element read (rank-4 tensors).
     pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
         self.data[self.idx4(n, c, h, w)]
     }
 
     #[inline]
+    /// NCHW element write (rank-4 tensors).
     pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
         let i = self.idx4(n, c, h, w);
         self.data[i] = v;

@@ -7,9 +7,11 @@ use std::collections::HashMap;
 /// Parsed command line: subcommand + options + positionals.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare word, if any (e.g. `run` in `prt-dnn run --app sr`).
     pub subcommand: Option<String>,
     opts: HashMap<String, String>,
     flags: Vec<String>,
+    /// Remaining bare words after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -41,26 +43,32 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Value of `--key=value` / `--key value`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, or `default`.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Value of `--key` parsed as usize, or `default`.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Value of `--key` parsed as f64, or `default`.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether the bare flag `--name` was passed.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

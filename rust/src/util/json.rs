@@ -12,10 +12,15 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// Null literal.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number (all JSON numbers are stored as f64).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
     /// Object: insertion-ordered key list + map for O(log n) lookup.
     Obj(JsonObj),
@@ -29,10 +34,12 @@ pub struct JsonObj {
 }
 
 impl JsonObj {
+    /// Empty object.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Insert a key/value pair, keeping first-insertion key order.
     pub fn insert(&mut self, key: impl Into<String>, value: impl Into<Json>) {
         let key = key.into();
         if !self.map.contains_key(&key) {
@@ -41,22 +48,27 @@ impl JsonObj {
         self.map.insert(key, value.into());
     }
 
+    /// Value for `key`, if present.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.map.get(key)
     }
 
+    /// Whether `key` is present.
     pub fn contains_key(&self, key: &str) -> bool {
         self.map.contains_key(key)
     }
 
+    /// Number of keys.
     pub fn len(&self) -> usize {
         self.keys.len()
     }
 
+    /// Whether the object has no keys.
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }
 
+    /// Iterate pairs in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
         self.keys.iter().map(move |k| (k, &self.map[k]))
     }
@@ -116,6 +128,7 @@ impl From<&[usize]> for Json {
 impl Json {
     // ---- typed accessors -------------------------------------------------
 
+    /// Number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -123,14 +136,17 @@ impl Json {
         }
     }
 
+    /// Number value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Number value truncated to i64, if this is a `Num`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// Boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -138,6 +154,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -145,6 +162,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -152,6 +170,7 @@ impl Json {
         }
     }
 
+    /// Object value, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&JsonObj> {
         match self {
             Json::Obj(o) => Some(o),
@@ -171,6 +190,7 @@ impl Json {
             .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
     }
 
+    /// `[f64]` array field as an f32 vector.
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_f64().map(|x| x as f32)).collect())
@@ -291,7 +311,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

@@ -6,13 +6,21 @@ use std::time::Duration;
 /// Summary statistics over a sample of durations (or any f64 metric).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
@@ -37,6 +45,7 @@ impl Summary {
         }
     }
 
+    /// Compute from durations, in milliseconds.
     pub fn from_durations(ds: &[Duration]) -> Self {
         let ms: Vec<f64> = ds.iter().map(|d| d.as_secs_f64() * 1e3).collect();
         Self::from_samples(&ms)
@@ -63,26 +72,32 @@ pub struct LatencyRecorder {
 }
 
 impl LatencyRecorder {
+    /// Empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one duration.
     pub fn record(&mut self, d: Duration) {
         self.samples_ms.push(d.as_secs_f64() * 1e3);
     }
 
+    /// Record one sample already in milliseconds.
     pub fn record_ms(&mut self, ms: f64) {
         self.samples_ms.push(ms);
     }
 
+    /// Number of recorded samples.
     pub fn len(&self) -> usize {
         self.samples_ms.len()
     }
 
+    /// Whether nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.samples_ms.is_empty()
     }
 
+    /// Summarise the recorded samples (None when empty).
     pub fn summary(&self) -> Option<Summary> {
         if self.samples_ms.is_empty() {
             None

@@ -1,122 +1,466 @@
-//! Scoped fork-join helpers over `std::thread` (no rayon offline).
+//! Persistent fork-join compute pool for the kernels.
 //!
 //! The compute kernels need exactly one primitive: *split an index range
-//! into chunks and run a closure on each chunk on its own thread*. For the
-//! serving coordinator a long-lived [`WorkerPool`] with a shared injector
-//! queue is provided.
+//! into parts and run a closure on each part in parallel, blocking until
+//! all parts complete*. Before this pool existed that primitive was built
+//! on `std::thread::scope`, which pays thread creation, stack allocation
+//! and join latency on **every kernel call** — per layer, per frame. A
+//! [`ComputePool`] instead spawns its workers once at construction and
+//! then dispatches an unbounded number of fork-join tasks with **zero
+//! heap allocations per dispatch**.
+//!
+//! # Dispatch protocol
+//!
+//! A pool with budget `threads` owns `threads - 1` long-lived workers; the
+//! dispatching (caller) thread always executes part 0 itself, so a
+//! single-threaded pool needs no workers at all. Work is published through
+//! one shared task slot guarded by a mutex:
+//!
+//! 1. The caller writes the task into the slot — a type-erased pointer to
+//!    the closure (passed *by reference* through the raw-pointer cell,
+//!    never boxed) plus a monomorphized trampoline `fn` — bumps the
+//!    **epoch counter** and wakes the workers.
+//! 2. Each worker observes the new epoch (spinning briefly on a lock-free
+//!    epoch mirror, then parking on a condvar), runs its part if its index
+//!    is below the task's part count, and checks in by decrementing the
+//!    outstanding count under the slot mutex.
+//! 3. The caller runs part 0 on its own thread, then blocks until the
+//!    outstanding count reaches zero. Only then may the closure's stack
+//!    frame die — the borrow the workers ran through never dangles.
+//!
+//! # Invariants
+//!
+//! * **Zero heap allocations per dispatch.** The closure crosses threads
+//!   as a raw pointer + trampoline, the cursor of
+//!   [`ComputePool::parallel_dynamic`] lives on the caller's stack, and
+//!   all waiting uses the slot mutex + condvars (no channels, no boxing).
+//!   Verified end-to-end by `rust/tests/zero_alloc.rs` at `threads = 4`.
+//! * **Panic safety.** A panic inside a worker's part is caught at the
+//!   part boundary and re-raised *on the caller thread* after the join,
+//!   with its original payload. The pool stays usable afterwards: workers never unwind
+//!   their loop and the slot mutex is never poisoned. A panic in the
+//!   caller's own part 0 still waits for all workers to check in before
+//!   unwinding further, so the shared closure cannot be torn down while a
+//!   worker is reading it.
+//! * **Nested dispatch falls back inline.** A dispatch issued from inside
+//!   a pool task (worker part or re-entrantly from the caller's part 0)
+//!   runs serially on the current thread instead of deadlocking on the
+//!   busy task slot. Results are identical either way — every part
+//!   computes the same values regardless of which thread runs it.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// Run `f(chunk_start, chunk_end, chunk_index)` over `n` items split into
-/// `threads` contiguous chunks, in parallel, blocking until all complete.
+/// Spin iterations a worker burns waiting for a new epoch before parking
+/// on the condvar. Keeps dispatch latency low inside frame loops (the next
+/// kernel usually arrives within microseconds) without pinning a core
+/// while the pool is idle between frames.
+const SPIN_ROUNDS: u32 = 1 << 12;
+
+/// Raw-pointer wrapper that may cross thread boundaries. Sound to use only
+/// under the chunking protocol: every parallel part touches a disjoint
+/// range of the pointee, so no two threads ever alias the same element
+/// mutably.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub(crate) fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    /// Accessor that forces closures to capture the whole wrapper
+    /// (edition-2021 closures capture individual fields otherwise,
+    /// defeating the Send/Sync impls).
+    #[inline]
+    pub(crate) fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// Monomorphized trampoline signature: invoke the type-erased closure at
+/// `task` with a part index.
+type RawCall = unsafe fn(*const (), usize);
+
+/// The shared task slot. All fields are guarded by `Shared::slot`'s mutex;
+/// the raw closure pointer is only dereferenced between epoch publication
+/// and the caller's join, while the closure's stack frame is pinned by the
+/// blocked caller.
+struct Slot {
+    /// Fork-join generation counter; bumping it publishes a new task.
+    epoch: u64,
+    /// Type-erased pointer to the dispatch closure (lives on the caller's
+    /// stack for the duration of the dispatch — never boxed).
+    task: *const (),
+    /// Trampoline that invokes `task` with a part index.
+    call: Option<RawCall>,
+    /// Parts in the current task (caller runs part 0, workers 1..parts).
+    parts: usize,
+    /// Workers that have not yet checked in for the current epoch.
+    outstanding: usize,
+    /// Worker panics observed in the current epoch.
+    panics: usize,
+    /// First worker panic's payload, re-raised on the caller so the
+    /// original message/location survive (cold path — the box was already
+    /// allocated by the panic itself).
+    panic_payload: Option<Box<dyn Any + Send>>,
+    /// Set once on drop: workers exit their loop.
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Lock-free mirror of `Slot::epoch` so idle workers can spin briefly
+    /// without hammering the mutex.
+    epoch_hint: AtomicU64,
+    /// Workers park here waiting for a new epoch (or shutdown).
+    work_cv: Condvar,
+    /// The caller parks here waiting for `outstanding == 0`.
+    done_cv: Condvar,
+}
+
+// SAFETY: `Slot::task` makes `Slot` non-Send by default. The dispatch
+// protocol guarantees the pointee outlives every dereference (the caller
+// blocks until all workers have checked in before the closure's frame
+// dies), so sharing the slot across the pool's threads is sound.
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+thread_local! {
+    /// True while this thread executes inside a pool dispatch (as caller
+    /// or worker); nested dispatches then run inline instead of
+    /// deadlocking on the busy task slot.
+    static IN_DISPATCH: Cell<bool> = Cell::new(false);
+}
+
+fn worker_loop(shared: &Shared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        // Spin-then-park: cheap poll on the epoch mirror first.
+        let mut spins = 0u32;
+        while shared.epoch_hint.load(Ordering::Acquire) == seen && spins < SPIN_ROUNDS {
+            std::hint::spin_loop();
+            spins += 1;
+        }
+        let (task, call, parts) = {
+            let mut slot = shared.slot.lock().unwrap();
+            while slot.epoch == seen && !slot.shutdown {
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+            if slot.shutdown {
+                return;
+            }
+            seen = slot.epoch;
+            (slot.task, slot.call, slot.parts)
+        };
+        let mut payload: Option<Box<dyn Any + Send>> = None;
+        if index < parts {
+            if let Some(call) = call {
+                IN_DISPATCH.with(|f| f.set(true));
+                // SAFETY: the caller pins the closure until every worker
+                // has checked in below; `call` is the matching trampoline
+                // for the closure type behind `task`.
+                payload =
+                    catch_unwind(AssertUnwindSafe(|| unsafe { call(task, index) })).err();
+                IN_DISPATCH.with(|f| f.set(false));
+            }
+        }
+        let mut slot = shared.slot.lock().unwrap();
+        if let Some(p) = payload {
+            slot.panics += 1;
+            // Keep the first payload; later ones drop (their message is
+            // usually the same kernel failing on another chunk).
+            if slot.panic_payload.is_none() {
+                slot.panic_payload = Some(p);
+            }
+        }
+        slot.outstanding -= 1;
+        if slot.outstanding == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Long-lived worker threads + shared task slot of a multi-threaded pool.
+struct Inner {
+    shared: Arc<Shared>,
+    /// Serialises dispatchers when several OS threads share one pool; held
+    /// for the full publish → join window of each dispatch.
+    dispatch_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Persistent fork-join compute pool: `threads - 1` long-lived workers
+/// plus the dispatching caller thread.
 ///
-/// Chunks are balanced to within one item. `threads == 1` or tiny `n`
-/// degrades to an inline call (no spawn overhead on the hot path).
-pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
-where
-    F: Fn(usize, usize, usize) + Sync,
-{
-    if n == 0 {
-        return;
-    }
-    let threads = threads.max(1).min(n);
-    if threads == 1 {
-        f(0, n, 0);
-        return;
-    }
-    let base = n / threads;
-    let rem = n % threads;
-    std::thread::scope(|scope| {
-        let mut start = 0usize;
-        for t in 0..threads {
-            let len = base + usize::from(t < rem);
-            let end = start + len;
-            let fr = &f;
-            scope.spawn(move || fr(start, end, t));
-            start = end;
-        }
-    });
+/// Construction spawns the workers **once**; every
+/// [`parallel_chunks`](ComputePool::parallel_chunks) /
+/// [`parallel_dynamic`](ComputePool::parallel_dynamic) /
+/// [`parallel_parts`](ComputePool::parallel_parts) call afterwards reuses
+/// them with zero heap allocations per dispatch (see the module docs for
+/// the protocol). Dropping the pool shuts the workers down and joins them.
+pub struct ComputePool {
+    inner: Option<Inner>,
+    threads: usize,
 }
 
-/// Dynamic work-stealing-ish variant: threads pull block indices from a
-/// shared atomic counter. Better for irregular per-block cost (sparse GEMM
-/// before reorder balances it).
-pub fn parallel_dynamic<F>(blocks: usize, threads: usize, f: F)
-where
-    F: Fn(usize) + Sync,
-{
-    let threads = threads.max(1).min(blocks.max(1));
-    if threads == 1 {
-        for b in 0..blocks {
-            f(b);
+impl ComputePool {
+    /// Build a pool with a total parallelism budget of `threads` (clamped
+    /// to at least 1): the caller thread plus `threads - 1` spawned
+    /// workers. `threads == 1` spawns nothing and runs every dispatch
+    /// inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return ComputePool { inner: None, threads: 1 };
         }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let fr = &f;
-            let nx = &next;
-            scope.spawn(move || loop {
-                let b = nx.fetch_add(1, Ordering::Relaxed);
-                if b >= blocks {
-                    break;
-                }
-                fr(b);
-            });
-        }
-    });
-}
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// Long-lived worker pool for the serving coordinator.
-pub struct WorkerPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    pub size: usize,
-}
-
-impl WorkerPool {
-    pub fn new(size: usize) -> Self {
-        let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..size)
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                task: std::ptr::null(),
+                call: None,
+                parts: 0,
+                outstanding: 0,
+                panics: 0,
+                panic_payload: None,
+                shutdown: false,
+            }),
+            epoch_hint: AtomicU64::new(0),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..threads)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
-                    .name(format!("prt-worker-{}", i))
-                    .spawn(move || loop {
-                        let job = rx.lock().unwrap().recv();
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed: shut down
-                        }
-                    })
-                    .expect("spawn worker")
+                    .name(format!("prt-compute-{}", i))
+                    .spawn(move || worker_loop(&sh, i))
+                    .expect("spawn compute-pool worker")
             })
             .collect();
-        WorkerPool { tx: Some(tx), handles, size }
+        ComputePool {
+            inner: Some(Inner { shared, dispatch_lock: Mutex::new(()), handles }),
+            threads,
+        }
     }
 
-    /// Submit a job; panics if the pool is shut down.
-    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(job))
-            .expect("worker pool channel closed");
+    /// A free, never-spawning single-threaded pool: every dispatch runs
+    /// inline on the caller. Used by the Tensor-convenience kernel
+    /// wrappers and anywhere parallelism is not wanted.
+    pub fn serial() -> Self {
+        ComputePool { inner: None, threads: 1 }
+    }
+
+    /// Total parallelism budget (spawned workers + the caller thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(chunk_start, chunk_end, chunk_index)` over `n` items split
+    /// into at most [`threads`](ComputePool::threads) contiguous chunks,
+    /// in parallel, blocking until all complete.
+    ///
+    /// Chunks are balanced to within one item. A single-threaded pool,
+    /// `n <= 1`, or a nested dispatch degrades to an inline call over the
+    /// same partition. Note the partition itself depends on the pool size
+    /// (`chunks = threads.min(n)`): bitwise reproducibility across pool
+    /// sizes is a property the *closure* must provide (every kernel here
+    /// does, by computing each element with a chunk-independent fp
+    /// expression — enforced by the kernels' bitwise tests), not a
+    /// guarantee the pool can make for arbitrary chunk-local reductions.
+    pub fn parallel_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunks = self.threads.min(n);
+        if chunks == 1 {
+            f(0, n, 0);
+            return;
+        }
+        let base = n / chunks;
+        let rem = n % chunks;
+        self.dispatch(chunks, &|t: usize| {
+            let start = t * base + t.min(rem);
+            let end = start + base + usize::from(t < rem);
+            f(start, end, t);
+        });
+    }
+
+    /// Dynamic variant: parts pull block indices from a shared atomic
+    /// cursor (which lives on the caller's stack — no allocation). Better
+    /// for irregular per-block cost (sparse GEMM before reorder balances
+    /// it).
+    pub fn parallel_dynamic<F>(&self, blocks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if blocks == 0 {
+            return;
+        }
+        let parts = self.threads.min(blocks);
+        if parts == 1 {
+            for b in 0..blocks {
+                f(b);
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        self.dispatch(parts, &|_part: usize| loop {
+            let b = cursor.fetch_add(1, Ordering::Relaxed);
+            if b >= blocks {
+                break;
+            }
+            f(b);
+        });
+    }
+
+    /// Run `f(part)` once for every `part` in `0..parts`. When `parts`
+    /// exceeds the thread budget, participants stride over the part space
+    /// (participant `p` runs parts `p, p + lanes, p + 2·lanes, …`), so a
+    /// schedule built for more lanes than the pool has still executes
+    /// every lane — each lane entirely on one thread, preserving the
+    /// per-lane execution order.
+    pub fn parallel_parts<F>(&self, parts: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if parts == 0 {
+            return;
+        }
+        let lanes = self.threads.min(parts);
+        if lanes == 1 {
+            for t in 0..parts {
+                f(t);
+            }
+            return;
+        }
+        self.dispatch(lanes, &|lane: usize| {
+            let mut t = lane;
+            while t < parts {
+                f(t);
+                t += lanes;
+            }
+        });
+    }
+
+    /// Core fork-join dispatch: run `f(part)` for `part` in `0..parts`
+    /// across the pool (the caller runs part 0), blocking until all parts
+    /// complete. `parts` is at most `self.threads` (the public wrappers
+    /// clamp). Allocation-free; see the module docs for the protocol.
+    fn dispatch<F>(&self, parts: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        debug_assert!(parts >= 1 && parts <= self.threads);
+        let inner = match &self.inner {
+            // Nested dispatch (from a worker part or from part 0 of an
+            // active dispatch on this thread) falls back to inline
+            // execution rather than deadlocking on the busy slot.
+            Some(inner) if parts > 1 && !IN_DISPATCH.with(|fl| fl.get()) => inner,
+            _ => {
+                for t in 0..parts {
+                    f(t);
+                }
+                return;
+            }
+        };
+
+        unsafe fn trampoline<F: Fn(usize) + Sync>(task: *const (), part: usize) {
+            (*(task as *const F))(part);
+        }
+
+        // One dispatcher at a time. Recover rather than unwrap: a worker
+        // panic is re-raised below *while this guard is held*, poisoning
+        // the lock; the pool must stay usable afterwards.
+        let _exclusive = match inner.dispatch_lock.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let shared = &*inner.shared;
+        {
+            let mut slot = shared.slot.lock().unwrap();
+            debug_assert_eq!(slot.outstanding, 0, "previous dispatch not joined");
+            slot.task = f as *const F as *const ();
+            slot.call = Some(trampoline::<F>);
+            slot.parts = parts;
+            slot.outstanding = self.threads - 1;
+            slot.panics = 0;
+            // Normally already None (the previous dispatch took it); a
+            // stale payload can only remain if part 0 itself panicked, so
+            // this assignment never allocates or frees on the hot path.
+            slot.panic_payload = None;
+            slot.epoch += 1;
+            shared.epoch_hint.store(slot.epoch, Ordering::Release);
+            shared.work_cv.notify_all();
+        }
+
+        /// Join guard: waits for every worker to check in. Runs on the
+        /// normal path *and* when part 0 panics below — the workers
+        /// borrow `f` from this stack frame, so the frame must not unwind
+        /// past them.
+        struct Join<'a>(&'a Shared);
+        impl Drop for Join<'_> {
+            fn drop(&mut self) {
+                let mut slot = self.0.slot.lock().unwrap();
+                while slot.outstanding != 0 {
+                    slot = self.0.done_cv.wait(slot).unwrap();
+                }
+                slot.task = std::ptr::null();
+                slot.call = None;
+                IN_DISPATCH.with(|fl| fl.set(false));
+            }
+        }
+
+        IN_DISPATCH.with(|fl| fl.set(true));
+        let join = Join(shared);
+        f(0);
+        drop(join);
+        let (panics, payload) = {
+            let mut slot = shared.slot.lock().unwrap();
+            (slot.panics, slot.panic_payload.take())
+        };
+        if let Some(p) = payload {
+            // Re-raise the first worker panic with its original payload so
+            // the message/location survive the thread hop.
+            resume_unwind(p);
+        }
+        if panics > 0 {
+            panic!("compute pool: {} worker part(s) panicked", panics);
+        }
     }
 }
 
-impl Drop for WorkerPool {
+impl Drop for ComputePool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close channel; workers drain and exit
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        if let Some(inner) = self.inner.take() {
+            {
+                let mut slot = inner.shared.slot.lock().unwrap();
+                slot.shutdown = true;
+                // Kick spinners out of the epoch poll promptly (any value
+                // different from every published epoch works).
+                inner.shared.epoch_hint.store(u64::MAX, Ordering::Release);
+                inner.shared.work_cv.notify_all();
+            }
+            for h in inner.handles {
+                let _ = h.join();
+            }
         }
+    }
+}
+
+impl std::fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputePool").field("threads", &self.threads).finish()
     }
 }
 
@@ -127,8 +471,9 @@ mod tests {
 
     #[test]
     fn chunks_cover_range_exactly() {
+        let pool = ComputePool::new(7);
         let hits = AtomicU64::new(0);
-        parallel_chunks(1003, 7, |s, e, _| {
+        pool.parallel_chunks(1003, |s, e, _| {
             hits.fetch_add((e - s) as u64, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1003);
@@ -136,8 +481,9 @@ mod tests {
 
     #[test]
     fn chunks_single_thread_inline() {
+        let pool = ComputePool::serial();
         let hits = AtomicU64::new(0);
-        parallel_chunks(10, 1, |s, e, t| {
+        pool.parallel_chunks(10, |s, e, t| {
             assert_eq!((s, e, t), (0, 10, 0));
             hits.fetch_add(1, Ordering::Relaxed);
         });
@@ -145,36 +491,156 @@ mod tests {
     }
 
     #[test]
+    fn chunk_partition_is_balanced_and_ordered() {
+        // Every index covered exactly once, chunks contiguous and within
+        // one item of each other.
+        let pool = ComputePool::new(4);
+        let n = 11;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_chunks(n, |s, e, _| {
+            assert!(e - s == 2 || e - s == 3, "unbalanced chunk {}..{}", s, e);
+            for i in s..e {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
     fn dynamic_visits_every_block_once() {
+        let pool = ComputePool::new(5);
         let n = 257;
         let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-        parallel_dynamic(n, 5, |b| {
+        pool.parallel_dynamic(n, |b| {
             counts[b].fetch_add(1, Ordering::Relaxed);
         });
         assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
     }
 
     #[test]
-    fn worker_pool_executes_all_jobs() {
-        let pool = WorkerPool::new(4);
-        let counter = Arc::new(AtomicUsize::new(0));
-        let (done_tx, done_rx) = mpsc::channel();
-        for _ in 0..100 {
-            let c = Arc::clone(&counter);
-            let tx = done_tx.clone();
-            pool.submit(move || {
-                c.fetch_add(1, Ordering::SeqCst);
-                tx.send(()).unwrap();
+    fn parts_stride_covers_more_parts_than_threads() {
+        let pool = ComputePool::new(3);
+        let n = 10; // more lanes than threads: participants stride
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_parts(n, |t| {
+            counts[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_dispatches() {
+        // The whole point: one spawn, thousands of fork-joins.
+        let pool = ComputePool::new(4);
+        let total = AtomicU64::new(0);
+        for round in 0..500 {
+            pool.parallel_chunks(64 + round % 7, |s, e, _| {
+                total.fetch_add((e - s) as u64, Ordering::Relaxed);
             });
         }
-        for _ in 0..100 {
-            done_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let want: u64 = (0..500u64).map(|r| 64 + r % 7).sum();
+        assert_eq!(total.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn nested_dispatch_falls_back_inline() {
+        let pool = ComputePool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.parallel_chunks(4, |s, e, _| {
+            // Nested call from inside a part: must run inline, not hang.
+            pool.parallel_chunks(8, |s2, e2, _| {
+                hits.fetch_add(((e2 - s2) * (e - s)) as u64, Ordering::Relaxed);
+            });
+        });
+        // 4 outer parts of 1 item each, every one running all 8 inner items.
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn worker_panic_propagates_without_poisoning() {
+        let pool = ComputePool::new(4);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_chunks(4, |s, _e, _t| {
+                if s != 0 {
+                    panic!("boom in worker part");
+                }
+            });
+        }));
+        let payload = err.expect_err("worker panic must reach the caller");
+        // The original payload is re-raised, not a generic wrapper.
+        assert_eq!(
+            payload.downcast_ref::<&str>().copied(),
+            Some("boom in worker part"),
+        );
+        // The pool is NOT poisoned: the next dispatch works normally.
+        let hits = AtomicU64::new(0);
+        pool.parallel_chunks(100, |s, e, _| {
+            hits.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn caller_part_panic_joins_workers_first() {
+        let pool = ComputePool::new(4);
+        let worker_items = Arc::new(AtomicU64::new(0));
+        let wi = Arc::clone(&worker_items);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_chunks(4, |s, e, t| {
+                if t == 0 {
+                    panic!("boom in caller part");
+                }
+                wi.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+        }));
+        assert!(err.is_err());
+        // All three worker parts completed before the unwind finished.
+        assert_eq!(worker_items.load(Ordering::Relaxed), 3);
+        // And the pool still works.
+        let hits = AtomicU64::new(0);
+        pool.parallel_chunks(10, |s, e, _| {
+            hits.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialise() {
+        // Two OS threads sharing one pool must not corrupt each other's
+        // tasks (the dispatch lock serialises them).
+        let pool = Arc::new(ComputePool::new(3));
+        let total = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let p = Arc::clone(&pool);
+            let t = Arc::clone(&total);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    p.parallel_chunks(30, |s, e, _| {
+                        t.fetch_add((e - s) as u64, Ordering::Relaxed);
+                    });
+                }
+            }));
         }
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 2 * 200 * 30);
     }
 
     #[test]
     fn zero_items_is_noop() {
-        parallel_chunks(0, 4, |_, _, _| panic!("should not run with n=0 chunk"));
+        let pool = ComputePool::new(4);
+        pool.parallel_chunks(0, |_, _, _| panic!("should not run with n=0"));
+        pool.parallel_dynamic(0, |_| panic!("should not run with blocks=0"));
+        pool.parallel_parts(0, |_| panic!("should not run with parts=0"));
+    }
+
+    #[test]
+    fn budget_is_clamped_and_reported() {
+        assert_eq!(ComputePool::new(0).threads(), 1);
+        assert_eq!(ComputePool::new(1).threads(), 1);
+        assert_eq!(ComputePool::new(4).threads(), 4);
+        assert_eq!(ComputePool::serial().threads(), 1);
     }
 }

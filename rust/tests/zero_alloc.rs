@@ -1,15 +1,17 @@
-//! Acceptance check for the static memory planner: steady-state
-//! `ExecContext::run_into` performs **zero heap allocations** for
-//! intermediates, and two consecutive runs allocate no new arena bytes.
+//! Acceptance check for the static memory planner **and the persistent
+//! compute pool**: steady-state `ExecContext::run_into` performs **zero
+//! heap allocations** — at `threads = 1` and at `threads = 4` — and two
+//! consecutive runs allocate no new arena bytes.
 //!
 //! A counting global allocator wraps the system allocator; the measured
 //! loop takes the minimum over several trials so unrelated background
 //! allocation (test harness bookkeeping) cannot flake the assertion.
-//! Plans are compiled with `threads = 1`: multi-threaded kernels spawn
-//! scoped OS threads per call, which allocate at the system layer by
-//! design.
+//! Multi-threaded kernels fork-join on the context's pool (spawned once
+//! at `ExecContext::for_plan`), passing the closure by reference through
+//! the pool's task slot — so even at `threads = 4` a frame allocates
+//! nothing: no thread spawns, no boxed jobs, no channel nodes.
 
-use prt_dnn::apps::builders::{build_coloring, build_style};
+use prt_dnn::apps::builders::{build_coloring, build_sr, build_style};
 use prt_dnn::apps::{prune_graph, AppSpec};
 use prt_dnn::executor::{ExecConfig, ExecContext, Planner};
 use prt_dnn::tensor::Tensor;
@@ -38,13 +40,16 @@ fn min_allocs_per_frame(
 
 fn assert_zero_alloc(tag: &str, g: &prt_dnn::dsl::Graph, cfg: &ExecConfig) {
     let plan = Planner::plan(g, cfg).unwrap();
+    // Pool workers spawn here — at construction, never per frame.
     let mut ctx = ExecContext::for_plan(&plan);
+    assert_eq!(ctx.pool().threads(), cfg.threads.max(1), "{}: pool size", tag);
     let mut outs: Vec<Tensor> =
         plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
     let x = Tensor::full(&plan.input_shapes()[0], 0.5);
 
-    // Warm up (first frames may touch lazily initialised state), then
-    // assert the arena is already exactly plan-sized and stays that way.
+    // Warm up (first frames may touch lazily initialised state: OS mutex /
+    // condvar internals, thread-locals), then assert the arena is already
+    // exactly plan-sized and stays that way.
     ctx.run_into(&plan, std::slice::from_ref(&x), &mut outs).unwrap();
     let (arena0, scratch0) = (ctx.arena_len(), ctx.scratch_len());
     assert_eq!(arena0, plan.arena_len(), "{}: arena != plan size", tag);
@@ -66,23 +71,49 @@ fn assert_zero_alloc(tag: &str, g: &prt_dnn::dsl::Graph, cfg: &ExecConfig) {
 /// One test fn on purpose: the allocation counter is process-global, so
 /// concurrently running sibling tests (the default harness behaviour)
 /// would allocate inside each other's measurement windows and flake the
-/// `min == 0` assertion. Serializing the three configurations inside a
-/// single test keeps the counter quiet during every measured frame.
+/// `min == 0` assertion. Serializing all configurations inside a single
+/// test keeps the counter quiet during every measured frame. (The pool's
+/// own worker threads are quiet too: steady-state dispatch only spins or
+/// parks on a condvar.)
 #[test]
 fn steady_state_is_allocation_free() {
-    // Dense baseline.
-    let g = build_style(48, 0.25, 51);
-    assert_zero_alloc("style/dense", &g, &ExecConfig::dense(1));
+    for &threads in &[1usize, 4] {
+        // Dense baseline.
+        let g = build_style(48, 0.25, 51);
+        assert_zero_alloc(
+            &format!("style/dense/t{}", threads),
+            &g,
+            &ExecConfig::dense(threads),
+        );
 
-    // Style transfer uses column pruning → ColumnCompact kernels.
-    let mut g = build_style(48, 0.25, 52);
-    let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
-    assert!(!schemes.is_empty());
-    assert_zero_alloc("style/compact", &g, &ExecConfig::compact(1, schemes));
+        // Style transfer uses column pruning → ColumnCompact kernels.
+        let mut g = build_style(48, 0.25, 52);
+        let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
+        assert!(!schemes.is_empty());
+        assert_zero_alloc(
+            &format!("style/compact/t{}", threads),
+            &g,
+            &ExecConfig::compact(threads, schemes),
+        );
 
-    // Coloring uses pattern pruning → PatternPlan kernels.
-    let mut g = build_coloring(48, 0.25, 53);
-    let schemes = prune_graph(&mut g, &AppSpec::for_app("coloring"));
-    assert!(!schemes.is_empty());
-    assert_zero_alloc("coloring/compact", &g, &ExecConfig::compact(1, schemes));
+        // Coloring uses pattern pruning → PatternPlan kernels.
+        let mut g = build_coloring(48, 0.25, 53);
+        let schemes = prune_graph(&mut g, &AppSpec::for_app("coloring"));
+        assert!(!schemes.is_empty());
+        assert_zero_alloc(
+            &format!("coloring/compact/t{}", threads),
+            &g,
+            &ExecConfig::compact(threads, schemes),
+        );
+
+        // Super resolution: pattern pruning + pixel shuffle tail.
+        let mut g = build_sr(24, 4, 0.25, 54);
+        let schemes = prune_graph(&mut g, &AppSpec::for_app("sr"));
+        assert!(!schemes.is_empty());
+        assert_zero_alloc(
+            &format!("sr/compact/t{}", threads),
+            &g,
+            &ExecConfig::compact(threads, schemes),
+        );
+    }
 }
