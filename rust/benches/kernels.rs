@@ -11,9 +11,10 @@ use prt_dnn::kernels::gemm::gemm;
 use prt_dnn::kernels::im2col::ConvGeom;
 use prt_dnn::pruning::scheme::{project_scheme, Scheme};
 use prt_dnn::pruning::verify::apply_mask;
-use prt_dnn::reorder::{ReorderPlan, Schedule};
+use prt_dnn::reorder::{ReorderPlan, Schedule as LaneSchedule};
 use prt_dnn::sparse::{ColumnCompact, Csr, GemmView};
 use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::Schedule;
 use prt_dnn::util::rng::Rng;
 use prt_dnn::util::threadpool::ComputePool;
 
@@ -63,10 +64,11 @@ fn main() {
         format!("K-micro conv tiers (64x32x3x3 @ {0}x{0}, {1} threads)", hw, threads),
         &["tier", "sparsity", "ms", "vs dense"],
     );
+    let sched = Schedule::default();
     let dense_s = bench_ms(2, 8, || {
         conv2d_dense(
             x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity, &pool,
-            &mut scratch, &mut out,
+            &mut scratch, &sched, &mut out,
         );
     });
     t.row(&["dense".into(), "0%".into(), ms(dense_s.mean), "1.00x".into()]);
@@ -81,7 +83,7 @@ fn main() {
         let csr_s = bench_ms(2, 8, || {
             conv2d_csr(
                 x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity,
-                &pool, &mut scratch, &mut out,
+                &pool, &mut scratch, &sched, &mut out,
             );
         });
         t.row(&[
@@ -96,16 +98,16 @@ fn main() {
             bench_ms(2, 8, || {
                 conv2d_column_compact(
                     x.data(), 1, &cc, &geom, PadMode::Zeros, None, Activation::Identity,
-                    &pool, &mut scratch, &mut out,
+                    &pool, &mut scratch, &sched, &mut out,
                 );
             })
         } else {
             let plan = ReorderPlan::build(&gv);
-            let sched = Schedule::build(&plan, threads);
+            let lanes = LaneSchedule::build(&plan, threads);
             bench_ms(2, 8, || {
                 conv2d_reordered(
-                    x.data(), 1, &plan, &sched, &geom, PadMode::Zeros, None,
-                    Activation::Identity, &pool, &mut scratch, &mut out,
+                    x.data(), 1, &plan, &lanes, &geom, PadMode::Zeros, None,
+                    Activation::Identity, &pool, &mut scratch, &sched, &mut out,
                 );
             })
         };

@@ -4,13 +4,14 @@
 //! CSR-without-reorder vs reordered, across thread counts.
 
 use prt_dnn::bench::{bench_ms, ms, Table};
-use prt_dnn::kernels::sparse_gemm::{spmm_csr, spmm_reordered};
+use prt_dnn::kernels::sparse_gemm::{reordered_panel_len, spmm_csr, spmm_reordered};
 use prt_dnn::pruning::scheme::project_scheme;
 use prt_dnn::pruning::verify::apply_mask;
 use prt_dnn::reorder::schedule::naive_row_loads;
-use prt_dnn::reorder::{load_imbalance, ReorderPlan, Schedule};
+use prt_dnn::reorder::{load_imbalance, ReorderPlan, Schedule as LaneSchedule};
 use prt_dnn::sparse::{Csr, GemmView};
 use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::Schedule;
 use prt_dnn::util::rng::Rng;
 use prt_dnn::util::threadpool::ComputePool;
 
@@ -53,21 +54,23 @@ fn main() {
         ),
         &["threads", "imbalance CSR", "imbalance reorder", "CSR ms", "reorder ms", "speedup"],
     );
+    let tuned = Schedule::default();
     for threads in [1usize, 2, 4, 8] {
         let pool = ComputePool::new(threads);
-        let sched = Schedule::build(&plan, threads);
+        let lanes = LaneSchedule::build(&plan, threads);
         let imb_naive = load_imbalance(&naive_row_loads(&csr.row_nnz(), threads));
-        let imb_ro = load_imbalance(&sched.loads());
+        let imb_ro = load_imbalance(&lanes.loads());
 
         let mut c1 = vec![0.0f32; gv.rows * n];
         let csr_t = bench_ms(2, 12, || {
             c1.iter_mut().for_each(|v| *v = 0.0);
-            spmm_csr(&csr, &b, n, &mut c1, &pool);
+            spmm_csr(&csr, &b, n, &mut c1, &pool, &tuned);
         });
         let mut c2 = vec![0.0f32; gv.rows * n];
+        let mut panel = vec![0.0f32; reordered_panel_len(&plan, n, pool.threads())];
         let ro_t = bench_ms(2, 12, || {
             c2.iter_mut().for_each(|v| *v = 0.0);
-            spmm_reordered(&plan, &sched, &b, n, &mut c2, &pool);
+            spmm_reordered(&plan, &lanes, &b, n, &mut c2, &pool, &mut panel, &tuned);
         });
         // Same math.
         let err: f32 = c1

@@ -12,14 +12,21 @@
 //! per-stage gains and total speedup band (DESIGN.md §6).
 //! Machine-readable `T1-JSON` lines carry latency, memory, warm-up and
 //! allocation counts together so the perf trajectory tracks them all
-//! (fields documented in docs/BENCH_SCHEMA.md).
+//! (fields documented in docs/BENCH_SCHEMA.md). The pruning+compiler
+//! configuration is additionally measured under **auto-tuned schedules**
+//! (`--tune`-equivalent; cache in the system temp dir, warm across bench
+//! invocations) — the `tuned` / `tuned_speedup` fields and columns
+//! compare it against the fixed default schedules.
 
-use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
+use prt_dnn::apps::{
+    build_app, prepare_variant, prepare_variant_tuned, prune_graph, AppSpec, Variant,
+};
 use prt_dnn::bench::{bench_auto_ms, bytes, mem_json, ms, speedup, summary_json, Table};
 use prt_dnn::executor::{Engine, ExecContext};
 use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
 use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
 use prt_dnn::util::json::{Json, JsonObj};
 use std::time::Instant;
@@ -84,6 +91,8 @@ fn main() -> anyhow::Result<()> {
             "peak",
             "warmup",
             "allocs/frame",
+            "tuned ms",
+            "tuned_speedup",
         ],
     );
     let mut json_lines: Vec<Json> = Vec::new();
@@ -127,13 +136,45 @@ fn main() -> anyhow::Result<()> {
             j.insert("memory", mem_json(&eng.memory()));
             j.insert("warmup_ms", warm_ms);
             j.insert("allocs_per_frame", variant_apf);
+            j.insert("tuned", false);
             json_lines.push(Json::Obj(j));
         }
+        // Pruning+compiler once more under auto-tuned schedules. The
+        // cache lives in the temp dir, so repeated bench invocations plan
+        // without a single micro-benchmark run.
+        let tune_path = std::env::temp_dir()
+            .join(format!("prt-dnn-tune-{}-w{}-t{}.json", app, width, threads));
+        let (teng, _) = prepare_variant_tuned(
+            &g,
+            Variant::PrunedCompiler,
+            &spec,
+            threads,
+            &TuneOpts::on(&tune_path),
+        )?;
+        let tx = Tensor::full(&teng.input_shapes()[0], 0.5);
+        let ts = bench_auto_ms(budget, || {
+            let _ = teng.run(std::slice::from_ref(&tx)).unwrap();
+        });
+        let tuned_speedup = last / ts.mean.max(1e-9);
+        let tstats = teng.plan().tune_stats();
+        let mut j = JsonObj::new();
+        j.insert("app", app.to_string());
+        j.insert("variant", Variant::PrunedCompiler.name());
+        j.insert("threads", threads);
+        j.insert("latency", summary_json(&ts));
+        j.insert("memory", mem_json(&teng.memory()));
+        j.insert("tuned", true);
+        j.insert("tuned_speedup", tuned_speedup);
+        j.insert("tune_bench_runs", tstats.bench_runs);
+        json_lines.push(Json::Obj(j));
+
         row.insert(0, app.to_string());
         row.push(speedup(base, last));
         row.push(bytes(peak));
         row.push(ms(warm));
         row.push(format!("{:.1}", apf));
+        row.push(ms(ts.mean));
+        row.push(format!("{:.2}x", tuned_speedup));
         measured.row(&row);
     }
     measured.print();

@@ -10,6 +10,7 @@ use crate::executor::{Engine, ExecConfig, SparseMode};
 use crate::passes::PassManager;
 use crate::pruning::scheme::{project_scheme, Scheme};
 use crate::pruning::verify::apply_mask;
+use crate::tuner::TuneOpts;
 use anyhow::Result;
 
 /// The execution configurations of the evaluation.
@@ -128,44 +129,64 @@ pub fn prepare_variant(
     spec: &AppSpec,
     threads: usize,
 ) -> Result<(Engine, Vec<(String, Scheme)>)> {
+    prepare_variant_tuned(base, variant, spec, threads, &TuneOpts::off())
+}
+
+/// [`prepare_variant`] with schedule auto-tuning: the planner searches
+/// per-step kernel schedules (cached on disk via `tune.cache_path`) for
+/// every conv of the chosen variant. `TuneOpts::off()` reproduces the
+/// untuned engine exactly.
+pub fn prepare_variant_tuned(
+    base: &Graph,
+    variant: Variant,
+    spec: &AppSpec,
+    threads: usize,
+    tune: &TuneOpts,
+) -> Result<(Engine, Vec<(String, Scheme)>)> {
     let mut g = base.clone();
     let mut schemes = Vec::new();
     match variant {
         Variant::Unpruned => {
             // No pruning, no passes.
-            let eng = Engine::with_config(&g, &ExecConfig::dense(threads))?;
+            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone());
+            let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
         Variant::Pruned => {
             schemes = prune_graph(&mut g, spec);
             // No graph passes; CSR storage with indexed SpMM.
-            let eng = Engine::with_config(
-                &g,
-                &ExecConfig { sparse: SparseMode::Csr, threads, schemes: schemes.clone() },
-            )?;
+            let cfg = ExecConfig {
+                sparse: SparseMode::Csr,
+                threads,
+                schemes: schemes.clone(),
+                tune: tune.clone(),
+            };
+            let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
         Variant::PrunedCompiler => {
             schemes = prune_graph(&mut g, spec);
             PassManager::default().run_fixpoint(&mut g, 4);
-            let eng = Engine::with_config(
-                &g,
-                &ExecConfig::compact(threads, schemes.clone()),
-            )?;
+            let cfg = ExecConfig::compact(threads, schemes.clone()).with_tuning(tune.clone());
+            let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
         Variant::PrunedFusedOnly => {
             schemes = prune_graph(&mut g, spec);
             PassManager::default().run_fixpoint(&mut g, 4);
-            let eng = Engine::with_config(
-                &g,
-                &ExecConfig { sparse: SparseMode::Csr, threads, schemes: schemes.clone() },
-            )?;
+            let cfg = ExecConfig {
+                sparse: SparseMode::Csr,
+                threads,
+                schemes: schemes.clone(),
+                tune: tune.clone(),
+            };
+            let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
         Variant::UnprunedCompiler => {
             PassManager::default().run_fixpoint(&mut g, 4);
-            let eng = Engine::with_config(&g, &ExecConfig::dense(threads))?;
+            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone());
+            let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
     }

@@ -10,9 +10,9 @@
 //! caller-provided tensors, and multi-threaded kernels fork-join on the
 //! context's compute pool (spawned once at construction) instead of
 //! spawning scoped threads per call. Verified by `rust/tests/zero_alloc.rs`
-//! at `threads = 1` and `threads = 4`. (Known exception: the `Reordered`
-//! fallback for filter/channel schemes packs a per-group activation panel
-//! on the heap; the three demo apps' compiled paths never hit it.)
+//! at `threads = 1` and `threads = 4` — including the `Reordered`
+//! fallback (filter/channel schemes), whose per-group activation panels
+//! come out of the plan-sized scratch rather than the heap.
 
 use crate::dsl::op::Activation;
 use crate::executor::plan::{ConvExec, ExecutionPlan, Step, ValueSlot};
@@ -66,6 +66,7 @@ impl ExecContext {
     pub fn for_plan(plan: &ExecutionPlan) -> Self {
         let mut scratch = ConvScratch::new();
         scratch.ensure(plan.scratch_len());
+        scratch.ensure_panel(plan.panel_len());
         ExecContext {
             arena: vec![0.0; plan.arena_len()],
             scratch,
@@ -186,6 +187,7 @@ impl ExecContext {
             self.arena.resize(plan.arena_len(), 0.0);
         }
         self.scratch.ensure(plan.scratch_len());
+        self.scratch.ensure_panel(plan.panel_len());
 
         let pool = &self.pool;
         // SAFETY (all `slice_at` / `slice_at_mut` calls below): the planner
@@ -219,26 +221,27 @@ impl ExecContext {
                     let n = in_shape(0)[0];
                     let out = val_mut!(out_slot);
                     let scratch = &mut self.scratch;
+                    let sched = &st.sched;
                     match exec {
                         ConvExec::Dense { w } => conv2d_dense(
                             x, n, w, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            out,
+                            sched, out,
                         ),
                         ConvExec::Csr { csr } => conv2d_csr(
                             x, n, csr, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            out,
+                            sched, out,
                         ),
                         ConvExec::Column { cc } => conv2d_column_compact(
                             x, n, cc, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            out,
+                            sched, out,
                         ),
                         ConvExec::Pattern { plan: pp } => conv2d_pattern(
                             x, n, pp, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            out,
+                            sched, out,
                         ),
-                        ConvExec::Reordered { plan: rp, sched } => conv2d_reordered(
-                            x, n, rp, sched, geom, *pad_mode, bias.as_deref(), *act, pool,
-                            scratch, out,
+                        ConvExec::Reordered { plan: rp, lanes } => conv2d_reordered(
+                            x, n, rp, lanes, geom, *pad_mode, bias.as_deref(), *act, pool,
+                            scratch, sched, out,
                         ),
                     }
                 }
@@ -271,6 +274,7 @@ impl ExecContext {
                         *in_f,
                         *out_f,
                         pool,
+                        &st.sched,
                         val_mut!(out_slot),
                     );
                 }

@@ -1,21 +1,25 @@
 //! The Planner and its product, the immutable [`ExecutionPlan`].
 //!
 //! Compilation is split from execution: [`Planner::plan`] runs shape
-//! inference, kernel selection, weight-format encoding **and static memory
-//! planning** (liveness analysis + arena layout, see
-//! [`super::memory`]) exactly once; the resulting [`ExecutionPlan`] is an
-//! immutable description that any number of per-worker
-//! [`super::ExecContext`]s can execute concurrently with zero per-frame
-//! heap allocations for intermediates.
+//! inference, kernel selection, weight-format encoding, **per-step
+//! schedule tuning** (when [`ExecConfig::tune`] enables it — see
+//! [`crate::tuner`]) **and static memory planning** (liveness analysis +
+//! arena layout, see [`super::memory`]) exactly once; the resulting
+//! [`ExecutionPlan`] is an immutable description that any number of
+//! per-worker [`super::ExecContext`]s can execute concurrently with zero
+//! per-frame heap allocations for intermediates.
 
 use crate::dsl::op::{Activation, Op, PadMode};
 use crate::dsl::{Graph, NodeId};
 use crate::executor::memory::{ArenaPlanner, MemoryUsage, PlanOptions};
 use crate::kernels::im2col::ConvGeom;
 use crate::pruning::scheme::Scheme;
-use crate::reorder::{ReorderPlan, Schedule};
+use crate::reorder::{ReorderPlan, Schedule as LaneSchedule};
 use crate::sparse::{ColumnCompact, Csr, GemmView};
 use crate::tensor::Tensor;
+use crate::tuner::{Lowering, Schedule, TuneOpts, TuneRequest, TuneStats, Tuner};
+use crate::util::json::{Json, JsonObj};
+use crate::util::threadpool::ComputePool;
 use anyhow::{Context, Result};
 
 /// How pruned conv layers are stored + executed.
@@ -46,22 +50,37 @@ pub struct ExecConfig {
     /// Per-layer pruning schemes (needed for `Compact` to choose the
     /// right format; optional otherwise).
     pub schemes: Vec<(String, Scheme)>,
+    /// Auto-tuning configuration. Off by default: every step then carries
+    /// the default [`Schedule`], which reproduces the historical fixed
+    /// kernels bit-for-bit.
+    pub tune: TuneOpts,
 }
 
 impl ExecConfig {
     /// Dense storage + dense GEMM at the given thread budget.
     pub fn dense(threads: usize) -> Self {
-        ExecConfig { sparse: SparseMode::Dense, threads, schemes: vec![] }
+        ExecConfig {
+            sparse: SparseMode::Dense,
+            threads,
+            schemes: vec![],
+            tune: TuneOpts::off(),
+        }
     }
 
     /// CSR storage ("pruning, no compiler") at the given thread budget.
     pub fn csr(threads: usize) -> Self {
-        ExecConfig { sparse: SparseMode::Csr, threads, schemes: vec![] }
+        ExecConfig { sparse: SparseMode::Csr, threads, schemes: vec![], tune: TuneOpts::off() }
     }
 
     /// Compact storage + compiler kernels for the given per-layer schemes.
     pub fn compact(threads: usize, schemes: Vec<(String, Scheme)>) -> Self {
-        ExecConfig { sparse: SparseMode::Compact, threads, schemes }
+        ExecConfig { sparse: SparseMode::Compact, threads, schemes, tune: TuneOpts::off() }
+    }
+
+    /// Enable schedule auto-tuning (builder form).
+    pub fn with_tuning(mut self, tune: TuneOpts) -> Self {
+        self.tune = tune;
+        self
     }
 }
 
@@ -73,7 +92,7 @@ pub(crate) enum ConvExec {
     /// Kernel-granularity pattern reorder (pattern schemes).
     Pattern { plan: crate::kernels::sparse_gemm::PatternPlan },
     /// Filter-signature reorder (fallback for undeclared structure).
-    Reordered { plan: ReorderPlan, sched: Schedule },
+    Reordered { plan: ReorderPlan, lanes: LaneSchedule },
 }
 
 /// Pre-compiled per-node step.
@@ -102,12 +121,14 @@ pub(crate) enum Step {
 }
 
 /// One compiled step: kernel dispatch info + dataflow edges + whether its
-/// output slot aliases its first input (in-place execution).
+/// output slot aliases its first input (in-place execution) + the tuned
+/// kernel schedule (the default for non-conv steps and untuned plans).
 pub(crate) struct PlanStep {
     pub name: String,
     pub step: Step,
     pub inputs: Vec<NodeId>,
     pub inplace: bool,
+    pub sched: Schedule,
 }
 
 /// Arena range of one value, in f32 elements.
@@ -133,6 +154,9 @@ pub struct ExecutionPlan {
     pub(crate) threads: usize,
     arena_len: usize,
     scratch_len: usize,
+    panel_len: usize,
+    tuned: bool,
+    tune_stats: TuneStats,
     memory: MemoryUsage,
 }
 
@@ -171,6 +195,37 @@ impl ExecutionPlan {
     /// Worst-case im2col scratch length in f32 elements.
     pub fn scratch_len(&self) -> usize {
         self.scratch_len
+    }
+
+    /// Worst-case reordered-fallback gather-panel length in f32 elements
+    /// (0 unless a step compiles to the `Reordered` kernel). Pre-sized by
+    /// each context so the fallback stays allocation-free.
+    pub fn panel_len(&self) -> usize {
+        self.panel_len
+    }
+
+    /// Whether this plan was compiled with schedule auto-tuning enabled.
+    pub fn tuned(&self) -> bool {
+        self.tuned
+    }
+
+    /// What the tuner did while compiling this plan (all zero when tuning
+    /// is off; `bench_runs == 0` when every key hit a warm cache).
+    pub fn tune_stats(&self) -> TuneStats {
+        self.tune_stats
+    }
+
+    /// Per-conv-step schedules in JSON form (the plan-side serialization
+    /// of the tuning outcome; the on-disk [`crate::tuner::TuneCache`] is
+    /// the cross-run form).
+    pub fn schedules_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        for st in &self.steps {
+            if matches!(st.step, Step::Conv { .. }) {
+                o.insert(st.name.clone(), st.sched.to_json());
+            }
+        }
+        Json::Obj(o)
     }
 
     /// Static memory accounting for this plan.
@@ -231,19 +286,25 @@ impl Planner {
         let mut steps = Vec::with_capacity(g.len());
         let mut weight_bytes = 0usize;
         let mut scratch_len = 0usize;
+        let mut panel_len = 0usize;
         let mut input_count = 0usize;
+        // Schedule tuner for this pass: loads the on-disk cache when
+        // configured, answers every request with the default schedule when
+        // tuning is off.
+        let mut tuner = Tuner::new(cfg.tune.clone(), cfg.threads.max(1))?;
 
         for node in g.nodes().iter() {
             let bias = g
                 .param(&format!("{}.bias", node.name))
                 .map(|t| t.data().to_vec());
+            let mut step_sched = Schedule::default();
             let step = match &node.op {
                 Op::Input { .. } => {
                     let s = Step::Input { index: input_count };
                     input_count += 1;
                     s
                 }
-                Op::Conv2d { in_c, kh, stride, pad, pad_mode, fused_act, .. } => {
+                Op::Conv2d { out_c, in_c, kh, stride, pad, pad_mode, fused_act, .. } => {
                     let in_shape = &shapes[node.inputs[0]];
                     let geom =
                         ConvGeom::new(*in_c, in_shape[2], in_shape[3], *kh, *stride, *pad);
@@ -291,17 +352,76 @@ impl Planner {
                             // handles any structured zeros.
                             let gv = GemmView::from_oihw(&w);
                             let plan = ReorderPlan::build(&gv);
-                            let sched = Schedule::build(&plan, cfg.threads);
+                            let lanes = LaneSchedule::build(&plan, cfg.threads);
                             weight_bytes += plan.nnz() * 4 + plan.group_count() * 8;
-                            ConvExec::Reordered { plan, sched }
+                            ConvExec::Reordered { plan, lanes }
                         }
                     };
-                    // Worst-case im2col panel for the context's scratch.
+                    // ---- per-step schedule tuning (crate::tuner) -------
+                    if tuner.enabled() {
+                        let (variant_tag, k_eff, gemm_backed) = match &exec {
+                            ConvExec::Dense { .. } => ("dense", geom.cols(), true),
+                            ConvExec::Csr { .. } => ("csr", geom.cols(), false),
+                            ConvExec::Column { cc } => ("column", cc.kept(), true),
+                            ConvExec::Pattern { .. } => ("pattern", geom.cols(), false),
+                            ConvExec::Reordered { .. } => ("reordered", geom.cols(), false),
+                        };
+                        let req = TuneRequest {
+                            op: "conv",
+                            variant: variant_tag,
+                            m: *out_c,
+                            k: k_eff,
+                            n: geom.out_px(),
+                            geom: format!("k{}s{}p{}", kh, stride, pad),
+                            direct_ok: matches!(exec, ConvExec::Dense { .. })
+                                && geom.identity_lowering(),
+                            gemm_backed,
+                        };
+                        // Synthetic single-sample activations + private
+                        // buffers for the micro-benchmark probes, built
+                        // lazily on the first probe so a cache hit
+                        // allocates nothing (plan time only — never the
+                        // frame hot path).
+                        type BenchBufs = (Vec<f32>, Vec<f32>, crate::kernels::conv::ConvScratch);
+                        let mut bufs: Option<BenchBufs> = None;
+                        step_sched = tuner.tune(&req, &mut |cand, pool| {
+                            let (bx, bout, bscratch) = bufs.get_or_insert_with(|| {
+                                let chw = geom.in_c * geom.in_h * geom.in_w;
+                                (
+                                    (0..chw)
+                                        .map(|i| ((i % 37) as f32) * 0.05 - 0.9)
+                                        .collect(),
+                                    vec![0.0f32; *out_c * geom.out_px()],
+                                    crate::kernels::conv::ConvScratch::new(),
+                                )
+                            });
+                            bench_conv_exec(&exec, &geom, bx, bscratch, bout, cand, pool)
+                        });
+                    }
+                    // Worst-case im2col panel for the context's scratch —
+                    // a step tuned to the direct lowering needs none.
                     let patch_rows = match &exec {
                         ConvExec::Column { cc } => cc.kept(),
                         _ => geom.cols(),
                     };
-                    scratch_len = scratch_len.max(patch_rows * geom.out_px());
+                    let direct = step_sched.lowering == Lowering::Direct
+                        && matches!(exec, ConvExec::Dense { .. })
+                        && geom.identity_lowering();
+                    if !direct {
+                        scratch_len = scratch_len.max(patch_rows * geom.out_px());
+                    }
+                    // The reordered fallback gathers per-group activation
+                    // panels: pre-size them here (one slot per pool
+                    // thread) so the hot path never allocates.
+                    if let ConvExec::Reordered { plan: rp, .. } = &exec {
+                        panel_len = panel_len.max(
+                            crate::kernels::sparse_gemm::reordered_panel_len(
+                                rp,
+                                geom.out_px(),
+                                cfg.threads.max(1),
+                            ),
+                        );
+                    }
                     Step::Conv { exec, geom, pad_mode: *pad_mode, bias, act: *fused_act }
                 }
                 Op::DepthwiseConv2d { stride, pad, fused_act, .. } => {
@@ -351,7 +471,13 @@ impl Planner {
                 step,
                 inputs: node.inputs.clone(),
                 inplace: false,
+                sched: step_sched,
             });
+        }
+        // The cache is purely an optimization: a failed write must not
+        // discard the (already completed) tuned plan.
+        if let Err(e) = tuner.persist() {
+            eprintln!("warning: could not save tune cache: {:#}", e);
         }
 
         // ---- static memory planning: liveness + arena layout --------------
@@ -408,7 +534,8 @@ impl Planner {
         }
 
         let arena_len = arena.high_water();
-        let memory = MemoryUsage::new(weight_bytes, (arena_len + scratch_len) * 4);
+        let memory =
+            MemoryUsage::new(weight_bytes, (arena_len + scratch_len + panel_len) * 4);
 
         let plan = ExecutionPlan {
             name: g.name.clone(),
@@ -421,11 +548,54 @@ impl Planner {
             threads: cfg.threads.max(1),
             arena_len,
             scratch_len,
+            panel_len,
+            tuned: tuner.enabled(),
+            tune_stats: tuner.stats(),
             memory,
         };
         debug_assert!(plan.validate_layout().is_ok());
         Ok(plan)
     }
+}
+
+/// Run one conv step's real kernel once on synthetic single-sample data
+/// under the candidate schedule and return elapsed seconds — the tuner's
+/// micro-benchmark probe (plan time only).
+#[allow(clippy::too_many_arguments)]
+fn bench_conv_exec(
+    exec: &ConvExec,
+    geom: &ConvGeom,
+    x: &[f32],
+    scratch: &mut crate::kernels::conv::ConvScratch,
+    out: &mut [f32],
+    cand: &Schedule,
+    pool: &ComputePool,
+) -> f64 {
+    use crate::kernels::conv as ck;
+    let t0 = std::time::Instant::now();
+    match exec {
+        ConvExec::Dense { w } => ck::conv2d_dense(
+            x, 1, w, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
+            out,
+        ),
+        ConvExec::Csr { csr } => ck::conv2d_csr(
+            x, 1, csr, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
+            out,
+        ),
+        ConvExec::Column { cc } => ck::conv2d_column_compact(
+            x, 1, cc, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
+            out,
+        ),
+        ConvExec::Pattern { plan } => ck::conv2d_pattern(
+            x, 1, plan, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch,
+            cand, out,
+        ),
+        ConvExec::Reordered { plan, lanes } => ck::conv2d_reordered(
+            x, 1, plan, lanes, geom, PadMode::Zeros, None, Activation::Identity, pool,
+            scratch, cand, out,
+        ),
+    }
+    t0.elapsed().as_secs_f64()
 }
 
 #[cfg(test)]

@@ -18,23 +18,35 @@
 //! not allocate. Multi-threaded execution goes through the caller's
 //! persistent [`ComputePool`]; no driver ever spawns a thread. Inputs are
 //! raw NCHW slices (`x`, batch `n`) with geometry carried by [`ConvGeom`].
+//!
+//! Every GEMM-backed driver additionally takes the step's tuned
+//! [`Schedule`] (searched per layer shape by the [`tuner`](crate::tuner);
+//! the default schedule reproduces the historical fixed kernels
+//! bit-for-bit). The dense driver honors the `Direct` lowering — skipping
+//! the im2col copy when the lowering is the identity — and all drivers
+//! forward the blocking/split/unroll knobs to their GEMM tier.
 
 use crate::dsl::op::{Activation, PadMode};
 use crate::kernels::elementwise::bias_act_inplace;
 use crate::kernels::gemm;
 use crate::kernels::im2col::{im2col, im2col_pruned, ConvGeom};
 use crate::kernels::sparse_gemm;
-use crate::reorder::{ReorderPlan, Schedule};
+use crate::reorder::{ReorderPlan, Schedule as LaneSchedule};
 use crate::sparse::{ColumnCompact, Csr};
 use crate::tensor::Tensor;
+use crate::tuner::schedule::{Lowering, Schedule};
 use crate::util::threadpool::{ComputePool, SendPtr};
 
 /// Scratch buffers reused across conv calls (owned by the exec context's
-/// memory plan; pre-sized via [`ConvScratch::ensure`], so a correctly sized
-/// scratch never reallocates at run time).
+/// memory plan; pre-sized via [`ConvScratch::ensure`] /
+/// [`ConvScratch::ensure_panel`], so a correctly sized scratch never
+/// reallocates at run time).
 #[derive(Debug, Default)]
 pub struct ConvScratch {
     patch: Vec<f32>,
+    /// Activation-gather panels for the reordered fallback (one slot per
+    /// pool thread; see `sparse_gemm::reordered_panel_len`).
+    panel: Vec<f32>,
 }
 
 impl ConvScratch {
@@ -51,14 +63,29 @@ impl ConvScratch {
         }
     }
 
+    /// Pre-size the reordered-fallback gather panel (exec contexts call
+    /// this once with the plan's worst-case panel size).
+    pub fn ensure_panel(&mut self, len: usize) {
+        if self.panel.len() < len {
+            self.panel.resize(len, 0.0);
+        }
+    }
+
     /// Current patch capacity in elements (used by the arena-reuse tests).
     pub fn capacity(&self) -> usize {
         self.patch.len()
     }
 
-    fn patch_buf(&mut self, len: usize) -> &mut [f32] {
-        self.ensure(len);
-        &mut self.patch[..len]
+    /// Current panel capacity in elements (used by the arena-reuse tests).
+    pub fn panel_capacity(&self) -> usize {
+        self.panel.len()
+    }
+
+    /// Both buffers at their requested sizes (disjoint field borrows).
+    fn bufs(&mut self, patch_len: usize, panel_len: usize) -> (&mut [f32], &mut [f32]) {
+        self.ensure(patch_len);
+        self.ensure_panel(panel_len);
+        (&mut self.patch[..patch_len], &mut self.panel[..panel_len])
     }
 }
 
@@ -73,9 +100,10 @@ fn conv_common(
     act: Activation,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
-    mut gemm_fn: impl FnMut(&[f32], &mut [f32]),
+    mut gemm_fn: impl FnMut(&[f32], &mut [f32], &mut [f32]),
     build_patch: impl Fn(&[f32], &mut [f32]),
     patch_rows: usize,
+    panel_len: usize,
     out: &mut [f32],
 ) {
     let chw = geom.in_c * geom.in_h * geom.in_w;
@@ -86,18 +114,22 @@ fn conv_common(
     // arena contents.
     out.fill(0.0);
     let patch_len = patch_rows * opx;
+    let (patch, panel) = scratch.bufs(patch_len, panel_len);
     for s in 0..n {
         let xin = &x[s * chw..(s + 1) * chw];
-        let patch = scratch.patch_buf(patch_len);
         build_patch(xin, patch);
         let cdst = &mut out[s * out_c * opx..(s + 1) * out_c * opx];
-        gemm_fn(&scratch.patch[..patch_len], cdst);
+        gemm_fn(patch, panel, cdst);
     }
     bias_act_inplace(out, bias, out_c, opx, act, pool);
     let _ = pad_mode;
 }
 
-/// Unpruned baseline: full im2col + dense multi-threaded GEMM.
+/// Unpruned baseline: im2col + dense multi-threaded GEMM, or — when the
+/// schedule selects the `Direct` lowering and the lowering is the identity
+/// (1×1 kernel, stride 1, no padding) — a GEMM straight over the input
+/// plane, skipping the patch copy entirely. Both paths compute every
+/// output element with the identical fp expression.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_dense(
     x: &[f32],
@@ -109,11 +141,27 @@ pub fn conv2d_dense(
     act: Activation,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
+    sched: &Schedule,
     out: &mut [f32],
 ) {
     let out_c = w.dim(0);
     let cols = geom.cols();
     let opx = geom.out_px();
+    if sched.lowering == Lowering::Direct && geom.identity_lowering() {
+        // The patch matrix would be a verbatim copy of the input plane:
+        // feed the input to the GEMM directly (zero scratch for this step).
+        let chw = geom.in_c * geom.in_h * geom.in_w;
+        debug_assert_eq!(x.len(), n * chw);
+        debug_assert_eq!(out.len(), n * out_c * opx);
+        out.fill(0.0);
+        for s in 0..n {
+            let xin = &x[s * chw..(s + 1) * chw];
+            let cdst = &mut out[s * out_c * opx..(s + 1) * out_c * opx];
+            gemm::gemm_with(out_c, cols, opx, w.data(), xin, cdst, pool, sched);
+        }
+        bias_act_inplace(out, bias, out_c, opx, act, pool);
+        return;
+    }
     conv_common(
         x,
         n,
@@ -124,9 +172,12 @@ pub fn conv2d_dense(
         act,
         pool,
         scratch,
-        |patch, cdst| gemm::gemm(out_c, cols, opx, w.data(), patch, cdst, pool),
+        |patch, _panel, cdst| {
+            gemm::gemm_with(out_c, cols, opx, w.data(), patch, cdst, pool, sched)
+        },
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         cols,
+        0,
         out,
     )
 }
@@ -143,6 +194,7 @@ pub fn conv2d_csr(
     act: Activation,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
+    sched: &Schedule,
     out: &mut [f32],
 ) {
     let out_c = csr.rows;
@@ -157,9 +209,10 @@ pub fn conv2d_csr(
         act,
         pool,
         scratch,
-        |patch, cdst| sparse_gemm::spmm_csr(csr, patch, opx, cdst, pool),
+        |patch, _panel, cdst| sparse_gemm::spmm_csr(csr, patch, opx, cdst, pool, sched),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
+        0,
         out,
     )
 }
@@ -176,6 +229,7 @@ pub fn conv2d_column_compact(
     act: Activation,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
+    sched: &Schedule,
     out: &mut [f32],
 ) {
     let out_c = cc.rows;
@@ -191,32 +245,39 @@ pub fn conv2d_column_compact(
         act,
         pool,
         scratch,
-        |patch, cdst| {
-            sparse_gemm::spmm_column_compact(&cc.values, out_c, kept, patch, opx, cdst, pool)
+        |patch, _panel, cdst| {
+            sparse_gemm::spmm_column_compact(
+                &cc.values, out_c, kept, patch, opx, cdst, pool, sched,
+            )
         },
         |xin, patch| im2col_pruned(xin, geom, pad_mode, &cc.keep, patch),
         kept,
+        0,
         out,
     )
 }
 
 /// Pattern pruning + compiler: full patch matrix, reordered group GEMM.
+/// The per-group activation panels come out of the pre-sized scratch
+/// (sized by the plan's accounting), so the fallback allocates nothing.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_reordered(
     x: &[f32],
     n: usize,
     plan: &ReorderPlan,
-    sched: &Schedule,
+    lanes: &LaneSchedule,
     geom: &ConvGeom,
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
+    sched: &Schedule,
     out: &mut [f32],
 ) {
     let out_c = plan.rows;
     let opx = geom.out_px();
+    let panel_len = sparse_gemm::reordered_panel_len(plan, opx, pool.threads());
     conv_common(
         x,
         n,
@@ -227,9 +288,12 @@ pub fn conv2d_reordered(
         act,
         pool,
         scratch,
-        |patch, cdst| sparse_gemm::spmm_reordered(plan, sched, patch, opx, cdst, pool),
+        |patch, panel, cdst| {
+            sparse_gemm::spmm_reordered(plan, lanes, patch, opx, cdst, pool, panel, sched)
+        },
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
+        panel_len,
         out,
     )
 }
@@ -247,6 +311,7 @@ pub fn conv2d_pattern(
     act: Activation,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
+    sched: &Schedule,
     out: &mut [f32],
 ) {
     let out_c = plan.out_c;
@@ -261,9 +326,10 @@ pub fn conv2d_pattern(
         act,
         pool,
         scratch,
-        |patch, cdst| sparse_gemm::spmm_pattern(plan, patch, opx, cdst, pool),
+        |patch, _panel, cdst| sparse_gemm::spmm_pattern(plan, patch, opx, cdst, pool, sched),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
+        0,
         out,
     )
 }
@@ -425,7 +491,8 @@ mod tests {
         let n = x.dim(0);
         let mut out = Tensor::zeros(&[n, w.dim(0), geom.out_h, geom.out_w]);
         conv2d_dense(
-            x.data(), n, w, &geom, pm, bias, act, pool, scratch, out.data_mut(),
+            x.data(), n, w, &geom, pm, bias, act, pool, scratch, &Schedule::default(),
+            out.data_mut(),
         );
         out
     }
@@ -474,16 +541,17 @@ mod tests {
             let mut got_csr = Tensor::zeros(&[1, oc, 8, 8]);
             conv2d_csr(
                 x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity, &pool,
-                &mut scratch, got_csr.data_mut(),
+                &mut scratch, &Schedule::default(), got_csr.data_mut(),
             );
             assert!(got_csr.max_abs_diff(&want) < 1e-3);
 
             let plan = ReorderPlan::build(&gv);
-            let sched = Schedule::build(&plan, 2);
+            let lanes = LaneSchedule::build(&plan, 2);
             let mut got_ro = Tensor::zeros(&[1, oc, 8, 8]);
             conv2d_reordered(
-                x.data(), 1, &plan, &sched, &geom, PadMode::Zeros, None,
-                Activation::Identity, &pool, &mut scratch, got_ro.data_mut(),
+                x.data(), 1, &plan, &lanes, &geom, PadMode::Zeros, None,
+                Activation::Identity, &pool, &mut scratch, &Schedule::default(),
+                got_ro.data_mut(),
             );
             assert!(got_ro.max_abs_diff(&want) < 1e-3);
         });
@@ -509,7 +577,7 @@ mod tests {
         let mut got = Tensor::zeros(&[2, oc, 10, 10]);
         conv2d_column_compact(
             x.data(), 2, &cc, &geom, PadMode::Reflect, Some(&bias), Activation::Relu,
-            &ComputePool::new(2), &mut scratch, got.data_mut(),
+            &ComputePool::new(2), &mut scratch, &Schedule::default(), got.data_mut(),
         );
         let want = conv2d_ref(&x, &wp, Some(&bias), 1, 1, PadMode::Reflect, Activation::Relu);
         assert!(got.max_abs_diff(&want) < 1e-3, "err={}", got.max_abs_diff(&want));
@@ -575,7 +643,7 @@ mod tests {
         let mut dirty = vec![42.0f32; 3 * 36];
         conv2d_dense(
             x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity,
-            &ComputePool::serial(), &mut scratch, &mut dirty,
+            &ComputePool::serial(), &mut scratch, &Schedule::default(), &mut dirty,
         );
         let want = conv2d_ref(&x, &w, None, 1, 1, PadMode::Zeros, Activation::Identity);
         let err = dirty
@@ -584,5 +652,36 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(err < 1e-4, "stale output leaked: err={}", err);
+    }
+
+    #[test]
+    fn direct_lowering_matches_im2col_bitwise() {
+        // 1×1 stride-1 pad-0 conv: the patch matrix is the input plane,
+        // so the Direct lowering must match Im2col bit-for-bit.
+        let mut rng = Rng::new(95);
+        let x = rand_input(&mut rng, 2, 6, 12, 12);
+        let w = Tensor::randn(&[8, 6, 1, 1], &mut rng);
+        let geom = ConvGeom::new(6, 12, 12, 1, 1, 0);
+        assert!(geom.identity_lowering());
+        let pool = ComputePool::new(3);
+        let mut scratch = ConvScratch::new();
+        let mut a = Tensor::zeros(&[2, 8, 12, 12]);
+        let mut b = Tensor::zeros(&[2, 8, 12, 12]);
+        conv2d_dense(
+            x.data(), 2, &w, &geom, PadMode::Zeros, None, Activation::Relu, &pool,
+            &mut scratch, &Schedule::default(), a.data_mut(),
+        );
+        let direct = Schedule {
+            lowering: crate::tuner::schedule::Lowering::Direct,
+            ..Schedule::default()
+        };
+        conv2d_dense(
+            x.data(), 2, &w, &geom, PadMode::Zeros, None, Activation::Relu, &pool,
+            &mut scratch, &direct, b.data_mut(),
+        );
+        assert_eq!(a.data(), b.data(), "direct lowering changed bits");
+        // A non-identity geometry silently falls back to im2col.
+        let geom3 = ConvGeom::new(6, 12, 12, 3, 1, 1);
+        assert!(!geom3.identity_lowering());
     }
 }

@@ -1,49 +1,121 @@
 //! Blocked, multi-threaded dense GEMM: C[M,N] = A[M,K] · B[K,N] (+ C).
 //!
 //! Cache-blocked over K and N with an 8-wide inner loop the compiler can
-//! vectorise; rows are partitioned across the persistent [`ComputePool`]
-//! (M is the filter count, independent per row). This is the workhorse of
-//! both the unpruned baseline (im2col conv) and each reordered group's
-//! dense inner loop.
+//! vectorise. Blocking tile sizes, the parallel split axis and the AXPY
+//! unroll width are carried by a [`Schedule`] (searched per layer shape by
+//! the [`tuner`](crate::tuner); [`Schedule::default`] reproduces the
+//! historical fixed parameters bit-for-bit). Work is partitioned across
+//! the persistent [`ComputePool`] along rows (M, the filter count) or
+//! columns (N, the pixel count) per the schedule; either split computes
+//! every C element with the same fp expression in the same order, so
+//! results are bitwise-identical across schedules and thread counts. This
+//! is the workhorse of both the unpruned baseline (im2col conv) and each
+//! reordered group's dense inner loop.
 
+use crate::tuner::schedule::{Schedule, SplitAxis};
 use crate::util::threadpool::{ComputePool, SendPtr};
 
-/// Tunable blocking parameters (fitted to L1/L2 on the test machine during
-/// the perf pass; see EXPERIMENTS.md §Perf).
+/// Default blocking parameters (fitted to L1/L2 on the test machine during
+/// the perf pass; see EXPERIMENTS.md §Perf). [`Schedule::default`] carries
+/// exactly these values.
 pub const MC: usize = 64; // rows of A per macro-tile
 /// K-panel blocking size (see [`MC`]).
 pub const KC: usize = 256;
 /// N-panel blocking size (see [`MC`]).
 pub const NC: usize = 1024;
 
-/// C = A·B, single-threaded, blocked. `a` is MxK row-major, `b` is KxN
-/// row-major, `c` is MxN row-major and is *accumulated into* (caller zeroes).
+/// C = A·B, single-threaded, blocked with the default schedule. `a` is
+/// MxK row-major, `b` is KxN row-major, `c` is MxN row-major and is
+/// *accumulated into* (caller zeroes).
 pub fn gemm_st(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_st_with(m, k, n, a, b, c, &Schedule::default())
+}
+
+/// C = A·B, single-threaded, blocked per the given schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_st_with(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    sched: &Schedule,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    for kb in (0..k).step_by(KC) {
-        let ke = (kb + KC).min(k);
-        for nb in (0..n).step_by(NC) {
-            let ne = (nb + NC).min(n);
-            for mb in (0..m).step_by(MC) {
-                let me = (mb + MC).min(m);
-                block(a, b, c, k, n, mb, me, kb, ke, nb, ne);
+    let cp = SendPtr::new(c.as_mut_ptr());
+    gemm_ranged(k, n, a, b, cp, 0, m, 0, n, sched);
+}
+
+/// Blocked GEMM over the sub-rectangle rows `[m0, m1)` × cols `[n0, n1)`
+/// of C (full-matrix strides). `c` is a raw base pointer so disjoint
+/// rectangles can run concurrently; each output row slice is materialised
+/// one at a time inside [`block`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_ranged(
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: SendPtr<f32>,
+    m0: usize,
+    m1: usize,
+    n0: usize,
+    n1: usize,
+    sched: &Schedule,
+) {
+    let mc = sched.mc.max(2);
+    let kc = sched.kc.max(4);
+    let nc = sched.nc.max(8);
+    let mut kb = 0;
+    while kb < k {
+        let ke = (kb + kc).min(k);
+        let mut nb = n0;
+        while nb < n1 {
+            let ne = (nb + nc).min(n1);
+            let mut mb = m0;
+            while mb < m1 {
+                let me = (mb + mc).min(m1);
+                block(a, b, c, k, n, mb, me, kb, ke, nb, ne, sched.unroll);
+                mb = me;
             }
+            nb = ne;
         }
+        kb = ke;
     }
+}
+
+/// Materialise columns `[nb, ne)` of C row `i`.
+///
+/// # Safety
+/// `c` must cover at least `(i + 1) * n` elements and no concurrently
+/// executing writer may overlap columns `[nb, ne)` of row `i` (the split
+/// partitions guarantee disjoint rectangles).
+#[inline]
+unsafe fn crow_at<'a>(
+    c: SendPtr<f32>,
+    n: usize,
+    i: usize,
+    nb: usize,
+    ne: usize,
+) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(c.get().add(i * n + nb), ne - nb)
 }
 
 /// Inner macro-kernel: row-by-row AXPY over the K panel. For each (i, p)
 /// the scalar a[i,p] broadcasts against a contiguous b-row slice — this
 /// auto-vectorises well and is exactly the shape the reordered sparse
-/// kernel reuses (with packed columns).
+/// kernel reuses (with packed columns). The K grouping is 4-aligned from
+/// offset 0 for every legal schedule (`kc % 4 == 0`), so each element's
+/// fp expression is schedule-independent.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn block(
     a: &[f32],
     b: &[f32],
-    c: &mut [f32],
+    c: SendPtr<f32>,
     k: usize,
     n: usize,
     mb: usize,
@@ -52,14 +124,17 @@ fn block(
     ke: usize,
     nb: usize,
     ne: usize,
+    unroll: usize,
 ) {
     // 2-row micro-kernel: both C rows consume the same four B rows per
-    // pass, halving B traffic (perf log §Perf iter 4).
+    // pass, halving B traffic (perf log §Perf iter 4). Legal schedules
+    // keep `mc` even, so the row pairing is tile-size independent.
     let mut i = mb;
     while i + 2 <= me {
-        let (head, tail) = c.split_at_mut((i + 1) * n);
-        let crow0 = &mut head[i * n + nb..i * n + ne];
-        let crow1 = &mut tail[nb..ne];
+        // SAFETY: rows i and i+1 are distinct and inside the caller's
+        // disjoint rectangle (see `crow_at`).
+        let crow0 = unsafe { crow_at(c, n, i, nb, ne) };
+        let crow1 = unsafe { crow_at(c, n, i + 1, nb, ne) };
         let arow0 = &a[i * k..(i + 1) * k];
         let arow1 = &a[(i + 1) * k..(i + 2) * k];
         let mut p = kb;
@@ -82,10 +157,10 @@ fn block(
             let (x, y) = (arow0[p], arow1[p]);
             let brow = &b[p * n + nb..p * n + ne];
             if x != 0.0 {
-                axpy(x, brow, crow0);
+                axpy_unrolled(x, brow, crow0, unroll);
             }
             if y != 0.0 {
-                axpy(y, brow, crow1);
+                axpy_unrolled(y, brow, crow1, unroll);
             }
             p += 1;
         }
@@ -93,7 +168,8 @@ fn block(
     }
     while i < me {
         let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n + nb..i * n + ne];
+        // SAFETY: the last row of this tile, inside the caller's rectangle.
+        let crow = unsafe { crow_at(c, n, i, nb, ne) };
         // 4-way K unroll: one pass over the C row per 4 K values quarters
         // the C load/store traffic vs plain AXPY (perf log §Perf iter 3).
         let mut p = kb;
@@ -114,7 +190,7 @@ fn block(
         while p < ke {
             let av = arow[p];
             if av != 0.0 {
-                axpy(av, &b[p * n + nb..p * n + ne], crow);
+                axpy_unrolled(av, &b[p * n + nb..p * n + ne], crow, unroll);
             }
             p += 1;
         }
@@ -146,10 +222,23 @@ pub fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
     }
 }
 
-/// Multi-threaded GEMM: partitions M across the pool's threads. Each row
-/// of C is produced by exactly one thread with the same instruction
-/// sequence as [`gemm_st`], so results are bitwise-identical at every
-/// thread count.
+/// crow += av * brow with a schedule-selected unroll width: `>= 8` takes
+/// the manually 8-wide [`axpy`], anything else a plain loop the compiler
+/// unrolls itself. Every element is updated with the identical expression
+/// either way — the knob moves time, never bits.
+#[inline]
+pub fn axpy_unrolled(av: f32, brow: &[f32], crow: &mut [f32], unroll: usize) {
+    if unroll >= 8 {
+        axpy(av, brow, crow);
+        return;
+    }
+    let len = crow.len().min(brow.len());
+    for i in 0..len {
+        crow[i] += av * brow[i];
+    }
+}
+
+/// Multi-threaded GEMM with the default schedule (row split).
 pub fn gemm(
     m: usize,
     k: usize,
@@ -159,25 +248,52 @@ pub fn gemm(
     c: &mut [f32],
     pool: &ComputePool,
 ) {
+    gemm_with(m, k, n, a, b, c, pool, &Schedule::default())
+}
+
+/// Multi-threaded GEMM: partitions the schedule's split axis across the
+/// pool's threads. Each C element is produced by exactly one thread with
+/// the same instruction sequence as [`gemm_st_with`], so results are
+/// bitwise-identical at every thread count and under every legal schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
     debug_assert_eq!(c.len(), m * n);
-    if pool.threads() <= 1 || m == 1 {
-        gemm_st(m, k, n, a, b, c);
+    let serial = pool.threads() <= 1
+        || match sched.split {
+            SplitAxis::Rows => m == 1,
+            SplitAxis::Cols => n == 1,
+        };
+    if serial {
+        gemm_st_with(m, k, n, a, b, c, sched);
         return;
     }
-    let c_ptr = SendPtr::new(c.as_mut_ptr());
-    pool.parallel_chunks(m, |ms, me, _| {
-        let rows = me - ms;
-        // SAFETY: each chunk works a disjoint row range of A and C.
-        let a_sub = &a[ms * k..me * k];
-        let c_sub =
-            unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(ms * n), rows * n) };
-        gemm_st(rows, k, n, a_sub, b, c_sub);
-    });
+    let cp = SendPtr::new(c.as_mut_ptr());
+    match sched.split {
+        SplitAxis::Rows => pool.parallel_chunks(m, |ms, me, _| {
+            // Each chunk works a disjoint row range of C.
+            gemm_ranged(k, n, a, b, cp, ms, me, 0, n, sched);
+        }),
+        SplitAxis::Cols => pool.parallel_chunks(n, |ns, ne, _| {
+            // Each chunk works a disjoint column range of C.
+            gemm_ranged(k, n, a, b, cp, 0, m, ns, ne, sched);
+        }),
+    }
 }
 
 /// Fully-connected forward pass into a caller-provided output slice:
 /// `out[b, o] = act(W[o, :] · x[b, :] + bias[o])` with `W` row-major
-/// `[out_f, in_f]`. Output rows are partitioned across the pool.
+/// `[out_f, in_f]`. The schedule's split axis selects the partition:
+/// `Rows` splits output features (the default), `Cols` splits the batch —
+/// both compute every element with the identical expression.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_forward(
     w: &[f32],
@@ -188,27 +304,54 @@ pub fn dense_forward(
     in_f: usize,
     out_f: usize,
     pool: &ComputePool,
+    sched: &Schedule,
     out: &mut [f32],
 ) {
     debug_assert_eq!(w.len(), out_f * in_f);
     debug_assert_eq!(x.len(), batch * in_f);
     debug_assert_eq!(out.len(), batch * out_f);
-    for b in 0..batch {
-        let xb = &x[b * in_f..(b + 1) * in_f];
-        let ob_ptr = SendPtr::new(out[b * out_f..(b + 1) * out_f].as_mut_ptr());
-        pool.parallel_chunks(out_f, |os, oe, _| {
-            // SAFETY: each chunk materialises only its own disjoint output
-            // row range.
-            let ob = unsafe { std::slice::from_raw_parts_mut(ob_ptr.get().add(os), oe - os) };
-            for o in os..oe {
-                let wrow = &w[o * in_f..(o + 1) * in_f];
-                let mut acc = 0.0f32;
-                for i in 0..in_f {
-                    acc += wrow[i] * xb[i];
+    if sched.split == SplitAxis::Cols && batch > 1 {
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        pool.parallel_chunks(batch, |bs, be, _| {
+            // SAFETY: each chunk materialises only its own disjoint batch
+            // range of `out`.
+            let ob = unsafe {
+                std::slice::from_raw_parts_mut(
+                    out_ptr.get().add(bs * out_f),
+                    (be - bs) * out_f,
+                )
+            };
+            for b in bs..be {
+                let xb = &x[b * in_f..(b + 1) * in_f];
+                for o in 0..out_f {
+                    let wrow = &w[o * in_f..(o + 1) * in_f];
+                    let mut acc = 0.0f32;
+                    for i in 0..in_f {
+                        acc += wrow[i] * xb[i];
+                    }
+                    ob[(b - bs) * out_f + o] = acc;
                 }
-                ob[o - os] = acc;
             }
         });
+    } else {
+        for b in 0..batch {
+            let xb = &x[b * in_f..(b + 1) * in_f];
+            let ob_ptr = SendPtr::new(out[b * out_f..(b + 1) * out_f].as_mut_ptr());
+            pool.parallel_chunks(out_f, |os, oe, _| {
+                // SAFETY: each chunk materialises only its own disjoint
+                // output row range.
+                let ob =
+                    unsafe { std::slice::from_raw_parts_mut(ob_ptr.get().add(os), oe - os) };
+                for o in os..oe {
+                    let wrow = &w[o * in_f..(o + 1) * in_f];
+                    let mut acc = 0.0f32;
+                    for i in 0..in_f {
+                        acc += wrow[i] * xb[i];
+                    }
+                    ob[o - os] = acc;
+                }
+            });
+        }
     }
     crate::kernels::elementwise::bias_act_inplace(out, bias, out_f, 1, act, pool);
 }
@@ -228,6 +371,7 @@ pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tuner::schedule::Lowering;
     use crate::util::rng::{check_prop, Rng};
 
     fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Vec<f32> {
@@ -286,6 +430,57 @@ mod tests {
     }
 
     #[test]
+    fn every_legal_schedule_is_bitwise_identical() {
+        // Tiles, split axis and unroll move time, never bits (the tuner
+        // equivalence test re-proves this at the full-graph level).
+        let mut rng = Rng::new(75);
+        let (m, k, n) = (33, 130, 65);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut base = vec![0.0; m * n];
+        gemm_st(m, k, n, &a, &b, &mut base);
+        for &mc in &[2usize, 32, 64, 100] {
+            for &kc in &[4usize, 128, 256] {
+                for &nc in &[8usize, 64, 1024] {
+                    for &split in &[SplitAxis::Rows, SplitAxis::Cols] {
+                        for &unroll in &[1usize, 8] {
+                            let s = Schedule {
+                                lowering: Lowering::Im2col,
+                                mc,
+                                kc,
+                                nc,
+                                split,
+                                unroll,
+                            };
+                            for threads in [1usize, 3] {
+                                let mut c = vec![0.0; m * n];
+                                let pool = ComputePool::new(threads);
+                                gemm_with(m, k, n, &a, &b, &mut c, &pool, &s);
+                                assert_eq!(c, base, "diverged: {:?} t={}", s, threads);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cols_split_matches_rows_split() {
+        let mut rng = Rng::new(76);
+        let (m, k, n) = (3, 27, 257); // thin M: the cols split's use case
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let pool = ComputePool::new(4);
+        let mut c_rows = vec![0.0; m * n];
+        let mut c_cols = vec![0.0; m * n];
+        gemm_with(m, k, n, &a, &b, &mut c_rows, &pool, &Schedule::default());
+        let cols = Schedule { split: SplitAxis::Cols, ..Schedule::default() };
+        gemm_with(m, k, n, &a, &b, &mut c_cols, &pool, &cols);
+        assert_eq!(c_rows, c_cols);
+    }
+
+    #[test]
     fn accumulates_into_c() {
         let a = vec![1.0, 0.0, 0.0, 1.0]; // I2
         let b = vec![5.0, 6.0, 7.0, 8.0];
@@ -302,20 +497,24 @@ mod tests {
         let w = rand_mat(&mut rng, out_f, in_f);
         let x = rand_mat(&mut rng, batch, in_f);
         let bias: Vec<f32> = (0..out_f).map(|_| rng.normal()).collect();
-        let mut got = vec![0.0f32; batch * out_f];
         let pool = ComputePool::new(2);
-        dense_forward(
-            &w, Some(&bias), Activation::Relu, &x, batch, in_f, out_f, &pool, &mut got,
-        );
-        for b in 0..batch {
-            for o in 0..out_f {
-                let mut acc = bias[o];
-                for i in 0..in_f {
-                    acc += w[o * in_f + i] * x[b * in_f + i];
+        for split in [SplitAxis::Rows, SplitAxis::Cols] {
+            let sched = Schedule { split, ..Schedule::default() };
+            let mut got = vec![0.0f32; batch * out_f];
+            dense_forward(
+                &w, Some(&bias), Activation::Relu, &x, batch, in_f, out_f, &pool, &sched,
+                &mut got,
+            );
+            for b in 0..batch {
+                for o in 0..out_f {
+                    let mut acc = bias[o];
+                    for i in 0..in_f {
+                        acc += w[o * in_f + i] * x[b * in_f + i];
+                    }
+                    let want = acc.max(0.0);
+                    let diff = (got[b * out_f + o] - want).abs();
+                    assert!(diff < 1e-4, "split={:?} b={} o={} diff={}", split, b, o, diff);
                 }
-                let want = acc.max(0.0);
-                let diff = (got[b * out_f + o] - want).abs();
-                assert!(diff < 1e-4, "b={} o={} diff={}", b, o, diff);
             }
         }
     }
@@ -326,5 +525,8 @@ mod tests {
         let mut c = [0.0f32; 11];
         axpy(2.0, &b, &mut c);
         assert!(c.iter().all(|&x| x == 2.0));
+        let mut c1 = [0.0f32; 11];
+        axpy_unrolled(2.0, &b, &mut c1, 1);
+        assert_eq!(c, c1);
     }
 }

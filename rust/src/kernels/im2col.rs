@@ -48,6 +48,15 @@ impl ConvGeom {
     pub fn out_px(&self) -> usize {
         self.out_h * self.out_w
     }
+
+    /// Whether the im2col lowering is the identity — a 1×1 kernel at
+    /// stride 1 with no padding, where the patch matrix is a verbatim copy
+    /// of the input plane. The tuner's `Direct` lowering is legal exactly
+    /// here: the dense conv driver can feed the input to the GEMM and skip
+    /// the copy.
+    pub fn identity_lowering(&self) -> bool {
+        self.kh == 1 && self.kw == 1 && self.stride == 1 && self.pad == 0
+    }
 }
 
 /// Input pixel fetch with padding semantics.

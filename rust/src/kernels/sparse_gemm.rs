@@ -7,20 +7,33 @@
 //! * [`spmm_reordered`] — the "pruning + compiler" configuration: iterate
 //!   [`ReorderPlan`] groups with packed weights; each group's inner loop is
 //!   a *dense* GEMM over its compacted columns, and work is distributed by
-//!   the balanced [`Schedule`].
+//!   the balanced lane schedule ([`crate::reorder::Schedule`]).
+//!
+//! All kernels additionally take the step's tuned [`Schedule`]; the sparse
+//! tiers honor its AXPY `unroll` width, the column-compact tier (a dense
+//! GEMM) honors the full blocking/split space.
 //! * [`spmm_column_compact`] — special case for column pruning where the
 //!   caller already gathered B's kept rows (`im2col_pruned`): a plain dense
 //!   GEMM over the reduced K — zero sparse overhead at run time.
 
-use crate::reorder::{ReorderPlan, Schedule};
+use crate::reorder::{ReorderPlan, Schedule as LaneSchedule};
 use crate::sparse::Csr;
+use crate::tuner::schedule::Schedule;
 use crate::util::threadpool::{ComputePool, SendPtr};
 
-use super::gemm::axpy;
+use super::gemm::axpy_unrolled;
 
 /// CSR SpMM over rows [ms, me); `c_sub` holds exactly those rows (so the
 /// serial path passes the whole C with `ms = 0`).
-fn spmm_csr_rows(w: &Csr, b: &[f32], n: usize, c_sub: &mut [f32], ms: usize, me: usize) {
+fn spmm_csr_rows(
+    w: &Csr,
+    b: &[f32],
+    n: usize,
+    c_sub: &mut [f32],
+    ms: usize,
+    me: usize,
+    unroll: usize,
+) {
     debug_assert_eq!(c_sub.len(), (me - ms) * n);
     for r in ms..me {
         let (cols, vals) = w.row(r);
@@ -28,18 +41,27 @@ fn spmm_csr_rows(w: &Csr, b: &[f32], n: usize, c_sub: &mut [f32], ms: usize, me:
         for (ci, &col) in cols.iter().enumerate() {
             let av = vals[ci];
             let brow = &b[col as usize * n..col as usize * n + n];
-            axpy(av, brow, crow);
+            axpy_unrolled(av, brow, crow, unroll);
         }
     }
 }
 
 /// CSR SpMM with contiguous block row partition across the pool (the naive
-/// parallelisation whose imbalance the reorder pass fixes).
-pub fn spmm_csr(w: &Csr, b: &[f32], n: usize, c: &mut [f32], pool: &ComputePool) {
+/// parallelisation whose imbalance the reorder pass fixes). Of the tuned
+/// [`Schedule`] only the AXPY `unroll` width applies here — the loop
+/// structure is fixed by the CSR layout.
+pub fn spmm_csr(
+    w: &Csr,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
     debug_assert_eq!(b.len(), w.cols * n);
     debug_assert_eq!(c.len(), w.rows * n);
     if pool.threads() <= 1 {
-        spmm_csr_rows(w, b, n, c, 0, w.rows);
+        spmm_csr_rows(w, b, n, c, 0, w.rows, sched.unroll);
         return;
     }
     let c_ptr = SendPtr::new(c.as_mut_ptr());
@@ -48,8 +70,16 @@ pub fn spmm_csr(w: &Csr, b: &[f32], n: usize, c: &mut [f32], pool: &ComputePool)
         // of C.
         let c_sub =
             unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(ms * n), (me - ms) * n) };
-        spmm_csr_rows(w, b, n, c_sub, ms, me);
+        spmm_csr_rows(w, b, n, c_sub, ms, me, sched.unroll);
     });
+}
+
+/// Activation-panel length (elements) one caller must provide to
+/// [`spmm_reordered`]: one `max-group-K × N` panel per pool thread. The
+/// execution planner pre-sizes this in the plan's scratch accounting so
+/// the reordered fallback stays allocation-free at run time.
+pub fn reordered_panel_len(plan: &ReorderPlan, n: usize, pool_threads: usize) -> usize {
+    plan.max_group_cols() * n * pool_threads.max(1)
 }
 
 /// Reordered SpMM: execute the plan's groups under a balanced schedule.
@@ -57,32 +87,55 @@ pub fn spmm_csr(w: &Csr, b: &[f32], n: usize, c: &mut [f32], pool: &ComputePool)
 /// the group's packed columns. Every schedule lane runs entirely on one
 /// pool thread (striding when the schedule has more lanes than the pool),
 /// so results are bitwise-identical at every pool size.
+///
+/// `panel` is the caller-provided activation-gather scratch, at least
+/// [`reordered_panel_len`] elements (one per-thread slot each large enough
+/// for the biggest group's packed B rows) — nothing is heap-allocated
+/// here. Of the tuned [`Schedule`] only the AXPY `unroll` width applies;
+/// the loop structure is fixed by the reorder plan.
+#[allow(clippy::too_many_arguments)]
 pub fn spmm_reordered(
     plan: &ReorderPlan,
-    sched: &Schedule,
+    lanes_sched: &LaneSchedule,
     b: &[f32],
     n: usize,
     c: &mut [f32],
     pool: &ComputePool,
+    panel: &mut [f32],
+    tuned: &Schedule,
 ) {
     debug_assert_eq!(b.len(), plan.cols * n);
     debug_assert_eq!(c.len(), plan.rows * n);
+    let per = plan.max_group_cols() * n;
     let c_ptr = SendPtr::new(c.as_mut_ptr());
-    let lanes = sched.threads();
+    let lanes = lanes_sched.threads();
     if lanes <= 1 || pool.threads() <= 1 {
-        for item in sched.items.iter().flatten() {
-            run_item(plan, item, b, n, c_ptr);
+        debug_assert!(panel.len() >= per, "reordered panel undersized");
+        let slot = &mut panel[..per];
+        for item in lanes_sched.items.iter().flatten() {
+            run_item(plan, item, b, n, c_ptr, slot, tuned.unroll);
         }
         return;
     }
+    // One panel slot per participating pool thread: participant `p` runs
+    // lanes `p, p + L, p + 2L, …` sequentially, so slot `lane % L` is
+    // only ever touched by one thread at a time.
+    let slots = pool.threads().min(lanes);
+    debug_assert!(panel.len() >= slots * per, "reordered panel undersized");
+    let panel_ptr = SendPtr::new(panel.as_mut_ptr());
     pool.parallel_parts(lanes, |lane| {
         // Lanes write disjoint, non-contiguous C rows: every original row
         // appears in exactly one group, each group row range in exactly
         // one work item, and each item in exactly one lane. `run_item`
         // materialises one row slice at a time, so no lane ever holds a
         // view covering another lane's rows.
-        for item in &sched.items[lane] {
-            run_item(plan, item, b, n, c_ptr);
+        // SAFETY: slot `lane % slots` belongs exclusively to this
+        // participant for the duration of the dispatch (see above).
+        let slot = unsafe {
+            std::slice::from_raw_parts_mut(panel_ptr.get().add((lane % slots) * per), per)
+        };
+        for item in &lanes_sched.items[lane] {
+            run_item(plan, item, b, n, c_ptr, slot, tuned.unroll);
         }
     });
 }
@@ -92,13 +145,16 @@ pub fn spmm_reordered(
 /// exactly one group), so parallel execution is race-free. `c` is passed as
 /// a raw base pointer and each output row is materialised as its own
 /// n-element slice, so concurrent items never hold overlapping `&mut`
-/// views.
+/// views. `panel` is this thread's pre-sized gather scratch (≥ `k · n`
+/// elements for every group the item may touch) — no heap allocation.
 fn run_item(
     plan: &ReorderPlan,
     item: &crate::reorder::schedule::WorkItem,
     b: &[f32],
     n: usize,
     c: SendPtr<f32>,
+    panel: &mut [f32],
+    unroll: usize,
 ) {
     let grp = &plan.groups[item.group];
     let k = grp.cols.len();
@@ -110,7 +166,7 @@ fn run_item(
     // executed on the activation side too). For single-row items the
     // gather cannot amortise; fall back to indirect AXPY.
     if rows >= 2 && k >= 4 {
-        let mut b_packed = vec![0.0f32; k * n];
+        let b_packed = &mut panel[..k * n];
         for (j, &col) in grp.cols.iter().enumerate() {
             let col = col as usize;
             b_packed[j * n..(j + 1) * n].copy_from_slice(&b[col * n..col * n + n]);
@@ -137,7 +193,7 @@ fn run_item(
                 j += 4;
             }
             while j < k {
-                axpy(wrow[j], &b_packed[j * n..(j + 1) * n], crow);
+                axpy_unrolled(wrow[j], &b_packed[j * n..(j + 1) * n], crow, unroll);
                 j += 1;
             }
         }
@@ -151,7 +207,7 @@ fn run_item(
             for j in 0..k {
                 let av = wrow[j];
                 let col = grp.cols[j] as usize;
-                axpy(av, &b[col * n..col * n + n], crow);
+                axpy_unrolled(av, &b[col * n..col * n + n], crow, unroll);
             }
         }
     }
@@ -208,9 +264,19 @@ impl PatternPlan {
 }
 
 /// Pattern-kernel SpMM over the full patch matrix `b` [K, N].
-/// Pool threads partition output filters (disjoint C rows).
-pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], pool: &ComputePool) {
+/// Pool threads partition output filters (disjoint C rows). Of the tuned
+/// [`Schedule`] only the AXPY `unroll` width (general-pattern path)
+/// applies; the 4-entry PConv fast path is already a fixed fused loop.
+pub fn spmm_pattern(
+    plan: &PatternPlan,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
     debug_assert_eq!(c.len(), plan.out_c * n);
+    let unroll = sched.unroll;
     // `c_sub` holds exactly the filter rows [lo, hi) — the serial path
     // passes the whole C with lo = 0.
     let run = |c_sub: &mut [f32], lo: usize, hi: usize| {
@@ -242,7 +308,12 @@ pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], pool
                     }
                     let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
                     for (j, &row) in rows.iter().enumerate().take(*len as usize) {
-                        axpy(w[j], &b[row as usize * n..row as usize * n + n], crow);
+                        axpy_unrolled(
+                            w[j],
+                            &b[row as usize * n..row as usize * n + n],
+                            crow,
+                            unroll,
+                        );
                     }
                 }
             }
@@ -264,7 +335,9 @@ pub fn spmm_pattern(plan: &PatternPlan, b: &[f32], n: usize, c: &mut [f32], pool
 
 /// Column-compact SpMM: `b_packed` already contains only the kept K rows
 /// (built by `im2col_pruned`), so this is a dense GEMM of shape
-/// `[M, kept] × [kept, N]`.
+/// `[M, kept] × [kept, N]` — the full tuned [`Schedule`] (tiles, split
+/// axis, unroll) applies.
+#[allow(clippy::too_many_arguments)]
 pub fn spmm_column_compact(
     packed_w: &[f32],
     m: usize,
@@ -273,10 +346,11 @@ pub fn spmm_column_compact(
     n: usize,
     c: &mut [f32],
     pool: &ComputePool,
+    sched: &Schedule,
 ) {
     debug_assert_eq!(packed_w.len(), m * kept);
     debug_assert_eq!(b_packed.len(), kept * n);
-    super::gemm::gemm(m, kept, n, packed_w, b_packed, c, pool);
+    super::gemm::gemm_with(m, kept, n, packed_w, b_packed, c, pool, sched);
 }
 
 #[cfg(test)]
@@ -306,7 +380,13 @@ mod tests {
             let mut c1 = vec![0.0; gv.rows * n];
             let mut c2 = vec![0.0; gv.rows * n];
             let csr = Csr::from_dense(&gv);
-            spmm_csr(&csr, &b, n, &mut c1, &ComputePool::new(rng.range(1, 5)));
+            let pool = ComputePool::new(rng.range(1, 5));
+            spmm_csr(&csr, &b, n, &mut c1, &pool, &Schedule::default());
+            // The plain-unroll schedule is bitwise-identical.
+            let mut c3 = vec![0.0; gv.rows * n];
+            let plain = Schedule { unroll: 1, ..Schedule::default() };
+            spmm_csr(&csr, &b, n, &mut c3, &pool, &plain);
+            assert_eq!(c1, c3, "unroll width changed bits");
             gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
             let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
             assert!(err < 1e-3, "err={}", err);
@@ -323,12 +403,16 @@ mod tests {
             let threads = rng.range(1, 5);
             let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
             let plan = ReorderPlan::build(&gv);
-            let sched = Schedule::build(&plan, threads);
+            let lanes = LaneSchedule::build(&plan, threads);
             let mut c1 = vec![0.0; gv.rows * n];
             let mut c2 = vec![0.0; gv.rows * n];
             // Pool size deliberately independent of the schedule's lane
             // count: lanes stride over pool threads.
-            spmm_reordered(&plan, &sched, &b, n, &mut c1, &ComputePool::new(rng.range(1, 4)));
+            let pool = ComputePool::new(rng.range(1, 4));
+            let mut panel = vec![0.0; reordered_panel_len(&plan, n, pool.threads())];
+            spmm_reordered(
+                &plan, &lanes, &b, n, &mut c1, &pool, &mut panel, &Schedule::default(),
+            );
             gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
             let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
             assert!(err < 1e-3, "kind={} err={}", kind, err);
@@ -353,7 +437,16 @@ mod tests {
         }
         let mut c1 = vec![0.0; gv.rows * n];
         let mut c2 = vec![0.0; gv.rows * n];
-        spmm_column_compact(&cc.values, gv.rows, cc.kept(), &bp, n, &mut c1, &ComputePool::new(2));
+        spmm_column_compact(
+            &cc.values,
+            gv.rows,
+            cc.kept(),
+            &bp,
+            n,
+            &mut c1,
+            &ComputePool::new(2),
+            &Schedule::default(),
+        );
         gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut c2);
         let err: f32 = c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
         assert!(err < 1e-3, "err={}", err);
@@ -378,7 +471,14 @@ mod tests {
             let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
             let mut c1 = vec![0.0; o * n];
             let mut c2 = vec![0.0; o * n];
-            spmm_pattern(&plan, &b, n, &mut c1, &ComputePool::new(rng.range(1, 4)));
+            spmm_pattern(
+                &plan,
+                &b,
+                n,
+                &mut c1,
+                &ComputePool::new(rng.range(1, 4)),
+                &Schedule::default(),
+            );
             gemm_ref(o, gv.cols, n, &gv.data, &b, &mut c2);
             let err: f32 =
                 c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
@@ -390,10 +490,34 @@ mod tests {
     fn fully_pruned_rows_yield_zero_output() {
         let gv = GemmView { rows: 3, cols: 4, data: vec![0.0; 12] };
         let plan = ReorderPlan::build(&gv);
-        let sched = Schedule::build(&plan, 2);
+        let lanes = LaneSchedule::build(&plan, 2);
         let b = vec![1.0; 4 * 5];
         let mut c = vec![0.0; 15];
-        spmm_reordered(&plan, &sched, &b, 5, &mut c, &ComputePool::new(2));
+        let pool = ComputePool::new(2);
+        let mut panel = vec![0.0; reordered_panel_len(&plan, 5, pool.threads())];
+        spmm_reordered(&plan, &lanes, &b, 5, &mut c, &pool, &mut panel, &Schedule::default());
         assert!(c.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reordered_panel_is_not_resized_by_the_kernel() {
+        // The kernel must live within the pre-sized panel: exactly
+        // `reordered_panel_len` elements, never more.
+        let mut rng = Rng::new(83);
+        let (gv, _) = pruned_gv(&mut rng, 16, 4, "column", 0.5);
+        let plan = ReorderPlan::build(&gv);
+        let n = 10;
+        let pool = ComputePool::new(3);
+        let lanes = LaneSchedule::build(&plan, 3);
+        let len = reordered_panel_len(&plan, n, pool.threads());
+        let mut panel = vec![0.0; len];
+        let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0; gv.rows * n];
+        spmm_reordered(&plan, &lanes, &b, n, &mut c, &pool, &mut panel, &Schedule::default());
+        assert_eq!(panel.len(), len);
+        let mut want = vec![0.0; gv.rows * n];
+        gemm_ref(gv.rows, gv.cols, n, &gv.data, &b, &mut want);
+        let err: f32 = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(err < 1e-3, "err={}", err);
     }
 }

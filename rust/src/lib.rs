@@ -34,6 +34,7 @@ pub mod sparse;
 pub mod reorder;
 pub mod passes;
 pub mod kernels;
+pub mod tuner;
 pub mod executor;
 pub mod runtime;
 pub mod perfmodel;

@@ -4,13 +4,18 @@
 //! prt-dnn apps                                  # list apps + MACs/params
 //! prt-dnn compile --app style [--width 0.5]     # run compiler passes, report
 //! prt-dnn run --app sr --variant pruning+compiler [--threads 4]
-//! prt-dnn serve --app coloring --fps 30 --frames 120
+//! prt-dnn run --app sr --tune [--tune-cache .tune-cache.json]
+//! prt-dnn serve --app coloring --fps 30 --frames 120 [--tune]
 //! prt-dnn model --app style                     # modeled Adreno-640 ms/variant
 //! prt-dnn artifacts [--dir artifacts]           # list + smoke-run artifacts
 //! ```
+//!
+//! `--tune` enables the plan-time schedule auto-tuner (see
+//! `docs/ARCHITECTURE.md` §Tuning); winners persist in `--tune-cache`
+//! (default `.tune-cache.json`) so later runs plan without benchmarking.
 
 use anyhow::{bail, Context, Result};
-use prt_dnn::apps::{build_app, prepare_variant, AppSpec, Variant};
+use prt_dnn::apps::{build_app, prepare_variant_tuned, AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
 use prt_dnn::coordinator::{ServeConfig, Server};
 use prt_dnn::dsl::Graph;
@@ -21,6 +26,7 @@ use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
 use prt_dnn::pruning::graph_sparsity_report;
 use prt_dnn::runtime::{Manifest, PjrtModel};
 use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::cli::Args;
 
 const APPS: &[&str] = &["style", "coloring", "sr", "vgg16"];
@@ -51,6 +57,26 @@ fn run(args: &Args) -> Result<()> {
             println!("subcommands: apps | compile | run | serve | model | artifacts");
             Ok(())
         }
+    }
+}
+
+/// `--tune` / `--tune-cache PATH` → tuning options (off when neither is
+/// given; `--tune-cache` alone implies `--tune`).
+fn tune_opts(args: &Args) -> TuneOpts {
+    if args.has_flag("tune") || args.get("tune-cache").is_some() {
+        TuneOpts::on(args.get_or("tune-cache", ".tune-cache.json"))
+    } else {
+        TuneOpts::off()
+    }
+}
+
+fn print_tune_stats(eng: &Engine) {
+    if eng.plan().tuned() {
+        let st = eng.plan().tune_stats();
+        println!(
+            "tuner: {} cache hits, {} misses, {} micro-benchmark runs",
+            st.cache_hits, st.cache_misses, st.bench_runs
+        );
     }
 }
 
@@ -140,7 +166,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let variant = parse_variant(args.get_or("variant", "pruning+compiler"))?;
     let g = build_app(app, width, 42)?;
     let spec = AppSpec::for_app(app);
-    let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
+    let (eng, _) = prepare_variant_tuned(&g, variant, &spec, threads, &tune_opts(args))?;
+    print_tune_stats(&eng);
     let input_shape = eng.input_shapes()[0].clone();
     let x = Tensor::full(&input_shape, 0.5);
     let s = bench_auto_ms(800.0, || {
@@ -174,7 +201,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let frames = args.get_usize("frames", 120);
     let g = build_app(app, width, 42)?;
     let spec = AppSpec::for_app(app);
-    let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
+    let (eng, _) = prepare_variant_tuned(&g, variant, &spec, threads, &tune_opts(args))?;
+    print_tune_stats(&eng);
     let ishape = eng.input_shapes()[0].clone();
     let (h, w) = (ishape[2], ishape[3]);
     let gray = ishape[1] == 1;

@@ -18,6 +18,8 @@
 
 pub mod device;
 pub mod cost;
+pub mod sched;
 
 pub use cost::{estimate_graph, OpCost, VariantKind};
 pub use device::Device;
+pub use sched::{gemm_schedule_seconds, HostModel};

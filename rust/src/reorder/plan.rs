@@ -89,6 +89,12 @@ impl ReorderPlan {
         self.groups.len()
     }
 
+    /// Widest group support (columns) — sizes the per-thread activation
+    /// panel the reordered kernel gathers into.
+    pub fn max_group_cols(&self) -> usize {
+        self.groups.iter().map(|g| g.cols.len()).max().unwrap_or(0)
+    }
+
     /// Reconstruct the dense matrix (test oracle).
     pub fn to_dense(&self) -> GemmView {
         let mut data = vec![0.0f32; self.rows * self.cols];

@@ -1,0 +1,178 @@
+//! On-disk [`TuneCache`]: winning schedules keyed by op-shape + threads.
+//!
+//! The cache makes planning fast after the first tuned run: a key hit
+//! skips candidate enumeration *and* micro-benchmarking entirely. The
+//! file format is plain JSON (via [`util::json`](crate::util::json), the
+//! offline toolchain has no serde) with entries sorted by key, so the
+//! serialization is deterministic and diffs cleanly.
+
+use crate::tuner::schedule::Schedule;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Current cache file format version.
+const VERSION: usize = 1;
+
+/// Persistent map from tune key (see
+/// [`TuneRequest::key`](crate::tuner::TuneRequest::key)) to the winning
+/// [`Schedule`]. Entries are kept sorted by key for deterministic output.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneCache {
+    entries: BTreeMap<String, Schedule>,
+}
+
+impl TuneCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of cached schedules.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Cached schedule for `key`, if present.
+    pub fn get(&self, key: &str) -> Option<Schedule> {
+        self.entries.get(key).copied()
+    }
+
+    /// Record the winning schedule for `key`.
+    pub fn insert(&mut self, key: impl Into<String>, sched: Schedule) {
+        self.entries.insert(key.into(), sched.sanitized());
+    }
+
+    /// Serialize (entries in sorted key order — deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut entries = JsonObj::new();
+        for (k, s) in &self.entries {
+            entries.insert(k.clone(), s.to_json());
+        }
+        let mut o = JsonObj::new();
+        o.insert("version", VERSION);
+        o.insert("entries", Json::Obj(entries));
+        Json::Obj(o)
+    }
+
+    /// Parse a cache document; schedules are sanitized on the way in.
+    pub fn from_json(j: &Json) -> Result<TuneCache> {
+        match j.get("version").as_usize() {
+            Some(VERSION) => {}
+            other => bail!("tune cache: unsupported version {:?}", other),
+        }
+        let entries = j
+            .get("entries")
+            .as_obj()
+            .context("tune cache: missing 'entries' object")?;
+        let mut cache = TuneCache::new();
+        for (k, v) in entries.iter() {
+            let sched = Schedule::from_json(v)
+                .with_context(|| format!("tune cache: entry '{}'", k))?;
+            cache.insert(k.clone(), sched);
+        }
+        Ok(cache)
+    }
+
+    /// Load from disk; a missing file yields an empty cache, a malformed
+    /// one is an error (delete the file to retune from scratch).
+    pub fn load(path: &Path) -> Result<TuneCache> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(TuneCache::new())
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", path.display()))
+            }
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {}", path.display(), e))?;
+        Self::from_json(&j)
+    }
+
+    /// Write the deterministic pretty-printed form to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::schedule::{Lowering, SplitAxis};
+
+    fn sample() -> TuneCache {
+        let mut c = TuneCache::new();
+        c.insert("conv|dense|m64k27n1024|k3s1p1|t4", Schedule::default());
+        c.insert(
+            "conv|column|m32k9n1024|k3s1p1|t4",
+            Schedule {
+                lowering: Lowering::Im2col,
+                mc: 32,
+                kc: 128,
+                nc: 4096,
+                split: SplitAxis::Cols,
+                unroll: 1,
+            },
+        );
+        c
+    }
+
+    #[test]
+    fn roundtrips_deterministically() {
+        let c = sample();
+        let s1 = c.to_json().to_string_pretty();
+        let back = TuneCache::from_json(&Json::parse(&s1).unwrap()).unwrap();
+        assert_eq!(back, c);
+        let s2 = back.to_json().to_string_pretty();
+        assert_eq!(s1, s2, "serialization must be deterministic");
+    }
+
+    #[test]
+    fn keys_are_sorted_in_output() {
+        let c = sample();
+        let text = c.to_json().to_string();
+        let a = text.find("conv|column").unwrap();
+        let b = text.find("conv|dense").unwrap();
+        assert!(a < b, "entries must serialize in sorted key order");
+    }
+
+    #[test]
+    fn missing_file_is_empty_cache() {
+        let p = std::env::temp_dir().join(format!(
+            "prt-tune-cache-missing-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&p);
+        assert!(TuneCache::load(&p).unwrap().is_empty());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let p = std::env::temp_dir().join(format!(
+            "prt-tune-cache-rt-{}.json",
+            std::process::id()
+        ));
+        let c = sample();
+        c.save(&p).unwrap();
+        let back = TuneCache::load(&p).unwrap();
+        assert_eq!(back, c);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(TuneCache::from_json(&Json::parse("{\"version\":99}").unwrap()).is_err());
+        assert!(TuneCache::from_json(&Json::parse("{\"version\":1}").unwrap()).is_err());
+    }
+}

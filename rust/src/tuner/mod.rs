@@ -1,0 +1,400 @@
+//! Auto-tuning subsystem: per-step kernel schedules searched at plan time,
+//! cached on disk, and carried in the
+//! [`ExecutionPlan`](crate::executor::ExecutionPlan).
+//!
+//! The paper's lineage (PatDNN's "compilation parameter auto-tuning", GRIM's
+//! per-layer schedule selection) chooses kernel parameters per layer shape
+//! instead of hard-coding one blocking for every conv. This module is that
+//! layer between graph optimization and execution:
+//!
+//! 1. The [`Planner`](crate::executor::Planner) builds each conv step's
+//!    execution strategy, then asks the [`Tuner`] for a [`Schedule`].
+//! 2. The tuner keys the request by (op, sparsity-variant, GEMM shape,
+//!    geometry, thread count). A [`TuneCache`] hit returns immediately —
+//!    planning stays fast after the first tuned run, with **zero**
+//!    micro-benchmark executions.
+//! 3. On a miss it enumerates a bounded candidate space, ranks it with the
+//!    deterministic roofline in [`perfmodel::sched`](crate::perfmodel::sched),
+//!    micro-benchmarks only the few survivors **on a real
+//!    [`ComputePool`]** via a caller-supplied closure that runs the actual
+//!    kernel, and records the winner.
+//!
+//! The default schedule is always benchmarked too and wins ties (a
+//! candidate must beat it by > 2 % to be selected), so a tuned plan is
+//! never measurably slower than the fixed defaults. Every candidate is
+//! bitwise-output-equivalent to the default by construction — see
+//! [`schedule`] for the invariant and `rust/tests/tuner_equivalence.rs`
+//! for the proof.
+
+pub mod cache;
+pub mod schedule;
+
+pub use cache::TuneCache;
+pub use schedule::{Lowering, Schedule, SplitAxis};
+
+use crate::perfmodel::sched::{gemm_schedule_seconds, HostModel};
+use crate::util::threadpool::ComputePool;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Tuning configuration carried on
+/// [`ExecConfig`](crate::executor::ExecConfig). The default (`off`) makes
+/// planning behave exactly as before the tuner existed.
+#[derive(Debug, Clone, Default)]
+pub struct TuneOpts {
+    /// Whether the planner consults the tuner at all.
+    pub enabled: bool,
+    /// On-disk cache location; `None` tunes in memory only (winners are
+    /// still deduped across steps of one plan, but not persisted).
+    pub cache_path: Option<PathBuf>,
+    /// Survivors micro-benchmarked per key after roofline pruning
+    /// (0 = default of 4; the default schedule always survives).
+    pub max_candidates: usize,
+    /// Timed repeats per survivor, minimum taken (0 = default of 3).
+    pub bench_repeats: usize,
+}
+
+impl TuneOpts {
+    /// Tuning disabled (the planner uses the default schedule everywhere).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Tuning enabled with an on-disk cache at `path`.
+    pub fn on(path: impl AsRef<Path>) -> Self {
+        TuneOpts {
+            enabled: true,
+            cache_path: Some(path.as_ref().to_path_buf()),
+            max_candidates: 0,
+            bench_repeats: 0,
+        }
+    }
+
+    /// Low-budget tuning (small survivor set, one timed repeat) — used by
+    /// tests and CI smoke jobs where plan latency matters more than the
+    /// last percent of kernel time.
+    pub fn quick(path: impl AsRef<Path>) -> Self {
+        TuneOpts { max_candidates: 3, bench_repeats: 1, ..Self::on(path) }
+    }
+
+    fn survivors(&self) -> usize {
+        if self.max_candidates == 0 {
+            4
+        } else {
+            self.max_candidates.max(1)
+        }
+    }
+
+    fn repeats(&self) -> usize {
+        if self.bench_repeats == 0 {
+            3
+        } else {
+            self.bench_repeats
+        }
+    }
+}
+
+/// Counters describing what one planning pass did; recorded on the
+/// resulting [`ExecutionPlan`](crate::executor::ExecutionPlan).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TuneStats {
+    /// Keys answered from the cache (no search, no benchmarking).
+    pub cache_hits: usize,
+    /// Keys that required a candidate search.
+    pub cache_misses: usize,
+    /// Total timed micro-benchmark kernel executions performed.
+    pub bench_runs: usize,
+}
+
+/// One tuning request: everything that identifies a unique kernel
+/// configuration worth its own cache entry.
+#[derive(Debug, Clone)]
+pub struct TuneRequest<'a> {
+    /// Op family ("conv").
+    pub op: &'a str,
+    /// Sparsity variant tag ("dense" | "csr" | "column" | "pattern" |
+    /// "reordered") — different storage formats want different schedules.
+    pub variant: &'a str,
+    /// GEMM M (output filters).
+    pub m: usize,
+    /// GEMM K (patch rows under the active format).
+    pub k: usize,
+    /// GEMM N (output pixels).
+    pub n: usize,
+    /// Geometry tag (e.g. `k3s1p1`) disambiguating equal GEMM shapes with
+    /// different lowerings.
+    pub geom: String,
+    /// Whether the direct (im2col-skipping) lowering is legal here.
+    pub direct_ok: bool,
+    /// Whether the step bottoms out in the blocked dense GEMM (full
+    /// candidate space) or in a sparse kernel (unroll-only space).
+    pub gemm_backed: bool,
+}
+
+impl TuneRequest<'_> {
+    /// Canonical cache key (shape + variant + geometry + thread count).
+    pub fn key(&self, threads: usize) -> String {
+        format!(
+            "{}|{}|m{}k{}n{}|{}|t{}",
+            self.op, self.variant, self.m, self.k, self.n, self.geom, threads
+        )
+    }
+}
+
+/// The schedule search engine. One `Tuner` lives for the duration of one
+/// planning pass; construction loads the on-disk cache, [`Tuner::persist`]
+/// writes new winners back.
+pub struct Tuner {
+    opts: TuneOpts,
+    threads: usize,
+    cache: TuneCache,
+    dirty: bool,
+    stats: TuneStats,
+    /// Spawned lazily on the first cache miss — a plan served entirely
+    /// from cache never spawns benchmark threads.
+    pool: Option<ComputePool>,
+}
+
+impl Tuner {
+    /// Build a tuner for one planning pass at the given thread budget,
+    /// loading the on-disk cache when configured.
+    pub fn new(opts: TuneOpts, threads: usize) -> Result<Self> {
+        let cache = match &opts.cache_path {
+            Some(p) if opts.enabled => TuneCache::load(p)?,
+            _ => TuneCache::new(),
+        };
+        Ok(Tuner {
+            opts,
+            threads: threads.max(1),
+            cache,
+            dirty: false,
+            stats: TuneStats::default(),
+            pool: None,
+        })
+    }
+
+    /// Whether the planner should consult this tuner at all.
+    pub fn enabled(&self) -> bool {
+        self.opts.enabled
+    }
+
+    /// Counters for the planning pass so far.
+    pub fn stats(&self) -> TuneStats {
+        self.stats
+    }
+
+    /// The bounded candidate space for a request. Every candidate is
+    /// sanitized into the bitwise-safe legal space; the default schedule
+    /// is always element 0.
+    pub fn candidate_space(req: &TuneRequest) -> Vec<Schedule> {
+        let default = Schedule::default();
+        if !req.gemm_backed {
+            // Sparse kernels: the reorder/pattern plans fix the loop
+            // structure, only the AXPY unroll width is free.
+            return vec![default, Schedule { unroll: 1, ..default }];
+        }
+        let mut out = vec![default];
+        let lowerings: &[Lowering] = if req.direct_ok {
+            &[Lowering::Im2col, Lowering::Direct]
+        } else {
+            &[Lowering::Im2col]
+        };
+        for &lowering in lowerings {
+            for &mc in &[32usize, 64, 128] {
+                for &kc in &[128usize, 256, 512] {
+                    for &nc in &[256usize, 1024, 4096] {
+                        for &split in &[SplitAxis::Rows, SplitAxis::Cols] {
+                            for &unroll in &[8usize, 1] {
+                                let s = Schedule { lowering, mc, kc, nc, split, unroll }
+                                    .sanitized();
+                                if s != default {
+                                    out.push(s);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Resolve the schedule for one request: cache hit, or search
+    /// (roofline-prune the candidate space, micro-benchmark the survivors
+    /// through `bench`, record the winner). `bench` runs the step's real
+    /// kernel once under the given schedule on the given pool and returns
+    /// elapsed seconds.
+    pub fn tune(
+        &mut self,
+        req: &TuneRequest,
+        bench: &mut dyn FnMut(&Schedule, &ComputePool) -> f64,
+    ) -> Schedule {
+        if !self.opts.enabled {
+            return Schedule::default();
+        }
+        let key = req.key(self.threads);
+        if let Some(s) = self.cache.get(&key) {
+            self.stats.cache_hits += 1;
+            return s;
+        }
+        self.stats.cache_misses += 1;
+
+        // Rank the bounded space with the deterministic roofline and keep
+        // the few survivors worth real benchmark time. The default is
+        // pinned as survivor 0 regardless of its modeled rank.
+        let host = HostModel::generic();
+        let mut ranked: Vec<(f64, Schedule)> = Self::candidate_space(req)
+            .into_iter()
+            .skip(1)
+            .map(|s| {
+                (gemm_schedule_seconds(req.m, req.k, req.n, self.threads, &s, &host), s)
+            })
+            .collect();
+        ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        let default = Schedule::default();
+        let mut survivors = vec![default];
+        survivors.extend(
+            ranked
+                .into_iter()
+                .map(|(_, s)| s)
+                .take(self.opts.survivors().saturating_sub(1)),
+        );
+
+        let threads = self.threads;
+        let pool = self.pool.get_or_insert_with(|| ComputePool::new(threads));
+        let repeats = self.opts.repeats();
+        let mut best = default;
+        let mut best_t = f64::INFINITY;
+        let mut default_t = f64::INFINITY;
+        for cand in &survivors {
+            // One warm-up run (scratch sizing, page faults), then timed
+            // repeats with the minimum taken.
+            let _ = bench(cand, pool);
+            self.stats.bench_runs += 1;
+            let mut t = f64::INFINITY;
+            for _ in 0..repeats {
+                t = t.min(bench(cand, pool));
+                self.stats.bench_runs += 1;
+            }
+            if *cand == default {
+                default_t = t;
+            }
+            if t < best_t {
+                best_t = t;
+                best = *cand;
+            }
+        }
+        // Default bias: deviate only for a clear (> 2 %) win, so a tuned
+        // plan is never measurably slower than the fixed defaults.
+        let winner = if best != default && best_t > default_t * 0.98 {
+            default
+        } else {
+            best
+        };
+        self.cache.insert(key, winner);
+        self.dirty = true;
+        winner
+    }
+
+    /// Write newly recorded winners back to the on-disk cache (no-op when
+    /// tuning is off, nothing changed, or no path is configured).
+    pub fn persist(&mut self) -> Result<()> {
+        if self.opts.enabled && self.dirty {
+            if let Some(p) = &self.opts.cache_path {
+                self.cache.save(p)?;
+                self.dirty = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm_req(direct_ok: bool, gemm_backed: bool) -> TuneRequest<'static> {
+        TuneRequest {
+            op: "conv",
+            variant: "dense",
+            m: 32,
+            k: 27,
+            n: 1024,
+            geom: "k3s1p1".to_string(),
+            direct_ok,
+            gemm_backed,
+        }
+    }
+
+    #[test]
+    fn candidate_space_is_bounded_and_legal() {
+        let cands = Tuner::candidate_space(&gemm_req(true, true));
+        assert_eq!(cands[0], Schedule::default());
+        assert!(cands.len() > 8 && cands.len() <= 1 + 2 * 108);
+        for c in &cands {
+            assert_eq!(*c, c.sanitized(), "candidate not legal: {:?}", c);
+        }
+        let sparse = Tuner::candidate_space(&gemm_req(false, false));
+        assert_eq!(sparse.len(), 2, "sparse space is unroll-only");
+    }
+
+    #[test]
+    fn disabled_tuner_returns_default_without_benching() {
+        let mut t = Tuner::new(TuneOpts::off(), 4).unwrap();
+        let mut calls = 0usize;
+        let s = t.tune(&gemm_req(false, true), &mut |_, _| {
+            calls += 1;
+            0.0
+        });
+        assert_eq!(s, Schedule::default());
+        assert_eq!(calls, 0);
+        assert_eq!(t.stats(), TuneStats::default());
+    }
+
+    fn mem_opts(max_candidates: usize) -> TuneOpts {
+        TuneOpts { enabled: true, cache_path: None, max_candidates, bench_repeats: 1 }
+    }
+
+    #[test]
+    fn in_memory_cache_dedupes_repeated_shapes() {
+        let mut t = Tuner::new(mem_opts(2), 2).unwrap();
+        let req = gemm_req(false, true);
+        let mut calls = 0usize;
+        let s1 = t.tune(&req, &mut |_, _| {
+            calls += 1;
+            1.0
+        });
+        let after_first = calls;
+        assert!(after_first > 0);
+        let s2 = t.tune(&req, &mut |_, _| {
+            calls += 1;
+            1.0
+        });
+        assert_eq!(calls, after_first, "second identical key must not bench");
+        assert_eq!(s1, s2);
+        assert_eq!(t.stats().cache_hits, 1);
+        assert_eq!(t.stats().cache_misses, 1);
+    }
+
+    #[test]
+    fn default_wins_ties() {
+        // Every candidate measures identical time: the default must win.
+        let mut t = Tuner::new(mem_opts(4), 2).unwrap();
+        let s = t.tune(&gemm_req(true, true), &mut |_, _| 1.0);
+        assert_eq!(s, Schedule::default());
+    }
+
+    #[test]
+    fn clear_winner_is_selected() {
+        let mut t = Tuner::new(mem_opts(4), 2).unwrap();
+        // The default is slow, everything else is 10x faster.
+        let s = t.tune(&gemm_req(true, true), &mut |cand, _| {
+            if *cand == Schedule::default() {
+                1.0
+            } else {
+                0.1
+            }
+        });
+        assert_ne!(s, Schedule::default());
+    }
+}

@@ -1,0 +1,201 @@
+//! The tuned kernel [`Schedule`] — the unit the auto-tuner searches over.
+//!
+//! A `Schedule` bundles every per-step kernel decision that is a pure
+//! performance knob: how a conv is lowered to a matrix multiply, the GEMM
+//! blocking tile sizes, which axis the multi-threaded kernel splits across
+//! the compute pool, and the inner-loop unroll width. The default value
+//! reproduces the historical hard-coded kernels exactly.
+//!
+//! # Bitwise-safety invariant
+//!
+//! Every legal `Schedule` must produce **bitwise-identical** outputs to the
+//! default schedule (verified by `rust/tests/tuner_equivalence.rs`). The
+//! kernels guarantee this as long as:
+//!
+//! * `mc` is even — the 2-row GEMM micro-kernel then pairs the same rows
+//!   regardless of the tile size;
+//! * `kc` is a multiple of 4 — the 4-way fused K groups then fall on the
+//!   same offsets regardless of the panel size, so each output element is
+//!   accumulated through the same fp expression in the same order;
+//! * `nc`, `split` and `unroll` are unrestricted — column tiling, the
+//!   parallel split and the j-loop unroll never change any element's fp
+//!   expression (each output element is produced by exactly one thread).
+//!
+//! [`Schedule::sanitized`] clamps arbitrary (e.g. cache-loaded) values into
+//! this legal space.
+
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Result};
+
+/// How a conv step is lowered to a matrix multiply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lowering {
+    /// Build the im2col patch matrix in scratch, then GEMM (the default).
+    Im2col,
+    /// Skip the patch copy and GEMM directly over the input activations.
+    /// Legal only when the lowering is the identity (1×1 kernel, stride 1,
+    /// no padding), where the patch matrix *is* the input plane — the
+    /// kernels fall back to im2col for any other geometry.
+    Direct,
+}
+
+/// Which axis the multi-threaded GEMM partitions across the compute pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitAxis {
+    /// Partition C's rows (output filters) — best when M ≥ threads.
+    Rows,
+    /// Partition C's columns (output pixels) — best for few-filter layers
+    /// (decoder heads with 3 output channels and huge spatial N).
+    Cols,
+}
+
+/// One per-step kernel schedule (lowering + blocking + partitioning).
+///
+/// Lives on every [`PlanStep`](crate::executor::ExecutionPlan); the
+/// GEMM-backed kernels honor all fields, the sparse kernels honor `unroll`
+/// (their other knobs are fixed by the reorder schedule).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    /// Conv lowering strategy.
+    pub lowering: Lowering,
+    /// Rows of A per GEMM macro-tile (kept even; see the module docs).
+    pub mc: usize,
+    /// K-panel blocking size (kept a multiple of 4; see the module docs).
+    pub kc: usize,
+    /// N-panel blocking size.
+    pub nc: usize,
+    /// Parallel split axis of the multi-threaded GEMM.
+    pub split: SplitAxis,
+    /// Inner j-loop unroll width of the AXPY passes (1 or 8).
+    pub unroll: usize,
+}
+
+impl Default for Schedule {
+    /// The historical fixed kernel parameters — running every step with
+    /// this schedule is bit-for-bit the pre-tuner executor.
+    fn default() -> Self {
+        Schedule {
+            lowering: Lowering::Im2col,
+            mc: crate::kernels::gemm::MC,
+            kc: crate::kernels::gemm::KC,
+            nc: crate::kernels::gemm::NC,
+            split: SplitAxis::Rows,
+            unroll: 8,
+        }
+    }
+}
+
+impl Schedule {
+    /// Clamp into the bitwise-safe legal space (see the module docs):
+    /// `mc` even ≥ 2, `kc` a multiple of 4 ≥ 4, `nc` ≥ 8, `unroll` ∈ {1, 8}.
+    pub fn sanitized(mut self) -> Self {
+        self.mc = (self.mc.max(2) / 2) * 2;
+        self.kc = (self.kc.max(4) / 4) * 4;
+        self.nc = self.nc.max(8);
+        self.unroll = if self.unroll >= 8 { 8 } else { 1 };
+        self
+    }
+
+    /// Serialize to the cache/plan JSON form.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert(
+            "lowering",
+            match self.lowering {
+                Lowering::Im2col => "im2col",
+                Lowering::Direct => "direct",
+            },
+        );
+        o.insert("mc", self.mc);
+        o.insert("kc", self.kc);
+        o.insert("nc", self.nc);
+        o.insert(
+            "split",
+            match self.split {
+                SplitAxis::Rows => "rows",
+                SplitAxis::Cols => "cols",
+            },
+        );
+        o.insert("unroll", self.unroll);
+        Json::Obj(o)
+    }
+
+    /// Parse the JSON form; unknown tags are rejected, numeric fields are
+    /// sanitized into the legal space.
+    pub fn from_json(j: &Json) -> Result<Schedule> {
+        let lowering = match j.get("lowering").as_str() {
+            Some("im2col") => Lowering::Im2col,
+            Some("direct") => Lowering::Direct,
+            other => bail!("schedule: bad lowering tag {:?}", other),
+        };
+        let split = match j.get("split").as_str() {
+            Some("rows") => SplitAxis::Rows,
+            Some("cols") => SplitAxis::Cols,
+            other => bail!("schedule: bad split tag {:?}", other),
+        };
+        let num = |key: &str| -> Result<usize> {
+            j.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("schedule: missing numeric field '{}'", key))
+        };
+        Ok(Schedule {
+            lowering,
+            mc: num("mc")?,
+            kc: num("kc")?,
+            nc: num("nc")?,
+            split,
+            unroll: num("unroll")?,
+        }
+        .sanitized())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_baked_in_constants() {
+        let s = Schedule::default();
+        assert_eq!(s.mc, crate::kernels::gemm::MC);
+        assert_eq!(s.kc, crate::kernels::gemm::KC);
+        assert_eq!(s.nc, crate::kernels::gemm::NC);
+        assert_eq!(s.lowering, Lowering::Im2col);
+        assert_eq!(s.split, SplitAxis::Rows);
+        assert_eq!(s.unroll, 8);
+        assert_eq!(s, s.sanitized(), "the default must already be legal");
+    }
+
+    #[test]
+    fn sanitize_clamps_into_legal_space() {
+        let s = Schedule {
+            lowering: Lowering::Direct,
+            mc: 33,
+            kc: 130,
+            nc: 3,
+            split: SplitAxis::Cols,
+            unroll: 5,
+        }
+        .sanitized();
+        assert_eq!(s.mc % 2, 0);
+        assert_eq!(s.kc % 4, 0);
+        assert!(s.nc >= 8);
+        assert_eq!(s.unroll, 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Schedule {
+            lowering: Lowering::Direct,
+            mc: 32,
+            kc: 128,
+            nc: 4096,
+            split: SplitAxis::Cols,
+            unroll: 1,
+        };
+        let j = s.to_json();
+        let back = Schedule::from_json(&j).unwrap();
+        assert_eq!(s, back);
+        assert!(Schedule::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

@@ -67,7 +67,12 @@ fn check_app(app: &str, base: Graph) {
     assert_planned_equivalence(
         &format!("{}/csr", app),
         &pruned,
-        &ExecConfig { sparse: SparseMode::Csr, threads: 2, schemes: schemes.clone() },
+        &ExecConfig {
+            sparse: SparseMode::Csr,
+            threads: 2,
+            schemes: schemes.clone(),
+            tune: prt_dnn::tuner::TuneOpts::off(),
+        },
     );
     assert_planned_equivalence(
         &format!("{}/compact", app),

@@ -1,0 +1,157 @@
+//! Acceptance checks for the auto-tuning subsystem (`crate::tuner`):
+//!
+//! 1. **Bitwise equivalence** — a plan compiled with tuning enabled
+//!    produces bit-identical outputs to the untuned plan on all three app
+//!    graphs at `threads = 1` and `threads = 4`. Schedules are a pure
+//!    performance knob; they must never move a bit.
+//! 2. **Cache determinism** — `TuneCache` round-trips through its JSON
+//!    form deterministically (sorted keys, byte-identical re-serialization).
+//! 3. **Warm-cache planning** — the CI smoke configuration: a tiny
+//!    width-0.25 graph tuned with a 2-candidate space populates the cache
+//!    on the first plan; the second plan answers every key from the cache
+//!    and performs **zero** micro-benchmark runs.
+
+use prt_dnn::apps::builders::{build_coloring, build_sr, build_style};
+use prt_dnn::apps::{prune_graph, AppSpec};
+use prt_dnn::dsl::Graph;
+use prt_dnn::executor::{ExecConfig, ExecContext, Planner};
+use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::{Schedule, TuneCache, TuneOpts};
+use prt_dnn::util::json::Json;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("prt-tuner-eq-{}-{}.json", std::process::id(), name))
+}
+
+fn structured_input(shape: &[usize]) -> Tensor {
+    let mut x = Tensor::zeros(shape);
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        *v = 0.5 + 0.4 * ((i as f32) * 0.23).sin();
+    }
+    x
+}
+
+fn app_graph(app: &str) -> Graph {
+    match app {
+        "style" => build_style(32, 0.25, 61),
+        "coloring" => build_coloring(32, 0.25, 62),
+        "sr" => build_sr(24, 4, 0.25, 63),
+        _ => unreachable!(),
+    }
+}
+
+/// Tuned and default plans must agree bit-for-bit (per app, per thread
+/// count, under the compact compiler configuration that exercises dense
+/// stems + column/pattern kernels).
+#[test]
+fn tuned_plans_match_default_bitwise_on_all_apps() {
+    for &threads in &[1usize, 4] {
+        for app in ["style", "coloring", "sr"] {
+            let mut g = app_graph(app);
+            let schemes = prune_graph(&mut g, &AppSpec::for_app(app));
+            assert!(!schemes.is_empty(), "{}: nothing pruned", app);
+
+            let base_cfg = ExecConfig::compact(threads, schemes.clone());
+            let cache = tmp(&format!("eq-{}-t{}", app, threads));
+            let _ = std::fs::remove_file(&cache);
+            let tuned_cfg =
+                ExecConfig::compact(threads, schemes).with_tuning(TuneOpts::quick(&cache));
+
+            let p0 = Planner::plan(&g, &base_cfg).unwrap();
+            let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+            assert!(!p0.tuned() && p1.tuned());
+
+            let x = structured_input(&p0.input_shapes()[0]);
+            let o0 = ExecContext::for_plan(&p0)
+                .run(&p0, std::slice::from_ref(&x))
+                .unwrap();
+            let o1 = ExecContext::for_plan(&p1)
+                .run(&p1, std::slice::from_ref(&x))
+                .unwrap();
+            assert_eq!(o0.len(), o1.len());
+            for (a, b) in o0.iter().zip(o1.iter()) {
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{} t={}: tuned schedules moved bits",
+                    app,
+                    threads
+                );
+            }
+            let _ = std::fs::remove_file(&cache);
+        }
+    }
+}
+
+/// The cache's JSON form is deterministic: parse(serialize(c)) == c and a
+/// second serialization is byte-identical (sorted keys, stable number
+/// formatting) — warm caches diff cleanly across runs.
+#[test]
+fn tune_cache_roundtrips_through_json_deterministically() {
+    let mut c = TuneCache::new();
+    c.insert("conv|pattern|m48k108n1024|k3s1p1|t4", Schedule::default());
+    c.insert(
+        "conv|dense|m16k3n4096|k1s1p0|t4",
+        Schedule {
+            lowering: prt_dnn::tuner::Lowering::Direct,
+            mc: 32,
+            kc: 512,
+            nc: 4096,
+            split: prt_dnn::tuner::SplitAxis::Cols,
+            unroll: 1,
+        },
+    );
+    let s1 = c.to_json().to_string_pretty();
+    let parsed = TuneCache::from_json(&Json::parse(&s1).unwrap()).unwrap();
+    assert_eq!(parsed, c, "parse(serialize(c)) != c");
+    let s2 = parsed.to_json().to_string_pretty();
+    assert_eq!(s1, s2, "re-serialization not byte-identical");
+
+    // And through a real file.
+    let p = tmp("cache-file");
+    c.save(&p).unwrap();
+    let loaded = TuneCache::load(&p).unwrap();
+    assert_eq!(loaded.to_json().to_string_pretty(), s1);
+    let _ = std::fs::remove_file(&p);
+}
+
+/// CI smoke: tiny width-0.25 graph, 2-candidate space. The first plan
+/// populates the cache (benchmarks ran); a second plan against the warm
+/// cache performs zero micro-benchmark runs and answers every key from
+/// the cache.
+#[test]
+fn tuner_smoke_cache_hit_on_second_plan() {
+    let cache = tmp("smoke");
+    let _ = std::fs::remove_file(&cache);
+    let mut g = build_style(32, 0.25, 77);
+    let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
+    let opts = TuneOpts {
+        enabled: true,
+        cache_path: Some(cache.clone()),
+        max_candidates: 2, // default + best roofline-ranked challenger
+        bench_repeats: 1,
+    };
+    let cfg = ExecConfig::compact(2, schemes).with_tuning(opts);
+
+    let p1 = Planner::plan(&g, &cfg).unwrap();
+    assert!(p1.tuned());
+    let s1 = p1.tune_stats();
+    assert!(s1.cache_misses > 0, "cold cache must miss");
+    assert!(s1.bench_runs > 0, "cold cache must micro-benchmark");
+    assert!(cache.exists(), "cache file not written");
+
+    let p2 = Planner::plan(&g, &cfg).unwrap();
+    let s2 = p2.tune_stats();
+    assert_eq!(s2.bench_runs, 0, "warm cache must perform zero benchmark runs");
+    assert_eq!(s2.cache_misses, 0, "warm cache must not miss");
+    assert!(s2.cache_hits > 0, "warm cache must hit");
+
+    // Both plans carry identical per-step schedules, and the plan-side
+    // serialization exposes them.
+    let j1 = p1.schedules_json().to_string();
+    let j2 = p2.schedules_json().to_string();
+    assert_eq!(j1, j2, "cached schedules differ from searched ones");
+    assert!(!p1.schedules_json().as_obj().unwrap().is_empty());
+    let _ = std::fs::remove_file(&cache);
+}

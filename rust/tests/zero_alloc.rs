@@ -14,7 +14,10 @@
 use prt_dnn::apps::builders::{build_coloring, build_sr, build_style};
 use prt_dnn::apps::{prune_graph, AppSpec};
 use prt_dnn::executor::{ExecConfig, ExecContext, Planner};
+use prt_dnn::pruning::scheme::project_scheme;
+use prt_dnn::pruning::verify::apply_mask;
 use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
 
 #[global_allocator]
@@ -115,5 +118,35 @@ fn steady_state_is_allocation_free() {
             &g,
             &ExecConfig::compact(threads, schemes),
         );
+
+        // The `Reordered` fallback (filter scheme → filter-signature
+        // reorder): its per-group activation panels now come out of the
+        // plan-sized scratch, so even this path allocates nothing.
+        let mut g = build_style(48, 0.25, 55);
+        let name = "res0_c1";
+        let w = g.param(&format!("{}.weight", name)).unwrap().clone();
+        let s = project_scheme(&w, "filter", 0.5, None);
+        g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
+        let schemes = vec![(name.to_string(), s)];
+        assert_zero_alloc(
+            &format!("style/reordered-fallback/t{}", threads),
+            &g,
+            &ExecConfig::compact(threads, schemes),
+        );
     }
+
+    // A tuned plan loaded from a warm cache is equally allocation-free:
+    // warm the cache once, then measure a plan that answered every key
+    // from it (tuning work happens at plan time, never per frame).
+    let cache = std::env::temp_dir()
+        .join(format!("prt-zero-alloc-tune-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&cache);
+    let mut g = build_style(48, 0.25, 57);
+    let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
+    let cfg =
+        ExecConfig::compact(4, schemes).with_tuning(TuneOpts::quick(&cache));
+    let warm = Planner::plan(&g, &cfg).unwrap();
+    assert!(warm.tuned() && warm.tune_stats().bench_runs > 0);
+    assert_zero_alloc("style/tuned-warm-cache/t4", &g, &cfg);
+    let _ = std::fs::remove_file(&cache);
 }
