@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
                 queue_depth: 4,
                 workers: 1,
                 frames,
+                batch: 1,
             },
         )
         .serve(|_| src.lock().unwrap().next_frame().to_tensor())?;

@@ -16,10 +16,15 @@
 //! configuration is additionally measured under **auto-tuned schedules**
 //! (`--tune`-equivalent; cache in the system temp dir, warm across bench
 //! invocations) — the `tuned` / `tuned_speedup` fields and columns
-//! compare it against the fixed default schedules.
+//! compare it against the fixed default schedules. A **T1c** table
+//! measures batched steady-state throughput (`--batch N`, default 4):
+//! the pruning+compiler engine compiled at batch N runs N frames per
+//! dispatch, reported as frames/s next to the batch-1 engine, with
+//! allocs/frame still zero (`batch` / `fps` T1-JSON fields).
 
 use prt_dnn::apps::{
-    build_app, prepare_variant, prepare_variant_tuned, prune_graph, AppSpec, Variant,
+    build_app, prepare_variant, prepare_variant_batched, prepare_variant_tuned, prune_graph,
+    AppSpec, Variant,
 };
 use prt_dnn::bench::{bench_auto_ms, bytes, mem_json, ms, speedup, summary_json, Table};
 use prt_dnn::executor::{Engine, ExecContext};
@@ -71,7 +76,28 @@ const PAPER: &[(&str, [f64; 3])] = &[
 
 fn main() -> anyhow::Result<()> {
     let threads = prt_dnn::util::num_threads();
-    let quick = std::env::args().any(|a| a == "--quick");
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    // `--batch N` sets the fused-frames column of the T1c batched
+    // throughput table (default 4; batch 1 is always measured alongside,
+    // so N must be >= 2 — a clamped or unparseable value is reported).
+    let batch_req = argv
+        .iter()
+        .position(|a| a == "--batch")
+        .and_then(|i| argv.get(i + 1))
+        .map(|v| v.parse::<usize>());
+    let batch_n = match &batch_req {
+        Some(Ok(n)) => (*n).max(2),
+        Some(Err(_)) => 4,
+        None => 4,
+    };
+    match batch_req {
+        Some(Ok(n)) if n < 2 => {
+            eprintln!("table1: --batch {} clamped to {} (batch 1 is always measured)", n, batch_n)
+        }
+        Some(Err(_)) => eprintln!("table1: unparseable --batch value, using {}", batch_n),
+        _ => {}
+    }
     let width = if quick { 0.25 } else { 1.0 };
     let budget = if quick { 300.0 } else { 1500.0 };
     let alloc_frames = if quick { 3 } else { 10 };
@@ -132,6 +158,7 @@ fn main() -> anyhow::Result<()> {
             j.insert("app", app.to_string());
             j.insert("variant", variant.name());
             j.insert("threads", threads);
+            j.insert("batch", 1usize);
             j.insert("latency", summary_json(&s));
             j.insert("memory", mem_json(&eng.memory()));
             j.insert("warmup_ms", warm_ms);
@@ -161,6 +188,7 @@ fn main() -> anyhow::Result<()> {
         j.insert("app", app.to_string());
         j.insert("variant", Variant::PrunedCompiler.name());
         j.insert("threads", threads);
+        j.insert("batch", 1usize);
         j.insert("latency", summary_json(&ts));
         j.insert("memory", mem_json(&teng.memory()));
         j.insert("tuned", true);
@@ -178,6 +206,68 @@ fn main() -> anyhow::Result<()> {
         measured.row(&row);
     }
     measured.print();
+
+    // (c) batched steady-state throughput: the pruning+compiler engine at
+    // batch 1 vs batch N. Batching amortises per-dispatch overhead and
+    // lets small layers split across N × rows, so frames/s should rise
+    // with allocs/frame staying 0.
+    let mut batched = Table::new(
+        format!(
+            "T1c batched throughput (pruning+compiler, width={}, {} threads, frames/s)",
+            width, threads
+        ),
+        &["app", "fps b=1", "fps b=N", "N", "speedup", "allocs/frame b=N"],
+    );
+    for (app, _) in PAPER {
+        let g = build_app(app, width, 42)?;
+        let spec = AppSpec::for_app(app);
+        let mut fps1 = 0.0f64;
+        let mut fps_n = 0.0f64;
+        let mut apf_n = 0.0f64;
+        for &b in &[1usize, batch_n] {
+            let (eng, _) = prepare_variant_batched(
+                &g,
+                Variant::PrunedCompiler,
+                &spec,
+                threads,
+                b,
+                &TuneOpts::off(),
+            )?;
+            let x = Tensor::full(&eng.input_shapes()[0], 0.5);
+            let s = bench_auto_ms(budget, || {
+                let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+            });
+            let fps = b as f64 * 1e3 / s.mean.max(1e-9);
+            let apf = allocs_per_frame(&eng, &x, alloc_frames) / b as f64;
+            if b == 1 {
+                fps1 = fps;
+            } else {
+                fps_n = fps;
+                apf_n = apf;
+            }
+            let mut j = JsonObj::new();
+            j.insert("app", app.to_string());
+            j.insert("variant", Variant::PrunedCompiler.name());
+            j.insert("threads", threads);
+            j.insert("batch", b);
+            j.insert("latency", summary_json(&s));
+            j.insert("memory", mem_json(&eng.memory()));
+            j.insert("fps", fps);
+            j.insert("allocs_per_frame", apf);
+            j.insert("tuned", false);
+            json_lines.push(Json::Obj(j));
+        }
+        batched.row(&[
+            app.to_string(),
+            format!("{:.1}", fps1),
+            format!("{:.1}", fps_n),
+            format!("{}", batch_n),
+            format!("{:.2}x", fps_n / fps1.max(1e-9)),
+            format!("{:.1}", apf_n),
+        ]);
+    }
+    batched.print();
+
     for line in &json_lines {
         println!("T1-JSON {}", line);
     }

@@ -143,12 +143,27 @@ pub fn prepare_variant_tuned(
     threads: usize,
     tune: &TuneOpts,
 ) -> Result<(Engine, Vec<(String, Scheme)>)> {
+    prepare_variant_batched(base, variant, spec, threads, 1, tune)
+}
+
+/// [`prepare_variant_tuned`] with an explicit batch size: the engine's
+/// plan fuses `batch` frames per dispatch (arena/scratch ranges scale by
+/// `batch`; batched runs are bitwise-identical to sequential single-frame
+/// runs — see `rust/tests/batch_equivalence.rs`).
+pub fn prepare_variant_batched(
+    base: &Graph,
+    variant: Variant,
+    spec: &AppSpec,
+    threads: usize,
+    batch: usize,
+    tune: &TuneOpts,
+) -> Result<(Engine, Vec<(String, Scheme)>)> {
     let mut g = base.clone();
     let mut schemes = Vec::new();
     match variant {
         Variant::Unpruned => {
             // No pruning, no passes.
-            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone());
+            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone()).with_batch(batch);
             let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
@@ -160,6 +175,7 @@ pub fn prepare_variant_tuned(
                 threads,
                 schemes: schemes.clone(),
                 tune: tune.clone(),
+                batch,
             };
             let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
@@ -167,7 +183,9 @@ pub fn prepare_variant_tuned(
         Variant::PrunedCompiler => {
             schemes = prune_graph(&mut g, spec);
             PassManager::default().run_fixpoint(&mut g, 4);
-            let cfg = ExecConfig::compact(threads, schemes.clone()).with_tuning(tune.clone());
+            let cfg = ExecConfig::compact(threads, schemes.clone())
+                .with_tuning(tune.clone())
+                .with_batch(batch);
             let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
@@ -179,13 +197,14 @@ pub fn prepare_variant_tuned(
                 threads,
                 schemes: schemes.clone(),
                 tune: tune.clone(),
+                batch,
             };
             let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }
         Variant::UnprunedCompiler => {
             PassManager::default().run_fixpoint(&mut g, 4);
-            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone());
+            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone()).with_batch(batch);
             let eng = Engine::with_config(&g, &cfg)?;
             Ok((eng, schemes))
         }

@@ -5,6 +5,15 @@
 //! so steady-state serving performs zero heap allocations at any kernel
 //! thread count and workers never contend on a shared pool (the arena and
 //! pool are sized once from the engine's plan).
+//!
+//! With [`ServeConfig::batch`] > 1 (and an engine compiled at the same
+//! [`ExecConfig::batch`](crate::executor::ExecConfig)), workers run in
+//! **batching mode**: each dispatch coalesces up to `batch` queued frames
+//! into the plan's packed N-major input (copying into a preallocated
+//! tensor — still allocation-free) and runs them in one batched
+//! execution. A partial batch is padded by repeating the last real frame;
+//! padded slots are computed but never reported. The achieved coalescing
+//! is surfaced as [`ServeReport::frames_per_dispatch`].
 
 use crate::executor::{Engine, ExecContext};
 use crate::tensor::Tensor;
@@ -29,11 +38,16 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Total frames to feed.
     pub frames: usize,
+    /// Frames coalesced per dispatch (default 1 = classic single-frame
+    /// serving). Must match the engine plan's batch
+    /// ([`crate::executor::ExecutionPlan::batch`]); [`Server::serve`]
+    /// rejects a mismatch.
+    pub batch: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { source_fps: 30.0, queue_depth: 4, workers: 1, frames: 120 }
+        ServeConfig { source_fps: 30.0, queue_depth: 4, workers: 1, frames: 120, batch: 1 }
     }
 }
 
@@ -55,6 +69,14 @@ pub struct ServeReport {
     /// arena+scratch allotment **per worker** (each worker owns an
     /// [`ExecContext`]).
     pub peak_bytes: usize,
+    /// Frames coalesced per dispatch (the serve configuration's batch).
+    pub batch: usize,
+    /// Batched dispatches executed across all workers.
+    pub dispatches: usize,
+    /// Mean *real* (non-padded) frames per dispatch — the achieved
+    /// coalescing; equals 1.0 in single-frame mode and approaches
+    /// `batch` under sustained load.
+    pub frames_per_dispatch: f64,
 }
 
 impl ServeReport {
@@ -74,7 +96,8 @@ impl ServeReport {
     pub fn render(&self) -> String {
         format!(
             "processed={} dropped={} wall={:.2}s fps={:.1} \
-             latency ms p50={:.1} p90={:.1} p99={:.1} | infer ms mean={:.1} | peak={}",
+             latency ms p50={:.1} p90={:.1} p99={:.1} | infer ms mean={:.1} | peak={} | \
+             batch={} frames/dispatch={:.2}",
             self.processed,
             self.dropped,
             self.wall.as_secs_f64(),
@@ -84,6 +107,8 @@ impl ServeReport {
             self.latency.p99,
             self.inference.mean,
             crate::util::fmt_bytes(self.peak_bytes),
+            self.batch,
+            self.frames_per_dispatch,
         )
     }
 
@@ -99,6 +124,9 @@ impl ServeReport {
         o.insert("latency_p99_ms", self.latency.p99);
         o.insert("infer_mean_ms", self.inference.mean);
         o.insert("peak_bytes", self.peak_bytes);
+        o.insert("batch", self.batch);
+        o.insert("dispatches", self.dispatches);
+        o.insert("frames_per_dispatch", self.frames_per_dispatch);
         Json::Obj(o)
     }
 }
@@ -152,6 +180,14 @@ impl FrameQueue {
         }
     }
 
+    /// Non-blocking pop: whatever is queued right now, or `None`. The
+    /// batching workers use this to coalesce — the first frame of a batch
+    /// blocks, the rest are taken opportunistically so an idle queue never
+    /// delays a dispatch.
+    fn try_pop(&self) -> Option<(usize, Tensor, Instant)> {
+        self.state.lock().unwrap().frames.pop_front()
+    }
+
     fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
@@ -175,10 +211,27 @@ impl<'e> Server<'e> {
     /// The source runs on its own thread at `source_fps` cadence; worker
     /// threads drain the queue. Returns aggregated metrics.
     pub fn serve(&self, source: impl Fn(usize) -> Tensor + Send + Sync) -> Result<ServeReport> {
+        let nb = self.cfg.batch.max(1);
+        let plan_batch = self.engine.plan().batch();
+        if nb != plan_batch {
+            anyhow::bail!(
+                "serve batch {} != engine plan batch {} (compile the engine with \
+                 ExecConfig::with_batch)",
+                nb,
+                plan_batch
+            );
+        }
+        if nb > 1 && self.engine.plan().input_shapes().len() != 1 {
+            anyhow::bail!(
+                "batched serving supports single-input graphs (plan has {} inputs)",
+                self.engine.plan().input_shapes().len()
+            );
+        }
         let queue = FrameQueue::new(self.cfg.queue_depth);
         let latency = Mutex::new(LatencyRecorder::new());
         let inference = Mutex::new(LatencyRecorder::new());
         let processed = AtomicUsize::new(0);
+        let dispatches = AtomicUsize::new(0);
         let running = AtomicBool::new(true);
         let started = Instant::now();
 
@@ -216,21 +269,82 @@ impl<'e> Server<'e> {
                 let lat = &latency;
                 let inf = &inference;
                 let done = &processed;
+                let disp = &dispatches;
                 scope.spawn(move || {
                     let plan = eng.plan();
                     let mut ctx = ExecContext::for_plan(plan);
                     let mut outs: Vec<Tensor> =
                         plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+                    if nb <= 1 {
+                        // Classic single-frame serving.
+                        while let Some((_id, frame, enqueued)) = q.pop() {
+                            let t0 = Instant::now();
+                            if ctx
+                                .run_into(plan, std::slice::from_ref(&frame), &mut outs)
+                                .is_ok()
+                            {
+                                let now = Instant::now();
+                                inf.lock().unwrap().record(now - t0);
+                                lat.lock().unwrap().record(now - enqueued);
+                                done.fetch_add(1, Ordering::Relaxed);
+                                disp.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        return;
+                    }
+                    // Batching mode: coalesce up to `nb` queued frames per
+                    // dispatch into the preallocated packed input. The
+                    // first frame blocks; the rest are taken only if
+                    // already queued, and a partial batch is padded by
+                    // repeating the last real frame (padded slots are
+                    // computed but never reported).
+                    let mut packed: Vec<Tensor> =
+                        plan.input_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+                    let fshape = plan.frame_input_shapes()[0].clone();
+                    let fe = packed[0].len() / nb;
+                    let mut pending: Vec<Instant> = Vec::with_capacity(nb);
                     while let Some((_id, frame, enqueued)) = q.pop() {
+                        if frame.shape() != fshape.as_slice() {
+                            continue; // malformed frame: skip, like run_into's Err
+                        }
+                        pending.clear();
+                        packed[0].data_mut()[..fe].copy_from_slice(frame.data());
+                        pending.push(enqueued);
+                        while pending.len() < nb {
+                            match q.try_pop() {
+                                Some((_id2, f2, e2)) if f2.shape() == fshape.as_slice() => {
+                                    let s = pending.len();
+                                    packed[0].data_mut()[s * fe..(s + 1) * fe]
+                                        .copy_from_slice(f2.data());
+                                    pending.push(e2);
+                                }
+                                Some(_) => continue,
+                                None => break,
+                            }
+                        }
+                        let real = pending.len();
+                        for s in real..nb {
+                            // Pad with the last real frame (slot real-1).
+                            packed[0]
+                                .data_mut()
+                                .copy_within((real - 1) * fe..real * fe, s * fe);
+                        }
                         let t0 = Instant::now();
-                        if ctx
-                            .run_into(plan, std::slice::from_ref(&frame), &mut outs)
-                            .is_ok()
-                        {
+                        if ctx.run_into(plan, &packed, &mut outs).is_ok() {
                             let now = Instant::now();
-                            inf.lock().unwrap().record(now - t0);
-                            lat.lock().unwrap().record(now - enqueued);
-                            done.fetch_add(1, Ordering::Relaxed);
+                            // Amortized per-frame inference share; queue
+                            // latency stays per real frame.
+                            let share = (now - t0) / real as u32;
+                            let mut inf_g = inf.lock().unwrap();
+                            let mut lat_g = lat.lock().unwrap();
+                            for &enq in &pending {
+                                inf_g.record(share);
+                                lat_g.record(now - enq);
+                            }
+                            drop(lat_g);
+                            drop(inf_g);
+                            done.fetch_add(real, Ordering::Relaxed);
+                            disp.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                 });
@@ -241,6 +355,7 @@ impl<'e> Server<'e> {
         let latency = latency.into_inner().unwrap();
         let inference = inference.into_inner().unwrap();
         let processed = processed.load(Ordering::Relaxed);
+        let dispatches = dispatches.load(Ordering::Relaxed);
         if processed == 0 {
             anyhow::bail!("no frames processed");
         }
@@ -253,6 +368,9 @@ impl<'e> Server<'e> {
             inference: inference.summary().unwrap(),
             // Weights are shared; every worker owns one arena + scratch.
             peak_bytes: mem.dedicated_bytes + self.cfg.workers.max(1) * mem.shared_bytes,
+            batch: nb,
+            dispatches,
+            frames_per_dispatch: processed as f64 / dispatches.max(1) as f64,
         })
     }
 }
@@ -271,7 +389,7 @@ mod tests {
     #[test]
     fn serves_all_frames_when_fast_enough() {
         let eng = tiny_engine();
-        let cfg = ServeConfig { source_fps: 200.0, queue_depth: 8, workers: 2, frames: 30 };
+        let cfg = ServeConfig { source_fps: 200.0, queue_depth: 8, workers: 2, frames: 30, batch: 1 };
         let report = Server::new(&eng, cfg)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
             .unwrap();
@@ -292,7 +410,7 @@ mod tests {
     fn backpressure_drops_under_overload() {
         let eng = tiny_engine();
         // Absurd source rate + tiny queue: must drop, not explode.
-        let cfg = ServeConfig { source_fps: 5000.0, queue_depth: 2, workers: 1, frames: 60 };
+        let cfg = ServeConfig { source_fps: 5000.0, queue_depth: 2, workers: 1, frames: 60, batch: 1 };
         let report = Server::new(&eng, cfg)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
             .unwrap();
@@ -306,9 +424,40 @@ mod tests {
     }
 
     #[test]
+    fn batching_mode_coalesces_frames() {
+        let g = build_style(32, 0.25, 12);
+        let eng = Engine::with_config(
+            &g,
+            &crate::executor::ExecConfig::dense(2).with_batch(2),
+        )
+        .unwrap();
+        assert_eq!(eng.batch(), 2);
+        let cfg = ServeConfig { source_fps: 400.0, queue_depth: 8, workers: 1, frames: 24, batch: 2 };
+        let report = Server::new(&eng, cfg)
+            .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
+            .unwrap();
+        assert!(report.processed >= 1);
+        assert_eq!(report.processed + report.dropped, 24);
+        assert_eq!(report.batch, 2);
+        assert!(report.dispatches >= 1);
+        let fpd = report.frames_per_dispatch;
+        assert!((1.0..=2.0).contains(&fpd), "frames/dispatch {} out of range", fpd);
+        let j = report.to_json();
+        assert_eq!(j.get("batch").as_usize(), Some(2));
+        assert!(j.get("frames_per_dispatch").as_f64().unwrap() >= 1.0);
+
+        // A batch mismatch between the serve config and the engine's plan
+        // is rejected up front.
+        let bad = ServeConfig { batch: 3, ..ServeConfig::default() };
+        assert!(Server::new(&eng, bad)
+            .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
+            .is_err());
+    }
+
+    #[test]
     fn realtime_judgement() {
         let eng = tiny_engine();
-        let cfg = ServeConfig { source_fps: 5.0, queue_depth: 4, workers: 2, frames: 8 };
+        let cfg = ServeConfig { source_fps: 5.0, queue_depth: 4, workers: 2, frames: 8, batch: 1 };
         let report = Server::new(&eng, cfg)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
             .unwrap();

@@ -105,9 +105,28 @@ impl ExecContext {
     }
 
     /// Execute the plan, returning freshly allocated output tensors.
+    /// Batched plans take the N-major **packed** inputs
+    /// ([`ExecutionPlan::input_shapes`]); use
+    /// [`ExecContext::run_batch`] to feed per-frame tensors instead.
     pub fn run(&mut self, plan: &ExecutionPlan, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.run_inner(plan, inputs, None)?;
         Ok(self.collect_outputs(plan))
+    }
+
+    /// Execute a batched plan on per-frame inputs: `frames[f]` holds frame
+    /// `f`'s input tensors (single-frame shapes), and the result's
+    /// `[f][k]` is output `k` of frame `f`. Packs via
+    /// [`ExecutionPlan::pack_frames`] (typed errors for a wrong frame
+    /// count or per-frame input count), runs one batched dispatch, and
+    /// splits the outputs back.
+    pub fn run_batch(
+        &mut self,
+        plan: &ExecutionPlan,
+        frames: &[&[Tensor]],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        let packed = plan.pack_frames(frames)?;
+        let outs = self.run(plan, &packed)?;
+        Ok(plan.split_outputs(&outs))
     }
 
     /// Execute the plan and copy outputs into caller-provided tensors —

@@ -59,7 +59,8 @@ impl Engine {
         self.plan.memory()
     }
 
-    /// Input tensor shapes, in call order.
+    /// Input tensor shapes, in call order (batched shapes for plans
+    /// compiled with [`ExecConfig::batch`] > 1).
     pub fn input_shapes(&self) -> Vec<Vec<usize>> {
         self.plan.input_shapes()
     }
@@ -67,6 +68,11 @@ impl Engine {
     /// Output tensor shapes, in result order.
     pub fn output_shapes(&self) -> Vec<Vec<usize>> {
         self.plan.output_shapes()
+    }
+
+    /// Frames fused per dispatch (1 unless compiled with a batch).
+    pub fn batch(&self) -> usize {
+        self.plan.batch()
     }
 
     /// Idle contexts retained for reuse. Each context now owns OS threads
@@ -96,12 +102,24 @@ impl Engine {
         // parameters), joining its workers without holding the lock.
     }
 
-    /// Execute the graph on the given inputs.
+    /// Execute the graph on the given inputs (packed N-major tensors for
+    /// batched engines; see [`Engine::run_frames`] for per-frame input).
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let mut ctx = self.checkout();
         let result = ctx.run(&self.plan, inputs);
         self.checkin(ctx);
         result
+    }
+
+    /// Execute one batched dispatch over `batch()` per-frame input sets:
+    /// `frames[f]` holds frame `f`'s input tensors (single-frame shapes)
+    /// and the result's `[f][k]` is output `k` of frame `f`. Wrong frame
+    /// or per-frame input counts return typed
+    /// [`PlanError`](crate::executor::PlanError)s.
+    pub fn run_frames(&self, frames: &[&[Tensor]]) -> Result<Vec<Vec<Tensor>>> {
+        let packed = self.plan.pack_frames(frames)?;
+        let outs = self.run(&packed)?;
+        Ok(self.plan.split_outputs(&outs))
     }
 
     /// Execute and collect per-op wall times.

@@ -27,5 +27,5 @@ pub mod profile;
 pub use context::ExecContext;
 pub use engine::Engine;
 pub use memory::{MemoryUsage, PlanOptions};
-pub use plan::{ExecConfig, ExecutionPlan, Planner, SparseMode};
+pub use plan::{ExecConfig, ExecutionPlan, PlanError, Planner, SparseMode};
 pub use profile::{OpProfile, RunProfile};

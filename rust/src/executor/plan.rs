@@ -22,6 +22,49 @@ use crate::util::json::{Json, JsonObj};
 use crate::util::threadpool::ComputePool;
 use anyhow::{Context, Result};
 
+/// Typed planning / batching errors the executor API can return (the
+/// error chain's root cause — recover it with
+/// `err.downcast_ref::<PlanError>()`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanError {
+    /// [`ExecConfig::batch`] was zero — a plan must fuse at least one
+    /// frame per dispatch.
+    ZeroBatch,
+    /// A batched entry point received the wrong number of frames for the
+    /// plan's batch size.
+    FrameCount {
+        /// The plan's batch size.
+        expected: usize,
+        /// Frames actually supplied.
+        got: usize,
+    },
+    /// One frame supplied the wrong number of input tensors.
+    FrameInputCount {
+        /// Index of the offending frame.
+        frame: usize,
+        /// Inputs the plan expects per frame.
+        expected: usize,
+        /// Inputs actually supplied.
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::ZeroBatch => write!(f, "batch must be >= 1 (got 0)"),
+            PlanError::FrameCount { expected, got } => {
+                write!(f, "plan fuses {} frames per dispatch, got {}", expected, got)
+            }
+            PlanError::FrameInputCount { frame, expected, got } => {
+                write!(f, "frame {} supplies {} inputs, plan expects {}", frame, got, expected)
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
 /// How pruned conv layers are stored + executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SparseMode {
@@ -54,6 +97,13 @@ pub struct ExecConfig {
     /// the default [`Schedule`], which reproduces the historical fixed
     /// kernels bit-for-bit.
     pub tune: TuneOpts,
+    /// Frames fused per dispatch (default 1). The planner scales every
+    /// value's batch dimension — and therefore every arena / scratch
+    /// range — by this factor; liveness reuse and in-place claims are
+    /// batch-invariant, so a batched plan is the single-frame plan with
+    /// uniformly scaled ranges. Must be `>= 1`
+    /// ([`Planner::plan_with`] rejects 0 with [`PlanError::ZeroBatch`]).
+    pub batch: usize,
 }
 
 impl ExecConfig {
@@ -64,22 +114,41 @@ impl ExecConfig {
             threads,
             schemes: vec![],
             tune: TuneOpts::off(),
+            batch: 1,
         }
     }
 
     /// CSR storage ("pruning, no compiler") at the given thread budget.
     pub fn csr(threads: usize) -> Self {
-        ExecConfig { sparse: SparseMode::Csr, threads, schemes: vec![], tune: TuneOpts::off() }
+        ExecConfig {
+            sparse: SparseMode::Csr,
+            threads,
+            schemes: vec![],
+            tune: TuneOpts::off(),
+            batch: 1,
+        }
     }
 
     /// Compact storage + compiler kernels for the given per-layer schemes.
     pub fn compact(threads: usize, schemes: Vec<(String, Scheme)>) -> Self {
-        ExecConfig { sparse: SparseMode::Compact, threads, schemes, tune: TuneOpts::off() }
+        ExecConfig {
+            sparse: SparseMode::Compact,
+            threads,
+            schemes,
+            tune: TuneOpts::off(),
+            batch: 1,
+        }
     }
 
     /// Enable schedule auto-tuning (builder form).
     pub fn with_tuning(mut self, tune: TuneOpts) -> Self {
         self.tune = tune;
+        self
+    }
+
+    /// Set the number of frames fused per dispatch (builder form).
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
         self
     }
 }
@@ -152,6 +221,7 @@ pub struct ExecutionPlan {
     pub(crate) input_ids: Vec<NodeId>,
     pub(crate) output_ids: Vec<NodeId>,
     pub(crate) threads: usize,
+    batch: usize,
     arena_len: usize,
     scratch_len: usize,
     panel_len: usize,
@@ -161,14 +231,112 @@ pub struct ExecutionPlan {
 }
 
 impl ExecutionPlan {
-    /// Input tensor shapes, in call order.
+    /// Input tensor shapes, in call order. Batched plans report the
+    /// **batched** shapes (dim 0 scaled by [`ExecutionPlan::batch`]) —
+    /// what [`super::ExecContext::run`] expects as packed inputs.
     pub fn input_shapes(&self) -> Vec<Vec<usize>> {
         self.input_ids.iter().map(|&i| self.shapes[i].clone()).collect()
     }
 
-    /// Output tensor shapes, in result order.
+    /// Output tensor shapes, in result order (batched, like
+    /// [`ExecutionPlan::input_shapes`]).
     pub fn output_shapes(&self) -> Vec<Vec<usize>> {
         self.output_ids.iter().map(|&i| self.shapes[i].clone()).collect()
+    }
+
+    /// Frames fused per dispatch (1 for single-frame plans).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Per-frame input shapes: [`ExecutionPlan::input_shapes`] with the
+    /// batch dimension divided back out — the shape each individual frame
+    /// must have when packing via [`ExecutionPlan::pack_frames`].
+    pub fn frame_input_shapes(&self) -> Vec<Vec<usize>> {
+        self.input_shapes()
+            .into_iter()
+            .map(|mut s| {
+                if !s.is_empty() {
+                    s[0] /= self.batch;
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Per-frame output shapes (see [`ExecutionPlan::frame_input_shapes`]).
+    pub fn frame_output_shapes(&self) -> Vec<Vec<usize>> {
+        self.output_shapes()
+            .into_iter()
+            .map(|mut s| {
+                if !s.is_empty() {
+                    s[0] /= self.batch;
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Pack `batch()` single-frame input sets into N-major batched input
+    /// tensors (one per graph input). Rejects the wrong frame count with
+    /// [`PlanError::FrameCount`] and a frame supplying the wrong number of
+    /// inputs with [`PlanError::FrameInputCount`].
+    pub fn pack_frames(&self, frames: &[&[Tensor]]) -> Result<Vec<Tensor>> {
+        if frames.len() != self.batch {
+            return Err(PlanError::FrameCount { expected: self.batch, got: frames.len() }.into());
+        }
+        let frame_shapes = self.frame_input_shapes();
+        for (fi, frame) in frames.iter().enumerate() {
+            if frame.len() != self.input_ids.len() {
+                return Err(PlanError::FrameInputCount {
+                    frame: fi,
+                    expected: self.input_ids.len(),
+                    got: frame.len(),
+                }
+                .into());
+            }
+            for (k, t) in frame.iter().enumerate() {
+                if t.shape() != frame_shapes[k].as_slice() {
+                    anyhow::bail!(
+                        "frame {} input {} shape {:?} != expected {:?}",
+                        fi,
+                        k,
+                        t.shape(),
+                        frame_shapes[k]
+                    );
+                }
+            }
+        }
+        let mut packed = Vec::with_capacity(self.input_ids.len());
+        for (k, &iid) in self.input_ids.iter().enumerate() {
+            // Concatenate the frames directly — no zero-init pass over a
+            // buffer that is about to be fully overwritten.
+            let total: usize = self.shapes[iid].iter().product();
+            let mut data = Vec::with_capacity(total);
+            for frame in frames.iter() {
+                data.extend_from_slice(frame[k].data());
+            }
+            packed.push(Tensor::from_vec(&self.shapes[iid], data));
+        }
+        Ok(packed)
+    }
+
+    /// Split batched output tensors back into per-frame tensors:
+    /// `result[f][k]` is output `k` of frame `f`.
+    pub fn split_outputs(&self, outputs: &[Tensor]) -> Vec<Vec<Tensor>> {
+        let frame_shapes = self.frame_output_shapes();
+        (0..self.batch)
+            .map(|fi| {
+                outputs
+                    .iter()
+                    .zip(frame_shapes.iter())
+                    .map(|(t, shape)| {
+                        let fe = t.len() / self.batch;
+                        Tensor::from_vec(shape, t.data()[fi * fe..(fi + 1) * fe].to_vec())
+                    })
+                    .collect()
+            })
+            .collect()
     }
 
     /// Number of compiled steps (== graph nodes).
@@ -215,13 +383,14 @@ impl ExecutionPlan {
         self.tune_stats
     }
 
-    /// Per-conv-step schedules in JSON form (the plan-side serialization
-    /// of the tuning outcome; the on-disk [`crate::tuner::TuneCache`] is
-    /// the cross-run form).
+    /// Per-step schedules of the tuner-searched step kinds (conv and
+    /// fully-connected) in JSON form (the plan-side serialization of the
+    /// tuning outcome; the on-disk [`crate::tuner::TuneCache`] is the
+    /// cross-run form).
     pub fn schedules_json(&self) -> Json {
         let mut o = JsonObj::new();
         for st in &self.steps {
-            if matches!(st.step, Step::Conv { .. }) {
+            if matches!(st.step, Step::Conv { .. } | Step::Dense { .. }) {
                 o.insert(st.name.clone(), st.sched.to_json());
             }
         }
@@ -281,8 +450,25 @@ impl Planner {
 
     /// Compile with explicit planner options.
     pub fn plan_with(g: &Graph, cfg: &ExecConfig, opts: PlanOptions) -> Result<ExecutionPlan> {
+        if cfg.batch == 0 {
+            return Err(PlanError::ZeroBatch.into());
+        }
+        let batch = cfg.batch;
         g.validate()?;
-        let shapes = crate::dsl::shape::infer(g)?;
+        let mut shapes = crate::dsl::shape::infer(g)?;
+        // A batch dimension only scales the per-value ranges: every shape
+        // is batch-major (NCHW / NF), so multiplying dim 0 by the batch
+        // scales each value's element count uniformly. Liveness, fanout
+        // and the in-place eligibility comparisons are unchanged by a
+        // uniform scale, so the batched plan reuses and aliases exactly
+        // like the single-frame plan.
+        if batch > 1 {
+            for s in shapes.iter_mut() {
+                if !s.is_empty() {
+                    s[0] *= batch;
+                }
+            }
+        }
         let mut steps = Vec::with_capacity(g.len());
         let mut weight_bytes = 0usize;
         let mut scratch_len = 0usize;
@@ -366,18 +552,27 @@ impl Planner {
                             ConvExec::Pattern { .. } => ("pattern", geom.cols(), false),
                             ConvExec::Reordered { .. } => ("reordered", geom.cols(), false),
                         };
+                        // Batched plans tune under their real dispatch
+                        // geometry (the split covers batch × rows), so the
+                        // cache key carries the batch; batch-1 keys stay
+                        // identical to the historical format.
+                        let geom_tag = if batch > 1 {
+                            format!("k{}s{}p{}b{}", kh, stride, pad, batch)
+                        } else {
+                            format!("k{}s{}p{}", kh, stride, pad)
+                        };
                         let req = TuneRequest {
                             op: "conv",
                             variant: variant_tag,
                             m: *out_c,
                             k: k_eff,
                             n: geom.out_px(),
-                            geom: format!("k{}s{}p{}", kh, stride, pad),
+                            geom: geom_tag,
                             direct_ok: matches!(exec, ConvExec::Dense { .. })
                                 && geom.identity_lowering(),
                             gemm_backed,
                         };
-                        // Synthetic single-sample activations + private
+                        // Synthetic batch-sized activations + private
                         // buffers for the micro-benchmark probes, built
                         // lazily on the first probe so a cache hit
                         // allocates nothing (plan time only — never the
@@ -388,14 +583,14 @@ impl Planner {
                             let (bx, bout, bscratch) = bufs.get_or_insert_with(|| {
                                 let chw = geom.in_c * geom.in_h * geom.in_w;
                                 (
-                                    (0..chw)
+                                    (0..batch * chw)
                                         .map(|i| ((i % 37) as f32) * 0.05 - 0.9)
                                         .collect(),
-                                    vec![0.0f32; *out_c * geom.out_px()],
+                                    vec![0.0f32; batch * *out_c * geom.out_px()],
                                     crate::kernels::conv::ConvScratch::new(),
                                 )
                             });
-                            bench_conv_exec(&exec, &geom, bx, bscratch, bout, cand, pool)
+                            bench_conv_exec(&exec, &geom, batch, bx, bscratch, bout, cand, pool)
                         });
                     }
                     // Worst-case im2col panel for the context's scratch —
@@ -408,7 +603,10 @@ impl Planner {
                         && matches!(exec, ConvExec::Dense { .. })
                         && geom.identity_lowering();
                     if !direct {
-                        scratch_len = scratch_len.max(patch_rows * geom.out_px());
+                        // One patch panel per fused frame: the batched
+                        // drivers lower the whole batch before a single
+                        // combined GEMM dispatch.
+                        scratch_len = scratch_len.max(batch * patch_rows * geom.out_px());
                     }
                     // The reordered fallback gathers per-group activation
                     // panels: pre-size them here (one slot per pool
@@ -438,6 +636,57 @@ impl Planner {
                         .context("missing dense weight")?
                         .clone();
                     weight_bytes += w.len() * 4;
+                    // Fully-connected steps are tuner-searched too: the
+                    // kernel honors the schedule's split axis (rows =
+                    // output features, cols = batch), so the search can
+                    // pick the batch split for thin layers. Blocking and
+                    // unroll knobs are no-ops here; every candidate is
+                    // bitwise-identical by the kernel's invariant.
+                    if tuner.enabled() {
+                        let geom_tag = if batch > 1 {
+                            format!("fcb{}", batch)
+                        } else {
+                            "fc".to_string()
+                        };
+                        let req = TuneRequest {
+                            op: "dense",
+                            variant: "dense",
+                            m: *out_f,
+                            k: *in_f,
+                            n: batch,
+                            geom: geom_tag,
+                            direct_ok: false,
+                            gemm_backed: true,
+                        };
+                        let (outf, inf) = (*out_f, *in_f);
+                        type DenseBufs = (Vec<f32>, Vec<f32>);
+                        let mut bufs: Option<DenseBufs> = None;
+                        let wref = &w;
+                        step_sched = tuner.tune(&req, &mut |cand, pool| {
+                            let (bx, bout) = bufs.get_or_insert_with(|| {
+                                (
+                                    (0..batch * inf)
+                                        .map(|i| ((i % 29) as f32) * 0.07 - 0.8)
+                                        .collect(),
+                                    vec![0.0f32; batch * outf],
+                                )
+                            });
+                            let t0 = std::time::Instant::now();
+                            crate::kernels::gemm::dense_forward(
+                                wref.data(),
+                                None,
+                                Activation::Identity,
+                                bx,
+                                batch,
+                                inf,
+                                outf,
+                                pool,
+                                cand,
+                                bout,
+                            );
+                            t0.elapsed().as_secs_f64()
+                        });
+                    }
                     Step::Dense { w, bias, out_f: *out_f, in_f: *in_f, act: *fused_act }
                 }
                 Op::BatchNorm { eps, .. } => Step::BatchNorm {
@@ -546,6 +795,7 @@ impl Planner {
             input_ids: g.inputs(),
             output_ids: g.outputs(),
             threads: cfg.threads.max(1),
+            batch,
             arena_len,
             scratch_len,
             panel_len,
@@ -558,13 +808,16 @@ impl Planner {
     }
 }
 
-/// Run one conv step's real kernel once on synthetic single-sample data
+/// Run one conv step's real kernel once on synthetic batch-sized data
 /// under the candidate schedule and return elapsed seconds — the tuner's
-/// micro-benchmark probe (plan time only).
+/// micro-benchmark probe (plan time only). `n` is the plan's batch, so
+/// the probe measures the same `n × rows` dispatch geometry the frame
+/// loop will run.
 #[allow(clippy::too_many_arguments)]
 fn bench_conv_exec(
     exec: &ConvExec,
     geom: &ConvGeom,
+    n: usize,
     x: &[f32],
     scratch: &mut crate::kernels::conv::ConvScratch,
     out: &mut [f32],
@@ -575,23 +828,23 @@ fn bench_conv_exec(
     let t0 = std::time::Instant::now();
     match exec {
         ConvExec::Dense { w } => ck::conv2d_dense(
-            x, 1, w, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
+            x, n, w, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
             out,
         ),
         ConvExec::Csr { csr } => ck::conv2d_csr(
-            x, 1, csr, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
+            x, n, csr, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
             out,
         ),
         ConvExec::Column { cc } => ck::conv2d_column_compact(
-            x, 1, cc, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
+            x, n, cc, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
             out,
         ),
         ConvExec::Pattern { plan } => ck::conv2d_pattern(
-            x, 1, plan, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch,
+            x, n, plan, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch,
             cand, out,
         ),
         ConvExec::Reordered { plan, lanes } => ck::conv2d_reordered(
-            x, 1, plan, lanes, geom, PadMode::Zeros, None, Activation::Identity, pool,
+            x, n, plan, lanes, geom, PadMode::Zeros, None, Activation::Identity, pool,
             scratch, cand, out,
         ),
     }
@@ -659,6 +912,33 @@ mod tests {
         let m = plan.memory();
         assert_eq!(m.peak_bytes, m.dedicated_bytes + m.shared_bytes);
         assert!(m.shared_bytes >= plan.arena_len() * 4);
+    }
+
+    #[test]
+    fn batched_plan_scales_ranges_and_preserves_structure() {
+        // A batch dimension only scales per-value ranges: the batched
+        // plan must keep the single-frame plan's liveness reuse and
+        // in-place claims, with arena/scratch scaled exactly by N.
+        let g = build_style(32, 0.25, 3);
+        let p1 = Planner::plan(&g, &ExecConfig::dense(2)).unwrap();
+        let p4 = Planner::plan(&g, &ExecConfig::dense(2).with_batch(4)).unwrap();
+        p4.validate_layout().unwrap();
+        assert_eq!(p1.batch(), 1);
+        assert_eq!(p4.batch(), 4);
+        assert_eq!(p4.arena_len(), 4 * p1.arena_len());
+        assert_eq!(p4.scratch_len(), 4 * p1.scratch_len());
+        assert_eq!(p4.inplace_steps(), p1.inplace_steps());
+        assert_eq!(p4.input_shapes()[0][0], 4 * p1.input_shapes()[0][0]);
+        assert_eq!(p4.frame_input_shapes(), p1.input_shapes());
+        assert_eq!(p4.frame_output_shapes(), p1.output_shapes());
+        assert_eq!(p4.weight_bytes, p1.weight_bytes, "weights are batch-invariant");
+    }
+
+    #[test]
+    fn zero_batch_is_a_typed_error() {
+        let g = build_style(32, 0.25, 4);
+        let err = Planner::plan(&g, &ExecConfig::dense(1).with_batch(0)).unwrap_err();
+        assert_eq!(err.downcast_ref::<PlanError>(), Some(&PlanError::ZeroBatch));
     }
 
     #[test]

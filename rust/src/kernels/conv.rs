@@ -19,6 +19,14 @@
 //! persistent [`ComputePool`]; no driver ever spawns a thread. Inputs are
 //! raw NCHW slices (`x`, batch `n`) with geometry carried by [`ConvGeom`].
 //!
+//! Every driver is **batch-native**: at `n > 1` the whole batch lowers
+//! into per-sample patch panels (in parallel), then one GEMM dispatch
+//! splits the pool across the combined `n × rows` work space — so layers
+//! too small to fill the pool per frame still parallelise across the
+//! batch. A batched call is bitwise-identical to `n` sequential
+//! single-frame calls (proved end-to-end by
+//! `rust/tests/batch_equivalence.rs`).
+//!
 //! Every GEMM-backed driver additionally takes the step's tuned
 //! [`Schedule`] (searched per layer shape by the [`tuner`](crate::tuner);
 //! the default schedule reproduces the historical fixed kernels
@@ -100,8 +108,8 @@ fn conv_common(
     act: Activation,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
-    mut gemm_fn: impl FnMut(&[f32], &mut [f32], &mut [f32]),
-    build_patch: impl Fn(&[f32], &mut [f32]),
+    gemm_fn: impl FnOnce(&[f32], &mut [f32], &mut [f32]),
+    build_patch: impl Fn(&[f32], &mut [f32]) + Sync,
     patch_rows: usize,
     panel_len: usize,
     out: &mut [f32],
@@ -113,14 +121,28 @@ fn conv_common(
     // The GEMM kernels accumulate into C; the output slice may hold stale
     // arena contents.
     out.fill(0.0);
+    // One patch panel per sample (the planner's scratch accounting scales
+    // by the plan's batch), so the whole batch lowers first and the GEMM
+    // runs as one dispatch over the combined `n × rows` work space.
     let patch_len = patch_rows * opx;
-    let (patch, panel) = scratch.bufs(patch_len, panel_len);
-    for s in 0..n {
-        let xin = &x[s * chw..(s + 1) * chw];
-        build_patch(xin, patch);
-        let cdst = &mut out[s * out_c * opx..(s + 1) * out_c * opx];
-        gemm_fn(patch, panel, cdst);
+    let (patch, panel) = scratch.bufs(n * patch_len, panel_len);
+    if n == 1 || pool.threads() <= 1 {
+        for s in 0..n {
+            build_patch(&x[s * chw..(s + 1) * chw], &mut patch[s * patch_len..(s + 1) * patch_len]);
+        }
+    } else {
+        // Patch building is a pure per-sample gather (no cross-sample
+        // state), so samples lower in parallel.
+        let pp = SendPtr::new(patch.as_mut_ptr());
+        pool.parallel_parts(n, |s| {
+            // SAFETY: sample s's patch panel is a disjoint scratch range.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(pp.get().add(s * patch_len), patch_len)
+            };
+            build_patch(&x[s * chw..(s + 1) * chw], dst);
+        });
     }
+    gemm_fn(patch, panel, out);
     bias_act_inplace(out, bias, out_c, opx, act, pool);
     let _ = pad_mode;
 }
@@ -154,11 +176,7 @@ pub fn conv2d_dense(
         debug_assert_eq!(x.len(), n * chw);
         debug_assert_eq!(out.len(), n * out_c * opx);
         out.fill(0.0);
-        for s in 0..n {
-            let xin = &x[s * chw..(s + 1) * chw];
-            let cdst = &mut out[s * out_c * opx..(s + 1) * out_c * opx];
-            gemm::gemm_with(out_c, cols, opx, w.data(), xin, cdst, pool, sched);
-        }
+        gemm::gemm_batch_with(n, out_c, cols, opx, w.data(), x, out, pool, sched);
         bias_act_inplace(out, bias, out_c, opx, act, pool);
         return;
     }
@@ -173,7 +191,7 @@ pub fn conv2d_dense(
         pool,
         scratch,
         |patch, _panel, cdst| {
-            gemm::gemm_with(out_c, cols, opx, w.data(), patch, cdst, pool, sched)
+            gemm::gemm_batch_with(n, out_c, cols, opx, w.data(), patch, cdst, pool, sched)
         },
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         cols,
@@ -209,7 +227,7 @@ pub fn conv2d_csr(
         act,
         pool,
         scratch,
-        |patch, _panel, cdst| sparse_gemm::spmm_csr(csr, patch, opx, cdst, pool, sched),
+        |patch, _panel, cdst| sparse_gemm::spmm_csr_batch(n, csr, patch, opx, cdst, pool, sched),
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
         0,
@@ -246,8 +264,8 @@ pub fn conv2d_column_compact(
         pool,
         scratch,
         |patch, _panel, cdst| {
-            sparse_gemm::spmm_column_compact(
-                &cc.values, out_c, kept, patch, opx, cdst, pool, sched,
+            sparse_gemm::spmm_column_compact_batch(
+                n, &cc.values, out_c, kept, patch, opx, cdst, pool, sched,
             )
         },
         |xin, patch| im2col_pruned(xin, geom, pad_mode, &cc.keep, patch),
@@ -289,7 +307,7 @@ pub fn conv2d_reordered(
         pool,
         scratch,
         |patch, panel, cdst| {
-            sparse_gemm::spmm_reordered(plan, lanes, patch, opx, cdst, pool, panel, sched)
+            sparse_gemm::spmm_reordered_batch(n, plan, lanes, patch, opx, cdst, pool, panel, sched)
         },
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
@@ -326,7 +344,9 @@ pub fn conv2d_pattern(
         act,
         pool,
         scratch,
-        |patch, _panel, cdst| sparse_gemm::spmm_pattern(plan, patch, opx, cdst, pool, sched),
+        |patch, _panel, cdst| {
+            sparse_gemm::spmm_pattern_batch(n, plan, geom.cols(), patch, opx, cdst, pool, sched)
+        },
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
         0,

@@ -289,6 +289,76 @@ pub fn gemm_with(
     }
 }
 
+/// Batched multi-threaded GEMM: `nb` independent `M×K×N` products sharing
+/// one `A` (the weights), with sample `s` reading `b[s·K·N ..]` and
+/// writing `c[s·M·N ..]` — the shape of a batched im2col conv, where every
+/// sample has its own patch matrix but the filter matrix is shared.
+///
+/// The schedule's split axis is partitioned over the **combined**
+/// `nb × M` row space (or `nb × N` column space) in a single pool
+/// dispatch, so layers whose per-sample GEMM is too small to fill the
+/// pool still parallelise across the batch. Each C element is computed
+/// with the identical fp expression as [`gemm_st_with`] on its own
+/// sample, so a batched call is bitwise-identical to `nb` sequential
+/// single-sample calls at every pool size.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batch_with(
+    nb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), nb * k * n);
+    debug_assert_eq!(c.len(), nb * m * n);
+    if nb == 1 {
+        gemm_with(m, k, n, a, b, c, pool, sched);
+        return;
+    }
+    if pool.threads() <= 1 || nb == 0 {
+        for s in 0..nb {
+            gemm_st_with(
+                m,
+                k,
+                n,
+                a,
+                &b[s * k * n..(s + 1) * k * n],
+                &mut c[s * m * n..(s + 1) * m * n],
+                sched,
+            );
+        }
+        return;
+    }
+    let cp = SendPtr::new(c.as_mut_ptr());
+    match sched.split {
+        SplitAxis::Rows => pool.parallel_chunks(nb * m, |gs, ge, _| {
+            // A chunk of the global row space may span several samples:
+            // walk it sample segment by sample segment.
+            super::for_each_sample_segment(m, gs, ge, |s, r0, r1| {
+                let bs = &b[s * k * n..(s + 1) * k * n];
+                // SAFETY: rows [r0, r1) of sample s form a disjoint C
+                // rectangle (chunks partition the global row space).
+                let cs = SendPtr::new(unsafe { cp.get().add(s * m * n) });
+                gemm_ranged(k, n, a, bs, cs, r0, r1, 0, n, sched);
+            });
+        }),
+        SplitAxis::Cols => pool.parallel_chunks(nb * n, |gs, ge, _| {
+            super::for_each_sample_segment(n, gs, ge, |s, c0, c1| {
+                let bs = &b[s * k * n..(s + 1) * k * n];
+                // SAFETY: columns [c0, c1) of sample s form a disjoint C
+                // rectangle (chunks partition the global column space).
+                let cs = SendPtr::new(unsafe { cp.get().add(s * m * n) });
+                gemm_ranged(k, n, a, bs, cs, 0, m, c0, c1, sched);
+            });
+        }),
+    }
+}
+
 /// Fully-connected forward pass into a caller-provided output slice:
 /// `out[b, o] = act(W[o, :] · x[b, :] + bias[o])` with `W` row-major
 /// `[out_f, in_f]`. The schedule's split axis selects the partition:
@@ -334,24 +404,26 @@ pub fn dense_forward(
             }
         });
     } else {
-        for b in 0..batch {
-            let xb = &x[b * in_f..(b + 1) * in_f];
-            let ob_ptr = SendPtr::new(out[b * out_f..(b + 1) * out_f].as_mut_ptr());
-            pool.parallel_chunks(out_f, |os, oe, _| {
-                // SAFETY: each chunk materialises only its own disjoint
-                // output row range.
-                let ob =
-                    unsafe { std::slice::from_raw_parts_mut(ob_ptr.get().add(os), oe - os) };
-                for o in os..oe {
-                    let wrow = &w[o * in_f..(o + 1) * in_f];
-                    let mut acc = 0.0f32;
-                    for i in 0..in_f {
-                        acc += wrow[i] * xb[i];
-                    }
-                    ob[o - os] = acc;
+        // Rows split over the combined batch × out_f space: `out` is
+        // batch-major, so the global index IS the output offset, and one
+        // dispatch covers the whole batch (small layers still fill the
+        // pool when batch > 1).
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        pool.parallel_chunks(batch * out_f, |gs, ge, _| {
+            // SAFETY: each chunk materialises only its own disjoint
+            // (sample, output-feature) range of `out`.
+            let ob = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(gs), ge - gs) };
+            for g in gs..ge {
+                let (b, o) = (g / out_f, g % out_f);
+                let xb = &x[b * in_f..(b + 1) * in_f];
+                let wrow = &w[o * in_f..(o + 1) * in_f];
+                let mut acc = 0.0f32;
+                for i in 0..in_f {
+                    acc += wrow[i] * xb[i];
                 }
-            });
-        }
+                ob[g - gs] = acc;
+            }
+        });
     }
     crate::kernels::elementwise::bias_act_inplace(out, bias, out_f, 1, act, pool);
 }
@@ -515,6 +587,29 @@ mod tests {
                     let diff = (got[b * out_f + o] - want).abs();
                     assert!(diff < 1e-4, "split={:?} b={} o={} diff={}", split, b, o, diff);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_gemm_matches_sequential_bitwise() {
+        // A batched call must be bitwise-identical to nb sequential
+        // single-sample calls, for both split axes and any pool size.
+        let mut rng = Rng::new(77);
+        let (nb, m, k, n) = (3, 9, 40, 33);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, nb * k, n);
+        let mut want = vec![0.0; nb * m * n];
+        for s in 0..nb {
+            gemm_st(m, k, n, &a, &b[s * k * n..(s + 1) * k * n], &mut want[s * m * n..(s + 1) * m * n]);
+        }
+        for &split in &[SplitAxis::Rows, SplitAxis::Cols] {
+            let sched = Schedule { split, ..Schedule::default() };
+            for threads in [1usize, 4] {
+                let pool = ComputePool::new(threads);
+                let mut got = vec![0.0; nb * m * n];
+                gemm_batch_with(nb, m, k, n, &a, &b, &mut got, &pool, &sched);
+                assert_eq!(got, want, "split={:?} t={}", split, threads);
             }
         }
     }

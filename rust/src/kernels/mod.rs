@@ -33,3 +33,27 @@ pub mod resize;
 /// results (every element is computed by exactly one thread with the same
 /// expression), so the threshold is purely a latency knob.
 pub(crate) const MIN_PAR_ELEMS: usize = 8 * 1024;
+
+/// Walk the global range `[gs, ge)` of an `nb × per` batched index space
+/// sample segment by sample segment, invoking `f(sample, lo, hi)` with
+/// `lo..hi` local to that sample (`0 <= lo < hi <= per`).
+///
+/// This is the shared chunk→segment decomposition of every batched kernel
+/// dispatch: a pool chunk of the combined `batch × rows` (or `batch ×
+/// cols`) space may span several samples, and each sample's sub-range must
+/// be processed against that sample's own B/C matrices.
+pub(crate) fn for_each_sample_segment(
+    per: usize,
+    gs: usize,
+    ge: usize,
+    mut f: impl FnMut(usize, usize, usize),
+) {
+    let mut g = gs;
+    while g < ge {
+        let s = g / per;
+        let lo = g % per;
+        let hi = (ge - s * per).min(per);
+        f(s, lo, hi);
+        g = s * per + hi;
+    }
+}

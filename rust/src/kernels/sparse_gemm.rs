@@ -74,6 +74,54 @@ pub fn spmm_csr(
     });
 }
 
+/// Batched CSR SpMM: `nb` samples sharing one CSR weight matrix, sample
+/// `s` reading `b[s·K·N ..]` and writing `c[s·M·N ..]`. The block row
+/// partition runs over the **combined** `nb × M` row space in a single
+/// pool dispatch, so small layers still fill every thread at batch > 1.
+/// Bitwise-identical to `nb` sequential [`spmm_csr`] calls (each row's
+/// accumulation order is fixed by the CSR layout).
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_csr_batch(
+    nb: usize,
+    w: &Csr,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
+    debug_assert_eq!(b.len(), nb * w.cols * n);
+    debug_assert_eq!(c.len(), nb * w.rows * n);
+    let m = w.rows;
+    if pool.threads() <= 1 || nb * m <= 1 {
+        for s in 0..nb {
+            spmm_csr_rows(
+                w,
+                &b[s * w.cols * n..(s + 1) * w.cols * n],
+                n,
+                &mut c[s * m * n..(s + 1) * m * n],
+                0,
+                m,
+                sched.unroll,
+            );
+        }
+        return;
+    }
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_chunks(nb * m, |gs, ge, _| {
+        // A chunk of the global row space may span several samples: walk
+        // it sample segment by sample segment.
+        super::for_each_sample_segment(m, gs, ge, |s, r0, r1| {
+            let bs = &b[s * w.cols * n..(s + 1) * w.cols * n];
+            // SAFETY: rows [r0, r1) of sample s are a disjoint C range.
+            let c_sub = unsafe {
+                std::slice::from_raw_parts_mut(c_ptr.get().add((s * m + r0) * n), (r1 - r0) * n)
+            };
+            spmm_csr_rows(w, bs, n, c_sub, r0, r1, sched.unroll);
+        });
+    });
+}
+
 /// Activation-panel length (elements) one caller must provide to
 /// [`spmm_reordered`]: one `max-group-K × N` panel per pool thread. The
 /// execution planner pre-sizes this in the plan's scratch accounting so
@@ -136,6 +184,71 @@ pub fn spmm_reordered(
         };
         for item in &lanes_sched.items[lane] {
             run_item(plan, item, b, n, c_ptr, slot, tuned.unroll);
+        }
+    });
+}
+
+/// Batched reordered SpMM: `nb` samples sharing one [`ReorderPlan`],
+/// sample `s` reading `b[s·K·N ..]` and writing `c[s·M·N ..]`. The part
+/// space is the **combined** `nb × lanes` grid, so the pool stays busy
+/// even when one sample's lane schedule is narrower than the pool.
+///
+/// `panel` needs the same [`reordered_panel_len`] as the single-sample
+/// kernel — panels are per *participating pool thread* (at most
+/// `pool.threads()`), not per sample. `parallel_parts` assigns each
+/// participant the parts congruent to its index, so panel slot
+/// `part % participants` is exclusive to one thread. Bitwise-identical
+/// to `nb` sequential [`spmm_reordered`] calls (work items touch
+/// disjoint rows and each item's fp order is fixed by the plan).
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_reordered_batch(
+    nb: usize,
+    plan: &ReorderPlan,
+    lanes_sched: &LaneSchedule,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    pool: &ComputePool,
+    panel: &mut [f32],
+    tuned: &Schedule,
+) {
+    debug_assert_eq!(b.len(), nb * plan.cols * n);
+    debug_assert_eq!(c.len(), nb * plan.rows * n);
+    let per = plan.max_group_cols() * n;
+    let lanes = lanes_sched.threads().max(1);
+    let parts = nb * lanes;
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    if parts <= 1 || pool.threads() <= 1 {
+        debug_assert!(panel.len() >= per, "reordered panel undersized");
+        let slot = &mut panel[..per];
+        for s in 0..nb {
+            let bs = &b[s * plan.cols * n..(s + 1) * plan.cols * n];
+            // SAFETY: sample s's C range is in bounds; items touch
+            // disjoint rows within it.
+            let cs = SendPtr::new(unsafe { c_ptr.get().add(s * plan.rows * n) });
+            for item in lanes_sched.items.iter().flatten() {
+                run_item(plan, item, bs, n, cs, slot, tuned.unroll);
+            }
+        }
+        return;
+    }
+    let slots = pool.threads().min(parts);
+    debug_assert!(panel.len() >= slots * per, "reordered panel undersized");
+    let panel_ptr = SendPtr::new(panel.as_mut_ptr());
+    pool.parallel_parts(parts, |u| {
+        // Participant p runs parts u ≡ p (mod slots), so slot `u % slots`
+        // is only ever touched by one thread at a time.
+        // SAFETY: exclusive per-participant panel slot (see above).
+        let slot = unsafe {
+            std::slice::from_raw_parts_mut(panel_ptr.get().add((u % slots) * per), per)
+        };
+        let (s, lane) = (u / lanes, u % lanes);
+        let bs = &b[s * plan.cols * n..(s + 1) * plan.cols * n];
+        // SAFETY: lanes write disjoint rows of sample s's C range (every
+        // original row appears in exactly one lane's items).
+        let cs = SendPtr::new(unsafe { c_ptr.get().add(s * plan.rows * n) });
+        for item in &lanes_sched.items[lane] {
+            run_item(plan, item, bs, n, cs, slot, tuned.unroll);
         }
     });
 }
@@ -276,51 +389,8 @@ pub fn spmm_pattern(
     sched: &Schedule,
 ) {
     debug_assert_eq!(c.len(), plan.out_c * n);
-    let unroll = sched.unroll;
-    // `c_sub` holds exactly the filter rows [lo, hi) — the serial path
-    // passes the whole C with lo = 0.
-    let run = |c_sub: &mut [f32], lo: usize, hi: usize| {
-        debug_assert_eq!(c_sub.len(), (hi - lo) * n);
-        for (rows, items) in &plan.groups {
-            // The 4-entry PConv fast path dominates; general path for
-            // other pattern sizes.
-            if rows.len() == 4 {
-                let b0 = &b[rows[0] as usize * n..rows[0] as usize * n + n];
-                let b1 = &b[rows[1] as usize * n..rows[1] as usize * n + n];
-                let b2 = &b[rows[2] as usize * n..rows[2] as usize * n + n];
-                let b3 = &b[rows[3] as usize * n..rows[3] as usize * n + n];
-                for (o, w, _) in items {
-                    let o = *o as usize;
-                    if o < lo || o >= hi {
-                        continue;
-                    }
-                    let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
-                    let (w0, w1, w2, w3) = (w[0], w[1], w[2], w[3]);
-                    for j in 0..n {
-                        crow[j] += w0 * b0[j] + w1 * b1[j] + w2 * b2[j] + w3 * b3[j];
-                    }
-                }
-            } else {
-                for (o, w, len) in items {
-                    let o = *o as usize;
-                    if o < lo || o >= hi {
-                        continue;
-                    }
-                    let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
-                    for (j, &row) in rows.iter().enumerate().take(*len as usize) {
-                        axpy_unrolled(
-                            w[j],
-                            &b[row as usize * n..row as usize * n + n],
-                            crow,
-                            unroll,
-                        );
-                    }
-                }
-            }
-        }
-    };
     if pool.threads() <= 1 {
-        run(c, 0, plan.out_c);
+        pattern_rows(plan, b, n, c, 0, plan.out_c, sched.unroll);
         return;
     }
     let c_ptr = SendPtr::new(c.as_mut_ptr());
@@ -329,7 +399,108 @@ pub fn spmm_pattern(
         // range of C.
         let c_sub =
             unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(lo * n), (hi - lo) * n) };
-        run(c_sub, lo, hi);
+        pattern_rows(plan, b, n, c_sub, lo, hi, sched.unroll);
+    });
+}
+
+/// Pattern SpMM over filter rows [lo, hi) of one sample; `c_sub` holds
+/// exactly those rows (the serial path passes the whole C with lo = 0).
+fn pattern_rows(
+    plan: &PatternPlan,
+    b: &[f32],
+    n: usize,
+    c_sub: &mut [f32],
+    lo: usize,
+    hi: usize,
+    unroll: usize,
+) {
+    debug_assert_eq!(c_sub.len(), (hi - lo) * n);
+    for (rows, items) in &plan.groups {
+        // The 4-entry PConv fast path dominates; general path for
+        // other pattern sizes.
+        if rows.len() == 4 {
+            let b0 = &b[rows[0] as usize * n..rows[0] as usize * n + n];
+            let b1 = &b[rows[1] as usize * n..rows[1] as usize * n + n];
+            let b2 = &b[rows[2] as usize * n..rows[2] as usize * n + n];
+            let b3 = &b[rows[3] as usize * n..rows[3] as usize * n + n];
+            for (o, w, _) in items {
+                let o = *o as usize;
+                if o < lo || o >= hi {
+                    continue;
+                }
+                let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
+                let (w0, w1, w2, w3) = (w[0], w[1], w[2], w[3]);
+                for j in 0..n {
+                    crow[j] += w0 * b0[j] + w1 * b1[j] + w2 * b2[j] + w3 * b3[j];
+                }
+            }
+        } else {
+            for (o, w, len) in items {
+                let o = *o as usize;
+                if o < lo || o >= hi {
+                    continue;
+                }
+                let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
+                for (j, &row) in rows.iter().enumerate().take(*len as usize) {
+                    axpy_unrolled(
+                        w[j],
+                        &b[row as usize * n..row as usize * n + n],
+                        crow,
+                        unroll,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Batched pattern SpMM: `nb` samples sharing one [`PatternPlan`], sample
+/// `s` reading patch matrix `b[s·k·N ..]` (`k` patch rows per sample) and
+/// writing `c[s·M·N ..]`. Pool threads partition the **combined**
+/// `nb × out_c` filter space in one dispatch. Bitwise-identical to `nb`
+/// sequential [`spmm_pattern`] calls (each filter row's group iteration
+/// order is fixed by the plan).
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_pattern_batch(
+    nb: usize,
+    plan: &PatternPlan,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
+    debug_assert_eq!(b.len(), nb * k * n);
+    debug_assert_eq!(c.len(), nb * plan.out_c * n);
+    let m = plan.out_c;
+    if pool.threads() <= 1 || nb * m <= 1 {
+        for s in 0..nb {
+            pattern_rows(
+                plan,
+                &b[s * k * n..(s + 1) * k * n],
+                n,
+                &mut c[s * m * n..(s + 1) * m * n],
+                0,
+                m,
+                sched.unroll,
+            );
+        }
+        return;
+    }
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_chunks(nb * m, |gs, ge, _| {
+        // A chunk of the global filter space may span several samples:
+        // walk it sample segment by sample segment.
+        super::for_each_sample_segment(m, gs, ge, |s, lo, hi| {
+            let bs = &b[s * k * n..(s + 1) * k * n];
+            // SAFETY: filter rows [lo, hi) of sample s are a disjoint C
+            // range.
+            let c_sub = unsafe {
+                std::slice::from_raw_parts_mut(c_ptr.get().add((s * m + lo) * n), (hi - lo) * n)
+            };
+            pattern_rows(plan, bs, n, c_sub, lo, hi, sched.unroll);
+        });
     });
 }
 
@@ -351,6 +522,28 @@ pub fn spmm_column_compact(
     debug_assert_eq!(packed_w.len(), m * kept);
     debug_assert_eq!(b_packed.len(), kept * n);
     super::gemm::gemm_with(m, kept, n, packed_w, b_packed, c, pool, sched);
+}
+
+/// Batched column-compact SpMM: `nb` samples, each with its own pruned
+/// patch matrix (`kept` rows, built by `im2col_pruned`), sharing the
+/// packed weights — a batched dense GEMM over the reduced K, split across
+/// the combined `nb × M` row space. Bitwise-identical to `nb` sequential
+/// [`spmm_column_compact`] calls.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_column_compact_batch(
+    nb: usize,
+    packed_w: &[f32],
+    m: usize,
+    kept: usize,
+    b_packed: &[f32],
+    n: usize,
+    c: &mut [f32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
+    debug_assert_eq!(packed_w.len(), m * kept);
+    debug_assert_eq!(b_packed.len(), nb * kept * n);
+    super::gemm::gemm_batch_with(nb, m, kept, n, packed_w, b_packed, c, pool, sched);
 }
 
 #[cfg(test)]
@@ -484,6 +677,92 @@ mod tests {
                 c1.iter().zip(&c2).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
             assert!(err < 1e-3, "err={}", err);
         });
+    }
+
+    #[test]
+    fn batched_sparse_kernels_match_sequential_bitwise() {
+        // Every batched sparse tier must be bitwise-identical to nb
+        // sequential single-sample calls, at any pool size.
+        let mut rng = Rng::new(85);
+        let (o, i, nb, n) = (12, 4, 3, 20);
+        let w = Tensor::randn(&[o, i, 3, 3], &mut rng);
+        let s = project_scheme(&w, "pattern", 0.6, None);
+        let wp = apply_mask(&w, &s);
+        let gv = GemmView::from_oihw(&wp);
+        let k = gv.cols;
+        let b: Vec<f32> = (0..nb * k * n).map(|_| rng.normal()).collect();
+        let sched = Schedule::default();
+        let serial = ComputePool::serial();
+
+        // CSR.
+        let csr = Csr::from_dense(&gv);
+        let mut want = vec![0.0; nb * o * n];
+        for sm in 0..nb {
+            spmm_csr(
+                &csr,
+                &b[sm * k * n..(sm + 1) * k * n],
+                n,
+                &mut want[sm * o * n..(sm + 1) * o * n],
+                &serial,
+                &sched,
+            );
+        }
+        for threads in [1usize, 4] {
+            let pool = ComputePool::new(threads);
+            let mut got = vec![0.0; nb * o * n];
+            spmm_csr_batch(nb, &csr, &b, n, &mut got, &pool, &sched);
+            assert_eq!(got, want, "csr t={}", threads);
+        }
+
+        // Pattern plan.
+        let (set, ids) = match &s {
+            Scheme::Pattern { set, ids } => (set, ids),
+            _ => unreachable!(),
+        };
+        let pc = crate::sparse::PatternCompact::encode(&wp, set, ids, i, 3, 3);
+        let pplan = PatternPlan::build(&pc);
+        let mut want_p = vec![0.0; nb * o * n];
+        for sm in 0..nb {
+            spmm_pattern(
+                &pplan,
+                &b[sm * k * n..(sm + 1) * k * n],
+                n,
+                &mut want_p[sm * o * n..(sm + 1) * o * n],
+                &serial,
+                &sched,
+            );
+        }
+        for threads in [1usize, 4] {
+            let pool = ComputePool::new(threads);
+            let mut got = vec![0.0; nb * o * n];
+            spmm_pattern_batch(nb, &pplan, k, &b, n, &mut got, &pool, &sched);
+            assert_eq!(got, want_p, "pattern t={}", threads);
+        }
+
+        // Reordered.
+        let rplan = ReorderPlan::build(&gv);
+        let lanes = LaneSchedule::build(&rplan, 2);
+        let mut want_r = vec![0.0; nb * o * n];
+        let mut panel1 = vec![0.0; reordered_panel_len(&rplan, n, 1)];
+        for sm in 0..nb {
+            spmm_reordered(
+                &rplan,
+                &lanes,
+                &b[sm * k * n..(sm + 1) * k * n],
+                n,
+                &mut want_r[sm * o * n..(sm + 1) * o * n],
+                &serial,
+                &mut panel1,
+                &sched,
+            );
+        }
+        for threads in [1usize, 4] {
+            let pool = ComputePool::new(threads);
+            let mut panel = vec![0.0; reordered_panel_len(&rplan, n, pool.threads())];
+            let mut got = vec![0.0; nb * o * n];
+            spmm_reordered_batch(nb, &rplan, &lanes, &b, n, &mut got, &pool, &mut panel, &sched);
+            assert_eq!(got, want_r, "reordered t={}", threads);
+        }
     }
 
     #[test]

@@ -3,9 +3,9 @@
 //! ```text
 //! prt-dnn apps                                  # list apps + MACs/params
 //! prt-dnn compile --app style [--width 0.5]     # run compiler passes, report
-//! prt-dnn run --app sr --variant pruning+compiler [--threads 4]
+//! prt-dnn run --app sr --variant pruning+compiler [--threads 4] [--batch 4]
 //! prt-dnn run --app sr --tune [--tune-cache .tune-cache.json]
-//! prt-dnn serve --app coloring --fps 30 --frames 120 [--tune]
+//! prt-dnn serve --app coloring --fps 30 --frames 120 [--tune] [--batch 4]
 //! prt-dnn model --app style                     # modeled Adreno-640 ms/variant
 //! prt-dnn artifacts [--dir artifacts]           # list + smoke-run artifacts
 //! ```
@@ -13,9 +13,12 @@
 //! `--tune` enables the plan-time schedule auto-tuner (see
 //! `docs/ARCHITECTURE.md` §Tuning); winners persist in `--tune-cache`
 //! (default `.tune-cache.json`) so later runs plan without benchmarking.
+//! `--batch N` fuses N frames per dispatch (see `docs/ARCHITECTURE.md`
+//! §Batching): `run` then reports per-dispatch and per-frame time, and
+//! `serve` coalesces up to N queued frames per worker dispatch.
 
 use anyhow::{bail, Context, Result};
-use prt_dnn::apps::{build_app, prepare_variant_tuned, AppSpec, Variant};
+use prt_dnn::apps::{build_app, prepare_variant_batched, AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
 use prt_dnn::coordinator::{ServeConfig, Server};
 use prt_dnn::dsl::Graph;
@@ -163,10 +166,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let app = args.get_or("app", "style");
     let width = args.get_f64("width", 1.0);
     let threads = args.get_usize("threads", prt_dnn::util::num_threads());
+    let batch = args.get_usize("batch", 1).max(1);
     let variant = parse_variant(args.get_or("variant", "pruning+compiler"))?;
     let g = build_app(app, width, 42)?;
     let spec = AppSpec::for_app(app);
-    let (eng, _) = prepare_variant_tuned(&g, variant, &spec, threads, &tune_opts(args))?;
+    let (eng, _) =
+        prepare_variant_batched(&g, variant, &spec, threads, batch, &tune_opts(args))?;
     print_tune_stats(&eng);
     let input_shape = eng.input_shapes()[0].clone();
     let x = Tensor::full(&input_shape, 0.5);
@@ -175,13 +180,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     });
     let mem = eng.memory();
     println!(
-        "{} [{}] threads={} input={:?}: mean {} ms (p50 {}, p99 {}; n={}) | \
-         peak {} (weights {} + arena/scratch {})",
+        "{} [{}] threads={} batch={} input={:?}: mean {} ms/dispatch = {} ms/frame \
+         ({:.1} frames/s; p50 {}, p99 {}; n={}) | peak {} (weights {} + arena/scratch {})",
         app,
         variant.name(),
         threads,
+        batch,
         input_shape,
         ms(s.mean),
+        ms(s.mean / batch as f64),
+        batch as f64 * 1e3 / s.mean.max(1e-9),
         ms(s.p50),
         ms(s.p99),
         s.n,
@@ -196,14 +204,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let app = args.get_or("app", "style");
     let width = args.get_f64("width", 1.0);
     let threads = args.get_usize("threads", prt_dnn::util::num_threads());
+    let batch = args.get_usize("batch", 1).max(1);
     let variant = parse_variant(args.get_or("variant", "pruning+compiler"))?;
     let fps = args.get_f64("fps", 30.0);
     let frames = args.get_usize("frames", 120);
     let g = build_app(app, width, 42)?;
     let spec = AppSpec::for_app(app);
-    let (eng, _) = prepare_variant_tuned(&g, variant, &spec, threads, &tune_opts(args))?;
+    let (eng, _) =
+        prepare_variant_batched(&g, variant, &spec, threads, batch, &tune_opts(args))?;
     print_tune_stats(&eng);
-    let ishape = eng.input_shapes()[0].clone();
+    let ishape = eng.plan().frame_input_shapes()[0].clone();
     let (h, w) = (ishape[2], ishape[3]);
     let gray = ishape[1] == 1;
 
@@ -213,8 +223,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.get_usize("queue", 4),
         workers: args.get_usize("workers", 1),
         frames,
+        batch,
     };
-    println!("serving {} [{}] at {} fps for {} frames…", app, variant.name(), fps, frames);
+    println!(
+        "serving {} [{}] at {} fps for {} frames (batch {})…",
+        app,
+        variant.name(),
+        fps,
+        frames,
+        batch
+    );
     let report = Server::new(&eng, cfg).serve(|_| {
         let img = frames_src.lock().unwrap().next_frame();
         let t = img.to_tensor();

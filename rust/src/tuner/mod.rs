@@ -188,6 +188,18 @@ impl Tuner {
     /// is always element 0.
     pub fn candidate_space(req: &TuneRequest) -> Vec<Schedule> {
         let default = Schedule::default();
+        if req.op == "dense" {
+            // Fully-connected: `dense_forward` only honors the split axis
+            // (rows = output features, cols = batch); tiles, lowering and
+            // unroll are no-ops there, so probing them would just re-time
+            // identical kernels and persist meaningless knob values. At
+            // batch 1 even the cols split is dead (the kernel takes the
+            // rows path), so only the default remains.
+            if req.n <= 1 {
+                return vec![default];
+            }
+            return vec![default, Schedule { split: SplitAxis::Cols, ..default }.sanitized()];
+        }
         if !req.gemm_backed {
             // Sparse kernels: the reorder/pattern plans fix the loop
             // structure, only the AXPY unroll width is free.
@@ -336,6 +348,21 @@ mod tests {
         }
         let sparse = Tuner::candidate_space(&gemm_req(false, false));
         assert_eq!(sparse.len(), 2, "sparse space is unroll-only");
+    }
+
+    #[test]
+    fn dense_space_is_split_only() {
+        // FC steps probe at most two candidates: the default (rows split)
+        // and — only when the batch gives the cols path any work — the
+        // batch (cols) split. Everything else is a no-op knob.
+        let mut req = gemm_req(false, true);
+        req.op = "dense";
+        let cands = Tuner::candidate_space(&req); // req.n > 1
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0], Schedule::default());
+        assert_eq!(cands[1].split, SplitAxis::Cols);
+        req.n = 1; // batch 1: the cols split is dead code in the kernel
+        assert_eq!(Tuner::candidate_space(&req), vec![Schedule::default()]);
     }
 
     #[test]

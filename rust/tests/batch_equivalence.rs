@@ -1,0 +1,190 @@
+//! Acceptance suite for batched execution (plan → kernels → engine):
+//!
+//! 1. **Batch equivalence** — for all three app graphs × batch ∈
+//!    {1, 2, 3, 4} × threads ∈ {1, 4}, a batched run is **bitwise
+//!    identical** to N sequential single-frame runs on the same inputs,
+//!    across the dense, CSR and compact (column / pattern) storage
+//!    variants, plus the `Reordered` fallback (filter scheme). The pool
+//!    may partition work across the combined `N × rows` space, but every
+//!    output element keeps its single-frame fp expression, so batching
+//!    must never move a bit.
+//! 2. **Typed negative paths** — `Planner::plan_with` rejects `batch == 0`
+//!    and the batched entry points reject a wrong frame count / per-frame
+//!    input count with matchable [`PlanError`]s, not panics.
+//! 3. **Plan geometry** — batched `input_shapes` / `output_shapes` scale
+//!    dim 0 by N and `frame_*_shapes` divide it back out.
+
+use prt_dnn::apps::builders::{build_coloring, build_sr, build_style};
+use prt_dnn::apps::{prune_graph, AppSpec};
+use prt_dnn::dsl::Graph;
+use prt_dnn::executor::{ExecConfig, ExecContext, PlanError, Planner};
+use prt_dnn::pruning::scheme::project_scheme;
+use prt_dnn::pruning::verify::apply_mask;
+use prt_dnn::tensor::Tensor;
+
+/// Deterministic, per-frame-distinct input: frame `f` of shape `shape`.
+fn frame_input(shape: &[usize], f: usize) -> Tensor {
+    let mut x = Tensor::zeros(shape);
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        *v = 0.5 + 0.4 * ((i as f32 * 0.23) + (f as f32 * 1.7)).sin();
+    }
+    x
+}
+
+/// The storage variants of one app: (tag, graph, config builder input).
+fn app_variants(app: &str) -> Vec<(String, Graph, ExecConfig)> {
+    let (base, spec) = match app {
+        "style" => (build_style(32, 0.25, 201), AppSpec::for_app("style")),
+        "coloring" => (build_coloring(32, 0.25, 202), AppSpec::for_app("coloring")),
+        "sr" => (build_sr(24, 4, 0.25, 203), AppSpec::for_app("sr")),
+        _ => unreachable!(),
+    };
+    let mut pruned = base.clone();
+    let schemes = prune_graph(&mut pruned, &spec);
+    assert!(!schemes.is_empty(), "{}: nothing pruned", app);
+    let mut out = vec![
+        (format!("{}/dense", app), base.clone(), ExecConfig::dense(1)),
+        (format!("{}/csr", app), pruned.clone(), ExecConfig::csr(1)),
+        (
+            format!("{}/compact", app),
+            pruned,
+            ExecConfig::compact(1, schemes),
+        ),
+    ];
+    if app == "style" {
+        // The `Reordered` fallback: a filter scheme has no declared
+        // column/pattern structure, so the planner compiles the
+        // filter-signature reorder kernel (per-group gather panels).
+        let mut g = base;
+        let name = "res0_c1";
+        let w = g.param(&format!("{}.weight", name)).unwrap().clone();
+        let s = project_scheme(&w, "filter", 0.5, None);
+        g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
+        out.push((
+            "style/reordered-fallback".to_string(),
+            g,
+            ExecConfig::compact(1, vec![(name.to_string(), s)]),
+        ));
+    }
+    out
+}
+
+#[test]
+fn batched_runs_match_sequential_bitwise() {
+    for &threads in &[1usize, 4] {
+        for app in ["style", "coloring", "sr"] {
+            for (tag, g, cfg) in app_variants(app) {
+                let mut cfg = cfg;
+                cfg.threads = threads;
+
+                // Reference: single-frame plan + context.
+                let p1 = Planner::plan(&g, &cfg.clone().with_batch(1)).unwrap();
+                let mut c1 = ExecContext::for_plan(&p1);
+                let frame_shapes = p1.input_shapes();
+
+                for batch in [1usize, 2, 3, 4] {
+                    let pb = Planner::plan(&g, &cfg.clone().with_batch(batch)).unwrap();
+                    pb.validate_layout().unwrap();
+                    assert_eq!(pb.batch(), batch, "{}", tag);
+                    assert_eq!(pb.frame_input_shapes(), frame_shapes, "{}", tag);
+
+                    let frames: Vec<Vec<Tensor>> = (0..batch)
+                        .map(|f| frame_shapes.iter().map(|s| frame_input(s, f)).collect())
+                        .collect();
+                    let frame_refs: Vec<&[Tensor]> =
+                        frames.iter().map(|v| v.as_slice()).collect();
+
+                    let mut cb = ExecContext::for_plan(&pb);
+                    let got = cb.run_batch(&pb, &frame_refs).unwrap();
+                    assert_eq!(got.len(), batch, "{}", tag);
+
+                    for (f, frame) in frames.iter().enumerate() {
+                        let want = c1.run(&p1, frame).unwrap();
+                        assert_eq!(want.len(), got[f].len(), "{}", tag);
+                        for (k, (a, b)) in want.iter().zip(got[f].iter()).enumerate() {
+                            assert_eq!(a.shape(), b.shape(), "{} b={} f={}", tag, batch, f);
+                            assert_eq!(
+                                a.data(),
+                                b.data(),
+                                "{} t={} b={} frame={} output={}: batching moved bits",
+                                tag,
+                                threads,
+                                batch,
+                                f,
+                                k
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_batch_is_rejected_with_typed_error() {
+    let g = build_style(32, 0.25, 210);
+    let err = Planner::plan_with(
+        &g,
+        &ExecConfig::dense(1).with_batch(0),
+        prt_dnn::executor::PlanOptions::default(),
+    )
+    .unwrap_err();
+    assert_eq!(err.downcast_ref::<PlanError>(), Some(&PlanError::ZeroBatch));
+    // The error message is stable and mentions the constraint.
+    assert!(format!("{:#}", err).contains("batch"));
+}
+
+#[test]
+fn mismatched_frame_inputs_are_rejected_with_typed_errors() {
+    let g = build_style(32, 0.25, 211);
+    let plan = Planner::plan(&g, &ExecConfig::dense(1).with_batch(2)).unwrap();
+    let x = Tensor::full(&plan.frame_input_shapes()[0], 0.5);
+
+    // Wrong frame count: 1 frame for a batch-2 plan.
+    let one: Vec<&[Tensor]> = vec![std::slice::from_ref(&x)];
+    let err = plan.pack_frames(&one).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<PlanError>(),
+        Some(&PlanError::FrameCount { expected: 2, got: 1 })
+    );
+
+    // Wrong per-frame input count: frame 1 supplies no tensors.
+    let empty: &[Tensor] = &[];
+    let frames: Vec<&[Tensor]> = vec![std::slice::from_ref(&x), empty];
+    let err = plan.pack_frames(&frames).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<PlanError>(),
+        Some(&PlanError::FrameInputCount { frame: 1, expected: 1, got: 0 })
+    );
+
+    // The context-level convenience surfaces the same typed error.
+    let mut ctx = ExecContext::for_plan(&plan);
+    let err = ctx.run_batch(&plan, &one).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<PlanError>(),
+        Some(PlanError::FrameCount { .. })
+    ));
+}
+
+#[test]
+fn engine_run_frames_round_trips() {
+    use prt_dnn::executor::Engine;
+    let g = build_style(32, 0.25, 212);
+    let eng = Engine::with_config(&g, &ExecConfig::dense(2).with_batch(3)).unwrap();
+    assert_eq!(eng.batch(), 3);
+    let fshape = eng.plan().frame_input_shapes()[0].clone();
+    assert_eq!(eng.input_shapes()[0][0], 3 * fshape[0]);
+
+    let frames: Vec<Vec<Tensor>> = (0..3).map(|f| vec![frame_input(&fshape, f)]).collect();
+    let frame_refs: Vec<&[Tensor]> = frames.iter().map(|v| v.as_slice()).collect();
+    let outs = eng.run_frames(&frame_refs).unwrap();
+    assert_eq!(outs.len(), 3);
+
+    // Each frame agrees with a single-frame engine on the same graph.
+    let single = Engine::with_config(&g, &ExecConfig::dense(2)).unwrap();
+    for (f, frame) in frames.iter().enumerate() {
+        let want = single.run(frame).unwrap();
+        assert_eq!(want[0].data(), outs[f][0].data(), "frame {}", f);
+    }
+}

@@ -78,7 +78,7 @@ fn serving_all_apps_realtime_judgement_runs() {
         let shape = eng.input_shapes()[0].clone();
         let report = Server::new(
             &eng,
-            ServeConfig { source_fps: 100.0, queue_depth: 4, workers: 1, frames: 12 },
+            ServeConfig { source_fps: 100.0, queue_depth: 4, workers: 1, frames: 12, batch: 1 },
         )
         .serve(|_| Tensor::full(&shape, 0.5))
         .unwrap();

@@ -72,6 +72,7 @@ fn check_app(app: &str, base: Graph) {
             threads: 2,
             schemes: schemes.clone(),
             tune: prt_dnn::tuner::TuneOpts::off(),
+            batch: 1,
         },
     );
     assert_planned_equivalence(

@@ -84,6 +84,73 @@ fn tuned_plans_match_default_bitwise_on_all_apps() {
     }
 }
 
+/// Fully-connected (`Op::Dense`) steps get TuneRequests too (the ROADMAP
+/// gap): the tuner searches the schedule space for the FC layer — the
+/// kernel honors the split knob — and the tuned plan stays bitwise
+/// identical to the default. The plan-side schedule serialization lists
+/// the dense step, proving a request was issued for it.
+#[test]
+fn dense_steps_are_tuned_and_match_default_bitwise() {
+    use prt_dnn::dsl::op::{Activation, Op, PadMode};
+    use prt_dnn::util::rng::Rng;
+
+    let mut rng = Rng::new(88);
+    let mut g = Graph::new("fc-net");
+    let x = g.add("x", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+    let c1 = g.add(
+        "c1",
+        Op::Conv2d {
+            out_c: 8,
+            in_c: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            pad_mode: PadMode::Zeros,
+            fused_act: Activation::Relu,
+        },
+        &[x],
+    );
+    g.set_param("c1.weight", Tensor::randn(&[8, 4, 3, 3], &mut rng));
+    let gap = g.add("gap", Op::GlobalAvgPool, &[c1]);
+    let fc = g.add(
+        "fc",
+        Op::Dense { out_f: 10, in_f: 8, fused_act: Activation::Identity },
+        &[gap],
+    );
+    g.set_param("fc.weight", Tensor::randn(&[10, 8], &mut rng));
+    g.set_param("fc.bias", Tensor::randn(&[10], &mut rng));
+    g.add("out", Op::Output, &[fc]);
+
+    for &threads in &[1usize, 4] {
+        let base_cfg = ExecConfig::dense(threads);
+        let cache = tmp(&format!("fc-t{}", threads));
+        let _ = std::fs::remove_file(&cache);
+        let tuned_cfg = ExecConfig::dense(threads).with_tuning(TuneOpts::quick(&cache));
+
+        let p0 = Planner::plan(&g, &base_cfg).unwrap();
+        let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+        assert!(p1.tuned());
+        // A TuneRequest was issued for the dense step: its schedule shows
+        // up in the plan-side serialization, and the search missed the
+        // cold cache at least twice (conv + dense).
+        let sched = p1.schedules_json();
+        assert!(
+            sched.get("fc").as_obj().is_some(),
+            "t={}: no schedule recorded for the dense step: {}",
+            threads,
+            sched
+        );
+        assert!(p1.tune_stats().cache_misses >= 2, "t={}: conv + fc must both tune", threads);
+
+        let x = structured_input(&p0.input_shapes()[0]);
+        let o0 = ExecContext::for_plan(&p0).run(&p0, std::slice::from_ref(&x)).unwrap();
+        let o1 = ExecContext::for_plan(&p1).run(&p1, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(o0[0].data(), o1[0].data(), "t={}: tuned FC schedule moved bits", threads);
+        let _ = std::fs::remove_file(&cache);
+    }
+}
+
 /// The cache's JSON form is deterministic: parse(serialize(c)) == c and a
 /// second serialization is byte-identical (sorted keys, stable number
 /// formatting) — warm caches diff cleanly across runs.

@@ -1,7 +1,8 @@
 //! Acceptance check for the static memory planner **and the persistent
 //! compute pool**: steady-state `ExecContext::run_into` performs **zero
-//! heap allocations** — at `threads = 1` and at `threads = 4` — and two
-//! consecutive runs allocate no new arena bytes.
+//! heap allocations** — at `threads = 1` and at `threads = 4`, for
+//! single-frame **and batched** plans (batch = 4) — and two consecutive
+//! runs allocate no new arena bytes.
 //!
 //! A counting global allocator wraps the system allocator; the measured
 //! loop takes the minimum over several trials so unrelated background
@@ -132,6 +133,50 @@ fn steady_state_is_allocation_free() {
             &format!("style/reordered-fallback/t{}", threads),
             &g,
             &ExecConfig::compact(threads, schemes),
+        );
+    }
+
+    // Batched plans (batch = 4, threads = 4): the arena/scratch ranges
+    // scale by the batch at plan time, the packed input is one tensor, and
+    // the kernels dispatch once over the combined 4 × rows space — still
+    // zero allocations per (batched) frame on all three apps and on the
+    // Reordered-fallback panel path.
+    {
+        let mut g = build_style(48, 0.25, 61);
+        let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
+        assert_zero_alloc(
+            "style/compact/b4/t4",
+            &g,
+            &ExecConfig::compact(4, schemes).with_batch(4),
+        );
+
+        let mut g = build_coloring(48, 0.25, 62);
+        let schemes = prune_graph(&mut g, &AppSpec::for_app("coloring"));
+        assert_zero_alloc(
+            "coloring/compact/b4/t4",
+            &g,
+            &ExecConfig::compact(4, schemes).with_batch(4),
+        );
+
+        let mut g = build_sr(24, 4, 0.25, 63);
+        let schemes = prune_graph(&mut g, &AppSpec::for_app("sr"));
+        assert_zero_alloc(
+            "sr/compact/b4/t4",
+            &g,
+            &ExecConfig::compact(4, schemes).with_batch(4),
+        );
+
+        // Reordered fallback at batch 4: the per-group activation panels
+        // stay per pool thread (not per sample), pre-sized by the plan.
+        let mut g = build_style(48, 0.25, 64);
+        let name = "res0_c1";
+        let w = g.param(&format!("{}.weight", name)).unwrap().clone();
+        let s = project_scheme(&w, "filter", 0.5, None);
+        g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
+        assert_zero_alloc(
+            "style/reordered-fallback/b4/t4",
+            &g,
+            &ExecConfig::compact(4, vec![(name.to_string(), s)]).with_batch(4),
         );
     }
 

@@ -9,30 +9,43 @@
 //! * [`Result`] — `Result<T, Error>` with a defaulted error parameter,
 //! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
 //!   `Option`,
-//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction macros.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction macros,
+//! * [`Error::downcast_ref`] — typed access to the original root-cause
+//!   error value (errors converted via `?` keep their concrete type).
 //!
 //! Like the real crate, `Error` deliberately does **not** implement
 //! `std::error::Error`, which is what makes the blanket
 //! `impl From<E: std::error::Error>` coherent.
 
+use std::any::Any;
 use std::fmt::{self, Display};
 
 /// Context-chain error. `chain[0]` is the outermost context, the last
 /// element is the root cause.
 pub struct Error {
     chain: Vec<String>,
+    /// The original root-cause value, kept for [`Error::downcast_ref`]
+    /// (`None` for ad-hoc `anyhow!` / `Error::msg` errors).
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from a single display-able message.
     pub fn msg<M: Display>(message: M) -> Self {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
     /// Wrap with an outer context message.
     pub fn wrap<C: Display>(mut self, context: C) -> Self {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// Typed view of the root cause: `Some(&E)` when this error was
+    /// converted from a concrete `E` (via `?` or `.into()`), regardless of
+    /// how many context layers were added on top.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref().and_then(|p| p.downcast_ref::<T>())
     }
 
     /// The error chain, outermost first.
@@ -81,7 +94,7 @@ where
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(e)) }
     }
 }
 
@@ -220,5 +233,18 @@ mod tests {
         let r: Result<()> = Err(anyhow!("inner"));
         let e = r.context("outer").unwrap_err();
         assert_eq!(format!("{:#}", e), "outer: inner");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_root_cause() {
+        let e: Error = Error::from(io_err());
+        let io = e.downcast_ref::<std::io::Error>().expect("typed root cause");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        // Context layers do not hide the payload.
+        let wrapped = e.wrap("while loading");
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_some());
+        assert!(wrapped.downcast_ref::<std::fmt::Error>().is_none());
+        // Ad-hoc message errors carry no payload.
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 }
