@@ -5,8 +5,9 @@
 //! cargo run --release --example coloring
 //! ```
 
-use prt_dnn::apps::{build_coloring, prepare_variant, AppSpec, Variant};
+use prt_dnn::apps::Variant;
 use prt_dnn::image::{psnr, synth, Image};
+use prt_dnn::session::Model;
 use prt_dnn::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
@@ -15,9 +16,10 @@ fn main() -> anyhow::Result<()> {
     let threads = prt_dnn::util::num_threads();
 
     let hw = 224;
-    let g = build_coloring(hw, 0.5, 43);
-    let spec = AppSpec::for_app("coloring");
-    let (eng, _) = prepare_variant(&g, Variant::PrunedCompiler, &spec, threads)?;
+    let session = Model::for_app_scaled("coloring", Variant::PrunedCompiler, 0.5, 43)?
+        .session()
+        .threads(threads)
+        .build()?;
 
     let color = synth::photo(hw, hw, 21);
     let gray = color.to_grayscale();
@@ -34,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let t0 = std::time::Instant::now();
-    let out = eng.run(&[luma])?;
+    let out = session.run(&[luma])?;
     let dt = t0.elapsed().as_secs_f64() * 1e3;
     let colored = Image::from_tensor(&out[0]);
     colored.save_png(&out_dir.join("coloring_output.png"))?;

@@ -5,21 +5,19 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use prt_dnn::apps::{build_app, prepare_variant, AppSpec, Variant};
+use prt_dnn::apps::{AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
+use prt_dnn::session::Model;
 use prt_dnn::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
     let threads = prt_dnn::util::num_threads();
     // A width-0.5 style-transfer model keeps the quickstart snappy.
     let app = "style";
-    let g = build_app(app, 0.5, 42)?;
     let spec = AppSpec::for_app(app);
     println!(
-        "app={} ({} LR nodes, {} params), {} pruning @ {:.0}%, {} threads",
+        "app={}, {} pruning @ {:.0}%, {} threads",
         app,
-        g.len(),
-        g.param_count(),
         spec.scheme_kind,
         spec.sparsity * 100.0,
         threads
@@ -33,10 +31,14 @@ fn main() -> anyhow::Result<()> {
     let mut outputs = Vec::new();
     let mut base_ms = 0.0;
     for variant in Variant::table1() {
-        let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
-        let out = eng.run(std::slice::from_ref(&x))?;
+        // One Model per variant (prune + compile), one Session to run it.
+        let session = Model::for_app_scaled(app, variant, 0.5, 42)?
+            .session()
+            .threads(threads)
+            .build()?;
+        let out = session.run(std::slice::from_ref(&x))?;
         let s = bench_auto_ms(600.0, || {
-            let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+            let _ = session.run(std::slice::from_ref(&x)).unwrap();
         });
         if variant == Variant::Unpruned {
             base_ms = s.mean;
@@ -45,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             variant.name().to_string(),
             format!("{} ({})", ms(s.mean), speedup(base_ms, s.mean)),
             ms(s.p50),
-            prt_dnn::util::fmt_bytes(eng.weight_bytes),
+            prt_dnn::util::fmt_bytes(session.weight_bytes()),
         ]);
         outputs.push((variant, out));
     }

@@ -5,9 +5,10 @@
 //! cargo run --release --example style_transfer
 //! ```
 
-use prt_dnn::apps::{build_style, prepare_variant, AppSpec, Variant};
+use prt_dnn::apps::Variant;
 use prt_dnn::image::synth;
 use prt_dnn::image::Image;
+use prt_dnn::session::Model;
 
 fn main() -> anyhow::Result<()> {
     let out_dir = std::path::Path::new("out/figure1");
@@ -15,15 +16,16 @@ fn main() -> anyhow::Result<()> {
     let threads = prt_dnn::util::num_threads();
 
     let hw = 256;
-    let g = build_style(hw, 0.5, 42);
-    let spec = AppSpec::for_app("style");
-    let (eng, _) = prepare_variant(&g, Variant::PrunedCompiler, &spec, threads)?;
+    let session = Model::for_app_scaled("style", Variant::PrunedCompiler, 0.5, 42)?
+        .session()
+        .threads(threads)
+        .build()?;
 
     let content = synth::photo(hw, hw, 7);
     content.save_png(&out_dir.join("style_input.png"))?;
 
     let t0 = std::time::Instant::now();
-    let out = eng.run(&[content.to_tensor()])?;
+    let out = session.run(&[content.to_tensor()])?;
     let dt = t0.elapsed().as_secs_f64() * 1e3;
     let styled = Image::from_tensor(&out[0]);
     styled.save_png(&out_dir.join("style_output.png"))?;

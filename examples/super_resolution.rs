@@ -5,8 +5,9 @@
 //! cargo run --release --example super_resolution
 //! ```
 
-use prt_dnn::apps::{build_sr, prepare_variant, AppSpec, Variant};
+use prt_dnn::apps::Variant;
 use prt_dnn::image::{psnr, ssim, synth, Image};
+use prt_dnn::session::Model;
 
 fn main() -> anyhow::Result<()> {
     let out_dir = std::path::Path::new("out/figure1");
@@ -14,9 +15,10 @@ fn main() -> anyhow::Result<()> {
     let threads = prt_dnn::util::num_threads();
 
     let (lo_hw, scale) = (96, 4);
-    let g = build_sr(lo_hw, scale, 0.5, 44);
-    let spec = AppSpec::for_app("sr");
-    let (eng, _) = prepare_variant(&g, Variant::PrunedCompiler, &spec, threads)?;
+    let session = Model::for_app_scaled("sr", Variant::PrunedCompiler, 0.5, 44)?
+        .session()
+        .threads(threads)
+        .build()?;
 
     // Ground truth hi-res photo + its box-downsampled input.
     let hi = synth::photo(lo_hw * scale, lo_hw * scale, 33);
@@ -25,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     hi.save_png(&out_dir.join("sr_reference.png"))?;
 
     let t0 = std::time::Instant::now();
-    let out = eng.run(&[lo.to_tensor()])?;
+    let out = session.run(&[lo.to_tensor()])?;
     let dt = t0.elapsed().as_secs_f64() * 1e3;
     let up = Image::from_tensor(&out[0]);
     up.save_png(&out_dir.join("sr_output.png"))?;

@@ -12,11 +12,11 @@
 //! cargo run --release --example video_stream [-- --frames 300 --fps 30]
 //! ```
 
-use prt_dnn::apps::{build_style, prepare_variant, AppSpec, Variant};
+use prt_dnn::apps::Variant;
 use prt_dnn::bench::Table;
-use prt_dnn::coordinator::{ServeConfig, Server};
 use prt_dnn::image::synth::FrameStream;
 use prt_dnn::runtime::{Manifest, PjrtModel};
+use prt_dnn::session::{Model, ServeOpts};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::util::cli::Args;
 use std::sync::Mutex;
@@ -32,27 +32,21 @@ fn main() -> anyhow::Result<()> {
         "video_stream e2e: style transfer {0}x{0}, {1} frames at {2} fps, {3} compute threads",
         hw, frames, fps, threads
     );
-    let g = build_style(hw, 0.5, 42);
-    let spec = AppSpec::for_app("style");
 
     let mut table = Table::new(
         "E2E serving (style transfer, synthetic video)",
         &["variant", "fps", "p50 ms", "p90 ms", "p99 ms", "dropped", "realtime@30"],
     );
     for variant in Variant::table1() {
-        let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
+        let session = Model::for_app_scaled("style", variant, 0.5, 42)?
+            .session()
+            .threads(threads)
+            .build()?;
         let src = Mutex::new(FrameStream::new(hw, hw, 9));
-        let report = Server::new(
-            &eng,
-            ServeConfig {
-                source_fps: fps,
-                queue_depth: 4,
-                workers: 1,
-                frames,
-                batch: 1,
-            },
-        )
-        .serve(|_| src.lock().unwrap().next_frame().to_tensor())?;
+        let report = session.serve(
+            &ServeOpts { fps, queue_depth: 4, workers: 1, frames, ..ServeOpts::default() },
+            |_| src.lock().unwrap().next_frame().to_tensor(),
+        )?;
         table.row(&[
             variant.name().to_string(),
             format!("{:.1}", report.throughput_fps()),
@@ -76,10 +70,13 @@ fn main() -> anyhow::Result<()> {
             let model = PjrtModel::load(&client, entry)?;
             let gjson = std::path::Path::new("artifacts/style_transfer.graph.json");
             let exported = prt_dnn::dsl::io::load(gjson)?;
-            let eng = prt_dnn::executor::Engine::new(&exported, threads)?;
+            let native_session = Model::from_compiled(exported, Vec::new())
+                .session()
+                .threads(threads)
+                .build()?;
             let shape = entry.input_shapes[0].clone();
             let x = Tensor::full(&shape, 0.5);
-            let native = eng.run(std::slice::from_ref(&x))?;
+            let native = native_session.run(std::slice::from_ref(&x))?;
             let pjrt = model.run(std::slice::from_ref(&x))?;
             let err = native[0].rel_l2(&pjrt[0]);
             println!(

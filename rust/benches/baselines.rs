@@ -6,17 +6,17 @@
 //!   ours         = pruned + fused + compact/reorder
 //! plus the modeled Adreno-640 numbers from the roofline.
 
-use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
+use prt_dnn::apps::{build_app, prune_graph, AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, ms, Table};
 use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
+use prt_dnn::session::Model;
 use prt_dnn::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
     let threads = prt_dnn::util::num_threads();
     // Measured at reduced scale (VGG-16 is 15.5 GMACs at full size).
     let width = 0.25;
-    let g = build_app("vgg16", width, 42)?;
     let spec = AppSpec::for_app("vgg16");
 
     let mut t = Table::new(
@@ -29,11 +29,14 @@ fn main() -> anyhow::Result<()> {
         ("TVM-like (fused dense)", Variant::UnprunedCompiler),
         ("ours (pruned+compiler)", Variant::PrunedCompiler),
     ] {
-        let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
-        let shape = eng.input_shapes()[0].clone();
+        let session = Model::for_app_scaled("vgg16", variant, width, 42)?
+            .session()
+            .threads(threads)
+            .build()?;
+        let shape = session.shapes().inputs[0].clone();
         let x = Tensor::full(&shape, 0.5);
         let s = bench_auto_ms(1000.0, || {
-            let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+            let _ = session.run(std::slice::from_ref(&x)).unwrap();
         });
         results.push((name, s.mean));
     }

@@ -4,8 +4,8 @@
 
 use prt_dnn::apps::{build_app, prune_graph, AppSpec};
 use prt_dnn::bench::{bench_auto_ms, ms, Table};
-use prt_dnn::executor::{Engine, ExecConfig};
 use prt_dnn::passes::PassManager;
+use prt_dnn::session::Model;
 use prt_dnn::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
@@ -36,11 +36,16 @@ fn main() -> anyhow::Result<()> {
                 nodes_before = g.len();
             }
             nodes_after = g.len();
-            let eng = Engine::with_config(&g, &ExecConfig::compact(threads, schemes.clone()))?;
-            let shape = eng.input_shapes()[0].clone();
+            // The pass ablation transforms the graph by hand, so the
+            // session wraps the already-lowered graph + schemes.
+            let session = Model::from_compiled(g, schemes.clone())
+                .session()
+                .threads(threads)
+                .build()?;
+            let shape = session.shapes().inputs[0].clone();
             let x = Tensor::full(&shape, 0.5);
             let s = bench_auto_ms(700.0, || {
-                let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+                let _ = session.run(std::slice::from_ref(&x)).unwrap();
             });
             row.push(ms(s.mean));
         }

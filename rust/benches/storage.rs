@@ -8,8 +8,8 @@
 
 use prt_dnn::apps::{build_app, prune_graph, AppSpec};
 use prt_dnn::bench::{mem_json, Table};
-use prt_dnn::executor::{Engine, ExecConfig};
 use prt_dnn::pruning::scheme::project_scheme;
+use prt_dnn::session::Model;
 use prt_dnn::pruning::verify::apply_mask;
 use prt_dnn::sparse::{Csr, GemmView, Stored};
 use prt_dnn::tensor::Tensor;
@@ -64,8 +64,11 @@ fn main() -> anyhow::Result<()> {
             csr += Csr::from_dense(&gv).size_bytes();
             compact += Stored::encode(w, s).size_bytes();
         }
-        let eng = Engine::with_config(&g, &ExecConfig::compact(1, schemes.clone()))?;
-        let mem = eng.memory();
+        let session = Model::from_compiled(g.clone(), schemes.clone())
+            .session()
+            .threads(1)
+            .build()?;
+        let mem = session.memory();
         apps.row(&[
             app.to_string(),
             spec.scheme_kind.to_string(),

@@ -22,14 +22,12 @@
 //! dispatch, reported as frames/s next to the batch-1 engine, with
 //! allocs/frame still zero (`batch` / `fps` T1-JSON fields).
 
-use prt_dnn::apps::{
-    build_app, prepare_variant, prepare_variant_batched, prepare_variant_tuned, prune_graph,
-    AppSpec, Variant,
-};
+use prt_dnn::apps::{build_app, prune_graph, AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, bytes, mem_json, ms, speedup, summary_json, Table};
-use prt_dnn::executor::{Engine, ExecContext};
+use prt_dnn::executor::{ExecContext, ExecutionPlan};
 use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
+use prt_dnn::session::{Model, Session};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
@@ -39,12 +37,28 @@ use std::time::Instant;
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
+/// Session for one (app, variant) cell of the table.
+fn session_for(
+    app: &str,
+    variant: Variant,
+    width: f64,
+    threads: usize,
+    batch: usize,
+    tune: TuneOpts,
+) -> anyhow::Result<Session> {
+    Model::for_app_scaled(app, variant, width, 42)?
+        .session()
+        .threads(threads)
+        .batch(batch)
+        .tune(tune)
+        .build()
+}
+
 /// Measured heap allocations per frame of a warm, single-context
 /// `run_into` loop. Zero for the planned executor at every thread count:
 /// kernels dispatch on the context's persistent compute pool, so no
 /// per-frame thread spawns show up in the counter.
-fn allocs_per_frame(eng: &Engine, x: &Tensor, frames: usize) -> f64 {
-    let plan = eng.plan();
+fn allocs_per_frame(plan: &ExecutionPlan, x: &Tensor, frames: usize) -> f64 {
     let mut ctx = ExecContext::for_plan(plan);
     let mut outs: Vec<Tensor> =
         plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
@@ -58,8 +72,7 @@ fn allocs_per_frame(eng: &Engine, x: &Tensor, frames: usize) -> f64 {
 
 /// Cold-start cost of a fresh context: pool spawn + arena/scratch
 /// allocation + first frame (first-touch page faults), in ms.
-fn warmup_frame_ms(eng: &Engine, x: &Tensor) -> f64 {
-    let plan = eng.plan();
+fn warmup_frame_ms(plan: &ExecutionPlan, x: &Tensor) -> f64 {
     let t0 = Instant::now();
     let mut ctx = ExecContext::for_plan(plan);
     let mut outs: Vec<Tensor> =
@@ -123,8 +136,6 @@ fn main() -> anyhow::Result<()> {
     );
     let mut json_lines: Vec<Json> = Vec::new();
     for (app, _) in PAPER {
-        let g = build_app(app, width, 42)?;
-        let spec = AppSpec::for_app(app);
         let mut row = Vec::new();
         let mut base = 0.0;
         let mut last = 0.0;
@@ -132,25 +143,25 @@ fn main() -> anyhow::Result<()> {
         let mut apf = 0.0f64;
         let mut warm = 0.0f64;
         for variant in Variant::table1() {
-            let (eng, _) = prepare_variant(&g, variant, &spec, threads)?;
-            let shape = eng.input_shapes()[0].clone();
+            let session = session_for(app, variant, width, threads, 1, TuneOpts::off())?;
+            let shape = session.shapes().inputs[0].clone();
             let x = Tensor::full(&shape, 0.5);
             // Cold start first: fresh context = pool spawn + first frame.
-            let warm_ms = warmup_frame_ms(&eng, &x);
+            let warm_ms = warmup_frame_ms(session.plan(), &x);
             let s = bench_auto_ms(budget, || {
-                let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+                let _ = session.run(std::slice::from_ref(&x)).unwrap();
             });
             // Alloc accounting at the full thread count: the persistent
             // pool keeps the steady state allocation-free even at
             // threads > 1 (the old scoped-spawn executor could not).
-            let variant_apf = allocs_per_frame(&eng, &x, alloc_frames);
+            let variant_apf = allocs_per_frame(session.plan(), &x, alloc_frames);
             if variant == Variant::Unpruned {
                 base = s.mean;
             }
             last = s.mean;
             row.push(ms(s.mean));
             if variant == Variant::PrunedCompiler {
-                peak = eng.memory().peak_bytes;
+                peak = session.memory().peak_bytes;
                 apf = variant_apf;
                 warm = warm_ms;
             }
@@ -160,7 +171,7 @@ fn main() -> anyhow::Result<()> {
             j.insert("threads", threads);
             j.insert("batch", 1usize);
             j.insert("latency", summary_json(&s));
-            j.insert("memory", mem_json(&eng.memory()));
+            j.insert("memory", mem_json(&session.memory()));
             j.insert("warmup_ms", warm_ms);
             j.insert("allocs_per_frame", variant_apf);
             j.insert("tuned", false);
@@ -171,26 +182,27 @@ fn main() -> anyhow::Result<()> {
         // without a single micro-benchmark run.
         let tune_path = std::env::temp_dir()
             .join(format!("prt-dnn-tune-{}-w{}-t{}.json", app, width, threads));
-        let (teng, _) = prepare_variant_tuned(
-            &g,
+        let tuned = session_for(
+            app,
             Variant::PrunedCompiler,
-            &spec,
+            width,
             threads,
-            &TuneOpts::on(&tune_path),
+            1,
+            TuneOpts::on(&tune_path),
         )?;
-        let tx = Tensor::full(&teng.input_shapes()[0], 0.5);
+        let tx = Tensor::full(&tuned.shapes().inputs[0], 0.5);
         let ts = bench_auto_ms(budget, || {
-            let _ = teng.run(std::slice::from_ref(&tx)).unwrap();
+            let _ = tuned.run(std::slice::from_ref(&tx)).unwrap();
         });
         let tuned_speedup = last / ts.mean.max(1e-9);
-        let tstats = teng.plan().tune_stats();
+        let tstats = tuned.plan().tune_stats();
         let mut j = JsonObj::new();
         j.insert("app", app.to_string());
         j.insert("variant", Variant::PrunedCompiler.name());
         j.insert("threads", threads);
         j.insert("batch", 1usize);
         j.insert("latency", summary_json(&ts));
-        j.insert("memory", mem_json(&teng.memory()));
+        j.insert("memory", mem_json(&tuned.memory()));
         j.insert("tuned", true);
         j.insert("tuned_speedup", tuned_speedup);
         j.insert("tune_bench_runs", tstats.bench_runs);
@@ -219,26 +231,18 @@ fn main() -> anyhow::Result<()> {
         &["app", "fps b=1", "fps b=N", "N", "speedup", "allocs/frame b=N"],
     );
     for (app, _) in PAPER {
-        let g = build_app(app, width, 42)?;
-        let spec = AppSpec::for_app(app);
         let mut fps1 = 0.0f64;
         let mut fps_n = 0.0f64;
         let mut apf_n = 0.0f64;
         for &b in &[1usize, batch_n] {
-            let (eng, _) = prepare_variant_batched(
-                &g,
-                Variant::PrunedCompiler,
-                &spec,
-                threads,
-                b,
-                &TuneOpts::off(),
-            )?;
-            let x = Tensor::full(&eng.input_shapes()[0], 0.5);
+            let session =
+                session_for(app, Variant::PrunedCompiler, width, threads, b, TuneOpts::off())?;
+            let x = Tensor::full(&session.shapes().inputs[0], 0.5);
             let s = bench_auto_ms(budget, || {
-                let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+                let _ = session.run(std::slice::from_ref(&x)).unwrap();
             });
             let fps = b as f64 * 1e3 / s.mean.max(1e-9);
-            let apf = allocs_per_frame(&eng, &x, alloc_frames) / b as f64;
+            let apf = allocs_per_frame(session.plan(), &x, alloc_frames) / b as f64;
             if b == 1 {
                 fps1 = fps;
             } else {
@@ -251,7 +255,7 @@ fn main() -> anyhow::Result<()> {
             j.insert("threads", threads);
             j.insert("batch", b);
             j.insert("latency", summary_json(&s));
-            j.insert("memory", mem_json(&eng.memory()));
+            j.insert("memory", mem_json(&session.memory()));
             j.insert("fps", fps);
             j.insert("allocs_per_frame", apf);
             j.insert("tuned", false);

@@ -13,7 +13,4 @@ pub mod builders;
 pub mod variant;
 
 pub use builders::{build_app, build_coloring, build_sr, build_style, build_vgg16};
-pub use variant::{
-    prepare_variant, prepare_variant_batched, prepare_variant_tuned, prune_graph, AppSpec,
-    Variant,
-};
+pub use variant::{prune_graph, AppSpec, Variant};

@@ -2,14 +2,17 @@
 //! configs for the intro's TVM/TFLite comparison).
 //!
 //! A [`Variant`] selects: pruning on/off, the storage format, the reorder
-//! transform, and the DSL pass pipeline. [`prepare_variant`] turns
-//! (app graph, variant) into a ready-to-run [`Engine`].
+//! transform, and the DSL pass pipeline. The front door for turning
+//! (app, variant) into something runnable is
+//! [`session::Model`](crate::session::Model) +
+//! [`session::Session`](crate::session::Session); the historical
+//! `prepare_variant*` free functions remain only as deprecated shims.
 
 use crate::dsl::{Graph, Op};
-use crate::executor::{Engine, ExecConfig, SparseMode};
-use crate::passes::PassManager;
+use crate::executor::Engine;
 use crate::pruning::scheme::{project_scheme, Scheme};
 use crate::pruning::verify::apply_mask;
+use crate::session::SessionError;
 use crate::tuner::TuneOpts;
 use anyhow::Result;
 
@@ -40,6 +43,37 @@ impl Variant {
             Variant::PrunedFusedOnly => "pruning+fusion-only",
             Variant::UnprunedCompiler => "compiler-only",
         }
+    }
+
+    /// Parse a CLI/JSON variant name (the inverse of [`Variant::name`],
+    /// plus the historical aliases). Unknown names fail with the typed
+    /// [`SessionError::UnknownVariant`].
+    pub fn parse(s: &str) -> Result<Variant, SessionError> {
+        Ok(match s {
+            "unpruned" | "dense" => Variant::Unpruned,
+            "pruning" | "pruned" => Variant::Pruned,
+            "pruning+compiler" | "compiler" | "full" => Variant::PrunedCompiler,
+            "pruning+fusion-only" => Variant::PrunedFusedOnly,
+            "compiler-only" => Variant::UnprunedCompiler,
+            other => return Err(SessionError::UnknownVariant(other.to_string())),
+        })
+    }
+
+    /// Whether this variant prunes the weights (all `Pruned*` rows).
+    pub fn prunes(self) -> bool {
+        matches!(
+            self,
+            Variant::Pruned | Variant::PrunedCompiler | Variant::PrunedFusedOnly
+        )
+    }
+
+    /// Whether this variant runs the DSL pass pipeline (the compiler
+    /// rows and ablations).
+    pub fn compiles(self) -> bool {
+        matches!(
+            self,
+            Variant::PrunedCompiler | Variant::PrunedFusedOnly | Variant::UnprunedCompiler
+        )
     }
 
     /// The three rows of the paper's Table 1, in order.
@@ -121,21 +155,24 @@ pub fn prune_graph(g: &mut Graph, spec: &AppSpec) -> Vec<(String, Scheme)> {
     schemes
 }
 
-/// Compile an engine for (graph, variant). The graph is cloned; the caller
-/// keeps the original for other variants.
+/// Compile an engine for (graph, variant).
+#[deprecated(
+    note = "use session::Model::from_graph(base, spec, variant).session().threads(n).build()"
+)]
 pub fn prepare_variant(
     base: &Graph,
     variant: Variant,
     spec: &AppSpec,
     threads: usize,
 ) -> Result<(Engine, Vec<(String, Scheme)>)> {
-    prepare_variant_tuned(base, variant, spec, threads, &TuneOpts::off())
+    // (Deprecated items may call each other without tripping the lint.)
+    prepare_variant_batched(base, variant, spec, threads, 1, &TuneOpts::off())
 }
 
-/// [`prepare_variant`] with schedule auto-tuning: the planner searches
-/// per-step kernel schedules (cached on disk via `tune.cache_path`) for
-/// every conv of the chosen variant. `TuneOpts::off()` reproduces the
-/// untuned engine exactly.
+/// [`prepare_variant`] with schedule auto-tuning.
+#[deprecated(
+    note = "use session::Model::from_graph(..).session().tune(opts).build()"
+)]
 pub fn prepare_variant_tuned(
     base: &Graph,
     variant: Variant,
@@ -146,10 +183,12 @@ pub fn prepare_variant_tuned(
     prepare_variant_batched(base, variant, spec, threads, 1, tune)
 }
 
-/// [`prepare_variant_tuned`] with an explicit batch size: the engine's
-/// plan fuses `batch` frames per dispatch (arena/scratch ranges scale by
-/// `batch`; batched runs are bitwise-identical to sequential single-frame
-/// runs — see `rust/tests/batch_equivalence.rs`).
+/// [`prepare_variant_tuned`] with an explicit batch size. Thin shim over
+/// the [`session`](crate::session) front door, kept only for the
+/// old-vs-new equivalence proof in `rust/tests/session_api.rs`.
+#[deprecated(
+    note = "use session::Model::from_graph(..).session().batch(n).tune(opts).build()"
+)]
 pub fn prepare_variant_batched(
     base: &Graph,
     variant: Variant,
@@ -158,65 +197,39 @@ pub fn prepare_variant_batched(
     batch: usize,
     tune: &TuneOpts,
 ) -> Result<(Engine, Vec<(String, Scheme)>)> {
-    let mut g = base.clone();
-    let mut schemes = Vec::new();
-    match variant {
-        Variant::Unpruned => {
-            // No pruning, no passes.
-            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone()).with_batch(batch);
-            let eng = Engine::with_config(&g, &cfg)?;
-            Ok((eng, schemes))
-        }
-        Variant::Pruned => {
-            schemes = prune_graph(&mut g, spec);
-            // No graph passes; CSR storage with indexed SpMM.
-            let cfg = ExecConfig {
-                sparse: SparseMode::Csr,
-                threads,
-                schemes: schemes.clone(),
-                tune: tune.clone(),
-                batch,
-            };
-            let eng = Engine::with_config(&g, &cfg)?;
-            Ok((eng, schemes))
-        }
-        Variant::PrunedCompiler => {
-            schemes = prune_graph(&mut g, spec);
-            PassManager::default().run_fixpoint(&mut g, 4);
-            let cfg = ExecConfig::compact(threads, schemes.clone())
-                .with_tuning(tune.clone())
-                .with_batch(batch);
-            let eng = Engine::with_config(&g, &cfg)?;
-            Ok((eng, schemes))
-        }
-        Variant::PrunedFusedOnly => {
-            schemes = prune_graph(&mut g, spec);
-            PassManager::default().run_fixpoint(&mut g, 4);
-            let cfg = ExecConfig {
-                sparse: SparseMode::Csr,
-                threads,
-                schemes: schemes.clone(),
-                tune: tune.clone(),
-                batch,
-            };
-            let eng = Engine::with_config(&g, &cfg)?;
-            Ok((eng, schemes))
-        }
-        Variant::UnprunedCompiler => {
-            PassManager::default().run_fixpoint(&mut g, 4);
-            let cfg = ExecConfig::dense(threads).with_tuning(tune.clone()).with_batch(batch);
-            let eng = Engine::with_config(&g, &cfg)?;
-            Ok((eng, schemes))
-        }
-    }
+    let model = crate::session::Model::from_graph(base, spec, variant);
+    let cfg = crate::executor::ExecConfig {
+        sparse: crate::session::Format::for_variant(variant).sparse_mode(),
+        threads,
+        schemes: model.schemes().to_vec(),
+        tune: tune.clone(),
+        batch,
+    };
+    let eng = Engine::with_config(model.graph(), &cfg)?;
+    Ok((eng, model.schemes().to_vec()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::apps::builders::{build_coloring, build_style};
+    use crate::passes::PassManager;
     use crate::pruning::verify::verify_structure;
+    use crate::session::Model;
     use crate::tensor::Tensor;
+
+    fn session_for(
+        base: &Graph,
+        app: &str,
+        variant: Variant,
+        threads: usize,
+    ) -> crate::session::Session {
+        Model::from_graph(base, &AppSpec::for_app(app), variant)
+            .session()
+            .threads(threads)
+            .build()
+            .unwrap()
+    }
 
     #[test]
     fn variants_produce_close_outputs() {
@@ -224,12 +237,11 @@ mod tests {
         // storage/execution; Pruned vs PrunedCompiler must agree closely
         // (fusion reorders float ops slightly).
         let base = build_style(32, 0.25, 5);
-        let spec = AppSpec::for_app("style");
         let x = Tensor::full(&[1, 3, 32, 32], 0.4);
-        let (e1, _) = prepare_variant(&base, Variant::Pruned, &spec, 2).unwrap();
-        let (e2, _) = prepare_variant(&base, Variant::PrunedCompiler, &spec, 2).unwrap();
-        let o1 = e1.run(&[x.clone()]).unwrap();
-        let o2 = e2.run(&[x]).unwrap();
+        let s1 = session_for(&base, "style", Variant::Pruned, 2);
+        let s2 = session_for(&base, "style", Variant::PrunedCompiler, 2);
+        let o1 = s1.run(&[x.clone()]).unwrap();
+        let o2 = s2.run(&[x]).unwrap();
         let err = o1[0].max_abs_diff(&o2[0]);
         assert!(err < 1e-3, "err={}", err);
     }
@@ -237,15 +249,13 @@ mod tests {
     #[test]
     fn pruning_reduces_weight_bytes() {
         let base = build_coloring(32, 0.5, 6);
-        let spec = AppSpec::for_app("coloring");
-        let (dense, _) = prepare_variant(&base, Variant::Unpruned, &spec, 1).unwrap();
-        let (compact, _) =
-            prepare_variant(&base, Variant::PrunedCompiler, &spec, 1).unwrap();
+        let dense = session_for(&base, "coloring", Variant::Unpruned, 1);
+        let compact = session_for(&base, "coloring", Variant::PrunedCompiler, 1);
         assert!(
-            compact.weight_bytes < dense.weight_bytes / 2,
+            compact.weight_bytes() < dense.weight_bytes() / 2,
             "compact={} dense={}",
-            compact.weight_bytes,
-            dense.weight_bytes
+            compact.weight_bytes(),
+            dense.weight_bytes()
         );
     }
 
@@ -281,5 +291,24 @@ mod tests {
         let before = g.len();
         PassManager::default().run_fixpoint(&mut g, 4);
         assert!(g.len() < before, "passes should remove BN/Act nodes");
+    }
+
+    #[test]
+    fn parse_roundtrips_names_and_aliases() {
+        for v in [
+            Variant::Unpruned,
+            Variant::Pruned,
+            Variant::PrunedCompiler,
+            Variant::PrunedFusedOnly,
+            Variant::UnprunedCompiler,
+        ] {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+        }
+        assert_eq!(Variant::parse("full").unwrap(), Variant::PrunedCompiler);
+        assert_eq!(Variant::parse("dense").unwrap(), Variant::Unpruned);
+        assert_eq!(
+            Variant::parse("bogus"),
+            Err(SessionError::UnknownVariant("bogus".into()))
+        );
     }
 }

@@ -7,7 +7,14 @@
 //! inference, and the service reports fps + latency percentiles and drops
 //! frames under backpressure (a real-time system must shed load rather
 //! than queue unboundedly).
+//!
+//! Serving is driven through the front door:
+//! [`Session::serve`](crate::session::Session::serve) with
+//! [`ServeOpts`](crate::session::ServeOpts) — the coordinator's `Server`
+//! and `ServeConfig` are the crate-internal implementation; only the
+//! [`ServeReport`] metrics type is public.
 
-pub mod server;
+pub(crate) mod server;
 
-pub use server::{ServeConfig, ServeReport, Server};
+pub use server::ServeReport;
+pub(crate) use server::{ServeConfig, Server};

@@ -6,14 +6,20 @@
 //! thread count and workers never contend on a shared pool (the arena and
 //! pool are sized once from the engine's plan).
 //!
-//! With [`ServeConfig::batch`] > 1 (and an engine compiled at the same
-//! [`ExecConfig::batch`](crate::executor::ExecConfig)), workers run in
-//! **batching mode**: each dispatch coalesces up to `batch` queued frames
-//! into the plan's packed N-major input (copying into a preallocated
-//! tensor — still allocation-free) and runs them in one batched
-//! execution. A partial batch is padded by repeating the last real frame;
-//! padded slots are computed but never reported. The achieved coalescing
-//! is surfaced as [`ServeReport::frames_per_dispatch`].
+//! With [`ServeConfig::batch`] > 1 (set by
+//! [`Session::serve`](crate::session::Session::serve) from the session's
+//! compiled batch), workers run in **batching mode**: each dispatch
+//! coalesces up to `batch` queued frames into the plan's packed N-major
+//! input (copying into a preallocated tensor — still allocation-free) and
+//! runs them in one batched execution. With
+//! [`ServeConfig::max_wait`] > 0 the worker *waits with a deadline*: after
+//! its first (blocking) frame it sleeps on the queue for up to `max_wait`
+//! for the rest of the batch to arrive, trading a bounded latency hit for
+//! fuller dispatches; with `max_wait == 0` it drains opportunistically
+//! (whatever is already queued). A partial batch is padded by repeating
+//! the last real frame; padded slots are computed but never reported. The
+//! achieved coalescing is surfaced as
+//! [`ServeReport::frames_per_dispatch`].
 
 use crate::executor::{Engine, ExecContext};
 use crate::tensor::Tensor;
@@ -25,9 +31,11 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Serving configuration.
+/// Serving configuration (crate-internal: built by
+/// [`Session::serve`](crate::session::Session::serve) from
+/// [`ServeOpts`](crate::session::ServeOpts) + the session's batch).
 #[derive(Debug, Clone)]
-pub struct ServeConfig {
+pub(crate) struct ServeConfig {
     /// Source frame rate to simulate (frames arrive on this cadence).
     pub source_fps: f64,
     /// Bounded queue depth; frames arriving beyond this are dropped
@@ -43,11 +51,22 @@ pub struct ServeConfig {
     /// ([`crate::executor::ExecutionPlan::batch`]); [`Server::serve`]
     /// rejects a mismatch.
     pub batch: usize,
+    /// Adaptive-batching deadline: how long a batching worker waits for
+    /// its batch to fill after the first frame before padding and
+    /// dispatching. Zero = opportunistic drain only.
+    pub max_wait: Duration,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { source_fps: 30.0, queue_depth: 4, workers: 1, frames: 120, batch: 1 }
+        ServeConfig {
+            source_fps: 30.0,
+            queue_depth: 4,
+            workers: 1,
+            frames: 120,
+            batch: 1,
+            max_wait: Duration::ZERO,
+        }
     }
 }
 
@@ -77,6 +96,10 @@ pub struct ServeReport {
     /// coalescing; equals 1.0 in single-frame mode and approaches
     /// `batch` under sustained load.
     pub frames_per_dispatch: f64,
+    /// The adaptive-batching deadline this run served under, in ms
+    /// ([`ServeOpts::max_wait`](crate::session::ServeOpts::max_wait);
+    /// 0 = opportunistic drain).
+    pub max_wait_ms: f64,
 }
 
 impl ServeReport {
@@ -127,6 +150,7 @@ impl ServeReport {
         o.insert("batch", self.batch);
         o.insert("dispatches", self.dispatches);
         o.insert("frames_per_dispatch", self.frames_per_dispatch);
+        o.insert("max_wait_ms", self.max_wait_ms);
         Json::Obj(o)
     }
 }
@@ -188,14 +212,37 @@ impl FrameQueue {
         self.state.lock().unwrap().frames.pop_front()
     }
 
+    /// Deadline pop (adaptive batching): block for a frame until
+    /// `deadline`, then give up. Returns `None` when the deadline passes
+    /// with an empty queue or the queue closes — the worker then pads and
+    /// dispatches what it has.
+    fn pop_deadline(&self, deadline: Instant) -> Option<(usize, Tensor, Instant)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.frames.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
     fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
     }
 }
 
-/// The serving coordinator.
-pub struct Server<'e> {
+/// The serving coordinator (crate-internal; driven by
+/// [`Session::serve`](crate::session::Session::serve)).
+pub(crate) struct Server<'e> {
     engine: &'e Engine,
     cfg: ServeConfig,
 }
@@ -270,6 +317,7 @@ impl<'e> Server<'e> {
                 let inf = &inference;
                 let done = &processed;
                 let disp = &dispatches;
+                let max_wait = self.cfg.max_wait;
                 scope.spawn(move || {
                     let plan = eng.plan();
                     let mut ctx = ExecContext::for_plan(plan);
@@ -294,8 +342,10 @@ impl<'e> Server<'e> {
                     }
                     // Batching mode: coalesce up to `nb` queued frames per
                     // dispatch into the preallocated packed input. The
-                    // first frame blocks; the rest are taken only if
-                    // already queued, and a partial batch is padded by
+                    // first frame blocks; with `max_wait == 0` the rest
+                    // are taken only if already queued, with
+                    // `max_wait > 0` the worker waits up to the deadline
+                    // for the batch to fill. A partial batch is padded by
                     // repeating the last real frame (padded slots are
                     // computed but never reported).
                     let mut packed: Vec<Tensor> =
@@ -310,8 +360,14 @@ impl<'e> Server<'e> {
                         pending.clear();
                         packed[0].data_mut()[..fe].copy_from_slice(frame.data());
                         pending.push(enqueued);
+                        let deadline = Instant::now() + max_wait;
                         while pending.len() < nb {
-                            match q.try_pop() {
+                            let next = if max_wait.is_zero() {
+                                q.try_pop()
+                            } else {
+                                q.pop_deadline(deadline)
+                            };
+                            match next {
                                 Some((_id2, f2, e2)) if f2.shape() == fshape.as_slice() => {
                                     let s = pending.len();
                                     packed[0].data_mut()[s * fe..(s + 1) * fe]
@@ -371,6 +427,7 @@ impl<'e> Server<'e> {
             batch: nb,
             dispatches,
             frames_per_dispatch: processed as f64 / dispatches.max(1) as f64,
+            max_wait_ms: self.cfg.max_wait.as_secs_f64() * 1e3,
         })
     }
 }
@@ -389,7 +446,13 @@ mod tests {
     #[test]
     fn serves_all_frames_when_fast_enough() {
         let eng = tiny_engine();
-        let cfg = ServeConfig { source_fps: 200.0, queue_depth: 8, workers: 2, frames: 30, batch: 1 };
+        let cfg = ServeConfig {
+            source_fps: 200.0,
+            queue_depth: 8,
+            workers: 2,
+            frames: 30,
+            ..ServeConfig::default()
+        };
         let report = Server::new(&eng, cfg)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
             .unwrap();
@@ -410,7 +473,13 @@ mod tests {
     fn backpressure_drops_under_overload() {
         let eng = tiny_engine();
         // Absurd source rate + tiny queue: must drop, not explode.
-        let cfg = ServeConfig { source_fps: 5000.0, queue_depth: 2, workers: 1, frames: 60, batch: 1 };
+        let cfg = ServeConfig {
+            source_fps: 5000.0,
+            queue_depth: 2,
+            workers: 1,
+            frames: 60,
+            ..ServeConfig::default()
+        };
         let report = Server::new(&eng, cfg)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
             .unwrap();
@@ -432,7 +501,14 @@ mod tests {
         )
         .unwrap();
         assert_eq!(eng.batch(), 2);
-        let cfg = ServeConfig { source_fps: 400.0, queue_depth: 8, workers: 1, frames: 24, batch: 2 };
+        let cfg = ServeConfig {
+            source_fps: 400.0,
+            queue_depth: 8,
+            workers: 1,
+            frames: 24,
+            batch: 2,
+            ..ServeConfig::default()
+        };
         let report = Server::new(&eng, cfg)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
             .unwrap();
@@ -447,7 +523,9 @@ mod tests {
         assert!(j.get("frames_per_dispatch").as_f64().unwrap() >= 1.0);
 
         // A batch mismatch between the serve config and the engine's plan
-        // is rejected up front.
+        // is rejected up front. (The session front door makes this state
+        // unrepresentable — Session::serve derives the batch from the
+        // plan — but the internal invariant stays guarded.)
         let bad = ServeConfig { batch: 3, ..ServeConfig::default() };
         assert!(Server::new(&eng, bad)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
@@ -455,9 +533,50 @@ mod tests {
     }
 
     #[test]
+    fn deadline_batching_fills_dispatches() {
+        // Source cadence 5 ms/frame, worker much faster: opportunistic
+        // drain would dispatch nearly every frame alone (the queue is
+        // empty when the worker comes back), but a 1 s deadline lets each
+        // dispatch wait for its second frame — so the achieved coalescing
+        // must clearly beat single-frame dispatching.
+        let g = build_style(32, 0.25, 13);
+        let eng = Engine::with_config(
+            &g,
+            &crate::executor::ExecConfig::dense(2).with_batch(2),
+        )
+        .unwrap();
+        let cfg = ServeConfig {
+            source_fps: 200.0,
+            queue_depth: 8,
+            workers: 1,
+            frames: 24,
+            batch: 2,
+            max_wait: Duration::from_secs(1),
+        };
+        let report = Server::new(&eng, cfg)
+            .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
+            .unwrap();
+        assert_eq!(report.processed + report.dropped, 24);
+        assert!(
+            report.frames_per_dispatch > 1.5,
+            "deadline batching should coalesce: frames/dispatch = {}",
+            report.frames_per_dispatch
+        );
+        assert_eq!(report.max_wait_ms, 1000.0);
+        let j = report.to_json();
+        assert_eq!(j.get("max_wait_ms").as_f64(), Some(1000.0));
+    }
+
+    #[test]
     fn realtime_judgement() {
         let eng = tiny_engine();
-        let cfg = ServeConfig { source_fps: 5.0, queue_depth: 4, workers: 2, frames: 8, batch: 1 };
+        let cfg = ServeConfig {
+            source_fps: 5.0,
+            queue_depth: 4,
+            workers: 2,
+            frames: 8,
+            ..ServeConfig::default()
+        };
         let report = Server::new(&eng, cfg)
             .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
             .unwrap();

@@ -279,6 +279,7 @@ impl ExecContext {
                         *pad,
                         *act,
                         pool,
+                        &st.sched,
                         val_mut!(out_slot),
                     );
                 }

@@ -383,14 +383,17 @@ impl ExecutionPlan {
         self.tune_stats
     }
 
-    /// Per-step schedules of the tuner-searched step kinds (conv and
-    /// fully-connected) in JSON form (the plan-side serialization of the
-    /// tuning outcome; the on-disk [`crate::tuner::TuneCache`] is the
-    /// cross-run form).
+    /// Per-step schedules of the tuner-searched step kinds (conv,
+    /// depthwise conv and fully-connected) in JSON form (the plan-side
+    /// serialization of the tuning outcome; the on-disk
+    /// [`crate::tuner::TuneCache`] is the cross-run form).
     pub fn schedules_json(&self) -> Json {
         let mut o = JsonObj::new();
         for st in &self.steps {
-            if matches!(st.step, Step::Conv { .. } | Step::Dense { .. }) {
+            if matches!(
+                st.step,
+                Step::Conv { .. } | Step::DwConv { .. } | Step::Dense { .. }
+            ) {
                 o.insert(st.name.clone(), st.sched.to_json());
             }
         }
@@ -622,12 +625,61 @@ impl Planner {
                     }
                     Step::Conv { exec, geom, pad_mode: *pad_mode, bias, act: *fused_act }
                 }
-                Op::DepthwiseConv2d { stride, pad, fused_act, .. } => {
+                Op::DepthwiseConv2d { c, kh, stride, pad, fused_act, .. } => {
                     let w = g
                         .param(&format!("{}.weight", node.name))
                         .context("missing dw weight")?
                         .clone();
                     weight_bytes += w.len() * 4;
+                    // Depthwise steps are tuner-searched too (ROADMAP open
+                    // item): the kernel honors the schedule's split knob
+                    // (plane-chunk vs row-chunk pool partitioning), which
+                    // is the whole candidate space — see
+                    // `Tuner::candidate_space` for op "dw". Every
+                    // candidate is bitwise-identical by the kernel's
+                    // shared-row-function construction.
+                    if tuner.enabled() {
+                        let in_shape = &shapes[node.inputs[0]];
+                        let (h, win) = (in_shape[2], in_shape[3]);
+                        let (oh, ow) =
+                            crate::dsl::shape::conv_out_hw(h, win, *kh, *stride, *pad);
+                        let geom_tag = if batch > 1 {
+                            format!("k{}s{}p{}b{}", kh, stride, pad, batch)
+                        } else {
+                            format!("k{}s{}p{}", kh, stride, pad)
+                        };
+                        let req = TuneRequest {
+                            op: "dw",
+                            variant: "dense",
+                            m: *c,
+                            k: kh * kh,
+                            n: oh * ow,
+                            geom: geom_tag,
+                            direct_ok: false,
+                            gemm_backed: false,
+                        };
+                        let (cc, hh, ww, st, pd, act) =
+                            (*c, h, win, *stride, *pad, *fused_act);
+                        let wref = &w;
+                        type DwBufs = (Vec<f32>, Vec<f32>);
+                        let mut bufs: Option<DwBufs> = None;
+                        step_sched = tuner.tune(&req, &mut |cand, pool| {
+                            let (bx, bout) = bufs.get_or_insert_with(|| {
+                                (
+                                    (0..batch * cc * hh * ww)
+                                        .map(|i| ((i % 31) as f32) * 0.06 - 0.9)
+                                        .collect(),
+                                    vec![0.0f32; batch * cc * oh * ow],
+                                )
+                            });
+                            let t0 = std::time::Instant::now();
+                            crate::kernels::conv::dwconv2d(
+                                bx, batch, cc, hh, ww, wref, None, st, pd, act, pool, cand,
+                                bout,
+                            );
+                            t0.elapsed().as_secs_f64()
+                        });
+                    }
                     Step::DwConv { w, bias, stride: *stride, pad: *pad, act: *fused_act }
                 }
                 Op::Dense { out_f, in_f, fused_act } => {

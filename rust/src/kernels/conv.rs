@@ -354,8 +354,51 @@ pub fn conv2d_pattern(
     )
 }
 
+/// One depthwise output row: `oy` of a single channel plane. Shared by
+/// both partitionings of [`dwconv2d`] so the per-element fp expression is
+/// identical regardless of the schedule's split — the bitwise invariant.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn dw_row(
+    plane: &[f32],
+    ker: &[f32],
+    k: usize,
+    h: usize,
+    win: usize,
+    ow: usize,
+    stride: usize,
+    pad: usize,
+    oy: usize,
+    out_row: &mut [f32],
+) {
+    for (ox, o) in out_row.iter_mut().enumerate().take(ow) {
+        let mut acc = 0.0f32;
+        for dy in 0..k {
+            let iy = (oy * stride + dy) as isize - pad as isize;
+            if iy < 0 || iy >= h as isize {
+                continue;
+            }
+            for dx in 0..k {
+                let ix = (ox * stride + dx) as isize - pad as isize;
+                if ix < 0 || ix >= win as isize {
+                    continue;
+                }
+                acc += ker[dy * k + dx] * plane[iy as usize * win + ix as usize];
+            }
+        }
+        *o = acc;
+    }
+}
+
 /// Direct depthwise conv (no im2col — each channel convolves independently).
 /// `x` is `n×c×h×win` NCHW data; `out` must be `n×c×oh×ow`.
+///
+/// The schedule's `split` knob picks the pool partitioning granularity —
+/// `Rows` = per-`(n·c)`-plane chunks (the historical default), `Cols` =
+/// per-output-row chunks (finer grain, fills the pool when `n·c` is small)
+/// — and is the knob the [`tuner`](crate::tuner) searches for depthwise
+/// steps. Both partitionings compute every output element with the same
+/// fp expression on exactly one thread, so results are bitwise-identical.
 #[allow(clippy::too_many_arguments)]
 pub fn dwconv2d(
     x: &[f32],
@@ -369,6 +412,7 @@ pub fn dwconv2d(
     pad: usize,
     act: Activation,
     pool: &ComputePool,
+    sched: &Schedule,
     out: &mut [f32],
 ) {
     let k = w.dim(2);
@@ -376,39 +420,72 @@ pub fn dwconv2d(
     debug_assert_eq!(x.len(), n * c * h * win);
     debug_assert_eq!(out.len(), n * c * oh * ow);
     let out_ptr = SendPtr::new(out.as_mut_ptr());
-    let total = n * c;
-    pool.parallel_chunks(total, |cs, ce, _| {
-        // SAFETY: each chunk materialises only its own disjoint
-        // channel-plane range of `out` (planes cs..ce are contiguous).
-        let out_all = unsafe {
-            std::slice::from_raw_parts_mut(out_ptr.get().add(cs * oh * ow), (ce - cs) * oh * ow)
-        };
-        for sc in cs..ce {
-            let (s, ch) = (sc / c, sc % c);
-            let plane = &x[(s * c + ch) * h * win..(s * c + ch + 1) * h * win];
-            let ker = &w.data()[ch * k * k..(ch + 1) * k * k];
-            let obase = (sc - cs) * oh * ow;
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = 0.0f32;
-                    for dy in 0..k {
-                        let iy = (oy * stride + dy) as isize - pad as isize;
-                        if iy < 0 || iy >= h as isize {
-                            continue;
-                        }
-                        for dx in 0..k {
-                            let ix = (ox * stride + dx) as isize - pad as isize;
-                            if ix < 0 || ix >= win as isize {
-                                continue;
-                            }
-                            acc += ker[dy * k + dx] * plane[iy as usize * win + ix as usize];
-                        }
+    match sched.split {
+        crate::tuner::SplitAxis::Rows => {
+            let total = n * c;
+            pool.parallel_chunks(total, |cs, ce, _| {
+                // SAFETY: each chunk materialises only its own disjoint
+                // channel-plane range of `out` (planes cs..ce are
+                // contiguous).
+                let out_all = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        out_ptr.get().add(cs * oh * ow),
+                        (ce - cs) * oh * ow,
+                    )
+                };
+                for sc in cs..ce {
+                    let (s, ch) = (sc / c, sc % c);
+                    let plane = &x[(s * c + ch) * h * win..(s * c + ch + 1) * h * win];
+                    let ker = &w.data()[ch * k * k..(ch + 1) * k * k];
+                    let obase = (sc - cs) * oh * ow;
+                    for oy in 0..oh {
+                        dw_row(
+                            plane,
+                            ker,
+                            k,
+                            h,
+                            win,
+                            ow,
+                            stride,
+                            pad,
+                            oy,
+                            &mut out_all[obase + oy * ow..obase + (oy + 1) * ow],
+                        );
                     }
-                    out_all[obase + oy * ow + ox] = acc;
                 }
-            }
+            });
         }
-    });
+        crate::tuner::SplitAxis::Cols => {
+            // Finer grain: one work item per output row across all planes.
+            let total = n * c * oh;
+            pool.parallel_chunks(total, |rs, re, _| {
+                // SAFETY: rows rs..re are a contiguous disjoint range of
+                // `out` (row r starts at r * ow).
+                let out_all = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.get().add(rs * ow), (re - rs) * ow)
+                };
+                for r in rs..re {
+                    let (sc, oy) = (r / oh, r % oh);
+                    let (s, ch) = (sc / c, sc % c);
+                    let plane = &x[(s * c + ch) * h * win..(s * c + ch + 1) * h * win];
+                    let ker = &w.data()[ch * k * k..(ch + 1) * k * k];
+                    let obase = (r - rs) * ow;
+                    dw_row(
+                        plane,
+                        ker,
+                        k,
+                        h,
+                        win,
+                        ow,
+                        stride,
+                        pad,
+                        oy,
+                        &mut out_all[obase..obase + ow],
+                    );
+                }
+            });
+        }
+    }
     bias_act_inplace(out, bias, c, oh * ow, act, pool);
 }
 
@@ -612,7 +689,7 @@ mod tests {
         let mut got = Tensor::zeros(&[1, c, 9, 9]);
         dwconv2d(
             x.data(), 1, c, 9, 9, &w, None, 1, 1, Activation::Identity,
-            &ComputePool::new(2), got.data_mut(),
+            &ComputePool::new(2), &Schedule::default(), got.data_mut(),
         );
         // Reference: per-channel 1-in-1-out conv.
         for ch in 0..c {
@@ -626,6 +703,39 @@ mod tests {
             let got_c = &got.data()[ch * 81..(ch + 1) * 81];
             for (a, b) in got_c.iter().zip(want.data().iter()) {
                 assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_split_schedules_are_bitwise_identical() {
+        // The tuner's depthwise knob: plane-chunk (Rows) vs row-chunk
+        // (Cols) partitioning must never move a bit, at any pool size.
+        let mut rng = Rng::new(96);
+        let (n, c, h) = (2, 5, 11);
+        let x = rand_input(&mut rng, n, c, h, h);
+        let w = Tensor::randn(&[c, 1, 3, 3], &mut rng);
+        let bias: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+        let mut want: Option<Tensor> = None;
+        for threads in [1usize, 4] {
+            let pool = ComputePool::new(threads);
+            for split in [crate::tuner::SplitAxis::Rows, crate::tuner::SplitAxis::Cols] {
+                let sched = Schedule { split, ..Schedule::default() };
+                let mut got = Tensor::zeros(&[n, c, h, h]);
+                dwconv2d(
+                    x.data(), n, c, h, h, &w, Some(&bias), 1, 1, Activation::Relu,
+                    &pool, &sched, got.data_mut(),
+                );
+                match &want {
+                    None => want = Some(got),
+                    Some(r) => assert_eq!(
+                        r.data(),
+                        got.data(),
+                        "dw split {:?} at {} threads moved bits",
+                        split,
+                        threads
+                    ),
+                }
             }
         }
     }

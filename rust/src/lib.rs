@@ -12,7 +12,9 @@
 //!   ([`reorder`]), a multi-threaded native executor ([`executor`] +
 //!   [`kernels`]), a PJRT runtime for AOT-compiled dense baselines
 //!   ([`runtime`]), a frame-stream serving coordinator ([`coordinator`]) and a
-//!   mobile-GPU analytical cost model ([`perfmodel`]).
+//!   mobile-GPU analytical cost model ([`perfmodel`]) — all fronted by the
+//!   builder-first [`session`] API (`Model::for_app(..).session()
+//!   .threads(n).batch(n).build()` → run / serve).
 //! * **Layer 2 (python/compile)** — the three demo DNNs (style transfer,
 //!   coloring, super resolution) in JAX, plus ADMM structured pruning;
 //!   lowered once to HLO text artifacts.
@@ -40,6 +42,7 @@ pub mod runtime;
 pub mod perfmodel;
 pub mod coordinator;
 pub mod apps;
+pub mod session;
 pub mod image;
 pub mod bench;
 

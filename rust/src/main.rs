@@ -5,7 +5,7 @@
 //! prt-dnn compile --app style [--width 0.5]     # run compiler passes, report
 //! prt-dnn run --app sr --variant pruning+compiler [--threads 4] [--batch 4]
 //! prt-dnn run --app sr --tune [--tune-cache .tune-cache.json]
-//! prt-dnn serve --app coloring --fps 30 --frames 120 [--tune] [--batch 4]
+//! prt-dnn serve --app coloring --fps 30 --frames 120 [--tune] [--batch 4] [--max-wait-ms 5]
 //! prt-dnn model --app style                     # modeled Adreno-640 ms/variant
 //! prt-dnn artifacts [--dir artifacts]           # list + smoke-run artifacts
 //! ```
@@ -15,19 +15,23 @@
 //! (default `.tune-cache.json`) so later runs plan without benchmarking.
 //! `--batch N` fuses N frames per dispatch (see `docs/ARCHITECTURE.md`
 //! §Batching): `run` then reports per-dispatch and per-frame time, and
-//! `serve` coalesces up to N queued frames per worker dispatch.
+//! `serve` coalesces up to N queued frames per worker dispatch
+//! (`--max-wait-ms M` lets a worker wait up to M ms for a full batch
+//! before padding — adaptive batching).
+//!
+//! Every command drives the `session` front door: `Model::for_app` →
+//! `.session().threads(..).batch(..).tune(..).build()` → run / serve.
 
 use anyhow::{bail, Context, Result};
-use prt_dnn::apps::{build_app, prepare_variant_batched, AppSpec, Variant};
+use prt_dnn::apps::{build_app, AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
-use prt_dnn::coordinator::{ServeConfig, Server};
 use prt_dnn::dsl::Graph;
-use prt_dnn::executor::Engine;
 use prt_dnn::image::synth::FrameStream;
 use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
 use prt_dnn::pruning::graph_sparsity_report;
 use prt_dnn::runtime::{Manifest, PjrtModel};
+use prt_dnn::session::{Model, ServeOpts, Session};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::cli::Args;
@@ -73,25 +77,14 @@ fn tune_opts(args: &Args) -> TuneOpts {
     }
 }
 
-fn print_tune_stats(eng: &Engine) {
-    if eng.plan().tuned() {
-        let st = eng.plan().tune_stats();
+fn print_tune_stats(session: &Session) {
+    if session.plan().tuned() {
+        let st = session.plan().tune_stats();
         println!(
             "tuner: {} cache hits, {} misses, {} micro-benchmark runs",
             st.cache_hits, st.cache_misses, st.bench_runs
         );
     }
-}
-
-fn parse_variant(s: &str) -> Result<Variant> {
-    Ok(match s {
-        "unpruned" | "dense" => Variant::Unpruned,
-        "pruning" | "pruned" => Variant::Pruned,
-        "pruning+compiler" | "compiler" | "full" => Variant::PrunedCompiler,
-        "pruning+fusion-only" => Variant::PrunedFusedOnly,
-        "compiler-only" => Variant::UnprunedCompiler,
-        other => bail!("unknown variant '{}'", other),
-    })
 }
 
 fn cmd_apps(args: &Args) -> Result<()> {
@@ -101,9 +94,10 @@ fn cmd_apps(args: &Args) -> Result<()> {
         &["app", "input", "params", "MACs (M)", "nodes"],
     );
     for app in APPS {
-        let g = build_app(app, width, 42)?;
-        let eng = Engine::new(&g, 1)?;
-        let input = format!("{:?}", eng.input_shapes()[0]);
+        let model = Model::for_app_scaled(app, Variant::Unpruned, width, 42)?;
+        let session = model.session().threads(1).build()?;
+        let g = model.graph();
+        let input = format!("{:?}", session.shapes().inputs[0]);
         t.row(&[
             app.to_string(),
             input,
@@ -167,18 +161,20 @@ fn cmd_run(args: &Args) -> Result<()> {
     let width = args.get_f64("width", 1.0);
     let threads = args.get_usize("threads", prt_dnn::util::num_threads());
     let batch = args.get_usize("batch", 1).max(1);
-    let variant = parse_variant(args.get_or("variant", "pruning+compiler"))?;
-    let g = build_app(app, width, 42)?;
-    let spec = AppSpec::for_app(app);
-    let (eng, _) =
-        prepare_variant_batched(&g, variant, &spec, threads, batch, &tune_opts(args))?;
-    print_tune_stats(&eng);
-    let input_shape = eng.input_shapes()[0].clone();
+    let variant = Variant::parse(args.get_or("variant", "pruning+compiler"))?;
+    let session = Model::for_app_scaled(app, variant, width, 42)?
+        .session()
+        .threads(threads)
+        .batch(batch)
+        .tune(tune_opts(args))
+        .build()?;
+    print_tune_stats(&session);
+    let input_shape = session.shapes().inputs[0].clone();
     let x = Tensor::full(&input_shape, 0.5);
     let s = bench_auto_ms(800.0, || {
-        let _ = eng.run(std::slice::from_ref(&x)).unwrap();
+        let _ = session.run(std::slice::from_ref(&x)).unwrap();
     });
-    let mem = eng.memory();
+    let mem = session.memory();
     println!(
         "{} [{}] threads={} batch={} input={:?}: mean {} ms/dispatch = {} ms/frame \
          ({:.1} frames/s; p50 {}, p99 {}; n={}) | peak {} (weights {} + arena/scratch {})",
@@ -205,25 +201,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let width = args.get_f64("width", 1.0);
     let threads = args.get_usize("threads", prt_dnn::util::num_threads());
     let batch = args.get_usize("batch", 1).max(1);
-    let variant = parse_variant(args.get_or("variant", "pruning+compiler"))?;
+    let variant = Variant::parse(args.get_or("variant", "pruning+compiler"))?;
     let fps = args.get_f64("fps", 30.0);
     let frames = args.get_usize("frames", 120);
-    let g = build_app(app, width, 42)?;
-    let spec = AppSpec::for_app(app);
-    let (eng, _) =
-        prepare_variant_batched(&g, variant, &spec, threads, batch, &tune_opts(args))?;
-    print_tune_stats(&eng);
-    let ishape = eng.plan().frame_input_shapes()[0].clone();
+    let session = Model::for_app_scaled(app, variant, width, 42)?
+        .session()
+        .threads(threads)
+        .batch(batch)
+        .tune(tune_opts(args))
+        .build()?;
+    print_tune_stats(&session);
+    let ishape = session.shapes().frame_inputs[0].clone();
     let (h, w) = (ishape[2], ishape[3]);
     let gray = ishape[1] == 1;
 
     let frames_src = std::sync::Mutex::new(FrameStream::new(w, h, 7));
-    let cfg = ServeConfig {
-        source_fps: fps,
+    let opts = ServeOpts {
+        fps,
         queue_depth: args.get_usize("queue", 4),
         workers: args.get_usize("workers", 1),
         frames,
-        batch,
+        max_wait: std::time::Duration::from_millis(
+            args.get_usize("max-wait-ms", 0) as u64
+        ),
     };
     println!(
         "serving {} [{}] at {} fps for {} frames (batch {})…",
@@ -233,7 +233,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         frames,
         batch
     );
-    let report = Server::new(&eng, cfg).serve(|_| {
+    let report = session.serve(&opts, |_| {
         let img = frames_src.lock().unwrap().next_frame();
         let t = img.to_tensor();
         if gray {

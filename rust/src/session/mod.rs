@@ -1,0 +1,150 @@
+//! The crate's **front door**: a builder-first API that takes you from an
+//! application name to a running (or serving) compiled model in one
+//! coherent flow — the paper's prune → compile/tune → execute pipeline as
+//! a single configure-then-run surface.
+//!
+//! ```no_run
+//! use prt_dnn::session::{Model, ServeOpts};
+//! use prt_dnn::apps::Variant;
+//! use prt_dnn::tensor::Tensor;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // One Model per (app, variant): graph + weights + pruning schemes.
+//! let model = Model::for_app("style", Variant::PrunedCompiler)?;
+//!
+//! // One Session per execution configuration.
+//! let session = model.session().threads(4).batch(1).build()?;
+//! let x = Tensor::full(&session.shapes().inputs[0], 0.5);
+//! let out = session.run(&[x])?;
+//!
+//! // Serving is a *mode* of a session, not a parallel API.
+//! let shape = session.shapes().frame_inputs[0].clone();
+//! let report = session.serve(&ServeOpts::default(), |_| Tensor::full(&shape, 0.5))?;
+//! println!("{}", report.render());
+//! # let _ = out; Ok(())
+//! # }
+//! ```
+//!
+//! Historically each new execution axis grew its own entry point
+//! (`prepare_variant` → `prepare_variant_tuned` → `prepare_variant_batched`,
+//! plus `ExecConfig::{dense,csr,compact}` and a disjoint
+//! `Server::new(engine, ServeConfig)`). [`Model`] + [`Session`] replace all
+//! of them: every axis is a builder knob ([`SessionBuilder::threads`],
+//! [`SessionBuilder::batch`], [`SessionBuilder::sparse`],
+//! [`SessionBuilder::tune`]), failures are typed [`SessionError`]s, and
+//! introspection ([`Session::shapes`], [`Session::memory`],
+//! [`Session::schedules_json`]) lives on the session itself.
+//!
+//! The executor layer underneath
+//! ([`Planner`](crate::executor::Planner) / [`ExecConfig`](crate::executor::ExecConfig) /
+//! [`ExecContext`](crate::executor::ExecContext)) remains public for
+//! plan-level tooling and tests; `session` is the supported application
+//! surface that future axes (sharding, async serving, multi-backend)
+//! extend.
+
+mod model;
+#[allow(clippy::module_inception)]
+mod session;
+
+pub use model::Model;
+pub use session::{ServeOpts, Session, SessionBuilder, SessionOptions, Shapes};
+
+pub use crate::coordinator::ServeReport;
+
+/// How a session stores + executes pruned conv layers. The session-level
+/// mirror of the executor's [`SparseMode`](crate::executor::SparseMode);
+/// defaults per [`Variant`](crate::apps::Variant) via
+/// [`Format::for_variant`], overridable with [`SessionBuilder::sparse`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// Dense weights + dense GEMM (the unpruned baseline).
+    Dense,
+    /// CSR storage + indexed SpMM ("pruning, no compiler optimization").
+    Csr,
+    /// The paper's compiler path: column-compact / pattern kernels chosen
+    /// per layer from the model's pruning schemes.
+    Compact,
+}
+
+impl Format {
+    /// The storage format each Table-1 variant historically compiled to.
+    pub fn for_variant(variant: crate::apps::Variant) -> Format {
+        use crate::apps::Variant;
+        match variant {
+            Variant::Unpruned | Variant::UnprunedCompiler => Format::Dense,
+            Variant::Pruned | Variant::PrunedFusedOnly => Format::Csr,
+            Variant::PrunedCompiler => Format::Compact,
+        }
+    }
+
+    pub(crate) fn sparse_mode(self) -> crate::executor::SparseMode {
+        match self {
+            Format::Dense => crate::executor::SparseMode::Dense,
+            Format::Csr => crate::executor::SparseMode::Csr,
+            Format::Compact => crate::executor::SparseMode::Compact,
+        }
+    }
+}
+
+/// Typed session-construction errors. Recoverable from an
+/// [`anyhow::Error`] chain with `err.downcast_ref::<SessionError>()`
+/// (the same pattern as [`PlanError`](crate::executor::PlanError)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum SessionError {
+    /// [`Model::for_app`] was given a name no app builder matches.
+    UnknownApp(String),
+    /// [`Variant::parse`](crate::apps::Variant::parse) was given an
+    /// unknown variant name.
+    UnknownVariant(String),
+    /// [`SessionBuilder::threads`] was 0 — a session needs at least the
+    /// caller's thread.
+    ZeroThreads,
+    /// [`SessionBuilder::batch`] was 0 — a plan must fuse at least one
+    /// frame per dispatch.
+    ZeroBatch,
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::UnknownApp(app) => {
+                write!(f, "unknown app '{}' (style|coloring|sr|vgg16)", app)
+            }
+            SessionError::UnknownVariant(v) => write!(
+                f,
+                "unknown variant '{}' (unpruned|pruning|pruning+compiler|\
+                 pruning+fusion-only|compiler-only)",
+                v
+            ),
+            SessionError::ZeroThreads => write!(f, "threads must be >= 1 (got 0)"),
+            SessionError::ZeroBatch => write!(f, "batch must be >= 1 (got 0)"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Variant;
+
+    #[test]
+    fn formats_follow_the_table1_variants() {
+        assert_eq!(Format::for_variant(Variant::Unpruned), Format::Dense);
+        assert_eq!(Format::for_variant(Variant::Pruned), Format::Csr);
+        assert_eq!(Format::for_variant(Variant::PrunedCompiler), Format::Compact);
+        assert_eq!(Format::for_variant(Variant::PrunedFusedOnly), Format::Csr);
+        assert_eq!(Format::for_variant(Variant::UnprunedCompiler), Format::Dense);
+    }
+
+    #[test]
+    fn errors_render_and_downcast() {
+        let e: anyhow::Error = SessionError::ZeroBatch.into();
+        assert_eq!(e.downcast_ref::<SessionError>(), Some(&SessionError::ZeroBatch));
+        assert!(SessionError::UnknownApp("nope".into()).to_string().contains("nope"));
+        assert!(SessionError::UnknownVariant("x".into()).to_string().contains("variant"));
+        assert!(SessionError::ZeroThreads.to_string().contains("threads"));
+    }
+}

@@ -1,0 +1,162 @@
+//! [`Model`] — a compiled-for-a-variant graph plus its pruning schemes,
+//! built once per app and shared by any number of
+//! [`Session`](super::Session)s.
+//!
+//! `Model::for_app(app, variant)` subsumes the historical
+//! `AppSpec::for_app` + `build_app` + `prune_graph` + pass-pipeline
+//! choreography: the variant decides whether the weights are pruned and
+//! whether the DSL pass pipeline runs, and the model records the
+//! per-layer schemes the compact encoder / verifier need.
+
+use crate::apps::builders::build_app;
+use crate::apps::{prune_graph, AppSpec, Variant};
+use crate::dsl::Graph;
+use crate::passes::PassManager;
+use crate::pruning::scheme::Scheme;
+use crate::session::{Format, SessionBuilder, SessionError};
+
+/// A graph lowered for one execution [`Variant`]: pruned weights (when the
+/// variant prunes), fused graph (when the variant compiles), and the
+/// per-layer pruning [`Scheme`]s. Build [`Session`](super::Session)s from
+/// it via [`Model::session`].
+#[derive(Debug, Clone)]
+pub struct Model {
+    app: String,
+    variant: Option<Variant>,
+    graph: Graph,
+    schemes: Vec<(String, Scheme)>,
+    default_format: Format,
+}
+
+impl Model {
+    /// Build the named demo app at benchmark scale (width 1.0, the
+    /// deterministic seed every bench uses) and lower it for `variant`.
+    pub fn for_app(app: &str, variant: Variant) -> anyhow::Result<Model> {
+        Self::for_app_scaled(app, variant, 1.0, 42)
+    }
+
+    /// [`Model::for_app`] with an explicit channel-width multiplier and
+    /// weight-init seed (quick tests use width 0.25–0.5). Unknown app
+    /// names fail with the typed [`SessionError::UnknownApp`].
+    pub fn for_app_scaled(
+        app: &str,
+        variant: Variant,
+        width: f64,
+        seed: u64,
+    ) -> anyhow::Result<Model> {
+        let g = build_app(app, width, seed)
+            .map_err(|_| SessionError::UnknownApp(app.to_string()))?;
+        let spec = AppSpec::for_app(app);
+        Ok(Self::from_graph(&g, &spec, variant))
+    }
+
+    /// Lower an arbitrary base graph for `variant` under the given pruning
+    /// spec: clones the graph, prunes it when the variant prunes, and runs
+    /// the DSL pass pipeline when the variant compiles. This is the
+    /// custom-graph form of [`Model::for_app`].
+    pub fn from_graph(base: &Graph, spec: &AppSpec, variant: Variant) -> Model {
+        let mut g = base.clone();
+        let schemes = if variant.prunes() { prune_graph(&mut g, spec) } else { Vec::new() };
+        if variant.compiles() {
+            PassManager::default().run_fixpoint(&mut g, 4);
+        }
+        let default_format = Format::for_variant(variant);
+        Model {
+            app: spec.app.clone(),
+            variant: Some(variant),
+            graph: g,
+            schemes,
+            default_format,
+        }
+    }
+
+    /// Wrap an already-lowered graph (pruned / fused by the caller, or
+    /// loaded from a `*.graph.json` artifact) with its declared per-layer
+    /// schemes. The default storage format is [`Format::Compact`] when any
+    /// scheme is declared, [`Format::Dense`] otherwise; override per
+    /// session with [`SessionBuilder::sparse`].
+    pub fn from_compiled(graph: Graph, schemes: Vec<(String, Scheme)>) -> Model {
+        let default_format =
+            if schemes.is_empty() { Format::Dense } else { Format::Compact };
+        Model {
+            app: graph.name.clone(),
+            variant: None,
+            graph,
+            schemes,
+            default_format,
+        }
+    }
+
+    /// App (or graph) name this model was built from.
+    pub fn app(&self) -> &str {
+        &self.app
+    }
+
+    /// The variant the model was lowered for (`None` for
+    /// [`Model::from_compiled`] graphs).
+    pub fn variant(&self) -> Option<Variant> {
+        self.variant
+    }
+
+    /// The lowered graph (pruned weights, fused nodes).
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Per-layer pruning schemes (empty for unpruned variants).
+    pub fn schemes(&self) -> &[(String, Scheme)] {
+        &self.schemes
+    }
+
+    /// The storage format sessions compile to unless overridden with
+    /// [`SessionBuilder::sparse`].
+    pub fn default_format(&self) -> Format {
+        self.default_format
+    }
+
+    /// Start configuring a [`Session`](super::Session) over this model.
+    /// All knobs have defaults (all cores, batch 1, the variant's storage
+    /// format, tuning off); call [`SessionBuilder::build`] to compile.
+    pub fn session(&self) -> SessionBuilder<'_> {
+        SessionBuilder::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::builders::build_style;
+    use crate::session::SessionError;
+
+    #[test]
+    fn unknown_app_is_typed() {
+        let err = Model::for_app("nope", Variant::Unpruned).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SessionError>(),
+            Some(&SessionError::UnknownApp("nope".into()))
+        );
+    }
+
+    #[test]
+    fn variant_controls_lowering() {
+        let base = build_style(32, 0.25, 5);
+        let spec = AppSpec::for_app("style");
+        let unpruned = Model::from_graph(&base, &spec, Variant::Unpruned);
+        assert!(unpruned.schemes().is_empty());
+        assert_eq!(unpruned.graph().len(), base.len(), "no passes for the baseline");
+        let full = Model::from_graph(&base, &spec, Variant::PrunedCompiler);
+        assert!(!full.schemes().is_empty(), "compiler variant prunes");
+        assert!(full.graph().len() < base.len(), "compiler variant fuses");
+        assert_eq!(full.default_format(), Format::Compact);
+        assert_eq!(full.variant(), Some(Variant::PrunedCompiler));
+    }
+
+    #[test]
+    fn from_compiled_defaults_by_schemes() {
+        let g = build_style(32, 0.25, 6);
+        let m = Model::from_compiled(g, Vec::new());
+        assert_eq!(m.default_format(), Format::Dense);
+        assert_eq!(m.variant(), None);
+        assert_eq!(m.app(), "style_transfer");
+    }
+}

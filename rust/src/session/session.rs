@@ -1,0 +1,357 @@
+//! [`Session`] — a compiled execution configuration of a [`Model`]:
+//! `run` / `run_frames` / `run_profiled` for direct execution, `serve`
+//! for the real-time frame-stream mode, plus introspection.
+
+use crate::coordinator::{ServeConfig, Server};
+use crate::executor::{Engine, ExecConfig, ExecutionPlan, MemoryUsage};
+use crate::session::{Format, Model, ServeReport, SessionError};
+use crate::tensor::Tensor;
+use crate::tuner::TuneOpts;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Every session-level knob in one typed struct — what the historical
+/// `ExecConfig::{dense,csr,compact}` constructors plus the three
+/// `prepare_variant*` signatures spread across call sites.
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    /// Compute-thread budget (pool size of the session's contexts).
+    /// Defaults to [`num_threads`](crate::util::num_threads).
+    pub threads: usize,
+    /// Frames fused per dispatch (default 1).
+    pub batch: usize,
+    /// Storage/kernel format override; `None` keeps the model's
+    /// variant-derived default.
+    pub sparse: Option<Format>,
+    /// Plan-time schedule auto-tuning (default off).
+    pub tune: TuneOpts,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            threads: crate::util::num_threads(),
+            batch: 1,
+            sparse: None,
+            tune: TuneOpts::off(),
+        }
+    }
+}
+
+/// Builder returned by [`Model::session`]. Each method sets one axis;
+/// [`SessionBuilder::build`] validates and compiles.
+#[derive(Debug, Clone)]
+pub struct SessionBuilder<'m> {
+    model: &'m Model,
+    opts: SessionOptions,
+}
+
+impl<'m> SessionBuilder<'m> {
+    pub(crate) fn new(model: &'m Model) -> Self {
+        SessionBuilder { model, opts: SessionOptions::default() }
+    }
+
+    /// Set the compute-thread budget (0 is rejected at build with
+    /// [`SessionError::ZeroThreads`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.opts.threads = threads;
+        self
+    }
+
+    /// Set the frames fused per dispatch (0 is rejected at build with
+    /// [`SessionError::ZeroBatch`]).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.opts.batch = batch;
+        self
+    }
+
+    /// Override the model's default storage format.
+    pub fn sparse(mut self, format: Format) -> Self {
+        self.opts.sparse = Some(format);
+        self
+    }
+
+    /// Enable plan-time schedule auto-tuning.
+    pub fn tune(mut self, tune: TuneOpts) -> Self {
+        self.opts.tune = tune;
+        self
+    }
+
+    /// Replace every knob at once (bulk form of the per-axis setters).
+    pub fn options(mut self, opts: SessionOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Validate the options and compile the plan. Typed failures
+    /// ([`SessionError`]) cover the option space; planner failures
+    /// (missing weights, invalid graphs) flow through as their own
+    /// errors.
+    pub fn build(self) -> Result<Session> {
+        if self.opts.threads == 0 {
+            return Err(SessionError::ZeroThreads.into());
+        }
+        if self.opts.batch == 0 {
+            return Err(SessionError::ZeroBatch.into());
+        }
+        let format = self.opts.sparse.unwrap_or_else(|| self.model.default_format());
+        let cfg = ExecConfig {
+            sparse: format.sparse_mode(),
+            threads: self.opts.threads,
+            schemes: self.model.schemes().to_vec(),
+            tune: self.opts.tune.clone(),
+            batch: self.opts.batch,
+        };
+        let engine = Engine::with_config(self.model.graph(), &cfg)?;
+        Ok(Session {
+            app: self.model.app().to_string(),
+            variant: self.model.variant(),
+            format,
+            engine,
+        })
+    }
+}
+
+/// Input/output geometry of a compiled session, batched and per-frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shapes {
+    /// Packed (batched) input shapes, in call order — what
+    /// [`Session::run`] expects.
+    pub inputs: Vec<Vec<usize>>,
+    /// Packed (batched) output shapes, in result order.
+    pub outputs: Vec<Vec<usize>>,
+    /// Per-frame input shapes — what each frame of
+    /// [`Session::run_frames`] (and every [`Session::serve`] source
+    /// frame) must have.
+    pub frame_inputs: Vec<Vec<usize>>,
+    /// Per-frame output shapes.
+    pub frame_outputs: Vec<Vec<usize>>,
+}
+
+/// Serving knobs for [`Session::serve`]. The batch is **not** here — a
+/// session serves at the batch it was compiled with
+/// ([`SessionBuilder::batch`]), which removes the historical
+/// engine-vs-`ServeConfig` batch-mismatch failure mode entirely.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Source frame rate to simulate (frames arrive on this cadence).
+    pub fps: f64,
+    /// Bounded queue depth; frames beyond it are dropped (load shedding).
+    pub queue_depth: usize,
+    /// Number of inference workers (each owns one context + pool).
+    pub workers: usize,
+    /// Total frames to feed.
+    pub frames: usize,
+    /// Adaptive batching deadline: a batched worker that popped its first
+    /// frame waits up to this long for more frames to arrive before
+    /// padding a partial batch. `Duration::ZERO` (the default) keeps the
+    /// historical opportunistic drain — dispatch immediately with
+    /// whatever is already queued.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            fps: 30.0,
+            queue_depth: 4,
+            workers: 1,
+            frames: 120,
+            max_wait: Duration::ZERO,
+        }
+    }
+}
+
+/// A compiled, ready-to-run execution configuration: the immutable plan
+/// plus the engine-owned pool of reusable
+/// [`ExecContext`](crate::executor::ExecContext)s (arena + compute pool
+/// each). Sessions are `Sync` — concurrent [`Session::run`] calls check
+/// contexts in and out of the pool.
+pub struct Session {
+    app: String,
+    variant: Option<crate::apps::Variant>,
+    format: Format,
+    engine: Engine,
+}
+
+impl Session {
+    /// Execute on packed (batched) inputs; see [`Session::shapes`] for
+    /// the expected geometry.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.engine.run(inputs)
+    }
+
+    /// Execute one batched dispatch over `batch()` per-frame input sets:
+    /// `frames[f]` holds frame `f`'s input tensors and the result's
+    /// `[f][k]` is output `k` of frame `f`. Wrong frame / per-frame input
+    /// counts return typed [`PlanError`](crate::executor::PlanError)s.
+    pub fn run_frames(&self, frames: &[&[Tensor]]) -> Result<Vec<Vec<Tensor>>> {
+        self.engine.run_frames(frames)
+    }
+
+    /// Execute and collect per-op wall times.
+    pub fn run_profiled(
+        &self,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, Vec<(String, Duration)>)> {
+        self.engine.run_profiled(inputs)
+    }
+
+    /// Serve a frame stream through this session: a source thread
+    /// produces frames at `opts.fps`, a bounded queue absorbs jitter,
+    /// and `opts.workers` workers (one private context each) drain it —
+    /// coalescing up to [`Session::batch`] frames per dispatch when the
+    /// session was compiled batched, waiting up to `opts.max_wait` for a
+    /// full batch before padding. Returns aggregated metrics.
+    pub fn serve(
+        &self,
+        opts: &ServeOpts,
+        source: impl Fn(usize) -> Tensor + Send + Sync,
+    ) -> Result<ServeReport> {
+        let cfg = ServeConfig {
+            source_fps: opts.fps,
+            queue_depth: opts.queue_depth,
+            workers: opts.workers,
+            frames: opts.frames,
+            batch: self.batch(),
+            max_wait: opts.max_wait,
+        };
+        Server::new(&self.engine, cfg).serve(source)
+    }
+
+    /// App (or graph) name this session executes.
+    pub fn app(&self) -> &str {
+        &self.app
+    }
+
+    /// The variant the session's model was lowered for (`None` for
+    /// [`Model::from_compiled`] graphs).
+    pub fn variant(&self) -> Option<crate::apps::Variant> {
+        self.variant
+    }
+
+    /// The storage format the session compiled to.
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    /// Compute-thread budget of the compiled plan.
+    pub fn threads(&self) -> usize {
+        self.plan().threads()
+    }
+
+    /// Frames fused per dispatch.
+    pub fn batch(&self) -> usize {
+        self.plan().batch()
+    }
+
+    /// Serialized weight bytes under the session's storage format.
+    pub fn weight_bytes(&self) -> usize {
+        self.engine.weight_bytes
+    }
+
+    /// Batched and per-frame input/output geometry.
+    pub fn shapes(&self) -> Shapes {
+        let plan = self.plan();
+        Shapes {
+            inputs: plan.input_shapes(),
+            outputs: plan.output_shapes(),
+            frame_inputs: plan.frame_input_shapes(),
+            frame_outputs: plan.frame_output_shapes(),
+        }
+    }
+
+    /// Static memory accounting of the compiled plan.
+    pub fn memory(&self) -> MemoryUsage {
+        self.plan().memory()
+    }
+
+    /// Per-step kernel schedules of the tuner-searched step kinds in JSON
+    /// form (see
+    /// [`ExecutionPlan::schedules_json`](crate::executor::ExecutionPlan::schedules_json)).
+    pub fn schedules_json(&self) -> Json {
+        self.plan().schedules_json()
+    }
+
+    /// The immutable compiled plan — the bridge to the executor layer
+    /// (per-worker [`ExecContext`](crate::executor::ExecContext)s,
+    /// zero-alloc `run_into` loops, tune stats).
+    pub fn plan(&self) -> &ExecutionPlan {
+        self.engine.plan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::builders::build_style;
+    use crate::apps::{AppSpec, Variant};
+    use crate::session::Model;
+
+    fn style_model(variant: Variant) -> Model {
+        let g = build_style(32, 0.25, 91);
+        Model::from_graph(&g, &AppSpec::for_app("style"), variant)
+    }
+
+    #[test]
+    fn builder_compiles_and_runs() {
+        let model = style_model(Variant::PrunedCompiler);
+        let s = model.session().threads(2).build().unwrap();
+        assert_eq!(s.format(), Format::Compact);
+        assert_eq!(s.threads(), 2);
+        assert_eq!(s.batch(), 1);
+        let shapes = s.shapes();
+        assert_eq!(shapes.inputs, vec![vec![1, 3, 32, 32]]);
+        assert_eq!(shapes.inputs, shapes.frame_inputs, "batch 1: packed == per-frame");
+        let x = Tensor::full(&shapes.inputs[0], 0.5);
+        let out = s.run(&[x]).unwrap();
+        assert_eq!(out[0].shape(), shapes.outputs[0].as_slice());
+        let m = s.memory();
+        assert_eq!(m.peak_bytes, m.dedicated_bytes + m.shared_bytes);
+        assert!(s.weight_bytes() > 0);
+    }
+
+    #[test]
+    fn zero_options_are_typed_errors() {
+        let model = style_model(Variant::Unpruned);
+        let err = model.session().threads(0).build().unwrap_err();
+        assert_eq!(err.downcast_ref::<SessionError>(), Some(&SessionError::ZeroThreads));
+        let err = model.session().batch(0).build().unwrap_err();
+        assert_eq!(err.downcast_ref::<SessionError>(), Some(&SessionError::ZeroBatch));
+    }
+
+    #[test]
+    fn sparse_override_and_batch_shapes() {
+        let model = style_model(Variant::Pruned);
+        assert_eq!(model.default_format(), Format::Csr);
+        let s = model
+            .session()
+            .threads(1)
+            .batch(2)
+            .sparse(Format::Compact)
+            .build()
+            .unwrap();
+        assert_eq!(s.format(), Format::Compact);
+        assert_eq!(s.batch(), 2);
+        let shapes = s.shapes();
+        assert_eq!(shapes.inputs[0][0], 2 * shapes.frame_inputs[0][0]);
+        // Per-frame round trip through run_frames.
+        let frames: Vec<Vec<Tensor>> = (0..2)
+            .map(|f| vec![Tensor::full(&shapes.frame_inputs[0], 0.3 + 0.1 * f as f32)])
+            .collect();
+        let refs: Vec<&[Tensor]> = frames.iter().map(|v| v.as_slice()).collect();
+        let outs = s.run_frames(&refs).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0][0].shape(), shapes.frame_outputs[0].as_slice());
+    }
+
+    #[test]
+    fn profiled_run_reports_all_ops() {
+        let model = style_model(Variant::Unpruned);
+        let s = model.session().threads(1).build().unwrap();
+        let x = Tensor::full(&s.shapes().inputs[0], 0.5);
+        let (_, prof) = s.run_profiled(&[x]).unwrap();
+        assert_eq!(prof.len(), model.graph().len());
+    }
+}

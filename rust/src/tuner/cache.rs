@@ -1,10 +1,18 @@
-//! On-disk [`TuneCache`]: winning schedules keyed by op-shape + threads.
+//! On-disk [`TuneCache`]: winning schedules keyed by op-shape + threads,
+//! **namespaced by a host fingerprint**.
 //!
 //! The cache makes planning fast after the first tuned run: a key hit
 //! skips candidate enumeration *and* micro-benchmarking entirely. The
 //! file format is plain JSON (via [`util::json`](crate::util::json), the
 //! offline toolchain has no serde) with entries sorted by key, so the
 //! serialization is deterministic and diffs cleanly.
+//!
+//! Micro-benchmark winners are only meaningful on the machine that
+//! measured them, so every cache file records [`host_fingerprint`] and
+//! [`TuneCache::load`] silently discards a file written by a different
+//! host (or by the pre-fingerprint v1 format) — a copied
+//! `--tune-cache` file can therefore never serve stale schedules; the
+//! next tuned plan re-benchmarks and overwrites it for this host.
 
 use crate::tuner::schedule::Schedule;
 use crate::util::json::{Json, JsonObj};
@@ -12,21 +20,63 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-/// Current cache file format version.
-const VERSION: usize = 1;
+/// Current cache file format version (v2 added the host fingerprint; v1
+/// files are discarded as untrusted on load).
+const VERSION: usize = 2;
+
+/// Stable fingerprint of the machine the benchmarks ran on: CPU
+/// architecture + OS + core count. Coarse on purpose — it only needs to
+/// catch cache files copied between machines, not micro-architectural
+/// drift on one box.
+///
+/// The core count comes from `available_parallelism`, which honors
+/// cgroup quotas and affinity masks — so one physical machine whose
+/// workloads alternate between CPU limits would see its cache
+/// self-invalidate. Set `PRT_DNN_TUNE_HOST` to pin the namespace
+/// explicitly in such environments (the variable's value becomes the
+/// fingerprint verbatim).
+pub fn host_fingerprint() -> String {
+    if let Ok(v) = std::env::var("PRT_DNN_TUNE_HOST") {
+        if !v.is_empty() {
+            return v;
+        }
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    format!("{}-{}-{}c", std::env::consts::ARCH, std::env::consts::OS, cores)
+}
 
 /// Persistent map from tune key (see
 /// [`TuneRequest::key`](crate::tuner::TuneRequest::key)) to the winning
-/// [`Schedule`]. Entries are kept sorted by key for deterministic output.
-#[derive(Debug, Clone, Default, PartialEq)]
+/// [`Schedule`], stamped with the fingerprint of the host that measured
+/// it. Entries are kept sorted by key for deterministic output.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TuneCache {
     entries: BTreeMap<String, Schedule>,
+    host: String,
+}
+
+impl Default for TuneCache {
+    fn default() -> Self {
+        TuneCache { entries: BTreeMap::new(), host: host_fingerprint() }
+    }
 }
 
 impl TuneCache {
-    /// Empty cache.
+    /// Empty cache stamped with this host's fingerprint.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Empty cache stamped with an explicit fingerprint (testing /
+    /// cache-inspection tooling).
+    pub fn with_host(host: impl Into<String>) -> Self {
+        TuneCache { entries: BTreeMap::new(), host: host.into() }
+    }
+
+    /// The fingerprint of the host whose benchmarks produced these
+    /// entries.
+    pub fn host(&self) -> &str {
+        &self.host
     }
 
     /// Number of cached schedules.
@@ -57,21 +107,30 @@ impl TuneCache {
         }
         let mut o = JsonObj::new();
         o.insert("version", VERSION);
+        o.insert("host", self.host.clone());
         o.insert("entries", Json::Obj(entries));
         Json::Obj(o)
     }
 
-    /// Parse a cache document; schedules are sanitized on the way in.
+    /// Parse a cache document; schedules are sanitized on the way in. A
+    /// version-1 document (pre-fingerprint) parses as an **empty** cache
+    /// — its entries were benchmarked by an unknown host.
     pub fn from_json(j: &Json) -> Result<TuneCache> {
         match j.get("version").as_usize() {
             Some(VERSION) => {}
+            Some(1) => return Ok(TuneCache::new()),
             other => bail!("tune cache: unsupported version {:?}", other),
         }
+        let host = j
+            .get("host")
+            .as_str()
+            .context("tune cache: missing 'host' fingerprint")?
+            .to_string();
         let entries = j
             .get("entries")
             .as_obj()
             .context("tune cache: missing 'entries' object")?;
-        let mut cache = TuneCache::new();
+        let mut cache = TuneCache::with_host(host);
         for (k, v) in entries.iter() {
             let sched = Schedule::from_json(v)
                 .with_context(|| format!("tune cache: entry '{}'", k))?;
@@ -81,7 +140,9 @@ impl TuneCache {
     }
 
     /// Load from disk; a missing file yields an empty cache, a malformed
-    /// one is an error (delete the file to retune from scratch).
+    /// one is an error (delete the file to retune from scratch), and a
+    /// file fingerprinted by a **different host** yields an empty cache
+    /// for this host — copied caches never serve stale schedules.
     pub fn load(path: &Path) -> Result<TuneCache> {
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
@@ -94,7 +155,17 @@ impl TuneCache {
         };
         let j = Json::parse(&text)
             .map_err(|e| anyhow::anyhow!("parsing {}: {}", path.display(), e))?;
-        Self::from_json(&j)
+        let cache = Self::from_json(&j)?;
+        if cache.host != host_fingerprint() {
+            eprintln!(
+                "note: ignoring tune cache {} from host '{}' (this host is '{}')",
+                path.display(),
+                cache.host,
+                host_fingerprint()
+            );
+            return Ok(TuneCache::new());
+        }
+        Ok(cache)
     }
 
     /// Write the deterministic pretty-printed form to disk.
@@ -173,6 +244,33 @@ mod tests {
     #[test]
     fn rejects_bad_versions_and_shapes() {
         assert!(TuneCache::from_json(&Json::parse("{\"version\":99}").unwrap()).is_err());
-        assert!(TuneCache::from_json(&Json::parse("{\"version\":1}").unwrap()).is_err());
+        // v2 requires the host fingerprint and the entries object.
+        assert!(TuneCache::from_json(&Json::parse("{\"version\":2}").unwrap()).is_err());
+        // v1 (pre-fingerprint) parses as empty: unknown benchmarking host.
+        let v1 = TuneCache::from_json(&Json::parse("{\"version\":1}").unwrap()).unwrap();
+        assert!(v1.is_empty());
+    }
+
+    #[test]
+    fn foreign_host_cache_is_discarded_on_load() {
+        let p = std::env::temp_dir().join(format!(
+            "prt-tune-cache-foreign-{}.json",
+            std::process::id()
+        ));
+        // A populated cache stamped by "another machine".
+        let mut foreign = TuneCache::with_host("elbrus-plan9-999c");
+        foreign.insert("conv|dense|m64k27n1024|k3s1p1|t4", Schedule::default());
+        foreign.save(&p).unwrap();
+        // Loading on this host must not serve its schedules.
+        let loaded = TuneCache::load(&p).unwrap();
+        assert!(loaded.is_empty(), "foreign-host cache must be discarded");
+        assert_eq!(loaded.host(), host_fingerprint());
+
+        // The same file written by *this* host round-trips intact.
+        let mut local = sample();
+        local.insert("extra|key|m1k1n1|g|t1", Schedule::default());
+        local.save(&p).unwrap();
+        assert_eq!(TuneCache::load(&p).unwrap(), local);
+        let _ = std::fs::remove_file(&p);
     }
 }

@@ -29,7 +29,7 @@
 pub mod cache;
 pub mod schedule;
 
-pub use cache::TuneCache;
+pub use cache::{host_fingerprint, TuneCache};
 pub use schedule::{Lowering, Schedule, SplitAxis};
 
 use crate::perfmodel::sched::{gemm_schedule_seconds, HostModel};
@@ -188,6 +188,14 @@ impl Tuner {
     /// is always element 0.
     pub fn candidate_space(req: &TuneRequest) -> Vec<Schedule> {
         let default = Schedule::default();
+        if req.op == "dw" {
+            // Depthwise: only the split knob is live — `Rows` partitions
+            // the pool per (n·c) channel plane (the historical fixed
+            // kernel), `Cols` per output row (finer grain that fills the
+            // pool when n·c is small). Tiles, lowering and unroll are
+            // no-ops for the direct depthwise loop.
+            return vec![default, Schedule { split: SplitAxis::Cols, ..default }.sanitized()];
+        }
         if req.op == "dense" {
             // Fully-connected: `dense_forward` only honors the split axis
             // (rows = output features, cols = batch); tiles, lowering and
@@ -348,6 +356,13 @@ mod tests {
         }
         let sparse = Tuner::candidate_space(&gemm_req(false, false));
         assert_eq!(sparse.len(), 2, "sparse space is unroll-only");
+
+        let mut dw = gemm_req(false, false);
+        dw.op = "dw";
+        let dw_cands = Tuner::candidate_space(&dw);
+        assert_eq!(dw_cands.len(), 2, "dw space is split-only");
+        assert_eq!(dw_cands[0], Schedule::default());
+        assert_eq!(dw_cands[1].split, SplitAxis::Cols);
     }
 
     #[test]

@@ -1,16 +1,15 @@
 //! Cross-module integration tests: apps × variants × compiler pipeline,
 //! graph file round trips, serving, sparsity accounting.
 
-use prt_dnn::apps::{build_app, prepare_variant, prune_graph, AppSpec, Variant};
-use prt_dnn::coordinator::{ServeConfig, Server};
+use prt_dnn::apps::{build_app, prune_graph, AppSpec, Variant};
 use prt_dnn::dsl::io;
-use prt_dnn::executor::Engine;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
 use prt_dnn::pruning::{graph_sparsity_report, verify::verify_structure};
+use prt_dnn::session::{Model, ServeOpts, Session};
 use prt_dnn::tensor::Tensor;
 
-fn input_for(eng: &Engine) -> Tensor {
-    Tensor::full(&eng.input_shapes()[0], 0.5)
+fn input_for(session: &Session) -> Tensor {
+    Tensor::full(&session.shapes().inputs[0], 0.5)
 }
 
 #[test]
@@ -18,12 +17,15 @@ fn all_apps_all_variants_agree() {
     // The three pruned variants share weights; outputs must agree to float
     // tolerance across completely different kernel implementations.
     for app in ["style", "coloring", "sr"] {
-        let g = build_app(app, 0.25, 42).unwrap();
-        let spec = AppSpec::for_app(app);
         let mut reference: Option<Tensor> = None;
         for variant in [Variant::Pruned, Variant::PrunedFusedOnly, Variant::PrunedCompiler] {
-            let (eng, _) = prepare_variant(&g, variant, &spec, 2).unwrap();
-            let out = eng.run(&[input_for(&eng)]).unwrap().remove(0);
+            let session = Model::for_app_scaled(app, variant, 0.25, 42)
+                .unwrap()
+                .session()
+                .threads(2)
+                .build()
+                .unwrap();
+            let out = session.run(&[input_for(&session)]).unwrap().remove(0);
             match &reference {
                 None => reference = Some(out),
                 Some(r) => {
@@ -61,27 +63,36 @@ fn graph_file_roundtrip_preserves_semantics() {
     io::save(&g, &path).unwrap();
     let g2 = io::load(&path).unwrap();
 
-    let e1 = Engine::new(&g, 1).unwrap();
-    let e2 = Engine::new(&g2, 1).unwrap();
-    let x = input_for(&e1);
-    let o1 = e1.run(std::slice::from_ref(&x)).unwrap();
-    let o2 = e2.run(std::slice::from_ref(&x)).unwrap();
+    let s1 = Model::from_compiled(g, Vec::new()).session().threads(1).build().unwrap();
+    let s2 = Model::from_compiled(g2, Vec::new()).session().threads(1).build().unwrap();
+    let x = input_for(&s1);
+    let o1 = s1.run(std::slice::from_ref(&x)).unwrap();
+    let o2 = s2.run(std::slice::from_ref(&x)).unwrap();
     assert_eq!(o1[0].data(), o2[0].data(), "roundtrip changed outputs");
 }
 
 #[test]
 fn serving_all_apps_realtime_judgement_runs() {
     for app in ["style", "coloring"] {
-        let g = build_app(app, 0.25, 9).unwrap();
-        let spec = AppSpec::for_app(app);
-        let (eng, _) = prepare_variant(&g, Variant::PrunedCompiler, &spec, 2).unwrap();
-        let shape = eng.input_shapes()[0].clone();
-        let report = Server::new(
-            &eng,
-            ServeConfig { source_fps: 100.0, queue_depth: 4, workers: 1, frames: 12, batch: 1 },
-        )
-        .serve(|_| Tensor::full(&shape, 0.5))
-        .unwrap();
+        let session = Model::for_app_scaled(app, Variant::PrunedCompiler, 0.25, 9)
+            .unwrap()
+            .session()
+            .threads(2)
+            .build()
+            .unwrap();
+        let shape = session.shapes().inputs[0].clone();
+        let report = session
+            .serve(
+                &ServeOpts {
+                    fps: 100.0,
+                    queue_depth: 4,
+                    workers: 1,
+                    frames: 12,
+                    ..ServeOpts::default()
+                },
+                |_| Tensor::full(&shape, 0.5),
+            )
+            .unwrap();
         assert!(report.processed >= 1, "{}: {}", app, report.render());
     }
 }

@@ -1,0 +1,266 @@
+//! Acceptance suite for the `session` front door (the PR-5 API redesign):
+//!
+//! 1. **Old-vs-new bitwise equivalence** — for all three app graphs ×
+//!    {dense, csr, compact} × batch {1, 4}, a `Session` built through
+//!    `Model::from_graph(..).session().…().build()` produces **bitwise
+//!    identical** outputs to (a) the pre-redesign recipe spelled out by
+//!    hand (`prune_graph` → `PassManager` → `ExecConfig` →
+//!    `Engine::with_config`) and (b) the deprecated `prepare_variant*`
+//!    shims that used to be the public entry points.
+//! 2. **Typed negative paths** — `SessionError::{UnknownApp,
+//!    UnknownVariant, ZeroThreads, ZeroBatch}` are returned (and
+//!    downcastable) instead of panics or stringly errors.
+//! 3. **Introspection** — `shapes()` / `memory()` / `schedules_json()`
+//!    agree with the underlying plan, and serving runs as a mode of the
+//!    session (including the adaptive `max_wait` batching knob).
+
+use prt_dnn::apps::builders::{build_coloring, build_sr, build_style};
+use prt_dnn::apps::{prune_graph, AppSpec, Variant};
+use prt_dnn::dsl::Graph;
+use prt_dnn::executor::{Engine, ExecConfig, SparseMode};
+use prt_dnn::passes::PassManager;
+use prt_dnn::session::{Format, Model, ServeOpts, SessionError};
+use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::TuneOpts;
+
+fn structured_input(shape: &[usize]) -> Tensor {
+    let mut x = Tensor::zeros(shape);
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        *v = 0.5 + 0.4 * ((i as f32) * 0.23).sin();
+    }
+    x
+}
+
+fn app_graph(app: &str) -> Graph {
+    match app {
+        "style" => build_style(32, 0.25, 151),
+        "coloring" => build_coloring(32, 0.25, 152),
+        "sr" => build_sr(24, 4, 0.25, 153),
+        _ => unreachable!(),
+    }
+}
+
+/// The pre-redesign recipe, spelled out by hand exactly as
+/// `prepare_variant_batched` used to implement it: clone, prune when the
+/// variant prunes, run the pass pipeline when it compiles, pick the
+/// storage mode, compile an `Engine`.
+fn legacy_engine(
+    base: &Graph,
+    spec: &AppSpec,
+    variant: Variant,
+    threads: usize,
+    batch: usize,
+) -> Engine {
+    let mut g = base.clone();
+    let schemes = match variant {
+        Variant::Pruned | Variant::PrunedCompiler | Variant::PrunedFusedOnly => {
+            prune_graph(&mut g, spec)
+        }
+        _ => Vec::new(),
+    };
+    if matches!(
+        variant,
+        Variant::PrunedCompiler | Variant::PrunedFusedOnly | Variant::UnprunedCompiler
+    ) {
+        PassManager::default().run_fixpoint(&mut g, 4);
+    }
+    let sparse = match variant {
+        Variant::Unpruned | Variant::UnprunedCompiler => SparseMode::Dense,
+        Variant::Pruned | Variant::PrunedFusedOnly => SparseMode::Csr,
+        Variant::PrunedCompiler => SparseMode::Compact,
+    };
+    let cfg = ExecConfig { sparse, threads, schemes, tune: TuneOpts::off(), batch };
+    Engine::with_config(&g, &cfg).unwrap()
+}
+
+/// Session-built plans are bitwise identical to both legacy paths for
+/// 3 apps × {dense, csr, compact} × batch {1, 4}.
+#[test]
+fn session_matches_legacy_paths_bitwise() {
+    let threads = 2;
+    for app in ["style", "coloring", "sr"] {
+        let base = app_graph(app);
+        let spec = AppSpec::for_app(app);
+        for (tag, variant, format) in [
+            ("dense", Variant::Unpruned, Format::Dense),
+            ("csr", Variant::Pruned, Format::Csr),
+            ("compact", Variant::PrunedCompiler, Format::Compact),
+        ] {
+            let model = Model::from_graph(&base, &spec, variant);
+            assert_eq!(model.default_format(), format, "{}/{}", app, tag);
+            for batch in [1usize, 4] {
+                let session = model
+                    .session()
+                    .threads(threads)
+                    .batch(batch)
+                    .build()
+                    .unwrap_or_else(|e| panic!("{}/{}/b{}: {}", app, tag, batch, e));
+
+                let x = structured_input(&session.shapes().inputs[0]);
+
+                // (a) the hand-spelled pre-redesign recipe.
+                let old = legacy_engine(&base, &spec, variant, threads, batch);
+                let want = old.run(std::slice::from_ref(&x)).unwrap();
+
+                // (b) the deprecated shim that used to be the entry point.
+                #[allow(deprecated)]
+                let (shim, _) = prt_dnn::apps::variant::prepare_variant_batched(
+                    &base,
+                    variant,
+                    &spec,
+                    threads,
+                    batch,
+                    &TuneOpts::off(),
+                )
+                .unwrap();
+                let via_shim = shim.run(std::slice::from_ref(&x)).unwrap();
+
+                let got = session.run(std::slice::from_ref(&x)).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (k, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                    assert_eq!(a.shape(), b.shape(), "{}/{}/b{}", app, tag, batch);
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{}/{}/b{} output {}: session moved bits vs legacy recipe",
+                        app,
+                        tag,
+                        batch,
+                        k
+                    );
+                }
+                for (a, b) in want.iter().zip(via_shim.iter()) {
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{}/{}/b{}: deprecated shim drifted from legacy recipe",
+                        app,
+                        tag,
+                        batch
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The option space fails with matchable typed errors, not panics.
+#[test]
+fn typed_negative_paths() {
+    // Unknown app.
+    let err = Model::for_app("no-such-app", Variant::Unpruned).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<SessionError>(),
+        Some(&SessionError::UnknownApp("no-such-app".into()))
+    );
+
+    // Unknown variant name.
+    assert_eq!(
+        Variant::parse("warp-speed"),
+        Err(SessionError::UnknownVariant("warp-speed".into()))
+    );
+
+    // Zero thread / batch budgets.
+    let base = app_graph("style");
+    let model = Model::from_graph(&base, &AppSpec::for_app("style"), Variant::Unpruned);
+    let err = model.session().threads(0).build().unwrap_err();
+    assert_eq!(err.downcast_ref::<SessionError>(), Some(&SessionError::ZeroThreads));
+    let err = model.session().batch(0).build().unwrap_err();
+    assert_eq!(err.downcast_ref::<SessionError>(), Some(&SessionError::ZeroBatch));
+    // The messages are stable and mention the constraint.
+    assert!(SessionError::ZeroBatch.to_string().contains("batch"));
+
+    // Wrong input geometry still fails at run time (executor-level check).
+    let session = model.session().threads(1).build().unwrap();
+    assert!(session.run(&[Tensor::zeros(&[1, 3, 8, 8])]).is_err());
+    assert!(session.run(&[]).is_err());
+}
+
+/// Introspection agrees with the plan, and per-frame geometry divides the
+/// batch back out.
+#[test]
+fn introspection_is_consistent() {
+    let base = app_graph("coloring");
+    let model = Model::from_graph(&base, &AppSpec::for_app("coloring"), Variant::PrunedCompiler);
+    let session = model.session().threads(1).batch(3).build().unwrap();
+    assert_eq!(session.batch(), 3);
+    assert_eq!(session.threads(), 1);
+    assert_eq!(session.variant(), Some(Variant::PrunedCompiler));
+
+    let shapes = session.shapes();
+    assert_eq!(shapes.inputs, session.plan().input_shapes());
+    assert_eq!(shapes.outputs, session.plan().output_shapes());
+    assert_eq!(shapes.inputs[0][0], 3 * shapes.frame_inputs[0][0]);
+    assert_eq!(shapes.outputs[0][0], 3 * shapes.frame_outputs[0][0]);
+
+    let mem = session.memory();
+    assert_eq!(mem.peak_bytes, mem.dedicated_bytes + mem.shared_bytes);
+    assert_eq!(session.weight_bytes(), session.plan().weight_bytes);
+
+    // Untuned plans still serialize their (default) per-step schedules.
+    let sched = session.schedules_json();
+    assert!(!sched.as_obj().unwrap().is_empty());
+
+    // run_frames round-trips per-frame tensors through the batched plan.
+    let frames: Vec<Vec<Tensor>> = (0..3)
+        .map(|f| vec![structured_input(&shapes.frame_inputs[0]).map(|v| v + f as f32 * 0.01)])
+        .collect();
+    let refs: Vec<&[Tensor]> = frames.iter().map(|v| v.as_slice()).collect();
+    let outs = session.run_frames(&refs).unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0][0].shape(), shapes.frame_outputs[0].as_slice());
+}
+
+/// Serving is a mode of the session: batch comes from the plan, the
+/// adaptive deadline is a serve knob, and the report carries it.
+#[test]
+fn serving_is_a_session_mode() {
+    let base = app_graph("style");
+    let model = Model::from_graph(&base, &AppSpec::for_app("style"), Variant::PrunedCompiler);
+    let session = model.session().threads(2).batch(2).build().unwrap();
+    let fshape = session.shapes().frame_inputs[0].clone();
+    let report = session
+        .serve(
+            &ServeOpts {
+                fps: 200.0,
+                queue_depth: 8,
+                workers: 1,
+                frames: 16,
+                max_wait: std::time::Duration::from_millis(500),
+            },
+            |_| Tensor::full(&fshape, 0.5),
+        )
+        .unwrap();
+    assert_eq!(report.processed + report.dropped, 16);
+    assert_eq!(report.batch, 2, "serve batch comes from the session's plan");
+    assert!(report.frames_per_dispatch >= 1.0);
+    assert_eq!(report.max_wait_ms, 500.0);
+    let j = report.to_json();
+    assert_eq!(j.get("batch").as_usize(), Some(2));
+    assert_eq!(j.get("max_wait_ms").as_f64(), Some(500.0));
+}
+
+/// A tuned session is bitwise identical to the untuned one (the tuner
+/// moves time, never bits) — the front-door mirror of
+/// `tuner_equivalence.rs`.
+#[test]
+fn tuned_session_matches_untuned_bitwise() {
+    let cache = std::env::temp_dir()
+        .join(format!("prt-session-api-tune-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&cache);
+    let base = app_graph("style");
+    let model = Model::from_graph(&base, &AppSpec::for_app("style"), Variant::PrunedCompiler);
+    let plain = model.session().threads(2).build().unwrap();
+    let tuned = model
+        .session()
+        .threads(2)
+        .tune(TuneOpts::quick(&cache))
+        .build()
+        .unwrap();
+    assert!(!plain.plan().tuned() && tuned.plan().tuned());
+    let x = structured_input(&plain.shapes().inputs[0]);
+    let a = plain.run(std::slice::from_ref(&x)).unwrap();
+    let b = tuned.run(std::slice::from_ref(&x)).unwrap();
+    assert_eq!(a[0].data(), b[0].data(), "tuned session moved bits");
+    let _ = std::fs::remove_file(&cache);
+}

@@ -151,6 +151,88 @@ fn dense_steps_are_tuned_and_match_default_bitwise() {
     }
 }
 
+/// Depthwise (`Op::DepthwiseConv2d`) steps get TuneRequests too (the
+/// ROADMAP gap): the tuner searches the dw split knob — plane-chunk vs
+/// row-chunk pool partitioning — and the tuned plan stays bitwise
+/// identical to the default. The plan-side schedule serialization lists
+/// the depthwise step, proving a request was issued for it.
+#[test]
+fn depthwise_steps_are_tuned_and_match_default_bitwise() {
+    use prt_dnn::dsl::op::{Activation, Op, PadMode};
+    use prt_dnn::util::rng::Rng;
+
+    let mut rng = Rng::new(89);
+    let mut g = Graph::new("dw-net");
+    let x = g.add("x", Op::Input { shape: vec![1, 6, 16, 16] }, &[]);
+    let c1 = g.add(
+        "c1",
+        Op::Conv2d {
+            out_c: 6,
+            in_c: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            pad_mode: PadMode::Zeros,
+            fused_act: Activation::Relu,
+        },
+        &[x],
+    );
+    g.set_param("c1.weight", Tensor::randn(&[6, 6, 3, 3], &mut rng));
+    let dw = g.add(
+        "dw",
+        Op::DepthwiseConv2d {
+            c: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            fused_act: Activation::Relu,
+        },
+        &[c1],
+    );
+    g.set_param("dw.weight", Tensor::randn(&[6, 1, 3, 3], &mut rng));
+    g.set_param("dw.bias", Tensor::randn(&[6], &mut rng).map(|v| v * 0.1));
+    g.add("out", Op::Output, &[dw]);
+
+    for &threads in &[1usize, 4] {
+        let base_cfg = ExecConfig::dense(threads);
+        let cache = tmp(&format!("dw-t{}", threads));
+        let _ = std::fs::remove_file(&cache);
+        let tuned_cfg = ExecConfig::dense(threads).with_tuning(TuneOpts::quick(&cache));
+
+        let p0 = Planner::plan(&g, &base_cfg).unwrap();
+        let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+        assert!(p1.tuned());
+        // A TuneRequest was issued for the depthwise step: its schedule
+        // shows up in the plan-side serialization, and the cold cache
+        // missed at least twice (conv + dw).
+        let sched = p1.schedules_json();
+        assert!(
+            sched.get("dw").as_obj().is_some(),
+            "t={}: no schedule recorded for the depthwise step: {}",
+            threads,
+            sched
+        );
+        assert!(
+            p1.tune_stats().cache_misses >= 2,
+            "t={}: conv + dw must both tune",
+            threads
+        );
+
+        let x = structured_input(&p0.input_shapes()[0]);
+        let o0 = ExecContext::for_plan(&p0).run(&p0, std::slice::from_ref(&x)).unwrap();
+        let o1 = ExecContext::for_plan(&p1).run(&p1, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(
+            o0[0].data(),
+            o1[0].data(),
+            "t={}: tuned depthwise schedule moved bits",
+            threads
+        );
+        let _ = std::fs::remove_file(&cache);
+    }
+}
+
 /// The cache's JSON form is deterministic: parse(serialize(c)) == c and a
 /// second serialization is byte-identical (sorted keys, stable number
 /// formatting) — warm caches diff cleanly across runs.

@@ -1,22 +1,25 @@
 //! Acceptance check for the static memory planner **and the persistent
-//! compute pool**: steady-state `ExecContext::run_into` performs **zero
-//! heap allocations** — at `threads = 1` and at `threads = 4`, for
-//! single-frame **and batched** plans (batch = 4) — and two consecutive
-//! runs allocate no new arena bytes.
+//! compute pool**, driven through the `session` front door: a plan built
+//! by `Model::session().…().build()` still executes with **zero heap
+//! allocations** in steady state — at `threads = 1` and at `threads = 4`,
+//! for single-frame **and batched** plans (batch = 4) — and two
+//! consecutive runs allocate no new arena bytes.
 //!
 //! A counting global allocator wraps the system allocator; the measured
 //! loop takes the minimum over several trials so unrelated background
 //! allocation (test harness bookkeeping) cannot flake the assertion.
-//! Multi-threaded kernels fork-join on the context's pool (spawned once
-//! at `ExecContext::for_plan`), passing the closure by reference through
-//! the pool's task slot — so even at `threads = 4` a frame allocates
-//! nothing: no thread spawns, no boxed jobs, no channel nodes.
+//! The allocation-free loop itself is `ExecContext::run_into` on a
+//! context built from the session's plan — `Session::run` returns owned
+//! output tensors by design, so the zero-alloc serving path is plan +
+//! private context, exactly what the coordinator workers do.
 
 use prt_dnn::apps::builders::{build_coloring, build_sr, build_style};
-use prt_dnn::apps::{prune_graph, AppSpec};
-use prt_dnn::executor::{ExecConfig, ExecContext, Planner};
+use prt_dnn::apps::{AppSpec, Variant};
+use prt_dnn::dsl::Graph;
+use prt_dnn::executor::ExecContext;
 use prt_dnn::pruning::scheme::project_scheme;
 use prt_dnn::pruning::verify::apply_mask;
+use prt_dnn::session::{Model, Session};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
@@ -42,24 +45,24 @@ fn min_allocs_per_frame(
     min
 }
 
-fn assert_zero_alloc(tag: &str, g: &prt_dnn::dsl::Graph, cfg: &ExecConfig) {
-    let plan = Planner::plan(g, cfg).unwrap();
+fn assert_zero_alloc(tag: &str, session: &Session) {
+    let plan = session.plan();
     // Pool workers spawn here — at construction, never per frame.
-    let mut ctx = ExecContext::for_plan(&plan);
-    assert_eq!(ctx.pool().threads(), cfg.threads.max(1), "{}: pool size", tag);
+    let mut ctx = ExecContext::for_plan(plan);
+    assert_eq!(ctx.pool().threads(), session.threads(), "{}: pool size", tag);
     let mut outs: Vec<Tensor> =
         plan.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
-    let x = Tensor::full(&plan.input_shapes()[0], 0.5);
+    let x = Tensor::full(&session.shapes().inputs[0], 0.5);
 
     // Warm up (first frames may touch lazily initialised state: OS mutex /
     // condvar internals, thread-locals), then assert the arena is already
     // exactly plan-sized and stays that way.
-    ctx.run_into(&plan, std::slice::from_ref(&x), &mut outs).unwrap();
+    ctx.run_into(plan, std::slice::from_ref(&x), &mut outs).unwrap();
     let (arena0, scratch0) = (ctx.arena_len(), ctx.scratch_len());
     assert_eq!(arena0, plan.arena_len(), "{}: arena != plan size", tag);
     assert!(scratch0 >= plan.scratch_len(), "{}: scratch undersized", tag);
 
-    let min = min_allocs_per_frame(&mut ctx, &plan, &x, &mut outs, 3);
+    let min = min_allocs_per_frame(&mut ctx, plan, &x, &mut outs, 3);
     assert_eq!(
         min, 0,
         "{}: steady-state run_into allocated {} times per frame",
@@ -67,9 +70,39 @@ fn assert_zero_alloc(tag: &str, g: &prt_dnn::dsl::Graph, cfg: &ExecConfig) {
     );
 
     // Two consecutive runs allocate no new arena bytes.
-    ctx.run_into(&plan, std::slice::from_ref(&x), &mut outs).unwrap();
+    ctx.run_into(plan, std::slice::from_ref(&x), &mut outs).unwrap();
     assert_eq!(ctx.arena_len(), arena0, "{}: arena grew between frames", tag);
     assert_eq!(ctx.scratch_len(), scratch0, "{}: scratch grew between frames", tag);
+}
+
+/// Session for one app variant over a custom-scale graph.
+fn variant_session(base: &Graph, app: &str, variant: Variant, threads: usize) -> Session {
+    Model::from_graph(base, &AppSpec::for_app(app), variant)
+        .session()
+        .threads(threads)
+        .build()
+        .unwrap()
+}
+
+/// Prune in place and wrap without running passes — the historical
+/// compact configuration this suite has always measured (pass-fused
+/// graphs are covered by the session/tuner equivalence suites).
+fn pruned_compact_model(mut g: Graph, app: &str) -> Model {
+    let schemes = prt_dnn::apps::prune_graph(&mut g, &AppSpec::for_app(app));
+    assert!(!schemes.is_empty(), "{}: nothing pruned", app);
+    Model::from_compiled(g, schemes)
+}
+
+/// The `Reordered`-fallback session: a filter scheme has no declared
+/// column/pattern structure, so the planner compiles the filter-signature
+/// reorder kernel (per-group gather panels).
+fn reordered_fallback_model(seed: u64) -> Model {
+    let mut g = build_style(48, 0.25, seed);
+    let name = "res0_c1";
+    let w = g.param(&format!("{}.weight", name)).unwrap().clone();
+    let s = project_scheme(&w, "filter", 0.5, None);
+    g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
+    Model::from_compiled(g, vec![(name.to_string(), s)])
 }
 
 /// One test fn on purpose: the allocation counter is process-global, so
@@ -86,54 +119,39 @@ fn steady_state_is_allocation_free() {
         let g = build_style(48, 0.25, 51);
         assert_zero_alloc(
             &format!("style/dense/t{}", threads),
-            &g,
-            &ExecConfig::dense(threads),
+            &variant_session(&g, "style", Variant::Unpruned, threads),
         );
 
         // Style transfer uses column pruning → ColumnCompact kernels.
-        let mut g = build_style(48, 0.25, 52);
-        let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
-        assert!(!schemes.is_empty());
+        let model = pruned_compact_model(build_style(48, 0.25, 52), "style");
         assert_zero_alloc(
             &format!("style/compact/t{}", threads),
-            &g,
-            &ExecConfig::compact(threads, schemes),
+            &model.session().threads(threads).build().unwrap(),
         );
 
         // Coloring uses pattern pruning → PatternPlan kernels.
-        let mut g = build_coloring(48, 0.25, 53);
-        let schemes = prune_graph(&mut g, &AppSpec::for_app("coloring"));
-        assert!(!schemes.is_empty());
+        let model = pruned_compact_model(build_coloring(48, 0.25, 53), "coloring");
         assert_zero_alloc(
             &format!("coloring/compact/t{}", threads),
-            &g,
-            &ExecConfig::compact(threads, schemes),
+            &model.session().threads(threads).build().unwrap(),
         );
 
         // Super resolution: pattern pruning + pixel shuffle tail.
-        let mut g = build_sr(24, 4, 0.25, 54);
-        let schemes = prune_graph(&mut g, &AppSpec::for_app("sr"));
-        assert!(!schemes.is_empty());
+        let model = pruned_compact_model(build_sr(24, 4, 0.25, 54), "sr");
         assert_zero_alloc(
             &format!("sr/compact/t{}", threads),
-            &g,
-            &ExecConfig::compact(threads, schemes),
+            &model.session().threads(threads).build().unwrap(),
         );
 
-        // The `Reordered` fallback (filter scheme → filter-signature
-        // reorder): its per-group activation panels now come out of the
-        // plan-sized scratch, so even this path allocates nothing.
-        let mut g = build_style(48, 0.25, 55);
-        let name = "res0_c1";
-        let w = g.param(&format!("{}.weight", name)).unwrap().clone();
-        let s = project_scheme(&w, "filter", 0.5, None);
-        g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
-        let schemes = vec![(name.to_string(), s)];
-        assert_zero_alloc(
-            &format!("style/reordered-fallback/t{}", threads),
-            &g,
-            &ExecConfig::compact(threads, schemes),
-        );
+        // The `Reordered` fallback: its per-group activation panels come
+        // out of the plan-sized scratch, so even this path allocates
+        // nothing.
+        let session = reordered_fallback_model(55)
+            .session()
+            .threads(threads)
+            .build()
+            .unwrap();
+        assert_zero_alloc(&format!("style/reordered-fallback/t{}", threads), &session);
     }
 
     // Batched plans (batch = 4, threads = 4): the arena/scratch ranges
@@ -142,56 +160,51 @@ fn steady_state_is_allocation_free() {
     // zero allocations per (batched) frame on all three apps and on the
     // Reordered-fallback panel path.
     {
-        let mut g = build_style(48, 0.25, 61);
-        let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
+        let model = pruned_compact_model(build_style(48, 0.25, 61), "style");
         assert_zero_alloc(
             "style/compact/b4/t4",
-            &g,
-            &ExecConfig::compact(4, schemes).with_batch(4),
+            &model.session().threads(4).batch(4).build().unwrap(),
         );
 
-        let mut g = build_coloring(48, 0.25, 62);
-        let schemes = prune_graph(&mut g, &AppSpec::for_app("coloring"));
+        let model = pruned_compact_model(build_coloring(48, 0.25, 62), "coloring");
         assert_zero_alloc(
             "coloring/compact/b4/t4",
-            &g,
-            &ExecConfig::compact(4, schemes).with_batch(4),
+            &model.session().threads(4).batch(4).build().unwrap(),
         );
 
-        let mut g = build_sr(24, 4, 0.25, 63);
-        let schemes = prune_graph(&mut g, &AppSpec::for_app("sr"));
+        let model = pruned_compact_model(build_sr(24, 4, 0.25, 63), "sr");
         assert_zero_alloc(
             "sr/compact/b4/t4",
-            &g,
-            &ExecConfig::compact(4, schemes).with_batch(4),
+            &model.session().threads(4).batch(4).build().unwrap(),
         );
 
         // Reordered fallback at batch 4: the per-group activation panels
         // stay per pool thread (not per sample), pre-sized by the plan.
-        let mut g = build_style(48, 0.25, 64);
-        let name = "res0_c1";
-        let w = g.param(&format!("{}.weight", name)).unwrap().clone();
-        let s = project_scheme(&w, "filter", 0.5, None);
-        g.set_param(format!("{}.weight", name), apply_mask(&w, &s));
-        assert_zero_alloc(
-            "style/reordered-fallback/b4/t4",
-            &g,
-            &ExecConfig::compact(4, vec![(name.to_string(), s)]).with_batch(4),
-        );
+        let s = reordered_fallback_model(64).session().threads(4).batch(4).build().unwrap();
+        assert_zero_alloc("style/reordered-fallback/b4/t4", &s);
     }
 
     // A tuned plan loaded from a warm cache is equally allocation-free:
-    // warm the cache once, then measure a plan that answered every key
+    // warm the cache once, then measure a session that answered every key
     // from it (tuning work happens at plan time, never per frame).
     let cache = std::env::temp_dir()
         .join(format!("prt-zero-alloc-tune-{}.json", std::process::id()));
     let _ = std::fs::remove_file(&cache);
-    let mut g = build_style(48, 0.25, 57);
-    let schemes = prune_graph(&mut g, &AppSpec::for_app("style"));
-    let cfg =
-        ExecConfig::compact(4, schemes).with_tuning(TuneOpts::quick(&cache));
-    let warm = Planner::plan(&g, &cfg).unwrap();
-    assert!(warm.tuned() && warm.tune_stats().bench_runs > 0);
-    assert_zero_alloc("style/tuned-warm-cache/t4", &g, &cfg);
+    let model = pruned_compact_model(build_style(48, 0.25, 57), "style");
+    let warm = model
+        .session()
+        .threads(4)
+        .tune(TuneOpts::quick(&cache))
+        .build()
+        .unwrap();
+    assert!(warm.plan().tuned() && warm.plan().tune_stats().bench_runs > 0);
+    let tuned = model
+        .session()
+        .threads(4)
+        .tune(TuneOpts::quick(&cache))
+        .build()
+        .unwrap();
+    assert_eq!(tuned.plan().tune_stats().bench_runs, 0, "cache must be warm");
+    assert_zero_alloc("style/tuned-warm-cache/t4", &tuned);
     let _ = std::fs::remove_file(&cache);
 }
