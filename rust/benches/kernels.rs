@@ -1,14 +1,17 @@
-//! K-micro — kernel microbenchmarks: dense GEMM GFLOP/s by shape and
-//! thread count, conv tiers (dense / CSR / column-compact / reordered) on
-//! a representative layer. Feeds the §Perf iteration log.
+//! K-micro — kernel microbenchmarks: dense GEMM GFLOP/s by shape, thread
+//! count and microkernel ISA (scalar vs the detected SIMD tier, order-
+//! preserving and relaxed-FMA flavors, narrow and wide register tiles),
+//! plus conv tiers (dense / CSR / column-compact / reordered) on a
+//! representative layer. Feeds the §Perf iteration log.
 
 use prt_dnn::bench::{bench_ms, ms, Table};
 use prt_dnn::dsl::op::{Activation, PadMode};
 use prt_dnn::kernels::conv::{
     conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_reordered, ConvScratch,
 };
-use prt_dnn::kernels::gemm::gemm;
+use prt_dnn::kernels::gemm::{gemm, gemm_with};
 use prt_dnn::kernels::im2col::ConvGeom;
+use prt_dnn::kernels::micro::{self, Isa};
 use prt_dnn::pruning::scheme::{project_scheme, Scheme};
 use prt_dnn::pruning::verify::apply_mask;
 use prt_dnn::reorder::{ReorderPlan, Schedule as LaneSchedule};
@@ -46,6 +49,55 @@ fn main() {
                 ms(s.mean),
                 format!("{:.2}", gflops),
             ]);
+        }
+    }
+    t.print();
+
+    // Microkernel ISA sweep: the same GEMM under scalar, the detected
+    // order-preserving SIMD tier (narrow 2×8 and wide 4×16 register
+    // tiles) and the relaxed-FMA flavor. On a scalar-only host (or under
+    // PALLAS_FORCE_SCALAR) every row collapses to the scalar kernel.
+    let det = micro::detect();
+    let mut t = Table::new(
+        format!("K-micro GEMM microkernel ISA sweep (detected: {})", det.tag()),
+        &["M", "K", "N", "threads", "isa", "mr x nr", "relaxed", "ms", "GFLOP/s", "vs scalar"],
+    );
+    let mut flavors: Vec<(Isa, usize, usize, bool)> = vec![(Isa::Scalar, 2, 8, false)];
+    if det != Isa::Scalar {
+        flavors.push((det, 2, 8, false));
+        flavors.push((det, 4, 16, false));
+        flavors.push((det, 4, 16, true));
+    }
+    for &(m, k, n) in &[(64, 576, 4096), (128, 1152, 4096)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        for threads in [1, max_threads] {
+            let pool = ComputePool::new(threads);
+            let mut scalar_ms = 0.0f64;
+            for &(isa, mr, nr, relaxed) in &flavors {
+                let sched = Schedule { isa, mr, nr, relaxed, ..Schedule::default() };
+                let mut c = vec![0.0f32; m * n];
+                let s = bench_ms(2, 8, || {
+                    c.iter_mut().for_each(|v| *v = 0.0);
+                    gemm_with(m, k, n, &a, &b, &mut c, &pool, &sched);
+                });
+                if isa == Isa::Scalar {
+                    scalar_ms = s.mean;
+                }
+                let gflops = 2.0 * (m * k * n) as f64 / (s.mean / 1e3) / 1e9;
+                t.row(&[
+                    format!("{}", m),
+                    format!("{}", k),
+                    format!("{}", n),
+                    format!("{}", threads),
+                    isa.tag().to_string(),
+                    format!("{}x{}", mr, nr),
+                    format!("{}", relaxed),
+                    ms(s.mean),
+                    format!("{:.2}", gflops),
+                    format!("{:.2}x", scalar_ms / s.mean.max(1e-9)),
+                ]);
+            }
         }
     }
     t.print();

@@ -16,8 +16,13 @@
 //! configuration is additionally measured under **auto-tuned schedules**
 //! (`--tune`-equivalent; cache in the system temp dir, warm across bench
 //! invocations) — the `tuned` / `tuned_speedup` fields and columns
-//! compare it against the fixed default schedules. A **T1c** table
-//! measures batched steady-state throughput (`--batch N`, default 4):
+//! compare it against the fixed default schedules — and once more pinned
+//! to the **scalar microkernels** (`force_scalar`): the `isa` T1-JSON
+//! field records each session's kernel tier and the `simd_speedup`
+//! field/column reports scalar-ms / simd-ms, isolating the SIMD
+//! contribution on this host. A **T1c** table measures batched
+//! steady-state throughput (`--batch N`, default 4) under auto-tuned
+//! schedules (batched plans tune their real batch-N dispatch geometry):
 //! the pruning+compiler engine compiled at batch N runs N frames per
 //! dispatch, reported as frames/s next to the batch-1 engine, with
 //! allocs/frame still zero (`batch` / `fps` T1-JSON fields).
@@ -45,13 +50,22 @@ fn session_for(
     threads: usize,
     batch: usize,
     tune: TuneOpts,
+    force_scalar: bool,
 ) -> anyhow::Result<Session> {
     Model::for_app_scaled(app, variant, width, 42)?
         .session()
         .threads(threads)
         .batch(batch)
         .tune(tune)
+        .force_scalar(force_scalar)
         .build()
+}
+
+/// Warm tune-cache path shared by the tuned T1a cell and the T1c batched
+/// table (batched plans key their schedules by batch, so one file per
+/// (app, width, threads) serves every batch).
+fn tune_cache_path(app: &str, width: f64, threads: usize) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("prt-dnn-tune-{}-w{}-t{}.json", app, width, threads))
 }
 
 /// Measured heap allocations per frame of a warm, single-context
@@ -132,6 +146,9 @@ fn main() -> anyhow::Result<()> {
             "allocs/frame",
             "tuned ms",
             "tuned_speedup",
+            "isa",
+            "scalar ms",
+            "simd_speedup",
         ],
     );
     let mut json_lines: Vec<Json> = Vec::new();
@@ -142,8 +159,10 @@ fn main() -> anyhow::Result<()> {
         let mut peak = 0usize;
         let mut apf = 0.0f64;
         let mut warm = 0.0f64;
+        let mut isa_tag = "scalar";
         for variant in Variant::table1() {
-            let session = session_for(app, variant, width, threads, 1, TuneOpts::off())?;
+            let session =
+                session_for(app, variant, width, threads, 1, TuneOpts::off(), false)?;
             let shape = session.shapes().inputs[0].clone();
             let x = Tensor::full(&shape, 0.5);
             // Cold start first: fresh context = pool spawn + first frame.
@@ -164,6 +183,7 @@ fn main() -> anyhow::Result<()> {
                 peak = session.memory().peak_bytes;
                 apf = variant_apf;
                 warm = warm_ms;
+                isa_tag = session.isa().tag();
             }
             let mut j = JsonObj::new();
             j.insert("app", app.to_string());
@@ -175,13 +195,13 @@ fn main() -> anyhow::Result<()> {
             j.insert("warmup_ms", warm_ms);
             j.insert("allocs_per_frame", variant_apf);
             j.insert("tuned", false);
+            j.insert("isa", session.isa().tag());
             json_lines.push(Json::Obj(j));
         }
         // Pruning+compiler once more under auto-tuned schedules. The
         // cache lives in the temp dir, so repeated bench invocations plan
         // without a single micro-benchmark run.
-        let tune_path = std::env::temp_dir()
-            .join(format!("prt-dnn-tune-{}-w{}-t{}.json", app, width, threads));
+        let tune_path = tune_cache_path(app, width, threads);
         let tuned = session_for(
             app,
             Variant::PrunedCompiler,
@@ -189,6 +209,7 @@ fn main() -> anyhow::Result<()> {
             threads,
             1,
             TuneOpts::on(&tune_path),
+            false,
         )?;
         let tx = Tensor::full(&tuned.shapes().inputs[0], 0.5);
         let ts = bench_auto_ms(budget, || {
@@ -206,6 +227,37 @@ fn main() -> anyhow::Result<()> {
         j.insert("tuned", true);
         j.insert("tuned_speedup", tuned_speedup);
         j.insert("tune_bench_runs", tstats.bench_runs);
+        j.insert("isa", tuned.isa().tag());
+        json_lines.push(Json::Obj(j));
+
+        // Pruning+compiler once more pinned to the scalar microkernels:
+        // scalar-ms / simd-ms isolates the SIMD tier's contribution (1.0
+        // by construction on a scalar-only host).
+        let scalar = session_for(
+            app,
+            Variant::PrunedCompiler,
+            width,
+            threads,
+            1,
+            TuneOpts::off(),
+            true,
+        )?;
+        let sx = Tensor::full(&scalar.shapes().inputs[0], 0.5);
+        let ss = bench_auto_ms(budget, || {
+            let _ = scalar.run(std::slice::from_ref(&sx)).unwrap();
+        });
+        let simd_speedup = ss.mean / last.max(1e-9);
+        let mut j = JsonObj::new();
+        j.insert("app", app.to_string());
+        j.insert("variant", Variant::PrunedCompiler.name());
+        j.insert("threads", threads);
+        j.insert("batch", 1usize);
+        j.insert("latency", summary_json(&ss));
+        j.insert("memory", mem_json(&scalar.memory()));
+        j.insert("tuned", false);
+        j.insert("isa", scalar.isa().tag());
+        j.insert("force_scalar", true);
+        j.insert("simd_speedup", simd_speedup);
         json_lines.push(Json::Obj(j));
 
         row.insert(0, app.to_string());
@@ -215,6 +267,9 @@ fn main() -> anyhow::Result<()> {
         row.push(format!("{:.1}", apf));
         row.push(ms(ts.mean));
         row.push(format!("{:.2}x", tuned_speedup));
+        row.push(isa_tag.to_string());
+        row.push(ms(ss.mean));
+        row.push(format!("{:.2}x", simd_speedup));
         measured.row(&row);
     }
     measured.print();
@@ -225,7 +280,7 @@ fn main() -> anyhow::Result<()> {
     // with allocs/frame staying 0.
     let mut batched = Table::new(
         format!(
-            "T1c batched throughput (pruning+compiler, width={}, {} threads, frames/s)",
+            "T1c batched throughput (pruning+compiler, tuned, width={}, {} threads, frames/s)",
             width, threads
         ),
         &["app", "fps b=1", "fps b=N", "N", "speedup", "allocs/frame b=N"],
@@ -234,9 +289,19 @@ fn main() -> anyhow::Result<()> {
         let mut fps1 = 0.0f64;
         let mut fps_n = 0.0f64;
         let mut apf_n = 0.0f64;
+        // Batched plans tune their real batch-N dispatch geometry (the
+        // cache key carries the batch), sharing T1a's warm cache file.
+        let tune_path = tune_cache_path(app, width, threads);
         for &b in &[1usize, batch_n] {
-            let session =
-                session_for(app, Variant::PrunedCompiler, width, threads, b, TuneOpts::off())?;
+            let session = session_for(
+                app,
+                Variant::PrunedCompiler,
+                width,
+                threads,
+                b,
+                TuneOpts::on(&tune_path),
+                false,
+            )?;
             let x = Tensor::full(&session.shapes().inputs[0], 0.5);
             let s = bench_auto_ms(budget, || {
                 let _ = session.run(std::slice::from_ref(&x)).unwrap();
@@ -258,7 +323,9 @@ fn main() -> anyhow::Result<()> {
             j.insert("memory", mem_json(&session.memory()));
             j.insert("fps", fps);
             j.insert("allocs_per_frame", apf);
-            j.insert("tuned", false);
+            j.insert("tuned", true);
+            j.insert("tune_bench_runs", session.plan().tune_stats().bench_runs);
+            j.insert("isa", session.isa().tag());
             json_lines.push(Json::Obj(j));
         }
         batched.row(&[

@@ -204,6 +204,8 @@ pub fn prepare_variant_batched(
         schemes: model.schemes().to_vec(),
         tune: tune.clone(),
         batch,
+        force_scalar: false,
+        relaxed_simd: false,
     };
     let eng = Engine::with_config(model.graph(), &cfg)?;
     Ok((eng, model.schemes().to_vec()))

@@ -13,6 +13,7 @@ use crate::dsl::op::{Activation, Op, PadMode};
 use crate::dsl::{Graph, NodeId};
 use crate::executor::memory::{ArenaPlanner, MemoryUsage, PlanOptions};
 use crate::kernels::im2col::ConvGeom;
+use crate::kernels::micro::{self, Isa};
 use crate::pruning::scheme::Scheme;
 use crate::reorder::{ReorderPlan, Schedule as LaneSchedule};
 use crate::sparse::{ColumnCompact, Csr, GemmView};
@@ -104,6 +105,16 @@ pub struct ExecConfig {
     /// uniformly scaled ranges. Must be `>= 1`
     /// ([`Planner::plan_with`] rejects 0 with [`PlanError::ZeroBatch`]).
     pub batch: usize,
+    /// Pin the plan to the scalar microkernels even when the host has
+    /// SIMD ([`crate::kernels::micro`]) — the per-plan form of the
+    /// `PALLAS_FORCE_SCALAR` escape hatch. Default `false`.
+    pub force_scalar: bool,
+    /// Allow the relaxed (FMA-reordering) SIMD flavor on this plan's
+    /// steps. Results then differ from the scalar kernels by a few ulps;
+    /// leave `false` (the default) to stay under the bitwise contract.
+    /// Applied *after* tuning — the flavor is session policy, never part
+    /// of the searched/cached schedule space.
+    pub relaxed_simd: bool,
 }
 
 impl ExecConfig {
@@ -115,6 +126,8 @@ impl ExecConfig {
             schemes: vec![],
             tune: TuneOpts::off(),
             batch: 1,
+            force_scalar: false,
+            relaxed_simd: false,
         }
     }
 
@@ -126,6 +139,8 @@ impl ExecConfig {
             schemes: vec![],
             tune: TuneOpts::off(),
             batch: 1,
+            force_scalar: false,
+            relaxed_simd: false,
         }
     }
 
@@ -137,6 +152,8 @@ impl ExecConfig {
             schemes,
             tune: TuneOpts::off(),
             batch: 1,
+            force_scalar: false,
+            relaxed_simd: false,
         }
     }
 
@@ -149,6 +166,18 @@ impl ExecConfig {
     /// Set the number of frames fused per dispatch (builder form).
     pub fn with_batch(mut self, batch: usize) -> Self {
         self.batch = batch;
+        self
+    }
+
+    /// Pin this plan to the scalar microkernels (builder form).
+    pub fn with_force_scalar(mut self, force: bool) -> Self {
+        self.force_scalar = force;
+        self
+    }
+
+    /// Allow the relaxed (FMA) SIMD flavor on this plan (builder form).
+    pub fn with_relaxed_simd(mut self, relaxed: bool) -> Self {
+        self.relaxed_simd = relaxed;
         self
     }
 }
@@ -228,6 +257,7 @@ pub struct ExecutionPlan {
     tuned: bool,
     tune_stats: TuneStats,
     memory: MemoryUsage,
+    isa: Isa,
 }
 
 impl ExecutionPlan {
@@ -377,6 +407,16 @@ impl ExecutionPlan {
         self.tuned
     }
 
+    /// The microkernel ISA this plan was compiled against — the host's
+    /// detected tier ([`crate::kernels::micro::detect`]), or
+    /// [`Isa::Scalar`] when pinned via [`ExecConfig::force_scalar`] /
+    /// `PALLAS_FORCE_SCALAR`. Individual steps may still run scalar (the
+    /// tuner keeps the scalar kernel as a candidate) but never a
+    /// *different* SIMD tier.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
     /// What the tuner did while compiling this plan (all zero when tuning
     /// is off; `bench_runs == 0` when every key hit a warm cache).
     pub fn tune_stats(&self) -> TuneStats {
@@ -477,16 +517,22 @@ impl Planner {
         let mut scratch_len = 0usize;
         let mut panel_len = 0usize;
         let mut input_count = 0usize;
+        // Microkernel ISA for this plan, resolved once: the host's detected
+        // tier, unless pinned to scalar by config or environment. Every
+        // step schedule starts from it, so untuned plans get SIMD too, and
+        // the tuner can only ever mix {scalar, plan ISA} — never a tier
+        // this plan wasn't compiled against.
+        let isa = if cfg.force_scalar { Isa::Scalar } else { micro::detect() };
         // Schedule tuner for this pass: loads the on-disk cache when
         // configured, answers every request with the default schedule when
         // tuning is off.
-        let mut tuner = Tuner::new(cfg.tune.clone(), cfg.threads.max(1))?;
+        let mut tuner = Tuner::new(cfg.tune.clone(), cfg.threads.max(1), isa)?;
 
         for node in g.nodes().iter() {
             let bias = g
                 .param(&format!("{}.bias", node.name))
                 .map(|t| t.data().to_vec());
-            let mut step_sched = Schedule::default();
+            let mut step_sched = Schedule { isa, ..Schedule::default() };
             let step = match &node.op {
                 Op::Input { .. } => {
                     let s = Step::Input { index: input_count };
@@ -767,12 +813,19 @@ impl Planner {
                 Op::BroadcastSpatial => Step::BroadcastSpatial,
                 Op::Output => Step::Output,
             };
+            // The relaxed (FMA) flavor is session policy, never part of the
+            // searched/cached space: stamp it after tuning so cached
+            // winners stay flavor-free, then sanitize (scalar steps drop
+            // the flag again).
+            if cfg.relaxed_simd {
+                step_sched.relaxed = true;
+            }
             steps.push(PlanStep {
                 name: node.name.clone(),
                 step,
                 inputs: node.inputs.clone(),
                 inplace: false,
-                sched: step_sched,
+                sched: step_sched.sanitized(),
             });
         }
         // The cache is purely an optimization: a failed write must not
@@ -854,6 +907,7 @@ impl Planner {
             tuned: tuner.enabled(),
             tune_stats: tuner.stats(),
             memory,
+            isa,
         };
         debug_assert!(plan.validate_layout().is_ok());
         Ok(plan)
@@ -1003,6 +1057,44 @@ mod tests {
         let out_step = plan.steps.last().unwrap();
         assert!(matches!(out_step.step, Step::Output));
         assert!(out_step.inplace, "output should alias its producer");
+    }
+
+    #[test]
+    fn plan_pins_isa_and_force_scalar_overrides_it() {
+        let mut rng = Rng::new(9);
+        let g = residual_graph(&mut rng);
+        let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        assert_eq!(plan.isa(), micro::detect(), "default plan uses the host ISA");
+        let forced =
+            Planner::plan(&g, &ExecConfig::dense(1).with_force_scalar(true)).unwrap();
+        assert_eq!(forced.isa(), Isa::Scalar);
+        // Every tuner-visible schedule carries the plan's ISA tag.
+        for plan in [&plan, &forced] {
+            let scheds = plan.schedules_json();
+            let obj = scheds.as_obj().unwrap();
+            assert!(!obj.is_empty());
+            for (name, s) in obj.iter() {
+                assert_eq!(
+                    s.get("isa").as_str(),
+                    Some(plan.isa().tag()),
+                    "step '{}' must report the plan ISA",
+                    name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relaxed_simd_never_marks_scalar_steps() {
+        // On a scalar host (or under force_scalar) the relaxed flag must
+        // sanitize away — there is no relaxed scalar flavor.
+        let mut rng = Rng::new(10);
+        let g = residual_graph(&mut rng);
+        let cfg = ExecConfig::dense(1).with_force_scalar(true).with_relaxed_simd(true);
+        let plan = Planner::plan(&g, &cfg).unwrap();
+        for st in &plan.steps {
+            assert!(!st.sched.relaxed, "step '{}' kept relaxed on scalar", st.name);
+        }
     }
 
     #[test]

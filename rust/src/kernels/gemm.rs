@@ -1,17 +1,21 @@
 //! Blocked, multi-threaded dense GEMM: C[M,N] = A[M,K] · B[K,N] (+ C).
 //!
 //! Cache-blocked over K and N with an 8-wide inner loop the compiler can
-//! vectorise. Blocking tile sizes, the parallel split axis and the AXPY
-//! unroll width are carried by a [`Schedule`] (searched per layer shape by
+//! vectorise. Blocking tile sizes, the parallel split axis, the AXPY
+//! unroll width and the microkernel flavor (ISA × register tile, see
+//! [`micro`]) are carried by a [`Schedule`] (searched per layer shape by
 //! the [`tuner`](crate::tuner); [`Schedule::default`] reproduces the
 //! historical fixed parameters bit-for-bit). Work is partitioned across
 //! the persistent [`ComputePool`] along rows (M, the filter count) or
 //! columns (N, the pixel count) per the schedule; either split computes
-//! every C element with the same fp expression in the same order, so
-//! results are bitwise-identical across schedules and thread counts. This
-//! is the workhorse of both the unpruned baseline (im2col conv) and each
-//! reordered group's dense inner loop.
+//! every C element with the same fp expression in the same order, and the
+//! order-preserving SIMD flavors round each update exactly like the
+//! scalar loop, so results stay bitwise-identical across schedules and
+//! thread counts (only `relaxed` FMA flavors may differ — see
+//! [`micro`]). This is the workhorse of both the unpruned baseline
+//! (im2col conv) and each reordered group's dense inner loop.
 
+use crate::kernels::micro::{self, MicroKernel};
 use crate::tuner::schedule::{Schedule, SplitAxis};
 use crate::util::threadpool::{ComputePool, SendPtr};
 
@@ -66,6 +70,10 @@ fn gemm_ranged(
     n1: usize,
     sched: &Schedule,
 ) {
+    // One dispatch decision per ranged call (an atomic load + match once
+    // detection has run): unavailable ISAs fall back to the scalar kernel,
+    // so a foreign schedule can never fault.
+    let mk = micro::kernel_for(sched.isa, sched.relaxed);
     let mc = sched.mc.max(2);
     let kc = sched.kc.max(4);
     let nc = sched.nc.max(8);
@@ -78,7 +86,7 @@ fn gemm_ranged(
             let mut mb = m0;
             while mb < m1 {
                 let me = (mb + mc).min(m1);
-                block(a, b, c, k, n, mb, me, kb, ke, nb, ne, sched.unroll);
+                block(a, b, c, k, n, mb, me, kb, ke, nb, ne, sched, mk);
                 mb = me;
             }
             nb = ne;
@@ -104,12 +112,27 @@ unsafe fn crow_at<'a>(
     std::slice::from_raw_parts_mut(c.get().add(i * n + nb), ne - nb)
 }
 
-/// Inner macro-kernel: row-by-row AXPY over the K panel. For each (i, p)
-/// the scalar a[i,p] broadcasts against a contiguous b-row slice — this
-/// auto-vectorises well and is exactly the shape the reordered sparse
-/// kernel reuses (with packed columns). The K grouping is 4-aligned from
-/// offset 0 for every legal schedule (`kc % 4 == 0`), so each element's
-/// fp expression is schedule-independent.
+/// The four B-row slices for K positions `[p, p+4)` restricted to columns
+/// `[nb, ne)` — the shared operand of every quad-shaped micro-tile call.
+#[inline]
+fn bquad(b: &[f32], n: usize, p: usize, nb: usize, ne: usize) -> [&[f32]; 4] {
+    [
+        &b[p * n + nb..p * n + ne],
+        &b[(p + 1) * n + nb..(p + 1) * n + ne],
+        &b[(p + 2) * n + nb..(p + 2) * n + ne],
+        &b[(p + 3) * n + nb..(p + 3) * n + ne],
+    ]
+}
+
+/// Inner macro-kernel: row-by-row AXPY over the K panel, dispatched
+/// through the schedule's [`MicroKernel`]. For each (i, p) the scalar
+/// a[i,p] broadcasts against a contiguous b-row slice — exactly the shape
+/// the reordered sparse kernel reuses (with packed columns). The K
+/// grouping is 4-aligned from offset 0 for every legal schedule
+/// (`kc % 4 == 0`), so each element's fp expression is
+/// schedule-independent. The `mr` register tile only regroups *rows*
+/// (an mr=4 tile is two fused 2-row updates sharing the same B slices),
+/// so it never changes any row's accumulation order either.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn block(
@@ -124,12 +147,71 @@ fn block(
     ke: usize,
     nb: usize,
     ne: usize,
-    unroll: usize,
+    sched: &Schedule,
+    mk: &dyn MicroKernel,
 ) {
-    // 2-row micro-kernel: both C rows consume the same four B rows per
+    let (unroll, nr) = (sched.unroll, sched.nr);
+    let mut i = mb;
+    // mr=4 register tile: four C rows consume the same four B rows per
+    // pass. Each pair is updated with the identical fused 2-row expression
+    // as the mr=2 pairing below, so the wider tile moves B loads, never
+    // bits.
+    if sched.mr >= 4 {
+        while i + 4 <= me {
+            // SAFETY: rows i..i+4 are distinct and inside the caller's
+            // disjoint rectangle (see `crow_at`).
+            let crow0 = unsafe { crow_at(c, n, i, nb, ne) };
+            let crow1 = unsafe { crow_at(c, n, i + 1, nb, ne) };
+            let crow2 = unsafe { crow_at(c, n, i + 2, nb, ne) };
+            let crow3 = unsafe { crow_at(c, n, i + 3, nb, ne) };
+            let arow0 = &a[i * k..(i + 1) * k];
+            let arow1 = &a[(i + 1) * k..(i + 2) * k];
+            let arow2 = &a[(i + 2) * k..(i + 3) * k];
+            let arow3 = &a[(i + 3) * k..(i + 4) * k];
+            let mut p = kb;
+            while p + 4 <= ke {
+                let bq = bquad(b, n, p, nb, ne);
+                mk.quad2(
+                    [arow0[p], arow0[p + 1], arow0[p + 2], arow0[p + 3]],
+                    [arow1[p], arow1[p + 1], arow1[p + 2], arow1[p + 3]],
+                    bq,
+                    crow0,
+                    crow1,
+                    nr,
+                );
+                mk.quad2(
+                    [arow2[p], arow2[p + 1], arow2[p + 2], arow2[p + 3]],
+                    [arow3[p], arow3[p + 1], arow3[p + 2], arow3[p + 3]],
+                    bq,
+                    crow2,
+                    crow3,
+                    nr,
+                );
+                p += 4;
+            }
+            while p < ke {
+                let brow = &b[p * n + nb..p * n + ne];
+                let (x0, x1, x2, x3) = (arow0[p], arow1[p], arow2[p], arow3[p]);
+                if x0 != 0.0 {
+                    mk.axpy(x0, brow, crow0, unroll);
+                }
+                if x1 != 0.0 {
+                    mk.axpy(x1, brow, crow1, unroll);
+                }
+                if x2 != 0.0 {
+                    mk.axpy(x2, brow, crow2, unroll);
+                }
+                if x3 != 0.0 {
+                    mk.axpy(x3, brow, crow3, unroll);
+                }
+                p += 1;
+            }
+            i += 4;
+        }
+    }
+    // 2-row micro-tile: both C rows consume the same four B rows per
     // pass, halving B traffic (perf log §Perf iter 4). Legal schedules
     // keep `mc` even, so the row pairing is tile-size independent.
-    let mut i = mb;
     while i + 2 <= me {
         // SAFETY: rows i and i+1 are distinct and inside the caller's
         // disjoint rectangle (see `crow_at`).
@@ -139,28 +221,24 @@ fn block(
         let arow1 = &a[(i + 1) * k..(i + 2) * k];
         let mut p = kb;
         while p + 4 <= ke {
-            let (x0, x1, x2, x3) = (arow0[p], arow0[p + 1], arow0[p + 2], arow0[p + 3]);
-            let (y0, y1, y2, y3) = (arow1[p], arow1[p + 1], arow1[p + 2], arow1[p + 3]);
-            let b0 = &b[p * n + nb..p * n + ne];
-            let b1 = &b[(p + 1) * n + nb..(p + 1) * n + ne];
-            let b2 = &b[(p + 2) * n + nb..(p + 2) * n + ne];
-            let b3 = &b[(p + 3) * n + nb..(p + 3) * n + ne];
-            let len = crow0.len();
-            for j in 0..len {
-                let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
-                crow0[j] += x0 * v0 + x1 * v1 + x2 * v2 + x3 * v3;
-                crow1[j] += y0 * v0 + y1 * v1 + y2 * v2 + y3 * v3;
-            }
+            mk.quad2(
+                [arow0[p], arow0[p + 1], arow0[p + 2], arow0[p + 3]],
+                [arow1[p], arow1[p + 1], arow1[p + 2], arow1[p + 3]],
+                bquad(b, n, p, nb, ne),
+                crow0,
+                crow1,
+                nr,
+            );
             p += 4;
         }
         while p < ke {
             let (x, y) = (arow0[p], arow1[p]);
             let brow = &b[p * n + nb..p * n + ne];
             if x != 0.0 {
-                axpy_unrolled(x, brow, crow0, unroll);
+                mk.axpy(x, brow, crow0, unroll);
             }
             if y != 0.0 {
-                axpy_unrolled(y, brow, crow1, unroll);
+                mk.axpy(y, brow, crow1, unroll);
             }
             p += 1;
         }
@@ -176,21 +254,14 @@ fn block(
         while p + 4 <= ke {
             let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
             if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
-                let b0 = &b[p * n + nb..p * n + ne];
-                let b1 = &b[(p + 1) * n + nb..(p + 1) * n + ne];
-                let b2 = &b[(p + 2) * n + nb..(p + 2) * n + ne];
-                let b3 = &b[(p + 3) * n + nb..(p + 3) * n + ne];
-                let len = crow.len();
-                for j in 0..len {
-                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                }
+                mk.quad([a0, a1, a2, a3], bquad(b, n, p, nb, ne), crow, nr);
             }
             p += 4;
         }
         while p < ke {
             let av = arow[p];
             if av != 0.0 {
-                axpy_unrolled(av, &b[p * n + nb..p * n + ne], crow, unroll);
+                mk.axpy(av, &b[p * n + nb..p * n + ne], crow, unroll);
             }
             p += 1;
         }
@@ -363,7 +434,12 @@ pub fn gemm_batch_with(
 /// `out[b, o] = act(W[o, :] · x[b, :] + bias[o])` with `W` row-major
 /// `[out_f, in_f]`. The schedule's split axis selects the partition:
 /// `Rows` splits output features (the default), `Cols` splits the batch —
-/// both compute every element with the identical expression.
+/// both compute every element with the identical expression. The inner
+/// product dispatches through the schedule's microkernel `dot`; **any
+/// SIMD dot reorders the reduction**, so the planner pins one ISA per
+/// plan for dense steps (the tuner never mixes ISAs here) and bitwise
+/// reproducibility holds per plan, not across plans built with different
+/// `force_scalar` settings.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_forward(
     w: &[f32],
@@ -380,6 +456,7 @@ pub fn dense_forward(
     debug_assert_eq!(w.len(), out_f * in_f);
     debug_assert_eq!(x.len(), batch * in_f);
     debug_assert_eq!(out.len(), batch * out_f);
+    let mk = micro::kernel_for(sched.isa, sched.relaxed);
     if sched.split == SplitAxis::Cols && batch > 1 {
         let out_ptr = SendPtr::new(out.as_mut_ptr());
         pool.parallel_chunks(batch, |bs, be, _| {
@@ -394,12 +471,7 @@ pub fn dense_forward(
             for b in bs..be {
                 let xb = &x[b * in_f..(b + 1) * in_f];
                 for o in 0..out_f {
-                    let wrow = &w[o * in_f..(o + 1) * in_f];
-                    let mut acc = 0.0f32;
-                    for i in 0..in_f {
-                        acc += wrow[i] * xb[i];
-                    }
-                    ob[(b - bs) * out_f + o] = acc;
+                    ob[(b - bs) * out_f + o] = mk.dot(&w[o * in_f..(o + 1) * in_f], xb);
                 }
             }
         });
@@ -416,12 +488,7 @@ pub fn dense_forward(
             for g in gs..ge {
                 let (b, o) = (g / out_f, g % out_f);
                 let xb = &x[b * in_f..(b + 1) * in_f];
-                let wrow = &w[o * in_f..(o + 1) * in_f];
-                let mut acc = 0.0f32;
-                for i in 0..in_f {
-                    acc += wrow[i] * xb[i];
-                }
-                ob[g - gs] = acc;
+                ob[g - gs] = mk.dot(&w[o * in_f..(o + 1) * in_f], xb);
             }
         });
     }
@@ -523,6 +590,7 @@ mod tests {
                                 nc,
                                 split,
                                 unroll,
+                                ..Schedule::default()
                             };
                             for threads in [1usize, 3] {
                                 let mut c = vec![0.0; m * n];
@@ -610,6 +678,149 @@ mod tests {
                 let mut got = vec![0.0; nb * m * n];
                 gemm_batch_with(nb, m, k, n, &a, &b, &mut got, &pool, &sched);
                 assert_eq!(got, want, "split={:?} t={}", split, threads);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_schedules_are_bitwise_identical() {
+        // The ISA / register-tile axes in their order-preserving flavors
+        // move time, never bits: every combination must reproduce the
+        // default scalar schedule exactly, at any tile size and pool size.
+        use crate::kernels::micro::{self, Isa};
+        let mut rng = Rng::new(78);
+        let (m, k, n) = (19, 70, 33);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let mut base = vec![0.0; m * n];
+        gemm_st(m, k, n, &a, &b, &mut base);
+        for isa in [Isa::Scalar, micro::detect()] {
+            for &mr in &[2usize, 4] {
+                for &nr in &[8usize, 16] {
+                    for &mc in &[2usize, 64] {
+                        for &kc in &[4usize, 256] {
+                            for threads in [1usize, 3] {
+                                let s = Schedule {
+                                    isa,
+                                    mr,
+                                    nr,
+                                    mc,
+                                    kc,
+                                    ..Schedule::default()
+                                };
+                                let pool = ComputePool::new(threads);
+                                let mut c = vec![0.0; m * n];
+                                gemm_with(m, k, n, &a, &b, &mut c, &pool, &s);
+                                assert_eq!(c, base, "diverged: {:?} t={}", s, threads);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_kernels_match_reference_on_odd_shapes() {
+        // Every microkernel flavor over awkward shapes (single rows, prime
+        // dims, 8±1 — all the unaligned-tail cases), at threads {1,4} and
+        // batch {1,4}. Order-preserving flavors must be bitwise-scalar;
+        // the relaxed FMA flavor only has to stay close to the reference.
+        use crate::kernels::micro::{self, Isa};
+        let dims = [1usize, 3, 7, 8, 9, 17];
+        let det = micro::detect();
+        let mut rng = Rng::new(80);
+        let pools = [ComputePool::new(1), ComputePool::new(4)];
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    let a = rand_mat(&mut rng, m, k);
+                    let b = rand_mat(&mut rng, k, n);
+                    let bb = rand_mat(&mut rng, 4 * k, n);
+                    let mut want = vec![0.0; m * n];
+                    gemm_ref(m, k, n, &a, &b, &mut want);
+                    let mut scalar = vec![0.0; m * n];
+                    gemm_st(m, k, n, &a, &b, &mut scalar);
+                    for (isa, relaxed) in [(Isa::Scalar, false), (det, false), (det, true)]
+                    {
+                        // Built directly (not sanitized): the widest tile
+                        // with whatever kernel_for resolves for this host.
+                        let s = Schedule { isa, relaxed, mr: 4, nr: 16, ..Schedule::default() };
+                        for pool in &pools {
+                            let mut got = vec![0.0; m * n];
+                            gemm_with(m, k, n, &a, &b, &mut got, pool, &s);
+                            if relaxed {
+                                for (x, y) in got.iter().zip(want.iter()) {
+                                    assert!(
+                                        (x - y).abs() <= 1e-3 * y.abs().max(1.0),
+                                        "relaxed m={} k={} n={}: {} vs {}",
+                                        m, k, n, x, y
+                                    );
+                                }
+                            } else {
+                                assert_eq!(
+                                    got, scalar,
+                                    "order-preserving {:?} m={} k={} n={}",
+                                    isa, m, k, n
+                                );
+                            }
+                        }
+                        // Batched runs must be bitwise-identical to 4
+                        // sequential single-sample runs *under the same
+                        // schedule* — relaxed or not, batching never
+                        // changes a sample's fp expressions.
+                        let mut seq = vec![0.0; 4 * m * n];
+                        for smp in 0..4 {
+                            gemm_st_with(
+                                m, k, n, &a,
+                                &bb[smp * k * n..(smp + 1) * k * n],
+                                &mut seq[smp * m * n..(smp + 1) * m * n],
+                                &s,
+                            );
+                        }
+                        let mut got_b = vec![0.0; 4 * m * n];
+                        gemm_batch_with(4, m, k, n, &a, &bb, &mut got_b, &pools[1], &s);
+                        assert_eq!(got_b, seq, "batched {:?} m={} k={} n={}", isa, m, k, n);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_forward_simd_dot_stays_close_to_scalar() {
+        // The SIMD dot reorders the reduction (lane partials), so it is
+        // NOT bitwise-scalar — the planner pins one ISA per plan for dense
+        // steps. Here we only require closeness.
+        use crate::dsl::op::Activation;
+        use crate::kernels::micro::{self, Isa};
+        let det = micro::detect();
+        if det == Isa::Scalar {
+            return; // nothing to compare on a scalar-only host
+        }
+        let mut rng = Rng::new(81);
+        let (batch, in_f, out_f) = (4, 37, 13);
+        let w = rand_mat(&mut rng, out_f, in_f);
+        let x = rand_mat(&mut rng, batch, in_f);
+        let pool = ComputePool::new(2);
+        let mut scalar = vec![0.0f32; batch * out_f];
+        dense_forward(
+            &w, None, Activation::Identity, &x, batch, in_f, out_f, &pool,
+            &Schedule::default(), &mut scalar,
+        );
+        for relaxed in [false, true] {
+            let s = Schedule { isa: det, relaxed, ..Schedule::default() };
+            let mut got = vec![0.0f32; batch * out_f];
+            dense_forward(
+                &w, None, Activation::Identity, &x, batch, in_f, out_f, &pool, &s,
+                &mut got,
+            );
+            for (g, sc) in got.iter().zip(scalar.iter()) {
+                assert!(
+                    (g - sc).abs() <= 1e-4 * sc.abs().max(1.0),
+                    "relaxed={}: {} vs {}",
+                    relaxed, g, sc
+                );
             }
         }
     }

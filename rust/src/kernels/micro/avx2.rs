@@ -1,0 +1,406 @@
+//! AVX2 flavors of the [`MicroKernel`] trait (x86_64 only).
+//!
+//! Two kernels live here:
+//!
+//! * [`Avx2Kernel`] — **order-preserving**: packed `_mm256_mul_ps` /
+//!   `_mm256_add_ps` in exactly the scalar association order. Per lane
+//!   these are the same IEEE binary32 round-to-nearest operations the
+//!   scalar loop performs, so results are bitwise-identical to
+//!   [`ScalarKernel`](super::ScalarKernel) (except `dot`, which reduces
+//!   lanes — see the module docs in `micro/mod.rs`).
+//! * [`Avx2FmaKernel`] — **relaxed**: `_mm256_fmadd_ps` chains that skip
+//!   the intermediate rounding; a few ulps from scalar, bounded by
+//!   `rust/tests/simd_equivalence.rs`.
+//!
+//! All inner functions are `#[target_feature]`-gated `unsafe fn`s; they
+//! are only reachable through [`kernel_for`](super::kernel_for), which
+//! hands out these kernels solely when runtime detection found `avx2`
+//! **and** `fma` on the host (see `detect_native`).
+
+use super::{Isa, MicroKernel};
+use std::arch::x86_64::*;
+
+/// Order-preserving AVX2 kernel (packed mul/add, scalar association order).
+pub struct Avx2Kernel;
+
+/// Relaxed AVX2 kernel (fused multiply–add chains).
+pub struct Avx2FmaKernel;
+
+/// `crow[j] += av * brow[j]`, 8 lanes at a time, scalar-identical tail.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_mul_add(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let len = crow.len().min(brow.len());
+    let av8 = _mm256_set1_ps(av);
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len <= brow.len() and crow.len(), so the
+        // unaligned 8-lane loads/stores stay in bounds.
+        let b8 = _mm256_loadu_ps(brow.as_ptr().add(j));
+        let c8 = _mm256_loadu_ps(crow.as_ptr().add(j));
+        _mm256_storeu_ps(
+            crow.as_mut_ptr().add(j),
+            _mm256_add_ps(c8, _mm256_mul_ps(av8, b8)),
+        );
+        j += 8;
+    }
+    while j < len {
+        crow[j] += av * brow[j];
+        j += 1;
+    }
+}
+
+/// `crow[j] += av * brow[j]` with a fused multiply–add per lane. The FMA
+/// skips the product's intermediate rounding, so this flavor can differ
+/// from the scalar AXPY by one ulp per update — relaxed mode only.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_fma(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let len = crow.len().min(brow.len());
+    let av8 = _mm256_set1_ps(av);
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds both slices for 8-lane access.
+        let b8 = _mm256_loadu_ps(brow.as_ptr().add(j));
+        let c8 = _mm256_loadu_ps(crow.as_ptr().add(j));
+        _mm256_storeu_ps(crow.as_mut_ptr().add(j), _mm256_fmadd_ps(av8, b8, c8));
+        j += 8;
+    }
+    while j < len {
+        crow[j] += av * brow[j];
+        j += 1;
+    }
+}
+
+/// Broadcast the four A coefficients into YMM registers.
+#[target_feature(enable = "avx2")]
+unsafe fn splat4(a: [f32; 4]) -> [__m256; 4] {
+    [
+        _mm256_set1_ps(a[0]),
+        _mm256_set1_ps(a[1]),
+        _mm256_set1_ps(a[2]),
+        _mm256_set1_ps(a[3]),
+    ]
+}
+
+/// Load the same 8-lane block of all four B rows.
+#[target_feature(enable = "avx2")]
+unsafe fn load4(b: [&[f32]; 4], j: usize) -> [__m256; 4] {
+    // SAFETY: the caller guarantees j + 8 <= every b row's length.
+    [
+        _mm256_loadu_ps(b[0].as_ptr().add(j)),
+        _mm256_loadu_ps(b[1].as_ptr().add(j)),
+        _mm256_loadu_ps(b[2].as_ptr().add(j)),
+        _mm256_loadu_ps(b[3].as_ptr().add(j)),
+    ]
+}
+
+/// `((a0*v0 + a1*v1) + a2*v2) + a3*v3` — the scalar association order.
+#[target_feature(enable = "avx2")]
+unsafe fn quad_sum_mul_add(a: &[__m256; 4], v: &[__m256; 4]) -> __m256 {
+    _mm256_add_ps(
+        _mm256_add_ps(
+            _mm256_add_ps(_mm256_mul_ps(a[0], v[0]), _mm256_mul_ps(a[1], v[1])),
+            _mm256_mul_ps(a[2], v[2]),
+        ),
+        _mm256_mul_ps(a[3], v[3]),
+    )
+}
+
+/// Relaxed accumulate of one row block: a 4-deep FMA chain into `acc`.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn quad_acc_fma(a: &[__m256; 4], v: &[__m256; 4], mut acc: __m256) -> __m256 {
+    acc = _mm256_fmadd_ps(a[3], v[3], acc);
+    acc = _mm256_fmadd_ps(a[2], v[2], acc);
+    acc = _mm256_fmadd_ps(a[1], v[1], acc);
+    acc = _mm256_fmadd_ps(a[0], v[0], acc);
+    acc
+}
+
+/// Order-preserving quad over one row. `nr` (8 or 16) is the register-tile
+/// column width: 16 runs two 8-lane blocks per iteration — grouping only,
+/// no element's fp expression changes.
+#[target_feature(enable = "avx2")]
+unsafe fn quad_mul_add(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+    let len = crow.len();
+    let av = splat4(a);
+    let mut j = 0;
+    if nr >= 16 {
+        while j + 16 <= len {
+            // SAFETY: j + 16 <= len <= every b row's length (caller
+            // contract), so both 8-lane blocks are in bounds.
+            let v = load4(b, j);
+            let c = crow.as_mut_ptr().add(j);
+            _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
+            let v = load4(b, j + 8);
+            let c = crow.as_mut_ptr().add(j + 8);
+            _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
+            j += 16;
+        }
+    }
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
+        let v = load4(b, j);
+        let c = crow.as_mut_ptr().add(j);
+        _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
+        j += 8;
+    }
+    while j < len {
+        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+        j += 1;
+    }
+}
+
+/// Relaxed quad over one row (FMA chain per block).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn quad_fma(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+    let len = crow.len();
+    let av = splat4(a);
+    let mut j = 0;
+    if nr >= 16 {
+        while j + 16 <= len {
+            // SAFETY: j + 16 <= len bounds both 8-lane blocks on all rows.
+            let v = load4(b, j);
+            let c = crow.as_mut_ptr().add(j);
+            _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
+            let v = load4(b, j + 8);
+            let c = crow.as_mut_ptr().add(j + 8);
+            _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
+            j += 16;
+        }
+    }
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
+        let v = load4(b, j);
+        let c = crow.as_mut_ptr().add(j);
+        _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
+        j += 8;
+    }
+    while j < len {
+        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+        j += 1;
+    }
+}
+
+/// Order-preserving 2×4 register tile: both rows consume the same B loads
+/// (the load-redundancy elimination the 2-row scalar kernel also exploits).
+#[target_feature(enable = "avx2")]
+unsafe fn quad2_mul_add(
+    x: [f32; 4],
+    y: [f32; 4],
+    b: [&[f32]; 4],
+    crow0: &mut [f32],
+    crow1: &mut [f32],
+    nr: usize,
+) {
+    let len = crow0.len().min(crow1.len());
+    let xv = splat4(x);
+    let yv = splat4(y);
+    let mut j = 0;
+    let step = if nr >= 16 { 16 } else { 8 };
+    while j + step <= len {
+        let mut blk = 0;
+        while blk < step {
+            // SAFETY: j + step <= len <= every row's length, so each
+            // 8-lane block at j + blk is in bounds.
+            let v = load4(b, j + blk);
+            let c0 = crow0.as_mut_ptr().add(j + blk);
+            _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), quad_sum_mul_add(&xv, &v)));
+            let c1 = crow1.as_mut_ptr().add(j + blk);
+            _mm256_storeu_ps(c1, _mm256_add_ps(_mm256_loadu_ps(c1), quad_sum_mul_add(&yv, &v)));
+            blk += 8;
+        }
+        j += step;
+    }
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
+        let v = load4(b, j);
+        let c0 = crow0.as_mut_ptr().add(j);
+        _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), quad_sum_mul_add(&xv, &v)));
+        let c1 = crow1.as_mut_ptr().add(j);
+        _mm256_storeu_ps(c1, _mm256_add_ps(_mm256_loadu_ps(c1), quad_sum_mul_add(&yv, &v)));
+        j += 8;
+    }
+    while j < len {
+        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+        j += 1;
+    }
+}
+
+/// Relaxed 2×4 register tile (FMA chains, shared B loads).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn quad2_fma(
+    x: [f32; 4],
+    y: [f32; 4],
+    b: [&[f32]; 4],
+    crow0: &mut [f32],
+    crow1: &mut [f32],
+    nr: usize,
+) {
+    let len = crow0.len().min(crow1.len());
+    let xv = splat4(x);
+    let yv = splat4(y);
+    let mut j = 0;
+    let step = if nr >= 16 { 16 } else { 8 };
+    while j + step <= len {
+        let mut blk = 0;
+        while blk < step {
+            // SAFETY: j + step <= len <= every row's length, so each
+            // 8-lane block at j + blk is in bounds.
+            let v = load4(b, j + blk);
+            let c0 = crow0.as_mut_ptr().add(j + blk);
+            _mm256_storeu_ps(c0, quad_acc_fma(&xv, &v, _mm256_loadu_ps(c0)));
+            let c1 = crow1.as_mut_ptr().add(j + blk);
+            _mm256_storeu_ps(c1, quad_acc_fma(&yv, &v, _mm256_loadu_ps(c1)));
+            blk += 8;
+        }
+        j += step;
+    }
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
+        let v = load4(b, j);
+        let c0 = crow0.as_mut_ptr().add(j);
+        _mm256_storeu_ps(c0, quad_acc_fma(&xv, &v, _mm256_loadu_ps(c0)));
+        let c1 = crow1.as_mut_ptr().add(j);
+        _mm256_storeu_ps(c1, quad_acc_fma(&yv, &v, _mm256_loadu_ps(c1)));
+        j += 8;
+    }
+    while j < len {
+        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+        j += 1;
+    }
+}
+
+/// Deterministic dot product: 8-lane mul/add partials, a fixed-order lane
+/// reduction, then the scalar tail. Reassociates relative to the scalar
+/// sum (see the trait docs) but is itself fully deterministic.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_mul_add(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut accv = _mm256_setzero_ps();
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds both 8-lane loads.
+        let av = _mm256_loadu_ps(a.as_ptr().add(j));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
+        j += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), accv);
+    let mut acc = 0.0f32;
+    for l in lanes {
+        acc += l;
+    }
+    while j < len {
+        acc += a[j] * b[j];
+        j += 1;
+    }
+    acc
+}
+
+/// Relaxed dot product: FMA lane partials, same deterministic reduction.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut accv = _mm256_setzero_ps();
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds both 8-lane loads.
+        let av = _mm256_loadu_ps(a.as_ptr().add(j));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        accv = _mm256_fmadd_ps(av, bv, accv);
+        j += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), accv);
+    let mut acc = 0.0f32;
+    for l in lanes {
+        acc += l;
+    }
+    while j < len {
+        acc += a[j] * b[j];
+        j += 1;
+    }
+    acc
+}
+
+impl MicroKernel for Avx2Kernel {
+    fn isa(&self) -> Isa {
+        Isa::Avx2
+    }
+
+    fn relaxed(&self) -> bool {
+        false
+    }
+
+    fn axpy(&self, av: f32, brow: &[f32], crow: &mut [f32], _unroll: usize) {
+        // SAFETY: kernel_for only returns this kernel after runtime
+        // detection confirmed avx2 (+fma) on this host.
+        unsafe { axpy_mul_add(av, brow, crow) }
+    }
+
+    fn quad(&self, a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+        // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
+        unsafe { quad_mul_add(a, b, crow, nr) }
+    }
+
+    fn quad2(
+        &self,
+        x: [f32; 4],
+        y: [f32; 4],
+        b: [&[f32]; 4],
+        crow0: &mut [f32],
+        crow1: &mut [f32],
+        nr: usize,
+    ) {
+        // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
+        unsafe { quad2_mul_add(x, y, b, crow0, crow1, nr) }
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
+        unsafe { dot_mul_add(a, b) }
+    }
+}
+
+impl MicroKernel for Avx2FmaKernel {
+    fn isa(&self) -> Isa {
+        Isa::Avx2
+    }
+
+    fn relaxed(&self) -> bool {
+        true
+    }
+
+    fn axpy(&self, av: f32, brow: &[f32], crow: &mut [f32], _unroll: usize) {
+        // SAFETY: kernel_for only returns this kernel after runtime
+        // detection confirmed avx2 AND fma on this host.
+        unsafe { axpy_fma(av, brow, crow) }
+    }
+
+    fn quad(&self, a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+        // SAFETY: avx2+fma confirmed by runtime detection (see kernel_for).
+        unsafe { quad_fma(a, b, crow, nr) }
+    }
+
+    fn quad2(
+        &self,
+        x: [f32; 4],
+        y: [f32; 4],
+        b: [&[f32]; 4],
+        crow0: &mut [f32],
+        crow1: &mut [f32],
+        nr: usize,
+    ) {
+        // SAFETY: avx2+fma confirmed by runtime detection (see kernel_for).
+        unsafe { quad2_fma(x, y, b, crow0, crow1, nr) }
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: avx2+fma confirmed by runtime detection (see kernel_for).
+        unsafe { dot_fma(a, b) }
+    }
+}

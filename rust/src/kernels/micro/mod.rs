@@ -1,0 +1,455 @@
+//! Explicit-SIMD microkernels with runtime ISA dispatch.
+//!
+//! The GEMM / SpMM inner loops used to be scalar AXPY passes; this module
+//! adds an 8×k f32 AVX2 microkernel and a NEON equivalent behind the
+//! [`MicroKernel`] trait, with the historical scalar loop as the
+//! always-available fallback. The ISA is detected **once per process**
+//! ([`detect`]) and pinned at plan time: every step of an
+//! [`ExecutionPlan`](crate::executor::ExecutionPlan) carries the chosen
+//! [`Isa`] on its [`Schedule`](crate::tuner::Schedule), and the kernels
+//! resolve the matching implementation with [`kernel_for`] at dispatch
+//! time (a static reference — the steady-state path never allocates).
+//!
+//! # Order-preserving vs relaxed kernels
+//!
+//! The accumulate primitives ([`MicroKernel::axpy`], [`MicroKernel::quad`],
+//! [`MicroKernel::quad2`]) come in two flavors per SIMD ISA:
+//!
+//! * **order-preserving** (the default): packed IEEE mul/add in exactly the
+//!   scalar association order. Per lane these are the same binary32
+//!   round-to-nearest operations the scalar loop performs, so the results
+//!   are **bitwise identical** to the scalar kernel and stay under the
+//!   repo-wide bitwise equivalence oracles.
+//! * **relaxed** (`Schedule::relaxed`): fused multiply–add chains. FMA
+//!   skips the intermediate rounding, so results differ from scalar by a
+//!   few ulps; this mode is opt-in
+//!   ([`relaxed_simd`](crate::session::SessionBuilder::relaxed_simd)) and
+//!   bounded by `rust/tests/simd_equivalence.rs` instead of the bitwise
+//!   suites.
+//!
+//! [`MicroKernel::dot`] is the exception: any SIMD dot product accumulates
+//! into lanes and reduces horizontally, which reorders the scalar sum even
+//! in the order-preserving flavor. The planner therefore pins the ISA per
+//! *plan* (never per step via the tuner) for `dense_forward`, so every
+//! cross-plan bitwise oracle compares same-ISA runs.
+//!
+//! # Forcing the scalar fallback
+//!
+//! Two escape hatches force `Isa::Scalar`: the `PALLAS_FORCE_SCALAR`
+//! environment variable (any non-empty value other than `"0"`; sampled once
+//! at first detection, used by CI to keep the fallback path tested) and the
+//! per-session [`force_scalar`](crate::session::SessionBuilder::force_scalar)
+//! builder knob / `--force-scalar` CLI flag.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::sync::OnceLock;
+
+/// Instruction set a kernel schedule targets.
+///
+/// Carried on every [`Schedule`](crate::tuner::Schedule);
+/// [`Schedule::sanitized`](crate::tuner::Schedule::sanitized) clamps ISAs
+/// that are unavailable on the running host back to `Scalar`, so a legal
+/// schedule can always be executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// The portable scalar loops — always available, the bitwise baseline.
+    Scalar,
+    /// 8-lane f32 AVX2 (requires `avx2` + `fma` on x86_64).
+    Avx2,
+    /// 4-lane f32 NEON (baseline on aarch64).
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase tag used in JSON, cache fingerprints and bench output.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`Isa::tag`].
+    pub fn from_tag(tag: &str) -> Option<Isa> {
+        match tag {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this ISA can run on the current host (honoring
+    /// `PALLAS_FORCE_SCALAR`). `Scalar` is always available.
+    pub fn available(self) -> bool {
+        self == Isa::Scalar || self == detect()
+    }
+}
+
+/// Whether `PALLAS_FORCE_SCALAR` disables SIMD detection (set, non-empty
+/// and not `"0"`). Read through [`detect`]'s once-cell in the hot path.
+pub fn force_scalar_env() -> bool {
+    matches!(std::env::var("PALLAS_FORCE_SCALAR"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// The best ISA available on this host, detected once per process.
+///
+/// Returns [`Isa::Scalar`] when `PALLAS_FORCE_SCALAR` is set. The result is
+/// cached in a `OnceLock` so steady-state dispatch is an atomic load — no
+/// environment lookup (which allocates) ever happens on the frame path.
+pub fn detect() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if force_scalar_env() {
+            Isa::Scalar
+        } else {
+            detect_native()
+        }
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_native() -> Isa {
+    // The AVX2 kernels assume FMA is present too (the relaxed flavor needs
+    // it), so both must be detected before we ever hand out Isa::Avx2.
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_native() -> Isa {
+    // NEON is baseline for every aarch64 target std supports.
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_native() -> Isa {
+    Isa::Scalar
+}
+
+/// One register-tiled inner-loop implementation.
+///
+/// The GEMM/SpMM kernels resolve a `&'static dyn MicroKernel` once per
+/// kernel invocation from the step's schedule ([`kernel_for`]) and feed it
+/// the same slices the historical scalar loops consumed. Contract for all
+/// accumulate methods: every `b` row must be at least as long as the
+/// output row; extra elements are ignored.
+pub trait MicroKernel: Sync {
+    /// The ISA this kernel executes.
+    fn isa(&self) -> Isa;
+
+    /// Whether this kernel uses FMA-reordering (relaxed-tolerance) math.
+    fn relaxed(&self) -> bool;
+
+    /// `crow[j] += av * brow[j]`. `unroll` is the scalar AXPY's j-loop
+    /// width (1 or 8); SIMD flavors are vector-wide by construction and
+    /// ignore it (per element the value is identical either way).
+    fn axpy(&self, av: f32, brow: &[f32], crow: &mut [f32], unroll: usize);
+
+    /// One row, four fused K steps:
+    /// `crow[j] += a[0]*b[0][j] + a[1]*b[1][j] + a[2]*b[2][j] + a[3]*b[3][j]`
+    /// (left-associated, matching the scalar kernel). `nr` is the register
+    /// tile width in columns (8 or 16); it only changes j-loop grouping,
+    /// never any element's fp expression.
+    fn quad(&self, a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize);
+
+    /// Two rows sharing the same four B rows (the classic 2×4 register
+    /// tile): row 0 accumulates with coefficients `x`, row 1 with `y`,
+    /// each through the same expression as [`MicroKernel::quad`].
+    fn quad2(
+        &self,
+        x: [f32; 4],
+        y: [f32; 4],
+        b: [&[f32]; 4],
+        crow0: &mut [f32],
+        crow1: &mut [f32],
+        nr: usize,
+    );
+
+    /// Sequential dot product `Σ a[i]*b[i]` over `min(len)`. SIMD flavors
+    /// reduce lane partials deterministically but in a different order than
+    /// the scalar sum — see the module docs for why the planner pins the
+    /// ISA per plan for dot-backed steps.
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+}
+
+/// The historical scalar loops, verbatim. Always available; the bitwise
+/// reference every order-preserving SIMD kernel must match exactly.
+pub struct ScalarKernel;
+
+impl MicroKernel for ScalarKernel {
+    fn isa(&self) -> Isa {
+        Isa::Scalar
+    }
+
+    fn relaxed(&self) -> bool {
+        false
+    }
+
+    fn axpy(&self, av: f32, brow: &[f32], crow: &mut [f32], unroll: usize) {
+        crate::kernels::gemm::axpy_unrolled(av, brow, crow, unroll);
+    }
+
+    fn quad(&self, a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], _nr: usize) {
+        let len = crow.len();
+        let (b0, b1, b2, b3) = (&b[0][..len], &b[1][..len], &b[2][..len], &b[3][..len]);
+        let (a0, a1, a2, a3) = (a[0], a[1], a[2], a[3]);
+        for j in 0..len {
+            crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        }
+    }
+
+    fn quad2(
+        &self,
+        x: [f32; 4],
+        y: [f32; 4],
+        b: [&[f32]; 4],
+        crow0: &mut [f32],
+        crow1: &mut [f32],
+        _nr: usize,
+    ) {
+        let len = crow0.len().min(crow1.len());
+        let (b0, b1, b2, b3) = (&b[0][..len], &b[1][..len], &b[2][..len], &b[3][..len]);
+        let (x0, x1, x2, x3) = (x[0], x[1], x[2], x[3]);
+        let (y0, y1, y2, y3) = (y[0], y[1], y[2], y[3]);
+        for j in 0..len {
+            let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
+            crow0[j] += x0 * v0 + x1 * v1 + x2 * v2 + x3 * v3;
+            crow1[j] += y0 * v0 + y1 * v1 + y2 * v2 + y3 * v3;
+        }
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        let len = a.len().min(b.len());
+        let mut acc = 0.0f32;
+        for i in 0..len {
+            acc += a[i] * b[i];
+        }
+        acc
+    }
+}
+
+static SCALAR: ScalarKernel = ScalarKernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2: avx2::Avx2Kernel = avx2::Avx2Kernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2_FMA: avx2::Avx2FmaKernel = avx2::Avx2FmaKernel;
+#[cfg(target_arch = "aarch64")]
+static NEON: neon::NeonKernel = neon::NeonKernel;
+#[cfg(target_arch = "aarch64")]
+static NEON_FMA: neon::NeonFmaKernel = neon::NeonFmaKernel;
+
+/// Resolve the kernel for a schedule's `(isa, relaxed)` pair.
+///
+/// Falls back to the scalar kernel whenever the requested ISA is not
+/// available on this host (wrong arch, feature missing, or
+/// `PALLAS_FORCE_SCALAR`), so a stale schedule can never dispatch an
+/// illegal instruction. Returns a static reference — never allocates.
+pub fn kernel_for(isa: Isa, relaxed: bool) -> &'static dyn MicroKernel {
+    match isa {
+        Isa::Scalar => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if Isa::Avx2.available() => {
+            if relaxed {
+                &AVX2_FMA
+            } else {
+                &AVX2
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if Isa::Neon.available() => {
+            if relaxed {
+                &NEON_FMA
+            } else {
+                &NEON
+            }
+        }
+        _ => &SCALAR,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(len: usize, seed: f32) -> Vec<f32> {
+        // Deterministic, sign-alternating, non-trivial mantissas.
+        (0..len)
+            .map(|i| ((i as f32) * 0.731 + seed).sin() * 2.5)
+            .collect()
+    }
+
+    /// Every kernel this host can actually run, scalar first.
+    fn host_kernels() -> Vec<&'static dyn MicroKernel> {
+        let mut ks: Vec<&'static dyn MicroKernel> = vec![&SCALAR];
+        if detect() != Isa::Scalar {
+            ks.push(kernel_for(detect(), false));
+            ks.push(kernel_for(detect(), true));
+        }
+        ks
+    }
+
+    #[test]
+    fn tags_roundtrip_and_scalar_is_always_available() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::from_tag(isa.tag()), Some(isa));
+        }
+        assert_eq!(Isa::from_tag("sse9"), None);
+        assert!(Isa::Scalar.available());
+        assert!(detect().available());
+    }
+
+    #[test]
+    fn unavailable_isa_falls_back_to_scalar() {
+        // Whichever SIMD ISA this host does NOT have must resolve to the
+        // scalar kernel rather than dispatch illegal instructions.
+        let foreign = if detect() == Isa::Avx2 { Isa::Neon } else { Isa::Avx2 };
+        assert_eq!(kernel_for(foreign, false).isa(), Isa::Scalar);
+        assert_eq!(kernel_for(foreign, true).isa(), Isa::Scalar);
+        assert_eq!(kernel_for(Isa::Scalar, true).isa(), Isa::Scalar);
+    }
+
+    #[test]
+    fn kernel_for_reports_requested_flavor_when_available() {
+        let k = kernel_for(detect(), false);
+        assert_eq!(k.isa(), detect());
+        assert!(!k.relaxed());
+        if detect() != Isa::Scalar {
+            assert!(kernel_for(detect(), true).relaxed());
+        }
+    }
+
+    /// Odd lengths around the vector widths, plus unaligned starting
+    /// offsets (slices offset by 1/3 elements from the allocation base).
+    const LENS: [usize; 9] = [1, 3, 7, 8, 9, 15, 16, 17, 31];
+    const OFFSETS: [usize; 3] = [0, 1, 3];
+
+    #[test]
+    fn axpy_matches_scalar_on_odd_lengths_and_unaligned_tails() {
+        for k in host_kernels() {
+            for &len in &LENS {
+                for &off in &OFFSETS {
+                    let b = seq(len + off, 0.3);
+                    let mut c_ref = seq(len + off, 1.7);
+                    let mut c = c_ref.clone();
+                    SCALAR.axpy(0.37, &b[off..], &mut c_ref[off..], 8);
+                    k.axpy(0.37, &b[off..], &mut c[off..], 8);
+                    if k.relaxed() {
+                        // The FMA flavor skips one rounding per update.
+                        for (got, want) in c.iter().zip(&c_ref) {
+                            assert!((got - want).abs() <= 1e-5 * (1.0 + want.abs()));
+                        }
+                    } else {
+                        // Order-preserving flavors are bitwise scalar.
+                        assert_eq!(c, c_ref, "{:?} axpy len={} off={}", k.isa(), len, off);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quad_and_quad2_order_preserving_flavors_are_bitwise_scalar() {
+        for &len in &LENS {
+            for &off in &OFFSETS {
+                let rows: Vec<Vec<f32>> = (0..4).map(|r| seq(len + off, r as f32)).collect();
+                let b = [&rows[0][off..], &rows[1][off..], &rows[2][off..], &rows[3][off..]];
+                let a = [0.31, -1.25, 0.0, 2.5];
+                let y = [-0.75, 0.5, 3.25, -0.125];
+
+                let mut c_ref = seq(len + off, 9.1);
+                SCALAR.quad(a, b, &mut c_ref[off..], 8);
+                let mut d_ref0 = seq(len + off, 4.2);
+                let mut d_ref1 = seq(len + off, 5.3);
+                SCALAR.quad2(a, y, b, &mut d_ref0[off..], &mut d_ref1[off..], 8);
+
+                let k = kernel_for(detect(), false);
+                for nr in [8usize, 16] {
+                    let mut c = seq(len + off, 9.1);
+                    k.quad(a, b, &mut c[off..], nr);
+                    assert_eq!(c, c_ref, "{:?} quad len={} off={} nr={}", k.isa(), len, off, nr);
+
+                    let mut d0 = seq(len + off, 4.2);
+                    let mut d1 = seq(len + off, 5.3);
+                    k.quad2(a, y, b, &mut d0[off..], &mut d1[off..], nr);
+                    assert_eq!(d0, d_ref0, "{:?} quad2 r0 len={} off={}", k.isa(), len, off);
+                    assert_eq!(d1, d_ref1, "{:?} quad2 r1 len={} off={}", k.isa(), len, off);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relaxed_flavor_stays_within_a_few_ulps() {
+        let k = kernel_for(detect(), true);
+        for &len in &LENS {
+            let rows: Vec<Vec<f32>> = (0..4).map(|r| seq(len, r as f32 + 0.1)).collect();
+            let b = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let a = [0.31, -1.25, 0.875, 2.5];
+            let mut c_ref = seq(len, 9.1);
+            let mut c = c_ref.clone();
+            SCALAR.quad(a, b, &mut c_ref, 8);
+            k.quad(a, b, &mut c, 8);
+            for (got, want) in c.iter().zip(&c_ref) {
+                let ulps = (got.to_bits() as i64 - want.to_bits() as i64).abs();
+                assert!(
+                    ulps <= 4 || (got - want).abs() <= 1e-6,
+                    "relaxed quad drifted {} ulps ({} vs {})",
+                    ulps,
+                    got,
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_is_deterministic_and_close_to_scalar() {
+        for k in host_kernels() {
+            for &len in &LENS {
+                for &off in &OFFSETS {
+                    let a = seq(len + off, 0.9);
+                    let b = seq(len + off, 2.1);
+                    let d1 = k.dot(&a[off..], &b[off..]);
+                    let d2 = k.dot(&a[off..], &b[off..]);
+                    assert_eq!(d1.to_bits(), d2.to_bits(), "dot must be deterministic");
+                    let want = SCALAR.dot(&a[off..], &b[off..]);
+                    assert!(
+                        (d1 - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "{:?} dot len={} off={}: {} vs {}",
+                        k.isa(),
+                        len,
+                        off,
+                        d1,
+                        want
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_b_lengths_use_the_output_length() {
+        // b rows longer than crow: extra elements must be ignored.
+        let rows: Vec<Vec<f32>> = (0..4).map(|r| seq(32, r as f32)).collect();
+        let b = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+        for k in host_kernels() {
+            let mut c_ref = seq(5, 3.3);
+            let mut c = c_ref.clone();
+            SCALAR.quad([1.0, 2.0, 3.0, 4.0], b, &mut c_ref, 8);
+            k.quad([1.0, 2.0, 3.0, 4.0], b, &mut c, 8);
+            if !k.relaxed() {
+                assert_eq!(c, c_ref);
+            }
+            assert_eq!(c.len(), 5);
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! NEON flavors of the [`MicroKernel`] trait (aarch64 only).
+//!
+//! Mirrors `avx2.rs` with 4-lane `float32x4_t` vectors:
+//!
+//! * [`NeonKernel`] — **order-preserving**: `vmulq_f32` / `vaddq_f32` in
+//!   exactly the scalar association order; bitwise-identical to
+//!   [`ScalarKernel`](super::ScalarKernel) per lane (except `dot`, which
+//!   reduces lanes — see the module docs in `micro/mod.rs`).
+//! * [`NeonFmaKernel`] — **relaxed**: `vfmaq_f32` chains (fused, skips the
+//!   intermediate rounding); bounded by `rust/tests/simd_equivalence.rs`.
+//!
+//! NEON is baseline on every aarch64 target std supports, so no
+//! `#[target_feature]` gating is needed — the intrinsics are still
+//! `unsafe fn`s because they take raw pointers.
+
+use super::{Isa, MicroKernel};
+use std::arch::aarch64::*;
+
+/// Order-preserving NEON kernel (packed mul/add, scalar association order).
+pub struct NeonKernel;
+
+/// Relaxed NEON kernel (fused multiply–add chains).
+pub struct NeonFmaKernel;
+
+/// `crow[j] += av * brow[j]`, 4 lanes at a time, scalar-identical tail.
+unsafe fn axpy_mul_add(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let len = crow.len().min(brow.len());
+    let av4 = vdupq_n_f32(av);
+    let mut j = 0;
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len <= brow.len() and crow.len(), so the
+        // 4-lane loads/stores stay in bounds.
+        let b4 = vld1q_f32(brow.as_ptr().add(j));
+        let c4 = vld1q_f32(crow.as_ptr().add(j));
+        vst1q_f32(crow.as_mut_ptr().add(j), vaddq_f32(c4, vmulq_f32(av4, b4)));
+        j += 4;
+    }
+    while j < len {
+        crow[j] += av * brow[j];
+        j += 1;
+    }
+}
+
+/// `crow[j] += av * brow[j]` with a fused multiply–add per lane (relaxed).
+unsafe fn axpy_fma(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let len = crow.len().min(brow.len());
+    let av4 = vdupq_n_f32(av);
+    let mut j = 0;
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len bounds both slices for 4-lane access.
+        let b4 = vld1q_f32(brow.as_ptr().add(j));
+        let c4 = vld1q_f32(crow.as_ptr().add(j));
+        vst1q_f32(crow.as_mut_ptr().add(j), vfmaq_f32(c4, av4, b4));
+        j += 4;
+    }
+    while j < len {
+        crow[j] += av * brow[j];
+        j += 1;
+    }
+}
+
+/// Broadcast the four A coefficients into Q registers.
+unsafe fn splat4(a: [f32; 4]) -> [float32x4_t; 4] {
+    [
+        vdupq_n_f32(a[0]),
+        vdupq_n_f32(a[1]),
+        vdupq_n_f32(a[2]),
+        vdupq_n_f32(a[3]),
+    ]
+}
+
+/// Load the same 4-lane block of all four B rows.
+unsafe fn load4(b: [&[f32]; 4], j: usize) -> [float32x4_t; 4] {
+    // SAFETY: the caller guarantees j + 4 <= every b row's length.
+    [
+        vld1q_f32(b[0].as_ptr().add(j)),
+        vld1q_f32(b[1].as_ptr().add(j)),
+        vld1q_f32(b[2].as_ptr().add(j)),
+        vld1q_f32(b[3].as_ptr().add(j)),
+    ]
+}
+
+/// `((a0*v0 + a1*v1) + a2*v2) + a3*v3` — the scalar association order.
+unsafe fn quad_sum_mul_add(a: &[float32x4_t; 4], v: &[float32x4_t; 4]) -> float32x4_t {
+    vaddq_f32(
+        vaddq_f32(
+            vaddq_f32(vmulq_f32(a[0], v[0]), vmulq_f32(a[1], v[1])),
+            vmulq_f32(a[2], v[2]),
+        ),
+        vmulq_f32(a[3], v[3]),
+    )
+}
+
+/// Relaxed accumulate of one row block: a 4-deep FMA chain into `acc`.
+unsafe fn quad_acc_fma(
+    a: &[float32x4_t; 4],
+    v: &[float32x4_t; 4],
+    mut acc: float32x4_t,
+) -> float32x4_t {
+    acc = vfmaq_f32(acc, a[3], v[3]);
+    acc = vfmaq_f32(acc, a[2], v[2]);
+    acc = vfmaq_f32(acc, a[1], v[1]);
+    acc = vfmaq_f32(acc, a[0], v[0]);
+    acc
+}
+
+/// Order-preserving quad over one row. `nr` (8 or 16) is the register-tile
+/// column width in elements; blocks are 4 lanes each.
+unsafe fn quad_mul_add(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+    let len = crow.len();
+    let av = splat4(a);
+    let step = if nr >= 16 { 16 } else { 8 };
+    let mut j = 0;
+    while j + step <= len {
+        let mut blk = 0;
+        while blk < step {
+            // SAFETY: j + step <= len <= every b row's length, so each
+            // 4-lane block at j + blk is in bounds.
+            let v = load4(b, j + blk);
+            let c = crow.as_mut_ptr().add(j + blk);
+            vst1q_f32(c, vaddq_f32(vld1q_f32(c), quad_sum_mul_add(&av, &v)));
+            blk += 4;
+        }
+        j += step;
+    }
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
+        let v = load4(b, j);
+        let c = crow.as_mut_ptr().add(j);
+        vst1q_f32(c, vaddq_f32(vld1q_f32(c), quad_sum_mul_add(&av, &v)));
+        j += 4;
+    }
+    while j < len {
+        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+        j += 1;
+    }
+}
+
+/// Relaxed quad over one row (FMA chain per block).
+unsafe fn quad_fma(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+    let len = crow.len();
+    let av = splat4(a);
+    let step = if nr >= 16 { 16 } else { 8 };
+    let mut j = 0;
+    while j + step <= len {
+        let mut blk = 0;
+        while blk < step {
+            // SAFETY: j + step <= len <= every b row's length, so each
+            // 4-lane block at j + blk is in bounds.
+            let v = load4(b, j + blk);
+            let c = crow.as_mut_ptr().add(j + blk);
+            vst1q_f32(c, quad_acc_fma(&av, &v, vld1q_f32(c)));
+            blk += 4;
+        }
+        j += step;
+    }
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
+        let v = load4(b, j);
+        let c = crow.as_mut_ptr().add(j);
+        vst1q_f32(c, quad_acc_fma(&av, &v, vld1q_f32(c)));
+        j += 4;
+    }
+    while j < len {
+        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+        j += 1;
+    }
+}
+
+/// Order-preserving 2×4 register tile: both rows share the same B loads.
+unsafe fn quad2_mul_add(
+    x: [f32; 4],
+    y: [f32; 4],
+    b: [&[f32]; 4],
+    crow0: &mut [f32],
+    crow1: &mut [f32],
+    nr: usize,
+) {
+    let len = crow0.len().min(crow1.len());
+    let xv = splat4(x);
+    let yv = splat4(y);
+    let step = if nr >= 16 { 16 } else { 8 };
+    let mut j = 0;
+    while j + step <= len {
+        let mut blk = 0;
+        while blk < step {
+            // SAFETY: j + step <= len <= every row's length, so each
+            // 4-lane block at j + blk is in bounds.
+            let v = load4(b, j + blk);
+            let c0 = crow0.as_mut_ptr().add(j + blk);
+            vst1q_f32(c0, vaddq_f32(vld1q_f32(c0), quad_sum_mul_add(&xv, &v)));
+            let c1 = crow1.as_mut_ptr().add(j + blk);
+            vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), quad_sum_mul_add(&yv, &v)));
+            blk += 4;
+        }
+        j += step;
+    }
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
+        let v = load4(b, j);
+        let c0 = crow0.as_mut_ptr().add(j);
+        vst1q_f32(c0, vaddq_f32(vld1q_f32(c0), quad_sum_mul_add(&xv, &v)));
+        let c1 = crow1.as_mut_ptr().add(j);
+        vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), quad_sum_mul_add(&yv, &v)));
+        j += 4;
+    }
+    while j < len {
+        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+        j += 1;
+    }
+}
+
+/// Relaxed 2×4 register tile (FMA chains, shared B loads).
+unsafe fn quad2_fma(
+    x: [f32; 4],
+    y: [f32; 4],
+    b: [&[f32]; 4],
+    crow0: &mut [f32],
+    crow1: &mut [f32],
+    nr: usize,
+) {
+    let len = crow0.len().min(crow1.len());
+    let xv = splat4(x);
+    let yv = splat4(y);
+    let step = if nr >= 16 { 16 } else { 8 };
+    let mut j = 0;
+    while j + step <= len {
+        let mut blk = 0;
+        while blk < step {
+            // SAFETY: j + step <= len <= every row's length, so each
+            // 4-lane block at j + blk is in bounds.
+            let v = load4(b, j + blk);
+            let c0 = crow0.as_mut_ptr().add(j + blk);
+            vst1q_f32(c0, quad_acc_fma(&xv, &v, vld1q_f32(c0)));
+            let c1 = crow1.as_mut_ptr().add(j + blk);
+            vst1q_f32(c1, quad_acc_fma(&yv, &v, vld1q_f32(c1)));
+            blk += 4;
+        }
+        j += step;
+    }
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
+        let v = load4(b, j);
+        let c0 = crow0.as_mut_ptr().add(j);
+        vst1q_f32(c0, quad_acc_fma(&xv, &v, vld1q_f32(c0)));
+        let c1 = crow1.as_mut_ptr().add(j);
+        vst1q_f32(c1, quad_acc_fma(&yv, &v, vld1q_f32(c1)));
+        j += 4;
+    }
+    while j < len {
+        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+        j += 1;
+    }
+}
+
+/// Deterministic dot product: 4-lane mul/add partials, a fixed-order lane
+/// reduction, then the scalar tail.
+unsafe fn dot_mul_add(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut accv = vdupq_n_f32(0.0);
+    let mut j = 0;
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len bounds both 4-lane loads.
+        let av = vld1q_f32(a.as_ptr().add(j));
+        let bv = vld1q_f32(b.as_ptr().add(j));
+        accv = vaddq_f32(accv, vmulq_f32(av, bv));
+        j += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    vst1q_f32(lanes.as_mut_ptr(), accv);
+    let mut acc = 0.0f32;
+    for l in lanes {
+        acc += l;
+    }
+    while j < len {
+        acc += a[j] * b[j];
+        j += 1;
+    }
+    acc
+}
+
+/// Relaxed dot product: FMA lane partials, same deterministic reduction.
+unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut accv = vdupq_n_f32(0.0);
+    let mut j = 0;
+    while j + 4 <= len {
+        // SAFETY: j + 4 <= len bounds both 4-lane loads.
+        let av = vld1q_f32(a.as_ptr().add(j));
+        let bv = vld1q_f32(b.as_ptr().add(j));
+        accv = vfmaq_f32(accv, av, bv);
+        j += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    vst1q_f32(lanes.as_mut_ptr(), accv);
+    let mut acc = 0.0f32;
+    for l in lanes {
+        acc += l;
+    }
+    while j < len {
+        acc += a[j] * b[j];
+        j += 1;
+    }
+    acc
+}
+
+impl MicroKernel for NeonKernel {
+    fn isa(&self) -> Isa {
+        Isa::Neon
+    }
+
+    fn relaxed(&self) -> bool {
+        false
+    }
+
+    fn axpy(&self, av: f32, brow: &[f32], crow: &mut [f32], _unroll: usize) {
+        // SAFETY: NEON is baseline on aarch64; slice bounds are enforced
+        // inside the kernel.
+        unsafe { axpy_mul_add(av, brow, crow) }
+    }
+
+    fn quad(&self, a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { quad_mul_add(a, b, crow, nr) }
+    }
+
+    fn quad2(
+        &self,
+        x: [f32; 4],
+        y: [f32; 4],
+        b: [&[f32]; 4],
+        crow0: &mut [f32],
+        crow1: &mut [f32],
+        nr: usize,
+    ) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { quad2_mul_add(x, y, b, crow0, crow1, nr) }
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { dot_mul_add(a, b) }
+    }
+}
+
+impl MicroKernel for NeonFmaKernel {
+    fn isa(&self) -> Isa {
+        Isa::Neon
+    }
+
+    fn relaxed(&self) -> bool {
+        true
+    }
+
+    fn axpy(&self, av: f32, brow: &[f32], crow: &mut [f32], _unroll: usize) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { axpy_fma(av, brow, crow) }
+    }
+
+    fn quad(&self, a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { quad_fma(a, b, crow, nr) }
+    }
+
+    fn quad2(
+        &self,
+        x: [f32; 4],
+        y: [f32; 4],
+        b: [&[f32]; 4],
+        crow0: &mut [f32],
+        crow1: &mut [f32],
+        nr: usize,
+    ) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { quad2_fma(x, y, b, crow0, crow1, nr) }
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { dot_fma(a, b) }
+    }
+}

@@ -11,6 +11,9 @@
 //!   compact+reordered flavours,
 //! * [`sparse_gemm`] — CSR SpMM (pruned-no-compiler baseline) and the
 //!   reordered group GEMM (pruned+compiler),
+//! * [`micro`] — explicit-SIMD microkernels (AVX2 / NEON / scalar) behind
+//!   the [`MicroKernel`](micro::MicroKernel) trait, selected once per plan
+//!   by runtime ISA detection and dispatched by the GEMM/SpMM inner loops,
 //! * [`elementwise`] — activations, add, batch/instance norm, bias,
 //! * [`resize`] — nearest upsample, pixel shuffle, max/global-avg pooling.
 //!
@@ -24,6 +27,7 @@ pub mod gemm;
 pub mod im2col;
 pub mod conv;
 pub mod sparse_gemm;
+pub mod micro;
 pub mod elementwise;
 pub mod resize;
 

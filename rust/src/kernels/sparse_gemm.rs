@@ -10,18 +10,36 @@
 //!   the balanced lane schedule ([`crate::reorder::Schedule`]).
 //!
 //! All kernels additionally take the step's tuned [`Schedule`]; the sparse
-//! tiers honor its AXPY `unroll` width, the column-compact tier (a dense
-//! GEMM) honors the full blocking/split space.
+//! tiers honor its AXPY `unroll` width and microkernel flavor (ISA ×
+//! register tile — the row kernels dispatch through
+//! [`micro::kernel_for`]), the column-compact tier (a dense GEMM) honors
+//! the full blocking/split space, and the reordered tier additionally
+//! honors `group_order` (work items touch disjoint output rows, so
+//! reversing their iteration order never changes a single row's fp
+//! expression).
 //! * [`spmm_column_compact`] — special case for column pruning where the
 //!   caller already gathered B's kept rows (`im2col_pruned`): a plain dense
 //!   GEMM over the reduced K — zero sparse overhead at run time.
 
+use crate::kernels::micro::{self, MicroKernel};
 use crate::reorder::{ReorderPlan, Schedule as LaneSchedule};
 use crate::sparse::Csr;
-use crate::tuner::schedule::Schedule;
+use crate::tuner::schedule::{GroupOrder, Schedule};
 use crate::util::threadpool::{ComputePool, SendPtr};
 
-use super::gemm::axpy_unrolled;
+/// Run `f` over the items in the schedule-selected iteration order.
+/// Legal only where items touch disjoint output rows (the reordered
+/// tier) — then the order moves cache behavior, never bits.
+fn for_items<'a>(
+    items: impl DoubleEndedIterator<Item = &'a crate::reorder::schedule::WorkItem>,
+    order: GroupOrder,
+    mut f: impl FnMut(&'a crate::reorder::schedule::WorkItem),
+) {
+    match order {
+        GroupOrder::Forward => items.for_each(&mut f),
+        GroupOrder::Reverse => items.rev().for_each(&mut f),
+    }
+}
 
 /// CSR SpMM over rows [ms, me); `c_sub` holds exactly those rows (so the
 /// serial path passes the whole C with `ms = 0`).
@@ -32,24 +50,25 @@ fn spmm_csr_rows(
     c_sub: &mut [f32],
     ms: usize,
     me: usize,
-    unroll: usize,
+    sched: &Schedule,
 ) {
     debug_assert_eq!(c_sub.len(), (me - ms) * n);
+    let mk = micro::kernel_for(sched.isa, sched.relaxed);
     for r in ms..me {
         let (cols, vals) = w.row(r);
         let crow = &mut c_sub[(r - ms) * n..(r - ms + 1) * n];
         for (ci, &col) in cols.iter().enumerate() {
             let av = vals[ci];
             let brow = &b[col as usize * n..col as usize * n + n];
-            axpy_unrolled(av, brow, crow, unroll);
+            mk.axpy(av, brow, crow, sched.unroll);
         }
     }
 }
 
 /// CSR SpMM with contiguous block row partition across the pool (the naive
 /// parallelisation whose imbalance the reorder pass fixes). Of the tuned
-/// [`Schedule`] only the AXPY `unroll` width applies here — the loop
-/// structure is fixed by the CSR layout.
+/// [`Schedule`] only the AXPY `unroll` width and microkernel flavor apply
+/// here — the loop structure is fixed by the CSR layout.
 pub fn spmm_csr(
     w: &Csr,
     b: &[f32],
@@ -61,7 +80,7 @@ pub fn spmm_csr(
     debug_assert_eq!(b.len(), w.cols * n);
     debug_assert_eq!(c.len(), w.rows * n);
     if pool.threads() <= 1 {
-        spmm_csr_rows(w, b, n, c, 0, w.rows, sched.unroll);
+        spmm_csr_rows(w, b, n, c, 0, w.rows, sched);
         return;
     }
     let c_ptr = SendPtr::new(c.as_mut_ptr());
@@ -70,7 +89,7 @@ pub fn spmm_csr(
         // of C.
         let c_sub =
             unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(ms * n), (me - ms) * n) };
-        spmm_csr_rows(w, b, n, c_sub, ms, me, sched.unroll);
+        spmm_csr_rows(w, b, n, c_sub, ms, me, sched);
     });
 }
 
@@ -102,7 +121,7 @@ pub fn spmm_csr_batch(
                 &mut c[s * m * n..(s + 1) * m * n],
                 0,
                 m,
-                sched.unroll,
+                sched,
             );
         }
         return;
@@ -117,7 +136,7 @@ pub fn spmm_csr_batch(
             let c_sub = unsafe {
                 std::slice::from_raw_parts_mut(c_ptr.get().add((s * m + r0) * n), (r1 - r0) * n)
             };
-            spmm_csr_rows(w, bs, n, c_sub, r0, r1, sched.unroll);
+            spmm_csr_rows(w, bs, n, c_sub, r0, r1, sched);
         });
     });
 }
@@ -139,8 +158,10 @@ pub fn reordered_panel_len(plan: &ReorderPlan, n: usize, pool_threads: usize) ->
 /// `panel` is the caller-provided activation-gather scratch, at least
 /// [`reordered_panel_len`] elements (one per-thread slot each large enough
 /// for the biggest group's packed B rows) — nothing is heap-allocated
-/// here. Of the tuned [`Schedule`] only the AXPY `unroll` width applies;
-/// the loop structure is fixed by the reorder plan.
+/// here. Of the tuned [`Schedule`] the AXPY `unroll` width, the
+/// microkernel flavor and `group_order` apply; the loop structure is
+/// fixed by the reorder plan. `group_order` only flips the iteration
+/// order *across* work items (disjoint output rows), never within one.
 #[allow(clippy::too_many_arguments)]
 pub fn spmm_reordered(
     plan: &ReorderPlan,
@@ -157,12 +178,13 @@ pub fn spmm_reordered(
     let per = plan.max_group_cols() * n;
     let c_ptr = SendPtr::new(c.as_mut_ptr());
     let lanes = lanes_sched.threads();
+    let mk = micro::kernel_for(tuned.isa, tuned.relaxed);
     if lanes <= 1 || pool.threads() <= 1 {
         debug_assert!(panel.len() >= per, "reordered panel undersized");
         let slot = &mut panel[..per];
-        for item in lanes_sched.items.iter().flatten() {
-            run_item(plan, item, b, n, c_ptr, slot, tuned.unroll);
-        }
+        for_items(lanes_sched.items.iter().flatten(), tuned.group_order, |item| {
+            run_item(plan, item, b, n, c_ptr, slot, tuned, mk);
+        });
         return;
     }
     // One panel slot per participating pool thread: participant `p` runs
@@ -182,9 +204,9 @@ pub fn spmm_reordered(
         let slot = unsafe {
             std::slice::from_raw_parts_mut(panel_ptr.get().add((lane % slots) * per), per)
         };
-        for item in &lanes_sched.items[lane] {
-            run_item(plan, item, b, n, c_ptr, slot, tuned.unroll);
-        }
+        for_items(lanes_sched.items[lane].iter(), tuned.group_order, |item| {
+            run_item(plan, item, b, n, c_ptr, slot, tuned, mk);
+        });
     });
 }
 
@@ -218,6 +240,7 @@ pub fn spmm_reordered_batch(
     let lanes = lanes_sched.threads().max(1);
     let parts = nb * lanes;
     let c_ptr = SendPtr::new(c.as_mut_ptr());
+    let mk = micro::kernel_for(tuned.isa, tuned.relaxed);
     if parts <= 1 || pool.threads() <= 1 {
         debug_assert!(panel.len() >= per, "reordered panel undersized");
         let slot = &mut panel[..per];
@@ -226,9 +249,9 @@ pub fn spmm_reordered_batch(
             // SAFETY: sample s's C range is in bounds; items touch
             // disjoint rows within it.
             let cs = SendPtr::new(unsafe { c_ptr.get().add(s * plan.rows * n) });
-            for item in lanes_sched.items.iter().flatten() {
-                run_item(plan, item, bs, n, cs, slot, tuned.unroll);
-            }
+            for_items(lanes_sched.items.iter().flatten(), tuned.group_order, |item| {
+                run_item(plan, item, bs, n, cs, slot, tuned, mk);
+            });
         }
         return;
     }
@@ -247,9 +270,9 @@ pub fn spmm_reordered_batch(
         // SAFETY: lanes write disjoint rows of sample s's C range (every
         // original row appears in exactly one lane's items).
         let cs = SendPtr::new(unsafe { c_ptr.get().add(s * plan.rows * n) });
-        for item in &lanes_sched.items[lane] {
-            run_item(plan, item, bs, n, cs, slot, tuned.unroll);
-        }
+        for_items(lanes_sched.items[lane].iter(), tuned.group_order, |item| {
+            run_item(plan, item, bs, n, cs, slot, tuned, mk);
+        });
     });
 }
 
@@ -260,6 +283,7 @@ pub fn spmm_reordered_batch(
 /// n-element slice, so concurrent items never hold overlapping `&mut`
 /// views. `panel` is this thread's pre-sized gather scratch (≥ `k · n`
 /// elements for every group the item may touch) — no heap allocation.
+#[allow(clippy::too_many_arguments)]
 fn run_item(
     plan: &ReorderPlan,
     item: &crate::reorder::schedule::WorkItem,
@@ -267,7 +291,8 @@ fn run_item(
     n: usize,
     c: SendPtr<f32>,
     panel: &mut [f32],
-    unroll: usize,
+    sched: &Schedule,
+    mk: &dyn MicroKernel,
 ) {
     let grp = &plan.groups[item.group];
     let k = grp.cols.len();
@@ -292,21 +317,25 @@ fn run_item(
             let crow =
                 unsafe { std::slice::from_raw_parts_mut(c.get().add(out_row * n), n) };
             // 4-way unroll over the compacted columns (one C pass per 4
-            // weights — mirrors the dense micro-kernel; §Perf iter 5).
+            // weights — mirrors the dense micro-kernel; §Perf iter 5),
+            // dispatched through the schedule's microkernel.
             let mut j = 0;
             while j + 4 <= k {
-                let (a0, a1, a2, a3) = (wrow[j], wrow[j + 1], wrow[j + 2], wrow[j + 3]);
-                let b0 = &b_packed[j * n..(j + 1) * n];
-                let b1 = &b_packed[(j + 1) * n..(j + 2) * n];
-                let b2 = &b_packed[(j + 2) * n..(j + 3) * n];
-                let b3 = &b_packed[(j + 3) * n..(j + 4) * n];
-                for t in 0..n {
-                    crow[t] += a0 * b0[t] + a1 * b1[t] + a2 * b2[t] + a3 * b3[t];
-                }
+                mk.quad(
+                    [wrow[j], wrow[j + 1], wrow[j + 2], wrow[j + 3]],
+                    [
+                        &b_packed[j * n..(j + 1) * n],
+                        &b_packed[(j + 1) * n..(j + 2) * n],
+                        &b_packed[(j + 2) * n..(j + 3) * n],
+                        &b_packed[(j + 3) * n..(j + 4) * n],
+                    ],
+                    crow,
+                    sched.nr,
+                );
                 j += 4;
             }
             while j < k {
-                axpy_unrolled(wrow[j], &b_packed[j * n..(j + 1) * n], crow, unroll);
+                mk.axpy(wrow[j], &b_packed[j * n..(j + 1) * n], crow, sched.unroll);
                 j += 1;
             }
         }
@@ -320,7 +349,7 @@ fn run_item(
             for j in 0..k {
                 let av = wrow[j];
                 let col = grp.cols[j] as usize;
-                axpy_unrolled(av, &b[col * n..col * n + n], crow, unroll);
+                mk.axpy(av, &b[col * n..col * n + n], crow, sched.unroll);
             }
         }
     }
@@ -378,8 +407,10 @@ impl PatternPlan {
 
 /// Pattern-kernel SpMM over the full patch matrix `b` [K, N].
 /// Pool threads partition output filters (disjoint C rows). Of the tuned
-/// [`Schedule`] only the AXPY `unroll` width (general-pattern path)
-/// applies; the 4-entry PConv fast path is already a fixed fused loop.
+/// [`Schedule`] the AXPY `unroll` width (general-pattern path) and the
+/// microkernel flavor apply; the 4-entry PConv fast path dispatches as
+/// one fused quad per filter row. Group iteration order is pinned here
+/// (groups accumulate into shared rows), so `group_order` never applies.
 pub fn spmm_pattern(
     plan: &PatternPlan,
     b: &[f32],
@@ -390,7 +421,7 @@ pub fn spmm_pattern(
 ) {
     debug_assert_eq!(c.len(), plan.out_c * n);
     if pool.threads() <= 1 {
-        pattern_rows(plan, b, n, c, 0, plan.out_c, sched.unroll);
+        pattern_rows(plan, b, n, c, 0, plan.out_c, sched);
         return;
     }
     let c_ptr = SendPtr::new(c.as_mut_ptr());
@@ -399,7 +430,7 @@ pub fn spmm_pattern(
         // range of C.
         let c_sub =
             unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(lo * n), (hi - lo) * n) };
-        pattern_rows(plan, b, n, c_sub, lo, hi, sched.unroll);
+        pattern_rows(plan, b, n, c_sub, lo, hi, sched);
     });
 }
 
@@ -412,27 +443,31 @@ fn pattern_rows(
     c_sub: &mut [f32],
     lo: usize,
     hi: usize,
-    unroll: usize,
+    sched: &Schedule,
 ) {
     debug_assert_eq!(c_sub.len(), (hi - lo) * n);
+    // Unlike the reordered tier, different (channel, pattern) groups
+    // accumulate into the SAME output rows, so the group iteration order
+    // here is accumulation-order-sensitive and stays pinned — the tuner's
+    // `group_order` knob never applies to this kernel.
+    let mk = micro::kernel_for(sched.isa, sched.relaxed);
     for (rows, items) in &plan.groups {
         // The 4-entry PConv fast path dominates; general path for
         // other pattern sizes.
         if rows.len() == 4 {
-            let b0 = &b[rows[0] as usize * n..rows[0] as usize * n + n];
-            let b1 = &b[rows[1] as usize * n..rows[1] as usize * n + n];
-            let b2 = &b[rows[2] as usize * n..rows[2] as usize * n + n];
-            let b3 = &b[rows[3] as usize * n..rows[3] as usize * n + n];
+            let bq = [
+                &b[rows[0] as usize * n..rows[0] as usize * n + n],
+                &b[rows[1] as usize * n..rows[1] as usize * n + n],
+                &b[rows[2] as usize * n..rows[2] as usize * n + n],
+                &b[rows[3] as usize * n..rows[3] as usize * n + n],
+            ];
             for (o, w, _) in items {
                 let o = *o as usize;
                 if o < lo || o >= hi {
                     continue;
                 }
                 let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
-                let (w0, w1, w2, w3) = (w[0], w[1], w[2], w[3]);
-                for j in 0..n {
-                    crow[j] += w0 * b0[j] + w1 * b1[j] + w2 * b2[j] + w3 * b3[j];
-                }
+                mk.quad([w[0], w[1], w[2], w[3]], bq, crow, sched.nr);
             }
         } else {
             for (o, w, len) in items {
@@ -442,11 +477,11 @@ fn pattern_rows(
                 }
                 let crow = &mut c_sub[(o - lo) * n..(o - lo + 1) * n];
                 for (j, &row) in rows.iter().enumerate().take(*len as usize) {
-                    axpy_unrolled(
+                    mk.axpy(
                         w[j],
                         &b[row as usize * n..row as usize * n + n],
                         crow,
-                        unroll,
+                        sched.unroll,
                     );
                 }
             }
@@ -483,7 +518,7 @@ pub fn spmm_pattern_batch(
                 &mut c[s * m * n..(s + 1) * m * n],
                 0,
                 m,
-                sched.unroll,
+                sched,
             );
         }
         return;
@@ -499,7 +534,7 @@ pub fn spmm_pattern_batch(
             let c_sub = unsafe {
                 std::slice::from_raw_parts_mut(c_ptr.get().add((s * m + lo) * n), (hi - lo) * n)
             };
-            pattern_rows(plan, bs, n, c_sub, lo, hi, sched.unroll);
+            pattern_rows(plan, bs, n, c_sub, lo, hi, sched);
         });
     });
 }
@@ -776,6 +811,82 @@ mod tests {
         let mut panel = vec![0.0; reordered_panel_len(&plan, 5, pool.threads())];
         spmm_reordered(&plan, &lanes, &b, 5, &mut c, &pool, &mut panel, &Schedule::default());
         assert!(c.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn simd_and_group_order_schedules_are_bitwise_on_sparse_tiers() {
+        // Order-preserving SIMD flavors and the reordered tier's group
+        // iteration order must reproduce the default scalar schedule
+        // bitwise on every sparse kernel.
+        use crate::kernels::micro::{self, Isa};
+        use crate::tuner::schedule::GroupOrder;
+        let mut rng = Rng::new(87);
+        let (o, i, n) = (18, 4, 23);
+        let w = Tensor::randn(&[o, i, 3, 3], &mut rng);
+        let s = project_scheme(&w, "pattern", 0.6, None);
+        let wp = apply_mask(&w, &s);
+        let gv = GemmView::from_oihw(&wp);
+        let b: Vec<f32> = (0..gv.cols * n).map(|_| rng.normal()).collect();
+        let base = Schedule::default();
+        let mut scheds = vec![Schedule { nr: 16, mr: 4, ..base }];
+        if micro::detect() != Isa::Scalar {
+            scheds.push(Schedule { isa: micro::detect(), ..base });
+            scheds.push(Schedule { isa: micro::detect(), mr: 4, nr: 16, ..base });
+        }
+
+        // CSR.
+        let csr = Csr::from_dense(&gv);
+        let pool = ComputePool::new(3);
+        let mut want = vec![0.0; o * n];
+        spmm_csr(&csr, &b, n, &mut want, &pool, &base);
+        for sc in &scheds {
+            let mut got = vec![0.0; o * n];
+            spmm_csr(&csr, &b, n, &mut got, &pool, sc);
+            assert_eq!(got, want, "csr {:?}", sc);
+        }
+
+        // Pattern.
+        let (set, ids) = match &s {
+            Scheme::Pattern { set, ids } => (set, ids),
+            _ => unreachable!(),
+        };
+        let pc = crate::sparse::PatternCompact::encode(&wp, set, ids, i, 3, 3);
+        let pplan = PatternPlan::build(&pc);
+        let mut want_p = vec![0.0; o * n];
+        spmm_pattern(&pplan, &b, n, &mut want_p, &pool, &base);
+        for sc in &scheds {
+            let mut got = vec![0.0; o * n];
+            spmm_pattern(&pplan, &b, n, &mut got, &pool, sc);
+            assert_eq!(got, want_p, "pattern {:?}", sc);
+        }
+
+        // Reordered — also sweep the group iteration order (work items
+        // touch disjoint rows, so reversing can never change bits).
+        let rplan = ReorderPlan::build(&gv);
+        let lanes = LaneSchedule::build(&rplan, 2);
+        let mut panel = vec![0.0; reordered_panel_len(&rplan, n, pool.threads())];
+        let mut want_r = vec![0.0; o * n];
+        spmm_reordered(&rplan, &lanes, &b, n, &mut want_r, &pool, &mut panel, &base);
+        let mut order_scheds = scheds.clone();
+        order_scheds.push(Schedule { group_order: GroupOrder::Reverse, ..base });
+        if micro::detect() != Isa::Scalar {
+            order_scheds.push(Schedule {
+                isa: micro::detect(),
+                group_order: GroupOrder::Reverse,
+                mr: 4,
+                nr: 16,
+                ..base
+            });
+        }
+        for sc in &order_scheds {
+            for threads in [1usize, 4] {
+                let tp = ComputePool::new(threads);
+                let mut pnl = vec![0.0; reordered_panel_len(&rplan, n, tp.threads())];
+                let mut got = vec![0.0; o * n];
+                spmm_reordered(&rplan, &lanes, &b, n, &mut got, &tp, &mut pnl, sc);
+                assert_eq!(got, want_r, "reordered {:?} t={}", sc, threads);
+            }
+        }
     }
 
     #[test]

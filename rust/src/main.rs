@@ -13,6 +13,10 @@
 //! `--tune` enables the plan-time schedule auto-tuner (see
 //! `docs/ARCHITECTURE.md` §Tuning); winners persist in `--tune-cache`
 //! (default `.tune-cache.json`) so later runs plan without benchmarking.
+//! `--force-scalar` pins `run` / `serve` to the scalar microkernels even
+//! on a SIMD host (same effect as `PALLAS_FORCE_SCALAR=1`); `--relaxed-simd`
+//! allows the FMA kernel flavor (a few ulps off the scalar results — see
+//! `docs/ARCHITECTURE.md` §Microkernels).
 //! `--batch N` fuses N frames per dispatch (see `docs/ARCHITECTURE.md`
 //! §Batching): `run` then reports per-dispatch and per-frame time, and
 //! `serve` coalesces up to N queued frames per worker dispatch
@@ -75,6 +79,10 @@ fn tune_opts(args: &Args) -> TuneOpts {
     } else {
         TuneOpts::off()
     }
+}
+
+fn print_isa(session: &Session) {
+    println!("kernel ISA: {}", session.isa().tag());
 }
 
 fn print_tune_stats(session: &Session) {
@@ -167,7 +175,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         .threads(threads)
         .batch(batch)
         .tune(tune_opts(args))
+        .force_scalar(args.has_flag("force-scalar"))
+        .relaxed_simd(args.has_flag("relaxed-simd"))
         .build()?;
+    print_isa(&session);
     print_tune_stats(&session);
     let input_shape = session.shapes().inputs[0].clone();
     let x = Tensor::full(&input_shape, 0.5);
@@ -209,7 +220,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .threads(threads)
         .batch(batch)
         .tune(tune_opts(args))
+        .force_scalar(args.has_flag("force-scalar"))
+        .relaxed_simd(args.has_flag("relaxed-simd"))
         .build()?;
+    print_isa(&session);
     print_tune_stats(&session);
     let ishape = session.shapes().frame_inputs[0].clone();
     let (h, w) = (ishape[2], ishape[3]);

@@ -31,7 +31,9 @@
 //! `Server::new(engine, ServeConfig)`). [`Model`] + [`Session`] replace all
 //! of them: every axis is a builder knob ([`SessionBuilder::threads`],
 //! [`SessionBuilder::batch`], [`SessionBuilder::sparse`],
-//! [`SessionBuilder::tune`]), failures are typed [`SessionError`]s, and
+//! [`SessionBuilder::tune`], [`SessionBuilder::force_scalar`],
+//! [`SessionBuilder::relaxed_simd`]), failures are typed
+//! [`SessionError`]s, and
 //! introspection ([`Session::shapes`], [`Session::memory`],
 //! [`Session::schedules_json`]) lives on the session itself.
 //!

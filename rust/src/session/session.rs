@@ -26,6 +26,14 @@ pub struct SessionOptions {
     pub sparse: Option<Format>,
     /// Plan-time schedule auto-tuning (default off).
     pub tune: TuneOpts,
+    /// Pin the plan to the scalar microkernels even on a SIMD host (the
+    /// per-session form of the `PALLAS_FORCE_SCALAR` escape hatch;
+    /// default `false`).
+    pub force_scalar: bool,
+    /// Allow the relaxed (FMA-reordering) SIMD kernel flavor. Off by
+    /// default: results then stay bitwise-identical to the scalar
+    /// kernels (see [`crate::kernels::micro`]).
+    pub relaxed_simd: bool,
 }
 
 impl Default for SessionOptions {
@@ -35,6 +43,8 @@ impl Default for SessionOptions {
             batch: 1,
             sparse: None,
             tune: TuneOpts::off(),
+            force_scalar: false,
+            relaxed_simd: false,
         }
     }
 }
@@ -78,6 +88,21 @@ impl<'m> SessionBuilder<'m> {
         self
     }
 
+    /// Pin this session to the scalar microkernels even when the host has
+    /// SIMD — the builder form of the `PALLAS_FORCE_SCALAR` escape hatch.
+    pub fn force_scalar(mut self, force: bool) -> Self {
+        self.opts.force_scalar = force;
+        self
+    }
+
+    /// Allow the relaxed (FMA-reordering) SIMD flavor. Off by default;
+    /// switching it on trades the bitwise-vs-scalar guarantee for a few
+    /// extra percent of throughput (results differ by a few ulps).
+    pub fn relaxed_simd(mut self, relaxed: bool) -> Self {
+        self.opts.relaxed_simd = relaxed;
+        self
+    }
+
     /// Replace every knob at once (bulk form of the per-axis setters).
     pub fn options(mut self, opts: SessionOptions) -> Self {
         self.opts = opts;
@@ -102,6 +127,8 @@ impl<'m> SessionBuilder<'m> {
             schemes: self.model.schemes().to_vec(),
             tune: self.opts.tune.clone(),
             batch: self.opts.batch,
+            force_scalar: self.opts.force_scalar,
+            relaxed_simd: self.opts.relaxed_simd,
         };
         let engine = Engine::with_config(self.model.graph(), &cfg)?;
         Ok(Session {
@@ -246,6 +273,12 @@ impl Session {
         self.plan().batch()
     }
 
+    /// The microkernel ISA the session's plan was compiled against (see
+    /// [`ExecutionPlan::isa`](crate::executor::ExecutionPlan::isa)).
+    pub fn isa(&self) -> crate::kernels::micro::Isa {
+        self.plan().isa()
+    }
+
     /// Serialized weight bytes under the session's storage format.
     pub fn weight_bytes(&self) -> usize {
         self.engine.weight_bytes
@@ -344,6 +377,15 @@ mod tests {
         let outs = s.run_frames(&refs).unwrap();
         assert_eq!(outs.len(), 2);
         assert_eq!(outs[0][0].shape(), shapes.frame_outputs[0].as_slice());
+    }
+
+    #[test]
+    fn force_scalar_session_reports_scalar_isa() {
+        let model = style_model(Variant::PrunedCompiler);
+        let s = model.session().threads(1).force_scalar(true).build().unwrap();
+        assert_eq!(s.isa(), crate::kernels::micro::Isa::Scalar);
+        let default = model.session().threads(1).build().unwrap();
+        assert_eq!(default.isa(), crate::kernels::micro::detect());
     }
 
     #[test]

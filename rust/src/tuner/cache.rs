@@ -10,9 +10,12 @@
 //! Micro-benchmark winners are only meaningful on the machine that
 //! measured them, so every cache file records [`host_fingerprint`] and
 //! [`TuneCache::load`] silently discards a file written by a different
-//! host (or by the pre-fingerprint v1 format) — a copied
+//! host (or by the pre-fingerprint v1 / pre-ISA v2 formats) — a copied
 //! `--tune-cache` file can therefore never serve stale schedules; the
-//! next tuned plan re-benchmarks and overwrites it for this host.
+//! next tuned plan re-benchmarks and overwrites it for this host. The
+//! fingerprint includes the detected kernel ISA, so a cache written with
+//! AVX2 winners is discarded on a scalar-only host even when everything
+//! else about the machine matches.
 
 use crate::tuner::schedule::Schedule;
 use crate::util::json::{Json, JsonObj};
@@ -20,29 +23,35 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-/// Current cache file format version (v2 added the host fingerprint; v1
+/// Current cache file format version (v2 added the host fingerprint; v3
+/// added the ISA schedule fields and the ISA-suffixed fingerprint; v1/v2
 /// files are discarded as untrusted on load).
-const VERSION: usize = 2;
+const VERSION: usize = 3;
 
 /// Stable fingerprint of the machine the benchmarks ran on: CPU
-/// architecture + OS + core count. Coarse on purpose — it only needs to
-/// catch cache files copied between machines, not micro-architectural
-/// drift on one box.
+/// architecture + OS + core count + **detected kernel ISA**. Coarse on
+/// purpose — it only needs to catch cache files copied between machines
+/// (or between a SIMD and a scalar-only build environment on one box),
+/// not micro-architectural drift.
 ///
-/// The core count comes from `available_parallelism`, which honors
-/// cgroup quotas and affinity masks — so one physical machine whose
-/// workloads alternate between CPU limits would see its cache
-/// self-invalidate. Set `PRT_DNN_TUNE_HOST` to pin the namespace
-/// explicitly in such environments (the variable's value becomes the
-/// fingerprint verbatim).
+/// The ISA suffix is what keeps a cache written with AVX2 winners from
+/// ever being replayed on a scalar-only host: the fingerprints differ, so
+/// [`TuneCache::load`] discards the file. The core count comes from
+/// `available_parallelism`, which honors cgroup quotas and affinity masks
+/// — so one physical machine whose workloads alternate between CPU limits
+/// would see its cache self-invalidate. Set `PRT_DNN_TUNE_HOST` to pin
+/// the base namespace explicitly in such environments (the detected ISA
+/// tag is still appended — schedules carry ISA choices, so caches are
+/// never portable across ISAs even on a pinned namespace).
 pub fn host_fingerprint() -> String {
+    let isa = crate::kernels::micro::detect().tag();
     if let Ok(v) = std::env::var("PRT_DNN_TUNE_HOST") {
         if !v.is_empty() {
-            return v;
+            return format!("{}-{}", v, isa);
         }
     }
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    format!("{}-{}-{}c", std::env::consts::ARCH, std::env::consts::OS, cores)
+    format!("{}-{}-{}c-{}", std::env::consts::ARCH, std::env::consts::OS, cores, isa)
 }
 
 /// Persistent map from tune key (see
@@ -112,13 +121,14 @@ impl TuneCache {
         Json::Obj(o)
     }
 
-    /// Parse a cache document; schedules are sanitized on the way in. A
-    /// version-1 document (pre-fingerprint) parses as an **empty** cache
-    /// — its entries were benchmarked by an unknown host.
+    /// Parse a cache document; schedules are sanitized on the way in.
+    /// Version-1 (pre-fingerprint) and version-2 (pre-ISA) documents parse
+    /// as an **empty** cache — v1 entries were benchmarked by an unknown
+    /// host, v2 entries lack the ISA/register-tile schedule fields.
     pub fn from_json(j: &Json) -> Result<TuneCache> {
         match j.get("version").as_usize() {
             Some(VERSION) => {}
-            Some(1) => return Ok(TuneCache::new()),
+            Some(1) | Some(2) => return Ok(TuneCache::new()),
             other => bail!("tune cache: unsupported version {:?}", other),
         }
         let host = j
@@ -194,6 +204,7 @@ mod tests {
                 nc: 4096,
                 split: SplitAxis::Cols,
                 unroll: 1,
+                ..Schedule::default()
             },
         );
         c
@@ -244,11 +255,14 @@ mod tests {
     #[test]
     fn rejects_bad_versions_and_shapes() {
         assert!(TuneCache::from_json(&Json::parse("{\"version\":99}").unwrap()).is_err());
-        // v2 requires the host fingerprint and the entries object.
-        assert!(TuneCache::from_json(&Json::parse("{\"version\":2}").unwrap()).is_err());
-        // v1 (pre-fingerprint) parses as empty: unknown benchmarking host.
-        let v1 = TuneCache::from_json(&Json::parse("{\"version\":1}").unwrap()).unwrap();
-        assert!(v1.is_empty());
+        // v3 requires the host fingerprint and the entries object.
+        assert!(TuneCache::from_json(&Json::parse("{\"version\":3}").unwrap()).is_err());
+        // v1 (pre-fingerprint) and v2 (pre-ISA schedules) parse as empty:
+        // their entries were benchmarked under an unknown kernel tier.
+        for old in ["{\"version\":1}", "{\"version\":2}"] {
+            let c = TuneCache::from_json(&Json::parse(old).unwrap()).unwrap();
+            assert!(c.is_empty(), "{} must parse as an empty cache", old);
+        }
     }
 
     #[test]
@@ -271,6 +285,34 @@ mod tests {
         local.insert("extra|key|m1k1n1|g|t1", Schedule::default());
         local.save(&p).unwrap();
         assert_eq!(TuneCache::load(&p).unwrap(), local);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn same_host_different_isa_cache_is_discarded_on_load() {
+        // Forge a fingerprint identical to this host's except for the ISA
+        // suffix — the "cache written with AVX2 winners replayed on a
+        // scalar-only host" hazard. Load must discard it.
+        let local = host_fingerprint();
+        let local_tag = crate::kernels::micro::detect().tag();
+        let other_tag = if local_tag == "avx2" { "scalar" } else { "avx2" };
+        let forged = format!(
+            "{}-{}",
+            local.strip_suffix(&format!("-{}", local_tag)).unwrap(),
+            other_tag
+        );
+        assert_ne!(forged, local);
+
+        let p = std::env::temp_dir().join(format!(
+            "prt-tune-cache-isa-{}.json",
+            std::process::id()
+        ));
+        let mut stale = TuneCache::with_host(forged);
+        stale.insert("conv|dense|m64k27n1024|k3s1p1|t4", Schedule::default());
+        stale.save(&p).unwrap();
+        let loaded = TuneCache::load(&p).unwrap();
+        assert!(loaded.is_empty(), "other-ISA cache must be discarded");
+        assert_eq!(loaded.host(), local);
         let _ = std::fs::remove_file(&p);
     }
 }

@@ -30,7 +30,8 @@ pub mod cache;
 pub mod schedule;
 
 pub use cache::{host_fingerprint, TuneCache};
-pub use schedule::{Lowering, Schedule, SplitAxis};
+pub use crate::kernels::micro::Isa;
+pub use schedule::{GroupOrder, Lowering, Schedule, SplitAxis};
 
 use crate::perfmodel::sched::{gemm_schedule_seconds, HostModel};
 use crate::util::threadpool::ComputePool;
@@ -147,6 +148,10 @@ impl TuneRequest<'_> {
 pub struct Tuner {
     opts: TuneOpts,
     threads: usize,
+    /// The plan-level ISA policy: the detected host ISA, or `Scalar` when
+    /// the session forces the scalar fallback. Every candidate and every
+    /// cache hit is clamped into {`Scalar`, this} — see [`Tuner::tune`].
+    isa: Isa,
     cache: TuneCache,
     dirty: bool,
     stats: TuneStats,
@@ -156,9 +161,9 @@ pub struct Tuner {
 }
 
 impl Tuner {
-    /// Build a tuner for one planning pass at the given thread budget,
-    /// loading the on-disk cache when configured.
-    pub fn new(opts: TuneOpts, threads: usize) -> Result<Self> {
+    /// Build a tuner for one planning pass at the given thread budget and
+    /// plan-level ISA policy, loading the on-disk cache when configured.
+    pub fn new(opts: TuneOpts, threads: usize, isa: Isa) -> Result<Self> {
         let cache = match &opts.cache_path {
             Some(p) if opts.enabled => TuneCache::load(p)?,
             _ => TuneCache::new(),
@@ -166,11 +171,19 @@ impl Tuner {
         Ok(Tuner {
             opts,
             threads: threads.max(1),
+            isa,
             cache,
             dirty: false,
             stats: TuneStats::default(),
             pool: None,
         })
+    }
+
+    /// The plan baseline schedule: the historical defaults on this plan's
+    /// ISA. This is what untuned steps run, survivor 0 of every search,
+    /// and the tie-bias winner.
+    fn base(&self) -> Schedule {
+        Schedule { isa: self.isa, ..Schedule::default() }.sanitized()
     }
 
     /// Whether the planner should consult this tuner at all.
@@ -183,58 +196,118 @@ impl Tuner {
         self.stats
     }
 
-    /// The bounded candidate space for a request. Every candidate is
-    /// sanitized into the bitwise-safe legal space; the default schedule
-    /// is always element 0.
-    pub fn candidate_space(req: &TuneRequest) -> Vec<Schedule> {
-        let default = Schedule::default();
+    /// Clamp a cached schedule into this plan's ISA policy. The host
+    /// fingerprint already discards caches from other machines (or other
+    /// detected ISAs), but a cache written by a normal session on *this*
+    /// host can still be loaded by a force-scalar session of the same
+    /// binary — its SIMD winners must not resurrect SIMD kernels there.
+    /// Dense steps are additionally forced onto the plan ISA (their dot
+    /// reduction must stay uniform across every plan of one config).
+    fn clamp_to_policy(&self, req: &TuneRequest, mut s: Schedule) -> Schedule {
+        let allowed = s.isa == Isa::Scalar || s.isa == self.isa;
+        if !allowed || (req.op == "dense" && s.isa != self.isa) {
+            s.isa = self.isa;
+            s = s.sanitized();
+        }
+        s
+    }
+
+    /// The bounded candidate space for a request under a plan-level ISA
+    /// policy. Every candidate is sanitized into the bitwise-safe legal
+    /// space; the plan baseline (defaults on `isa`) is always element 0.
+    ///
+    /// The ISA axis is searched as {`isa`, `Scalar`} for GEMM-backed and
+    /// sparse steps (their accumulate kernels are order-preserving, so
+    /// mixing is bitwise-free), but **pinned to `isa` for dense steps**:
+    /// the FC dot product reduces SIMD lanes, so its ISA must be uniform
+    /// across every plan of one config or cross-plan bitwise oracles would
+    /// compare different reduction orders.
+    pub fn candidate_space(req: &TuneRequest, isa: Isa) -> Vec<Schedule> {
+        let base = Schedule { isa, ..Schedule::default() }.sanitized();
+        let isa = base.isa; // post-sanitize: clamped to an available ISA
         if req.op == "dw" {
             // Depthwise: only the split knob is live — `Rows` partitions
             // the pool per (n·c) channel plane (the historical fixed
             // kernel), `Cols` per output row (finer grain that fills the
-            // pool when n·c is small). Tiles, lowering and unroll are
-            // no-ops for the direct depthwise loop.
-            return vec![default, Schedule { split: SplitAxis::Cols, ..default }.sanitized()];
+            // pool when n·c is small). Tiles, lowering, unroll and the
+            // microkernel knobs are no-ops for the direct depthwise loop.
+            return vec![base, Schedule { split: SplitAxis::Cols, ..base }.sanitized()];
         }
         if req.op == "dense" {
             // Fully-connected: `dense_forward` only honors the split axis
-            // (rows = output features, cols = batch); tiles, lowering and
-            // unroll are no-ops there, so probing them would just re-time
-            // identical kernels and persist meaningless knob values. At
-            // batch 1 even the cols split is dead (the kernel takes the
-            // rows path), so only the default remains.
+            // (rows = output features, cols = batch) and the plan-pinned
+            // ISA; tiles, lowering and unroll are no-ops there, so probing
+            // them would just re-time identical kernels and persist
+            // meaningless knob values. At batch 1 even the cols split is
+            // dead (the kernel takes the rows path), so only the baseline
+            // remains.
             if req.n <= 1 {
-                return vec![default];
+                return vec![base];
             }
-            return vec![default, Schedule { split: SplitAxis::Cols, ..default }.sanitized()];
+            return vec![base, Schedule { split: SplitAxis::Cols, ..base }.sanitized()];
         }
         if !req.gemm_backed {
             // Sparse kernels: the reorder/pattern plans fix the loop
-            // structure, only the AXPY unroll width is free.
-            return vec![default, Schedule { unroll: 1, ..default }];
+            // structure; the AXPY unroll width, the SIMD register-tile
+            // column width, and (reordered only) the work item iteration
+            // order are free.
+            let mut out = vec![base, Schedule { unroll: 1, ..base }];
+            if isa != Isa::Scalar {
+                out.push(Schedule { nr: 16, ..base }.sanitized());
+            }
+            if req.variant == "reordered" {
+                out.push(Schedule { group_order: GroupOrder::Reverse, ..base }.sanitized());
+                out.push(
+                    Schedule { group_order: GroupOrder::Reverse, unroll: 1, ..base }.sanitized(),
+                );
+            }
+            return out;
         }
-        let mut out = vec![default];
+        let mut out = vec![base];
         let lowerings: &[Lowering] = if req.direct_ok {
             &[Lowering::Im2col, Lowering::Direct]
         } else {
             &[Lowering::Im2col]
         };
+        // The SIMD j-loop block width only exists for SIMD ISAs; for the
+        // scalar kernel it is inert, so probing it would duplicate work.
+        let nrs: &[usize] = if isa == Isa::Scalar { &[8] } else { &[8, 16] };
         for &lowering in lowerings {
             for &mc in &[32usize, 64, 128] {
                 for &kc in &[128usize, 256, 512] {
                     for &nc in &[256usize, 1024, 4096] {
                         for &split in &[SplitAxis::Rows, SplitAxis::Cols] {
                             for &unroll in &[8usize, 1] {
-                                let s = Schedule { lowering, mc, kc, nc, split, unroll }
-                                    .sanitized();
-                                if s != default {
-                                    out.push(s);
+                                for &mr in &[2usize, 4] {
+                                    for &nr in nrs {
+                                        let s = Schedule {
+                                            lowering,
+                                            mc,
+                                            kc,
+                                            nc,
+                                            split,
+                                            unroll,
+                                            mr,
+                                            nr,
+                                            ..base
+                                        }
+                                        .sanitized();
+                                        if s != base {
+                                            out.push(s);
+                                        }
+                                    }
                                 }
                             }
                         }
                     }
                 }
             }
+        }
+        if isa != Isa::Scalar {
+            // One scalar fallback candidate: lets the tuner detect shapes
+            // where the SIMD kernel regresses (tiny N tails dominated by
+            // dispatch overhead) without exploding the space.
+            out.push(Schedule::default());
         }
         out
     }
@@ -250,20 +323,20 @@ impl Tuner {
         bench: &mut dyn FnMut(&Schedule, &ComputePool) -> f64,
     ) -> Schedule {
         if !self.opts.enabled {
-            return Schedule::default();
+            return self.base();
         }
         let key = req.key(self.threads);
         if let Some(s) = self.cache.get(&key) {
             self.stats.cache_hits += 1;
-            return s;
+            return self.clamp_to_policy(req, s);
         }
         self.stats.cache_misses += 1;
 
         // Rank the bounded space with the deterministic roofline and keep
-        // the few survivors worth real benchmark time. The default is
+        // the few survivors worth real benchmark time. The baseline is
         // pinned as survivor 0 regardless of its modeled rank.
         let host = HostModel::generic();
-        let mut ranked: Vec<(f64, Schedule)> = Self::candidate_space(req)
+        let mut ranked: Vec<(f64, Schedule)> = Self::candidate_space(req, self.isa)
             .into_iter()
             .skip(1)
             .map(|s| {
@@ -271,7 +344,7 @@ impl Tuner {
             })
             .collect();
         ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
-        let default = Schedule::default();
+        let default = self.base();
         let mut survivors = vec![default];
         survivors.extend(
             ranked
@@ -348,41 +421,88 @@ mod tests {
 
     #[test]
     fn candidate_space_is_bounded_and_legal() {
-        let cands = Tuner::candidate_space(&gemm_req(true, true));
+        let cands = Tuner::candidate_space(&gemm_req(true, true), Isa::Scalar);
         assert_eq!(cands[0], Schedule::default());
-        assert!(cands.len() > 8 && cands.len() <= 1 + 2 * 108);
+        // Scalar policy: 2 lowerings × 3·3·3 tiles × 2 splits × 2 unrolls
+        // × 2 mr (nr is inert for scalar), minus baseline dupes.
+        assert!(cands.len() > 8 && cands.len() <= 1 + 2 * 216);
         for c in &cands {
             assert_eq!(*c, c.sanitized(), "candidate not legal: {:?}", c);
+            assert_eq!(c.isa, Isa::Scalar, "scalar policy must pin the ISA");
         }
-        let sparse = Tuner::candidate_space(&gemm_req(false, false));
-        assert_eq!(sparse.len(), 2, "sparse space is unroll-only");
+        let sparse = Tuner::candidate_space(&gemm_req(false, false), Isa::Scalar);
+        assert_eq!(sparse.len(), 2, "scalar sparse space is unroll-only");
 
         let mut dw = gemm_req(false, false);
         dw.op = "dw";
-        let dw_cands = Tuner::candidate_space(&dw);
+        let dw_cands = Tuner::candidate_space(&dw, Isa::Scalar);
         assert_eq!(dw_cands.len(), 2, "dw space is split-only");
         assert_eq!(dw_cands[0], Schedule::default());
         assert_eq!(dw_cands[1].split, SplitAxis::Cols);
     }
 
     #[test]
+    fn simd_policy_space_spans_isa_and_register_tiles() {
+        let isa = crate::kernels::micro::detect();
+        let cands = Tuner::candidate_space(&gemm_req(true, true), isa);
+        assert_eq!(cands[0], Schedule { isa, ..Schedule::default() });
+        assert!(cands.len() <= 2 + 2 * 432, "space must stay bounded");
+        for c in &cands {
+            assert_eq!(*c, c.sanitized(), "candidate not legal: {:?}", c);
+            assert!(!c.relaxed, "the tuner never searches relaxed mode");
+        }
+        if isa != Isa::Scalar {
+            assert!(
+                cands.iter().any(|c| c.isa == Isa::Scalar),
+                "SIMD policy keeps a scalar fallback candidate"
+            );
+            assert!(
+                cands.iter().any(|c| c.isa == isa && c.nr == 16),
+                "SIMD policy probes the wide register tile"
+            );
+            assert!(cands.iter().any(|c| c.mr == 4), "mr axis missing");
+        }
+    }
+
+    #[test]
+    fn reordered_space_probes_group_iteration_order() {
+        let mut req = gemm_req(false, false);
+        req.variant = "reordered";
+        let cands = Tuner::candidate_space(&req, Isa::Scalar);
+        assert!(
+            cands.iter().any(|c| c.group_order == GroupOrder::Reverse),
+            "reordered space must include the reverse group order"
+        );
+        assert_eq!(cands[0].group_order, GroupOrder::Forward);
+        // The pattern kernel accumulates groups into shared output rows —
+        // its iteration order is pinned, so its space has no such axis.
+        req.variant = "pattern";
+        let cands = Tuner::candidate_space(&req, Isa::Scalar);
+        assert!(cands.iter().all(|c| c.group_order == GroupOrder::Forward));
+    }
+
+    #[test]
     fn dense_space_is_split_only() {
         // FC steps probe at most two candidates: the default (rows split)
         // and — only when the batch gives the cols path any work — the
-        // batch (cols) split. Everything else is a no-op knob.
+        // batch (cols) split. Everything else is a no-op knob, and the ISA
+        // stays pinned to the plan policy (dot reduction uniformity).
         let mut req = gemm_req(false, true);
         req.op = "dense";
-        let cands = Tuner::candidate_space(&req); // req.n > 1
+        let isa = crate::kernels::micro::detect();
+        let cands = Tuner::candidate_space(&req, isa); // req.n > 1
         assert_eq!(cands.len(), 2);
-        assert_eq!(cands[0], Schedule::default());
+        assert_eq!(cands[0], Schedule { isa, ..Schedule::default() });
         assert_eq!(cands[1].split, SplitAxis::Cols);
+        assert!(cands.iter().all(|c| c.isa == isa), "dense ISA must be pinned");
         req.n = 1; // batch 1: the cols split is dead code in the kernel
-        assert_eq!(Tuner::candidate_space(&req), vec![Schedule::default()]);
+        let cands = Tuner::candidate_space(&req, Isa::Scalar);
+        assert_eq!(cands, vec![Schedule::default()]);
     }
 
     #[test]
     fn disabled_tuner_returns_default_without_benching() {
-        let mut t = Tuner::new(TuneOpts::off(), 4).unwrap();
+        let mut t = Tuner::new(TuneOpts::off(), 4, Isa::Scalar).unwrap();
         let mut calls = 0usize;
         let s = t.tune(&gemm_req(false, true), &mut |_, _| {
             calls += 1;
@@ -393,13 +513,36 @@ mod tests {
         assert_eq!(t.stats(), TuneStats::default());
     }
 
+    #[test]
+    fn cached_simd_winner_is_clamped_by_a_scalar_policy() {
+        // A cache written by a normal (SIMD) session on this host must not
+        // resurrect SIMD kernels inside a force-scalar plan of the same
+        // binary. (Caches from other hosts/ISAs are already discarded by
+        // the fingerprint — this covers the same-host builder-flag case.)
+        let isa = crate::kernels::micro::detect();
+        let dir = std::env::temp_dir().join("prt-dnn-tuner-clamp-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let req = gemm_req(false, true);
+        let mut cache = TuneCache::with_host(host_fingerprint());
+        cache.insert(req.key(2), Schedule { isa, mr: 4, ..Schedule::default() });
+        cache.save(&path).unwrap();
+
+        let mut t = Tuner::new(TuneOpts::on(&path), 2, Isa::Scalar).unwrap();
+        let s = t.tune(&req, &mut |_, _| unreachable!("cache hit must not bench"));
+        assert_eq!(s.isa, Isa::Scalar, "policy clamp failed: {:?}", s);
+        assert_eq!(s.mr, 4, "non-ISA knobs survive the clamp");
+        assert_eq!(t.stats().cache_hits, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
     fn mem_opts(max_candidates: usize) -> TuneOpts {
         TuneOpts { enabled: true, cache_path: None, max_candidates, bench_repeats: 1 }
     }
 
     #[test]
     fn in_memory_cache_dedupes_repeated_shapes() {
-        let mut t = Tuner::new(mem_opts(2), 2).unwrap();
+        let mut t = Tuner::new(mem_opts(2), 2, Isa::Scalar).unwrap();
         let req = gemm_req(false, true);
         let mut calls = 0usize;
         let s1 = t.tune(&req, &mut |_, _| {
@@ -421,14 +564,14 @@ mod tests {
     #[test]
     fn default_wins_ties() {
         // Every candidate measures identical time: the default must win.
-        let mut t = Tuner::new(mem_opts(4), 2).unwrap();
+        let mut t = Tuner::new(mem_opts(4), 2, Isa::Scalar).unwrap();
         let s = t.tune(&gemm_req(true, true), &mut |_, _| 1.0);
         assert_eq!(s, Schedule::default());
     }
 
     #[test]
     fn clear_winner_is_selected() {
-        let mut t = Tuner::new(mem_opts(4), 2).unwrap();
+        let mut t = Tuner::new(mem_opts(4), 2, Isa::Scalar).unwrap();
         // The default is slow, everything else is 10x faster.
         let s = t.tune(&gemm_req(true, true), &mut |cand, _| {
             if *cand == Schedule::default() {

@@ -3,14 +3,17 @@
 //! A `Schedule` bundles every per-step kernel decision that is a pure
 //! performance knob: how a conv is lowered to a matrix multiply, the GEMM
 //! blocking tile sizes, which axis the multi-threaded kernel splits across
-//! the compute pool, and the inner-loop unroll width. The default value
-//! reproduces the historical hard-coded kernels exactly.
+//! the compute pool, the inner-loop unroll width, the target [`Isa`] with
+//! its register-tile shape `mr`×`nr`, and the reordered kernel's group
+//! iteration order. The default value reproduces the historical
+//! hard-coded scalar kernels exactly.
 //!
 //! # Bitwise-safety invariant
 //!
 //! Every legal `Schedule` must produce **bitwise-identical** outputs to the
-//! default schedule (verified by `rust/tests/tuner_equivalence.rs`). The
-//! kernels guarantee this as long as:
+//! default schedule (verified by `rust/tests/tuner_equivalence.rs` and
+//! `rust/tests/simd_equivalence.rs`). The kernels guarantee this as long
+//! as:
 //!
 //! * `mc` is even — the 2-row GEMM micro-kernel then pairs the same rows
 //!   regardless of the tile size;
@@ -19,11 +22,26 @@
 //!   accumulated through the same fp expression in the same order;
 //! * `nc`, `split` and `unroll` are unrestricted — column tiling, the
 //!   parallel split and the j-loop unroll never change any element's fp
-//!   expression (each output element is produced by exactly one thread).
+//!   expression (each output element is produced by exactly one thread);
+//! * `isa` selects an **order-preserving** SIMD kernel (packed IEEE
+//!   mul/add in the scalar association order — see
+//!   [`kernels::micro`](crate::kernels::micro)); `mr` only regroups which
+//!   rows share B loads and `nr` only regroups the j loop, neither changes
+//!   any element's fp expression;
+//! * `relaxed` stays `false`. `relaxed = true` swaps in fused-FMA kernels
+//!   that skip intermediate roundings — a few ulps from scalar, **outside**
+//!   the bitwise invariant. It is a per-session policy knob
+//!   (`relaxed_simd`), never searched or cached by the tuner;
+//! * `group_order` only applies to the reordered sparse kernel, whose work
+//!   items own disjoint output rows — any iteration order yields the same
+//!   bits. (The pattern kernel's groups accumulate into *shared* rows, so
+//!   its iteration order is pinned and `group_order` is ignored there.)
 //!
 //! [`Schedule::sanitized`] clamps arbitrary (e.g. cache-loaded) values into
-//! this legal space.
+//! this legal space, including clamping `isa` back to `Scalar` when the
+//! running host cannot execute it.
 
+use crate::kernels::micro::Isa;
 use crate::util::json::{Json, JsonObj};
 use anyhow::{bail, Result};
 
@@ -49,11 +67,27 @@ pub enum SplitAxis {
     Cols,
 }
 
-/// One per-step kernel schedule (lowering + blocking + partitioning).
+/// Iteration order over the reordered kernel's per-lane work items.
+///
+/// The LPT lane schedule lists items largest-first; `Reverse` visits them
+/// smallest-first, which can improve cache residency when many small
+/// groups share B panels. Items own disjoint output rows, so the order is
+/// bitwise-free (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupOrder {
+    /// The lane schedule's native (largest-first) order — the default.
+    Forward,
+    /// Visit each lane's items in reverse (smallest-first).
+    Reverse,
+}
+
+/// One per-step kernel schedule (lowering + blocking + partitioning +
+/// microkernel selection).
 ///
 /// Lives on every [`PlanStep`](crate::executor::ExecutionPlan); the
-/// GEMM-backed kernels honor all fields, the sparse kernels honor `unroll`
-/// (their other knobs are fixed by the reorder schedule).
+/// GEMM-backed kernels honor all fields, the sparse kernels honor `isa`,
+/// `nr`, `unroll` and (reordered only) `group_order` — their other knobs
+/// are fixed by the reorder schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Schedule {
     /// Conv lowering strategy.
@@ -66,13 +100,24 @@ pub struct Schedule {
     pub nc: usize,
     /// Parallel split axis of the multi-threaded GEMM.
     pub split: SplitAxis,
-    /// Inner j-loop unroll width of the AXPY passes (1 or 8).
+    /// Inner j-loop unroll width of the scalar AXPY passes (1 or 8).
     pub unroll: usize,
+    /// Microkernel instruction set (clamped to `Scalar` when unavailable).
+    pub isa: Isa,
+    /// Register-tile rows: how many C rows share one B load pass (2 or 4).
+    pub mr: usize,
+    /// Register-tile columns: the SIMD j-loop block width (8 or 16).
+    pub nr: usize,
+    /// Allow fused-FMA (reordering) kernels. Session policy, never tuned;
+    /// forced `false` for `Scalar` (there is no scalar FMA kernel).
+    pub relaxed: bool,
+    /// Reordered-kernel work item iteration order.
+    pub group_order: GroupOrder,
 }
 
 impl Default for Schedule {
     /// The historical fixed kernel parameters — running every step with
-    /// this schedule is bit-for-bit the pre-tuner executor.
+    /// this schedule is bit-for-bit the pre-tuner scalar executor.
     fn default() -> Self {
         Schedule {
             lowering: Lowering::Im2col,
@@ -81,18 +126,33 @@ impl Default for Schedule {
             nc: crate::kernels::gemm::NC,
             split: SplitAxis::Rows,
             unroll: 8,
+            isa: Isa::Scalar,
+            mr: 2,
+            nr: 8,
+            relaxed: false,
+            group_order: GroupOrder::Forward,
         }
     }
 }
 
 impl Schedule {
     /// Clamp into the bitwise-safe legal space (see the module docs):
-    /// `mc` even ≥ 2, `kc` a multiple of 4 ≥ 4, `nc` ≥ 8, `unroll` ∈ {1, 8}.
+    /// `mc` even ≥ 2, `kc` a multiple of 4 ≥ 4, `nc` ≥ 8, `unroll` ∈
+    /// {1, 8}, `mr` ∈ {2, 4}, `nr` ∈ {8, 16}, `isa` available on this
+    /// host, and `relaxed` only for SIMD ISAs.
     pub fn sanitized(mut self) -> Self {
         self.mc = (self.mc.max(2) / 2) * 2;
         self.kc = (self.kc.max(4) / 4) * 4;
         self.nc = self.nc.max(8);
         self.unroll = if self.unroll >= 8 { 8 } else { 1 };
+        self.mr = if self.mr >= 4 { 4 } else { 2 };
+        self.nr = if self.nr >= 16 { 16 } else { 8 };
+        if !self.isa.available() {
+            self.isa = Isa::Scalar;
+        }
+        if self.isa == Isa::Scalar {
+            self.relaxed = false;
+        }
         self
     }
 
@@ -117,11 +177,23 @@ impl Schedule {
             },
         );
         o.insert("unroll", self.unroll);
+        o.insert("isa", self.isa.tag());
+        o.insert("mr", self.mr);
+        o.insert("nr", self.nr);
+        o.insert("relaxed", self.relaxed);
+        o.insert(
+            "group_order",
+            match self.group_order {
+                GroupOrder::Forward => "forward",
+                GroupOrder::Reverse => "reverse",
+            },
+        );
         Json::Obj(o)
     }
 
     /// Parse the JSON form; unknown tags are rejected, numeric fields are
-    /// sanitized into the legal space.
+    /// sanitized into the legal space (including clamping an ISA this host
+    /// cannot run back to `Scalar`).
     pub fn from_json(j: &Json) -> Result<Schedule> {
         let lowering = match j.get("lowering").as_str() {
             Some("im2col") => Lowering::Im2col,
@@ -133,6 +205,19 @@ impl Schedule {
             Some("cols") => SplitAxis::Cols,
             other => bail!("schedule: bad split tag {:?}", other),
         };
+        let isa = match j.get("isa").as_str().and_then(Isa::from_tag) {
+            Some(isa) => isa,
+            None => bail!("schedule: bad isa tag {:?}", j.get("isa").as_str()),
+        };
+        let group_order = match j.get("group_order").as_str() {
+            Some("forward") => GroupOrder::Forward,
+            Some("reverse") => GroupOrder::Reverse,
+            other => bail!("schedule: bad group_order tag {:?}", other),
+        };
+        let relaxed = j
+            .get("relaxed")
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("schedule: missing bool field 'relaxed'"))?;
         let num = |key: &str| -> Result<usize> {
             j.get(key)
                 .as_usize()
@@ -145,6 +230,11 @@ impl Schedule {
             nc: num("nc")?,
             split,
             unroll: num("unroll")?,
+            isa,
+            mr: num("mr")?,
+            nr: num("nr")?,
+            relaxed,
+            group_order,
         }
         .sanitized())
     }
@@ -163,6 +253,11 @@ mod tests {
         assert_eq!(s.lowering, Lowering::Im2col);
         assert_eq!(s.split, SplitAxis::Rows);
         assert_eq!(s.unroll, 8);
+        assert_eq!(s.isa, Isa::Scalar);
+        assert_eq!(s.mr, 2);
+        assert_eq!(s.nr, 8);
+        assert!(!s.relaxed);
+        assert_eq!(s.group_order, GroupOrder::Forward);
         assert_eq!(s, s.sanitized(), "the default must already be legal");
     }
 
@@ -175,12 +270,31 @@ mod tests {
             nc: 3,
             split: SplitAxis::Cols,
             unroll: 5,
+            mr: 3,
+            nr: 12,
+            ..Schedule::default()
         }
         .sanitized();
         assert_eq!(s.mc % 2, 0);
         assert_eq!(s.kc % 4, 0);
         assert!(s.nc >= 8);
         assert_eq!(s.unroll, 1);
+        assert_eq!(s.mr, 2);
+        assert_eq!(s.nr, 8);
+    }
+
+    #[test]
+    fn sanitize_clamps_unavailable_isa_and_scalar_relaxed() {
+        use crate::kernels::micro;
+        // Whichever SIMD ISA this host does NOT have must clamp to Scalar.
+        let foreign = if micro::detect() == Isa::Avx2 { Isa::Neon } else { Isa::Avx2 };
+        let s = Schedule { isa: foreign, relaxed: true, ..Schedule::default() }.sanitized();
+        assert_eq!(s.isa, Isa::Scalar);
+        assert!(!s.relaxed, "relaxed implies a SIMD ISA");
+        // The detected ISA survives sanitize, with relaxed intact if SIMD.
+        let s = Schedule { isa: micro::detect(), relaxed: true, ..Schedule::default() }.sanitized();
+        assert_eq!(s.isa, micro::detect());
+        assert_eq!(s.relaxed, micro::detect() != Isa::Scalar);
     }
 
     #[test]
@@ -192,10 +306,28 @@ mod tests {
             nc: 4096,
             split: SplitAxis::Cols,
             unroll: 1,
+            isa: Isa::Scalar,
+            mr: 4,
+            nr: 16,
+            relaxed: false,
+            group_order: GroupOrder::Reverse,
         };
         let j = s.to_json();
         let back = Schedule::from_json(&j).unwrap();
         assert_eq!(s, back);
         assert!(Schedule::from_json(&Json::parse("{}").unwrap()).is_err());
+        // Old (pre-ISA) schedule JSON lacks the new fields and is rejected
+        // rather than half-parsed — the cache VERSION bump keeps legacy
+        // files from ever reaching this path.
+        let legacy = r#"{"lowering":"im2col","mc":64,"kc":256,"nc":1024,"split":"rows","unroll":8}"#;
+        assert!(Schedule::from_json(&Json::parse(legacy).unwrap()).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_detected_isa() {
+        use crate::kernels::micro;
+        let s = Schedule { isa: micro::detect(), ..Schedule::default() };
+        let back = Schedule::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.isa, micro::detect());
     }
 }

@@ -73,6 +73,8 @@ fn check_app(app: &str, base: Graph) {
             schemes: schemes.clone(),
             tune: prt_dnn::tuner::TuneOpts::off(),
             batch: 1,
+            force_scalar: false,
+            relaxed_simd: false,
         },
     );
     assert_planned_equivalence(

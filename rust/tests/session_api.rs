@@ -69,7 +69,15 @@ fn legacy_engine(
         Variant::Pruned | Variant::PrunedFusedOnly => SparseMode::Csr,
         Variant::PrunedCompiler => SparseMode::Compact,
     };
-    let cfg = ExecConfig { sparse, threads, schemes, tune: TuneOpts::off(), batch };
+    let cfg = ExecConfig {
+        sparse,
+        threads,
+        schemes,
+        tune: TuneOpts::off(),
+        batch,
+        force_scalar: false,
+        relaxed_simd: false,
+    };
     Engine::with_config(&g, &cfg).unwrap()
 }
 

@@ -1,0 +1,205 @@
+//! SIMD microkernel equivalence contract (see `docs/ARCHITECTURE.md`
+//! §Microkernels):
+//!
+//! * **Order-preserving mode (the default)** — a session compiled for the
+//!   host's SIMD tier must be **bitwise identical** to the same session
+//!   pinned to the scalar kernels via `force_scalar`. The SIMD kernels
+//!   keep the scalar accumulation association order, so this is an exact
+//!   `assert_eq!` on output bits, end to end through every app variant.
+//! * **Relaxed mode** — `relaxed_simd(true)` opts into FMA kernels whose
+//!   fused multiply-add skips the intermediate product rounding. Results
+//!   then legitimately differ from scalar by a few ulps; this suite bounds
+//!   that drift with a max-ulp check rather than pretending it is zero.
+//!
+//! Both halves run the full session front door, so they also pin the ISA
+//! introspection surface: `Session::isa`, `ExecutionPlan::isa`, and the
+//! per-step `isa` field in `schedules_json`.
+
+use prt_dnn::apps::builders::{build_coloring, build_style};
+use prt_dnn::apps::{AppSpec, Variant};
+use prt_dnn::kernels::gemm::{gemm_ref, gemm_with};
+use prt_dnn::kernels::micro::{self, Isa};
+use prt_dnn::session::{Model, Session};
+use prt_dnn::tensor::Tensor;
+use prt_dnn::tuner::Schedule;
+use prt_dnn::util::threadpool::ComputePool;
+
+/// Maximum ulp drift tolerated per element in relaxed (FMA) mode. FMA
+/// changes each accumulation step by well under one ulp of the product;
+/// over a whole network the drift stays orders of magnitude below this
+/// deliberately generous bound — the assertion is that relaxed mode is
+/// *close*, while catching any real kernel bug (wrong element, dropped
+/// tail) which lands thousands of times further away.
+const MAX_ULPS: i64 = 1 << 16;
+/// Absolute escape hatch for near-zero outputs, where ulp distance is
+/// meaningless (denormal neighborhoods).
+const ABS_EPS: f32 = 1e-4;
+
+/// Monotonic integer key for ulp distance: adjacent finite f32 values map
+/// to adjacent integers, with -0.0 and +0.0 both at 0.
+fn ulp_key(x: f32) -> i64 {
+    let i = x.to_bits() as i32 as i64;
+    if i < 0 {
+        (i32::MIN as i64) - i
+    } else {
+        i
+    }
+}
+
+fn ulp_dist(a: f32, b: f32) -> i64 {
+    (ulp_key(a) - ulp_key(b)).abs()
+}
+
+fn assert_close_ulps(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{}", tag);
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let d = ulp_dist(*g, *w);
+        assert!(
+            d <= MAX_ULPS || (g - w).abs() <= ABS_EPS,
+            "{}: element {} drifted {} ulps ({} vs {})",
+            tag,
+            i,
+            d,
+            g,
+            w
+        );
+    }
+}
+
+fn model_for(app: &str, variant: Variant) -> Model {
+    let g = match app {
+        "style" => build_style(32, 0.25, 71),
+        "coloring" => build_coloring(32, 0.25, 72),
+        other => panic!("unknown app {}", other),
+    };
+    Model::from_graph(&g, &AppSpec::for_app(app), variant)
+}
+
+fn structured_input(shape: &[usize]) -> Tensor {
+    let mut x = Tensor::zeros(shape);
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        *v = 0.5 + 0.4 * ((i as f32) * 0.23).sin();
+    }
+    x
+}
+
+fn run_once(s: &Session) -> Vec<Tensor> {
+    let x = structured_input(&s.shapes().inputs[0]);
+    s.run(std::slice::from_ref(&x)).unwrap()
+}
+
+/// Order-preserving mode: SIMD sessions are bitwise identical to their
+/// force-scalar twins for every app variant, at batch 1 and batched.
+#[test]
+fn simd_sessions_match_scalar_sessions_bitwise() {
+    for app in ["style", "coloring"] {
+        for variant in [Variant::Unpruned, Variant::Pruned, Variant::PrunedCompiler] {
+            for batch in [1usize, 2] {
+                let model = model_for(app, variant);
+                let simd =
+                    model.session().threads(2).batch(batch).build().unwrap();
+                let scalar = model
+                    .session()
+                    .threads(2)
+                    .batch(batch)
+                    .force_scalar(true)
+                    .build()
+                    .unwrap();
+                assert_eq!(scalar.isa(), Isa::Scalar);
+                assert_eq!(simd.isa(), micro::detect());
+                let got = run_once(&simd);
+                let want = run_once(&scalar);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(want.iter()) {
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{}/{:?}/batch{}: SIMD != scalar bits",
+                        app,
+                        variant,
+                        batch
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Relaxed mode: the FMA flavor stays within the documented ulp bound of
+/// the scalar result across full networks. On a scalar-only host (or
+/// under `PALLAS_FORCE_SCALAR`) relaxed sanitizes away and the comparison
+/// collapses to bitwise — the test still holds.
+#[test]
+fn relaxed_simd_sessions_stay_within_ulp_bound() {
+    for app in ["style", "coloring"] {
+        let model = model_for(app, Variant::PrunedCompiler);
+        let relaxed =
+            model.session().threads(2).relaxed_simd(true).build().unwrap();
+        let scalar = model.session().threads(2).force_scalar(true).build().unwrap();
+        let got = run_once(&relaxed);
+        let want = run_once(&scalar);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_close_ulps(a.data(), b.data(), &format!("{}/relaxed", app));
+        }
+    }
+}
+
+/// Kernel-level relaxed bound: FMA GEMM vs the reference triple loop on
+/// shapes with unaligned tails in every dimension.
+#[test]
+fn relaxed_gemm_is_ulp_bounded_against_reference() {
+    let det = micro::detect();
+    if det == Isa::Scalar {
+        return; // nothing to relax on this host
+    }
+    for &(m, k, n) in &[(7usize, 33usize, 19usize), (16, 64, 24), (5, 128, 9)] {
+        let a: Vec<f32> =
+            (0..m * k).map(|i| ((i as f32) * 0.37).sin() * 0.5).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|i| ((i as f32) * 0.21).cos() * 0.5).collect();
+        let mut want = vec![0.0f32; m * n];
+        gemm_ref(m, k, n, &a, &b, &mut want);
+        let sched =
+            Schedule { isa: det, relaxed: true, mr: 4, nr: 16, ..Schedule::default() };
+        for threads in [1usize, 4] {
+            let pool = ComputePool::new(threads);
+            let mut got = vec![0.0f32; m * n];
+            gemm_with(m, k, n, &a, &b, &mut got, &pool, &sched);
+            assert_close_ulps(
+                &got,
+                &want,
+                &format!("gemm {}x{}x{} t{}", m, k, n, threads),
+            );
+        }
+    }
+}
+
+/// The introspection surface reports the plan's ISA: every tuner-visible
+/// step schedule carries the plan tag, and forcing scalar flips all of it.
+#[test]
+fn schedules_json_reports_the_plan_isa() {
+    let model = model_for("style", Variant::PrunedCompiler);
+    let simd = model.session().threads(1).build().unwrap();
+    let forced = model.session().threads(1).force_scalar(true).build().unwrap();
+    for (s, isa) in [(&simd, micro::detect()), (&forced, Isa::Scalar)] {
+        assert_eq!(s.isa(), isa);
+        assert_eq!(s.plan().isa(), isa);
+        let j = s.schedules_json();
+        let obj = j.as_obj().expect("schedules_json is an object");
+        assert!(!obj.is_empty());
+        for (name, sched) in obj.iter() {
+            assert_eq!(
+                sched.get("isa").as_str(),
+                Some(isa.tag()),
+                "step '{}' must carry the plan ISA",
+                name
+            );
+            assert_eq!(
+                sched.get("relaxed").as_bool(),
+                Some(false),
+                "step '{}': relaxed is never on by default",
+                name
+            );
+        }
+    }
+}

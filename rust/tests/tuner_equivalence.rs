@@ -233,6 +233,81 @@ fn depthwise_steps_are_tuned_and_match_default_bitwise() {
     }
 }
 
+/// The reordered kernel's work-item iteration order is part of the tuner's
+/// candidate space (`Schedule::group_order`): tuning a filter-pruned graph
+/// — whose compact execution compiles to `ConvExec::Reordered` — probes
+/// both orders and stays bitwise identical to the default plan, because
+/// reordered work items write disjoint output rows (order changes locality
+/// only, never accumulation order).
+#[test]
+fn reordered_group_order_is_tuned_and_matches_default_bitwise() {
+    use prt_dnn::dsl::op::{Activation, Op, PadMode};
+    use prt_dnn::pruning::scheme::project_scheme;
+    use prt_dnn::pruning::verify::apply_mask;
+    use prt_dnn::util::rng::Rng;
+
+    let mut rng = Rng::new(90);
+    let mut g = Graph::new("reord-net");
+    let x = g.add("x", Op::Input { shape: vec![1, 6, 12, 12] }, &[]);
+    let c1 = g.add(
+        "c1",
+        Op::Conv2d {
+            out_c: 16,
+            in_c: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            pad_mode: PadMode::Zeros,
+            fused_act: Activation::Relu,
+        },
+        &[x],
+    );
+    g.add("out", Op::Output, &[c1]);
+    // Filter-prune c1 by hand: filter/channel schemes are what compile to
+    // the reordered kernel (the stock apps use column/pattern).
+    let w = Tensor::randn(&[16, 6, 3, 3], &mut rng);
+    let scheme = project_scheme(&w, "filter", 0.5, None);
+    g.set_param("c1.weight", apply_mask(&w, &scheme));
+    let schemes = vec![("c1".to_string(), scheme)];
+
+    for &threads in &[1usize, 4] {
+        let base_cfg = ExecConfig::compact(threads, schemes.clone());
+        let cache = tmp(&format!("reord-t{}", threads));
+        let _ = std::fs::remove_file(&cache);
+        let tuned_cfg = ExecConfig::compact(threads, schemes.clone())
+            .with_tuning(TuneOpts::quick(&cache));
+
+        let p0 = Planner::plan(&g, &base_cfg).unwrap();
+        let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+        assert!(p1.tuned());
+        let sched = p1.schedules_json();
+        assert!(
+            sched.get("c1").as_obj().is_some(),
+            "t={}: no schedule recorded for the reordered step: {}",
+            threads,
+            sched
+        );
+        assert!(
+            sched.get("c1").get("group_order").as_str().is_some(),
+            "t={}: schedule must serialize the group order: {}",
+            threads,
+            sched
+        );
+
+        let x = structured_input(&p0.input_shapes()[0]);
+        let o0 = ExecContext::for_plan(&p0).run(&p0, std::slice::from_ref(&x)).unwrap();
+        let o1 = ExecContext::for_plan(&p1).run(&p1, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(
+            o0[0].data(),
+            o1[0].data(),
+            "t={}: tuned reordered schedule moved bits",
+            threads
+        );
+        let _ = std::fs::remove_file(&cache);
+    }
+}
+
 /// The cache's JSON form is deterministic: parse(serialize(c)) == c and a
 /// second serialization is byte-identical (sorted keys, stable number
 /// formatting) — warm caches diff cleanly across runs.
@@ -249,6 +324,7 @@ fn tune_cache_roundtrips_through_json_deterministically() {
             nc: 4096,
             split: prt_dnn::tuner::SplitAxis::Cols,
             unroll: 1,
+            ..Schedule::default()
         },
     );
     let s1 = c.to_json().to_string_pretty();
