@@ -120,7 +120,7 @@ fn main() {
     let dense_s = bench_ms(2, 8, || {
         conv2d_dense(
             x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity, &pool,
-            &mut scratch, &sched, &mut out,
+            &mut scratch, &sched, None, &mut out,
         );
     });
     t.row(&["dense".into(), "0%".into(), ms(dense_s.mean), "1.00x".into()]);
@@ -135,7 +135,7 @@ fn main() {
         let csr_s = bench_ms(2, 8, || {
             conv2d_csr(
                 x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity,
-                &pool, &mut scratch, &sched, &mut out,
+                &pool, &mut scratch, &sched, None, &mut out,
             );
         });
         t.row(&[
@@ -150,7 +150,7 @@ fn main() {
             bench_ms(2, 8, || {
                 conv2d_column_compact(
                     x.data(), 1, &cc, &geom, PadMode::Zeros, None, Activation::Identity,
-                    &pool, &mut scratch, &sched, &mut out,
+                    &pool, &mut scratch, &sched, None, &mut out,
                 );
             })
         } else {
@@ -159,7 +159,7 @@ fn main() {
             bench_ms(2, 8, || {
                 conv2d_reordered(
                     x.data(), 1, &plan, &lanes, &geom, PadMode::Zeros, None,
-                    Activation::Identity, &pool, &mut scratch, &sched, &mut out,
+                    Activation::Identity, &pool, &mut scratch, &sched, None, &mut out,
                 );
             })
         };

@@ -20,7 +20,12 @@
 //! to the **scalar microkernels** (`force_scalar`): the `isa` T1-JSON
 //! field records each session's kernel tier and the `simd_speedup`
 //! field/column reports scalar-ms / simd-ms, isolating the SIMD
-//! contribution on this host. A **T1c** table measures batched
+//! contribution on this host — and once more with plan-time operator
+//! fusion disabled (`--no-fuse`-equivalent): the `fused_steps` field
+//! counts compound conv+bias+act(+add) steps in each session's plan, and
+//! the `fusion_speedup` field/column reports unfused-ms / fused-ms; the
+//! unfused line's `memory` block also exposes the arena growth from
+//! materializing fused intermediates. A **T1c** table measures batched
 //! steady-state throughput (`--batch N`, default 4) under auto-tuned
 //! schedules (batched plans tune their real batch-N dispatch geometry):
 //! the pruning+compiler engine compiled at batch N runs N frames per
@@ -51,6 +56,7 @@ fn session_for(
     batch: usize,
     tune: TuneOpts,
     force_scalar: bool,
+    fuse: bool,
 ) -> anyhow::Result<Session> {
     Model::for_app_scaled(app, variant, width, 42)?
         .session()
@@ -58,6 +64,7 @@ fn session_for(
         .batch(batch)
         .tune(tune)
         .force_scalar(force_scalar)
+        .fuse(fuse)
         .build()
 }
 
@@ -149,6 +156,9 @@ fn main() -> anyhow::Result<()> {
             "isa",
             "scalar ms",
             "simd_speedup",
+            "fused steps",
+            "no-fuse ms",
+            "fusion_speedup",
         ],
     );
     let mut json_lines: Vec<Json> = Vec::new();
@@ -160,9 +170,10 @@ fn main() -> anyhow::Result<()> {
         let mut apf = 0.0f64;
         let mut warm = 0.0f64;
         let mut isa_tag = "scalar";
+        let mut fused_steps = 0usize;
         for variant in Variant::table1() {
             let session =
-                session_for(app, variant, width, threads, 1, TuneOpts::off(), false)?;
+                session_for(app, variant, width, threads, 1, TuneOpts::off(), false, true)?;
             let shape = session.shapes().inputs[0].clone();
             let x = Tensor::full(&shape, 0.5);
             // Cold start first: fresh context = pool spawn + first frame.
@@ -184,6 +195,7 @@ fn main() -> anyhow::Result<()> {
                 apf = variant_apf;
                 warm = warm_ms;
                 isa_tag = session.isa().tag();
+                fused_steps = session.fused_steps();
             }
             let mut j = JsonObj::new();
             j.insert("app", app.to_string());
@@ -196,6 +208,7 @@ fn main() -> anyhow::Result<()> {
             j.insert("allocs_per_frame", variant_apf);
             j.insert("tuned", false);
             j.insert("isa", session.isa().tag());
+            j.insert("fused_steps", session.fused_steps());
             json_lines.push(Json::Obj(j));
         }
         // Pruning+compiler once more under auto-tuned schedules. The
@@ -210,6 +223,7 @@ fn main() -> anyhow::Result<()> {
             1,
             TuneOpts::on(&tune_path),
             false,
+            true,
         )?;
         let tx = Tensor::full(&tuned.shapes().inputs[0], 0.5);
         let ts = bench_auto_ms(budget, || {
@@ -228,6 +242,7 @@ fn main() -> anyhow::Result<()> {
         j.insert("tuned_speedup", tuned_speedup);
         j.insert("tune_bench_runs", tstats.bench_runs);
         j.insert("isa", tuned.isa().tag());
+        j.insert("fused_steps", tuned.fused_steps());
         json_lines.push(Json::Obj(j));
 
         // Pruning+compiler once more pinned to the scalar microkernels:
@@ -240,6 +255,7 @@ fn main() -> anyhow::Result<()> {
             threads,
             1,
             TuneOpts::off(),
+            true,
             true,
         )?;
         let sx = Tensor::full(&scalar.shapes().inputs[0], 0.5);
@@ -258,6 +274,40 @@ fn main() -> anyhow::Result<()> {
         j.insert("isa", scalar.isa().tag());
         j.insert("force_scalar", true);
         j.insert("simd_speedup", simd_speedup);
+        j.insert("fused_steps", scalar.fused_steps());
+        json_lines.push(Json::Obj(j));
+
+        // Pruning+compiler once more with plan-time fusion disabled:
+        // unfused-ms / fused-ms isolates the fusion pass's contribution,
+        // and the unfused memory block shows the arena paid for
+        // materializing the absorbed intermediates.
+        let nofuse = session_for(
+            app,
+            Variant::PrunedCompiler,
+            width,
+            threads,
+            1,
+            TuneOpts::off(),
+            false,
+            false,
+        )?;
+        let fx = Tensor::full(&nofuse.shapes().inputs[0], 0.5);
+        let fs = bench_auto_ms(budget, || {
+            let _ = nofuse.run(std::slice::from_ref(&fx)).unwrap();
+        });
+        let fusion_speedup = fs.mean / last.max(1e-9);
+        let mut j = JsonObj::new();
+        j.insert("app", app.to_string());
+        j.insert("variant", Variant::PrunedCompiler.name());
+        j.insert("threads", threads);
+        j.insert("batch", 1usize);
+        j.insert("latency", summary_json(&fs));
+        j.insert("memory", mem_json(&nofuse.memory()));
+        j.insert("tuned", false);
+        j.insert("isa", nofuse.isa().tag());
+        j.insert("no_fuse", true);
+        j.insert("fused_steps", nofuse.fused_steps());
+        j.insert("fusion_speedup", fusion_speedup);
         json_lines.push(Json::Obj(j));
 
         row.insert(0, app.to_string());
@@ -270,6 +320,9 @@ fn main() -> anyhow::Result<()> {
         row.push(isa_tag.to_string());
         row.push(ms(ss.mean));
         row.push(format!("{:.2}x", simd_speedup));
+        row.push(format!("{}", fused_steps));
+        row.push(ms(fs.mean));
+        row.push(format!("{:.2}x", fusion_speedup));
         measured.row(&row);
     }
     measured.print();
@@ -301,6 +354,7 @@ fn main() -> anyhow::Result<()> {
                 b,
                 TuneOpts::on(&tune_path),
                 false,
+                true,
             )?;
             let x = Tensor::full(&session.shapes().inputs[0], 0.5);
             let s = bench_auto_ms(budget, || {
@@ -326,6 +380,7 @@ fn main() -> anyhow::Result<()> {
             j.insert("tuned", true);
             j.insert("tune_bench_runs", session.plan().tune_stats().bench_runs);
             j.insert("isa", session.isa().tag());
+            j.insert("fused_steps", session.fused_steps());
             json_lines.push(Json::Obj(j));
         }
         batched.row(&[

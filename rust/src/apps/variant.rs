@@ -206,6 +206,7 @@ pub fn prepare_variant_batched(
         batch,
         force_scalar: false,
         relaxed_simd: false,
+        fuse: true,
     };
     let eng = Engine::with_config(model.graph(), &cfg)?;
     Ok((eng, model.schemes().to_vec()))

@@ -23,7 +23,7 @@ use crate::kernels::conv::{
 };
 use crate::kernels::elementwise::{
     act_inplace, add_assign, add_into, batchnorm_inplace, broadcast_spatial_into,
-    concat_channels_into, instancenorm_inplace,
+    concat_channels_into, instancenorm_inplace, FusedTail,
 };
 use crate::kernels::gemm::dense_forward;
 use crate::kernels::resize::{
@@ -241,32 +241,56 @@ impl ExecContext {
                     let out = val_mut!(out_slot);
                     let scratch = &mut self.scratch;
                     let sched = &st.sched;
+                    // Compound steps run their absorbed elementwise chain
+                    // as a kernel epilogue; the residual (when absorbed)
+                    // is the step's last input.
+                    let ft = st.tail.as_ref().map(|t| FusedTail {
+                        pre_act: t.pre_act,
+                        residual: if t.residual {
+                            Some(val!(in_slot(st.inputs.len() - 1)))
+                        } else {
+                            None
+                        },
+                        res_first: t.res_first,
+                        post_act: t.post_act,
+                    });
+                    let ft = ft.as_ref();
                     match exec {
                         ConvExec::Dense { w } => conv2d_dense(
                             x, n, w, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            sched, out,
+                            sched, ft, out,
                         ),
                         ConvExec::Csr { csr } => conv2d_csr(
                             x, n, csr, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            sched, out,
+                            sched, ft, out,
                         ),
                         ConvExec::Column { cc } => conv2d_column_compact(
                             x, n, cc, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            sched, out,
+                            sched, ft, out,
                         ),
                         ConvExec::Pattern { plan: pp } => conv2d_pattern(
                             x, n, pp, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
-                            sched, out,
+                            sched, ft, out,
                         ),
                         ConvExec::Reordered { plan: rp, lanes } => conv2d_reordered(
                             x, n, rp, lanes, geom, *pad_mode, bias.as_deref(), *act, pool,
-                            scratch, sched, out,
+                            scratch, sched, ft, out,
                         ),
                     }
                 }
                 Step::DwConv { w, bias, stride, pad, act } => {
                     let s = in_shape(0);
                     let (n, c, h, win) = (s[0], s[1], s[2], s[3]);
+                    let ft = st.tail.as_ref().map(|t| FusedTail {
+                        pre_act: t.pre_act,
+                        residual: if t.residual {
+                            Some(val!(in_slot(st.inputs.len() - 1)))
+                        } else {
+                            None
+                        },
+                        res_first: t.res_first,
+                        post_act: t.post_act,
+                    });
                     dwconv2d(
                         val!(in_slot(0)),
                         n,
@@ -280,11 +304,22 @@ impl ExecContext {
                         *act,
                         pool,
                         &st.sched,
+                        ft.as_ref(),
                         val_mut!(out_slot),
                     );
                 }
                 Step::Dense { w, bias, out_f, in_f, act } => {
                     let batch = in_shape(0)[0];
+                    let ft = st.tail.as_ref().map(|t| FusedTail {
+                        pre_act: t.pre_act,
+                        residual: if t.residual {
+                            Some(val!(in_slot(st.inputs.len() - 1)))
+                        } else {
+                            None
+                        },
+                        res_first: t.res_first,
+                        post_act: t.post_act,
+                    });
                     dense_forward(
                         w.data(),
                         bias.as_deref(),
@@ -295,6 +330,7 @@ impl ExecContext {
                         *out_f,
                         pool,
                         &st.sched,
+                        ft.as_ref(),
                         val_mut!(out_slot),
                     );
                 }
@@ -429,6 +465,12 @@ impl ExecContext {
                         val_mut!(out_slot).copy_from_slice(val!(in_slot(0)));
                     }
                 }
+                // Placeholder for a node absorbed into a downstream
+                // compound step: its value is computed by the chain
+                // terminal's kernel epilogue. Nothing to run (it owns no
+                // arena range), but it still gets a profile entry so
+                // per-op reports cover every graph node.
+                Step::Fused => {}
             }
             if let Some(p) = prof.as_deref_mut() {
                 p.push((st.name.clone(), started.elapsed()));

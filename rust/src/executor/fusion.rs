@@ -1,0 +1,329 @@
+//! Plan-time operator fusion: collapse `conv/dwconv/dense → act → add →
+//! act` chains into one compound plan step whose epilogue (the
+//! [`FusedTail`](crate::kernels::elementwise::FusedTail)) runs on the
+//! producer's output while it is still hot, instead of round-tripping
+//! every intermediate through the arena.
+//!
+//! The candidate analysis is the classic "values used exactly once" walk
+//! (cf. the AlphaZero planner's `find_hidden_values_used_once`): starting
+//! from each GEMM/SpMM-backed producer, follow the value while its fanout
+//! is exactly 1 and the sole consumer is an absorbable elementwise op.
+//! A chain ends at the first value that is consumed more than once, feeds
+//! a non-absorbable op (including `Output` — outputs must stay
+//! addressable), or feeds a node already claimed by an earlier chain.
+//!
+//! The planner ([`plan_with`](crate::executor::plan)) decides per chain —
+//! via the tuner's `fuse` schedule axis — whether to emit the compound
+//! step; this module only reports what is legal. Legality is purely
+//! structural, so fused plans stay bitwise-identical to unfused ones: the
+//! compound epilogue replays the exact per-element expressions of the
+//! absorbed steps (see `fused_epilogue`).
+
+use crate::dsl::graph::{Graph, NodeId};
+use crate::dsl::op::{Activation, Op};
+use std::collections::HashSet;
+
+/// One fusable chain: a producer plus the elementwise tail it absorbs.
+#[derive(Debug, Clone)]
+pub struct FuseChain {
+    /// The conv / dwconv / dense node whose kernel hosts the epilogue.
+    pub producer: NodeId,
+    /// Absorbed tail nodes in chain order (each consumed exactly once);
+    /// the last entry is the value the compound step produces.
+    pub absorbed: Vec<NodeId>,
+    /// Standalone activation absorbed before the residual add.
+    pub pre_act: Activation,
+    /// Residual operand of an absorbed `Add` (a node *outside* the chain
+    /// whose value the compound step reads).
+    pub residual: Option<NodeId>,
+    /// True when the residual was the Add's first argument (operand
+    /// order is preserved bit-for-bit; see `FusedTail::res_first`).
+    pub res_first: bool,
+    /// Activation absorbed after the residual add.
+    pub post_act: Activation,
+}
+
+impl FuseChain {
+    /// The terminal node — the value id the compound step produces.
+    pub fn last(&self) -> NodeId {
+        *self.absorbed.last().expect("chain has at least one absorbed node")
+    }
+}
+
+/// True for ops whose kernels host a fused epilogue.
+fn is_producer(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Dense { .. }
+    )
+}
+
+/// Find every legal fuse chain in `g`, greedily and deterministically
+/// (producers scanned in node order; first chain to reach a node claims
+/// it). Rejected as candidates: values consumed more than once (their
+/// buffer must exist for the other consumers), values feeding `Output`
+/// or any non-absorbable op, and values feeding a node another chain
+/// already claimed.
+pub fn find_fuse_chains(g: &Graph) -> Vec<FuseChain> {
+    let fanout = g.fanout();
+    // Sole consumer of each value, valid only where fanout == 1.
+    let mut consumer: Vec<Option<NodeId>> = vec![None; g.len()];
+    for (id, node) in g.nodes().iter().enumerate() {
+        for &inp in &node.inputs {
+            consumer[inp] = Some(id);
+        }
+    }
+    let mut claimed: HashSet<NodeId> = HashSet::new();
+    let mut chains = Vec::new();
+    for p in 0..g.len() {
+        if !is_producer(&g.node(p).op) {
+            continue;
+        }
+        let mut chain = FuseChain {
+            producer: p,
+            absorbed: Vec::new(),
+            pre_act: Activation::Identity,
+            residual: None,
+            res_first: false,
+            post_act: Activation::Identity,
+        };
+        let mut cur = p;
+        loop {
+            // Used-once check: the producer's (or intermediate's) value
+            // may only disappear if exactly one edge reads it.
+            if fanout[cur] != 1 {
+                break;
+            }
+            let c = match consumer[cur] {
+                Some(c) => c,
+                None => break,
+            };
+            if claimed.contains(&c) {
+                break;
+            }
+            match g.node(c).op {
+                Op::Act(a) => {
+                    let slot = if chain.residual.is_none() {
+                        &mut chain.pre_act
+                    } else {
+                        &mut chain.post_act
+                    };
+                    if *slot == Activation::Identity {
+                        *slot = a;
+                    } else if a != Activation::Identity {
+                        break; // both act slots taken
+                    }
+                }
+                Op::Add => {
+                    if chain.residual.is_some() || chain.post_act != Activation::Identity {
+                        break; // one residual per chain, before any post-act
+                    }
+                    let ins = &g.node(c).inputs;
+                    // fanout[cur] == 1 rules out Add(cur, cur).
+                    let other = if ins[0] == cur { ins[1] } else { ins[0] };
+                    chain.residual = Some(other);
+                    chain.res_first = ins[0] == other;
+                }
+                // Everything else — including Output, whose value must
+                // stay addressable — ends the chain.
+                _ => break,
+            }
+            chain.absorbed.push(c);
+            cur = c;
+        }
+        if chain.absorbed.is_empty() {
+            continue;
+        }
+        claimed.extend(chain.absorbed.iter().copied());
+        chains.push(chain);
+    }
+    chains
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(g: &mut Graph, name: &str, from: NodeId, c: usize) -> NodeId {
+        g.add(
+            name,
+            Op::Conv2d {
+                out_c: c,
+                in_c: c,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: crate::dsl::op::PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[from],
+        )
+    }
+
+    fn base(name: &str) -> (Graph, NodeId) {
+        let mut g = Graph::new(name);
+        let x = g.add("x", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        (g, x)
+    }
+
+    #[test]
+    fn fuse_candidate_rules_table() {
+        // (builder, expected chains as (producer-name, absorbed-names))
+        type Case = (
+            &'static str,
+            fn() -> Graph,
+            Vec<(&'static str, Vec<&'static str>)>,
+        );
+        let cases: Vec<Case> = vec![
+            (
+                "simple conv→act chain fuses",
+                || {
+                    let (mut g, x) = base("t");
+                    let c = conv(&mut g, "c", x, 4);
+                    let a = g.add("a", Op::Act(Activation::Relu), &[c]);
+                    g.add("out", Op::Output, &[a]);
+                    g
+                },
+                vec![("c", vec!["a"])],
+            ),
+            (
+                "value consumed more than once is rejected",
+                || {
+                    let (mut g, x) = base("t");
+                    let c = conv(&mut g, "c", x, 4);
+                    let a = g.add("a", Op::Act(Activation::Relu), &[c]);
+                    // Second consumer of `c`: its value must materialise.
+                    let s = g.add("s", Op::Add, &[a, c]);
+                    g.add("out", Op::Output, &[s]);
+                    g
+                },
+                vec![],
+            ),
+            (
+                "cross-output value is rejected (Output is not absorbable)",
+                || {
+                    let (mut g, x) = base("t");
+                    let c = conv(&mut g, "c", x, 4);
+                    g.add("out", Op::Output, &[c]);
+                    g
+                },
+                vec![],
+            ),
+            (
+                "chain stops before a fanout-2 intermediate but keeps the prefix",
+                || {
+                    let (mut g, x) = base("t");
+                    let c = conv(&mut g, "c", x, 4);
+                    let a = g.add("a", Op::Act(Activation::Relu), &[c]);
+                    // `a` feeds two consumers: absorb `a`, then stop —
+                    // `a`'s value materialises as the compound output.
+                    let b = g.add("b", Op::Act(Activation::Tanh), &[a]);
+                    let s = g.add("s", Op::Add, &[a, b]);
+                    g.add("out", Op::Output, &[s]);
+                    g
+                },
+                vec![("c", vec!["a"])],
+            ),
+            (
+                "claimed node is rejected for the second producer (diamond)",
+                || {
+                    let (mut g, x) = base("t");
+                    let c1 = conv(&mut g, "c1", x, 4);
+                    let c2 = conv(&mut g, "c2", x, 4);
+                    // Both convs feed one Add; the first chain (c1, in
+                    // node order) claims it, c2 must materialise.
+                    let s = g.add("s", Op::Add, &[c1, c2]);
+                    g.add("out", Op::Output, &[s]);
+                    g
+                },
+                vec![("c1", vec!["s"])],
+            ),
+            (
+                "full act+add+act chain fuses with residual second",
+                || {
+                    let (mut g, x) = base("t");
+                    let c = conv(&mut g, "c", x, 4);
+                    let a = g.add("a", Op::Act(Activation::Relu), &[c]);
+                    let s = g.add("s", Op::Add, &[a, x]);
+                    let p = g.add("p", Op::Act(Activation::Tanh), &[s]);
+                    g.add("out", Op::Output, &[p]);
+                    g
+                },
+                vec![("c", vec!["a", "s", "p"])],
+            ),
+            (
+                "second add in one chain is rejected",
+                || {
+                    let (mut g, x) = base("t");
+                    let c = conv(&mut g, "c", x, 4);
+                    let s1 = g.add("s1", Op::Add, &[c, x]);
+                    let s2 = g.add("s2", Op::Add, &[s1, x]);
+                    g.add("out", Op::Output, &[s2]);
+                    g
+                },
+                vec![("c", vec!["s1"])],
+            ),
+            (
+                "dense producer fuses too",
+                || {
+                    let mut g = Graph::new("t");
+                    let x = g.add("x", Op::Input { shape: vec![1, 8] }, &[]);
+                    let d = g.add(
+                        "d",
+                        Op::Dense { out_f: 8, in_f: 8, fused_act: Activation::Identity },
+                        &[x],
+                    );
+                    let a = g.add("a", Op::Act(Activation::Sigmoid), &[d]);
+                    g.add("out", Op::Output, &[a]);
+                    g
+                },
+                vec![("d", vec!["a"])],
+            ),
+        ];
+        for (what, build, want) in cases {
+            let g = build();
+            g.validate().unwrap();
+            let chains = find_fuse_chains(&g);
+            let got: Vec<(String, Vec<String>)> = chains
+                .iter()
+                .map(|ch| {
+                    (
+                        g.node(ch.producer).name.clone(),
+                        ch.absorbed.iter().map(|&n| g.node(n).name.clone()).collect(),
+                    )
+                })
+                .collect();
+            let want: Vec<(String, Vec<String>)> = want
+                .into_iter()
+                .map(|(p, a)| (p.into(), a.into_iter().map(String::from).collect()))
+                .collect();
+            assert_eq!(got, want, "case: {what}");
+        }
+    }
+
+    #[test]
+    fn residual_operand_order_is_recorded() {
+        // res_first distinguishes Add(res, v) from Add(v, res).
+        let (mut g, x) = base("t");
+        let c1 = conv(&mut g, "c1", x, 4);
+        let s1 = g.add("s1", Op::Add, &[x, c1]); // residual first
+        g.add("o1", Op::Output, &[s1]);
+        let chains = find_fuse_chains(&g);
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].residual, Some(x));
+        assert!(chains[0].res_first);
+
+        let (mut g2, x2) = base("t2");
+        let c2 = conv(&mut g2, "c2", x2, 4);
+        let s2 = g2.add("s2", Op::Add, &[c2, x2]); // residual second
+        g2.add("o2", Op::Output, &[s2]);
+        let chains2 = find_fuse_chains(&g2);
+        assert_eq!(chains2.len(), 1);
+        assert_eq!(chains2[0].residual, Some(x2));
+        assert!(!chains2[0].res_first);
+        assert_eq!(chains2[0].last(), s2);
+        assert_eq!(chains2[0].pre_act, Activation::Identity);
+        assert_eq!(chains2[0].post_act, Activation::Identity);
+    }
+}

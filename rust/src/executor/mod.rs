@@ -20,12 +20,14 @@
 
 pub mod context;
 pub mod engine;
+pub mod fusion;
 pub mod memory;
 pub mod plan;
 pub mod profile;
 
 pub use context::ExecContext;
 pub use engine::Engine;
+pub use fusion::{find_fuse_chains, FuseChain};
 pub use memory::{MemoryUsage, PlanOptions};
 pub use plan::{ExecConfig, ExecutionPlan, PlanError, Planner, SparseMode};
 pub use profile::{OpProfile, RunProfile};

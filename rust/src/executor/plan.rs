@@ -11,7 +11,9 @@
 
 use crate::dsl::op::{Activation, Op, PadMode};
 use crate::dsl::{Graph, NodeId};
+use crate::executor::fusion::{find_fuse_chains, FuseChain};
 use crate::executor::memory::{ArenaPlanner, MemoryUsage, PlanOptions};
+use crate::kernels::elementwise::{act_inplace, add_assign, FusedTail};
 use crate::kernels::im2col::ConvGeom;
 use crate::kernels::micro::{self, Isa};
 use crate::pruning::scheme::Scheme;
@@ -115,6 +117,13 @@ pub struct ExecConfig {
     /// Applied *after* tuning — the flavor is session policy, never part
     /// of the searched/cached schedule space.
     pub relaxed_simd: bool,
+    /// Fuse `conv/dwconv/dense → act → add → act` chains into compound
+    /// steps whose epilogue runs on the kernel's output while it is hot
+    /// (see [`super::fusion`]). On by default; fused plans stay
+    /// bitwise-identical to unfused ones (the epilogue replays the exact
+    /// per-element expressions of the absorbed steps). Disable (the CLI's
+    /// `--no-fuse`) to emit every graph node as its own step.
+    pub fuse: bool,
 }
 
 impl ExecConfig {
@@ -128,6 +137,7 @@ impl ExecConfig {
             batch: 1,
             force_scalar: false,
             relaxed_simd: false,
+            fuse: true,
         }
     }
 
@@ -141,6 +151,7 @@ impl ExecConfig {
             batch: 1,
             force_scalar: false,
             relaxed_simd: false,
+            fuse: true,
         }
     }
 
@@ -154,6 +165,7 @@ impl ExecConfig {
             batch: 1,
             force_scalar: false,
             relaxed_simd: false,
+            fuse: true,
         }
     }
 
@@ -178,6 +190,12 @@ impl ExecConfig {
     /// Allow the relaxed (FMA) SIMD flavor on this plan (builder form).
     pub fn with_relaxed_simd(mut self, relaxed: bool) -> Self {
         self.relaxed_simd = relaxed;
+        self
+    }
+
+    /// Enable/disable plan-time operator fusion (builder form).
+    pub fn with_fuse(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
         self
     }
 }
@@ -216,17 +234,36 @@ pub(crate) enum Step {
     GlobalAvgPool,
     BroadcastSpatial,
     Output,
+    /// Zero-sized placeholder for a node absorbed into a downstream
+    /// compound step (the chain's *terminal* node carries the real
+    /// kernel + [`StepTail`]); keeps step/value ids aligned with graph
+    /// node ids. Executes as a no-op and owns no arena range.
+    Fused,
+}
+
+/// The absorbed elementwise tail of a compound (fused) step — the
+/// plan-side form of a [`FuseChain`](super::fusion::FuseChain). When
+/// `residual` is set, the residual operand is the step's **last** input.
+pub(crate) struct StepTail {
+    pub pre_act: Activation,
+    pub residual: bool,
+    pub res_first: bool,
+    pub post_act: Activation,
+    /// Number of graph nodes the compound step absorbs (introspection).
+    pub absorbed: usize,
 }
 
 /// One compiled step: kernel dispatch info + dataflow edges + whether its
 /// output slot aliases its first input (in-place execution) + the tuned
-/// kernel schedule (the default for non-conv steps and untuned plans).
+/// kernel schedule (the default for non-conv steps and untuned plans) +
+/// the fused epilogue for compound steps.
 pub(crate) struct PlanStep {
     pub name: String,
     pub step: Step,
     pub inputs: Vec<NodeId>,
     pub inplace: bool,
     pub sched: Schedule,
+    pub tail: Option<StepTail>,
 }
 
 /// Arena range of one value, in f32 elements.
@@ -434,10 +471,25 @@ impl ExecutionPlan {
                 st.step,
                 Step::Conv { .. } | Step::DwConv { .. } | Step::Dense { .. }
             ) {
-                o.insert(st.name.clone(), st.sched.to_json());
+                let mut sj = st.sched.to_json();
+                // Compound steps additionally report their epilogue: the
+                // schedule's `fuse` knob says what the tuner decided,
+                // `fused`/`fused_ops` say what the plan actually emitted.
+                if let (Json::Obj(obj), Some(t)) = (&mut sj, &st.tail) {
+                    obj.insert("fused", true);
+                    obj.insert("fused_ops", t.absorbed);
+                }
+                o.insert(st.name.clone(), sj);
             }
         }
         Json::Obj(o)
+    }
+
+    /// Number of compound (fused) steps: `conv/dwconv/dense → act → add →
+    /// act` chains collapsed into one kernel dispatch with an epilogue
+    /// (see [`super::fusion`]). 0 for `--no-fuse` plans.
+    pub fn fused_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.tail.is_some()).count()
     }
 
     /// Static memory accounting for this plan.
@@ -528,7 +580,71 @@ impl Planner {
         // tuning is off.
         let mut tuner = Tuner::new(cfg.tune.clone(), cfg.threads.max(1), isa)?;
 
-        for node in g.nodes().iter() {
+        // ---- plan-time operator fusion (see super::fusion) -------------
+        // Legal chains are found structurally; whether each one is
+        // *emitted* fused is the tuner's `fuse` schedule axis (on by
+        // default). A fused chain's members emit as zero-sized
+        // `Step::Fused` placeholders and the compound step lands at the
+        // chain's terminal node, so step/value ids stay aligned with
+        // graph node ids and the terminal's slot is the one materialized
+        // buffer — the intermediates never touch the arena.
+        let chains = if cfg.fuse { find_fuse_chains(g) } else { Vec::new() };
+        let by_producer: std::collections::HashMap<NodeId, FuseChain> =
+            chains.into_iter().map(|c| (c.producer, c)).collect();
+        let mut placeholder: std::collections::HashSet<NodeId> =
+            std::collections::HashSet::new();
+        struct PendingFused {
+            name: String,
+            step: Step,
+            inputs: Vec<NodeId>,
+            sched: Schedule,
+            tail: StepTail,
+        }
+        let mut pending: std::collections::HashMap<NodeId, PendingFused> =
+            std::collections::HashMap::new();
+
+        for (id, node) in g.nodes().iter().enumerate() {
+            // Chain members claimed by an upstream producer: the compound
+            // step stashed in `pending` computes their values.
+            if placeholder.contains(&id) {
+                steps.push(PlanStep {
+                    name: node.name.clone(),
+                    step: Step::Fused,
+                    inputs: Vec::new(),
+                    inplace: false,
+                    sched: Schedule { isa, ..Schedule::default() }.sanitized(),
+                    tail: None,
+                });
+                continue;
+            }
+            if let Some(pf) = pending.remove(&id) {
+                steps.push(PlanStep {
+                    name: pf.name,
+                    step: pf.step,
+                    inputs: pf.inputs,
+                    inplace: false,
+                    sched: pf.sched,
+                    tail: Some(pf.tail),
+                });
+                continue;
+            }
+            let chain = by_producer.get(&id);
+            let (tail_acts, tail_res) = match chain {
+                Some(ch) => (
+                    [ch.pre_act, ch.post_act]
+                        .iter()
+                        .filter(|a| **a != Activation::Identity)
+                        .count(),
+                    ch.residual.is_some(),
+                ),
+                None => (0, false),
+            };
+            let bench_tail = chain.map(|ch| BenchTail {
+                pre: ch.pre_act,
+                res: ch.residual.is_some(),
+                res_first: ch.res_first,
+                post: ch.post_act,
+            });
             let bias = g
                 .param(&format!("{}.bias", node.name))
                 .map(|t| t.data().to_vec());
@@ -620,26 +736,41 @@ impl Planner {
                             direct_ok: matches!(exec, ConvExec::Dense { .. })
                                 && geom.identity_lowering(),
                             gemm_backed,
+                            tail_acts,
+                            tail_res,
                         };
                         // Synthetic batch-sized activations + private
                         // buffers for the micro-benchmark probes, built
                         // lazily on the first probe so a cache hit
                         // allocates nothing (plan time only — never the
-                        // frame hot path).
-                        type BenchBufs = (Vec<f32>, Vec<f32>, crate::kernels::conv::ConvScratch);
+                        // frame hot path). The residual buffer is empty
+                        // unless the step's chain absorbs an add.
+                        type BenchBufs =
+                            (Vec<f32>, Vec<f32>, Vec<f32>, crate::kernels::conv::ConvScratch);
                         let mut bufs: Option<BenchBufs> = None;
                         step_sched = tuner.tune(&req, &mut |cand, pool| {
-                            let (bx, bout, bscratch) = bufs.get_or_insert_with(|| {
+                            let (bx, bout, bres, bscratch) = bufs.get_or_insert_with(|| {
                                 let chw = geom.in_c * geom.in_h * geom.in_w;
+                                let out_elems = batch * *out_c * geom.out_px();
                                 (
                                     (0..batch * chw)
                                         .map(|i| ((i % 37) as f32) * 0.05 - 0.9)
                                         .collect(),
-                                    vec![0.0f32; batch * *out_c * geom.out_px()],
+                                    vec![0.0f32; out_elems],
+                                    if tail_res {
+                                        (0..out_elems)
+                                            .map(|i| ((i % 41) as f32) * 0.04 - 0.7)
+                                            .collect()
+                                    } else {
+                                        Vec::new()
+                                    },
                                     crate::kernels::conv::ConvScratch::new(),
                                 )
                             });
-                            bench_conv_exec(&exec, &geom, batch, bx, bscratch, bout, cand, pool)
+                            bench_conv_exec(
+                                &exec, &geom, batch, bx, bscratch, bout, bres, bench_tail,
+                                cand, pool,
+                            )
                         });
                     }
                     // Worst-case im2col panel for the context's scratch —
@@ -703,26 +834,42 @@ impl Planner {
                             geom: geom_tag,
                             direct_ok: false,
                             gemm_backed: false,
+                            tail_acts,
+                            tail_res,
                         };
                         let (cc, hh, ww, st, pd, act) =
                             (*c, h, win, *stride, *pad, *fused_act);
                         let wref = &w;
-                        type DwBufs = (Vec<f32>, Vec<f32>);
+                        type DwBufs = (Vec<f32>, Vec<f32>, Vec<f32>);
                         let mut bufs: Option<DwBufs> = None;
                         step_sched = tuner.tune(&req, &mut |cand, pool| {
-                            let (bx, bout) = bufs.get_or_insert_with(|| {
+                            let (bx, bout, bres) = bufs.get_or_insert_with(|| {
+                                let out_elems = batch * cc * oh * ow;
                                 (
                                     (0..batch * cc * hh * ww)
                                         .map(|i| ((i % 31) as f32) * 0.06 - 0.9)
                                         .collect(),
-                                    vec![0.0f32; batch * cc * oh * ow],
+                                    vec![0.0f32; out_elems],
+                                    if tail_res {
+                                        (0..out_elems)
+                                            .map(|i| ((i % 41) as f32) * 0.04 - 0.7)
+                                            .collect()
+                                    } else {
+                                        Vec::new()
+                                    },
                                 )
                             });
+                            let ft = bench_tail.and_then(|t| bench_fused_tail(&t, bres, cand));
                             let t0 = std::time::Instant::now();
                             crate::kernels::conv::dwconv2d(
                                 bx, batch, cc, hh, ww, wref, None, st, pd, act, pool, cand,
-                                bout,
+                                ft.as_ref(), bout,
                             );
+                            if let Some(t) = bench_tail {
+                                if !cand.fuse {
+                                    bench_epilogue_unfused(bout, bres, &t, pool);
+                                }
+                            }
                             t0.elapsed().as_secs_f64()
                         });
                     }
@@ -755,20 +902,31 @@ impl Planner {
                             geom: geom_tag,
                             direct_ok: false,
                             gemm_backed: true,
+                            tail_acts,
+                            tail_res,
                         };
                         let (outf, inf) = (*out_f, *in_f);
-                        type DenseBufs = (Vec<f32>, Vec<f32>);
+                        type DenseBufs = (Vec<f32>, Vec<f32>, Vec<f32>);
                         let mut bufs: Option<DenseBufs> = None;
                         let wref = &w;
                         step_sched = tuner.tune(&req, &mut |cand, pool| {
-                            let (bx, bout) = bufs.get_or_insert_with(|| {
+                            let (bx, bout, bres) = bufs.get_or_insert_with(|| {
+                                let out_elems = batch * outf;
                                 (
                                     (0..batch * inf)
                                         .map(|i| ((i % 29) as f32) * 0.07 - 0.8)
                                         .collect(),
-                                    vec![0.0f32; batch * outf],
+                                    vec![0.0f32; out_elems],
+                                    if tail_res {
+                                        (0..out_elems)
+                                            .map(|i| ((i % 41) as f32) * 0.04 - 0.7)
+                                            .collect()
+                                    } else {
+                                        Vec::new()
+                                    },
                                 )
                             });
+                            let ft = bench_tail.and_then(|t| bench_fused_tail(&t, bres, cand));
                             let t0 = std::time::Instant::now();
                             crate::kernels::gemm::dense_forward(
                                 wref.data(),
@@ -780,8 +938,14 @@ impl Planner {
                                 outf,
                                 pool,
                                 cand,
+                                ft.as_ref(),
                                 bout,
                             );
+                            if let Some(t) = bench_tail {
+                                if !cand.fuse {
+                                    bench_epilogue_unfused(bout, bres, &t, pool);
+                                }
+                            }
                             t0.elapsed().as_secs_f64()
                         });
                     }
@@ -820,12 +984,64 @@ impl Planner {
             if cfg.relaxed_simd {
                 step_sched.relaxed = true;
             }
+            let step_sched = step_sched.sanitized();
+            // A chained producer whose schedule kept the fuse axis on is
+            // stashed and emitted as one compound step at the chain's
+            // terminal node; the producer (and any non-terminal member)
+            // becomes a placeholder. A `fuse: false` winner (tuner) or a
+            // `--no-fuse` plan falls through to the normal emission and
+            // every chain member emits as an ordinary step.
+            if let Some(ch) = chain {
+                if step_sched.fuse {
+                    let mut name = node.name.clone();
+                    let mut inputs = node.inputs.clone();
+                    for &m in &ch.absorbed {
+                        name.push('+');
+                        name.push_str(&g.node(m).name);
+                    }
+                    if let Some(r) = ch.residual {
+                        inputs.push(r);
+                    }
+                    let terminal = ch.last();
+                    for &m in &ch.absorbed {
+                        if m != terminal {
+                            placeholder.insert(m);
+                        }
+                    }
+                    pending.insert(
+                        terminal,
+                        PendingFused {
+                            name,
+                            step,
+                            inputs,
+                            sched: step_sched,
+                            tail: StepTail {
+                                pre_act: ch.pre_act,
+                                residual: ch.residual.is_some(),
+                                res_first: ch.res_first,
+                                post_act: ch.post_act,
+                                absorbed: ch.absorbed.len(),
+                            },
+                        },
+                    );
+                    steps.push(PlanStep {
+                        name: node.name.clone(),
+                        step: Step::Fused,
+                        inputs: Vec::new(),
+                        inplace: false,
+                        sched: step_sched,
+                        tail: None,
+                    });
+                    continue;
+                }
+            }
             steps.push(PlanStep {
                 name: node.name.clone(),
                 step,
                 inputs: node.inputs.clone(),
                 inplace: false,
-                sched: step_sched.sanitized(),
+                sched: step_sched,
+                tail: None,
             });
         }
         // The cache is purely an optimization: a failed write must not
@@ -836,7 +1052,16 @@ impl Planner {
 
         // ---- static memory planning: liveness + arena layout --------------
         let n = steps.len();
-        let fanout = g.fanout();
+        // Fanout over the *emitted* steps, not the graph: a fused chain's
+        // internal edges are gone (its intermediates own no arena range),
+        // and the compound step's input edges keep the producer's input —
+        // and the residual — alive until the compound executes.
+        let mut fanout = vec![0usize; n];
+        for st in &steps {
+            for &v in &st.inputs {
+                fanout[v] += 1;
+            }
+        }
         let elems: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
         let mut arena = ArenaPlanner::new();
         let mut values = vec![ValueSlot { offset: 0, len: 0 }; n];
@@ -846,7 +1071,11 @@ impl Planner {
         let mut remaining = fanout.clone();
 
         for id in 0..n {
-            let len = elems[id];
+            // Placeholders produce no value (`ArenaPlanner::alloc(0)` is a
+            // no-op at offset 0): the compound step at the chain's terminal
+            // writes the only materialized buffer — this is where fusion
+            // shrinks the arena.
+            let len = if matches!(steps[id].step, Step::Fused) { 0 } else { elems[id] };
             let inplace = opts.inplace && {
                 let st = &steps[id];
                 let candidate = matches!(
@@ -914,11 +1143,49 @@ impl Planner {
     }
 }
 
+/// Synthetic fused-tail shape for the tuner's probes — mirrors the
+/// [`FuseChain`] the planner would attach to the step being tuned.
+#[derive(Clone, Copy)]
+struct BenchTail {
+    pre: Activation,
+    res: bool,
+    res_first: bool,
+    post: Activation,
+}
+
+/// The [`FusedTail`] a *fused* candidate runs in the probe; `None` for
+/// unfused candidates (and for chain-less steps, which pass no tail).
+fn bench_fused_tail<'a>(t: &BenchTail, res: &'a [f32], cand: &Schedule) -> Option<FusedTail<'a>> {
+    if !cand.fuse {
+        return None;
+    }
+    Some(FusedTail {
+        pre_act: t.pre,
+        residual: if t.res { Some(res) } else { None },
+        res_first: t.res_first,
+        post_act: t.post,
+    })
+}
+
+/// What an *unfused* candidate pays for the chain: the separate
+/// elementwise passes the plan would run as standalone steps. Timed
+/// inside the probe so the fuse axis is compared honestly.
+fn bench_epilogue_unfused(out: &mut [f32], res: &[f32], t: &BenchTail, pool: &ComputePool) {
+    act_inplace(out, t.pre, pool);
+    if t.res {
+        add_assign(out, res, pool);
+    }
+    act_inplace(out, t.post, pool);
+}
+
 /// Run one conv step's real kernel once on synthetic batch-sized data
 /// under the candidate schedule and return elapsed seconds — the tuner's
 /// micro-benchmark probe (plan time only). `n` is the plan's batch, so
 /// the probe measures the same `n × rows` dispatch geometry the frame
-/// loop will run.
+/// loop will run. When the step has a fuse chain (`tail`), fused
+/// candidates run the epilogue inside the kernel and unfused candidates
+/// pay the separate elementwise passes, so both flavors are timed as the
+/// plan would actually execute them.
 #[allow(clippy::too_many_arguments)]
 fn bench_conv_exec(
     exec: &ConvExec,
@@ -927,32 +1194,41 @@ fn bench_conv_exec(
     x: &[f32],
     scratch: &mut crate::kernels::conv::ConvScratch,
     out: &mut [f32],
+    res: &[f32],
+    tail: Option<BenchTail>,
     cand: &Schedule,
     pool: &ComputePool,
 ) -> f64 {
     use crate::kernels::conv as ck;
+    let ft = tail.and_then(|t| bench_fused_tail(&t, res, cand));
+    let ft = ft.as_ref();
     let t0 = std::time::Instant::now();
     match exec {
         ConvExec::Dense { w } => ck::conv2d_dense(
             x, n, w, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
-            out,
+            ft, out,
         ),
         ConvExec::Csr { csr } => ck::conv2d_csr(
             x, n, csr, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
-            out,
+            ft, out,
         ),
         ConvExec::Column { cc } => ck::conv2d_column_compact(
             x, n, cc, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch, cand,
-            out,
+            ft, out,
         ),
         ConvExec::Pattern { plan } => ck::conv2d_pattern(
             x, n, plan, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch,
-            cand, out,
+            cand, ft, out,
         ),
         ConvExec::Reordered { plan, lanes } => ck::conv2d_reordered(
             x, n, plan, lanes, geom, PadMode::Zeros, None, Activation::Identity, pool,
-            scratch, cand, out,
+            scratch, cand, ft, out,
         ),
+    }
+    if let Some(t) = tail {
+        if !cand.fuse {
+            bench_epilogue_unfused(out, res, &t, pool);
+        }
     }
     t0.elapsed().as_secs_f64()
 }
@@ -991,16 +1267,89 @@ mod tests {
     fn layout_is_consistent_and_reuses_memory() {
         let mut rng = Rng::new(7);
         let g = residual_graph(&mut rng);
+        // Fused (the default): the whole c1→r→s chain is one compound step.
         let plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
         plan.validate_layout().unwrap();
-        let no_reuse = Planner::plan_with(&g, &ExecConfig::dense(1), PlanOptions::no_reuse())
-            .unwrap();
+        assert_eq!(plan.fused_steps(), 1);
+        assert_eq!(plan.len(), g.len(), "placeholders keep step ids aligned");
+        // Unfused: the historical layout — `r` (act, sole consumer of c1)
+        // and `out` run in place.
+        let unfused = Planner::plan(&g, &ExecConfig::dense(1).with_fuse(false)).unwrap();
+        unfused.validate_layout().unwrap();
+        assert_eq!(unfused.fused_steps(), 0);
+        assert!(unfused.inplace_steps() >= 2, "inplace={}", unfused.inplace_steps());
+        let no_reuse = Planner::plan_with(
+            &g,
+            &ExecConfig::dense(1).with_fuse(false),
+            PlanOptions::no_reuse(),
+        )
+        .unwrap();
         no_reuse.validate_layout().unwrap();
         // Reuse + aliasing must need strictly less arena than one slot per
-        // value.
-        assert!(plan.arena_len() < no_reuse.arena_len());
-        // `r` (act, sole consumer of c1) and `out` run in place.
-        assert!(plan.inplace_steps() >= 2, "inplace={}", plan.inplace_steps());
+        // value, and fusion never needs more than the unfused layout.
+        assert!(unfused.arena_len() < no_reuse.arena_len());
+        assert!(plan.arena_len() <= unfused.arena_len());
+    }
+
+    #[test]
+    fn fused_intermediates_get_no_arena_slots() {
+        // Residual-first add: unfused, the Add cannot run in place (its
+        // first input `x` has fanout 2), so the chain intermediates cost
+        // a fresh slot; fused, they are zero-length placeholders.
+        let mut rng = Rng::new(11);
+        let mut g = Graph::new("resfirst");
+        let x = g.add("x", Op::Input { shape: vec![1, 4, 8, 8] }, &[]);
+        let c1 = g.add(
+            "c1",
+            Op::Conv2d {
+                out_c: 4,
+                in_c: 4,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                pad_mode: PadMode::Zeros,
+                fused_act: Activation::Identity,
+            },
+            &[x],
+        );
+        g.set_param("c1.weight", Tensor::randn(&[4, 4, 3, 3], &mut rng));
+        let a = g.add("a", Op::Act(Activation::Relu), &[c1]);
+        let s = g.add("s", Op::Add, &[x, a]);
+        g.add("out", Op::Output, &[s]);
+
+        let fused = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        fused.validate_layout().unwrap();
+        let unfused = Planner::plan(&g, &ExecConfig::dense(1).with_fuse(false)).unwrap();
+        assert_eq!(fused.fused_steps(), 1);
+        // Chain members before the terminal are zero-length placeholders.
+        assert!(matches!(fused.steps[c1].step, Step::Fused));
+        assert!(matches!(fused.steps[a].step, Step::Fused));
+        assert_eq!(fused.values[c1].len, 0);
+        assert_eq!(fused.values[a].len, 0);
+        // The compound step sits at the terminal, reads the residual as
+        // its last input, and records the chain in its tail.
+        let comp = &fused.steps[s];
+        assert_eq!(comp.name, "c1+a+s");
+        assert_eq!(comp.inputs, vec![x, x]);
+        let tail = comp.tail.as_ref().unwrap();
+        assert!(tail.residual && tail.res_first);
+        assert_eq!(tail.pre_act, Activation::Relu);
+        assert_eq!(tail.post_act, Activation::Identity);
+        assert_eq!(tail.absorbed, 2);
+        // Skipping the intermediates shrinks the arena: `x` stays live
+        // across the whole chain, so the unfused Add needs a third slot.
+        assert!(
+            fused.arena_len() < unfused.arena_len(),
+            "fused {} vs unfused {}",
+            fused.arena_len(),
+            unfused.arena_len()
+        );
+        // The fusion outcome is visible in the schedule introspection.
+        let sj = fused.schedules_json();
+        let entry = sj.get("c1+a+s");
+        assert_eq!(entry.get("fused").as_bool(), Some(true));
+        assert_eq!(entry.get("fused_ops").as_usize(), Some(2));
     }
 
     #[test]

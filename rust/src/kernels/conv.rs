@@ -35,7 +35,7 @@
 //! forward the blocking/split/unroll knobs to their GEMM tier.
 
 use crate::dsl::op::{Activation, PadMode};
-use crate::kernels::elementwise::bias_act_inplace;
+use crate::kernels::elementwise::{fused_epilogue, FusedTail};
 use crate::kernels::gemm;
 use crate::kernels::im2col::{im2col, im2col_pruned, ConvGeom};
 use crate::kernels::sparse_gemm;
@@ -106,6 +106,7 @@ fn conv_common(
     pad_mode: PadMode,
     bias: Option<&[f32]>,
     act: Activation,
+    tail: Option<&FusedTail<'_>>,
     pool: &ComputePool,
     scratch: &mut ConvScratch,
     gemm_fn: impl FnOnce(&[f32], &mut [f32], &mut [f32]),
@@ -143,7 +144,7 @@ fn conv_common(
         });
     }
     gemm_fn(patch, panel, out);
-    bias_act_inplace(out, bias, out_c, opx, act, pool);
+    fused_epilogue(out, bias, out_c, opx, act, tail, pool);
     let _ = pad_mode;
 }
 
@@ -164,6 +165,7 @@ pub fn conv2d_dense(
     pool: &ComputePool,
     scratch: &mut ConvScratch,
     sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
     out: &mut [f32],
 ) {
     let out_c = w.dim(0);
@@ -177,7 +179,7 @@ pub fn conv2d_dense(
         debug_assert_eq!(out.len(), n * out_c * opx);
         out.fill(0.0);
         gemm::gemm_batch_with(n, out_c, cols, opx, w.data(), x, out, pool, sched);
-        bias_act_inplace(out, bias, out_c, opx, act, pool);
+        fused_epilogue(out, bias, out_c, opx, act, tail, pool);
         return;
     }
     conv_common(
@@ -188,6 +190,7 @@ pub fn conv2d_dense(
         pad_mode,
         bias,
         act,
+        tail,
         pool,
         scratch,
         |patch, _panel, cdst| {
@@ -213,6 +216,7 @@ pub fn conv2d_csr(
     pool: &ComputePool,
     scratch: &mut ConvScratch,
     sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
     out: &mut [f32],
 ) {
     let out_c = csr.rows;
@@ -225,6 +229,7 @@ pub fn conv2d_csr(
         pad_mode,
         bias,
         act,
+        tail,
         pool,
         scratch,
         |patch, _panel, cdst| sparse_gemm::spmm_csr_batch(n, csr, patch, opx, cdst, pool, sched),
@@ -248,6 +253,7 @@ pub fn conv2d_column_compact(
     pool: &ComputePool,
     scratch: &mut ConvScratch,
     sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
     out: &mut [f32],
 ) {
     let out_c = cc.rows;
@@ -261,6 +267,7 @@ pub fn conv2d_column_compact(
         pad_mode,
         bias,
         act,
+        tail,
         pool,
         scratch,
         |patch, _panel, cdst| {
@@ -291,6 +298,7 @@ pub fn conv2d_reordered(
     pool: &ComputePool,
     scratch: &mut ConvScratch,
     sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
     out: &mut [f32],
 ) {
     let out_c = plan.rows;
@@ -304,6 +312,7 @@ pub fn conv2d_reordered(
         pad_mode,
         bias,
         act,
+        tail,
         pool,
         scratch,
         |patch, panel, cdst| {
@@ -330,6 +339,7 @@ pub fn conv2d_pattern(
     pool: &ComputePool,
     scratch: &mut ConvScratch,
     sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
     out: &mut [f32],
 ) {
     let out_c = plan.out_c;
@@ -342,6 +352,7 @@ pub fn conv2d_pattern(
         pad_mode,
         bias,
         act,
+        tail,
         pool,
         scratch,
         |patch, _panel, cdst| {
@@ -413,6 +424,7 @@ pub fn dwconv2d(
     act: Activation,
     pool: &ComputePool,
     sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
     out: &mut [f32],
 ) {
     let k = w.dim(2);
@@ -486,7 +498,7 @@ pub fn dwconv2d(
             });
         }
     }
-    bias_act_inplace(out, bias, c, oh * ow, act, pool);
+    fused_epilogue(out, bias, c, oh * ow, act, tail, pool);
 }
 
 /// Reference conv (naive 7-loop) — the oracle all drivers are tested against.
@@ -589,7 +601,7 @@ mod tests {
         let mut out = Tensor::zeros(&[n, w.dim(0), geom.out_h, geom.out_w]);
         conv2d_dense(
             x.data(), n, w, &geom, pm, bias, act, pool, scratch, &Schedule::default(),
-            out.data_mut(),
+            None, out.data_mut(),
         );
         out
     }
@@ -638,7 +650,7 @@ mod tests {
             let mut got_csr = Tensor::zeros(&[1, oc, 8, 8]);
             conv2d_csr(
                 x.data(), 1, &csr, &geom, PadMode::Zeros, None, Activation::Identity, &pool,
-                &mut scratch, &Schedule::default(), got_csr.data_mut(),
+                &mut scratch, &Schedule::default(), None, got_csr.data_mut(),
             );
             assert!(got_csr.max_abs_diff(&want) < 1e-3);
 
@@ -647,7 +659,7 @@ mod tests {
             let mut got_ro = Tensor::zeros(&[1, oc, 8, 8]);
             conv2d_reordered(
                 x.data(), 1, &plan, &lanes, &geom, PadMode::Zeros, None,
-                Activation::Identity, &pool, &mut scratch, &Schedule::default(),
+                Activation::Identity, &pool, &mut scratch, &Schedule::default(), None,
                 got_ro.data_mut(),
             );
             assert!(got_ro.max_abs_diff(&want) < 1e-3);
@@ -674,7 +686,7 @@ mod tests {
         let mut got = Tensor::zeros(&[2, oc, 10, 10]);
         conv2d_column_compact(
             x.data(), 2, &cc, &geom, PadMode::Reflect, Some(&bias), Activation::Relu,
-            &ComputePool::new(2), &mut scratch, &Schedule::default(), got.data_mut(),
+            &ComputePool::new(2), &mut scratch, &Schedule::default(), None, got.data_mut(),
         );
         let want = conv2d_ref(&x, &wp, Some(&bias), 1, 1, PadMode::Reflect, Activation::Relu);
         assert!(got.max_abs_diff(&want) < 1e-3, "err={}", got.max_abs_diff(&want));
@@ -689,7 +701,7 @@ mod tests {
         let mut got = Tensor::zeros(&[1, c, 9, 9]);
         dwconv2d(
             x.data(), 1, c, 9, 9, &w, None, 1, 1, Activation::Identity,
-            &ComputePool::new(2), &Schedule::default(), got.data_mut(),
+            &ComputePool::new(2), &Schedule::default(), None, got.data_mut(),
         );
         // Reference: per-channel 1-in-1-out conv.
         for ch in 0..c {
@@ -724,7 +736,7 @@ mod tests {
                 let mut got = Tensor::zeros(&[n, c, h, h]);
                 dwconv2d(
                     x.data(), n, c, h, h, &w, Some(&bias), 1, 1, Activation::Relu,
-                    &pool, &sched, got.data_mut(),
+                    &pool, &sched, None, got.data_mut(),
                 );
                 match &want {
                     None => want = Some(got),
@@ -773,7 +785,7 @@ mod tests {
         let mut dirty = vec![42.0f32; 3 * 36];
         conv2d_dense(
             x.data(), 1, &w, &geom, PadMode::Zeros, None, Activation::Identity,
-            &ComputePool::serial(), &mut scratch, &Schedule::default(), &mut dirty,
+            &ComputePool::serial(), &mut scratch, &Schedule::default(), None, &mut dirty,
         );
         let want = conv2d_ref(&x, &w, None, 1, 1, PadMode::Zeros, Activation::Identity);
         let err = dirty
@@ -799,7 +811,7 @@ mod tests {
         let mut b = Tensor::zeros(&[2, 8, 12, 12]);
         conv2d_dense(
             x.data(), 2, &w, &geom, PadMode::Zeros, None, Activation::Relu, &pool,
-            &mut scratch, &Schedule::default(), a.data_mut(),
+            &mut scratch, &Schedule::default(), None, a.data_mut(),
         );
         let direct = Schedule {
             lowering: crate::tuner::schedule::Lowering::Direct,
@@ -807,7 +819,7 @@ mod tests {
         };
         conv2d_dense(
             x.data(), 2, &w, &geom, PadMode::Zeros, None, Activation::Relu, &pool,
-            &mut scratch, &direct, b.data_mut(),
+            &mut scratch, &direct, None, b.data_mut(),
         );
         assert_eq!(a.data(), b.data(), "direct lowering changed bits");
         // A non-identity geometry silently falls back to im2col.

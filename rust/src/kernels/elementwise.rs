@@ -116,6 +116,92 @@ pub fn bias_act_inplace(
     }
 }
 
+/// Epilogue of a **fused compound step** (see `crate::executor::fusion`):
+/// the tail of ops absorbed into a conv / dwconv / dense producer — an
+/// optional standalone activation, an optional residual add and an
+/// optional post-add activation. [`fused_epilogue`] applies the whole
+/// tail in one pass over the producer's output while it is still hot,
+/// replacing the separate plan steps (and their arena round trips) of
+/// the unfused chain.
+#[derive(Debug, Clone, Copy)]
+pub struct FusedTail<'a> {
+    /// Activation absorbed between the producer and the residual add
+    /// (`Identity` when the chain has none). Runs with the same
+    /// range-loop semantics as a standalone `Act` step, so e.g. `-0.0`
+    /// survives a fused Relu exactly as it survives [`act_inplace`].
+    pub pre_act: Activation,
+    /// Residual operand of an absorbed `Add` (same length as the
+    /// output, read from its own arena slot — the planner keeps it live
+    /// and disjoint until the compound step runs).
+    pub residual: Option<&'a [f32]>,
+    /// Whether the residual was the Add's *first* operand: the fused
+    /// add then computes `r + v` instead of `v + r`, preserving the
+    /// unfused operand order (f32 addition commutes in value but not in
+    /// NaN-payload choice).
+    pub res_first: bool,
+    /// Activation absorbed after the residual add.
+    pub post_act: Activation,
+}
+
+/// One combined pass over a producer's output: bias + producer
+/// activation (exactly [`bias_act_inplace`]'s per-element expressions),
+/// then the fused tail — absorbed activation, residual add, post-add
+/// activation — each replicating the expression and operand order of
+/// the standalone step it replaces. Because every element still runs
+/// the identical fp expression sequence on exactly one thread, a fused
+/// chain is bitwise-identical to the unfused step sequence at any
+/// thread count. `tail: None` is exactly [`bias_act_inplace`].
+pub fn fused_epilogue(
+    x: &mut [f32],
+    bias: Option<&[f32]>,
+    channels: usize,
+    px: usize,
+    a: Activation,
+    tail: Option<&FusedTail<'_>>,
+    pool: &ComputePool,
+) {
+    let t = match tail {
+        Some(t) => t,
+        None => {
+            bias_act_inplace(x, bias, channels, px, a, pool);
+            return;
+        }
+    };
+    if let Some(r) = t.residual {
+        debug_assert_eq!(r.len(), x.len());
+    }
+    let planes = x.len() / px;
+    let run = |sub: &mut [f32], ps: usize, pe: usize| {
+        match bias {
+            Some(b) => bias_act_planes(sub, b, channels, px, a, ps, pe),
+            None => act_range(sub, a),
+        }
+        act_range(sub, t.pre_act);
+        if let Some(r) = t.residual {
+            let rsub = &r[ps * px..pe * px];
+            if t.res_first {
+                for (v, &rv) in sub.iter_mut().zip(rsub.iter()) {
+                    *v = rv + *v;
+                }
+            } else {
+                add_assign_range(sub, rsub);
+            }
+        }
+        act_range(sub, t.post_act);
+    };
+    if pool.threads() <= 1 || planes < 2 || x.len() < MIN_PAR_ELEMS {
+        run(x, 0, planes);
+        return;
+    }
+    let ptr = SendPtr::new(x.as_mut_ptr());
+    pool.parallel_chunks(planes, |ps, pe, _| {
+        // SAFETY: chunks are disjoint plane ranges of `x`.
+        let sub =
+            unsafe { std::slice::from_raw_parts_mut(ptr.get().add(ps * px), (pe - ps) * px) };
+        run(sub, ps, pe);
+    });
+}
+
 /// out = a + b elementwise into a caller-provided slice (all same length,
 /// `out` disjoint from both inputs — the planner guarantees this).
 pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32], pool: &ComputePool) {
@@ -514,5 +600,115 @@ mod tests {
         instancenorm_inplace(&mut i1, channels, px, None, None, 1e-5, &ComputePool::serial());
         instancenorm_inplace(&mut i4, channels, px, None, None, 1e-5, &pool);
         assert_eq!(i1, i4);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_unfused_sequence_bitwise() {
+        // Fused tail == bias_act -> Act step -> Add step -> Act step, bit
+        // for bit, serial and parallel, both residual operand orders.
+        let serial = ComputePool::serial();
+        let pool4 = ComputePool::new(4);
+        let channels = 4;
+        let px = MIN_PAR_ELEMS; // planes * px over the inline threshold
+        let n = channels * px;
+        let src: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.11).sin() * 3.0).collect();
+        let res: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.07).cos() * 2.0).collect();
+        let bias: Vec<f32> = (0..channels).map(|c| c as f32 * 0.3 - 0.5).collect();
+        for pre in [Activation::Identity, Activation::Relu, Activation::Tanh] {
+            for post in [Activation::Identity, Activation::LeakyRelu] {
+                for res_first in [false, true] {
+                    for b in [None, Some(bias.as_slice())] {
+                        // Oracle: the unfused step sequence.
+                        let mut want = src.clone();
+                        bias_act_inplace(&mut want, b, channels, px, Activation::Relu, &serial);
+                        act_inplace(&mut want, pre, &serial);
+                        if res_first {
+                            let prev = want.clone();
+                            add_range(&mut want, &res, &prev);
+                        } else {
+                            add_assign(&mut want, &res, &serial);
+                        }
+                        act_inplace(&mut want, post, &serial);
+                        for pool in [&serial, &pool4] {
+                            let mut got = src.clone();
+                            let tail = FusedTail {
+                                pre_act: pre,
+                                residual: Some(&res),
+                                res_first,
+                                post_act: post,
+                            };
+                            fused_epilogue(
+                                &mut got,
+                                b,
+                                channels,
+                                px,
+                                Activation::Relu,
+                                Some(&tail),
+                                pool,
+                            );
+                            assert_eq!(got, want, "pre={pre:?} post={post:?} rf={res_first}");
+                        }
+                    }
+                }
+            }
+        }
+        // No residual: tail is just an absorbed activation.
+        let mut want = src.clone();
+        bias_act_inplace(&mut want, Some(&bias), channels, px, Activation::Identity, &serial);
+        act_inplace(&mut want, Activation::Sigmoid, &serial);
+        for pool in [&serial, &pool4] {
+            let mut got = src.clone();
+            let tail = FusedTail {
+                pre_act: Activation::Sigmoid,
+                residual: None,
+                res_first: false,
+                post_act: Activation::Identity,
+            };
+            fused_epilogue(
+                &mut got,
+                Some(&bias),
+                channels,
+                px,
+                Activation::Identity,
+                Some(&tail),
+                pool,
+            );
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_without_tail_is_bias_act() {
+        let pool = ComputePool::serial();
+        let src = vec![-1.0, 0.5, -0.2, 2.0];
+        let mut a = src.clone();
+        let mut b = src;
+        bias_act_inplace(&mut a, Some(&[1.0, -1.0]), 2, 2, Activation::Relu, &pool);
+        fused_epilogue(&mut b, Some(&[1.0, -1.0]), 2, 2, Activation::Relu, None, &pool);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fused_relu_tail_preserves_negative_zero() {
+        // A standalone Act(Relu) step leaves -0.0 alone (`v < 0.0` is false
+        // for -0.0); an absorbed Relu must do the same.
+        let pool = ComputePool::serial();
+        let mut x = vec![-0.0f32, -1.0, 2.0, -0.0];
+        let res = vec![0.0f32; 4];
+        let tail = FusedTail {
+            pre_act: Activation::Relu,
+            residual: Some(&res),
+            res_first: false,
+            post_act: Activation::Identity,
+        };
+        fused_epilogue(&mut x, None, 4, 1, Activation::Identity, Some(&tail), &pool);
+        // -0.0 + 0.0 = +0.0 per IEEE; the key check is the pre-residual
+        // value: rerun without the add.
+        let mut y = vec![-0.0f32, -1.0, 2.0, -0.0];
+        let tail2 = FusedTail { residual: None, ..tail };
+        fused_epilogue(&mut y, None, 4, 1, Activation::Identity, Some(&tail2), &pool);
+        assert_eq!(y[0].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(y[3].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(y[1], 0.0);
     }
 }

@@ -451,6 +451,7 @@ pub fn dense_forward(
     out_f: usize,
     pool: &ComputePool,
     sched: &Schedule,
+    tail: Option<&crate::kernels::elementwise::FusedTail<'_>>,
     out: &mut [f32],
 ) {
     debug_assert_eq!(w.len(), out_f * in_f);
@@ -492,7 +493,7 @@ pub fn dense_forward(
             }
         });
     }
-    crate::kernels::elementwise::bias_act_inplace(out, bias, out_f, 1, act, pool);
+    crate::kernels::elementwise::fused_epilogue(out, bias, out_f, 1, act, tail, pool);
 }
 
 /// Reference (naive) GEMM used as the kernel test oracle.
@@ -643,7 +644,7 @@ mod tests {
             let mut got = vec![0.0f32; batch * out_f];
             dense_forward(
                 &w, Some(&bias), Activation::Relu, &x, batch, in_f, out_f, &pool, &sched,
-                &mut got,
+                None, &mut got,
             );
             for b in 0..batch {
                 for o in 0..out_f {
@@ -806,14 +807,14 @@ mod tests {
         let mut scalar = vec![0.0f32; batch * out_f];
         dense_forward(
             &w, None, Activation::Identity, &x, batch, in_f, out_f, &pool,
-            &Schedule::default(), &mut scalar,
+            &Schedule::default(), None, &mut scalar,
         );
         for relaxed in [false, true] {
             let s = Schedule { isa: det, relaxed, ..Schedule::default() };
             let mut got = vec![0.0f32; batch * out_f];
             dense_forward(
                 &w, None, Activation::Identity, &x, batch, in_f, out_f, &pool, &s,
-                &mut got,
+                None, &mut got,
             );
             for (g, sc) in got.iter().zip(scalar.iter()) {
                 assert!(

@@ -22,6 +22,9 @@
 //! `serve` coalesces up to N queued frames per worker dispatch
 //! (`--max-wait-ms M` lets a worker wait up to M ms for a full batch
 //! before padding — adaptive batching).
+//! `--no-fuse` disables plan-time operator fusion (compound
+//! conv+bias+act(+add) steps — see `docs/ARCHITECTURE.md` §Fusion); the
+//! unfused plan is the bitwise reference the fused one is tested against.
 //!
 //! Every command drives the `session` front door: `Model::for_app` →
 //! `.session().threads(..).batch(..).tune(..).build()` → run / serve.
@@ -177,9 +180,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         .tune(tune_opts(args))
         .force_scalar(args.has_flag("force-scalar"))
         .relaxed_simd(args.has_flag("relaxed-simd"))
+        .fuse(!args.has_flag("no-fuse"))
         .build()?;
     print_isa(&session);
     print_tune_stats(&session);
+    if session.fused_steps() > 0 {
+        println!("fusion: {} compound steps", session.fused_steps());
+    }
     let input_shape = session.shapes().inputs[0].clone();
     let x = Tensor::full(&input_shape, 0.5);
     let s = bench_auto_ms(800.0, || {
@@ -222,9 +229,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .tune(tune_opts(args))
         .force_scalar(args.has_flag("force-scalar"))
         .relaxed_simd(args.has_flag("relaxed-simd"))
+        .fuse(!args.has_flag("no-fuse"))
         .build()?;
     print_isa(&session);
     print_tune_stats(&session);
+    if session.fused_steps() > 0 {
+        println!("fusion: {} compound steps", session.fused_steps());
+    }
     let ishape = session.shapes().frame_inputs[0].clone();
     let (h, w) = (ishape[2], ishape[3]);
     let gray = ishape[1] == 1;

@@ -118,6 +118,39 @@ pub fn gemm_schedule_seconds(
     t_compute.max(t_memory) * grain_penalty
 }
 
+/// Modeled seconds of a step's elementwise tail (the absorbed
+/// `act → add → act` chain) with `m × n` output elements. The epilogue is
+/// purely bandwidth-bound, so the estimate is traffic-only:
+///
+/// * fused: the tail runs on the producer's output while it is still
+///   being written — the only *extra* traffic is the residual read.
+/// * unfused: each absorbed activation is a separate read+write pass over
+///   the tensor, and the residual add is a read+read+write pass, all
+///   through the arena.
+///
+/// With no tail (`tail_acts == 0 && !tail_res`) both flavors cost 0, so
+/// the term is inert for chain-less requests.
+pub fn epilogue_seconds(
+    m: usize,
+    n: usize,
+    tail_acts: usize,
+    tail_res: bool,
+    fused: bool,
+    h: &HostModel,
+) -> f64 {
+    let out_bytes = (m.max(1) * n.max(1)) as f64 * 4.0;
+    let passes = if fused {
+        if tail_res {
+            1.0 // residual read only
+        } else {
+            0.0
+        }
+    } else {
+        2.0 * tail_acts as f64 + if tail_res { 3.0 } else { 0.0 }
+    };
+    passes * out_bytes / h.bandwidth
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +195,23 @@ mod tests {
             let wide = Schedule { isa, mr: 4, nr: 16, ..Schedule::default() };
             let c = gemm_schedule_seconds(128, 1152, 4096, 4, &wide, &h);
             assert!(c < b, "wide tile {} should beat narrow {}", c, b);
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_always_ranks_at_or_below_unfused() {
+        let h = HostModel::generic();
+        for &(acts, res) in &[(0usize, false), (1, false), (0, true), (2, true)] {
+            let f = epilogue_seconds(64, 4096, acts, res, true, &h);
+            let u = epilogue_seconds(64, 4096, acts, res, false, &h);
+            assert!(f.is_finite() && u.is_finite());
+            assert!(f <= u, "acts={} res={}: fused {} > unfused {}", acts, res, f, u);
+            if acts > 0 || res {
+                assert!(f < u, "a real tail must make fusion strictly cheaper");
+            } else {
+                assert_eq!(f, 0.0);
+                assert_eq!(u, 0.0);
+            }
         }
     }
 

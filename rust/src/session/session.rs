@@ -34,6 +34,12 @@ pub struct SessionOptions {
     /// default: results then stay bitwise-identical to the scalar
     /// kernels (see [`crate::kernels::micro`]).
     pub relaxed_simd: bool,
+    /// Plan-time operator fusion (on by default): collapse
+    /// `conv/dwconv/dense → act → add → act` chains into compound steps
+    /// (see [`crate::executor::fusion`]). Fused plans are
+    /// bitwise-identical to unfused ones; the CLI's `--no-fuse` maps
+    /// here.
+    pub fuse: bool,
 }
 
 impl Default for SessionOptions {
@@ -45,6 +51,7 @@ impl Default for SessionOptions {
             tune: TuneOpts::off(),
             force_scalar: false,
             relaxed_simd: false,
+            fuse: true,
         }
     }
 }
@@ -103,6 +110,13 @@ impl<'m> SessionBuilder<'m> {
         self
     }
 
+    /// Enable/disable plan-time operator fusion (on by default; the CLI's
+    /// `--no-fuse` calls this with `false`).
+    pub fn fuse(mut self, fuse: bool) -> Self {
+        self.opts.fuse = fuse;
+        self
+    }
+
     /// Replace every knob at once (bulk form of the per-axis setters).
     pub fn options(mut self, opts: SessionOptions) -> Self {
         self.opts = opts;
@@ -129,6 +143,7 @@ impl<'m> SessionBuilder<'m> {
             batch: self.opts.batch,
             force_scalar: self.opts.force_scalar,
             relaxed_simd: self.opts.relaxed_simd,
+            fuse: self.opts.fuse,
         };
         let engine = Engine::with_config(self.model.graph(), &cfg)?;
         Ok(Session {
@@ -298,6 +313,13 @@ impl Session {
     /// Static memory accounting of the compiled plan.
     pub fn memory(&self) -> MemoryUsage {
         self.plan().memory()
+    }
+
+    /// Number of compound (fused) steps in the compiled plan (see
+    /// [`ExecutionPlan::fused_steps`](crate::executor::ExecutionPlan::fused_steps);
+    /// 0 for `--no-fuse` sessions).
+    pub fn fused_steps(&self) -> usize {
+        self.plan().fused_steps()
     }
 
     /// Per-step kernel schedules of the tuner-searched step kinds in JSON

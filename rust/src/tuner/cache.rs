@@ -24,9 +24,9 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Current cache file format version (v2 added the host fingerprint; v3
-/// added the ISA schedule fields and the ISA-suffixed fingerprint; v1/v2
-/// files are discarded as untrusted on load).
-const VERSION: usize = 3;
+/// added the ISA schedule fields and the ISA-suffixed fingerprint; v4
+/// added the `fuse` axis; older files are discarded as untrusted on load).
+const VERSION: usize = 4;
 
 /// Stable fingerprint of the machine the benchmarks ran on: CPU
 /// architecture + OS + core count + **detected kernel ISA**. Coarse on
@@ -128,7 +128,7 @@ impl TuneCache {
     pub fn from_json(j: &Json) -> Result<TuneCache> {
         match j.get("version").as_usize() {
             Some(VERSION) => {}
-            Some(1) | Some(2) => return Ok(TuneCache::new()),
+            Some(1) | Some(2) | Some(3) => return Ok(TuneCache::new()),
             other => bail!("tune cache: unsupported version {:?}", other),
         }
         let host = j
@@ -255,11 +255,12 @@ mod tests {
     #[test]
     fn rejects_bad_versions_and_shapes() {
         assert!(TuneCache::from_json(&Json::parse("{\"version\":99}").unwrap()).is_err());
-        // v3 requires the host fingerprint and the entries object.
-        assert!(TuneCache::from_json(&Json::parse("{\"version\":3}").unwrap()).is_err());
-        // v1 (pre-fingerprint) and v2 (pre-ISA schedules) parse as empty:
-        // their entries were benchmarked under an unknown kernel tier.
-        for old in ["{\"version\":1}", "{\"version\":2}"] {
+        // v4 requires the host fingerprint and the entries object.
+        assert!(TuneCache::from_json(&Json::parse("{\"version\":4}").unwrap()).is_err());
+        // v1 (pre-fingerprint), v2 (pre-ISA schedules) and v3 (pre-fusion
+        // schedules) parse as empty: their entries lack fields the current
+        // planner depends on.
+        for old in ["{\"version\":1}", "{\"version\":2}", "{\"version\":3}"] {
             let c = TuneCache::from_json(&Json::parse(old).unwrap()).unwrap();
             assert!(c.is_empty(), "{} must parse as an empty cache", old);
         }

@@ -33,7 +33,7 @@ pub use cache::{host_fingerprint, TuneCache};
 pub use crate::kernels::micro::Isa;
 pub use schedule::{GroupOrder, Lowering, Schedule, SplitAxis};
 
-use crate::perfmodel::sched::{gemm_schedule_seconds, HostModel};
+use crate::perfmodel::sched::{epilogue_seconds, gemm_schedule_seconds, HostModel};
 use crate::util::threadpool::ComputePool;
 use anyhow::Result;
 use std::path::{Path, PathBuf};
@@ -130,15 +130,32 @@ pub struct TuneRequest<'a> {
     /// Whether the step bottoms out in the blocked dense GEMM (full
     /// candidate space) or in a sparse kernel (unroll-only space).
     pub gemm_backed: bool,
+    /// Number of non-identity activations the planner's fuse chain would
+    /// absorb into this step's epilogue (0 when no chain was found).
+    pub tail_acts: usize,
+    /// Whether the fuse chain absorbs a residual add.
+    pub tail_res: bool,
 }
 
 impl TuneRequest<'_> {
-    /// Canonical cache key (shape + variant + geometry + thread count).
+    /// Whether a fuse chain with any actual work hangs off this step —
+    /// only then is the `fuse` schedule axis live.
+    pub fn fusable(&self) -> bool {
+        self.tail_acts > 0 || self.tail_res
+    }
+
+    /// Canonical cache key (shape + variant + geometry + thread count,
+    /// plus the fused-tail shape when a chain is attached — the same GEMM
+    /// with and without an epilogue wants different winners).
     pub fn key(&self, threads: usize) -> String {
-        format!(
+        let mut k = format!(
             "{}|{}|m{}k{}n{}|{}|t{}",
             self.op, self.variant, self.m, self.k, self.n, self.geom, threads
-        )
+        );
+        if self.fusable() {
+            k.push_str(&format!("|fa{}r{}", self.tail_acts, self.tail_res as usize));
+        }
+        k
     }
 }
 
@@ -223,6 +240,22 @@ impl Tuner {
     /// across every plan of one config or cross-plan bitwise oracles would
     /// compare different reduction orders.
     pub fn candidate_space(req: &TuneRequest, isa: Isa) -> Vec<Schedule> {
+        let mut out = Self::shape_space(req, isa);
+        if req.fusable() {
+            // The fusion axis: one candidate that runs the chain unfused
+            // (epilogue as separate arena-bound steps). Crossing it with
+            // every shape knob would square the space; a single unfused
+            // baseline is enough — when fusion wins at all it wins on
+            // epilogue traffic, which the shape knobs don't change.
+            out.push(Schedule { fuse: false, ..out[0] });
+        }
+        out
+    }
+
+    /// The shape/ISA portion of the candidate space (everything except the
+    /// fusion axis, which [`candidate_space`](Self::candidate_space)
+    /// appends per request).
+    fn shape_space(req: &TuneRequest, isa: Isa) -> Vec<Schedule> {
         let base = Schedule { isa, ..Schedule::default() }.sanitized();
         let isa = base.isa; // post-sanitize: clamped to an available ISA
         if req.op == "dw" {
@@ -340,7 +373,9 @@ impl Tuner {
             .into_iter()
             .skip(1)
             .map(|s| {
-                (gemm_schedule_seconds(req.m, req.k, req.n, self.threads, &s, &host), s)
+                let t = gemm_schedule_seconds(req.m, req.k, req.n, self.threads, &s, &host)
+                    + epilogue_seconds(req.m, req.n, req.tail_acts, req.tail_res, s.fuse, &host);
+                (t, s)
             })
             .collect();
         ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
@@ -416,7 +451,35 @@ mod tests {
             geom: "k3s1p1".to_string(),
             direct_ok,
             gemm_backed,
+            tail_acts: 0,
+            tail_res: false,
         }
+    }
+
+    #[test]
+    fn fusable_request_adds_unfused_candidate_and_key_segment() {
+        let plain = gemm_req(true, true);
+        let mut fused = gemm_req(true, true);
+        fused.tail_acts = 1;
+        fused.tail_res = true;
+        // The key must separate chained from chain-less uses of the same
+        // GEMM shape, and encode the tail shape.
+        assert_ne!(plain.key(4), fused.key(4));
+        assert!(fused.key(4).ends_with("|fa1r1"), "key: {}", fused.key(4));
+        // The space gains exactly one fuse-off candidate, identical to the
+        // baseline in every other knob.
+        let plain_space = Tuner::candidate_space(&plain, Isa::Scalar);
+        let fused_space = Tuner::candidate_space(&fused, Isa::Scalar);
+        assert!(plain_space.iter().all(|c| c.fuse), "chain-less space has no fuse axis");
+        assert_eq!(fused_space.len(), plain_space.len() + 1);
+        let off = fused_space.last().unwrap();
+        assert!(!off.fuse);
+        assert_eq!(Schedule { fuse: true, ..*off }, fused_space[0]);
+        // Non-GEMM tiers get the axis too.
+        let mut dw = gemm_req(false, false);
+        dw.op = "dw";
+        dw.tail_res = true;
+        assert!(Tuner::candidate_space(&dw, Isa::Scalar).iter().any(|c| !c.fuse));
     }
 
     #[test]

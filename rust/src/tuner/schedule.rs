@@ -113,6 +113,13 @@ pub struct Schedule {
     pub relaxed: bool,
     /// Reordered-kernel work item iteration order.
     pub group_order: GroupOrder,
+    /// Run this step's absorbed elementwise tail as a fused epilogue (the
+    /// default) instead of emitting the unfused step chain. Only
+    /// meaningful for steps the planner found a fuse chain for
+    /// ([`crate::executor::fusion`]); searched as an on/off axis there and
+    /// ignored everywhere else. Fused and unfused chains are
+    /// bitwise-identical by construction, so this is a pure perf knob.
+    pub fuse: bool,
 }
 
 impl Default for Schedule {
@@ -131,6 +138,7 @@ impl Default for Schedule {
             nr: 8,
             relaxed: false,
             group_order: GroupOrder::Forward,
+            fuse: true,
         }
     }
 }
@@ -181,6 +189,7 @@ impl Schedule {
         o.insert("mr", self.mr);
         o.insert("nr", self.nr);
         o.insert("relaxed", self.relaxed);
+        o.insert("fuse", self.fuse);
         o.insert(
             "group_order",
             match self.group_order {
@@ -218,6 +227,10 @@ impl Schedule {
             .get("relaxed")
             .as_bool()
             .ok_or_else(|| anyhow::anyhow!("schedule: missing bool field 'relaxed'"))?;
+        let fuse = j
+            .get("fuse")
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("schedule: missing bool field 'fuse'"))?;
         let num = |key: &str| -> Result<usize> {
             j.get(key)
                 .as_usize()
@@ -235,6 +248,7 @@ impl Schedule {
             nr: num("nr")?,
             relaxed,
             group_order,
+            fuse,
         }
         .sanitized())
     }
@@ -258,6 +272,7 @@ mod tests {
         assert_eq!(s.nr, 8);
         assert!(!s.relaxed);
         assert_eq!(s.group_order, GroupOrder::Forward);
+        assert!(s.fuse, "fusion is on by default");
         assert_eq!(s, s.sanitized(), "the default must already be legal");
     }
 
@@ -311,6 +326,7 @@ mod tests {
             nr: 16,
             relaxed: false,
             group_order: GroupOrder::Reverse,
+            fuse: false,
         };
         let j = s.to_json();
         let back = Schedule::from_json(&j).unwrap();

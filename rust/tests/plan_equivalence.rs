@@ -75,6 +75,7 @@ fn check_app(app: &str, base: Graph) {
             batch: 1,
             force_scalar: false,
             relaxed_simd: false,
+            fuse: true,
         },
     );
     assert_planned_equivalence(

@@ -77,6 +77,7 @@ fn legacy_engine(
         batch,
         force_scalar: false,
         relaxed_simd: false,
+        fuse: true,
     };
     Engine::with_config(&g, &cfg).unwrap()
 }

@@ -308,6 +308,74 @@ fn reordered_group_order_is_tuned_and_matches_default_bitwise() {
     }
 }
 
+/// Plan-time fused compound steps are one more schedule axis (the ROADMAP
+/// fusion item): on a graph whose conv absorbs an act + residual-add tail,
+/// the default plan emits a compound step, the tuned plan searches the
+/// fuse on/off axis (its cache keys carry the `|fa…` tail segment), and —
+/// whichever side the micro-benchmarks pick — tuned, default and
+/// `--no-fuse` plans all agree bit-for-bit.
+#[test]
+fn fused_steps_are_tuned_and_match_default_bitwise() {
+    use prt_dnn::dsl::op::{Activation, Op, PadMode};
+    use prt_dnn::util::rng::Rng;
+
+    let mut rng = Rng::new(91);
+    let mut g = Graph::new("fuse-net");
+    let x = g.add("x", Op::Input { shape: vec![1, 6, 12, 12] }, &[]);
+    let c1 = g.add(
+        "c1",
+        Op::Conv2d {
+            out_c: 6,
+            in_c: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            pad_mode: PadMode::Zeros,
+            fused_act: Activation::Identity,
+        },
+        &[x],
+    );
+    g.set_param("c1.weight", Tensor::randn(&[6, 6, 3, 3], &mut rng));
+    g.set_param("c1.bias", Tensor::randn(&[6], &mut rng).map(|v| v * 0.1));
+    let a = g.add("a", Op::Act(Activation::Relu), &[c1]);
+    let s = g.add("s", Op::Add, &[a, x]);
+    g.add("out", Op::Output, &[s]);
+
+    for &threads in &[1usize, 4] {
+        let cache = tmp(&format!("fuse-t{}", threads));
+        let _ = std::fs::remove_file(&cache);
+
+        let p0 = Planner::plan(&g, &ExecConfig::dense(threads)).unwrap();
+        assert_eq!(p0.fused_steps(), 1, "t={}: default plan must fuse the chain", threads);
+        let p1 = Planner::plan(
+            &g,
+            &ExecConfig::dense(threads).with_tuning(TuneOpts::quick(&cache)),
+        )
+        .unwrap();
+        assert!(p1.tuned());
+        // The fusable request's cache key carries the tail segment — the
+        // fuse axis is part of the persisted schedule space.
+        let text = std::fs::read_to_string(&cache).unwrap();
+        assert!(
+            text.contains("|fa1r1"),
+            "t={}: cache keys must carry the fuse-axis segment: {}",
+            threads,
+            text
+        );
+        let p2 = Planner::plan(&g, &ExecConfig::dense(threads).with_fuse(false)).unwrap();
+        assert_eq!(p2.fused_steps(), 0);
+
+        let x = structured_input(&p0.input_shapes()[0]);
+        let o0 = ExecContext::for_plan(&p0).run(&p0, std::slice::from_ref(&x)).unwrap();
+        let o1 = ExecContext::for_plan(&p1).run(&p1, std::slice::from_ref(&x)).unwrap();
+        let o2 = ExecContext::for_plan(&p2).run(&p2, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(o0[0].data(), o1[0].data(), "t={}: tuned fuse axis moved bits", threads);
+        assert_eq!(o0[0].data(), o2[0].data(), "t={}: fused vs --no-fuse moved bits", threads);
+        let _ = std::fs::remove_file(&cache);
+    }
+}
+
 /// The cache's JSON form is deterministic: parse(serialize(c)) == c and a
 /// second serialization is byte-identical (sorted keys, stable number
 /// formatting) — warm caches diff cleanly across runs.
