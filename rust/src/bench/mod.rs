@@ -103,6 +103,7 @@ pub fn summary_json(s: &Summary) -> Json {
     o.insert("p50_ms", s.p50);
     o.insert("p90_ms", s.p90);
     o.insert("p99_ms", s.p99);
+    o.insert("p999_ms", s.p999);
     o.insert("min_ms", s.min);
     o.insert("max_ms", s.max);
     Json::Obj(o)

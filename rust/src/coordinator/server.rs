@@ -145,6 +145,7 @@ impl ServeReport {
         o.insert("latency_p50_ms", self.latency.p50);
         o.insert("latency_p90_ms", self.latency.p90);
         o.insert("latency_p99_ms", self.latency.p99);
+        o.insert("latency_p999_ms", self.latency.p999);
         o.insert("infer_mean_ms", self.inference.mean);
         o.insert("peak_bytes", self.peak_bytes);
         o.insert("batch", self.batch);
@@ -225,11 +226,14 @@ impl FrameQueue {
             if st.closed {
                 return None;
             }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            // `checked_duration_since` is `None` once `deadline <= now`,
+            // so an already-elapsed deadline returns immediately — never
+            // a zero-duration (or panicking negative) wait.
+            let wait = match deadline.checked_duration_since(Instant::now()) {
+                Some(w) if !w.is_zero() => w,
+                _ => return None,
+            };
+            let (guard, _timeout) = self.cv.wait_timeout(st, wait).unwrap();
             st = guard;
         }
     }
@@ -441,6 +445,37 @@ mod tests {
     fn tiny_engine() -> Engine {
         let g = build_style(32, 0.25, 11);
         Engine::new(&g, 2).unwrap()
+    }
+
+    #[test]
+    fn pop_deadline_elapsed_returns_immediately() {
+        let q = FrameQueue::new(4);
+        // Deadline already in the past + empty queue: must return `None`
+        // at once instead of entering a zero/negative-duration wait.
+        let past = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let t0 = Instant::now();
+        assert!(q.pop_deadline(past).is_none());
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "elapsed deadline must not block: waited {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn pop_deadline_elapsed_still_drains_queued_frames() {
+        // A queued frame is delivered even when the deadline has passed —
+        // the deadline bounds *waiting*, not draining.
+        let q = FrameQueue::new(4);
+        q.push(7, Tensor::zeros(&[1]));
+        let past = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let got = q.pop_deadline(past);
+        assert_eq!(got.map(|(id, _, _)| id), Some(7));
+        // And a closed empty queue returns `None` regardless of deadline.
+        q.close();
+        assert!(q.pop_deadline(Instant::now() + Duration::from_millis(5)).is_none());
     }
 
     #[test]

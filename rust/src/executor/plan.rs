@@ -497,6 +497,25 @@ impl ExecutionPlan {
         self.memory
     }
 
+    /// Identity + size of every *dense* weight buffer this plan holds:
+    /// `(buffer_id, bytes)` per dense conv / depthwise / fully-connected
+    /// step. Tensors are copy-on-write, so the planner's weight "clones"
+    /// share the graph's buffers — the fleet's weight-store accounting
+    /// dedupes across plans by `buffer_id`. Derived sparse encodings
+    /// (CSR / compact) are rebuilt per plan and excluded here.
+    pub(crate) fn dense_weight_buffers(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for st in &self.steps {
+            match &st.step {
+                Step::Conv { exec: ConvExec::Dense { w }, .. }
+                | Step::DwConv { w, .. }
+                | Step::Dense { w, .. } => out.push((w.buffer_id(), w.len() * 4)),
+                _ => {}
+            }
+        }
+        out
+    }
+
     /// Number of steps executing in place (aliasing their input's slot).
     pub fn inplace_steps(&self) -> usize {
         self.steps.iter().filter(|s| s.inplace).count()
@@ -1289,6 +1308,25 @@ mod tests {
         // value, and fusion never needs more than the unfused layout.
         assert!(unfused.arena_len() < no_reuse.arena_len());
         assert!(plan.arena_len() <= unfused.arena_len());
+    }
+
+    #[test]
+    fn plans_share_graph_weight_buffers() {
+        // Tensors are copy-on-write, so compiling K plans from one graph
+        // must *share* every dense weight buffer with the graph (and each
+        // other) — the mechanism behind the fleet's weight dedup.
+        let mut rng = Rng::new(23);
+        let g = residual_graph(&mut rng);
+        let p1 = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        let p2 = Planner::plan(&g, &ExecConfig::dense(2).with_batch(2)).unwrap();
+        let b1 = p1.dense_weight_buffers();
+        let b2 = p2.dense_weight_buffers();
+        assert_eq!(b1.len(), 1, "one dense conv weight expected");
+        assert_eq!(b1, b2, "two plans over one graph share weight buffers");
+        let gw = g.param("c1.weight").unwrap();
+        assert_eq!(b1[0], (gw.buffer_id(), gw.len() * 4));
+        // The accounted bytes match the plan's dense weight_bytes.
+        assert_eq!(b1[0].1, p1.weight_bytes);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Multi-model serving fleet: many [`Session`](crate::session::Session)s
+//! in one process behind an async request router.
+//!
+//! The paper's demo serves three DNN applications (style transfer,
+//! coloring, super resolution) side by side on one device. This module is
+//! that deployment shape at production scale — the layer *above* the
+//! Session front door:
+//!
+//! - **[`WeightStore`]** interns [`Model`](crate::session::Model)s by
+//!   configuration key, so K sessions of one model cost one copy of the
+//!   weights. The dedup itself is structural: tensors are copy-on-write
+//!   (`Arc`-backed buffers), so every plan compiled from one graph already
+//!   shares its dense weight buffers — the store guarantees the *graph* is
+//!   built once, and [`FleetReport::unique_weight_bytes`] accounts buffers
+//!   by identity.
+//! - **[`Fleet`]** hosts N named sessions (apps × variants), each behind a
+//!   bounded per-model request queue. [`Fleet::submit`] is the async entry
+//!   point: it enqueues and returns a [`Ticket`] immediately; admission
+//!   control **rejects new work** with a typed
+//!   [`FleetError::Overloaded`] when the model's queue is full
+//!   (backpressure the caller can see — unlike the single-session serve
+//!   loop, which sheds the *oldest* frame to favor freshness).
+//! - **Cross-request adaptive batching**: each model's workers coalesce up
+//!   to the session's compiled batch from the queue, waiting at most
+//!   [`FleetOpts::max_wait`] after the first request (generalizing the
+//!   single-session `max_wait` coalescing in `coordinator/server.rs`
+//!   across independent callers). Partial batches are padded by repeating
+//!   the last real frame; the batch invariant (batched == sequential,
+//!   bitwise — `batch_equivalence.rs`) makes routing invisible in the
+//!   outputs, which `tests/fleet_equivalence.rs` pins.
+//! - **[`LoadGen`]** drives a fleet with open-loop Poisson arrivals or a
+//!   closed-loop fixed-concurrency client pool, over a configurable
+//!   tenant mix, deterministically under a fixed seed.
+//! - **[`FleetReport`]** extends the serve-report accounting with
+//!   p50/p99/p999 latency, per-model log2 latency histograms and
+//!   queue/reject/dispatch counters.
+//!
+//! Entry points reuse the session front door — a fleet is built *from*
+//! [`SessionBuilder`](crate::session::SessionBuilder)s, never from a
+//! parallel constructor path:
+//!
+//! ```no_run
+//! use prt_dnn::apps::Variant;
+//! use prt_dnn::fleet::{FleetBuilder, WeightStore};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let store = WeightStore::new();
+//! let mut fb = FleetBuilder::new().queue_depth(32).workers(2);
+//! for app in ["style", "coloring", "sr"] {
+//!     let model = store.for_app(app, Variant::PrunedCompiler)?;
+//!     fb = fb.register(app, model.session().threads(2).batch(2))?;
+//! }
+//! let fleet = fb.build()?;
+//! let shapes = fleet.session("style").unwrap().shapes();
+//! let frame = prt_dnn::tensor::Tensor::zeros(&shapes.frame_inputs[0]);
+//! let ticket = fleet.submit("style", vec![frame])?;
+//! let outputs = ticket.wait()?;
+//! # let _ = outputs;
+//! let report = fleet.shutdown();
+//! println!("{}", report.render());
+//! # Ok(())
+//! # }
+//! ```
+
+mod loadgen;
+mod report;
+mod router;
+mod store;
+
+pub use loadgen::{LoadGen, LoadMode, LoadStats};
+pub use report::{FleetReport, ModelStats};
+pub use router::{Fleet, FleetBuilder, FleetOpts, Ticket};
+pub use store::WeightStore;
+
+use std::fmt;
+
+/// Typed fleet errors. Returned through `anyhow::Error`; match with
+/// `err.downcast_ref::<FleetError>()` (same pattern as
+/// [`SessionError`](crate::session::SessionError)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum FleetError {
+    /// The request named a model id the fleet does not host.
+    UnknownModel(String),
+    /// Admission control rejected the request: the model's bounded queue
+    /// was full. Backpressure — the caller should retry later or shed.
+    Overloaded {
+        /// The model whose queue was full.
+        model: String,
+        /// The configured queue depth it was full at.
+        depth: usize,
+    },
+    /// Two registrations used the same model id.
+    DuplicateModel(String),
+    /// [`FleetBuilder::build`] with no registered models.
+    EmptyFleet,
+    /// The request's inputs did not match the model's per-frame shapes.
+    BadInput {
+        /// The model the request was addressed to.
+        model: String,
+        /// What was wrong with the inputs.
+        reason: String,
+    },
+    /// The fleet shut down before this request was dispatched.
+    Closed,
+    /// The model's engine failed while executing the dispatch.
+    Inference {
+        /// The model whose dispatch failed.
+        model: String,
+        /// The rendered engine error.
+        reason: String,
+    },
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::UnknownModel(id) => write!(f, "unknown model id '{}'", id),
+            FleetError::Overloaded { model, depth } => write!(
+                f,
+                "model '{}' overloaded: queue full at depth {} (admission control)",
+                model, depth
+            ),
+            FleetError::DuplicateModel(id) => {
+                write!(f, "model id '{}' registered twice", id)
+            }
+            FleetError::EmptyFleet => write!(f, "fleet has no registered models"),
+            FleetError::BadInput { model, reason } => {
+                write!(f, "bad input for model '{}': {}", model, reason)
+            }
+            FleetError::Closed => write!(f, "fleet shut down before the request ran"),
+            FleetError::Inference { model, reason } => {
+                write!(f, "inference failed for model '{}': {}", model, reason)
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}

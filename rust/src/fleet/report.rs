@@ -1,0 +1,295 @@
+//! Fleet metrics: per-model counters + latency summaries/histograms,
+//! fleet-wide aggregates, human-readable render and machine-readable JSON
+//! (documented in docs/BENCH_SCHEMA.md).
+
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats::{Histogram, Summary};
+use std::time::Duration;
+
+/// Per-model serving statistics inside a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    /// Model id the requests were routed by.
+    pub id: String,
+    /// The hosted session's app name.
+    pub app: String,
+    /// Frames coalesced per dispatch (the session's compiled batch).
+    pub batch: usize,
+    /// Dispatch workers configured for this model.
+    pub workers: usize,
+    /// Bounded queue depth (the admission-control limit).
+    pub queue_depth: usize,
+    /// Requests admitted past admission control.
+    pub submitted: usize,
+    /// Requests rejected by admission control
+    /// ([`FleetError::Overloaded`](super::FleetError::Overloaded)).
+    pub rejected: usize,
+    /// Requests that completed inference.
+    pub completed: usize,
+    /// Requests that failed (engine error or shutdown before dispatch).
+    pub failed: usize,
+    /// Batched dispatches executed.
+    pub dispatches: usize,
+    /// Deepest the queue ever got (instantaneous, post-admit).
+    pub queue_peak: usize,
+    /// `completed / dispatches` — achieved coalescing; approaches
+    /// `batch` under sustained load.
+    pub frames_per_dispatch: f64,
+    /// Serialized weight bytes of this model's plan (pre-dedup; the
+    /// fleet-wide deduped figure is
+    /// [`FleetReport::unique_weight_bytes`]).
+    pub weight_bytes: usize,
+    /// Queue-to-completion latency summary (`None` until something
+    /// completes).
+    pub latency: Option<Summary>,
+    /// Amortized per-request inference time summary.
+    pub inference: Option<Summary>,
+    /// Log2-bucketed queue-to-completion latency histogram.
+    pub hist: Histogram,
+}
+
+/// Aggregated result of a fleet run ([`Fleet::report`](super::Fleet::report)
+/// / [`Fleet::shutdown`](super::Fleet::shutdown)).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Wall-clock time since the fleet started.
+    pub wall: Duration,
+    /// Per-model statistics, in registration order.
+    pub models: Vec<ModelStats>,
+    /// Total requests admitted across all models.
+    pub submitted: usize,
+    /// Total requests rejected by admission control.
+    pub rejected: usize,
+    /// Total requests completed.
+    pub completed: usize,
+    /// Total requests failed.
+    pub failed: usize,
+    /// Weight bytes actually held, deduped by buffer identity: dense
+    /// buffers shared across plans/sessions of one model count **once**
+    /// (copy-on-write tensors), per-plan derived sparse encodings count
+    /// per plan.
+    pub unique_weight_bytes: usize,
+    /// Static peak memory: `unique_weight_bytes` + one arena/scratch
+    /// allotment per dispatch worker per model.
+    pub peak_bytes: usize,
+    /// Fleet-wide queue-to-completion latency over every completed
+    /// request (`None` until something completes).
+    pub latency: Option<Summary>,
+}
+
+impl FleetReport {
+    /// Assemble from per-model stats (aggregates computed here).
+    pub(crate) fn assemble(
+        wall: Duration,
+        models: Vec<ModelStats>,
+        latency_samples: &[f64],
+        unique_weight_bytes: usize,
+        peak_bytes: usize,
+    ) -> Self {
+        let latency = if latency_samples.is_empty() {
+            None
+        } else {
+            Some(Summary::from_samples(latency_samples))
+        };
+        FleetReport {
+            wall,
+            submitted: models.iter().map(|m| m.submitted).sum(),
+            rejected: models.iter().map(|m| m.rejected).sum(),
+            completed: models.iter().map(|m| m.completed).sum(),
+            failed: models.iter().map(|m| m.failed).sum(),
+            unique_weight_bytes,
+            peak_bytes,
+            latency,
+            models,
+        }
+    }
+
+    /// Completed requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet: {} models | wall={:.2}s rps={:.1} | submitted={} completed={} \
+             rejected={} failed={} | weights={} (deduped) peak={}\n",
+            self.models.len(),
+            self.wall.as_secs_f64(),
+            self.throughput_rps(),
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.failed,
+            crate::util::fmt_bytes(self.unique_weight_bytes),
+            crate::util::fmt_bytes(self.peak_bytes),
+        );
+        if let Some(l) = &self.latency {
+            out.push_str(&format!(
+                "  latency ms p50={:.2} p90={:.2} p99={:.2} p999={:.2} max={:.2}\n",
+                l.p50, l.p90, l.p99, l.p999, l.max
+            ));
+        }
+        for m in &self.models {
+            out.push_str(&format!(
+                "  {:<10} batch={} submitted={} completed={} rejected={} \
+                 dispatches={} frames/dispatch={:.2} queue_peak={}/{}",
+                m.id,
+                m.batch,
+                m.submitted,
+                m.completed,
+                m.rejected,
+                m.dispatches,
+                m.frames_per_dispatch,
+                m.queue_peak,
+                m.queue_depth,
+            ));
+            if let Some(l) = &m.latency {
+                out.push_str(&format!(
+                    " | ms p50={:.2} p99={:.2} p999={:.2}",
+                    l.p50, l.p99, l.p999
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable report (`FLEET-JSON` lines; see
+    /// docs/BENCH_SCHEMA.md).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("wall_s", self.wall.as_secs_f64());
+        o.insert("rps", self.throughput_rps());
+        o.insert("submitted", self.submitted);
+        o.insert("completed", self.completed);
+        o.insert("rejected", self.rejected);
+        o.insert("failed", self.failed);
+        o.insert("unique_weight_bytes", self.unique_weight_bytes);
+        o.insert("peak_bytes", self.peak_bytes);
+        if let Some(l) = &self.latency {
+            o.insert("latency_p50_ms", l.p50);
+            o.insert("latency_p90_ms", l.p90);
+            o.insert("latency_p99_ms", l.p99);
+            o.insert("latency_p999_ms", l.p999);
+        }
+        let models: Vec<Json> = self.models.iter().map(model_json).collect();
+        o.insert("models", models);
+        Json::Obj(o)
+    }
+}
+
+fn model_json(m: &ModelStats) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("model", m.id.as_str());
+    o.insert("app", m.app.as_str());
+    o.insert("batch", m.batch);
+    o.insert("workers", m.workers);
+    o.insert("queue_depth", m.queue_depth);
+    o.insert("submitted", m.submitted);
+    o.insert("completed", m.completed);
+    o.insert("rejected", m.rejected);
+    o.insert("failed", m.failed);
+    o.insert("dispatches", m.dispatches);
+    o.insert("frames_per_dispatch", m.frames_per_dispatch);
+    o.insert("queue_peak", m.queue_peak);
+    o.insert("weight_bytes", m.weight_bytes);
+    if let Some(l) = &m.latency {
+        o.insert("latency_p50_ms", l.p50);
+        o.insert("latency_p90_ms", l.p90);
+        o.insert("latency_p99_ms", l.p99);
+        o.insert("latency_p999_ms", l.p999);
+    }
+    if let Some(inf) = &m.inference {
+        o.insert("infer_mean_ms", inf.mean);
+    }
+    o.insert("hist", hist_json(&m.hist));
+    Json::Obj(o)
+}
+
+/// Histogram JSON: parallel `le_ms` / `count` arrays over the non-empty
+/// bucket prefix (`le_ms[i]` is bucket i's inclusive upper edge; the last
+/// bucket of the full histogram is unbounded).
+fn hist_json(h: &Histogram) -> Json {
+    let keep = h.counts().iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+    let mut le_ms: Vec<Json> = Vec::with_capacity(keep);
+    let mut count: Vec<Json> = Vec::with_capacity(keep);
+    for (i, &c) in h.counts().iter().take(keep).enumerate() {
+        le_ms.push(Json::Num(Histogram::upper_ms(i)));
+        count.push(Json::Num(c as f64));
+    }
+    let mut o = JsonObj::new();
+    o.insert("le_ms", le_ms);
+    o.insert("count", count);
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(id: &str, submitted: usize, completed: usize) -> ModelStats {
+        let mut hist = Histogram::new();
+        let samples: Vec<f64> = (0..completed).map(|i| 1.0 + i as f64).collect();
+        for &s in &samples {
+            hist.record_ms(s);
+        }
+        ModelStats {
+            id: id.to_string(),
+            app: id.to_string(),
+            batch: 2,
+            workers: 1,
+            queue_depth: 8,
+            submitted,
+            rejected: submitted.saturating_sub(completed),
+            completed,
+            failed: 0,
+            dispatches: completed / 2,
+            queue_peak: 3,
+            frames_per_dispatch: if completed > 0 { 2.0 } else { 0.0 },
+            weight_bytes: 1024,
+            latency: if samples.is_empty() {
+                None
+            } else {
+                Some(Summary::from_samples(&samples))
+            },
+            inference: None,
+            hist,
+        }
+    }
+
+    #[test]
+    fn aggregates_and_json_shape() {
+        let a = stats("style", 10, 8);
+        let b = stats("sr", 5, 5);
+        let samples: Vec<f64> = (0..13).map(|i| 1.0 + i as f64).collect();
+        let report = FleetReport::assemble(
+            Duration::from_secs(2),
+            vec![a, b],
+            &samples,
+            2048,
+            4096,
+        );
+        assert_eq!(report.submitted, 15);
+        assert_eq!(report.completed, 13);
+        assert_eq!(report.rejected, 2);
+        assert_eq!(report.peak_bytes, 4096);
+        let j = report.to_json();
+        assert_eq!(j.get("submitted").as_usize(), Some(15));
+        assert_eq!(j.get("unique_weight_bytes").as_usize(), Some(2048));
+        assert!(j.get("latency_p999_ms").as_f64().is_some());
+        let models = j.get("models").as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].get("model").as_str(), Some("style"));
+        assert_eq!(models[0].get("rejected").as_usize(), Some(2));
+        let hist = models[0].get("hist");
+        let le = hist.get("le_ms").as_arr().unwrap();
+        let counts = hist.get("count").as_arr().unwrap();
+        assert_eq!(le.len(), counts.len());
+        let total: f64 = counts.iter().filter_map(|c| c.as_f64()).sum();
+        assert_eq!(total as usize, 8);
+        // Human render mentions the headline counters.
+        let r = report.render();
+        assert!(r.contains("submitted=15") && r.contains("p999="));
+    }
+}

@@ -1,0 +1,612 @@
+//! The fleet router: named model hosts, bounded per-model queues with
+//! reject-new admission control, worker threads with cross-request
+//! adaptive batching, and ticket-based async completion.
+
+use super::report::{FleetReport, ModelStats};
+use super::FleetError;
+use crate::session::{Session, SessionBuilder};
+use crate::tensor::Tensor;
+use crate::util::stats::{Histogram, LatencyRecorder};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Fleet-wide router configuration (per-model queues all share it).
+#[derive(Debug, Clone)]
+pub struct FleetOpts {
+    /// Bounded depth of each model's request queue; a submit against a
+    /// full queue is rejected with [`FleetError::Overloaded`].
+    pub queue_depth: usize,
+    /// Adaptive-batching deadline: after a dispatch's first request, its
+    /// worker waits up to this long for the batch to fill before padding
+    /// and dispatching. Zero = opportunistic drain only.
+    pub max_wait: Duration,
+    /// Dispatch workers per model. `0` disables background dispatch —
+    /// requests queue until [`Fleet::pump`] runs a dispatch inline (the
+    /// deterministic mode the admission-control tests use).
+    pub workers: usize,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts { queue_depth: 16, max_wait: Duration::ZERO, workers: 1 }
+    }
+}
+
+/// One queued request: the caller's per-frame inputs plus its completion
+/// ticket.
+struct Request {
+    inputs: Vec<Tensor>,
+    enqueued: Instant,
+    ticket: Arc<TicketState>,
+}
+
+struct TicketState {
+    done: Mutex<Option<Result<Vec<Tensor>, FleetError>>>,
+    cv: Condvar,
+}
+
+fn fulfill(ticket: &Arc<TicketState>, result: Result<Vec<Tensor>, FleetError>) {
+    *ticket.done.lock().unwrap() = Some(result);
+    ticket.cv.notify_all();
+}
+
+/// Handle to an admitted request ([`Fleet::submit`]): redeem with
+/// [`Ticket::wait`] for the outputs once a dispatch completes it.
+pub struct Ticket {
+    state: Arc<TicketState>,
+}
+
+impl Ticket {
+    /// Block until the request completes; returns the model's per-frame
+    /// outputs, or the typed error that ended it
+    /// ([`FleetError::Closed`] on shutdown, [`FleetError::Inference`] on
+    /// an engine failure).
+    pub fn wait(self) -> Result<Vec<Tensor>> {
+        let mut done = self.state.done.lock().unwrap();
+        while done.is_none() {
+            done = self.state.cv.wait(done).unwrap();
+        }
+        done.take().unwrap().map_err(Into::into)
+    }
+}
+
+struct ReqQueueState {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded MPMC request queue with **reject-new** admission control:
+/// unlike the serve loop's drop-oldest `FrameQueue` (freshness for live
+/// video), a fleet caller holds a ticket for every admitted request, so
+/// admitted work is never silently shed — the queue refuses *new* work
+/// instead and the caller sees the rejection.
+struct ReqQueue {
+    state: Mutex<ReqQueueState>,
+    cv: Condvar,
+    depth: usize,
+}
+
+impl ReqQueue {
+    fn new(depth: usize) -> Self {
+        ReqQueue {
+            state: Mutex::new(ReqQueueState { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Admit `req` unless the queue is full or closed; on success returns
+    /// the queue depth after the push (for peak tracking).
+    fn try_push(&self, req: Request) -> Result<usize, Request> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.q.len() >= self.depth {
+            return Err(req);
+        }
+        st.q.push_back(req);
+        let depth_now = st.q.len();
+        drop(st);
+        self.cv.notify_one();
+        Ok(depth_now)
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    fn pop(&self) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(req) = st.q.pop_front() {
+                return Some(req);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    fn try_pop(&self) -> Option<Request> {
+        self.state.lock().unwrap().q.pop_front()
+    }
+
+    /// Deadline pop: block for a request until `deadline`, then give up.
+    /// An already-elapsed deadline returns immediately (same hardening as
+    /// `FrameQueue::pop_deadline`).
+    fn pop_deadline(&self, deadline: Instant) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(req) = st.q.pop_front() {
+                return Some(req);
+            }
+            if st.closed {
+                return None;
+            }
+            let wait = match deadline.checked_duration_since(Instant::now()) {
+                Some(w) if !w.is_zero() => w,
+                _ => return None,
+            };
+            let (guard, _timeout) = self.cv.wait_timeout(st, wait).unwrap();
+            st = guard;
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Per-model serving counters (all monotonic; read at report time).
+#[derive(Default)]
+struct HostStats {
+    submitted: AtomicUsize,
+    rejected: AtomicUsize,
+    completed: AtomicUsize,
+    failed: AtomicUsize,
+    dispatches: AtomicUsize,
+    queue_peak: AtomicUsize,
+    latency: Mutex<LatencyRecorder>,
+    inference: Mutex<LatencyRecorder>,
+    hist: Mutex<Histogram>,
+}
+
+/// One hosted model: a session, its bounded queue and its counters.
+struct ModelHost {
+    id: String,
+    session: Arc<Session>,
+    queue: ReqQueue,
+    stats: HostStats,
+}
+
+/// Run one dispatch: coalesce up to the session's batch starting from
+/// `first`, pad, execute, fulfill every ticket. Returns the number of
+/// real (non-padded) requests completed or failed.
+fn dispatch(host: &ModelHost, first: Request, max_wait: Duration) -> usize {
+    let nb = host.session.batch().max(1);
+    let mut reqs: Vec<Request> = Vec::with_capacity(nb);
+    reqs.push(first);
+    if nb > 1 {
+        let deadline = Instant::now() + max_wait;
+        while reqs.len() < nb {
+            let next = if max_wait.is_zero() {
+                host.queue.try_pop()
+            } else {
+                host.queue.pop_deadline(deadline)
+            };
+            match next {
+                Some(req) => reqs.push(req),
+                None => break,
+            }
+        }
+    }
+    let real = reqs.len();
+    // Pad a partial batch by repeating the last real frame — the batch
+    // dimension is data-parallel (batch_equivalence.rs), so pad slots
+    // cannot perturb real outputs; they are computed and discarded.
+    let frames: Vec<&[Tensor]> =
+        (0..nb).map(|i| reqs[i.min(real - 1)].inputs.as_slice()).collect();
+    let t0 = Instant::now();
+    match host.session.run_frames(&frames) {
+        Ok(mut outs) => {
+            let now = Instant::now();
+            // Amortized per-request inference share; queue latency stays
+            // per real request.
+            let share_ms = (now - t0).as_secs_f64() * 1e3 / real as f64;
+            {
+                let mut inf = host.stats.inference.lock().unwrap();
+                let mut lat = host.stats.latency.lock().unwrap();
+                let mut hist = host.stats.hist.lock().unwrap();
+                for req in &reqs {
+                    inf.record_ms(share_ms);
+                    let ms = (now - req.enqueued).as_secs_f64() * 1e3;
+                    lat.record_ms(ms);
+                    hist.record_ms(ms);
+                }
+            }
+            outs.truncate(real);
+            for (req, out) in reqs.into_iter().zip(outs) {
+                fulfill(&req.ticket, Ok(out));
+            }
+            host.stats.completed.fetch_add(real, Ordering::Relaxed);
+            host.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => {
+            let reason = format!("{:#}", e);
+            host.stats.failed.fetch_add(real, Ordering::Relaxed);
+            host.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+            for req in reqs {
+                fulfill(
+                    &req.ticket,
+                    Err(FleetError::Inference {
+                        model: host.id.clone(),
+                        reason: reason.clone(),
+                    }),
+                );
+            }
+        }
+    }
+    real
+}
+
+fn worker_loop(host: &ModelHost, max_wait: Duration) {
+    while let Some(first) = host.queue.pop() {
+        let _ = dispatch(host, first, max_wait);
+    }
+}
+
+/// Builder for a [`Fleet`]: register named sessions (built through the
+/// session front door), pick router options, [`FleetBuilder::build`].
+pub struct FleetBuilder {
+    entries: Vec<(String, Arc<Session>)>,
+    opts: FleetOpts,
+}
+
+impl Default for FleetBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FleetBuilder {
+    /// Empty builder with default [`FleetOpts`].
+    pub fn new() -> Self {
+        FleetBuilder { entries: Vec::new(), opts: FleetOpts::default() }
+    }
+
+    /// Set every model's bounded queue depth (admission-control limit).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.opts.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Set the adaptive-batching deadline (see [`FleetOpts::max_wait`]).
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.opts.max_wait = max_wait;
+        self
+    }
+
+    /// Set dispatch workers per model (see [`FleetOpts::workers`]).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.opts.workers = workers;
+        self
+    }
+
+    /// Register `id` → the session this builder compiles. The one front
+    /// door: fleet sessions are ordinary [`SessionBuilder`] products, so
+    /// every session knob (threads, batch, format, tuning, fusion)
+    /// composes with routing.
+    pub fn register(self, id: &str, session: SessionBuilder<'_>) -> Result<Self> {
+        self.register_session(id, session.build()?)
+    }
+
+    /// Register an already-built session under `id`.
+    pub fn register_session(self, id: &str, session: Session) -> Result<Self> {
+        self.register_shared(id, Arc::new(session))
+    }
+
+    /// Register a *shared* session under `id`: replicas of one model (two
+    /// ids over one `Arc<Session>`) share its engine — and its weights —
+    /// outright.
+    pub fn register_shared(mut self, id: &str, session: Arc<Session>) -> Result<Self> {
+        if self.entries.iter().any(|(name, _)| name == id) {
+            return Err(FleetError::DuplicateModel(id.to_string()).into());
+        }
+        self.entries.push((id.to_string(), session));
+        Ok(self)
+    }
+
+    /// Spin up the fleet: one bounded queue per model plus
+    /// [`FleetOpts::workers`] dispatch threads per model.
+    pub fn build(self) -> Result<Fleet> {
+        if self.entries.is_empty() {
+            return Err(FleetError::EmptyFleet.into());
+        }
+        let opts = self.opts;
+        let mut hosts = Vec::with_capacity(self.entries.len());
+        let mut index = HashMap::new();
+        for (pos, (id, session)) in self.entries.into_iter().enumerate() {
+            index.insert(id.clone(), pos);
+            hosts.push(Arc::new(ModelHost {
+                id,
+                session,
+                queue: ReqQueue::new(opts.queue_depth),
+                stats: HostStats::default(),
+            }));
+        }
+        let mut workers = Vec::with_capacity(hosts.len() * opts.workers);
+        for host in &hosts {
+            for _ in 0..opts.workers {
+                let host = Arc::clone(host);
+                let max_wait = opts.max_wait;
+                workers.push(std::thread::spawn(move || worker_loop(&host, max_wait)));
+            }
+        }
+        Ok(Fleet { hosts, index, opts, workers, started: Instant::now() })
+    }
+}
+
+/// A running multi-model server: N named sessions behind per-model
+/// bounded queues and dispatch workers. See the [module docs](super).
+pub struct Fleet {
+    hosts: Vec<Arc<ModelHost>>,
+    index: HashMap<String, usize>,
+    opts: FleetOpts,
+    workers: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Fleet {
+    fn host(&self, model: &str) -> Result<&Arc<ModelHost>> {
+        match self.index.get(model) {
+            Some(&pos) => Ok(&self.hosts[pos]),
+            None => Err(FleetError::UnknownModel(model.to_string()).into()),
+        }
+    }
+
+    /// Registered model ids, in registration order.
+    pub fn ids(&self) -> Vec<&str> {
+        self.hosts.iter().map(|h| h.id.as_str()).collect()
+    }
+
+    /// The session hosted under `model`, if registered.
+    pub fn session(&self, model: &str) -> Option<&Arc<Session>> {
+        self.index.get(model).map(|&pos| &self.hosts[pos].session)
+    }
+
+    /// Configured dispatch workers per model.
+    pub fn workers_per_model(&self) -> usize {
+        self.opts.workers
+    }
+
+    /// Submit one request (per-frame inputs) to `model`. Non-blocking:
+    /// validates the model id and input shapes, runs admission control,
+    /// and returns a [`Ticket`] on acceptance. Typed failures:
+    /// [`FleetError::UnknownModel`], [`FleetError::BadInput`],
+    /// [`FleetError::Overloaded`] (queue full — backpressure).
+    pub fn submit(&self, model: &str, inputs: Vec<Tensor>) -> Result<Ticket> {
+        let host = self.host(model)?;
+        let expect = host.session.shapes().frame_inputs;
+        if inputs.len() != expect.len() {
+            return Err(FleetError::BadInput {
+                model: host.id.clone(),
+                reason: format!("expected {} inputs, got {}", expect.len(), inputs.len()),
+            }
+            .into());
+        }
+        for (k, t) in inputs.iter().enumerate() {
+            if t.shape() != expect[k].as_slice() {
+                return Err(FleetError::BadInput {
+                    model: host.id.clone(),
+                    reason: format!(
+                        "input {} shape {:?} != expected {:?}",
+                        k,
+                        t.shape(),
+                        expect[k]
+                    ),
+                }
+                .into());
+            }
+        }
+        let state = Arc::new(TicketState { done: Mutex::new(None), cv: Condvar::new() });
+        let req =
+            Request { inputs, enqueued: Instant::now(), ticket: Arc::clone(&state) };
+        match host.queue.try_push(req) {
+            Ok(depth_now) => {
+                host.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                host.stats.queue_peak.fetch_max(depth_now, Ordering::Relaxed);
+                Ok(Ticket { state })
+            }
+            Err(_rejected) => {
+                host.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(FleetError::Overloaded {
+                    model: host.id.clone(),
+                    depth: self.opts.queue_depth,
+                }
+                .into())
+            }
+        }
+    }
+
+    /// Submit and wait: the synchronous convenience form of
+    /// [`Fleet::submit`].
+    pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.submit(model, inputs)?.wait()
+    }
+
+    /// Run one dispatch for `model` inline on the caller's thread — the
+    /// deterministic form of the worker loop, for `workers == 0` fleets.
+    /// Returns the number of requests the dispatch completed (0 when the
+    /// queue was empty).
+    pub fn pump(&self, model: &str) -> Result<usize> {
+        let host = self.host(model)?;
+        match host.queue.try_pop() {
+            Some(first) => Ok(dispatch(host, first, Duration::ZERO)),
+            None => Ok(0),
+        }
+    }
+
+    /// Current queue depth for `model` (an instantaneous reading).
+    pub fn queue_len(&self, model: &str) -> Result<usize> {
+        let host = self.host(model)?;
+        Ok(host.queue.state.lock().unwrap().q.len())
+    }
+
+    /// Snapshot the fleet's metrics (callable while serving).
+    pub fn report(&self) -> FleetReport {
+        let mut models = Vec::with_capacity(self.hosts.len());
+        let mut all_latency: Vec<f64> = Vec::new();
+        for host in &self.hosts {
+            let latency = host.stats.latency.lock().unwrap().clone();
+            all_latency.extend_from_slice(latency.samples());
+            let completed = host.stats.completed.load(Ordering::Relaxed);
+            let dispatches = host.stats.dispatches.load(Ordering::Relaxed);
+            models.push(ModelStats {
+                id: host.id.clone(),
+                app: host.session.app().to_string(),
+                batch: host.session.batch(),
+                workers: self.opts.workers,
+                queue_depth: self.opts.queue_depth,
+                submitted: host.stats.submitted.load(Ordering::Relaxed),
+                rejected: host.stats.rejected.load(Ordering::Relaxed),
+                completed,
+                failed: host.stats.failed.load(Ordering::Relaxed),
+                dispatches,
+                queue_peak: host.stats.queue_peak.load(Ordering::Relaxed),
+                frames_per_dispatch: completed as f64 / dispatches.max(1) as f64,
+                weight_bytes: host.session.weight_bytes(),
+                latency: latency.summary(),
+                inference: host.stats.inference.lock().unwrap().summary(),
+                hist: host.stats.hist.lock().unwrap().clone(),
+            });
+        }
+        let unique_weight_bytes = self.unique_weight_bytes();
+        // Arena + scratch (and compute pool) per dispatch worker per
+        // model; weights counted once across the whole fleet. `pump`-mode
+        // fleets (workers == 0) still borrow one engine-pool context.
+        let context_bytes: usize = self
+            .hosts
+            .iter()
+            .map(|h| self.opts.workers.max(1) * h.session.memory().shared_bytes)
+            .sum();
+        FleetReport::assemble(
+            self.started.elapsed(),
+            models,
+            &all_latency,
+            unique_weight_bytes,
+            unique_weight_bytes + context_bytes,
+        )
+    }
+
+    /// Weight bytes the fleet actually holds, deduped by buffer identity:
+    /// dense weight buffers shared across plans (copy-on-write tensors)
+    /// count once; per-plan derived encodings (CSR / compact) count per
+    /// plan. Replicas sharing one `Arc<Session>` count once outright.
+    fn unique_weight_bytes(&self) -> usize {
+        let mut seen_plans: HashSet<usize> = HashSet::new();
+        let mut seen_buffers: HashSet<usize> = HashSet::new();
+        let mut total = 0usize;
+        for host in &self.hosts {
+            let plan = host.session.plan();
+            if !seen_plans.insert(plan as *const _ as usize) {
+                continue; // replica of an already-counted session
+            }
+            let dense = plan.dense_weight_buffers();
+            let dense_total: usize = dense.iter().map(|&(_, bytes)| bytes).sum();
+            for (buffer, bytes) in dense {
+                if seen_buffers.insert(buffer) {
+                    total += bytes;
+                }
+            }
+            // Everything weight_bytes counts beyond the dense buffers is
+            // a per-plan derived encoding — owned, never shared.
+            total += plan.weight_bytes.saturating_sub(dense_total);
+        }
+        total
+    }
+
+    fn close_and_join(&mut self) {
+        for host in &self.hosts {
+            host.queue.close();
+        }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+        // Workers drain the queues before exiting; anything still queued
+        // (workers == 0 pump mode) fails over to a typed Closed error so
+        // no ticket waits forever.
+        for host in &self.hosts {
+            while let Some(req) = host.queue.try_pop() {
+                host.stats.failed.fetch_add(1, Ordering::Relaxed);
+                fulfill(&req.ticket, Err(FleetError::Closed));
+            }
+        }
+    }
+
+    /// Graceful shutdown: close every queue, let workers drain them, join
+    /// the workers, and return the final [`FleetReport`]. Undispatched
+    /// requests (possible only in `workers == 0` pump mode) fail their
+    /// tickets with [`FleetError::Closed`].
+    pub fn shutdown(mut self) -> FleetReport {
+        self.close_and_join();
+        self.report()
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(v: f32) -> Request {
+        Request {
+            inputs: vec![Tensor::full(&[1], v)],
+            enqueued: Instant::now(),
+            ticket: Arc::new(TicketState { done: Mutex::new(None), cv: Condvar::new() }),
+        }
+    }
+
+    #[test]
+    fn req_queue_rejects_new_when_full() {
+        let q = ReqQueue::new(2);
+        assert_eq!(q.try_push(req(1.0)).map_err(|_| ()), Ok(1));
+        assert_eq!(q.try_push(req(2.0)).map_err(|_| ()), Ok(2));
+        // Reject-new: the *incoming* request bounces, queued work stays.
+        assert!(q.try_push(req(3.0)).is_err());
+        let first = q.pop().unwrap();
+        assert_eq!(first.inputs[0].data(), &[1.0]);
+        assert_eq!(q.try_push(req(4.0)).map_err(|_| ()), Ok(2));
+    }
+
+    #[test]
+    fn req_queue_elapsed_deadline_returns_immediately() {
+        let q = ReqQueue::new(2);
+        let past = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let t0 = Instant::now();
+        assert!(q.pop_deadline(past).is_none());
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        // Queued work still drains past the deadline.
+        assert!(q.try_push(req(1.0)).is_ok());
+        assert!(q.pop_deadline(past).is_some());
+    }
+
+    #[test]
+    fn req_queue_close_wakes_and_drains() {
+        let q = ReqQueue::new(4);
+        assert!(q.try_push(req(1.0)).is_ok());
+        q.close();
+        // Closed queues refuse new work but still drain.
+        assert!(q.try_push(req(2.0)).is_err());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+        assert!(q.pop_deadline(Instant::now() + Duration::from_millis(50)).is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! Process-level interning of [`Model`]s: the fleet's shared immutable
+//! weight store.
+//!
+//! K sessions of one model must cost one copy of the weights. Two layers
+//! make that true:
+//!
+//! 1. Tensors are copy-on-write (`Arc`-backed buffers), so every plan the
+//!    planner compiles from one graph *shares* the graph's dense weight
+//!    buffers — the planner's per-plan weight "clones" are pointer copies.
+//! 2. This store interns whole [`Model`]s by configuration key, so
+//!    concurrent callers asking for the same (app, variant, width, seed)
+//!    get the same `Arc<Model>` — the graph (and its pruning + pass
+//!    pipeline) is built once per process, not once per session.
+//!
+//! Derived sparse encodings (CSR / compact) are rebuilt per plan by
+//! design — they depend on the plan's storage format — and are accounted
+//! as per-plan bytes by [`FleetReport`](super::FleetReport).
+
+use crate::apps::Variant;
+use crate::session::Model;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared immutable model store, keyed by configuration.
+///
+/// Cheap to share (`&WeightStore` is `Sync`); one per process is the
+/// intended shape.
+#[derive(Debug, Default)]
+pub struct WeightStore {
+    models: Mutex<HashMap<String, Arc<Model>>>,
+}
+
+impl WeightStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern the model for `key`, building it with `build` on first use.
+    ///
+    /// The lock is held across the build: a second caller racing on the
+    /// same key waits and receives the first caller's model instead of
+    /// building a duplicate copy of the weights.
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<Model>,
+    ) -> Result<Arc<Model>> {
+        let mut models = self.models.lock().unwrap();
+        if let Some(found) = models.get(key) {
+            return Ok(Arc::clone(found));
+        }
+        let built = Arc::new(build()?);
+        models.insert(key.to_string(), Arc::clone(&built));
+        Ok(built)
+    }
+
+    /// [`Model::for_app`] through the store (width 1.0, the default seed).
+    pub fn for_app(&self, app: &str, variant: Variant) -> Result<Arc<Model>> {
+        self.for_app_scaled(app, variant, 1.0, 42)
+    }
+
+    /// [`Model::for_app_scaled`] through the store.
+    pub fn for_app_scaled(
+        &self,
+        app: &str,
+        variant: Variant,
+        width: f64,
+        seed: u64,
+    ) -> Result<Arc<Model>> {
+        let key = format!("{}|{}|{}|{}", app, variant.name(), width, seed);
+        self.get_or_build(&key, || Model::for_app_scaled(app, variant, width, seed))
+    }
+
+    /// Number of interned models.
+    pub fn len(&self) -> usize {
+        self.models.lock().unwrap().len()
+    }
+
+    /// Whether the store holds no models.
+    pub fn is_empty(&self) -> bool {
+        self.models.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interns_by_key() {
+        let store = WeightStore::new();
+        assert!(store.is_empty());
+        let a = store.for_app_scaled("style", Variant::Unpruned, 0.25, 7).unwrap();
+        let b = store.for_app_scaled("style", Variant::Unpruned, 0.25, 7).unwrap();
+        // Same key → the same Arc'd model, not a second copy.
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(store.len(), 1);
+        // A different config builds (and interns) a distinct model.
+        let c = store.for_app_scaled("style", Variant::Pruned, 0.25, 7).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn build_errors_are_not_cached() {
+        let store = WeightStore::new();
+        assert!(store.for_app("no-such-app", Variant::Unpruned).is_err());
+        assert!(store.is_empty());
+    }
+}

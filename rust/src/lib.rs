@@ -14,7 +14,9 @@
 //!   ([`runtime`]), a frame-stream serving coordinator ([`coordinator`]) and a
 //!   mobile-GPU analytical cost model ([`perfmodel`]) — all fronted by the
 //!   builder-first [`session`] API (`Model::for_app(..).session()
-//!   .threads(n).batch(n).build()` → run / serve).
+//!   .threads(n).batch(n).build()` → run / serve), with the multi-model
+//!   serving [`fleet`] (shared weight store, admission-controlled router,
+//!   load generator) layered on top.
 //! * **Layer 2 (python/compile)** — the three demo DNNs (style transfer,
 //!   coloring, super resolution) in JAX, plus ADMM structured pruning;
 //!   lowered once to HLO text artifacts.
@@ -43,6 +45,7 @@ pub mod perfmodel;
 pub mod coordinator;
 pub mod apps;
 pub mod session;
+pub mod fleet;
 pub mod image;
 pub mod bench;
 

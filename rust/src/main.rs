@@ -6,6 +6,8 @@
 //! prt-dnn run --app sr --variant pruning+compiler [--threads 4] [--batch 4]
 //! prt-dnn run --app sr --tune [--tune-cache .tune-cache.json]
 //! prt-dnn serve --app coloring --fps 30 --frames 120 [--tune] [--batch 4] [--max-wait-ms 5]
+//! prt-dnn fleet --apps style,coloring,sr --mode closed --concurrency 4 --requests 120
+//! prt-dnn fleet --apps style,sr --mode open --rps 60 --mix style=2,sr=1 --json
 //! prt-dnn model --app style                     # modeled Adreno-640 ms/variant
 //! prt-dnn artifacts [--dir artifacts]           # list + smoke-run artifacts
 //! ```
@@ -25,6 +27,12 @@
 //! `--no-fuse` disables plan-time operator fusion (compound
 //! conv+bias+act(+add) steps — see `docs/ARCHITECTURE.md` §Fusion); the
 //! unfused plan is the bitwise reference the fused one is tested against.
+//! `fleet` serves several models at once behind per-model bounded queues
+//! (see `docs/ARCHITECTURE.md` §Fleet): `--mode closed --concurrency N`
+//! keeps N requests in flight, `--mode open --rps R` offers Poisson
+//! arrivals and counts admission-control rejections, `--mix a=2,b=1`
+//! weights the tenant mix, and `--json` emits a `FLEET-JSON` line
+//! (schema in `docs/BENCH_SCHEMA.md`).
 //!
 //! Every command drives the `session` front door: `Model::for_app` →
 //! `.session().threads(..).batch(..).tune(..).build()` → run / serve.
@@ -33,6 +41,7 @@ use anyhow::{bail, Context, Result};
 use prt_dnn::apps::{build_app, AppSpec, Variant};
 use prt_dnn::bench::{bench_auto_ms, ms, speedup, Table};
 use prt_dnn::dsl::Graph;
+use prt_dnn::fleet::{FleetBuilder, LoadGen, WeightStore};
 use prt_dnn::image::synth::FrameStream;
 use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
@@ -63,12 +72,13 @@ fn run(args: &Args) -> Result<()> {
         Some("compile") => cmd_compile(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("fleet") => cmd_fleet(args),
         Some("model") => cmd_model(args),
         Some("artifacts") => cmd_artifacts(args),
         Some(other) => bail!("unknown subcommand '{}'", other),
         None => {
             println!("prt-dnn — real-time DNN inference with pruning + compiler optimization");
-            println!("subcommands: apps | compile | run | serve | model | artifacts");
+            println!("subcommands: apps | compile | run | serve | fleet | model | artifacts");
             Ok(())
         }
     }
@@ -286,6 +296,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fps,
         if report.is_realtime(fps) { "YES" } else { "NO" }
     );
+    Ok(())
+}
+
+/// `--mix a=2,b=1` → weighted tenant mix (`a` alone means weight 1).
+fn parse_mix(spec: &str) -> Result<Vec<(String, f64)>> {
+    let mut mix = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        match part.split_once('=') {
+            Some((id, w)) => {
+                let weight: f64 = w
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad mix weight '{}' for '{}'", w, id))?;
+                mix.push((id.trim().to_string(), weight));
+            }
+            None => mix.push((part.to_string(), 1.0)),
+        }
+    }
+    Ok(mix)
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let apps: Vec<&str> = args
+        .get_or("apps", "style,coloring,sr")
+        .split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .collect();
+    let width = args.get_f64("width", 1.0);
+    let threads = args.get_usize("threads", prt_dnn::util::num_threads());
+    let batch = args.get_usize("batch", 1).max(1);
+    let variant = Variant::parse(args.get_or("variant", "pruning+compiler"))?;
+    let requests = args.get_usize("requests", 120);
+    let seed = args.get_usize("seed", 7) as u64;
+
+    // One weight copy per (app, variant, width) no matter how many hosts.
+    let store = WeightStore::new();
+    let mut builder = FleetBuilder::new()
+        .queue_depth(args.get_usize("queue", 16))
+        .max_wait(std::time::Duration::from_millis(
+            args.get_usize("max-wait-ms", 2) as u64
+        ))
+        .workers(args.get_usize("workers", 1));
+    for app in &apps {
+        let model = store.for_app_scaled(app, variant, width, 42)?;
+        builder = builder.register(
+            app,
+            model
+                .session()
+                .threads(threads)
+                .batch(batch)
+                .tune(tune_opts(args))
+                .force_scalar(args.has_flag("force-scalar"))
+                .relaxed_simd(args.has_flag("relaxed-simd"))
+                .fuse(!args.has_flag("no-fuse")),
+        )?;
+    }
+    let fleet = builder.build()?;
+
+    let mode = args.get_or("mode", "closed");
+    let mut gen = match mode {
+        "open" => LoadGen::open(args.get_f64("rps", 60.0), requests, seed),
+        "closed" => LoadGen::closed(args.get_usize("concurrency", 4), requests, seed),
+        other => bail!("unknown --mode '{}' (open|closed)", other),
+    };
+    if let Some(spec) = args.get("mix") {
+        gen = gen.mix(parse_mix(spec)?);
+    }
+    println!(
+        "fleet: {:?} [{}] threads={} batch={} | {} loop, {} requests, seed {}…",
+        apps,
+        variant.name(),
+        threads,
+        batch,
+        mode,
+        requests,
+        seed
+    );
+    let stats = gen.run(&fleet)?;
+    println!(
+        "loadgen: offered={} accepted={} rejected={} failed={} wall={} ms",
+        stats.offered, stats.accepted, stats.rejected, stats.failed, stats.wall_ms
+    );
+    let report = fleet.shutdown();
+    print!("{}", report.render());
+    if args.has_flag("json") {
+        println!("FLEET-JSON {}", report.to_json());
+    }
     Ok(())
 }
 

@@ -53,6 +53,13 @@ pub use session::{ServeOpts, Session, SessionBuilder, SessionOptions, Shapes};
 
 pub use crate::coordinator::ServeReport;
 
+// Multi-model serving stays behind the same front door: a fleet is built
+// by *registering* `SessionBuilder`s ([`FleetBuilder::register`]), never
+// through a parallel constructor path, so every session knob composes
+// with routing. Re-exported here so the front door names the whole
+// serving surface; the subsystem lives in [`crate::fleet`].
+pub use crate::fleet::{Fleet, FleetBuilder, FleetError, WeightStore};
+
 /// How a session stores + executes pruned conv layers. The session-level
 /// mirror of the executor's [`SparseMode`](crate::executor::SparseMode);
 /// defaults per [`Variant`](crate::apps::Variant) via

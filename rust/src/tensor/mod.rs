@@ -1,16 +1,24 @@
 //! Dense f32 tensor in row-major (NCHW for activations, OIHW for conv
 //! weights) layout — the runtime data type of the native executor.
+//!
+//! The element buffer is `Arc`-backed with copy-on-write semantics:
+//! `clone()` shares the buffer (so every plan compiled from one graph
+//! shares one copy of each dense weight — the fleet's weight dedup rests
+//! on this), and the first `data_mut()` on a *shared* tensor splits off a
+//! private copy. A uniquely-held tensor mutates in place, so steady-state
+//! executor writes stay allocation-free.
 
 pub mod npy;
 
 use crate::util::rng::Rng;
 use std::fmt;
+use std::sync::Arc;
 
-/// Dense row-major f32 tensor.
+/// Dense row-major f32 tensor with a shared, copy-on-write buffer.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl fmt::Debug for Tensor {
@@ -34,7 +42,7 @@ impl Tensor {
     /// Zero-filled tensor.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![0.0; n]) }
     }
 
     /// Tensor from existing data; length must match the shape product.
@@ -46,13 +54,13 @@ impl Tensor {
             shape,
             data.len()
         );
-        Tensor { shape: shape.to_vec(), data }
+        Tensor { shape: shape.to_vec(), data: Arc::new(data) }
     }
 
     /// Constant-filled tensor.
     pub fn full(shape: &[usize], v: f32) -> Self {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![v; n]) }
     }
 
     /// He-initialised random tensor (std = sqrt(2 / fan_in)).
@@ -64,7 +72,7 @@ impl Tensor {
             shape.iter().product::<usize>().max(1)
         };
         let std = (2.0 / fan_in as f32).sqrt();
-        rng.fill_normal(&mut t.data, std);
+        rng.fill_normal(t.data_mut(), std);
         t
     }
 
@@ -90,17 +98,30 @@ impl Tensor {
 
     /// Flat row-major data.
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
-    /// Mutable flat row-major data.
+    /// Mutable flat row-major data (copy-on-write: splits off a private
+    /// buffer first if this tensor currently shares one; in-place and
+    /// allocation-free when uniquely held).
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        Arc::make_mut(&mut self.data).as_mut_slice()
     }
 
-    /// Consume into the flat data vector.
+    /// Whether two tensors share the same underlying buffer.
+    pub fn ptr_eq(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// Address of the underlying shared buffer (identity for dedup
+    /// accounting — two tensors with equal `buffer_id` hold one copy).
+    pub fn buffer_id(&self) -> usize {
+        self.data.as_ptr() as usize
+    }
+
+    /// Consume into the flat data vector (no copy when uniquely held).
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| (*shared).clone())
     }
 
     /// Reshape in place (same element count).
@@ -138,14 +159,14 @@ impl Tensor {
     /// NCHW element write (rank-4 tensors).
     pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
         let i = self.idx4(n, c, h, w);
-        self.data[i] = v;
+        self.data_mut()[i] = v;
     }
 
     /// Elementwise map into a new tensor.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
         Tensor {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|&x| f(x)).collect(),
+            data: Arc::new(self.data.iter().map(|&x| f(x)).collect()),
         }
     }
 
@@ -154,12 +175,13 @@ impl Tensor {
         assert_eq!(self.shape, other.shape, "zip shape mismatch");
         Tensor {
             shape: self.shape.clone(),
-            data: self
-                .data
-                .iter()
-                .zip(other.data.iter())
-                .map(|(&a, &b)| f(a, b))
-                .collect(),
+            data: Arc::new(
+                self.data
+                    .iter()
+                    .zip(other.data.iter())
+                    .map(|(&a, &b)| f(a, b))
+                    .collect(),
+            ),
         }
     }
 
@@ -257,5 +279,23 @@ mod tests {
         let r = t.clone().reshape(&[3, 2]);
         assert_eq!(r.shape(), &[3, 2]);
         assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    fn clone_shares_buffer_until_write() {
+        let a = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = a.clone();
+        // A clone is a shallow buffer share (one copy of the elements)…
+        assert!(a.ptr_eq(&b));
+        assert_eq!(a.buffer_id(), b.buffer_id());
+        // …until the first write, which splits off a private copy.
+        b.data_mut()[0] = 5.0;
+        assert!(!a.ptr_eq(&b));
+        assert_eq!(a.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.data(), &[5.0, 2.0, 3.0, 4.0]);
+        // A uniquely-held tensor mutates in place (buffer identity stable).
+        let id = b.buffer_id();
+        b.data_mut()[1] = 9.0;
+        assert_eq!(b.buffer_id(), id);
     }
 }

@@ -20,6 +20,8 @@ pub struct Summary {
     pub p90: f64,
     /// 99th percentile.
     pub p99: f64,
+    /// 99.9th percentile (tail latency; equals `max` for small samples).
+    pub p999: f64,
     /// Largest sample.
     pub max: f64,
 }
@@ -41,6 +43,7 @@ impl Summary {
             p50: percentile_sorted(&s, 0.50),
             p90: percentile_sorted(&s, 0.90),
             p99: percentile_sorted(&s, 0.99),
+            p999: percentile_sorted(&s, 0.999),
             max: s[n - 1],
         }
     }
@@ -97,6 +100,12 @@ impl LatencyRecorder {
         self.samples_ms.is_empty()
     }
 
+    /// The raw recorded samples, in milliseconds (lets callers merge
+    /// recorders, e.g. the fleet's across-model latency summary).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples_ms
+    }
+
     /// Summarise the recorded samples (None when empty).
     pub fn summary(&self) -> Option<Summary> {
         if self.samples_ms.is_empty() {
@@ -104,6 +113,64 @@ impl LatencyRecorder {
         } else {
             Some(Summary::from_samples(&self.samples_ms))
         }
+    }
+}
+
+/// Fixed log2-bucketed latency histogram: tail-latency *shape* in O(1)
+/// memory, mergeable across models and workers. Bucket `i` counts samples
+/// in `(upper_ms(i-1), upper_ms(i)]` with `upper_ms(i) = 2^(i-6)` ms —
+/// ~15.6 µs in the first bucket up to ~4.4 min, the last bucket catching
+/// everything slower.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; Histogram::BUCKETS],
+}
+
+impl Histogram {
+    /// Number of buckets (the last one is the unbounded overflow bucket).
+    pub const BUCKETS: usize = 25;
+
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram { counts: [0; Histogram::BUCKETS] }
+    }
+
+    /// Upper bound of bucket `i` in milliseconds (the last bucket has no
+    /// upper bound; its nominal edge is still reported for labelling).
+    pub fn upper_ms(i: usize) -> f64 {
+        2f64.powi(i as i32 - 6)
+    }
+
+    /// Record one latency sample in milliseconds.
+    pub fn record_ms(&mut self, ms: f64) {
+        let mut i = 0;
+        while i + 1 < Histogram::BUCKETS && ms > Histogram::upper_ms(i) {
+            i += 1;
+        }
+        self.counts[i] += 1;
+    }
+
+    /// Per-bucket counts (index `i` ↔ [`Histogram::upper_ms`]`(i)`).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total recorded samples.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fold another histogram's counts into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -146,5 +213,36 @@ mod tests {
     #[should_panic]
     fn summary_empty_panics() {
         let _ = Summary::from_samples(&[]);
+    }
+
+    #[test]
+    fn p999_orders_with_other_percentiles() {
+        let s: Vec<f64> = (0..=1000).map(|i| i as f64).collect();
+        let sum = Summary::from_samples(&s);
+        assert!(sum.p50 <= sum.p90 && sum.p90 <= sum.p99);
+        assert!(sum.p99 <= sum.p999 && sum.p999 <= sum.max);
+        assert!((sum.p999 - 999.0).abs() < 1e-9);
+        // Tiny samples degrade gracefully: p999 collapses toward max.
+        let tiny = Summary::from_samples(&[1.0, 2.0]);
+        assert!(tiny.p999 <= tiny.max && tiny.p999 >= tiny.p99);
+    }
+
+    #[test]
+    fn histogram_buckets_and_merge() {
+        let mut h = Histogram::new();
+        assert_eq!(h.total(), 0);
+        h.record_ms(0.001); // below the first edge → bucket 0
+        h.record_ms(1.0); // exactly on the 2^0 edge → bucket 6
+        h.record_ms(1.5); // (1, 2] → bucket 7
+        h.record_ms(1e12); // absurdly slow → overflow bucket
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.counts()[6], 1);
+        assert_eq!(h.counts()[7], 1);
+        assert_eq!(h.counts()[Histogram::BUCKETS - 1], 1);
+        let mut g = h.clone();
+        g.merge(&h);
+        assert_eq!(g.total(), 8);
+        assert_eq!(g.counts()[7], 2);
     }
 }

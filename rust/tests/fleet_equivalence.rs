@@ -1,0 +1,362 @@
+//! Acceptance suite for the multi-model serving fleet (router → batching
+//! → session → engine):
+//!
+//! 1. **Trace equivalence** — for all three app graphs × {Dense, Csr,
+//!    Compact} storage, an interleaved request trace routed through a
+//!    fleet (2 workers, batch-2 coalescing, 5 ms adaptive-batching
+//!    deadline) returns outputs **bitwise identical** to a solo batch-1
+//!    single-thread session on the same model. Routing, queueing,
+//!    cross-request batching and padding must never move a bit — the
+//!    fleet extends the batch-equivalence oracle, not replaces it.
+//! 2. **Typed negative paths** — unknown model id, bad input shapes,
+//!    duplicate registration, empty fleet and queue-full overload all
+//!    surface as matchable [`FleetError`]s, not panics.
+//! 3. **Admission control** — a `workers == 0` fleet admits exactly
+//!    `queue_depth` requests, rejects the next with
+//!    [`FleetError::Overloaded`], and [`Fleet::pump`] drains the queue in
+//!    deterministic batched dispatches whose outputs still match solo.
+//! 4. **Weight dedup** — replicas over one `Arc<Session>` and separately
+//!    built sessions over one [`Model`] both hold a single copy of the
+//!    dense weights ([`Session::memory`] is the oracle).
+//! 5. **Seeded load generation** — a closed-loop run over a 2:1 tenant
+//!    mix emits a fleet report whose counters reconcile and whose JSON
+//!    carries the full latency surface (p50/p99/p999 + histogram).
+
+use prt_dnn::apps::builders::{build_coloring, build_sr, build_style};
+use prt_dnn::apps::{AppSpec, Variant};
+use prt_dnn::fleet::{FleetBuilder, FleetError, LoadGen, WeightStore};
+use prt_dnn::session::{Format, Model};
+use prt_dnn::tensor::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic, per-frame-distinct input (the batch_equivalence
+/// formula): frame `f` of shape `shape`.
+fn frame_input(shape: &[usize], f: usize) -> Tensor {
+    let mut x = Tensor::zeros(shape);
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        *v = 0.5 + 0.4 * ((i as f32 * 0.23) + (f as f32 * 1.7)).sin();
+    }
+    x
+}
+
+/// Small-scale compiled model for one demo app (the quick-test builder
+/// sizes, not benchmark scale).
+fn test_model(app: &str) -> Model {
+    let (base, spec) = match app {
+        "style" => (build_style(32, 0.25, 301), AppSpec::for_app("style")),
+        "coloring" => (build_coloring(32, 0.25, 302), AppSpec::for_app("coloring")),
+        "sr" => (build_sr(24, 4, 0.25, 303), AppSpec::for_app("sr")),
+        _ => unreachable!(),
+    };
+    Model::from_graph(&base, &spec, Variant::PrunedCompiler)
+}
+
+#[test]
+fn fleet_trace_matches_solo_sessions() {
+    const FRAMES: usize = 8;
+    let formats = [
+        ("dense", Format::Dense),
+        ("csr", Format::Csr),
+        ("compact", Format::Compact),
+    ];
+    for app in ["style", "coloring", "sr"] {
+        let model = test_model(app);
+
+        // Solo oracles: batch 1, single thread, one per storage format.
+        let solo: Vec<_> = formats
+            .iter()
+            .map(|&(_, fmt)| {
+                model.session().threads(1).batch(1).sparse(fmt).build().unwrap()
+            })
+            .collect();
+
+        // The fleet under test: same model behind three hosts (one per
+        // format), each with background workers and batch-2 coalescing.
+        let mut builder = FleetBuilder::new()
+            .queue_depth(32)
+            .max_wait(Duration::from_millis(5))
+            .workers(2);
+        for &(tag, fmt) in &formats {
+            builder = builder
+                .register(tag, model.session().threads(2).batch(2).sparse(fmt))
+                .unwrap();
+        }
+        let fleet = builder.build().unwrap();
+
+        // Interleaved trace: frame f goes to every host before frame f+1
+        // is offered anywhere, so dispatches coalesce across requests.
+        let mut tickets = Vec::new();
+        for f in 0..FRAMES {
+            for &(tag, _) in &formats {
+                let shapes = fleet.session(tag).unwrap().shapes();
+                let inputs: Vec<Tensor> =
+                    shapes.frame_inputs.iter().map(|s| frame_input(s, f)).collect();
+                tickets.push((tag, f, fleet.submit(tag, inputs).unwrap()));
+            }
+        }
+        for (tag, f, ticket) in tickets {
+            let got = ticket.wait().unwrap();
+            let pos = formats.iter().position(|&(t, _)| t == tag).unwrap();
+            let shapes = solo[pos].shapes();
+            let inputs: Vec<Tensor> =
+                shapes.frame_inputs.iter().map(|s| frame_input(s, f)).collect();
+            let want = solo[pos].run(&inputs).unwrap();
+            assert_eq!(want.len(), got.len(), "{}/{} frame {}", app, tag, f);
+            for (k, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert_eq!(a.shape(), b.shape(), "{}/{} f={} out={}", app, tag, f, k);
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{}/{} frame={} output={}: fleet routing moved bits",
+                    app,
+                    tag,
+                    f,
+                    k
+                );
+            }
+        }
+
+        let report = fleet.shutdown();
+        assert_eq!(report.completed, FRAMES * formats.len(), "{}", app);
+        assert_eq!(report.rejected, 0, "{}", app);
+        assert_eq!(report.failed, 0, "{}", app);
+        for m in &report.models {
+            assert_eq!(m.submitted, FRAMES, "{}/{}", app, m.id);
+            assert_eq!(m.completed, FRAMES, "{}/{}", app, m.id);
+            // Coalescing can't exceed the compiled batch.
+            assert!(
+                m.frames_per_dispatch >= 1.0 && m.frames_per_dispatch <= 2.0,
+                "{}/{}: frames/dispatch {}",
+                app,
+                m.id,
+                m.frames_per_dispatch
+            );
+            assert_eq!(m.hist.total(), FRAMES as u64, "{}/{}", app, m.id);
+        }
+    }
+}
+
+#[test]
+fn unknown_model_and_builder_errors_are_typed() {
+    let model = test_model("style");
+    let fleet = FleetBuilder::new()
+        .workers(0)
+        .register("style", model.session().threads(1).batch(1))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    // Unknown model id.
+    let err = fleet.submit("nope", vec![]).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<FleetError>(),
+        Some(&FleetError::UnknownModel("nope".into()))
+    );
+
+    // Wrong input arity.
+    let err = fleet.submit("style", vec![]).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<FleetError>(),
+        Some(FleetError::BadInput { model, .. }) if model == "style"
+    ));
+
+    // Wrong input shape.
+    let err = fleet.submit("style", vec![Tensor::zeros(&[1, 2, 3])]).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<FleetError>(),
+        Some(FleetError::BadInput { .. })
+    ));
+
+    // Duplicate registration.
+    let err = FleetBuilder::new()
+        .register("m", model.session().threads(1).batch(1))
+        .unwrap()
+        .register("m", model.session().threads(1).batch(1))
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<FleetError>(),
+        Some(&FleetError::DuplicateModel("m".into()))
+    );
+
+    // Empty fleet.
+    let err = FleetBuilder::new().build().unwrap_err();
+    assert_eq!(err.downcast_ref::<FleetError>(), Some(&FleetError::EmptyFleet));
+
+    // Error messages are stable and name the model.
+    assert!(FleetError::UnknownModel("x".into()).to_string().contains('x'));
+    assert!(FleetError::Overloaded { model: "x".into(), depth: 4 }
+        .to_string()
+        .contains("x"));
+}
+
+#[test]
+fn admission_control_rejects_then_drains_correctly() {
+    let model = test_model("style");
+    let solo = model.session().threads(1).batch(1).build().unwrap();
+    // workers == 0: nothing dispatches until `pump`, so queue occupancy is
+    // fully deterministic.
+    let fleet = FleetBuilder::new()
+        .queue_depth(3)
+        .workers(0)
+        .register("style", model.session().threads(1).batch(2))
+        .unwrap()
+        .build()
+        .unwrap();
+    let shapes = fleet.session("style").unwrap().shapes();
+    let mk = |f: usize| -> Vec<Tensor> {
+        shapes.frame_inputs.iter().map(|s| frame_input(s, f)).collect()
+    };
+
+    // Exactly queue_depth admissions, then typed backpressure.
+    let tickets: Vec<_> =
+        (0..3).map(|f| fleet.submit("style", mk(f)).unwrap()).collect();
+    assert_eq!(fleet.queue_len("style").unwrap(), 3);
+    let err = fleet.submit("style", mk(3)).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<FleetError>(),
+        Some(&FleetError::Overloaded { model: "style".into(), depth: 3 })
+    );
+
+    // Deterministic drain: batch-2 dispatch, then a padded 1-frame
+    // dispatch, then nothing.
+    assert_eq!(fleet.pump("style").unwrap(), 2);
+    assert_eq!(fleet.pump("style").unwrap(), 1);
+    assert_eq!(fleet.pump("style").unwrap(), 0);
+
+    // Routed + batched + padded outputs still match solo bitwise.
+    for (f, ticket) in tickets.into_iter().enumerate() {
+        let got = ticket.wait().unwrap();
+        let want = solo.run(&mk(f)).unwrap();
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert_eq!(a.data(), b.data(), "frame {}: pump dispatch moved bits", f);
+        }
+    }
+
+    let report = fleet.shutdown();
+    assert_eq!(report.submitted, 3);
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.failed, 0);
+    let m = &report.models[0];
+    assert_eq!(m.dispatches, 2);
+    assert_eq!(m.queue_peak, 3);
+    assert_eq!(m.queue_depth, 3);
+    assert!((m.frames_per_dispatch - 1.5).abs() < 1e-9);
+}
+
+#[test]
+fn replicas_share_one_weight_copy() {
+    // Dense baseline: every weight byte is a dense buffer, so the dedup
+    // accounting is exact against Session::memory().
+    let base = build_style(32, 0.25, 304);
+    let spec = AppSpec::for_app("style");
+    let model = Model::from_graph(&base, &spec, Variant::Unpruned);
+
+    // Two replicas over ONE shared session: trivially one weight copy,
+    // but two per-worker context allotments.
+    let session = Arc::new(model.session().threads(1).batch(1).build().unwrap());
+    let mem = session.memory();
+    let fleet = FleetBuilder::new()
+        .workers(0)
+        .register_shared("a", Arc::clone(&session))
+        .unwrap()
+        .register_shared("b", Arc::clone(&session))
+        .unwrap()
+        .build()
+        .unwrap();
+    let report = fleet.shutdown();
+    assert_eq!(report.unique_weight_bytes, mem.dedicated_bytes);
+    assert_eq!(report.peak_bytes, mem.dedicated_bytes + 2 * mem.shared_bytes);
+    // The naive per-model sum double-counts; the fleet figure doesn't.
+    let naive: usize = report.models.iter().map(|m| m.weight_bytes).sum();
+    assert_eq!(naive, 2 * report.unique_weight_bytes);
+
+    // Two *separately built* sessions over one Model: distinct plans, but
+    // copy-on-write weight tensors share the graph's buffers, so the
+    // fleet still holds a single copy of the dense weights.
+    let fleet = FleetBuilder::new()
+        .workers(0)
+        .register("a", model.session().threads(1).batch(1))
+        .unwrap()
+        .register("b", model.session().threads(2).batch(2))
+        .unwrap()
+        .build()
+        .unwrap();
+    let report = fleet.shutdown();
+    assert_eq!(
+        report.unique_weight_bytes, mem.dedicated_bytes,
+        "independent sessions of one model must dedupe to one weight copy"
+    );
+}
+
+#[test]
+fn seeded_loadgen_emits_full_report() {
+    // The store interns by key: same key, same Arc<Model>.
+    let store = WeightStore::new();
+    let style = store.get_or_build("style|test", || Ok(test_model("style"))).unwrap();
+    let coloring =
+        store.get_or_build("coloring|test", || Ok(test_model("coloring"))).unwrap();
+    let again = store.get_or_build("style|test", || Ok(test_model("style"))).unwrap();
+    assert!(Arc::ptr_eq(&style, &again), "store must intern by key");
+    assert_eq!(store.len(), 2);
+
+    let fleet = FleetBuilder::new()
+        .queue_depth(64)
+        .max_wait(Duration::from_millis(1))
+        .workers(1)
+        .register("style", style.session().threads(1).batch(2))
+        .unwrap()
+        .register("coloring", coloring.session().threads(1).batch(2))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    const REQUESTS: usize = 24;
+    let gen = LoadGen::closed(3, REQUESTS, 7)
+        .mix(vec![("style".to_string(), 2.0), ("coloring".to_string(), 1.0)]);
+    let stats = gen.run(&fleet).unwrap();
+    assert_eq!(stats.offered, REQUESTS);
+    assert_eq!(stats.accepted + stats.rejected, REQUESTS);
+    // Closed loop with concurrency 3 << queue_depth 64 never overloads.
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.failed, 0);
+
+    let report = fleet.shutdown();
+    assert_eq!(report.submitted, stats.accepted);
+    assert_eq!(report.completed, stats.accepted);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.failed, 0);
+
+    // The latency surface is fully populated and ordered.
+    let l = report.latency.as_ref().expect("completed requests imply a summary");
+    assert_eq!(l.n, REQUESTS);
+    assert!(l.p50 <= l.p99 && l.p99 <= l.p999 && l.p999 <= l.max);
+    for m in &report.models {
+        assert_eq!(m.submitted, m.completed, "{}", m.id);
+        assert!(m.dispatches >= 1, "{}", m.id);
+        assert!(
+            m.frames_per_dispatch >= 1.0 && m.frames_per_dispatch <= m.batch as f64,
+            "{}: frames/dispatch {}",
+            m.id,
+            m.frames_per_dispatch
+        );
+        assert_eq!(m.hist.total(), m.completed as u64, "{}", m.id);
+    }
+
+    // Machine-readable form carries the schema BENCH_SCHEMA.md documents.
+    let j = report.to_json();
+    assert_eq!(j.get("submitted").as_usize(), Some(REQUESTS));
+    assert!(j.get("latency_p999_ms").as_f64().is_some());
+    assert!(j.get("unique_weight_bytes").as_usize().is_some());
+    let models = j.get("models").as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    for mj in models {
+        assert!(mj.get("rejected").as_usize().is_some());
+        assert!(mj.get("dispatches").as_usize().is_some());
+        assert!(mj.get("latency_p999_ms").as_f64().is_some());
+        let hist = mj.get("hist");
+        let le = hist.get("le_ms").as_arr().unwrap();
+        assert_eq!(le.len(), hist.get("count").as_arr().unwrap().len());
+    }
+}
