@@ -2,7 +2,10 @@
 //! count and microkernel ISA (scalar vs the detected SIMD tier, order-
 //! preserving and relaxed-FMA flavors, narrow and wide register tiles),
 //! plus conv tiers (dense / CSR / column-compact / reordered) on a
-//! representative layer. Feeds the §Perf iteration log.
+//! representative layer, plus the int8 GEMM (i8×i8→i32 + requantize)
+//! against its f32 counterpart — with an exactness sweep over odd shapes
+//! and unaligned tails pinning the SIMD i8 kernels to a scalar integer
+//! reference. Feeds the §Perf iteration log.
 
 use prt_dnn::bench::{bench_ms, ms, Table};
 use prt_dnn::dsl::op::{Activation, PadMode};
@@ -12,6 +15,8 @@ use prt_dnn::kernels::conv::{
 use prt_dnn::kernels::gemm::{gemm, gemm_with};
 use prt_dnn::kernels::im2col::ConvGeom;
 use prt_dnn::kernels::micro::{self, Isa};
+use prt_dnn::kernels::qgemm::{qgemm_batch, requantize};
+use prt_dnn::quant::{quantize_act, QDense};
 use prt_dnn::pruning::scheme::{project_scheme, Scheme};
 use prt_dnn::pruning::verify::apply_mask;
 use prt_dnn::reorder::{ReorderPlan, Schedule as LaneSchedule};
@@ -168,6 +173,98 @@ fn main() {
             format!("{:.0}%", sparsity * 100.0),
             ms(fast.mean),
             format!("{:.2}x", dense_s.mean / fast.mean),
+        ]);
+    }
+    t.print();
+
+    // Int8 exactness sweep: odd shapes and unaligned tails (the same
+    // shapes that pin the f32 microkernels) — the detected-ISA i8 kernels
+    // must agree with a scalar integer reference to the last bit, since
+    // i8×i8→i32 accumulation has no rounding to hide behind.
+    let pool = ComputePool::new(max_threads);
+    let scalar_sched = Schedule::default(); // default ISA is Scalar
+    let native_sched = Schedule { isa: micro::detect(), ..Schedule::default() }.sanitized();
+    for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 31, 33), (64, 100, 130), (5, 576, 999)] {
+        let af: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let bf: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let aw = Tensor::from_vec(&[m, k, 1, 1], af.clone());
+        let qa = QDense::from_view(&GemmView::from_oihw(&aw));
+        let mut qb = vec![0i8; k * n];
+        let xscale = quantize_act(&bf, &mut qb);
+
+        // Scalar integer reference.
+        let mut want = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for r in 0..k {
+                    acc += qa.values[i * k + r] as i32 * qb[r * n + j] as i32;
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        for sched in [&scalar_sched, &native_sched] {
+            let mut got = vec![0i32; m * n];
+            qgemm_batch(1, m, k, n, &qa, &qb, &mut got, &pool, sched);
+            assert_eq!(
+                want, got,
+                "i8 GEMM {}x{}x{} diverged from the scalar reference ({})",
+                m, k, n, sched.isa.tag()
+            );
+        }
+        // Requantize lands within the analytical dot-product bound of the
+        // true f32 product.
+        let mut qf = vec![0.0f32; m * n];
+        requantize(&want, &qa.scales, &[xscale], m, n, &mut qf, &pool);
+        let wmax = af.iter().fold(0.0f32, |mx, &v| mx.max(v.abs())) as f64;
+        let xmax = bf.iter().fold(0.0f32, |mx, &v| mx.max(v.abs())) as f64;
+        let bound = prt_dnn::perfmodel::dot_error_bound(k, wmax, xmax);
+        for i in 0..m {
+            for j in 0..n {
+                let exact: f64 = (0..k)
+                    .map(|r| af[i * k + r] as f64 * bf[r * n + j] as f64)
+                    .sum();
+                let err = (exact - qf[i * n + j] as f64).abs();
+                assert!(
+                    err <= bound,
+                    "requantized {}x{}x{} [{},{}]: err {} > bound {}",
+                    m, k, n, i, j, err, bound
+                );
+            }
+        }
+    }
+
+    // Int8 GEMM throughput vs f32 on the headline shapes.
+    let mut t = Table::new(
+        format!("K-micro int8 GEMM ({} threads)", max_threads),
+        &["M", "K", "N", "f32 ms", "i8 ms", "i8 vs f32"],
+    );
+    for &(m, k, n) in &[(64, 576, 4096), (128, 1152, 4096)] {
+        let af: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let bf: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let aw = Tensor::from_vec(&[m, k, 1, 1], af.clone());
+        let qa = QDense::from_view(&GemmView::from_oihw(&aw));
+        let mut qb = vec![0i8; k * n];
+        let xscale = quantize_act(&bf, &mut qb);
+        let mut c = vec![0.0f32; m * n];
+        let f32_s = bench_ms(2, 8, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            gemm(m, k, n, &af, &bf, &mut c, &pool);
+        });
+        let mut acc = vec![0i32; m * n];
+        let mut qo = vec![0.0f32; m * n];
+        let i8_s = bench_ms(2, 8, || {
+            acc.iter_mut().for_each(|v| *v = 0);
+            qgemm_batch(1, m, k, n, &qa, &qb, &mut acc, &pool, &native_sched);
+            requantize(&acc, &qa.scales, &[xscale], m, n, &mut qo, &pool);
+        });
+        t.row(&[
+            format!("{}", m),
+            format!("{}", k),
+            format!("{}", n),
+            ms(f32_s.mean),
+            ms(i8_s.mean),
+            format!("{:.2}x", f32_s.mean / i8_s.mean.max(1e-9)),
         ]);
     }
     t.print();

@@ -25,7 +25,12 @@
 //! counts compound conv+bias+act(+add) steps in each session's plan, and
 //! the `fusion_speedup` field/column reports unfused-ms / fused-ms; the
 //! unfused line's `memory` block also exposes the arena growth from
-//! materializing fused intermediates. A **T1c** table measures batched
+//! materializing fused intermediates — and once more under **int8
+//! quantization** (`--int8`-equivalent): the `int8_ms` / `int8_speedup`
+//! fields compare the per-channel i8 kernels against the f32 compact
+//! time, and `int8_max_err` records the measured max-abs deviation from
+//! the f32 outputs (the error-bounded second oracle;
+//! docs/ARCHITECTURE.md §Quantization). A **T1c** table measures batched
 //! steady-state throughput (`--batch N`, default 4) under auto-tuned
 //! schedules (batched plans tune their real batch-N dispatch geometry):
 //! the pruning+compiler engine compiled at batch N runs N frames per
@@ -37,7 +42,7 @@ use prt_dnn::bench::{bench_auto_ms, bytes, mem_json, ms, speedup, summary_json, 
 use prt_dnn::executor::{ExecContext, ExecutionPlan};
 use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
-use prt_dnn::session::{Model, Session};
+use prt_dnn::session::{Model, Quantization, Session};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
@@ -48,6 +53,7 @@ use std::time::Instant;
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// Session for one (app, variant) cell of the table.
+#[allow(clippy::too_many_arguments)]
 fn session_for(
     app: &str,
     variant: Variant,
@@ -57,6 +63,7 @@ fn session_for(
     tune: TuneOpts,
     force_scalar: bool,
     fuse: bool,
+    quantize: Quantization,
 ) -> anyhow::Result<Session> {
     Model::for_app_scaled(app, variant, width, 42)?
         .session()
@@ -65,6 +72,7 @@ fn session_for(
         .tune(tune)
         .force_scalar(force_scalar)
         .fuse(fuse)
+        .quantize(quantize)
         .build()
 }
 
@@ -159,6 +167,9 @@ fn main() -> anyhow::Result<()> {
             "fused steps",
             "no-fuse ms",
             "fusion_speedup",
+            "int8 ms",
+            "int8_speedup",
+            "int8 max err",
         ],
     );
     let mut json_lines: Vec<Json> = Vec::new();
@@ -172,8 +183,17 @@ fn main() -> anyhow::Result<()> {
         let mut isa_tag = "scalar";
         let mut fused_steps = 0usize;
         for variant in Variant::table1() {
-            let session =
-                session_for(app, variant, width, threads, 1, TuneOpts::off(), false, true)?;
+            let session = session_for(
+                app,
+                variant,
+                width,
+                threads,
+                1,
+                TuneOpts::off(),
+                false,
+                true,
+                Quantization::None,
+            )?;
             let shape = session.shapes().inputs[0].clone();
             let x = Tensor::full(&shape, 0.5);
             // Cold start first: fresh context = pool spawn + first frame.
@@ -224,6 +244,7 @@ fn main() -> anyhow::Result<()> {
             TuneOpts::on(&tune_path),
             false,
             true,
+            Quantization::None,
         )?;
         let tx = Tensor::full(&tuned.shapes().inputs[0], 0.5);
         let ts = bench_auto_ms(budget, || {
@@ -257,6 +278,7 @@ fn main() -> anyhow::Result<()> {
             TuneOpts::off(),
             true,
             true,
+            Quantization::None,
         )?;
         let sx = Tensor::full(&scalar.shapes().inputs[0], 0.5);
         let ss = bench_auto_ms(budget, || {
@@ -290,6 +312,7 @@ fn main() -> anyhow::Result<()> {
             TuneOpts::off(),
             false,
             false,
+            Quantization::None,
         )?;
         let fx = Tensor::full(&nofuse.shapes().inputs[0], 0.5);
         let fs = bench_auto_ms(budget, || {
@@ -310,6 +333,64 @@ fn main() -> anyhow::Result<()> {
         j.insert("fusion_speedup", fusion_speedup);
         json_lines.push(Json::Obj(j));
 
+        // Pruning+compiler once more under int8 quantization: i8 weights
+        // are ¼ the traffic of f32 on the memory-bound sparse kernels, so
+        // int8-ms should at worst match the f32 compact time. The
+        // `int8_max_err` field records the measured max-abs deviation from
+        // the f32 session on the same input (bounded by
+        // `perfmodel::int8_error_bound`; int8 has no bitwise-vs-f32
+        // oracle — see docs/ARCHITECTURE.md §Quantization).
+        let int8 = session_for(
+            app,
+            Variant::PrunedCompiler,
+            width,
+            threads,
+            1,
+            TuneOpts::off(),
+            false,
+            true,
+            Quantization::Int8,
+        )?;
+        let f32_ref = session_for(
+            app,
+            Variant::PrunedCompiler,
+            width,
+            threads,
+            1,
+            TuneOpts::off(),
+            false,
+            true,
+            Quantization::None,
+        )?;
+        let qx = Tensor::full(&int8.shapes().inputs[0], 0.5);
+        let qwant = f32_ref.run(std::slice::from_ref(&qx))?;
+        let qgot = int8.run(std::slice::from_ref(&qx))?;
+        let int8_max_err = qwant
+            .iter()
+            .zip(qgot.iter())
+            .flat_map(|(a, b)| a.data().iter().zip(b.data()))
+            .map(|(&x, &y)| (x as f64 - y as f64).abs())
+            .fold(0.0f64, f64::max);
+        let qs = bench_auto_ms(budget, || {
+            let _ = int8.run(std::slice::from_ref(&qx)).unwrap();
+        });
+        let int8_speedup = last / qs.mean.max(1e-9);
+        let mut j = JsonObj::new();
+        j.insert("app", app.to_string());
+        j.insert("variant", Variant::PrunedCompiler.name());
+        j.insert("threads", threads);
+        j.insert("batch", 1usize);
+        j.insert("latency", summary_json(&qs));
+        j.insert("memory", mem_json(&int8.memory()));
+        j.insert("tuned", false);
+        j.insert("isa", int8.isa().tag());
+        j.insert("quantize", "int8");
+        j.insert("int8_ms", qs.mean);
+        j.insert("int8_speedup", int8_speedup);
+        j.insert("int8_max_err", int8_max_err);
+        j.insert("fused_steps", int8.fused_steps());
+        json_lines.push(Json::Obj(j));
+
         row.insert(0, app.to_string());
         row.push(speedup(base, last));
         row.push(bytes(peak));
@@ -323,6 +404,9 @@ fn main() -> anyhow::Result<()> {
         row.push(format!("{}", fused_steps));
         row.push(ms(fs.mean));
         row.push(format!("{:.2}x", fusion_speedup));
+        row.push(ms(qs.mean));
+        row.push(format!("{:.2}x", int8_speedup));
+        row.push(format!("{:.3}", int8_max_err));
         measured.row(&row);
     }
     measured.print();
@@ -355,6 +439,7 @@ fn main() -> anyhow::Result<()> {
                 TuneOpts::on(&tune_path),
                 false,
                 true,
+                Quantization::None,
             )?;
             let x = Tensor::full(&session.shapes().inputs[0], 0.5);
             let s = bench_auto_ms(budget, || {

@@ -115,20 +115,29 @@ impl ServeReport {
             && (self.dropped as f64) < 0.02 * (self.processed + self.dropped) as f64
     }
 
-    /// One-line human-readable report.
+    /// One-line human-readable report. A run that processed no frames
+    /// (`--frames 0`, or every frame shed) renders `-` for the latency
+    /// statistics instead of fabricating zeros.
     pub fn render(&self) -> String {
+        let stat = |v: f64| {
+            if self.latency.is_empty() {
+                "-".to_string()
+            } else {
+                format!("{:.1}", v)
+            }
+        };
         format!(
             "processed={} dropped={} wall={:.2}s fps={:.1} \
-             latency ms p50={:.1} p90={:.1} p99={:.1} | infer ms mean={:.1} | peak={} | \
+             latency ms p50={} p90={} p99={} | infer ms mean={} | peak={} | \
              batch={} frames/dispatch={:.2}",
             self.processed,
             self.dropped,
             self.wall.as_secs_f64(),
             self.throughput_fps(),
-            self.latency.p50,
-            self.latency.p90,
-            self.latency.p99,
-            self.inference.mean,
+            stat(self.latency.p50),
+            stat(self.latency.p90),
+            stat(self.latency.p99),
+            stat(self.inference.mean),
             crate::util::fmt_bytes(self.peak_bytes),
             self.batch,
             self.frames_per_dispatch,
@@ -136,17 +145,26 @@ impl ServeReport {
     }
 
     /// Machine-readable report (bench sinks / perf trajectory tracking).
+    /// A zero-frame run emits `null` for each latency statistic — a sink
+    /// averaging the field then sees a missing value, not a phantom 0 ms.
     pub fn to_json(&self) -> Json {
+        let stat = |o: &mut JsonObj, key: &str, v: f64| {
+            if self.latency.is_empty() {
+                o.insert(key, Json::Null);
+            } else {
+                o.insert(key, v);
+            }
+        };
         let mut o = JsonObj::new();
         o.insert("processed", self.processed);
         o.insert("dropped", self.dropped);
         o.insert("wall_s", self.wall.as_secs_f64());
         o.insert("fps", self.throughput_fps());
-        o.insert("latency_p50_ms", self.latency.p50);
-        o.insert("latency_p90_ms", self.latency.p90);
-        o.insert("latency_p99_ms", self.latency.p99);
-        o.insert("latency_p999_ms", self.latency.p999);
-        o.insert("infer_mean_ms", self.inference.mean);
+        stat(&mut o, "latency_p50_ms", self.latency.p50);
+        stat(&mut o, "latency_p90_ms", self.latency.p90);
+        stat(&mut o, "latency_p99_ms", self.latency.p99);
+        stat(&mut o, "latency_p999_ms", self.latency.p999);
+        stat(&mut o, "infer_mean_ms", self.inference.mean);
         o.insert("peak_bytes", self.peak_bytes);
         o.insert("batch", self.batch);
         o.insert("dispatches", self.dispatches);
@@ -416,16 +434,17 @@ impl<'e> Server<'e> {
         let inference = inference.into_inner().unwrap();
         let processed = processed.load(Ordering::Relaxed);
         let dispatches = dispatches.load(Ordering::Relaxed);
-        if processed == 0 {
-            anyhow::bail!("no frames processed");
-        }
         let mem = self.engine.memory();
+        // A zero-frame run (frames=0, or everything shed) reports empty
+        // summaries — the renderers print `-` / emit `null` for them.
+        // Historically this was a bail (and before that, a panic inside
+        // `Summary::from_samples`).
         Ok(ServeReport {
             processed,
             dropped: queue.dropped.load(Ordering::Relaxed),
             wall,
-            latency: latency.summary().unwrap(),
-            inference: inference.summary().unwrap(),
+            latency: latency.summary().unwrap_or_else(Summary::empty),
+            inference: inference.summary().unwrap_or_else(Summary::empty),
             // Weights are shared; every worker owns one arena + scratch.
             peak_bytes: mem.dedicated_bytes + self.cfg.workers.max(1) * mem.shared_bytes,
             batch: nb,
@@ -600,6 +619,24 @@ mod tests {
         assert_eq!(report.max_wait_ms, 1000.0);
         let j = report.to_json();
         assert_eq!(j.get("max_wait_ms").as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn zero_frame_serve_reports_instead_of_failing() {
+        let eng = tiny_engine();
+        let cfg = ServeConfig { frames: 0, ..ServeConfig::default() };
+        let report = Server::new(&eng, cfg)
+            .serve(|_| Tensor::full(&[1, 3, 32, 32], 0.5))
+            .unwrap();
+        assert_eq!(report.processed, 0);
+        assert!(report.latency.is_empty() && report.inference.is_empty());
+        // The renderers degrade to `-` / `null`, never a phantom 0 ms.
+        let text = report.render();
+        assert!(text.contains("p50=-"), "render: {}", text);
+        let j = report.to_json();
+        assert!(matches!(j.get("latency_p50_ms"), Json::Null));
+        assert!(matches!(j.get("infer_mean_ms"), Json::Null));
+        assert_eq!(j.get("processed").as_usize(), Some(0));
     }
 
     #[test]

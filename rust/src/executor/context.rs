@@ -18,8 +18,8 @@ use crate::dsl::op::Activation;
 use crate::executor::plan::{ConvExec, ExecutionPlan, Step, ValueSlot};
 use crate::util::threadpool::ComputePool;
 use crate::kernels::conv::{
-    conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_pattern, conv2d_reordered, dwconv2d,
-    ConvScratch,
+    conv2d_column_compact, conv2d_csr, conv2d_dense, conv2d_pattern, conv2d_qcolumn,
+    conv2d_qcsr, conv2d_qdense, conv2d_reordered, dwconv2d, ConvScratch,
 };
 use crate::kernels::elementwise::{
     act_inplace, add_assign, add_into, batchnorm_inplace, broadcast_spatial_into,
@@ -67,6 +67,7 @@ impl ExecContext {
         let mut scratch = ConvScratch::new();
         scratch.ensure(plan.scratch_len());
         scratch.ensure_panel(plan.panel_len());
+        scratch.ensure_quant(plan.qpatch_len(), plan.qacc_len(), plan.batch());
         ExecContext {
             arena: vec![0.0; plan.arena_len()],
             scratch,
@@ -207,6 +208,7 @@ impl ExecContext {
         }
         self.scratch.ensure(plan.scratch_len());
         self.scratch.ensure_panel(plan.panel_len());
+        self.scratch.ensure_quant(plan.qpatch_len(), plan.qacc_len(), plan.batch());
 
         let pool = &self.pool;
         // SAFETY (all `slice_at` / `slice_at_mut` calls below): the planner
@@ -275,6 +277,18 @@ impl ExecContext {
                         ConvExec::Reordered { plan: rp, lanes } => conv2d_reordered(
                             x, n, rp, lanes, geom, *pad_mode, bias.as_deref(), *act, pool,
                             scratch, sched, ft, out,
+                        ),
+                        ConvExec::QDense { qw } => conv2d_qdense(
+                            x, n, qw, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
+                            sched, ft, out,
+                        ),
+                        ConvExec::QCsr { qcsr } => conv2d_qcsr(
+                            x, n, qcsr, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
+                            sched, ft, out,
+                        ),
+                        ConvExec::QColumn { qcc } => conv2d_qcolumn(
+                            x, n, qcc, geom, *pad_mode, bias.as_deref(), *act, pool, scratch,
+                            sched, ft, out,
                         ),
                     }
                 }

@@ -17,6 +17,7 @@ use crate::kernels::elementwise::{act_inplace, add_assign, FusedTail};
 use crate::kernels::im2col::ConvGeom;
 use crate::kernels::micro::{self, Isa};
 use crate::pruning::scheme::Scheme;
+use crate::quant::Quantization;
 use crate::reorder::{ReorderPlan, Schedule as LaneSchedule};
 use crate::sparse::{ColumnCompact, Csr, GemmView};
 use crate::tensor::Tensor;
@@ -124,6 +125,13 @@ pub struct ExecConfig {
     /// per-element expressions of the absorbed steps). Disable (the CLI's
     /// `--no-fuse`) to emit every graph node as its own step.
     pub fuse: bool,
+    /// Numeric format for conv-layer weights and GEMM/SpMM arithmetic
+    /// (see [`crate::quant`]). [`Quantization::Int8`] stores conv weights
+    /// as per-output-channel-scaled i8, quantizes each im2col panel to i8
+    /// at dispatch time, accumulates in exact i32 and requantizes back to
+    /// f32 before the (unchanged) fused epilogue. Depthwise and
+    /// fully-connected steps stay f32. Default [`Quantization::None`].
+    pub quantize: Quantization,
 }
 
 impl ExecConfig {
@@ -138,6 +146,7 @@ impl ExecConfig {
             force_scalar: false,
             relaxed_simd: false,
             fuse: true,
+            quantize: Quantization::None,
         }
     }
 
@@ -152,6 +161,7 @@ impl ExecConfig {
             force_scalar: false,
             relaxed_simd: false,
             fuse: true,
+            quantize: Quantization::None,
         }
     }
 
@@ -166,6 +176,7 @@ impl ExecConfig {
             force_scalar: false,
             relaxed_simd: false,
             fuse: true,
+            quantize: Quantization::None,
         }
     }
 
@@ -198,6 +209,14 @@ impl ExecConfig {
         self.fuse = fuse;
         self
     }
+
+    /// Select the numeric format for conv weights + arithmetic (builder
+    /// form). The SessionBuilder's `.quantize(..)` knob is the sanctioned
+    /// front door; this is its plan-level plumbing.
+    pub fn with_quantize(mut self, q: Quantization) -> Self {
+        self.quantize = q;
+        self
+    }
 }
 
 /// Pre-compiled execution strategy for one conv node.
@@ -209,6 +228,12 @@ pub(crate) enum ConvExec {
     Pattern { plan: crate::kernels::sparse_gemm::PatternPlan },
     /// Filter-signature reorder (fallback for undeclared structure).
     Reordered { plan: ReorderPlan, lanes: LaneSchedule },
+    /// Int8 dense: per-channel-scaled i8 weights, i32 accumulation.
+    QDense { qw: crate::quant::QDense },
+    /// Int8 CSR: the f32 CSR's nonzero pattern with i8 values.
+    QCsr { qcsr: crate::quant::QCsr },
+    /// Int8 column-compact: packed kept columns with i8 values.
+    QColumn { qcc: crate::quant::QColumn },
 }
 
 /// Pre-compiled per-node step.
@@ -291,6 +316,8 @@ pub struct ExecutionPlan {
     arena_len: usize,
     scratch_len: usize,
     panel_len: usize,
+    qpatch_len: usize,
+    qacc_len: usize,
     tuned: bool,
     tune_stats: TuneStats,
     memory: MemoryUsage,
@@ -437,6 +464,24 @@ impl ExecutionPlan {
     /// each context so the fallback stays allocation-free.
     pub fn panel_len(&self) -> usize {
         self.panel_len
+    }
+
+    /// Worst-case quantized (i8) patch-panel length in elements — 0
+    /// unless the plan was compiled with [`ExecConfig::quantize`] set.
+    /// Pre-sized by each context so the int8 frame loop never allocates.
+    pub fn qpatch_len(&self) -> usize {
+        self.qpatch_len
+    }
+
+    /// Worst-case i32 accumulator-plane length in elements for the int8
+    /// path (0 for f32 plans). See [`ExecutionPlan::qpatch_len`].
+    pub fn qacc_len(&self) -> usize {
+        self.qacc_len
+    }
+
+    /// Whether any step of this plan runs the int8 kernels.
+    pub fn quantized(&self) -> bool {
+        self.qacc_len > 0
     }
 
     /// Whether this plan was compiled with schedule auto-tuning enabled.
@@ -587,6 +632,8 @@ impl Planner {
         let mut weight_bytes = 0usize;
         let mut scratch_len = 0usize;
         let mut panel_len = 0usize;
+        let mut qpatch_len = 0usize;
+        let mut qacc_len = 0usize;
         let mut input_count = 0usize;
         // Microkernel ISA for this plan, resolved once: the host's detected
         // tier, unless pinned to scalar by config or environment. Every
@@ -683,7 +730,42 @@ impl Planner {
                         .context("missing conv weight")?
                         .clone();
                     let scheme = cfg.schemes.iter().find(|(n, _)| n == &node.name).map(|(_, s)| s);
-                    let exec = match (cfg.sparse, scheme) {
+                    // Int8 plans re-encode every conv weight with
+                    // per-output-channel scales at plan time; the storage
+                    // format still follows the sparse mode (dense i8 /
+                    // CSR-patterned i8 / column-packed i8). Pattern and
+                    // filter schemes have no dedicated i8 kernel, so they
+                    // fall back to the i8 CSR, which skips the same zeros.
+                    let exec = if cfg.quantize.is_quantized() {
+                        let gv = GemmView::from_oihw(&w);
+                        match (cfg.sparse, scheme) {
+                            (SparseMode::Dense, _)
+                            | (SparseMode::Compact, None)
+                            | (SparseMode::Compact, Some(Scheme::Dense)) => {
+                                let qw = crate::quant::QDense::from_view(&gv);
+                                weight_bytes += qw.size_bytes();
+                                ConvExec::QDense { qw }
+                            }
+                            (SparseMode::Csr, _) | (SparseMode::Compact, Some(_)) => {
+                                let is_column =
+                                    matches!(scheme, Some(Scheme::Column { .. }));
+                                if cfg.sparse == SparseMode::Compact && is_column {
+                                    let keep = match scheme {
+                                        Some(Scheme::Column { keep }) => keep,
+                                        _ => unreachable!(),
+                                    };
+                                    let qcc = crate::quant::QColumn::encode(&gv, keep);
+                                    weight_bytes += qcc.size_bytes();
+                                    ConvExec::QColumn { qcc }
+                                } else {
+                                    let qcsr = crate::quant::QCsr::from_view(&gv);
+                                    weight_bytes += qcsr.size_bytes();
+                                    ConvExec::QCsr { qcsr }
+                                }
+                            }
+                        }
+                    } else {
+                        match (cfg.sparse, scheme) {
                         (SparseMode::Dense, _) => {
                             weight_bytes += w.len() * 4;
                             ConvExec::Dense { w }
@@ -726,6 +808,7 @@ impl Planner {
                             weight_bytes += plan.nnz() * 4 + plan.group_count() * 8;
                             ConvExec::Reordered { plan, lanes }
                         }
+                        }
                     };
                     // ---- per-step schedule tuning (crate::tuner) -------
                     if tuner.enabled() {
@@ -735,6 +818,9 @@ impl Planner {
                             ConvExec::Column { cc } => ("column", cc.kept(), true),
                             ConvExec::Pattern { .. } => ("pattern", geom.cols(), false),
                             ConvExec::Reordered { .. } => ("reordered", geom.cols(), false),
+                            ConvExec::QDense { .. } => ("dense", geom.cols(), true),
+                            ConvExec::QCsr { .. } => ("csr", geom.cols(), false),
+                            ConvExec::QColumn { qcc } => ("column", qcc.kept(), true),
                         };
                         // Batched plans tune under their real dispatch
                         // geometry (the split covers batch × rows), so the
@@ -757,6 +843,7 @@ impl Planner {
                             gemm_backed,
                             tail_acts,
                             tail_res,
+                            quant: cfg.quantize.is_quantized(),
                         };
                         // Synthetic batch-sized activations + private
                         // buffers for the micro-benchmark probes, built
@@ -796,6 +883,7 @@ impl Planner {
                     // a step tuned to the direct lowering needs none.
                     let patch_rows = match &exec {
                         ConvExec::Column { cc } => cc.kept(),
+                        ConvExec::QColumn { qcc } => qcc.kept(),
                         _ => geom.cols(),
                     };
                     let direct = step_sched.lowering == Lowering::Direct
@@ -806,6 +894,19 @@ impl Planner {
                         // drivers lower the whole batch before a single
                         // combined GEMM dispatch.
                         scratch_len = scratch_len.max(batch * patch_rows * geom.out_px());
+                    }
+                    // Int8 steps additionally quantize the patch panel
+                    // into an i8 copy and accumulate into an i32 plane;
+                    // both live in the context's scratch, pre-sized here
+                    // so the frame loop never allocates.
+                    if matches!(
+                        exec,
+                        ConvExec::QDense { .. }
+                            | ConvExec::QCsr { .. }
+                            | ConvExec::QColumn { .. }
+                    ) {
+                        qpatch_len = qpatch_len.max(batch * patch_rows * geom.out_px());
+                        qacc_len = qacc_len.max(batch * *out_c * geom.out_px());
                     }
                     // The reordered fallback gathers per-group activation
                     // panels: pre-size them here (one slot per pool
@@ -855,6 +956,7 @@ impl Planner {
                             gemm_backed: false,
                             tail_acts,
                             tail_res,
+                            quant: false,
                         };
                         let (cc, hh, ww, st, pd, act) =
                             (*c, h, win, *stride, *pad, *fused_act);
@@ -923,6 +1025,7 @@ impl Planner {
                             gemm_backed: true,
                             tail_acts,
                             tail_res,
+                            quant: false,
                         };
                         let (outf, inf) = (*out_f, *in_f);
                         type DenseBufs = (Vec<f32>, Vec<f32>, Vec<f32>);
@@ -1136,8 +1239,18 @@ impl Planner {
         }
 
         let arena_len = arena.high_water();
-        let memory =
-            MemoryUsage::new(weight_bytes, (arena_len + scratch_len + panel_len) * 4);
+        // Int8 scratch joins the shared working set: one byte per i8
+        // patch element, four per i32 accumulator, plus the per-sample
+        // activation scales (batch f32s) when any step is quantized.
+        let qscratch_bytes = if qacc_len > 0 {
+            qpatch_len + qacc_len * 4 + batch * 4
+        } else {
+            0
+        };
+        let memory = MemoryUsage::new(
+            weight_bytes,
+            (arena_len + scratch_len + panel_len) * 4 + qscratch_bytes,
+        );
 
         let plan = ExecutionPlan {
             name: g.name.clone(),
@@ -1152,6 +1265,8 @@ impl Planner {
             arena_len,
             scratch_len,
             panel_len,
+            qpatch_len,
+            qacc_len,
             tuned: tuner.enabled(),
             tune_stats: tuner.stats(),
             memory,
@@ -1242,6 +1357,18 @@ fn bench_conv_exec(
         ConvExec::Reordered { plan, lanes } => ck::conv2d_reordered(
             x, n, plan, lanes, geom, PadMode::Zeros, None, Activation::Identity, pool,
             scratch, cand, ft, out,
+        ),
+        ConvExec::QDense { qw } => ck::conv2d_qdense(
+            x, n, qw, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch,
+            cand, ft, out,
+        ),
+        ConvExec::QCsr { qcsr } => ck::conv2d_qcsr(
+            x, n, qcsr, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch,
+            cand, ft, out,
+        ),
+        ConvExec::QColumn { qcc } => ck::conv2d_qcolumn(
+            x, n, qcc, geom, PadMode::Zeros, None, Activation::Identity, pool, scratch,
+            cand, ft, out,
         ),
     }
     if let Some(t) = tail {
@@ -1425,6 +1552,36 @@ mod tests {
         assert_eq!(p4.frame_input_shapes(), p1.input_shapes());
         assert_eq!(p4.frame_output_shapes(), p1.output_shapes());
         assert_eq!(p4.weight_bytes, p1.weight_bytes, "weights are batch-invariant");
+    }
+
+    #[test]
+    fn quantized_plan_accounts_int8_scratch_and_weights() {
+        let mut rng = Rng::new(12);
+        let g = residual_graph(&mut rng);
+        let f32_plan = Planner::plan(&g, &ExecConfig::dense(1)).unwrap();
+        let q = Planner::plan(
+            &g,
+            &ExecConfig::dense(1).with_quantize(Quantization::Int8),
+        )
+        .unwrap();
+        q.validate_layout().unwrap();
+        assert!(q.quantized() && !f32_plan.quantized());
+        assert!(q.qpatch_len() > 0 && q.qacc_len() > 0);
+        // i8 weights are ~4x smaller than f32, plus per-channel scales.
+        assert!(q.weight_bytes < f32_plan.weight_bytes / 2);
+        // The int8 scratch shows up in the shared-memory accounting.
+        assert!(
+            q.memory().shared_bytes
+                >= q.arena_len() * 4 + q.qpatch_len() + q.qacc_len() * 4
+        );
+        // Batched int8 plans scale the quant scratch by N like the rest.
+        let q4 = Planner::plan(
+            &g,
+            &ExecConfig::dense(1).with_quantize(Quantization::Int8).with_batch(4),
+        )
+        .unwrap();
+        assert_eq!(q4.qpatch_len(), 4 * q.qpatch_len());
+        assert_eq!(q4.qacc_len(), 4 * q.qacc_len());
     }
 
     #[test]

@@ -124,11 +124,13 @@ impl FleetReport {
             crate::util::fmt_bytes(self.unique_weight_bytes),
             crate::util::fmt_bytes(self.peak_bytes),
         );
-        if let Some(l) = &self.latency {
-            out.push_str(&format!(
+        match &self.latency {
+            Some(l) => out.push_str(&format!(
                 "  latency ms p50={:.2} p90={:.2} p99={:.2} p999={:.2} max={:.2}\n",
                 l.p50, l.p90, l.p99, l.p999, l.max
-            ));
+            )),
+            // Nothing completed: print `-`, never a phantom 0 ms.
+            None => out.push_str("  latency ms p50=- p90=- p99=- p999=- max=-\n"),
         }
         for m in &self.models {
             out.push_str(&format!(
@@ -144,11 +146,14 @@ impl FleetReport {
                 m.queue_peak,
                 m.queue_depth,
             ));
-            if let Some(l) = &m.latency {
-                out.push_str(&format!(
+            match &m.latency {
+                Some(l) => out.push_str(&format!(
                     " | ms p50={:.2} p99={:.2} p999={:.2}",
                     l.p50, l.p99, l.p999
-                ));
+                )),
+                // A registered model that saw no completed requests (e.g.
+                // a mix weight of ~0 or an all-rejected tenant).
+                None => out.push_str(" | ms p50=- p99=- p999=-"),
             }
             out.push('\n');
         }
@@ -167,11 +172,21 @@ impl FleetReport {
         o.insert("failed", self.failed);
         o.insert("unique_weight_bytes", self.unique_weight_bytes);
         o.insert("peak_bytes", self.peak_bytes);
-        if let Some(l) = &self.latency {
-            o.insert("latency_p50_ms", l.p50);
-            o.insert("latency_p90_ms", l.p90);
-            o.insert("latency_p99_ms", l.p99);
-            o.insert("latency_p999_ms", l.p999);
+        match &self.latency {
+            Some(l) => {
+                o.insert("latency_p50_ms", l.p50);
+                o.insert("latency_p90_ms", l.p90);
+                o.insert("latency_p99_ms", l.p99);
+                o.insert("latency_p999_ms", l.p999);
+            }
+            // Keys stay present (schema-stable) but carry `null` when no
+            // request completed — consumers must not read 0 ms.
+            None => {
+                o.insert("latency_p50_ms", Json::Null);
+                o.insert("latency_p90_ms", Json::Null);
+                o.insert("latency_p99_ms", Json::Null);
+                o.insert("latency_p999_ms", Json::Null);
+            }
         }
         let models: Vec<Json> = self.models.iter().map(model_json).collect();
         o.insert("models", models);
@@ -194,14 +209,23 @@ fn model_json(m: &ModelStats) -> Json {
     o.insert("frames_per_dispatch", m.frames_per_dispatch);
     o.insert("queue_peak", m.queue_peak);
     o.insert("weight_bytes", m.weight_bytes);
-    if let Some(l) = &m.latency {
-        o.insert("latency_p50_ms", l.p50);
-        o.insert("latency_p90_ms", l.p90);
-        o.insert("latency_p99_ms", l.p99);
-        o.insert("latency_p999_ms", l.p999);
+    match &m.latency {
+        Some(l) => {
+            o.insert("latency_p50_ms", l.p50);
+            o.insert("latency_p90_ms", l.p90);
+            o.insert("latency_p99_ms", l.p99);
+            o.insert("latency_p999_ms", l.p999);
+        }
+        None => {
+            o.insert("latency_p50_ms", Json::Null);
+            o.insert("latency_p90_ms", Json::Null);
+            o.insert("latency_p99_ms", Json::Null);
+            o.insert("latency_p999_ms", Json::Null);
+        }
     }
-    if let Some(inf) = &m.inference {
-        o.insert("infer_mean_ms", inf.mean);
+    match &m.inference {
+        Some(inf) => o.insert("infer_mean_ms", inf.mean),
+        None => o.insert("infer_mean_ms", Json::Null),
     }
     o.insert("hist", hist_json(&m.hist));
     Json::Obj(o)
@@ -291,5 +315,30 @@ mod tests {
         // Human render mentions the headline counters.
         let r = report.render();
         assert!(r.contains("submitted=15") && r.contains("p999="));
+    }
+
+    #[test]
+    fn zero_request_models_render_dashes_and_null_json() {
+        // A model that never completed a request (all-rejected tenant,
+        // `--mix` weight starving it, or a zero-request run) must report
+        // `-` / `null`, not panic and not claim 0 ms latency.
+        let quiet = stats("coloring", 0, 0);
+        let report =
+            FleetReport::assemble(Duration::from_secs(1), vec![quiet], &[], 512, 1024);
+        assert_eq!(report.completed, 0);
+        assert!(report.latency.is_none());
+        let r = report.render();
+        assert!(r.contains("latency ms p50=- p90=- p99=- p999=- max=-"), "{}", r);
+        assert!(r.contains("| ms p50=- p99=- p999=-"), "{}", r);
+        let j = report.to_json();
+        assert!(matches!(j.get("latency_p50_ms"), Json::Null));
+        assert!(matches!(j.get("latency_p999_ms"), Json::Null));
+        let models = j.get("models").as_arr().unwrap();
+        assert!(matches!(models[0].get("latency_p99_ms"), Json::Null));
+        assert!(matches!(models[0].get("infer_mean_ms"), Json::Null));
+        assert_eq!(models[0].get("completed").as_usize(), Some(0));
+        // The hist key is still present (empty arrays), keeping the
+        // FLEET-JSON schema stable for log scrapers.
+        assert_eq!(models[0].get("hist").get("count").as_arr().unwrap().len(), 0);
     }
 }

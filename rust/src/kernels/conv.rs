@@ -55,6 +55,12 @@ pub struct ConvScratch {
     /// Activation-gather panels for the reordered fallback (one slot per
     /// pool thread; see `sparse_gemm::reordered_panel_len`).
     panel: Vec<f32>,
+    /// Quantized im2col patch (int8 path; ¼ the f32 patch's bytes).
+    qpatch: Vec<i8>,
+    /// i32 GEMM accumulators (int8 path; requantized into the output).
+    qacc: Vec<i32>,
+    /// Per-sample dynamic activation scales (int8 path; one per frame).
+    xscales: Vec<f32>,
 }
 
 impl ConvScratch {
@@ -79,9 +85,35 @@ impl ConvScratch {
         }
     }
 
+    /// Pre-size the int8-path buffers (quantized patch, i32 accumulators,
+    /// per-sample scales). Exec contexts call this once at build time with
+    /// the plan's worst-case quant sizes; a correctly sized scratch never
+    /// reallocates at run time.
+    pub fn ensure_quant(&mut self, qpatch_len: usize, qacc_len: usize, batch: usize) {
+        if self.qpatch.len() < qpatch_len {
+            self.qpatch.resize(qpatch_len, 0);
+        }
+        if self.qacc.len() < qacc_len {
+            self.qacc.resize(qacc_len, 0);
+        }
+        if self.xscales.len() < batch {
+            self.xscales.resize(batch, 0.0);
+        }
+    }
+
     /// Current patch capacity in elements (used by the arena-reuse tests).
     pub fn capacity(&self) -> usize {
         self.patch.len()
+    }
+
+    /// Current quantized-patch capacity in elements (arena-reuse tests).
+    pub fn qpatch_capacity(&self) -> usize {
+        self.qpatch.len()
+    }
+
+    /// Current i32 accumulator capacity in elements (arena-reuse tests).
+    pub fn qacc_capacity(&self) -> usize {
+        self.qacc.len()
     }
 
     /// Current panel capacity in elements (used by the arena-reuse tests).
@@ -94,6 +126,25 @@ impl ConvScratch {
         self.ensure(patch_len);
         self.ensure_panel(panel_len);
         (&mut self.patch[..patch_len], &mut self.panel[..panel_len])
+    }
+
+    /// The int8 path's working set at its requested sizes: f32 patch,
+    /// quantized patch, i32 accumulators and per-sample scales (disjoint
+    /// field borrows).
+    fn qbufs(
+        &mut self,
+        patch_len: usize,
+        qacc_len: usize,
+        batch: usize,
+    ) -> (&mut [f32], &mut [i8], &mut [i32], &mut [f32]) {
+        self.ensure(patch_len);
+        self.ensure_quant(patch_len, qacc_len, batch);
+        (
+            &mut self.patch[..patch_len],
+            &mut self.qpatch[..patch_len],
+            &mut self.qacc[..qacc_len],
+            &mut self.xscales[..batch],
+        )
     }
 }
 
@@ -361,6 +412,186 @@ pub fn conv2d_pattern(
         |xin, patch| im2col(xin, geom, pad_mode, patch),
         geom.cols(),
         0,
+        out,
+    )
+}
+
+/// Shared int8 conv driver: lower the batch to f32 im2col patches (reusing
+/// the f32 path's lowering, including the pruned variant), quantize each
+/// sample's patch with a dynamic per-tensor scale, run the i8 GEMM/SpMM
+/// into the i32 accumulators, requantize to f32 with
+/// `wscale[ch] · xscale[sample]`, then apply the **unchanged** fused
+/// epilogue — so bias/activation/residual fusion composes with int8
+/// exactly as with f32. All buffers come from the pre-sized scratch; the
+/// steady state allocates nothing.
+#[allow(clippy::too_many_arguments)]
+fn qconv_common(
+    x: &[f32],
+    n: usize,
+    out_c: usize,
+    geom: &ConvGeom,
+    bias: Option<&[f32]>,
+    act: Activation,
+    tail: Option<&FusedTail<'_>>,
+    pool: &ComputePool,
+    scratch: &mut ConvScratch,
+    wscales: &[f32],
+    qgemm_fn: impl FnOnce(&[i8], &mut [i32]),
+    build_patch: impl Fn(&[f32], &mut [f32]) + Sync,
+    patch_rows: usize,
+    out: &mut [f32],
+) {
+    let chw = geom.in_c * geom.in_h * geom.in_w;
+    let opx = geom.out_px();
+    debug_assert_eq!(x.len(), n * chw);
+    debug_assert_eq!(out.len(), n * out_c * opx);
+    let patch_len = patch_rows * opx;
+    let (patch, qpatch, qacc, xscales) = scratch.qbufs(n * patch_len, n * out_c * opx, n);
+    if n == 1 || pool.threads() <= 1 {
+        for s in 0..n {
+            let pdst = &mut patch[s * patch_len..(s + 1) * patch_len];
+            build_patch(&x[s * chw..(s + 1) * chw], pdst);
+            xscales[s] =
+                crate::quant::quantize_act(pdst, &mut qpatch[s * patch_len..(s + 1) * patch_len]);
+        }
+    } else {
+        // Lower + quantize per sample in parallel (pure per-sample work).
+        let pp = SendPtr::new(patch.as_mut_ptr());
+        let qp = SendPtr::new(qpatch.as_mut_ptr());
+        let sp = SendPtr::new(xscales.as_mut_ptr());
+        pool.parallel_parts(n, |s| {
+            // SAFETY: sample s's patch panel, quantized panel and scale
+            // slot are disjoint scratch ranges.
+            unsafe {
+                let pdst = std::slice::from_raw_parts_mut(pp.get().add(s * patch_len), patch_len);
+                let qdst = std::slice::from_raw_parts_mut(qp.get().add(s * patch_len), patch_len);
+                build_patch(&x[s * chw..(s + 1) * chw], pdst);
+                *sp.get().add(s) = crate::quant::quantize_act(pdst, qdst);
+            }
+        });
+    }
+    // The i8 kernels accumulate; the scratch may hold a previous layer's
+    // accumulators.
+    qacc.fill(0);
+    qgemm_fn(qpatch, qacc);
+    crate::kernels::qgemm::requantize(qacc, wscales, xscales, out_c, opx, out, pool);
+    fused_epilogue(out, bias, out_c, opx, act, tail, pool);
+}
+
+/// Int8 unpruned baseline: im2col + quantize + dense i8 GEMM + requantize.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_qdense(
+    x: &[f32],
+    n: usize,
+    qw: &crate::quant::QDense,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    pool: &ComputePool,
+    scratch: &mut ConvScratch,
+    sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
+    out: &mut [f32],
+) {
+    let out_c = qw.rows;
+    let cols = geom.cols();
+    let opx = geom.out_px();
+    qconv_common(
+        x,
+        n,
+        out_c,
+        geom,
+        bias,
+        act,
+        tail,
+        pool,
+        scratch,
+        &qw.scales,
+        |qpatch, qacc| {
+            crate::kernels::qgemm::qgemm_batch(n, out_c, cols, opx, qw, qpatch, qacc, pool, sched)
+        },
+        |xin, patch| im2col(xin, geom, pad_mode, patch),
+        cols,
+        out,
+    )
+}
+
+/// Int8 pruned, no compiler: CSR-with-i8-values SpMM over the quantized
+/// patch.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_qcsr(
+    x: &[f32],
+    n: usize,
+    qcsr: &crate::quant::QCsr,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    pool: &ComputePool,
+    scratch: &mut ConvScratch,
+    sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
+    out: &mut [f32],
+) {
+    let out_c = qcsr.rows;
+    let opx = geom.out_px();
+    qconv_common(
+        x,
+        n,
+        out_c,
+        geom,
+        bias,
+        act,
+        tail,
+        pool,
+        scratch,
+        &qcsr.scales,
+        |qpatch, qacc| {
+            crate::kernels::qgemm::qspmm_csr_batch(n, qcsr, qpatch, opx, qacc, pool, sched)
+        },
+        |xin, patch| im2col(xin, geom, pad_mode, patch),
+        geom.cols(),
+        out,
+    )
+}
+
+/// Int8 column pruning + compiler: pruned im2col (kept rows only) +
+/// quantize + dense reduced-K i8 GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_qcolumn(
+    x: &[f32],
+    n: usize,
+    qcc: &crate::quant::QColumn,
+    geom: &ConvGeom,
+    pad_mode: PadMode,
+    bias: Option<&[f32]>,
+    act: Activation,
+    pool: &ComputePool,
+    scratch: &mut ConvScratch,
+    sched: &Schedule,
+    tail: Option<&FusedTail<'_>>,
+    out: &mut [f32],
+) {
+    let out_c = qcc.rows;
+    let kept = qcc.kept();
+    let opx = geom.out_px();
+    qconv_common(
+        x,
+        n,
+        out_c,
+        geom,
+        bias,
+        act,
+        tail,
+        pool,
+        scratch,
+        &qcc.scales,
+        |qpatch, qacc| {
+            crate::kernels::qgemm::qspmm_column_batch(n, qcc, qpatch, opx, qacc, pool, sched)
+        },
+        |xin, patch| im2col_pruned(xin, geom, pad_mode, &qcc.keep, patch),
+        kept,
         out,
     )
 }
@@ -690,6 +921,60 @@ mod tests {
         );
         let want = conv2d_ref(&x, &wp, Some(&bias), 1, 1, PadMode::Reflect, Activation::Relu);
         assert!(got.max_abs_diff(&want) < 1e-3, "err={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn quant_convs_track_the_f32_reference_and_are_exact_across_pools() {
+        use crate::quant::{QColumn, QCsr, QDense};
+        let mut rng = Rng::new(97);
+        let (n, ic, oc) = (2, 4, 12);
+        let x = rand_input(&mut rng, n, ic, 10, 10);
+        let wt = Tensor::randn(&[oc, ic, 3, 3], &mut rng);
+        let bias: Vec<f32> = (0..oc).map(|_| rng.normal()).collect();
+        let geom = ConvGeom::new(ic, 10, 10, 3, 1, 1);
+        let want = conv2d_ref(&x, &wt, Some(&bias), 1, 1, PadMode::Zeros, Activation::Relu);
+        let scale = want.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+
+        let gv = GemmView::from_oihw(&wt);
+        let qd = QDense::from_view(&gv);
+        let qc = QCsr::from_view(&gv);
+        let keep: Vec<usize> = (0..gv.cols).collect(); // dense keep: exact reduced GEMM
+        let qcol = QColumn::encode(&gv, &keep);
+
+        let run = |threads: usize, which: usize| -> Tensor {
+            let pool = ComputePool::new(threads);
+            let mut scratch = ConvScratch::new();
+            let mut got = Tensor::zeros(&[n, oc, 10, 10]);
+            let sched = Schedule::default();
+            match which {
+                0 => conv2d_qdense(
+                    x.data(), n, &qd, &geom, PadMode::Zeros, Some(&bias), Activation::Relu,
+                    &pool, &mut scratch, &sched, None, got.data_mut(),
+                ),
+                1 => conv2d_qcsr(
+                    x.data(), n, &qc, &geom, PadMode::Zeros, Some(&bias), Activation::Relu,
+                    &pool, &mut scratch, &sched, None, got.data_mut(),
+                ),
+                _ => conv2d_qcolumn(
+                    x.data(), n, &qcol, &geom, PadMode::Zeros, Some(&bias), Activation::Relu,
+                    &pool, &mut scratch, &sched, None, got.data_mut(),
+                ),
+            }
+            got
+        };
+        for which in 0..3 {
+            let got1 = run(1, which);
+            // Error-bounded vs the f32 reference (two rounding steps).
+            let err = got1.max_abs_diff(&want);
+            assert!(err <= 0.05 * (scale + 1.0), "which={} err={} scale={}", which, err, scale);
+            // Integer math is exact: thread count never moves a bit.
+            let got4 = run(4, which);
+            assert_eq!(got1.data(), got4.data(), "which={} moved bits across pools", which);
+        }
+        // All three formats quantize identically here (full keep list), so
+        // dense/CSR/column agree bitwise with each other too.
+        assert_eq!(run(2, 0).data(), run(2, 1).data());
+        assert_eq!(run(2, 0).data(), run(2, 2).data());
     }
 
     #[test]

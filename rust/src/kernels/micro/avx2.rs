@@ -327,6 +327,55 @@ unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// Int8 AXPY: sign-extend 8 i8 lanes to i32 (`_mm256_cvtepi8_epi32`), then
+/// 32-bit multiply-add. Integer math is exact, so this is bitwise-identical
+/// to the scalar default at any length/alignment.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_i8_avx2(av: i32, brow: &[i8], crow: &mut [i32]) {
+    let len = crow.len().min(brow.len());
+    let av8 = _mm256_set1_epi32(av);
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds the 8-byte i8 load and the 8-lane
+        // i32 load/store.
+        let b8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(brow.as_ptr().add(j) as *const __m128i));
+        let c8 = _mm256_loadu_si256(crow.as_ptr().add(j) as *const __m256i);
+        _mm256_storeu_si256(
+            crow.as_mut_ptr().add(j) as *mut __m256i,
+            _mm256_add_epi32(c8, _mm256_mullo_epi32(av8, b8)),
+        );
+        j += 8;
+    }
+    while j < len {
+        crow[j] += av * brow[j] as i32;
+        j += 1;
+    }
+}
+
+/// Int8 dot product: widened 8-lane i32 products, lane reduction, scalar
+/// tail. Exact, so lane order does not matter.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    let len = a.len().min(b.len());
+    let mut accv = _mm256_setzero_si256();
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds both 8-byte i8 loads.
+        let a8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(a.as_ptr().add(j) as *const __m128i));
+        let b8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(b.as_ptr().add(j) as *const __m128i));
+        accv = _mm256_add_epi32(accv, _mm256_mullo_epi32(a8, b8));
+        j += 8;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accv);
+    let mut acc: i32 = lanes.iter().sum();
+    while j < len {
+        acc += a[j] as i32 * b[j] as i32;
+        j += 1;
+    }
+    acc
+}
+
 impl MicroKernel for Avx2Kernel {
     fn isa(&self) -> Isa {
         Isa::Avx2
@@ -363,6 +412,16 @@ impl MicroKernel for Avx2Kernel {
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
         unsafe { dot_mul_add(a, b) }
+    }
+
+    fn axpy_i8(&self, av: i32, brow: &[i8], crow: &mut [i32]) {
+        // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
+        unsafe { axpy_i8_avx2(av, brow, crow) }
+    }
+
+    fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+        // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
+        unsafe { dot_i8_avx2(a, b) }
     }
 }
 
@@ -402,5 +461,16 @@ impl MicroKernel for Avx2FmaKernel {
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         // SAFETY: avx2+fma confirmed by runtime detection (see kernel_for).
         unsafe { dot_fma(a, b) }
+    }
+
+    fn axpy_i8(&self, av: i32, brow: &[i8], crow: &mut [i32]) {
+        // Integer math has no relaxed flavor — same exact kernel.
+        // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
+        unsafe { axpy_i8_avx2(av, brow, crow) }
+    }
+
+    fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+        // SAFETY: avx2 confirmed by runtime detection (see kernel_for).
+        unsafe { dot_i8_avx2(a, b) }
     }
 }

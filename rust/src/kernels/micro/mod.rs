@@ -179,6 +179,30 @@ pub trait MicroKernel: Sync {
     /// the scalar sum — see the module docs for why the planner pins the
     /// ISA per plan for dot-backed steps.
     fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// Int8 AXPY: `crow[j] += av * brow[j]` with i8 operands widened to
+    /// i32. Integer multiply-accumulate is **exact**, so every ISA flavor
+    /// (and the relaxed variants) produces bit-identical results — the
+    /// int8 path has no order-preserving/relaxed split. The default is the
+    /// scalar loop; SIMD kernels override it for bandwidth.
+    fn axpy_i8(&self, av: i32, brow: &[i8], crow: &mut [i32]) {
+        let len = crow.len().min(brow.len());
+        for j in 0..len {
+            crow[j] += av * brow[j] as i32;
+        }
+    }
+
+    /// Int8 dot product `Σ a[i]*b[i]` over `min(len)`, accumulated in i32.
+    /// Exact in any order, so SIMD overrides are bitwise-identical to this
+    /// scalar default.
+    fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+        let len = a.len().min(b.len());
+        let mut acc = 0i32;
+        for i in 0..len {
+            acc += a[i] as i32 * b[i] as i32;
+        }
+        acc
+    }
 }
 
 /// The historical scalar loops, verbatim. Always available; the bitwise
@@ -433,6 +457,65 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    fn seq_i8(len: usize, seed: i32) -> Vec<i8> {
+        (0..len)
+            .map(|i| (((i as i32 * 37 + seed * 11) % 255) - 127) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn axpy_i8_is_bitwise_scalar_on_every_flavor() {
+        // Integer math is exact: every ISA flavor (including relaxed) must
+        // produce identical i32 accumulators at odd lengths + offsets.
+        for k in host_kernels() {
+            for &len in &LENS {
+                for &off in &OFFSETS {
+                    let b = seq_i8(len + off, 3);
+                    let mut c_ref: Vec<i32> =
+                        (0..len + off).map(|i| i as i32 * 13 - 40).collect();
+                    let mut c = c_ref.clone();
+                    SCALAR.axpy_i8(-97, &b[off..], &mut c_ref[off..]);
+                    k.axpy_i8(-97, &b[off..], &mut c[off..]);
+                    assert_eq!(c, c_ref, "{:?} axpy_i8 len={} off={}", k.isa(), len, off);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_i8_is_bitwise_scalar_on_every_flavor() {
+        for k in host_kernels() {
+            for &len in &LENS {
+                for &off in &OFFSETS {
+                    let a = seq_i8(len + off, 5);
+                    let b = seq_i8(len + off, 9);
+                    assert_eq!(
+                        k.dot_i8(&a[off..], &b[off..]),
+                        SCALAR.dot_i8(&a[off..], &b[off..]),
+                        "{:?} dot_i8 len={} off={}",
+                        k.isa(),
+                        len,
+                        off
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_extremes_do_not_overflow_the_i32_accumulator() {
+        // 127*127 per element over long rows stays far from i32::MAX; the
+        // saturating extreme inputs must accumulate exactly.
+        let a = vec![127i8; 1024];
+        let b = vec![-127i8; 1024];
+        for k in host_kernels() {
+            assert_eq!(k.dot_i8(&a, &b), -127 * 127 * 1024);
+            let mut c = vec![0i32; 1024];
+            k.axpy_i8(127, &b, &mut c);
+            assert!(c.iter().all(|&v| v == -127 * 127));
         }
     }
 

@@ -308,6 +308,53 @@ unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// Int8 AXPY: widen 8 i8 lanes to i16 (`vmovl_s8`), multiply-accumulate
+/// into two i32 quads (`vmlal_s16`). Integer math is exact, so this is
+/// bitwise-identical to the scalar default.
+unsafe fn axpy_i8_neon(av: i32, brow: &[i8], crow: &mut [i32]) {
+    let len = crow.len().min(brow.len());
+    let av4 = vdupq_n_s32(av);
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds the 8-byte i8 load and both 4-lane
+        // i32 load/stores.
+        let b16 = vmovl_s8(vld1_s8(brow.as_ptr().add(j)));
+        let blo = vmovl_s16(vget_low_s16(b16));
+        let bhi = vmovl_s16(vget_high_s16(b16));
+        let clo = vld1q_s32(crow.as_ptr().add(j));
+        let chi = vld1q_s32(crow.as_ptr().add(j + 4));
+        vst1q_s32(crow.as_mut_ptr().add(j), vmlaq_s32(clo, av4, blo));
+        vst1q_s32(crow.as_mut_ptr().add(j + 4), vmlaq_s32(chi, av4, bhi));
+        j += 8;
+    }
+    while j < len {
+        crow[j] += av * brow[j] as i32;
+        j += 1;
+    }
+}
+
+/// Int8 dot product: widening multiplies into i32 lane partials, lane
+/// reduction, scalar tail. Exact in any order.
+unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+    let len = a.len().min(b.len());
+    let mut accv = vdupq_n_s32(0);
+    let mut j = 0;
+    while j + 8 <= len {
+        // SAFETY: j + 8 <= len bounds both 8-byte i8 loads.
+        let a16 = vmovl_s8(vld1_s8(a.as_ptr().add(j)));
+        let b16 = vmovl_s8(vld1_s8(b.as_ptr().add(j)));
+        accv = vmlal_s16(accv, vget_low_s16(a16), vget_low_s16(b16));
+        accv = vmlal_s16(accv, vget_high_s16(a16), vget_high_s16(b16));
+        j += 8;
+    }
+    let mut acc = vaddvq_s32(accv);
+    while j < len {
+        acc += a[j] as i32 * b[j] as i32;
+        j += 1;
+    }
+    acc
+}
+
 impl MicroKernel for NeonKernel {
     fn isa(&self) -> Isa {
         Isa::Neon
@@ -344,6 +391,16 @@ impl MicroKernel for NeonKernel {
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         // SAFETY: NEON is baseline on aarch64.
         unsafe { dot_mul_add(a, b) }
+    }
+
+    fn axpy_i8(&self, av: i32, brow: &[i8], crow: &mut [i32]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { axpy_i8_neon(av, brow, crow) }
+    }
+
+    fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { dot_i8_neon(a, b) }
     }
 }
 
@@ -382,5 +439,16 @@ impl MicroKernel for NeonFmaKernel {
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         // SAFETY: NEON is baseline on aarch64.
         unsafe { dot_fma(a, b) }
+    }
+
+    fn axpy_i8(&self, av: i32, brow: &[i8], crow: &mut [i32]) {
+        // Integer math has no relaxed flavor — same exact kernel.
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { axpy_i8_neon(av, brow, crow) }
+    }
+
+    fn dot_i8(&self, a: &[i8], b: &[i8]) -> i32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { dot_i8_neon(a, b) }
     }
 }

@@ -11,6 +11,8 @@
 //!   compact+reordered flavours,
 //! * [`sparse_gemm`] — CSR SpMM (pruned-no-compiler baseline) and the
 //!   reordered group GEMM (pruned+compiler),
+//! * [`qgemm`] — int8 GEMM / CSR / column-compact kernels (i8×i8→i32,
+//!   exact integer accumulation) + the requantize pass back to f32,
 //! * [`micro`] — explicit-SIMD microkernels (AVX2 / NEON / scalar) behind
 //!   the [`MicroKernel`](micro::MicroKernel) trait, selected once per plan
 //!   by runtime ISA detection and dispatched by the GEMM/SpMM inner loops,
@@ -27,6 +29,7 @@ pub mod gemm;
 pub mod im2col;
 pub mod conv;
 pub mod sparse_gemm;
+pub mod qgemm;
 pub mod micro;
 pub mod elementwise;
 pub mod resize;

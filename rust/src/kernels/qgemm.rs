@@ -1,0 +1,426 @@
+//! Int8 GEMM / SpMM kernels + the requantize pass.
+//!
+//! The i8 mirror of [`gemm`](crate::kernels::gemm) /
+//! [`sparse_gemm`](crate::kernels::sparse_gemm): `C[M,N] += W_i8[M,K] ·
+//! B_i8[K,N]` accumulating in **i32**. Because every i8×i8 product and
+//! i32 sum is exact, the kernels are bitwise-identical across ISAs,
+//! thread counts and schedule splits — there is no order-preserving vs
+//! relaxed distinction on the int8 path, and the blocked-cache hierarchy
+//! of the f32 GEMM buys nothing (the i8 operands are ¼ the traffic, which
+//! is the whole point on memory-bound sparse layers). What the tuner
+//! still searches per layer is the pool **split axis** (row chunks vs
+//! column chunks — load balance) via the `|q8` cache-key segment.
+//!
+//! [`requantize`] converts the i32 accumulators back to f32 with the
+//! per-output-channel weight scales × the per-sample dynamic activation
+//! scale; the resulting f32 plane then flows through the **unchanged**
+//! [`fused_epilogue`](crate::kernels::elementwise::fused_epilogue), so
+//! bias/activation/residual fusion chains compose with int8 exactly as
+//! they do with f32.
+
+use crate::kernels::for_each_sample_segment;
+use crate::kernels::micro::{self, MicroKernel};
+use crate::quant::{QColumn, QCsr, QDense};
+use crate::tuner::schedule::Schedule;
+use crate::tuner::SplitAxis;
+use crate::util::threadpool::{ComputePool, SendPtr};
+
+/// Dense i8 rows [ms, me) into `c_sub` (exactly those rows), columns
+/// [ns, ne). Zero-skip on the A value mirrors the f32 GEMM (adding an
+/// exact zero product is the identity, so skipping never moves a bit).
+#[allow(clippy::too_many_arguments)]
+fn qgemm_rows(
+    k: usize,
+    n: usize,
+    a_rows: &QDense,
+    b: &[i8],
+    c_sub: &mut [i32],
+    ms: usize,
+    me: usize,
+    ns: usize,
+    ne: usize,
+    mk: &dyn MicroKernel,
+) {
+    for r in ms..me {
+        let arow = a_rows.row(r);
+        let crow = &mut c_sub[(r - ms) * n + ns..(r - ms) * n + ne];
+        for (kk, &av) in arow.iter().enumerate().take(k) {
+            if av != 0 {
+                mk.axpy_i8(av as i32, &b[kk * n + ns..kk * n + ne], crow);
+            }
+        }
+    }
+}
+
+/// Batched dense i8 GEMM: `c[s] += a · b[s]` for every sample `s`, with
+/// `b` holding `nb` consecutive `k × n` panels and `c` holding `nb`
+/// consecutive `m × n` accumulator planes. The schedule's split axis
+/// picks row-chunk vs column-chunk pool partitioning (bitwise-identical
+/// either way — integer math is exact).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_batch(
+    nb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &QDense,
+    b: &[i8],
+    c: &mut [i32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
+    debug_assert_eq!(a.rows, m);
+    debug_assert_eq!(a.cols, k);
+    debug_assert!(b.len() >= nb * k * n);
+    debug_assert!(c.len() >= nb * m * n);
+    let mk = micro::kernel_for(sched.isa, sched.relaxed);
+    if pool.threads() <= 1 {
+        for s in 0..nb {
+            qgemm_rows(k, n, a, &b[s * k * n..], &mut c[s * m * n..(s + 1) * m * n], 0, m, 0, n, mk);
+        }
+        return;
+    }
+    let cp = SendPtr::new(c.as_mut_ptr());
+    match sched.split {
+        SplitAxis::Rows => pool.parallel_chunks(nb * m, |gs, ge, _| {
+            for_each_sample_segment(m, gs, ge, |s, lo, hi| {
+                // SAFETY: rows lo..hi of sample s are a disjoint C range.
+                let c_sub = unsafe {
+                    std::slice::from_raw_parts_mut(cp.get().add((s * m + lo) * n), (hi - lo) * n)
+                };
+                qgemm_rows(k, n, a, &b[s * k * n..], c_sub, lo, hi, 0, n, mk);
+            });
+        }),
+        SplitAxis::Cols => pool.parallel_chunks(nb * n, |gs, ge, _| {
+            for_each_sample_segment(n, gs, ge, |s, lo, hi| {
+                // SAFETY: every chunk touches a disjoint column range of
+                // sample s's C plane — chunks never overlap.
+                let c_sub =
+                    unsafe { std::slice::from_raw_parts_mut(cp.get().add(s * m * n), m * n) };
+                qgemm_rows(k, n, a, &b[s * k * n..], c_sub, 0, m, lo, hi, mk);
+            });
+        }),
+    }
+}
+
+/// CSR i8 rows [ms, me), columns [ns, ne).
+#[allow(clippy::too_many_arguments)]
+fn qspmm_csr_rows(
+    w: &QCsr,
+    b: &[i8],
+    n: usize,
+    c_sub: &mut [i32],
+    ms: usize,
+    me: usize,
+    ns: usize,
+    ne: usize,
+    mk: &dyn MicroKernel,
+) {
+    for r in ms..me {
+        let (cols, vals) = w.row(r);
+        let crow = &mut c_sub[(r - ms) * n + ns..(r - ms) * n + ne];
+        for (ci, &col) in cols.iter().enumerate() {
+            let av = vals[ci];
+            if av != 0 {
+                let bi = col as usize * n;
+                mk.axpy_i8(av as i32, &b[bi + ns..bi + ne], crow);
+            }
+        }
+    }
+}
+
+/// Batched i8 CSR SpMM — the quantized "pruning, no compiler" kernel.
+/// Layouts match [`qgemm_batch`].
+#[allow(clippy::too_many_arguments)]
+pub fn qspmm_csr_batch(
+    nb: usize,
+    w: &QCsr,
+    b: &[i8],
+    n: usize,
+    c: &mut [i32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
+    let (m, k) = (w.rows, w.cols);
+    debug_assert!(b.len() >= nb * k * n);
+    debug_assert!(c.len() >= nb * m * n);
+    let mk = micro::kernel_for(sched.isa, sched.relaxed);
+    if pool.threads() <= 1 {
+        for s in 0..nb {
+            qspmm_csr_rows(
+                w,
+                &b[s * k * n..],
+                n,
+                &mut c[s * m * n..(s + 1) * m * n],
+                0,
+                m,
+                0,
+                n,
+                mk,
+            );
+        }
+        return;
+    }
+    let cp = SendPtr::new(c.as_mut_ptr());
+    match sched.split {
+        SplitAxis::Rows => pool.parallel_chunks(nb * m, |gs, ge, _| {
+            for_each_sample_segment(m, gs, ge, |s, lo, hi| {
+                // SAFETY: rows lo..hi of sample s are a disjoint C range.
+                let c_sub = unsafe {
+                    std::slice::from_raw_parts_mut(cp.get().add((s * m + lo) * n), (hi - lo) * n)
+                };
+                qspmm_csr_rows(w, &b[s * k * n..], n, c_sub, lo, hi, 0, n, mk);
+            });
+        }),
+        SplitAxis::Cols => pool.parallel_chunks(nb * n, |gs, ge, _| {
+            for_each_sample_segment(n, gs, ge, |s, lo, hi| {
+                // SAFETY: disjoint column ranges of sample s's C plane.
+                let c_sub =
+                    unsafe { std::slice::from_raw_parts_mut(cp.get().add(s * m * n), m * n) };
+                qspmm_csr_rows(w, &b[s * k * n..], n, c_sub, 0, m, lo, hi, mk);
+            });
+        }),
+    }
+}
+
+/// Batched i8 column-compact SpMM — the quantized "pruning + compiler"
+/// kernel: a dense reduced-K GEMM over the pre-gathered kept patch rows
+/// (`b_packed` holds `nb` consecutive `kept × n` panels).
+#[allow(clippy::too_many_arguments)]
+pub fn qspmm_column_batch(
+    nb: usize,
+    w: &QColumn,
+    b_packed: &[i8],
+    n: usize,
+    c: &mut [i32],
+    pool: &ComputePool,
+    sched: &Schedule,
+) {
+    // The packed form is exactly a dense m × kept i8 GEMM over
+    // `w.packed_row(r)`.
+    let (m, kept) = (w.rows, w.kept());
+    debug_assert!(b_packed.len() >= nb * kept * n);
+    debug_assert!(c.len() >= nb * m * n);
+    let mk = micro::kernel_for(sched.isa, sched.relaxed);
+    let row_range = |c_sub: &mut [i32], b: &[i8], ms: usize, me: usize, ns: usize, ne: usize| {
+        for r in ms..me {
+            let arow = w.packed_row(r);
+            let crow = &mut c_sub[(r - ms) * n + ns..(r - ms) * n + ne];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av != 0 {
+                    mk.axpy_i8(av as i32, &b[kk * n + ns..kk * n + ne], crow);
+                }
+            }
+        }
+    };
+    if pool.threads() <= 1 {
+        for s in 0..nb {
+            row_range(
+                &mut c[s * m * n..(s + 1) * m * n],
+                &b_packed[s * kept * n..],
+                0,
+                m,
+                0,
+                n,
+            );
+        }
+        return;
+    }
+    let cp = SendPtr::new(c.as_mut_ptr());
+    match sched.split {
+        SplitAxis::Rows => pool.parallel_chunks(nb * m, |gs, ge, _| {
+            for_each_sample_segment(m, gs, ge, |s, lo, hi| {
+                // SAFETY: rows lo..hi of sample s are a disjoint C range.
+                let c_sub = unsafe {
+                    std::slice::from_raw_parts_mut(cp.get().add((s * m + lo) * n), (hi - lo) * n)
+                };
+                row_range(c_sub, &b_packed[s * kept * n..], lo, hi, 0, n);
+            });
+        }),
+        SplitAxis::Cols => pool.parallel_chunks(nb * n, |gs, ge, _| {
+            for_each_sample_segment(n, gs, ge, |s, lo, hi| {
+                // SAFETY: disjoint column ranges of sample s's C plane.
+                let c_sub =
+                    unsafe { std::slice::from_raw_parts_mut(cp.get().add(s * m * n), m * n) };
+                row_range(c_sub, &b_packed[s * kept * n..], 0, m, lo, hi);
+            });
+        }),
+    }
+}
+
+/// Requantize the i32 accumulators to f32:
+/// `out[s, ch, j] = acc[s, ch, j] · wscales[ch] · xscales[s]`.
+///
+/// One multiply per element with a per-element-deterministic expression,
+/// so the pass is bitwise-stable at any thread count. The caller then
+/// runs the unchanged fused epilogue (bias / activation / residual) over
+/// the f32 output.
+pub fn requantize(
+    acc: &[i32],
+    wscales: &[f32],
+    xscales: &[f32],
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: &ComputePool,
+) {
+    let nb = xscales.len();
+    debug_assert!(acc.len() >= nb * m * n);
+    debug_assert_eq!(out.len(), nb * m * n);
+    debug_assert_eq!(wscales.len(), m);
+    let body = |gs: usize, ge: usize, out_sub: &mut [f32]| {
+        for_each_sample_segment(m, gs, ge, |s, lo, hi| {
+            let xs = xscales[s];
+            for r in lo..hi {
+                let g = s * m + r;
+                let scale = wscales[r] * xs;
+                let arow = &acc[g * n..(g + 1) * n];
+                let orow = &mut out_sub[(g - gs) * n..(g - gs + 1) * n];
+                for (o, &v) in orow.iter_mut().zip(arow) {
+                    *o = v as f32 * scale;
+                }
+            }
+        });
+    };
+    let total = nb * m;
+    if pool.threads() <= 1 || total * n < crate::kernels::MIN_PAR_ELEMS {
+        body(0, total, out);
+        return;
+    }
+    let op = SendPtr::new(out.as_mut_ptr());
+    pool.parallel_chunks(total, |gs, ge, _| {
+        // SAFETY: rows gs..ge are a disjoint contiguous range of `out`.
+        let out_sub =
+            unsafe { std::slice::from_raw_parts_mut(op.get().add(gs * n), (ge - gs) * n) };
+        body(gs, ge, out_sub);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_act, QColumn, QCsr, QDense};
+    use crate::sparse::GemmView;
+    use crate::util::rng::{check_prop, Rng};
+
+    fn rand_view(rng: &mut Rng, rows: usize, cols: usize, sparsity: usize) -> GemmView {
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| if rng.below(10) < sparsity { 0.0 } else { rng.normal() * 2.0 })
+            .collect();
+        GemmView { rows, cols, data }
+    }
+
+    fn naive_qgemm(a: &QDense, b: &[i8], nb: usize, n: usize) -> Vec<i32> {
+        let (m, k) = (a.rows, a.cols);
+        let mut c = vec![0i32; nb * m * n];
+        for s in 0..nb {
+            for r in 0..m {
+                for kk in 0..k {
+                    let av = a.row(r)[kk] as i32;
+                    for j in 0..n {
+                        c[(s * m + r) * n + j] += av * b[s * k * n + kk * n + j] as i32;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn qgemm_matches_naive_and_is_bitwise_across_threads_and_splits() {
+        check_prop("qgemm == naive, exact across pools/splits", 8, |rng| {
+            let (nb, m, k, n) = (rng.range(1, 4), rng.range(1, 9), rng.range(1, 17), rng.range(1, 33));
+            let g = rand_view(rng, m, k, 0);
+            let a = QDense::from_view(&g);
+            let bf: Vec<f32> = (0..nb * k * n).map(|_| rng.normal()).collect();
+            let mut b = vec![0i8; nb * k * n];
+            quantize_act(&bf, &mut b);
+            let want = naive_qgemm(&a, &b, nb, n);
+            for threads in [1usize, 4] {
+                let pool = ComputePool::new(threads);
+                for split in [SplitAxis::Rows, SplitAxis::Cols] {
+                    let sched = Schedule { split, ..Schedule::default() };
+                    let mut c = vec![0i32; nb * m * n];
+                    qgemm_batch(nb, m, k, n, &a, &b, &mut c, &pool, &sched);
+                    assert_eq!(c, want, "t={} split={:?}", threads, split);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn qspmm_csr_matches_qgemm_on_the_same_matrix() {
+        check_prop("qcsr spmm == qgemm", 8, |rng| {
+            let (nb, m, k, n) = (rng.range(1, 3), rng.range(2, 10), rng.range(2, 20), rng.range(1, 24));
+            let g = rand_view(rng, m, k, 6);
+            let qd = QDense::from_view(&g);
+            let qc = QCsr::from_view(&g);
+            let b: Vec<i8> = (0..nb * k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want = naive_qgemm(&qd, &b, nb, n);
+            for threads in [1usize, 3] {
+                let pool = ComputePool::new(threads);
+                for split in [SplitAxis::Rows, SplitAxis::Cols] {
+                    let sched = Schedule { split, ..Schedule::default() };
+                    let mut c = vec![0i32; nb * m * n];
+                    qspmm_csr_batch(nb, &qc, &b, n, &mut c, &pool, &sched);
+                    assert_eq!(c, want, "t={} split={:?}", threads, split);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn qspmm_column_matches_the_gathered_dense_gemm() {
+        let mut rng = Rng::new(23);
+        let (nb, m, k, n) = (2, 6, 12, 10);
+        let g = rand_view(&mut rng, m, k, 0);
+        let keep: Vec<usize> = vec![0, 2, 3, 7, 11];
+        let qcol = QColumn::encode(&g, &keep);
+        // Reference: dense GEMM over the packed rows.
+        let packed = GemmView {
+            rows: m,
+            cols: keep.len(),
+            data: (0..m)
+                .flat_map(|r| keep.iter().map(move |&c| g.data[r * k + c]).collect::<Vec<_>>())
+                .collect(),
+        };
+        // Quantize the packed view with the *full-row* scales to mirror
+        // QColumn::encode, then compare against its integer GEMM.
+        let mut pd = QDense::from_view(&packed);
+        for r in 0..m {
+            let s = crate::quant::row_scale(&g.data[r * k..(r + 1) * k]);
+            for (j, q) in pd.values[r * keep.len()..(r + 1) * keep.len()].iter_mut().enumerate() {
+                *q = crate::quant::quantize_value(packed.data[r * keep.len() + j], s);
+            }
+        }
+        let b: Vec<i8> =
+            (0..nb * keep.len() * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let want = naive_qgemm(&pd, &b, nb, n);
+        let pool = ComputePool::new(2);
+        let mut c = vec![0i32; nb * m * n];
+        qspmm_column_batch(nb, &qcol, &b, n, &mut c, &pool, &Schedule::default());
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn requantize_applies_per_channel_times_per_sample_scales() {
+        let (nb, m, n) = (2, 3, 4);
+        let acc: Vec<i32> = (0..nb * m * n).map(|i| i as i32 - 10).collect();
+        let wscales = vec![0.5f32, 2.0, 1.0];
+        let xscales = vec![1.0f32, 0.25];
+        let mut out = vec![0.0f32; nb * m * n];
+        requantize(&acc, &wscales, &xscales, m, n, &mut out, &ComputePool::serial());
+        for s in 0..nb {
+            for r in 0..m {
+                for j in 0..n {
+                    let i = (s * m + r) * n + j;
+                    assert_eq!(out[i], acc[i] as f32 * wscales[r] * xscales[s]);
+                }
+            }
+        }
+        // Multi-threaded pass is bitwise-identical.
+        let mut out4 = vec![0.0f32; nb * m * n];
+        requantize(&acc, &wscales, &xscales, m, n, &mut out4, &ComputePool::new(4));
+        assert_eq!(out, out4);
+    }
+}

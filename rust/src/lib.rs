@@ -35,6 +35,7 @@ pub mod tensor;
 pub mod dsl;
 pub mod pruning;
 pub mod sparse;
+pub mod quant;
 pub mod reorder;
 pub mod passes;
 pub mod kernels;

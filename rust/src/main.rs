@@ -27,6 +27,9 @@
 //! `--no-fuse` disables plan-time operator fusion (compound
 //! conv+bias+act(+add) steps — see `docs/ARCHITECTURE.md` §Fusion); the
 //! unfused plan is the bitwise reference the fused one is tested against.
+//! `--int8` quantizes conv weights to per-channel int8 and runs the
+//! i8×i8→i32 kernels (see `docs/ARCHITECTURE.md` §Quantization) — outputs
+//! track the f32 path within documented error bounds rather than bitwise.
 //! `fleet` serves several models at once behind per-model bounded queues
 //! (see `docs/ARCHITECTURE.md` §Fleet): `--mode closed --concurrency N`
 //! keeps N requests in flight, `--mode open --rps R` offers Poisson
@@ -47,7 +50,7 @@ use prt_dnn::passes::PassManager;
 use prt_dnn::perfmodel::{estimate_graph, Device, VariantKind};
 use prt_dnn::pruning::graph_sparsity_report;
 use prt_dnn::runtime::{Manifest, PjrtModel};
-use prt_dnn::session::{Model, ServeOpts, Session};
+use prt_dnn::session::{Model, Quantization, ServeOpts, Session};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::cli::Args;
@@ -81,6 +84,17 @@ fn run(args: &Args) -> Result<()> {
             println!("subcommands: apps | compile | run | serve | fleet | model | artifacts");
             Ok(())
         }
+    }
+}
+
+/// `--int8` → quantize conv weights to per-channel int8 (see
+/// `docs/ARCHITECTURE.md` §Quantization). Activations stay f32; outputs
+/// are error-bounded, not bitwise, against the f32 path.
+fn quantization(args: &Args) -> Quantization {
+    if args.has_flag("int8") {
+        Quantization::Int8
+    } else {
+        Quantization::None
     }
 }
 
@@ -191,11 +205,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         .force_scalar(args.has_flag("force-scalar"))
         .relaxed_simd(args.has_flag("relaxed-simd"))
         .fuse(!args.has_flag("no-fuse"))
+        .quantize(quantization(args))
         .build()?;
     print_isa(&session);
     print_tune_stats(&session);
     if session.fused_steps() > 0 {
         println!("fusion: {} compound steps", session.fused_steps());
+    }
+    if session.quantization().is_quantized() {
+        println!("quantization: int8 conv weights (per-channel scales)");
     }
     let input_shape = session.shapes().inputs[0].clone();
     let x = Tensor::full(&input_shape, 0.5);
@@ -240,11 +258,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .force_scalar(args.has_flag("force-scalar"))
         .relaxed_simd(args.has_flag("relaxed-simd"))
         .fuse(!args.has_flag("no-fuse"))
+        .quantize(quantization(args))
         .build()?;
     print_isa(&session);
     print_tune_stats(&session);
     if session.fused_steps() > 0 {
         println!("fusion: {} compound steps", session.fused_steps());
+    }
+    if session.quantization().is_quantized() {
+        println!("quantization: int8 conv weights (per-channel scales)");
     }
     let ishape = session.shapes().frame_inputs[0].clone();
     let (h, w) = (ishape[2], ishape[3]);
@@ -300,19 +322,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `--mix a=2,b=1` → weighted tenant mix (`a` alone means weight 1).
+///
+/// Weights must be finite and strictly positive, and each model may
+/// appear at most once: the load generator samples tenants proportionally
+/// to weight, so `a=0`, `a=-1` or `a=nan` would silently corrupt the
+/// sampling distribution (NaN poisons the cumulative sum; non-positive
+/// weights make the prefix sums non-monototic). Rejecting them here turns
+/// a wrong-answer bug into a CLI error.
 fn parse_mix(spec: &str) -> Result<Vec<(String, f64)>> {
-    let mut mix = Vec::new();
+    let mut mix: Vec<(String, f64)> = Vec::new();
     for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-        match part.split_once('=') {
+        let (id, weight) = match part.split_once('=') {
             Some((id, w)) => {
                 let weight: f64 = w
                     .trim()
                     .parse()
                     .with_context(|| format!("bad mix weight '{}' for '{}'", w, id))?;
-                mix.push((id.trim().to_string(), weight));
+                (id.trim().to_string(), weight)
             }
-            None => mix.push((part.to_string(), 1.0)),
+            None => (part.to_string(), 1.0),
+        };
+        if !weight.is_finite() || weight <= 0.0 {
+            bail!(
+                "mix weight for '{}' must be finite and > 0 (got {})",
+                id,
+                weight
+            );
         }
+        if mix.iter().any(|(seen, _)| *seen == id) {
+            bail!("model '{}' appears more than once in --mix '{}'", id, spec);
+        }
+        mix.push((id, weight));
     }
     Ok(mix)
 }
@@ -350,7 +390,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 .tune(tune_opts(args))
                 .force_scalar(args.has_flag("force-scalar"))
                 .relaxed_simd(args.has_flag("relaxed-simd"))
-                .fuse(!args.has_flag("no-fuse")),
+                .fuse(!args.has_flag("no-fuse"))
+                .quantize(quantization(args)),
         )?;
     }
     let fleet = builder.build()?;
@@ -465,4 +506,46 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_mix_accepts_weighted_and_bare_specs() {
+        let mix = parse_mix("style=2, sr=1").unwrap();
+        assert_eq!(mix, vec![("style".to_string(), 2.0), ("sr".to_string(), 1.0)]);
+        // A bare model name means weight 1; empty segments are skipped.
+        let mix = parse_mix("style,,coloring=0.5,").unwrap();
+        assert_eq!(
+            mix,
+            vec![("style".to_string(), 1.0), ("coloring".to_string(), 0.5)]
+        );
+    }
+
+    #[test]
+    fn parse_mix_rejects_degenerate_weights() {
+        // Zero, negative and NaN weights would corrupt the load
+        // generator's weighted sampling — all typed CLI errors now.
+        for bad in ["a=0", "a=-1", "a=nan", "a=-0.0", "a=inf"] {
+            let err = parse_mix(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("finite and > 0"),
+                "'{}' should be rejected as a degenerate weight, got: {}",
+                bad,
+                err
+            );
+        }
+        // Unparseable weights keep the pre-existing parse error.
+        assert!(parse_mix("a=two").unwrap_err().to_string().contains("bad mix weight"));
+    }
+
+    #[test]
+    fn parse_mix_rejects_duplicate_models() {
+        let err = parse_mix("style=1,sr=2,style=3").unwrap_err().to_string();
+        assert!(err.contains("more than once"), "{}", err);
+        // Bare and weighted mentions of the same model also collide.
+        assert!(parse_mix("sr,sr=2").is_err());
+    }
 }

@@ -18,8 +18,10 @@
 
 pub mod device;
 pub mod cost;
+pub mod quanterr;
 pub mod sched;
 
 pub use cost::{estimate_graph, OpCost, VariantKind};
 pub use device::Device;
+pub use quanterr::{dot_error_bound, int8_error_bound, Int8Bounds};
 pub use sched::{gemm_schedule_seconds, HostModel};

@@ -1,0 +1,103 @@
+//! Documented error envelopes for the int8 inference path — the second
+//! oracle (docs/ARCHITECTURE.md §Quantization).
+//!
+//! The int8 path cannot satisfy the crate's bitwise oracle against f32:
+//! quantizing weights to per-channel i8 is lossy by construction. What it
+//! *can* satisfy is an analytical error bound, asserted end to end by
+//! `rust/tests/int8_accuracy.rs` against the bounds tabulated here.
+//!
+//! **Noise model.** A single i8×i8→i32 dot product of length `k` is exact
+//! in integer arithmetic; all error comes from the two rounding steps:
+//!
+//! * weight rounding: `|w − ŵ·Δw| ≤ Δw/2` with `Δw = max|w_row| / 127`
+//!   (per output channel),
+//! * activation rounding: `|x − x̂·Δx| ≤ Δx/2` with `Δx = max|x| / 127`
+//!   (per dispatch, over the im2col patch).
+//!
+//! Cross terms are second order, so one output element's error is bounded
+//! by `(Δw/2)·Σ|x| + (Δx/2)·Σ|ŵ·Δw|` — about `k/254 · (max|w|·max|x|)`
+//! worst case, and `≈ √k` smaller in the mean under the usual independent
+//! rounding-noise assumption. Layers compound multiplicatively through
+//! each layer's gain, but the demo apps' post-activation ranges are
+//! normalised (≈ [0, 1]), which keeps the envelope flat in practice.
+//!
+//! The per-app numbers below are that analysis padded with margin for the
+//! deepest layer stack in each app, then frozen as the contract the
+//! accuracy harness (and `table1`'s `int8_max_err` column) enforces. They
+//! are deliberately loose enough to be ISA- and schedule-independent —
+//! the integer kernels themselves are bitwise identical across
+//! scalar/AVX2/NEON and across thread counts, so only the f32 reference
+//! varies — and tight enough that a broken kernel (wrong scale, dropped
+//! tail, transposed index) lands orders of magnitude outside them.
+
+/// Error envelope for one app's int8 session output vs the f32 session,
+/// over the crate's deterministic synthetic inputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Int8Bounds {
+    /// Largest tolerated absolute elementwise difference.
+    pub max_abs: f64,
+    /// Largest tolerated mean absolute difference (catches broad bias a
+    /// forgiving max-abs bound would let through).
+    pub mean_abs: f64,
+}
+
+/// The frozen per-app int8 error envelope (see module docs for the
+/// derivation). Unknown apps get the loosest row — new apps should be
+/// added here once characterised.
+pub fn int8_error_bound(app: &str) -> Int8Bounds {
+    match app {
+        // 9-conv encoder/decoder, outputs tanh-bounded to (-1, 1).
+        "style" => Int8Bounds { max_abs: 0.5, mean_abs: 0.05 },
+        // Shallower stack, sigmoid-bounded outputs.
+        "coloring" => Int8Bounds { max_abs: 0.5, mean_abs: 0.05 },
+        // Residual SR tower + pixel-shuffle: deepest effective path, and
+        // the residual add carries quantization noise straight through.
+        "sr" => Int8Bounds { max_abs: 0.6, mean_abs: 0.06 },
+        _ => Int8Bounds { max_abs: 0.6, mean_abs: 0.06 },
+    }
+}
+
+/// Worst-case absolute error of one length-`k` quantized dot product
+/// (the per-layer term of the module-level noise model). Useful for
+/// kernel-level tests that want a shape-aware bound instead of a frozen
+/// per-app envelope.
+pub fn dot_error_bound(k: usize, w_absmax: f64, x_absmax: f64) -> f64 {
+    // (Δw/2)·k·max|x| + (Δx/2)·k·max|w| with Δ = absmax/127.
+    let dw = w_absmax / 127.0;
+    let dx = x_absmax / 127.0;
+    k as f64 * (0.5 * dw * x_absmax + 0.5 * dx * w_absmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_positive_and_ordered() {
+        for app in ["style", "coloring", "sr", "unknown"] {
+            let b = int8_error_bound(app);
+            assert!(b.max_abs > 0.0 && b.mean_abs > 0.0, "{}", app);
+            // Mean error can never legitimately exceed the max error.
+            assert!(b.mean_abs <= b.max_abs, "{}", app);
+        }
+        // The unknown-app fallback is the loosest row.
+        let fallback = int8_error_bound("unknown");
+        for app in ["style", "coloring", "sr"] {
+            assert!(int8_error_bound(app).max_abs <= fallback.max_abs);
+        }
+    }
+
+    #[test]
+    fn dot_bound_scales_linearly_and_covers_a_real_dot() {
+        assert!(dot_error_bound(200, 1.0, 1.0) > dot_error_bound(100, 1.0, 1.0));
+        // An exhaustive tiny case: quantize and compare by hand.
+        let w = [0.9f64, -0.4, 0.25];
+        let x = [0.7f64, 0.2, -0.95];
+        let wmax = 0.9;
+        let xmax = 0.95;
+        let q = |v: f64, m: f64| (v / (m / 127.0)).round() * (m / 127.0);
+        let exact: f64 = w.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let quant: f64 = w.iter().zip(&x).map(|(a, b)| q(*a, wmax) * q(*b, xmax)).sum();
+        assert!((exact - quant).abs() <= dot_error_bound(3, wmax, xmax));
+    }
+}

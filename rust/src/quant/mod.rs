@@ -1,0 +1,382 @@
+//! Post-training int8 quantization (per-channel symmetric).
+//!
+//! The paper's pruning + compiler stack targets mobile memory-bandwidth
+//! budgets, and the roofline model ([`perfmodel`](crate::perfmodel)) puts
+//! the sparse kernels firmly in memory-bound territory — exactly where
+//! int8's 4× weight-traffic reduction pays. This module holds the storage
+//! side of the crate's int8 path:
+//!
+//! * **Weights** are quantized once at plan-encode time with a
+//!   **per-output-channel symmetric scale**: `scale[ch] = maxabs(row
+//!   ch) / 127`, `q = round(w / scale)` clamped to `[-127, 127]`. Symmetric
+//!   (no zero point) keeps the i8×i8→i32 inner loops free of zero-point
+//!   cross terms, and per-channel scales keep the filter with the largest
+//!   dynamic range from crushing everyone else's resolution.
+//! * **Activations** are quantized per dispatch with a **per-tensor
+//!   dynamic scale** over the lowered im2col patch ([`quantize_act`]) —
+//!   activations between steps stay f32, so the graph/arena/batching
+//!   machinery is untouched and the requantize epilogue composes with the
+//!   fused bias/activation/residual tails.
+//! * Three storage formats mirror the f32 side: [`QDense`] (dense i8
+//!   rows), [`QCsr`] (CSR with i8 values) and [`QColumn`] (column-compact
+//!   packed i8 rows + shared keep list).
+//!
+//! Because i8×i8 products and i32 sums are **exact**, the int8 kernels are
+//! bitwise-identical across ISAs, thread counts and schedules — the only
+//! approximation in the whole path is the two rounding steps (weights at
+//! encode time, activations at dispatch time). That is why the int8
+//! oracle is *error-bounded against the f32 session*
+//! (`rust/tests/int8_accuracy.rs` with per-app bounds from
+//! [`perfmodel::int8_error_bound`](crate::perfmodel::int8_error_bound))
+//! rather than bitwise.
+
+use crate::sparse::{Csr, GemmView};
+
+/// Session-level quantization mode, selected with
+/// [`SessionBuilder::quantize`](crate::session::SessionBuilder::quantize)
+/// (CLI: `--int8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Quantization {
+    /// Full-precision f32 execution (the default).
+    #[default]
+    None,
+    /// Per-channel symmetric int8 conv weights + dynamic per-tensor int8
+    /// activations, i32 accumulation, f32 requantize epilogue. Conv layers
+    /// only; depthwise and fully-connected steps stay f32.
+    Int8,
+}
+
+impl Quantization {
+    /// Stable lowercase tag used in JSON and cache keys.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Quantization::None => "f32",
+            Quantization::Int8 => "int8",
+        }
+    }
+
+    /// Whether this mode quantizes anything.
+    pub fn is_quantized(self) -> bool {
+        self != Quantization::None
+    }
+}
+
+/// The symmetric i8 quantization ceiling (`i8::MAX` as f32; -128 is never
+/// produced so negation stays in range).
+pub const QMAX: f32 = 127.0;
+
+/// Per-channel symmetric scale for one weight row: `maxabs / 127`.
+///
+/// An all-zero row gets scale `1.0` so requantization stays a plain
+/// multiply (the quantized row is all zeros either way, so the dequantized
+/// result is exactly zero).
+pub fn row_scale(row: &[f32]) -> f32 {
+    let maxabs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if maxabs == 0.0 {
+        1.0
+    } else {
+        maxabs / QMAX
+    }
+}
+
+/// Quantize `v` with `scale`: round-to-nearest, clamped to ±127.
+#[inline]
+pub fn quantize_value(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-QMAX, QMAX) as i8
+}
+
+/// Quantize one row into `out` (same length) with a fixed scale.
+pub fn quantize_into(row: &[f32], scale: f32, out: &mut [i8]) {
+    debug_assert_eq!(row.len(), out.len());
+    for (q, &v) in out.iter_mut().zip(row) {
+        *q = quantize_value(v, scale);
+    }
+}
+
+/// Dynamic per-tensor activation quantization: computes the symmetric
+/// scale over `x`, writes the quantized values into `q` and returns the
+/// scale. An all-zero tensor returns scale `1.0` (all-zero `q`).
+pub fn quantize_act(x: &[f32], q: &mut [i8]) -> f32 {
+    let scale = row_scale(x);
+    quantize_into(x, scale, q);
+    scale
+}
+
+/// Dequantize a row back to f32 (`q * scale`) — the test oracle's inverse.
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Dense per-channel-quantized conv weights (the GEMM view's i8 mirror).
+#[derive(Debug, Clone)]
+pub struct QDense {
+    /// Row count = out_c (filters).
+    pub rows: usize,
+    /// Column count = in_c·kh·kw (GEMM K).
+    pub cols: usize,
+    /// Row-major `rows × cols` quantized values.
+    pub values: Vec<i8>,
+    /// One symmetric scale per output channel (row).
+    pub scales: Vec<f32>,
+}
+
+impl QDense {
+    /// Quantize a dense GEMM view with per-row symmetric scales.
+    pub fn from_view(g: &GemmView) -> Self {
+        let mut values = vec![0i8; g.rows * g.cols];
+        let mut scales = Vec::with_capacity(g.rows);
+        for r in 0..g.rows {
+            let row = &g.data[r * g.cols..(r + 1) * g.cols];
+            let s = row_scale(row);
+            quantize_into(row, s, &mut values[r * g.cols..(r + 1) * g.cols]);
+            scales.push(s);
+        }
+        QDense { rows: g.rows, cols: g.cols, values, scales }
+    }
+
+    /// Quantized row `r`.
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.values[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Serialized size in bytes (i8 values + f32 scales).
+    pub fn size_bytes(&self) -> usize {
+        self.values.len() + self.scales.len() * 4
+    }
+}
+
+/// CSR with i8 values — the quantized "pruning, no compiler" format. The
+/// index structure is copied verbatim from the f32 [`Csr`], so the sparse
+/// iteration order (and the 4× value-traffic reduction) is the only
+/// difference.
+#[derive(Debug, Clone)]
+pub struct QCsr {
+    /// Row count = out_c (filters).
+    pub rows: usize,
+    /// Column count = in_c·kh·kw (GEMM K).
+    pub cols: usize,
+    /// Quantized nonzero values, row-major nnz order.
+    pub values: Vec<i8>,
+    /// Column index per nonzero.
+    pub col_idx: Vec<u32>,
+    /// Row start offsets (`rows + 1` entries).
+    pub row_ptr: Vec<u32>,
+    /// One symmetric scale per output channel (row).
+    pub scales: Vec<f32>,
+}
+
+impl QCsr {
+    /// Quantize a dense GEMM view into CSR-with-i8 form. The nonzero
+    /// pattern matches [`Csr::from_dense`] exactly (a tiny nonzero that
+    /// rounds to quantized 0 keeps its slot, mirroring the f32 structure).
+    pub fn from_view(g: &GemmView) -> Self {
+        let f = Csr::from_dense(g);
+        let mut values = vec![0i8; f.values.len()];
+        let mut scales = Vec::with_capacity(f.rows);
+        for r in 0..f.rows {
+            let (lo, hi) = (f.row_ptr[r] as usize, f.row_ptr[r + 1] as usize);
+            let row = &g.data[r * g.cols..(r + 1) * g.cols];
+            let s = row_scale(row);
+            for i in lo..hi {
+                values[i] = quantize_value(f.values[i], s);
+            }
+            scales.push(s);
+        }
+        QCsr {
+            rows: f.rows,
+            cols: f.cols,
+            values,
+            col_idx: f.col_idx,
+            row_ptr: f.row_ptr,
+            scales,
+        }
+    }
+
+    /// Indices + quantized values of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[i8]) {
+        let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        (&self.col_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Serialized size in bytes (i8 values + u32 indices + f32 scales).
+    pub fn size_bytes(&self) -> usize {
+        self.values.len() + self.col_idx.len() * 4 + self.row_ptr.len() * 4 + self.scales.len() * 4
+    }
+}
+
+/// Column-compact with i8 values: one shared kept-column list + densely
+/// packed quantized rows — the quantized "pruning + compiler" format.
+#[derive(Debug, Clone)]
+pub struct QColumn {
+    /// Row count = out_c (filters).
+    pub rows: usize,
+    /// Original (unpruned) column count.
+    pub cols: usize,
+    /// Kept column indices, shared by every row.
+    pub keep: Vec<u32>,
+    /// Row-major `rows × kept` packed quantized values.
+    pub values: Vec<i8>,
+    /// One symmetric scale per output channel (row).
+    pub scales: Vec<f32>,
+}
+
+impl QColumn {
+    /// Quantize a dense GEMM view keeping only the `keep` columns.
+    pub fn encode(g: &GemmView, keep: &[usize]) -> Self {
+        let kept = keep.len();
+        let mut values = vec![0i8; g.rows * kept];
+        let mut scales = Vec::with_capacity(g.rows);
+        for r in 0..g.rows {
+            let row = &g.data[r * g.cols..(r + 1) * g.cols];
+            let s = row_scale(row);
+            for (j, &c) in keep.iter().enumerate() {
+                values[r * kept + j] = quantize_value(row[c], s);
+            }
+            scales.push(s);
+        }
+        QColumn {
+            rows: g.rows,
+            cols: g.cols,
+            keep: keep.iter().map(|&c| c as u32).collect(),
+            values,
+            scales,
+        }
+    }
+
+    /// Number of kept columns (the reduced GEMM K).
+    pub fn kept(&self) -> usize {
+        self.keep.len()
+    }
+
+    /// Packed quantized row `r` (length [`QColumn::kept`]).
+    pub fn packed_row(&self, r: usize) -> &[i8] {
+        let k = self.kept();
+        &self.values[r * k..(r + 1) * k]
+    }
+
+    /// Serialized size in bytes (i8 values + u32 keep list + f32 scales).
+    pub fn size_bytes(&self) -> usize {
+        self.values.len() + self.keep.len() * 4 + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{check_prop, Rng};
+
+    fn rand_view(rng: &mut Rng, rows: usize, cols: usize) -> GemmView {
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 3.0).collect();
+        GemmView { rows, cols, data }
+    }
+
+    #[test]
+    fn quantization_tags() {
+        assert_eq!(Quantization::None.tag(), "f32");
+        assert_eq!(Quantization::Int8.tag(), "int8");
+        assert!(!Quantization::None.is_quantized());
+        assert!(Quantization::Int8.is_quantized());
+        assert_eq!(Quantization::default(), Quantization::None);
+    }
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_a_step() {
+        // Per-channel scale recovery: |dequant(quant(w)) - w| <= scale/2
+        // for every element (round-to-nearest, no saturation because the
+        // scale is derived from the row's own maxabs).
+        check_prop("quant round trip", 16, |rng| {
+            let (rows, cols) = (rng.range(1, 9), rng.range(1, 33));
+            let g = rand_view(rng, rows, cols);
+            let q = QDense::from_view(&g);
+            for r in 0..rows {
+                let back = dequantize(q.row(r), q.scales[r]);
+                for (got, want) in back.iter().zip(&g.data[r * cols..(r + 1) * cols]) {
+                    assert!(
+                        (got - want).abs() <= q.scales[r] * 0.5 + 1e-7,
+                        "round trip drifted: {} vs {} (scale {})",
+                        got,
+                        want,
+                        q.scales[r]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn maxabs_element_saturates_exactly_at_127() {
+        // The row's maxabs element quantizes to exactly ±127, and nothing
+        // ever exceeds it (symmetric clamp).
+        let g = GemmView {
+            rows: 1,
+            cols: 4,
+            data: vec![-2.0, 0.5, 1.0, 1.999],
+        };
+        let q = QDense::from_view(&g);
+        assert_eq!(q.scales[0], 2.0 / QMAX);
+        assert_eq!(q.row(0)[0], -127);
+        assert!(q.row(0).iter().all(|&v| (-127..=127).contains(&v)));
+    }
+
+    #[test]
+    fn all_zero_channels_quantize_to_exact_zero() {
+        let g = GemmView { rows: 2, cols: 8, data: vec![0.0; 16] };
+        let q = QDense::from_view(&g);
+        assert_eq!(q.scales, vec![1.0, 1.0]);
+        assert!(q.values.iter().all(|&v| v == 0));
+        assert!(dequantize(q.row(0), q.scales[0]).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn act_quantization_round_trips_within_half_a_step() {
+        check_prop("act quant round trip", 8, |rng| {
+            let len = rng.range(1, 200);
+            let x: Vec<f32> = (0..len).map(|_| rng.normal() * 5.0).collect();
+            let mut q = vec![0i8; len];
+            let s = quantize_act(&x, &mut q);
+            for (qq, &v) in q.iter().zip(&x) {
+                assert!((*qq as f32 * s - v).abs() <= s * 0.5 + 1e-7);
+            }
+        });
+    }
+
+    #[test]
+    fn qcsr_matches_qdense_on_the_nonzero_pattern() {
+        check_prop("qcsr == qdense on nnz", 8, |rng| {
+            let (rows, cols) = (rng.range(2, 8), rng.range(4, 20));
+            let mut g = rand_view(rng, rows, cols);
+            // Sparsify ~60%.
+            for v in g.data.iter_mut() {
+                if rng.below(5) < 3 {
+                    *v = 0.0;
+                }
+            }
+            let qd = QDense::from_view(&g);
+            let qc = QCsr::from_view(&g);
+            assert_eq!(qd.scales, qc.scales);
+            for r in 0..rows {
+                let (idx, vals) = qc.row(r);
+                for (&c, &v) in idx.iter().zip(vals) {
+                    assert_eq!(v, qd.row(r)[c as usize]);
+                }
+            }
+            assert!(qc.size_bytes() < g.rows * g.cols * 4 + g.rows * 4 + 8);
+        });
+    }
+
+    #[test]
+    fn qcolumn_packs_kept_columns_with_the_same_scales() {
+        let mut rng = Rng::new(17);
+        let g = rand_view(&mut rng, 4, 12);
+        let keep: Vec<usize> = vec![0, 3, 5, 11];
+        let qd = QDense::from_view(&g);
+        let qc = QColumn::encode(&g, &keep);
+        assert_eq!(qc.kept(), 4);
+        assert_eq!(qd.scales, qc.scales);
+        for r in 0..4 {
+            for (j, &c) in keep.iter().enumerate() {
+                assert_eq!(qc.packed_row(r)[j], qd.row(r)[c]);
+            }
+        }
+    }
+}

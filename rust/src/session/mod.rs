@@ -32,7 +32,8 @@
 //! of them: every axis is a builder knob ([`SessionBuilder::threads`],
 //! [`SessionBuilder::batch`], [`SessionBuilder::sparse`],
 //! [`SessionBuilder::tune`], [`SessionBuilder::force_scalar`],
-//! [`SessionBuilder::relaxed_simd`]), failures are typed
+//! [`SessionBuilder::relaxed_simd`], [`SessionBuilder::quantize`]),
+//! failures are typed
 //! [`SessionError`]s, and
 //! introspection ([`Session::shapes`], [`Session::memory`],
 //! [`Session::schedules_json`]) lives on the session itself.
@@ -52,6 +53,11 @@ pub use model::Model;
 pub use session::{ServeOpts, Session, SessionBuilder, SessionOptions, Shapes};
 
 pub use crate::coordinator::ServeReport;
+
+// The numeric-format knob ([`SessionBuilder::quantize`], the CLI's
+// `--int8`) — re-exported so callers configure int8 sessions without
+// reaching into [`crate::quant`].
+pub use crate::quant::Quantization;
 
 // Multi-model serving stays behind the same front door: a fleet is built
 // by *registering* `SessionBuilder`s ([`FleetBuilder::register`]), never

@@ -40,6 +40,15 @@ pub struct SessionOptions {
     /// bitwise-identical to unfused ones; the CLI's `--no-fuse` maps
     /// here.
     pub fuse: bool,
+    /// Numeric format for conv weights and GEMM/SpMM arithmetic (see
+    /// [`crate::quant`]). [`Quantization::Int8`](crate::quant::Quantization)
+    /// trades the bitwise-vs-f32 guarantee for ~4x smaller conv weights;
+    /// outputs then track the f32 session within the documented error
+    /// bounds (`rust/tests/int8_accuracy.rs`), and stay bitwise-identical
+    /// across thread counts / ISAs (integer accumulation is exact). The
+    /// CLI's `--int8` maps here. Default
+    /// [`Quantization::None`](crate::quant::Quantization).
+    pub quantize: crate::quant::Quantization,
 }
 
 impl Default for SessionOptions {
@@ -52,6 +61,7 @@ impl Default for SessionOptions {
             force_scalar: false,
             relaxed_simd: false,
             fuse: true,
+            quantize: crate::quant::Quantization::None,
         }
     }
 }
@@ -117,6 +127,16 @@ impl<'m> SessionBuilder<'m> {
         self
     }
 
+    /// Select the numeric format for conv weights + arithmetic (the CLI's
+    /// `--int8` calls this with
+    /// [`Quantization::Int8`](crate::quant::Quantization)). Int8 sessions
+    /// trade the bitwise-vs-f32 oracle for an error-bounded one — see
+    /// [`crate::quant`] for the contract.
+    pub fn quantize(mut self, q: crate::quant::Quantization) -> Self {
+        self.opts.quantize = q;
+        self
+    }
+
     /// Replace every knob at once (bulk form of the per-axis setters).
     pub fn options(mut self, opts: SessionOptions) -> Self {
         self.opts = opts;
@@ -144,12 +164,14 @@ impl<'m> SessionBuilder<'m> {
             force_scalar: self.opts.force_scalar,
             relaxed_simd: self.opts.relaxed_simd,
             fuse: self.opts.fuse,
+            quantize: self.opts.quantize,
         };
         let engine = Engine::with_config(self.model.graph(), &cfg)?;
         Ok(Session {
             app: self.model.app().to_string(),
             variant: self.model.variant(),
             format,
+            quantize: self.opts.quantize,
             engine,
         })
     }
@@ -214,6 +236,7 @@ pub struct Session {
     app: String,
     variant: Option<crate::apps::Variant>,
     format: Format,
+    quantize: crate::quant::Quantization,
     engine: Engine,
 }
 
@@ -276,6 +299,13 @@ impl Session {
     /// The storage format the session compiled to.
     pub fn format(&self) -> Format {
         self.format
+    }
+
+    /// The numeric format the session compiled to
+    /// ([`Quantization::None`](crate::quant::Quantization) unless built
+    /// with [`SessionBuilder::quantize`]).
+    pub fn quantization(&self) -> crate::quant::Quantization {
+        self.quantize
     }
 
     /// Compute-thread budget of the compiled plan.
@@ -408,6 +438,38 @@ mod tests {
         assert_eq!(s.isa(), crate::kernels::micro::Isa::Scalar);
         let default = model.session().threads(1).build().unwrap();
         assert_eq!(default.isa(), crate::kernels::micro::detect());
+    }
+
+    #[test]
+    fn int8_session_compiles_and_tracks_the_f32_output() {
+        use crate::quant::Quantization;
+        let model = style_model(Variant::PrunedCompiler);
+        let f = model.session().threads(1).build().unwrap();
+        let q = model.session().threads(1).quantize(Quantization::Int8).build().unwrap();
+        assert_eq!(f.quantization(), Quantization::None);
+        assert_eq!(q.quantization(), Quantization::Int8);
+        assert!(q.plan().quantized());
+        // i8 weights are ~4x smaller than the f32 encodings.
+        assert!(q.weight_bytes() < f.weight_bytes());
+        let x = Tensor::full(&f.shapes().inputs[0], 0.5);
+        let fo = f.run(std::slice::from_ref(&x)).unwrap();
+        let qo = q.run(std::slice::from_ref(&x)).unwrap();
+        let err = fo[0]
+            .data()
+            .iter()
+            .zip(qo[0].data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 0.5, "int8 output strayed too far from f32: {}", err);
+        // Int8 arithmetic is exact: thread count must not move a bit.
+        let q4 = model
+            .session()
+            .threads(4)
+            .quantize(Quantization::Int8)
+            .build()
+            .unwrap();
+        let q4o = q4.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(qo[0].data(), q4o[0].data(), "int8 must be exact across pools");
     }
 
     #[test]

@@ -25,8 +25,10 @@ use std::path::Path;
 
 /// Current cache file format version (v2 added the host fingerprint; v3
 /// added the ISA schedule fields and the ISA-suffixed fingerprint; v4
-/// added the `fuse` axis; older files are discarded as untrusted on load).
-const VERSION: usize = 4;
+/// added the `fuse` axis; v5 added the int8 `|q8` key segment — an old
+/// cache could collide f32 winners onto int8 requests if trusted; older
+/// files are discarded as untrusted on load).
+const VERSION: usize = 5;
 
 /// Stable fingerprint of the machine the benchmarks ran on: CPU
 /// architecture + OS + core count + **detected kernel ISA**. Coarse on
@@ -128,7 +130,7 @@ impl TuneCache {
     pub fn from_json(j: &Json) -> Result<TuneCache> {
         match j.get("version").as_usize() {
             Some(VERSION) => {}
-            Some(1) | Some(2) | Some(3) => return Ok(TuneCache::new()),
+            Some(1) | Some(2) | Some(3) | Some(4) => return Ok(TuneCache::new()),
             other => bail!("tune cache: unsupported version {:?}", other),
         }
         let host = j
@@ -255,12 +257,15 @@ mod tests {
     #[test]
     fn rejects_bad_versions_and_shapes() {
         assert!(TuneCache::from_json(&Json::parse("{\"version\":99}").unwrap()).is_err());
-        // v4 requires the host fingerprint and the entries object.
-        assert!(TuneCache::from_json(&Json::parse("{\"version\":4}").unwrap()).is_err());
-        // v1 (pre-fingerprint), v2 (pre-ISA schedules) and v3 (pre-fusion
-        // schedules) parse as empty: their entries lack fields the current
-        // planner depends on.
-        for old in ["{\"version\":1}", "{\"version\":2}", "{\"version\":3}"] {
+        // v5 requires the host fingerprint and the entries object.
+        assert!(TuneCache::from_json(&Json::parse("{\"version\":5}").unwrap()).is_err());
+        // v1 (pre-fingerprint), v2 (pre-ISA schedules), v3 (pre-fusion
+        // schedules) and v4 (pre-int8 keys — its f32 winners would collide
+        // onto `|q8` requests) parse as empty: their entries lack
+        // distinctions the current planner depends on.
+        for old in
+            ["{\"version\":1}", "{\"version\":2}", "{\"version\":3}", "{\"version\":4}"]
+        {
             let c = TuneCache::from_json(&Json::parse(old).unwrap()).unwrap();
             assert!(c.is_empty(), "{} must parse as an empty cache", old);
         }

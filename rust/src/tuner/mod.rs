@@ -135,6 +135,12 @@ pub struct TuneRequest<'a> {
     pub tail_acts: usize,
     /// Whether the fuse chain absorbs a residual add.
     pub tail_res: bool,
+    /// Whether the step runs the int8 kernels
+    /// ([`ExecConfig::quantize`](crate::executor::ExecConfig::quantize)).
+    /// Int8 winners live under their own cache key segment (`|q8`): the
+    /// i8 kernels have a different knob space (split-only) and different
+    /// timings than the f32 kernels of the same GEMM shape.
+    pub quant: bool,
 }
 
 impl TuneRequest<'_> {
@@ -154,6 +160,9 @@ impl TuneRequest<'_> {
         );
         if self.fusable() {
             k.push_str(&format!("|fa{}r{}", self.tail_acts, self.tail_res as usize));
+        }
+        if self.quant {
+            k.push_str("|q8");
         }
         k
     }
@@ -258,6 +267,22 @@ impl Tuner {
     fn shape_space(req: &TuneRequest, isa: Isa) -> Vec<Schedule> {
         let base = Schedule { isa, ..Schedule::default() }.sanitized();
         let isa = base.isa; // post-sanitize: clamped to an available ISA
+        if req.quant {
+            // Int8 GEMM/SpMM: integer accumulation is exact, so every
+            // candidate — including every ISA tier — produces bitwise
+            // identical output; the only live knob is the pool split
+            // axis. The cache-blocking tiles buy nothing on the int8
+            // path's ~4x-smaller weight traffic, and the i8 microkernel
+            // primitives take no unroll/register-tile parameters.
+            let mut out =
+                vec![base, Schedule { split: SplitAxis::Cols, ..base }.sanitized()];
+            if isa != Isa::Scalar {
+                // Scalar fallback: catches shapes where the widening
+                // SIMD ops lose to the plain loop (tiny tails).
+                out.push(Schedule::default());
+            }
+            return out;
+        }
         if req.op == "dw" {
             // Depthwise: only the split knob is live — `Rows` partitions
             // the pool per (n·c) channel plane (the historical fixed
@@ -453,7 +478,30 @@ mod tests {
             gemm_backed,
             tail_acts: 0,
             tail_res: false,
+            quant: false,
         }
+    }
+
+    #[test]
+    fn quant_requests_get_their_own_key_and_split_only_space() {
+        let f32_req = gemm_req(true, true);
+        let mut q = gemm_req(true, true);
+        q.quant = true;
+        // Same GEMM shape, disjoint cache entries.
+        assert_ne!(f32_req.key(4), q.key(4));
+        assert!(q.key(4).ends_with("|q8"), "key: {}", q.key(4));
+        // Scalar policy: exactly the two split candidates.
+        let cands = Tuner::candidate_space(&q, Isa::Scalar);
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0], Schedule::default());
+        assert_eq!(cands[1].split, SplitAxis::Cols);
+        // SIMD policy adds only the scalar fallback; a chained step adds
+        // the unfused candidate like every other op.
+        let isa = crate::kernels::micro::detect();
+        let simd = Tuner::candidate_space(&q, isa);
+        assert!(simd.len() <= 3);
+        q.tail_acts = 1;
+        assert!(Tuner::candidate_space(&q, Isa::Scalar).iter().any(|c| !c.fuse));
     }
 
     #[test]

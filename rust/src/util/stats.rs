@@ -27,9 +27,38 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute from raw samples (not required to be sorted).
+    /// The zero-sample summary (`n == 0`, every statistic 0.0): what an
+    /// empty sample set — a serve run with `--frames 0`, a fleet model
+    /// that received no requests — summarises to. Renderers print `-` and
+    /// JSON reports emit `null` for its statistics; check with
+    /// [`Summary::is_empty`].
+    pub fn empty() -> Self {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p99: 0.0,
+            p999: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Whether this summary covers zero samples (see [`Summary::empty`]).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Compute from raw samples (not required to be sorted). An empty
+    /// sample set yields [`Summary::empty`] — historically this was an
+    /// assert, which turned a zero-request model in a fleet report (or a
+    /// `serve --frames 0` run) into a panic.
     pub fn from_samples(samples: &[f64]) -> Self {
-        assert!(!samples.is_empty(), "Summary over empty sample set");
+        if samples.is_empty() {
+            return Summary::empty();
+        }
         let mut s = samples.to_vec();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = s.len();
@@ -210,9 +239,17 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn summary_empty_panics() {
-        let _ = Summary::from_samples(&[]);
+    fn summary_over_empty_samples_is_the_empty_summary() {
+        let s = Summary::from_samples(&[]);
+        assert!(s.is_empty());
+        assert_eq!(s, Summary::empty());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.p999, 0.0);
+        // Durations route through the same path.
+        assert!(Summary::from_durations(&[]).is_empty());
+        // A non-empty summary is never "empty".
+        assert!(!Summary::from_samples(&[1.0]).is_empty());
     }
 
     #[test]

@@ -360,3 +360,59 @@ fn seeded_loadgen_emits_full_report() {
         assert_eq!(le.len(), hist.get("count").as_arr().unwrap().len());
     }
 }
+
+#[test]
+fn zero_request_fleet_reports_instead_of_panicking() {
+    use prt_dnn::util::json::Json;
+
+    // Regression: summarising an empty sample set used to assert inside
+    // `Summary::from_samples`, so a fleet shut down before any request —
+    // or with a tenant the mix never routed to — panicked instead of
+    // reporting. Both must now degrade to `-` / `null`.
+    let style = test_model("style");
+    let coloring = test_model("coloring");
+    let fleet = FleetBuilder::new()
+        .workers(1)
+        .register("style", style.session().threads(1).batch(1))
+        .unwrap()
+        .register("coloring", coloring.session().threads(1).batch(1))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    // Route one request to style only; coloring finishes with zero.
+    let shapes = fleet.session("style").unwrap().shapes();
+    let inputs: Vec<Tensor> =
+        shapes.frame_inputs.iter().map(|s| frame_input(s, 0)).collect();
+    fleet.submit("style", inputs).unwrap().wait().unwrap();
+    let report = fleet.shutdown();
+    assert_eq!(report.completed, 1);
+    let quiet = report.models.iter().find(|m| m.id == "coloring").unwrap();
+    assert_eq!(quiet.completed, 0);
+    assert!(quiet.latency.is_none());
+    let r = report.render();
+    assert!(r.contains("| ms p50=- p99=- p999=-"), "{}", r);
+    let j = report.to_json();
+    let mj = j
+        .get("models")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|m| m.get("model").as_str() == Some("coloring"))
+        .unwrap();
+    assert!(matches!(mj.get("latency_p50_ms"), Json::Null));
+    assert!(matches!(mj.get("infer_mean_ms"), Json::Null));
+
+    // A fleet torn down before ANY request still reports (fleet-wide `-`).
+    let idle = FleetBuilder::new()
+        .workers(0)
+        .register("style", test_model("style").session().threads(1).batch(1))
+        .unwrap()
+        .build()
+        .unwrap();
+    let report = idle.shutdown();
+    assert_eq!(report.completed, 0);
+    let r = report.render();
+    assert!(r.contains("latency ms p50=- p90=- p99=- p999=- max=-"), "{}", r);
+    assert!(matches!(report.to_json().get("latency_p999_ms"), Json::Null));
+}

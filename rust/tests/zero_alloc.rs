@@ -20,7 +20,7 @@ use prt_dnn::dsl::Graph;
 use prt_dnn::executor::ExecContext;
 use prt_dnn::pruning::scheme::project_scheme;
 use prt_dnn::pruning::verify::apply_mask;
-use prt_dnn::session::{Model, Session};
+use prt_dnn::session::{Model, Quantization, Session};
 use prt_dnn::tensor::Tensor;
 use prt_dnn::tuner::TuneOpts;
 use prt_dnn::util::alloc_count::{alloc_count, CountingAlloc};
@@ -184,6 +184,46 @@ fn steady_state_is_allocation_free() {
         // stay per pool thread (not per sample), pre-sized by the plan.
         let s = reordered_fallback_model(64).session().threads(4).batch(4).build().unwrap();
         assert_zero_alloc("style/reordered-fallback/b4/t4", &s);
+    }
+
+    // Int8 sessions: the i8 patch + i32 accumulator buffers are plan-sized
+    // (`qpatch_len` / `qacc_len`) and live in the context's quant scratch,
+    // so the per-dispatch quantize → i8 GEMM/SpMM → requantize round trip
+    // is as allocation-free as the f32 path it shadows — across storage
+    // formats, thread counts and batched plans.
+    {
+        for &threads in &[1usize, 4] {
+            let model = pruned_compact_model(build_style(48, 0.25, 71), "style");
+            let s = model
+                .session()
+                .threads(threads)
+                .quantize(Quantization::Int8)
+                .build()
+                .unwrap();
+            assert!(s.plan().quantized(), "int8 plan must report quantized");
+            assert_zero_alloc(&format!("style/int8-compact/t{}", threads), &s);
+        }
+
+        // Dense int8 at batch 4 (the QDense GEMM path, batched).
+        let g = build_style(48, 0.25, 72);
+        let s = Model::from_graph(&g, &AppSpec::for_app("style"), Variant::Unpruned)
+            .session()
+            .threads(4)
+            .batch(4)
+            .quantize(Quantization::Int8)
+            .build()
+            .unwrap();
+        assert_zero_alloc("style/int8-dense/b4/t4", &s);
+
+        // CSR int8 (the QCsr SpMM path).
+        let g = build_coloring(48, 0.25, 73);
+        let s = Model::from_graph(&g, &AppSpec::for_app("coloring"), Variant::Pruned)
+            .session()
+            .threads(4)
+            .quantize(Quantization::Int8)
+            .build()
+            .unwrap();
+        assert_zero_alloc("coloring/int8-csr/t4", &s);
     }
 
     // A tuned plan loaded from a warm cache is equally allocation-free:
