@@ -38,7 +38,9 @@ use anyhow::{bail, Result};
 /// `ptr` must point at an allocation covering `slot`, and no `&mut` view of
 /// an overlapping range may coexist (the planner's layout invariant).
 unsafe fn slice_at<'a>(ptr: *const f32, slot: ValueSlot) -> &'a [f32] {
-    std::slice::from_raw_parts(ptr.add(slot.offset), slot.len)
+    // SAFETY: per the fn contract, ptr covers the slot and no conflicting
+    // &mut view exists.
+    unsafe { std::slice::from_raw_parts(ptr.add(slot.offset), slot.len) }
 }
 
 /// Mutable view of one arena range.
@@ -47,7 +49,9 @@ unsafe fn slice_at<'a>(ptr: *const f32, slot: ValueSlot) -> &'a [f32] {
 /// `ptr` must point at an allocation covering `slot`, and no other view of
 /// an overlapping range may coexist (the planner's layout invariant).
 unsafe fn slice_at_mut<'a>(ptr: *mut f32, slot: ValueSlot) -> &'a mut [f32] {
-    std::slice::from_raw_parts_mut(ptr.add(slot.offset), slot.len)
+    // SAFETY: per the fn contract, ptr covers the slot and no other view
+    // of an overlapping range coexists.
+    unsafe { std::slice::from_raw_parts_mut(ptr.add(slot.offset), slot.len) }
 }
 
 /// Per-worker execution state (arena + kernel scratch + compute pool),

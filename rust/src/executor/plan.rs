@@ -312,12 +312,12 @@ pub struct ExecutionPlan {
     pub(crate) input_ids: Vec<NodeId>,
     pub(crate) output_ids: Vec<NodeId>,
     pub(crate) threads: usize,
-    batch: usize,
-    arena_len: usize,
-    scratch_len: usize,
-    panel_len: usize,
-    qpatch_len: usize,
-    qacc_len: usize,
+    pub(crate) batch: usize,
+    pub(crate) arena_len: usize,
+    pub(crate) scratch_len: usize,
+    pub(crate) panel_len: usize,
+    pub(crate) qpatch_len: usize,
+    pub(crate) qacc_len: usize,
     tuned: bool,
     tune_stats: TuneStats,
     memory: MemoryUsage,
@@ -889,11 +889,16 @@ impl Planner {
                     let direct = step_sched.lowering == Lowering::Direct
                         && matches!(exec, ConvExec::Dense { .. })
                         && geom.identity_lowering();
+                    // Scratch scales with the step's *emitted* sample
+                    // count (output dim 0 = graph batch × plan batch) —
+                    // the exact demand the batched drivers present, and
+                    // what the static verifier re-derives.
+                    let nb = shapes[id][0];
                     if !direct {
                         // One patch panel per fused frame: the batched
                         // drivers lower the whole batch before a single
                         // combined GEMM dispatch.
-                        scratch_len = scratch_len.max(batch * patch_rows * geom.out_px());
+                        scratch_len = scratch_len.max(nb * patch_rows * geom.out_px());
                     }
                     // Int8 steps additionally quantize the patch panel
                     // into an i8 copy and accumulate into an i32 plane;
@@ -905,8 +910,8 @@ impl Planner {
                             | ConvExec::QCsr { .. }
                             | ConvExec::QColumn { .. }
                     ) {
-                        qpatch_len = qpatch_len.max(batch * patch_rows * geom.out_px());
-                        qacc_len = qacc_len.max(batch * *out_c * geom.out_px());
+                        qpatch_len = qpatch_len.max(nb * patch_rows * geom.out_px());
+                        qacc_len = qacc_len.max(nb * *out_c * geom.out_px());
                     }
                     // The reordered fallback gathers per-group activation
                     // panels: pre-size them here (one slot per pool
@@ -1273,6 +1278,24 @@ impl Planner {
             isa,
         };
         debug_assert!(plan.validate_layout().is_ok());
+        // Debug builds run the full static verifier on every plan the
+        // compiler emits — the fuzz/equivalence suites thereby prove the
+        // invariants on every random DAG they generate, not just the
+        // cells they compare bitwise.
+        #[cfg(debug_assertions)]
+        {
+            let violations = crate::verify::verify_plan(&plan);
+            assert!(
+                violations.is_empty(),
+                "plan verifier rejected '{}': {}",
+                plan.name,
+                violations
+                    .iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            );
+        }
         Ok(plan)
     }
 }

@@ -109,7 +109,10 @@ unsafe fn crow_at<'a>(
     nb: usize,
     ne: usize,
 ) -> &'a mut [f32] {
-    std::slice::from_raw_parts_mut(c.get().add(i * n + nb), ne - nb)
+    // SAFETY: per the fn contract, c covers (i + 1) * n elements and no
+    // concurrent writer overlaps this rectangle, so the range is in
+    // bounds and uniquely borrowed.
+    unsafe { std::slice::from_raw_parts_mut(c.get().add(i * n + nb), ne - nb) }
 }
 
 /// The four B-row slices for K positions `[p, p+4)` restricted to columns
@@ -670,7 +673,8 @@ mod tests {
         let b = rand_mat(&mut rng, nb * k, n);
         let mut want = vec![0.0; nb * m * n];
         for s in 0..nb {
-            gemm_st(m, k, n, &a, &b[s * k * n..(s + 1) * k * n], &mut want[s * m * n..(s + 1) * m * n]);
+            let bs = &b[s * k * n..(s + 1) * k * n];
+            gemm_st(m, k, n, &a, bs, &mut want[s * m * n..(s + 1) * m * n]);
         }
         for &split in &[SplitAxis::Rows, SplitAxis::Cols] {
             let sched = Schedule { split, ..Schedule::default() };

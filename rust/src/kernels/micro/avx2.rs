@@ -16,6 +16,10 @@
 //! are only reachable through [`kernel_for`](super::kernel_for), which
 //! hands out these kernels solely when runtime detection found `avx2`
 //! **and** `fma` on the host (see `detect_native`).
+//!
+//! The crate denies `unsafe_op_in_unsafe_fn`, so every body wraps its
+//! intrinsic work in an explicit `unsafe` block with its own `// SAFETY:`
+//! justification.
 
 use super::{Isa, MicroKernel};
 use std::arch::x86_64::*;
@@ -29,23 +33,26 @@ pub struct Avx2FmaKernel;
 /// `crow[j] += av * brow[j]`, 8 lanes at a time, scalar-identical tail.
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_mul_add(av: f32, brow: &[f32], crow: &mut [f32]) {
-    let len = crow.len().min(brow.len());
-    let av8 = _mm256_set1_ps(av);
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len <= brow.len() and crow.len(), so the
-        // unaligned 8-lane loads/stores stay in bounds.
-        let b8 = _mm256_loadu_ps(brow.as_ptr().add(j));
-        let c8 = _mm256_loadu_ps(crow.as_ptr().add(j));
-        _mm256_storeu_ps(
-            crow.as_mut_ptr().add(j),
-            _mm256_add_ps(c8, _mm256_mul_ps(av8, b8)),
-        );
-        j += 8;
-    }
-    while j < len {
-        crow[j] += av * brow[j];
-        j += 1;
+    // SAFETY: the vector loop only touches lanes j..j+8 with
+    // j + 8 <= len <= brow.len() and crow.len(), so every unaligned
+    // load/store stays in bounds; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len().min(brow.len());
+        let av8 = _mm256_set1_ps(av);
+        let mut j = 0;
+        while j + 8 <= len {
+            let b8 = _mm256_loadu_ps(brow.as_ptr().add(j));
+            let c8 = _mm256_loadu_ps(crow.as_ptr().add(j));
+            _mm256_storeu_ps(
+                crow.as_mut_ptr().add(j),
+                _mm256_add_ps(c8, _mm256_mul_ps(av8, b8)),
+            );
+            j += 8;
+        }
+        while j < len {
+            crow[j] += av * brow[j];
+            j += 1;
+        }
     }
 }
 
@@ -54,65 +61,86 @@ unsafe fn axpy_mul_add(av: f32, brow: &[f32], crow: &mut [f32]) {
 /// from the scalar AXPY by one ulp per update — relaxed mode only.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn axpy_fma(av: f32, brow: &[f32], crow: &mut [f32]) {
-    let len = crow.len().min(brow.len());
-    let av8 = _mm256_set1_ps(av);
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds both slices for 8-lane access.
-        let b8 = _mm256_loadu_ps(brow.as_ptr().add(j));
-        let c8 = _mm256_loadu_ps(crow.as_ptr().add(j));
-        _mm256_storeu_ps(crow.as_mut_ptr().add(j), _mm256_fmadd_ps(av8, b8, c8));
-        j += 8;
-    }
-    while j < len {
-        crow[j] += av * brow[j];
-        j += 1;
+    // SAFETY: j + 8 <= len bounds both slices for every 8-lane access;
+    // the tail uses safe indexing.
+    unsafe {
+        let len = crow.len().min(brow.len());
+        let av8 = _mm256_set1_ps(av);
+        let mut j = 0;
+        while j + 8 <= len {
+            let b8 = _mm256_loadu_ps(brow.as_ptr().add(j));
+            let c8 = _mm256_loadu_ps(crow.as_ptr().add(j));
+            _mm256_storeu_ps(crow.as_mut_ptr().add(j), _mm256_fmadd_ps(av8, b8, c8));
+            j += 8;
+        }
+        while j < len {
+            crow[j] += av * brow[j];
+            j += 1;
+        }
     }
 }
 
 /// Broadcast the four A coefficients into YMM registers.
+#[allow(unused_unsafe)] // register-only intrinsics; unsafe on older toolchains
 #[target_feature(enable = "avx2")]
 unsafe fn splat4(a: [f32; 4]) -> [__m256; 4] {
-    [
-        _mm256_set1_ps(a[0]),
-        _mm256_set1_ps(a[1]),
-        _mm256_set1_ps(a[2]),
-        _mm256_set1_ps(a[3]),
-    ]
+    // SAFETY: register-only broadcasts; avx2 is enabled on this fn.
+    unsafe {
+        [
+            _mm256_set1_ps(a[0]),
+            _mm256_set1_ps(a[1]),
+            _mm256_set1_ps(a[2]),
+            _mm256_set1_ps(a[3]),
+        ]
+    }
 }
 
 /// Load the same 8-lane block of all four B rows.
+///
+/// # Safety
+/// The caller guarantees `j + 8 <=` every b row's length.
 #[target_feature(enable = "avx2")]
 unsafe fn load4(b: [&[f32]; 4], j: usize) -> [__m256; 4] {
-    // SAFETY: the caller guarantees j + 8 <= every b row's length.
-    [
-        _mm256_loadu_ps(b[0].as_ptr().add(j)),
-        _mm256_loadu_ps(b[1].as_ptr().add(j)),
-        _mm256_loadu_ps(b[2].as_ptr().add(j)),
-        _mm256_loadu_ps(b[3].as_ptr().add(j)),
-    ]
+    // SAFETY: per the fn contract, j + 8 is within every row, so each
+    // unaligned 8-lane load is in bounds.
+    unsafe {
+        [
+            _mm256_loadu_ps(b[0].as_ptr().add(j)),
+            _mm256_loadu_ps(b[1].as_ptr().add(j)),
+            _mm256_loadu_ps(b[2].as_ptr().add(j)),
+            _mm256_loadu_ps(b[3].as_ptr().add(j)),
+        ]
+    }
 }
 
 /// `((a0*v0 + a1*v1) + a2*v2) + a3*v3` — the scalar association order.
+#[allow(unused_unsafe)] // register-only intrinsics; unsafe on older toolchains
 #[target_feature(enable = "avx2")]
 unsafe fn quad_sum_mul_add(a: &[__m256; 4], v: &[__m256; 4]) -> __m256 {
-    _mm256_add_ps(
+    // SAFETY: register-only arithmetic; avx2 is enabled on this fn.
+    unsafe {
         _mm256_add_ps(
-            _mm256_add_ps(_mm256_mul_ps(a[0], v[0]), _mm256_mul_ps(a[1], v[1])),
-            _mm256_mul_ps(a[2], v[2]),
-        ),
-        _mm256_mul_ps(a[3], v[3]),
-    )
+            _mm256_add_ps(
+                _mm256_add_ps(_mm256_mul_ps(a[0], v[0]), _mm256_mul_ps(a[1], v[1])),
+                _mm256_mul_ps(a[2], v[2]),
+            ),
+            _mm256_mul_ps(a[3], v[3]),
+        )
+    }
 }
 
 /// Relaxed accumulate of one row block: a 4-deep FMA chain into `acc`.
+#[allow(unused_unsafe)] // register-only intrinsics; unsafe on older toolchains
 #[target_feature(enable = "avx2,fma")]
 unsafe fn quad_acc_fma(a: &[__m256; 4], v: &[__m256; 4], mut acc: __m256) -> __m256 {
-    acc = _mm256_fmadd_ps(a[3], v[3], acc);
-    acc = _mm256_fmadd_ps(a[2], v[2], acc);
-    acc = _mm256_fmadd_ps(a[1], v[1], acc);
-    acc = _mm256_fmadd_ps(a[0], v[0], acc);
-    acc
+    // SAFETY: register-only arithmetic; avx2+fma are enabled on this fn.
+    unsafe {
+        acc = _mm256_fmadd_ps(a[3], v[3], acc);
+        acc = _mm256_fmadd_ps(a[2], v[2], acc);
+        acc = _mm256_fmadd_ps(a[1], v[1], acc);
+        acc = _mm256_fmadd_ps(a[0], v[0], acc);
+        acc
+    }
 }
 
 /// Order-preserving quad over one row. `nr` (8 or 16) is the register-tile
@@ -120,63 +148,67 @@ unsafe fn quad_acc_fma(a: &[__m256; 4], v: &[__m256; 4], mut acc: __m256) -> __m
 /// no element's fp expression changes.
 #[target_feature(enable = "avx2")]
 unsafe fn quad_mul_add(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
-    let len = crow.len();
-    let av = splat4(a);
-    let mut j = 0;
-    if nr >= 16 {
-        while j + 16 <= len {
-            // SAFETY: j + 16 <= len <= every b row's length (caller
-            // contract), so both 8-lane blocks are in bounds.
+    // SAFETY: every vector block starts at j (or j + 8) with the loop
+    // guard proving the full block fits in crow and (by the caller's
+    // contract) in every b row; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len();
+        let av = splat4(a);
+        let mut j = 0;
+        if nr >= 16 {
+            while j + 16 <= len {
+                let v = load4(b, j);
+                let c = crow.as_mut_ptr().add(j);
+                _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
+                let v = load4(b, j + 8);
+                let c = crow.as_mut_ptr().add(j + 8);
+                _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
+                j += 16;
+            }
+        }
+        while j + 8 <= len {
             let v = load4(b, j);
             let c = crow.as_mut_ptr().add(j);
             _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
-            let v = load4(b, j + 8);
-            let c = crow.as_mut_ptr().add(j + 8);
-            _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
-            j += 16;
+            j += 8;
         }
-    }
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
-        let v = load4(b, j);
-        let c = crow.as_mut_ptr().add(j);
-        _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), quad_sum_mul_add(&av, &v)));
-        j += 8;
-    }
-    while j < len {
-        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
-        j += 1;
+        while j < len {
+            crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+            j += 1;
+        }
     }
 }
 
 /// Relaxed quad over one row (FMA chain per block).
 #[target_feature(enable = "avx2,fma")]
 unsafe fn quad_fma(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
-    let len = crow.len();
-    let av = splat4(a);
-    let mut j = 0;
-    if nr >= 16 {
-        while j + 16 <= len {
-            // SAFETY: j + 16 <= len bounds both 8-lane blocks on all rows.
+    // SAFETY: identical bounds discipline to `quad_mul_add` — every block
+    // is guarded by j + 8/16 <= len; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len();
+        let av = splat4(a);
+        let mut j = 0;
+        if nr >= 16 {
+            while j + 16 <= len {
+                let v = load4(b, j);
+                let c = crow.as_mut_ptr().add(j);
+                _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
+                let v = load4(b, j + 8);
+                let c = crow.as_mut_ptr().add(j + 8);
+                _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
+                j += 16;
+            }
+        }
+        while j + 8 <= len {
             let v = load4(b, j);
             let c = crow.as_mut_ptr().add(j);
             _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
-            let v = load4(b, j + 8);
-            let c = crow.as_mut_ptr().add(j + 8);
-            _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
-            j += 16;
+            j += 8;
         }
-    }
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
-        let v = load4(b, j);
-        let c = crow.as_mut_ptr().add(j);
-        _mm256_storeu_ps(c, quad_acc_fma(&av, &v, _mm256_loadu_ps(c)));
-        j += 8;
-    }
-    while j < len {
-        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
-        j += 1;
+        while j < len {
+            crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+            j += 1;
+        }
     }
 }
 
@@ -191,39 +223,41 @@ unsafe fn quad2_mul_add(
     crow1: &mut [f32],
     nr: usize,
 ) {
-    let len = crow0.len().min(crow1.len());
-    let xv = splat4(x);
-    let yv = splat4(y);
-    let mut j = 0;
-    let step = if nr >= 16 { 16 } else { 8 };
-    while j + step <= len {
-        let mut blk = 0;
-        while blk < step {
-            // SAFETY: j + step <= len <= every row's length, so each
-            // 8-lane block at j + blk is in bounds.
-            let v = load4(b, j + blk);
-            let c0 = crow0.as_mut_ptr().add(j + blk);
-            _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), quad_sum_mul_add(&xv, &v)));
-            let c1 = crow1.as_mut_ptr().add(j + blk);
-            _mm256_storeu_ps(c1, _mm256_add_ps(_mm256_loadu_ps(c1), quad_sum_mul_add(&yv, &v)));
-            blk += 8;
+    // SAFETY: len is the min of both C rows, every 8-lane block at
+    // j + blk is guarded by j + step <= len (and the caller bounds the b
+    // rows); the tail uses safe indexing.
+    unsafe {
+        let len = crow0.len().min(crow1.len());
+        let xv = splat4(x);
+        let yv = splat4(y);
+        let mut j = 0;
+        let step = if nr >= 16 { 16 } else { 8 };
+        while j + step <= len {
+            let mut blk = 0;
+            while blk < step {
+                let v = load4(b, j + blk);
+                let c0 = crow0.as_mut_ptr().add(j + blk);
+                _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), quad_sum_mul_add(&xv, &v)));
+                let c1 = crow1.as_mut_ptr().add(j + blk);
+                _mm256_storeu_ps(c1, _mm256_add_ps(_mm256_loadu_ps(c1), quad_sum_mul_add(&yv, &v)));
+                blk += 8;
+            }
+            j += step;
         }
-        j += step;
-    }
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
-        let v = load4(b, j);
-        let c0 = crow0.as_mut_ptr().add(j);
-        _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), quad_sum_mul_add(&xv, &v)));
-        let c1 = crow1.as_mut_ptr().add(j);
-        _mm256_storeu_ps(c1, _mm256_add_ps(_mm256_loadu_ps(c1), quad_sum_mul_add(&yv, &v)));
-        j += 8;
-    }
-    while j < len {
-        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
-        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
-        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
-        j += 1;
+        while j + 8 <= len {
+            let v = load4(b, j);
+            let c0 = crow0.as_mut_ptr().add(j);
+            _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), quad_sum_mul_add(&xv, &v)));
+            let c1 = crow1.as_mut_ptr().add(j);
+            _mm256_storeu_ps(c1, _mm256_add_ps(_mm256_loadu_ps(c1), quad_sum_mul_add(&yv, &v)));
+            j += 8;
+        }
+        while j < len {
+            let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+            crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+            crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+            j += 1;
+        }
     }
 }
 
@@ -237,39 +271,40 @@ unsafe fn quad2_fma(
     crow1: &mut [f32],
     nr: usize,
 ) {
-    let len = crow0.len().min(crow1.len());
-    let xv = splat4(x);
-    let yv = splat4(y);
-    let mut j = 0;
-    let step = if nr >= 16 { 16 } else { 8 };
-    while j + step <= len {
-        let mut blk = 0;
-        while blk < step {
-            // SAFETY: j + step <= len <= every row's length, so each
-            // 8-lane block at j + blk is in bounds.
-            let v = load4(b, j + blk);
-            let c0 = crow0.as_mut_ptr().add(j + blk);
-            _mm256_storeu_ps(c0, quad_acc_fma(&xv, &v, _mm256_loadu_ps(c0)));
-            let c1 = crow1.as_mut_ptr().add(j + blk);
-            _mm256_storeu_ps(c1, quad_acc_fma(&yv, &v, _mm256_loadu_ps(c1)));
-            blk += 8;
+    // SAFETY: identical bounds discipline to `quad2_mul_add`; the tail
+    // uses safe indexing.
+    unsafe {
+        let len = crow0.len().min(crow1.len());
+        let xv = splat4(x);
+        let yv = splat4(y);
+        let mut j = 0;
+        let step = if nr >= 16 { 16 } else { 8 };
+        while j + step <= len {
+            let mut blk = 0;
+            while blk < step {
+                let v = load4(b, j + blk);
+                let c0 = crow0.as_mut_ptr().add(j + blk);
+                _mm256_storeu_ps(c0, quad_acc_fma(&xv, &v, _mm256_loadu_ps(c0)));
+                let c1 = crow1.as_mut_ptr().add(j + blk);
+                _mm256_storeu_ps(c1, quad_acc_fma(&yv, &v, _mm256_loadu_ps(c1)));
+                blk += 8;
+            }
+            j += step;
         }
-        j += step;
-    }
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds the 8-lane block on all rows.
-        let v = load4(b, j);
-        let c0 = crow0.as_mut_ptr().add(j);
-        _mm256_storeu_ps(c0, quad_acc_fma(&xv, &v, _mm256_loadu_ps(c0)));
-        let c1 = crow1.as_mut_ptr().add(j);
-        _mm256_storeu_ps(c1, quad_acc_fma(&yv, &v, _mm256_loadu_ps(c1)));
-        j += 8;
-    }
-    while j < len {
-        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
-        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
-        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
-        j += 1;
+        while j + 8 <= len {
+            let v = load4(b, j);
+            let c0 = crow0.as_mut_ptr().add(j);
+            _mm256_storeu_ps(c0, quad_acc_fma(&xv, &v, _mm256_loadu_ps(c0)));
+            let c1 = crow1.as_mut_ptr().add(j);
+            _mm256_storeu_ps(c1, quad_acc_fma(&yv, &v, _mm256_loadu_ps(c1)));
+            j += 8;
+        }
+        while j < len {
+            let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+            crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+            crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+            j += 1;
+        }
     }
 }
 
@@ -278,53 +313,58 @@ unsafe fn quad2_fma(
 /// sum (see the trait docs) but is itself fully deterministic.
 #[target_feature(enable = "avx2")]
 unsafe fn dot_mul_add(a: &[f32], b: &[f32]) -> f32 {
-    let len = a.len().min(b.len());
-    let mut accv = _mm256_setzero_ps();
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds both 8-lane loads.
-        let av = _mm256_loadu_ps(a.as_ptr().add(j));
-        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
-        accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
-        j += 8;
+    // SAFETY: j + 8 <= len bounds both 8-lane loads; the lane spill
+    // writes a local stack array; the tail uses safe indexing.
+    unsafe {
+        let len = a.len().min(b.len());
+        let mut accv = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= len {
+            let av = _mm256_loadu_ps(a.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
+            j += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), accv);
+        let mut acc = 0.0f32;
+        for l in lanes {
+            acc += l;
+        }
+        while j < len {
+            acc += a[j] * b[j];
+            j += 1;
+        }
+        acc
     }
-    let mut lanes = [0.0f32; 8];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), accv);
-    let mut acc = 0.0f32;
-    for l in lanes {
-        acc += l;
-    }
-    while j < len {
-        acc += a[j] * b[j];
-        j += 1;
-    }
-    acc
 }
 
 /// Relaxed dot product: FMA lane partials, same deterministic reduction.
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
-    let len = a.len().min(b.len());
-    let mut accv = _mm256_setzero_ps();
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds both 8-lane loads.
-        let av = _mm256_loadu_ps(a.as_ptr().add(j));
-        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
-        accv = _mm256_fmadd_ps(av, bv, accv);
-        j += 8;
+    // SAFETY: identical bounds discipline to `dot_mul_add`.
+    unsafe {
+        let len = a.len().min(b.len());
+        let mut accv = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= len {
+            let av = _mm256_loadu_ps(a.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            accv = _mm256_fmadd_ps(av, bv, accv);
+            j += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), accv);
+        let mut acc = 0.0f32;
+        for l in lanes {
+            acc += l;
+        }
+        while j < len {
+            acc += a[j] * b[j];
+            j += 1;
+        }
+        acc
     }
-    let mut lanes = [0.0f32; 8];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), accv);
-    let mut acc = 0.0f32;
-    for l in lanes {
-        acc += l;
-    }
-    while j < len {
-        acc += a[j] * b[j];
-        j += 1;
-    }
-    acc
 }
 
 /// Int8 AXPY: sign-extend 8 i8 lanes to i32 (`_mm256_cvtepi8_epi32`), then
@@ -332,23 +372,25 @@ unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
 /// to the scalar default at any length/alignment.
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_i8_avx2(av: i32, brow: &[i8], crow: &mut [i32]) {
-    let len = crow.len().min(brow.len());
-    let av8 = _mm256_set1_epi32(av);
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds the 8-byte i8 load and the 8-lane
-        // i32 load/store.
-        let b8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(brow.as_ptr().add(j) as *const __m128i));
-        let c8 = _mm256_loadu_si256(crow.as_ptr().add(j) as *const __m256i);
-        _mm256_storeu_si256(
-            crow.as_mut_ptr().add(j) as *mut __m256i,
-            _mm256_add_epi32(c8, _mm256_mullo_epi32(av8, b8)),
-        );
-        j += 8;
-    }
-    while j < len {
-        crow[j] += av * brow[j] as i32;
-        j += 1;
+    // SAFETY: j + 8 <= len bounds the 8-byte i8 load and the 8-lane i32
+    // load/store; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len().min(brow.len());
+        let av8 = _mm256_set1_epi32(av);
+        let mut j = 0;
+        while j + 8 <= len {
+            let b8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(brow.as_ptr().add(j) as *const __m128i));
+            let c8 = _mm256_loadu_si256(crow.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(
+                crow.as_mut_ptr().add(j) as *mut __m256i,
+                _mm256_add_epi32(c8, _mm256_mullo_epi32(av8, b8)),
+            );
+            j += 8;
+        }
+        while j < len {
+            crow[j] += av * brow[j] as i32;
+            j += 1;
+        }
     }
 }
 
@@ -356,24 +398,27 @@ unsafe fn axpy_i8_avx2(av: i32, brow: &[i8], crow: &mut [i32]) {
 /// tail. Exact, so lane order does not matter.
 #[target_feature(enable = "avx2")]
 unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
-    let len = a.len().min(b.len());
-    let mut accv = _mm256_setzero_si256();
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds both 8-byte i8 loads.
-        let a8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(a.as_ptr().add(j) as *const __m128i));
-        let b8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(b.as_ptr().add(j) as *const __m128i));
-        accv = _mm256_add_epi32(accv, _mm256_mullo_epi32(a8, b8));
-        j += 8;
+    // SAFETY: j + 8 <= len bounds both 8-byte i8 loads; the lane spill
+    // writes a local stack array; the tail uses safe indexing.
+    unsafe {
+        let len = a.len().min(b.len());
+        let mut accv = _mm256_setzero_si256();
+        let mut j = 0;
+        while j + 8 <= len {
+            let a8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(a.as_ptr().add(j) as *const __m128i));
+            let b8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(b.as_ptr().add(j) as *const __m128i));
+            accv = _mm256_add_epi32(accv, _mm256_mullo_epi32(a8, b8));
+            j += 8;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accv);
+        let mut acc: i32 = lanes.iter().sum();
+        while j < len {
+            acc += a[j] as i32 * b[j] as i32;
+            j += 1;
+        }
+        acc
     }
-    let mut lanes = [0i32; 8];
-    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accv);
-    let mut acc: i32 = lanes.iter().sum();
-    while j < len {
-        acc += a[j] as i32 * b[j] as i32;
-        j += 1;
-    }
-    acc
 }
 
 impl MicroKernel for Avx2Kernel {

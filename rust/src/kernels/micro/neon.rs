@@ -10,8 +10,10 @@
 //!   intermediate rounding); bounded by `rust/tests/simd_equivalence.rs`.
 //!
 //! NEON is baseline on every aarch64 target std supports, so no
-//! `#[target_feature]` gating is needed — the intrinsics are still
-//! `unsafe fn`s because they take raw pointers.
+//! `#[target_feature]` gating is needed — the pointer-taking intrinsics
+//! are still `unsafe`. The crate denies `unsafe_op_in_unsafe_fn`, so
+//! every body wraps its intrinsic work in an explicit `unsafe` block with
+//! its own `// SAFETY:` justification.
 
 use super::{Isa, MicroKernel};
 use std::arch::aarch64::*;
@@ -24,146 +26,173 @@ pub struct NeonFmaKernel;
 
 /// `crow[j] += av * brow[j]`, 4 lanes at a time, scalar-identical tail.
 unsafe fn axpy_mul_add(av: f32, brow: &[f32], crow: &mut [f32]) {
-    let len = crow.len().min(brow.len());
-    let av4 = vdupq_n_f32(av);
-    let mut j = 0;
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len <= brow.len() and crow.len(), so the
-        // 4-lane loads/stores stay in bounds.
-        let b4 = vld1q_f32(brow.as_ptr().add(j));
-        let c4 = vld1q_f32(crow.as_ptr().add(j));
-        vst1q_f32(crow.as_mut_ptr().add(j), vaddq_f32(c4, vmulq_f32(av4, b4)));
-        j += 4;
-    }
-    while j < len {
-        crow[j] += av * brow[j];
-        j += 1;
+    // SAFETY: the vector loop only touches lanes j..j+4 with
+    // j + 4 <= len <= brow.len() and crow.len(), so every load/store
+    // stays in bounds; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len().min(brow.len());
+        let av4 = vdupq_n_f32(av);
+        let mut j = 0;
+        while j + 4 <= len {
+            let b4 = vld1q_f32(brow.as_ptr().add(j));
+            let c4 = vld1q_f32(crow.as_ptr().add(j));
+            vst1q_f32(crow.as_mut_ptr().add(j), vaddq_f32(c4, vmulq_f32(av4, b4)));
+            j += 4;
+        }
+        while j < len {
+            crow[j] += av * brow[j];
+            j += 1;
+        }
     }
 }
 
 /// `crow[j] += av * brow[j]` with a fused multiply–add per lane (relaxed).
 unsafe fn axpy_fma(av: f32, brow: &[f32], crow: &mut [f32]) {
-    let len = crow.len().min(brow.len());
-    let av4 = vdupq_n_f32(av);
-    let mut j = 0;
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len bounds both slices for 4-lane access.
-        let b4 = vld1q_f32(brow.as_ptr().add(j));
-        let c4 = vld1q_f32(crow.as_ptr().add(j));
-        vst1q_f32(crow.as_mut_ptr().add(j), vfmaq_f32(c4, av4, b4));
-        j += 4;
-    }
-    while j < len {
-        crow[j] += av * brow[j];
-        j += 1;
+    // SAFETY: j + 4 <= len bounds both slices for every 4-lane access;
+    // the tail uses safe indexing.
+    unsafe {
+        let len = crow.len().min(brow.len());
+        let av4 = vdupq_n_f32(av);
+        let mut j = 0;
+        while j + 4 <= len {
+            let b4 = vld1q_f32(brow.as_ptr().add(j));
+            let c4 = vld1q_f32(crow.as_ptr().add(j));
+            vst1q_f32(crow.as_mut_ptr().add(j), vfmaq_f32(c4, av4, b4));
+            j += 4;
+        }
+        while j < len {
+            crow[j] += av * brow[j];
+            j += 1;
+        }
     }
 }
 
 /// Broadcast the four A coefficients into Q registers.
+#[allow(unused_unsafe)] // register-only intrinsics; unsafe on older toolchains
 unsafe fn splat4(a: [f32; 4]) -> [float32x4_t; 4] {
-    [
-        vdupq_n_f32(a[0]),
-        vdupq_n_f32(a[1]),
-        vdupq_n_f32(a[2]),
-        vdupq_n_f32(a[3]),
-    ]
+    // SAFETY: register-only broadcasts; NEON is baseline on aarch64.
+    unsafe {
+        [
+            vdupq_n_f32(a[0]),
+            vdupq_n_f32(a[1]),
+            vdupq_n_f32(a[2]),
+            vdupq_n_f32(a[3]),
+        ]
+    }
 }
 
 /// Load the same 4-lane block of all four B rows.
+///
+/// # Safety
+/// The caller guarantees `j + 4 <=` every b row's length.
 unsafe fn load4(b: [&[f32]; 4], j: usize) -> [float32x4_t; 4] {
-    // SAFETY: the caller guarantees j + 4 <= every b row's length.
-    [
-        vld1q_f32(b[0].as_ptr().add(j)),
-        vld1q_f32(b[1].as_ptr().add(j)),
-        vld1q_f32(b[2].as_ptr().add(j)),
-        vld1q_f32(b[3].as_ptr().add(j)),
-    ]
+    // SAFETY: per the fn contract, j + 4 is within every row, so each
+    // 4-lane load is in bounds.
+    unsafe {
+        [
+            vld1q_f32(b[0].as_ptr().add(j)),
+            vld1q_f32(b[1].as_ptr().add(j)),
+            vld1q_f32(b[2].as_ptr().add(j)),
+            vld1q_f32(b[3].as_ptr().add(j)),
+        ]
+    }
 }
 
 /// `((a0*v0 + a1*v1) + a2*v2) + a3*v3` — the scalar association order.
+#[allow(unused_unsafe)] // register-only intrinsics; unsafe on older toolchains
 unsafe fn quad_sum_mul_add(a: &[float32x4_t; 4], v: &[float32x4_t; 4]) -> float32x4_t {
-    vaddq_f32(
+    // SAFETY: register-only arithmetic; NEON is baseline on aarch64.
+    unsafe {
         vaddq_f32(
-            vaddq_f32(vmulq_f32(a[0], v[0]), vmulq_f32(a[1], v[1])),
-            vmulq_f32(a[2], v[2]),
-        ),
-        vmulq_f32(a[3], v[3]),
-    )
+            vaddq_f32(
+                vaddq_f32(vmulq_f32(a[0], v[0]), vmulq_f32(a[1], v[1])),
+                vmulq_f32(a[2], v[2]),
+            ),
+            vmulq_f32(a[3], v[3]),
+        )
+    }
 }
 
 /// Relaxed accumulate of one row block: a 4-deep FMA chain into `acc`.
+#[allow(unused_unsafe)] // register-only intrinsics; unsafe on older toolchains
 unsafe fn quad_acc_fma(
     a: &[float32x4_t; 4],
     v: &[float32x4_t; 4],
     mut acc: float32x4_t,
 ) -> float32x4_t {
-    acc = vfmaq_f32(acc, a[3], v[3]);
-    acc = vfmaq_f32(acc, a[2], v[2]);
-    acc = vfmaq_f32(acc, a[1], v[1]);
-    acc = vfmaq_f32(acc, a[0], v[0]);
-    acc
+    // SAFETY: register-only arithmetic; NEON is baseline on aarch64.
+    unsafe {
+        acc = vfmaq_f32(acc, a[3], v[3]);
+        acc = vfmaq_f32(acc, a[2], v[2]);
+        acc = vfmaq_f32(acc, a[1], v[1]);
+        acc = vfmaq_f32(acc, a[0], v[0]);
+        acc
+    }
 }
 
 /// Order-preserving quad over one row. `nr` (8 or 16) is the register-tile
 /// column width in elements; blocks are 4 lanes each.
 unsafe fn quad_mul_add(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
-    let len = crow.len();
-    let av = splat4(a);
-    let step = if nr >= 16 { 16 } else { 8 };
-    let mut j = 0;
-    while j + step <= len {
-        let mut blk = 0;
-        while blk < step {
-            // SAFETY: j + step <= len <= every b row's length, so each
-            // 4-lane block at j + blk is in bounds.
-            let v = load4(b, j + blk);
-            let c = crow.as_mut_ptr().add(j + blk);
-            vst1q_f32(c, vaddq_f32(vld1q_f32(c), quad_sum_mul_add(&av, &v)));
-            blk += 4;
+    // SAFETY: every vector block starts at j + blk with the loop guards
+    // proving the full block fits in crow and (by the caller's contract)
+    // in every b row; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len();
+        let av = splat4(a);
+        let step = if nr >= 16 { 16 } else { 8 };
+        let mut j = 0;
+        while j + step <= len {
+            let mut blk = 0;
+            while blk < step {
+                let v = load4(b, j + blk);
+                let c = crow.as_mut_ptr().add(j + blk);
+                vst1q_f32(c, vaddq_f32(vld1q_f32(c), quad_sum_mul_add(&av, &v)));
+                blk += 4;
+            }
+            j += step;
         }
-        j += step;
-    }
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
-        let v = load4(b, j);
-        let c = crow.as_mut_ptr().add(j);
-        vst1q_f32(c, vaddq_f32(vld1q_f32(c), quad_sum_mul_add(&av, &v)));
-        j += 4;
-    }
-    while j < len {
-        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
-        j += 1;
+        while j + 4 <= len {
+            let v = load4(b, j);
+            let c = crow.as_mut_ptr().add(j);
+            vst1q_f32(c, vaddq_f32(vld1q_f32(c), quad_sum_mul_add(&av, &v)));
+            j += 4;
+        }
+        while j < len {
+            crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+            j += 1;
+        }
     }
 }
 
 /// Relaxed quad over one row (FMA chain per block).
 unsafe fn quad_fma(a: [f32; 4], b: [&[f32]; 4], crow: &mut [f32], nr: usize) {
-    let len = crow.len();
-    let av = splat4(a);
-    let step = if nr >= 16 { 16 } else { 8 };
-    let mut j = 0;
-    while j + step <= len {
-        let mut blk = 0;
-        while blk < step {
-            // SAFETY: j + step <= len <= every b row's length, so each
-            // 4-lane block at j + blk is in bounds.
-            let v = load4(b, j + blk);
-            let c = crow.as_mut_ptr().add(j + blk);
-            vst1q_f32(c, quad_acc_fma(&av, &v, vld1q_f32(c)));
-            blk += 4;
+    // SAFETY: identical bounds discipline to `quad_mul_add` — every block
+    // is guarded by the loop conditions; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len();
+        let av = splat4(a);
+        let step = if nr >= 16 { 16 } else { 8 };
+        let mut j = 0;
+        while j + step <= len {
+            let mut blk = 0;
+            while blk < step {
+                let v = load4(b, j + blk);
+                let c = crow.as_mut_ptr().add(j + blk);
+                vst1q_f32(c, quad_acc_fma(&av, &v, vld1q_f32(c)));
+                blk += 4;
+            }
+            j += step;
         }
-        j += step;
-    }
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
-        let v = load4(b, j);
-        let c = crow.as_mut_ptr().add(j);
-        vst1q_f32(c, quad_acc_fma(&av, &v, vld1q_f32(c)));
-        j += 4;
-    }
-    while j < len {
-        crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
-        j += 1;
+        while j + 4 <= len {
+            let v = load4(b, j);
+            let c = crow.as_mut_ptr().add(j);
+            vst1q_f32(c, quad_acc_fma(&av, &v, vld1q_f32(c)));
+            j += 4;
+        }
+        while j < len {
+            crow[j] += a[0] * b[0][j] + a[1] * b[1][j] + a[2] * b[2][j] + a[3] * b[3][j];
+            j += 1;
+        }
     }
 }
 
@@ -176,39 +205,41 @@ unsafe fn quad2_mul_add(
     crow1: &mut [f32],
     nr: usize,
 ) {
-    let len = crow0.len().min(crow1.len());
-    let xv = splat4(x);
-    let yv = splat4(y);
-    let step = if nr >= 16 { 16 } else { 8 };
-    let mut j = 0;
-    while j + step <= len {
-        let mut blk = 0;
-        while blk < step {
-            // SAFETY: j + step <= len <= every row's length, so each
-            // 4-lane block at j + blk is in bounds.
-            let v = load4(b, j + blk);
-            let c0 = crow0.as_mut_ptr().add(j + blk);
-            vst1q_f32(c0, vaddq_f32(vld1q_f32(c0), quad_sum_mul_add(&xv, &v)));
-            let c1 = crow1.as_mut_ptr().add(j + blk);
-            vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), quad_sum_mul_add(&yv, &v)));
-            blk += 4;
+    // SAFETY: len is the min of both C rows, every 4-lane block at
+    // j + blk is guarded by j + step <= len (and the caller bounds the b
+    // rows); the tail uses safe indexing.
+    unsafe {
+        let len = crow0.len().min(crow1.len());
+        let xv = splat4(x);
+        let yv = splat4(y);
+        let step = if nr >= 16 { 16 } else { 8 };
+        let mut j = 0;
+        while j + step <= len {
+            let mut blk = 0;
+            while blk < step {
+                let v = load4(b, j + blk);
+                let c0 = crow0.as_mut_ptr().add(j + blk);
+                vst1q_f32(c0, vaddq_f32(vld1q_f32(c0), quad_sum_mul_add(&xv, &v)));
+                let c1 = crow1.as_mut_ptr().add(j + blk);
+                vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), quad_sum_mul_add(&yv, &v)));
+                blk += 4;
+            }
+            j += step;
         }
-        j += step;
-    }
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
-        let v = load4(b, j);
-        let c0 = crow0.as_mut_ptr().add(j);
-        vst1q_f32(c0, vaddq_f32(vld1q_f32(c0), quad_sum_mul_add(&xv, &v)));
-        let c1 = crow1.as_mut_ptr().add(j);
-        vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), quad_sum_mul_add(&yv, &v)));
-        j += 4;
-    }
-    while j < len {
-        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
-        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
-        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
-        j += 1;
+        while j + 4 <= len {
+            let v = load4(b, j);
+            let c0 = crow0.as_mut_ptr().add(j);
+            vst1q_f32(c0, vaddq_f32(vld1q_f32(c0), quad_sum_mul_add(&xv, &v)));
+            let c1 = crow1.as_mut_ptr().add(j);
+            vst1q_f32(c1, vaddq_f32(vld1q_f32(c1), quad_sum_mul_add(&yv, &v)));
+            j += 4;
+        }
+        while j < len {
+            let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+            crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+            crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+            j += 1;
+        }
     }
 }
 
@@ -221,138 +252,149 @@ unsafe fn quad2_fma(
     crow1: &mut [f32],
     nr: usize,
 ) {
-    let len = crow0.len().min(crow1.len());
-    let xv = splat4(x);
-    let yv = splat4(y);
-    let step = if nr >= 16 { 16 } else { 8 };
-    let mut j = 0;
-    while j + step <= len {
-        let mut blk = 0;
-        while blk < step {
-            // SAFETY: j + step <= len <= every row's length, so each
-            // 4-lane block at j + blk is in bounds.
-            let v = load4(b, j + blk);
-            let c0 = crow0.as_mut_ptr().add(j + blk);
-            vst1q_f32(c0, quad_acc_fma(&xv, &v, vld1q_f32(c0)));
-            let c1 = crow1.as_mut_ptr().add(j + blk);
-            vst1q_f32(c1, quad_acc_fma(&yv, &v, vld1q_f32(c1)));
-            blk += 4;
+    // SAFETY: identical bounds discipline to `quad2_mul_add`; the tail
+    // uses safe indexing.
+    unsafe {
+        let len = crow0.len().min(crow1.len());
+        let xv = splat4(x);
+        let yv = splat4(y);
+        let step = if nr >= 16 { 16 } else { 8 };
+        let mut j = 0;
+        while j + step <= len {
+            let mut blk = 0;
+            while blk < step {
+                let v = load4(b, j + blk);
+                let c0 = crow0.as_mut_ptr().add(j + blk);
+                vst1q_f32(c0, quad_acc_fma(&xv, &v, vld1q_f32(c0)));
+                let c1 = crow1.as_mut_ptr().add(j + blk);
+                vst1q_f32(c1, quad_acc_fma(&yv, &v, vld1q_f32(c1)));
+                blk += 4;
+            }
+            j += step;
         }
-        j += step;
-    }
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len bounds the 4-lane block on all rows.
-        let v = load4(b, j);
-        let c0 = crow0.as_mut_ptr().add(j);
-        vst1q_f32(c0, quad_acc_fma(&xv, &v, vld1q_f32(c0)));
-        let c1 = crow1.as_mut_ptr().add(j);
-        vst1q_f32(c1, quad_acc_fma(&yv, &v, vld1q_f32(c1)));
-        j += 4;
-    }
-    while j < len {
-        let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
-        crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
-        crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
-        j += 1;
+        while j + 4 <= len {
+            let v = load4(b, j);
+            let c0 = crow0.as_mut_ptr().add(j);
+            vst1q_f32(c0, quad_acc_fma(&xv, &v, vld1q_f32(c0)));
+            let c1 = crow1.as_mut_ptr().add(j);
+            vst1q_f32(c1, quad_acc_fma(&yv, &v, vld1q_f32(c1)));
+            j += 4;
+        }
+        while j < len {
+            let (v0, v1, v2, v3) = (b[0][j], b[1][j], b[2][j], b[3][j]);
+            crow0[j] += x[0] * v0 + x[1] * v1 + x[2] * v2 + x[3] * v3;
+            crow1[j] += y[0] * v0 + y[1] * v1 + y[2] * v2 + y[3] * v3;
+            j += 1;
+        }
     }
 }
 
 /// Deterministic dot product: 4-lane mul/add partials, a fixed-order lane
 /// reduction, then the scalar tail.
 unsafe fn dot_mul_add(a: &[f32], b: &[f32]) -> f32 {
-    let len = a.len().min(b.len());
-    let mut accv = vdupq_n_f32(0.0);
-    let mut j = 0;
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len bounds both 4-lane loads.
-        let av = vld1q_f32(a.as_ptr().add(j));
-        let bv = vld1q_f32(b.as_ptr().add(j));
-        accv = vaddq_f32(accv, vmulq_f32(av, bv));
-        j += 4;
+    // SAFETY: j + 4 <= len bounds both 4-lane loads; the lane spill
+    // writes a local stack array; the tail uses safe indexing.
+    unsafe {
+        let len = a.len().min(b.len());
+        let mut accv = vdupq_n_f32(0.0);
+        let mut j = 0;
+        while j + 4 <= len {
+            let av = vld1q_f32(a.as_ptr().add(j));
+            let bv = vld1q_f32(b.as_ptr().add(j));
+            accv = vaddq_f32(accv, vmulq_f32(av, bv));
+            j += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), accv);
+        let mut acc = 0.0f32;
+        for l in lanes {
+            acc += l;
+        }
+        while j < len {
+            acc += a[j] * b[j];
+            j += 1;
+        }
+        acc
     }
-    let mut lanes = [0.0f32; 4];
-    vst1q_f32(lanes.as_mut_ptr(), accv);
-    let mut acc = 0.0f32;
-    for l in lanes {
-        acc += l;
-    }
-    while j < len {
-        acc += a[j] * b[j];
-        j += 1;
-    }
-    acc
 }
 
 /// Relaxed dot product: FMA lane partials, same deterministic reduction.
 unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
-    let len = a.len().min(b.len());
-    let mut accv = vdupq_n_f32(0.0);
-    let mut j = 0;
-    while j + 4 <= len {
-        // SAFETY: j + 4 <= len bounds both 4-lane loads.
-        let av = vld1q_f32(a.as_ptr().add(j));
-        let bv = vld1q_f32(b.as_ptr().add(j));
-        accv = vfmaq_f32(accv, av, bv);
-        j += 4;
+    // SAFETY: identical bounds discipline to `dot_mul_add`.
+    unsafe {
+        let len = a.len().min(b.len());
+        let mut accv = vdupq_n_f32(0.0);
+        let mut j = 0;
+        while j + 4 <= len {
+            let av = vld1q_f32(a.as_ptr().add(j));
+            let bv = vld1q_f32(b.as_ptr().add(j));
+            accv = vfmaq_f32(accv, av, bv);
+            j += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), accv);
+        let mut acc = 0.0f32;
+        for l in lanes {
+            acc += l;
+        }
+        while j < len {
+            acc += a[j] * b[j];
+            j += 1;
+        }
+        acc
     }
-    let mut lanes = [0.0f32; 4];
-    vst1q_f32(lanes.as_mut_ptr(), accv);
-    let mut acc = 0.0f32;
-    for l in lanes {
-        acc += l;
-    }
-    while j < len {
-        acc += a[j] * b[j];
-        j += 1;
-    }
-    acc
 }
 
 /// Int8 AXPY: widen 8 i8 lanes to i16 (`vmovl_s8`), multiply-accumulate
 /// into two i32 quads (`vmlal_s16`). Integer math is exact, so this is
 /// bitwise-identical to the scalar default.
 unsafe fn axpy_i8_neon(av: i32, brow: &[i8], crow: &mut [i32]) {
-    let len = crow.len().min(brow.len());
-    let av4 = vdupq_n_s32(av);
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds the 8-byte i8 load and both 4-lane
-        // i32 load/stores.
-        let b16 = vmovl_s8(vld1_s8(brow.as_ptr().add(j)));
-        let blo = vmovl_s16(vget_low_s16(b16));
-        let bhi = vmovl_s16(vget_high_s16(b16));
-        let clo = vld1q_s32(crow.as_ptr().add(j));
-        let chi = vld1q_s32(crow.as_ptr().add(j + 4));
-        vst1q_s32(crow.as_mut_ptr().add(j), vmlaq_s32(clo, av4, blo));
-        vst1q_s32(crow.as_mut_ptr().add(j + 4), vmlaq_s32(chi, av4, bhi));
-        j += 8;
-    }
-    while j < len {
-        crow[j] += av * brow[j] as i32;
-        j += 1;
+    // SAFETY: j + 8 <= len bounds the 8-byte i8 load and both 4-lane i32
+    // load/stores; the tail uses safe indexing.
+    unsafe {
+        let len = crow.len().min(brow.len());
+        let av4 = vdupq_n_s32(av);
+        let mut j = 0;
+        while j + 8 <= len {
+            let b16 = vmovl_s8(vld1_s8(brow.as_ptr().add(j)));
+            let blo = vmovl_s16(vget_low_s16(b16));
+            let bhi = vmovl_s16(vget_high_s16(b16));
+            let clo = vld1q_s32(crow.as_ptr().add(j));
+            let chi = vld1q_s32(crow.as_ptr().add(j + 4));
+            vst1q_s32(crow.as_mut_ptr().add(j), vmlaq_s32(clo, av4, blo));
+            vst1q_s32(crow.as_mut_ptr().add(j + 4), vmlaq_s32(chi, av4, bhi));
+            j += 8;
+        }
+        while j < len {
+            crow[j] += av * brow[j] as i32;
+            j += 1;
+        }
     }
 }
 
 /// Int8 dot product: widening multiplies into i32 lane partials, lane
 /// reduction, scalar tail. Exact in any order.
 unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
-    let len = a.len().min(b.len());
-    let mut accv = vdupq_n_s32(0);
-    let mut j = 0;
-    while j + 8 <= len {
-        // SAFETY: j + 8 <= len bounds both 8-byte i8 loads.
-        let a16 = vmovl_s8(vld1_s8(a.as_ptr().add(j)));
-        let b16 = vmovl_s8(vld1_s8(b.as_ptr().add(j)));
-        accv = vmlal_s16(accv, vget_low_s16(a16), vget_low_s16(b16));
-        accv = vmlal_s16(accv, vget_high_s16(a16), vget_high_s16(b16));
-        j += 8;
+    // SAFETY: j + 8 <= len bounds both 8-byte i8 loads; the tail uses
+    // safe indexing.
+    unsafe {
+        let len = a.len().min(b.len());
+        let mut accv = vdupq_n_s32(0);
+        let mut j = 0;
+        while j + 8 <= len {
+            let a16 = vmovl_s8(vld1_s8(a.as_ptr().add(j)));
+            let b16 = vmovl_s8(vld1_s8(b.as_ptr().add(j)));
+            accv = vmlal_s16(accv, vget_low_s16(a16), vget_low_s16(b16));
+            accv = vmlal_s16(accv, vget_high_s16(a16), vget_high_s16(b16));
+            j += 8;
+        }
+        let mut acc = vaddvq_s32(accv);
+        while j < len {
+            acc += a[j] as i32 * b[j] as i32;
+            j += 1;
+        }
+        acc
     }
-    let mut acc = vaddvq_s32(accv);
-    while j < len {
-        acc += a[j] as i32 * b[j] as i32;
-        j += 1;
-    }
-    acc
 }
 
 impl MicroKernel for NeonKernel {

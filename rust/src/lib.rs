@@ -29,6 +29,7 @@
 //! Rust binary is self-contained afterwards.
 
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod util;
 pub mod tensor;
@@ -41,6 +42,7 @@ pub mod passes;
 pub mod kernels;
 pub mod tuner;
 pub mod executor;
+pub mod verify;
 pub mod runtime;
 pub mod perfmodel;
 pub mod coordinator;

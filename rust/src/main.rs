@@ -10,6 +10,7 @@
 //! prt-dnn fleet --apps style,sr --mode open --rps 60 --mix style=2,sr=1 --json
 //! prt-dnn model --app style                     # modeled Adreno-640 ms/variant
 //! prt-dnn artifacts [--dir artifacts]           # list + smoke-run artifacts
+//! prt-dnn verify [--apps style,coloring,sr] [--width 0.5] [--json]
 //! ```
 //!
 //! `--tune` enables the plan-time schedule auto-tuner (see
@@ -36,6 +37,13 @@
 //! arrivals and counts admission-control rejections, `--mix a=2,b=1`
 //! weights the tenant mix, and `--json` emits a `FLEET-JSON` line
 //! (schema in `docs/BENCH_SCHEMA.md`).
+//!
+//! `verify` sweeps the static plan verifier (see `docs/ARCHITECTURE.md`
+//! §Verifier) over apps × variants × batch × threads × {f32,int8} ×
+//! {fused,unfused} without executing anything: every `ExecutionPlan` is
+//! planned and proved safe (arena layout, parallel-write disjointness,
+//! schedule legality, fusion dataflow). Any violation fails the command;
+//! `--json` emits a `VERIFY-JSON` line (schema in `docs/BENCH_SCHEMA.md`).
 //!
 //! Every command drives the `session` front door: `Model::for_app` →
 //! `.session().threads(..).batch(..).tune(..).build()` → run / serve.
@@ -78,10 +86,13 @@ fn run(args: &Args) -> Result<()> {
         Some("fleet") => cmd_fleet(args),
         Some("model") => cmd_model(args),
         Some("artifacts") => cmd_artifacts(args),
+        Some("verify") => cmd_verify(args),
         Some(other) => bail!("unknown subcommand '{}'", other),
         None => {
             println!("prt-dnn — real-time DNN inference with pruning + compiler optimization");
-            println!("subcommands: apps | compile | run | serve | fleet | model | artifacts");
+            println!(
+                "subcommands: apps | compile | run | serve | fleet | model | artifacts | verify"
+            );
             Ok(())
         }
     }
@@ -508,6 +519,106 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--batch 1,4` / `--threads 1,4` → sweep axis values. Duplicates are
+/// allowed (they just repeat work); unparseable entries are CLI errors.
+fn parse_usize_list(spec: &str, flag: &str) -> Result<Vec<usize>> {
+    let vals: Vec<usize> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.parse::<usize>()
+                .map(|v| v.max(1))
+                .with_context(|| format!("bad --{} entry '{}'", flag, p))
+        })
+        .collect::<Result<_>>()?;
+    if vals.is_empty() {
+        bail!("--{} needs at least one value", flag);
+    }
+    Ok(vals)
+}
+
+/// Static plan verification sweep: plan every knob combination and run the
+/// analyzer (`prt_dnn::verify`) on the result — no inference executes.
+///
+/// The sweep covers the three paper variants (dense / CSR / compact
+/// weights) × batch × threads × {f32, int8} × {fused, unfused}, i.e. every
+/// execution format the runtime can emit. Debug builds already assert this
+/// at plan time; this command makes the proof available (and CI-gateable)
+/// in release builds too.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let apps: Vec<&str> = args
+        .get_or("apps", "style,coloring,sr")
+        .split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .collect();
+    let width = args.get_f64("width", 0.5);
+    let batches = parse_usize_list(args.get_or("batch", "1,4"), "batch")?;
+    let threads_list = parse_usize_list(args.get_or("threads", "1,4"), "threads")?;
+    let variants = [Variant::Unpruned, Variant::Pruned, Variant::PrunedCompiler];
+
+    let mut configs = 0usize;
+    let mut violations = 0usize;
+    for app in &apps {
+        for &variant in &variants {
+            let model = Model::for_app_scaled(app, variant, width, 42)?;
+            for &batch in &batches {
+                for &threads in &threads_list {
+                    for quant in [Quantization::None, Quantization::Int8] {
+                        for fuse in [true, false] {
+                            let session = model
+                                .session()
+                                .threads(threads)
+                                .batch(batch)
+                                .force_scalar(args.has_flag("force-scalar"))
+                                .fuse(fuse)
+                                .quantize(quant)
+                                .build()?;
+                            configs += 1;
+                            let found = session.verify();
+                            violations += found.len();
+                            for v in &found {
+                                eprintln!(
+                                    "VIOLATION {}[{}] batch={} threads={} {} {}: [{}] {}",
+                                    app,
+                                    variant.name(),
+                                    batch,
+                                    threads,
+                                    if quant.is_quantized() { "int8" } else { "f32" },
+                                    if fuse { "fused" } else { "unfused" },
+                                    v.code(),
+                                    v
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "verify: {} plans checked across {:?} (width {}), {} violation(s)",
+        configs, apps, width, violations
+    );
+    if args.has_flag("json") {
+        let apps_json: Vec<String> = apps.iter().map(|a| format!("\"{}\"", a)).collect();
+        println!(
+            "VERIFY-JSON {{\"schema\":\"verify-v1\",\"apps\":[{}],\"width\":{},\
+             \"configs\":{},\"violations\":{},\"clean\":{}}}",
+            apps_json.join(","),
+            width,
+            configs,
+            violations,
+            violations == 0
+        );
+    }
+    if violations > 0 {
+        bail!("{} plan invariant violation(s) found", violations);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -539,6 +650,16 @@ mod tests {
         }
         // Unparseable weights keep the pre-existing parse error.
         assert!(parse_mix("a=two").unwrap_err().to_string().contains("bad mix weight"));
+    }
+
+    #[test]
+    fn parse_usize_list_parses_and_rejects() {
+        assert_eq!(parse_usize_list("1,4", "batch").unwrap(), vec![1, 4]);
+        // Zero clamps to 1 (a zero-thread/zero-batch sweep is meaningless),
+        // whitespace and empty segments are tolerated.
+        assert_eq!(parse_usize_list(" 2 , 0 ,", "threads").unwrap(), vec![2, 1]);
+        assert!(parse_usize_list("four", "batch").is_err());
+        assert!(parse_usize_list(",,", "batch").is_err());
     }
 
     #[test]

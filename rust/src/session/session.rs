@@ -365,6 +365,16 @@ impl Session {
     pub fn plan(&self) -> &ExecutionPlan {
         self.engine.plan()
     }
+
+    /// Run the static plan verifier ([`crate::verify`]) on this session's
+    /// compiled plan and return every invariant violation found — arena
+    /// overlaps, parallel-write races, illegal schedules, undersized
+    /// scratch, fusion inconsistencies. A correctly compiled plan returns
+    /// an empty vector; debug builds already assert this at plan time,
+    /// this surface re-proves it on demand (release builds, CLI sweeps).
+    pub fn verify(&self) -> Vec<crate::verify::Violation> {
+        crate::verify::verify_plan(self.plan())
+    }
 }
 
 #[cfg(test)]

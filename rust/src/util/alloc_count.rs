@@ -25,11 +25,15 @@ pub struct CountingAlloc;
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: forwarded verbatim to the system allocator under the
+        // caller's own GlobalAlloc contract.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: forwarded verbatim to the system allocator under the
+        // caller's own GlobalAlloc contract.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

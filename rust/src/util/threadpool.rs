@@ -68,6 +68,9 @@ const SPIN_ROUNDS: u32 = 1 << 12;
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr<T>(*mut T);
 
+// SAFETY: see the type docs — the chunking protocol guarantees every
+// parallel part touches a disjoint range of the pointee, so the raw
+// pointer may cross (and be shared across) thread boundaries.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -376,7 +379,10 @@ impl ComputePool {
         };
 
         unsafe fn trampoline<F: Fn(usize) + Sync>(task: *const (), part: usize) {
-            (*(task as *const F))(part);
+            // SAFETY: the dispatcher stores `f as *const F` in the slot
+            // and joins every part before `f` goes out of scope, so the
+            // pointer is a live &F for the whole call.
+            unsafe { (*(task as *const F))(part) };
         }
 
         // One dispatcher at a time. Recover rather than unwrap: a worker

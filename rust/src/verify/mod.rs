@@ -1,0 +1,872 @@
+//! Static plan verifier — proves the executor's safety invariants on an
+//! [`ExecutionPlan`] without executing a single frame.
+//!
+//! The equivalence suites (`plan_equivalence.rs`, `fusion_equivalence.rs`,
+//! `tuner_equivalence.rs`, …) enforce the compiler's invariants
+//! *dynamically*: they sample the plan space and compare output bits. This
+//! module enforces them *statically*: [`verify_plan`] walks the compiled
+//! plan and proves, by symbolic enumeration, that the invariants hold for
+//! **every** frame the plan could ever run — turning "the tests didn't
+//! catch a miscompile" into "the analyzer proved there isn't one".
+//!
+//! Four invariant families are checked:
+//!
+//! 1. **Arena safety** — no two simultaneously-live values share arena
+//!    bytes, in-place claims alias exactly and only when liveness permits,
+//!    fused placeholders own zero-sized slots, and every slot both matches
+//!    its shape and fits the arena.
+//! 2. **Parallel-write races** — for each kernel-backed step the analyzer
+//!    re-derives the [`ComputePool`](crate::util::threadpool::ComputePool)
+//!    partition its [`Schedule`](crate::tuner::Schedule) implies (row/col
+//!    splits × batch fan-out ×
+//!    the reordered tier's per-lane work items) and proves the per-worker
+//!    output ranges are pairwise disjoint and in bounds.
+//! 3. **Schedule legality** — every step schedule is already inside the
+//!    bitwise-safe sanitized space, its ISA is executable on this host and
+//!    obeys the plan-level ISA policy (steps mix only {`Scalar`, plan
+//!    ISA}; dense steps are pinned to the plan ISA), and the plan's
+//!    pre-sized scratch (`scratch`/`panel`/`qpatch`/`qacc`) covers the
+//!    worst-case tile of every step — so steady state provably cannot
+//!    allocate.
+//! 4. **Fusion consistency** — dataflow is topological, no step reads a
+//!    `Step::Fused` placeholder, placeholders carry no inputs/tails, and
+//!    compound epilogues sit only on fuse-scheduled kernel steps.
+//!
+//! The pass runs automatically after planning in debug builds (see
+//! [`Planner::plan_with`](crate::executor::Planner::plan_with)), is
+//! exposed as [`Session::verify`](crate::session::Session::verify) and the
+//! `prt-dnn verify` CLI sweep, and is itself pinned by the [`PlanMutator`]
+//! negative suite (`rust/tests/verifier.rs`), which corrupts plans one
+//! invariant at a time and asserts the matching [`Violation`] fires.
+
+mod mutate;
+
+pub use mutate::PlanMutator;
+
+use crate::executor::plan::{ConvExec, ExecutionPlan, Step};
+use crate::kernels::micro::Isa;
+use crate::tuner::schedule::{Lowering, SplitAxis};
+use std::fmt;
+
+/// Which pre-sized scratch region a [`Violation::ScratchUndersized`]
+/// refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScratchKind {
+    /// The shared im2col patch panel (`ExecutionPlan::scratch_len`).
+    Im2col,
+    /// The reordered tier's per-thread gather panels (`panel_len`).
+    Panel,
+    /// The quantized path's i8 patch copy (`qpatch_len`).
+    QPatch,
+    /// The quantized path's i32 accumulator plane (`qacc_len`).
+    QAcc,
+}
+
+impl fmt::Display for ScratchKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ScratchKind::Im2col => "im2col scratch",
+            ScratchKind::Panel => "reorder panel",
+            ScratchKind::QPatch => "qpatch",
+            ScratchKind::QAcc => "qacc",
+        })
+    }
+}
+
+/// One invariant breach found by [`verify_plan`]. Every variant carries
+/// the step/value ids and element ranges needed to act on the diagnosis
+/// (ranges are in f32 elements from the arena base, like the plan's
+/// internal value slots).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// Two simultaneously-live values own overlapping arena ranges.
+    ArenaOverlap {
+        /// Earlier value (step id that defines it).
+        a: usize,
+        /// Later value whose lifetime still overlaps `a`'s.
+        b: usize,
+        /// `a`'s arena range `[start, end)` in elements.
+        a_range: (usize, usize),
+        /// `b`'s arena range `[start, end)` in elements.
+        b_range: (usize, usize),
+    },
+    /// A value's slot extends past the planned arena length.
+    SlotOutOfBounds {
+        /// Value id.
+        id: usize,
+        /// Slot range `[start, end)` in elements.
+        range: (usize, usize),
+        /// The plan's arena length in elements.
+        arena_len: usize,
+    },
+    /// A slot's length disagrees with the value's inferred shape (or a
+    /// fused placeholder owns a non-zero slot).
+    SlotSizeMismatch {
+        /// Value id.
+        id: usize,
+        /// Slot length in elements.
+        len: usize,
+        /// Length the shape (or placeholder rule) demands.
+        expected: usize,
+    },
+    /// An in-place step's output slot does not alias input 0 exactly.
+    InplaceNotAliased {
+        /// Step id claiming in-place execution.
+        id: usize,
+        /// The step's output slot `(offset, len)`.
+        out: (usize, usize),
+        /// Input 0's slot `(offset, len)`.
+        input: (usize, usize),
+    },
+    /// An in-place step clobbers a value that a later step still reads.
+    InplaceLiveness {
+        /// Step id claiming in-place execution.
+        id: usize,
+        /// The input value being overwritten.
+        input: usize,
+        /// The last step that reads `input` (> `id` = breach).
+        last_use: usize,
+    },
+    /// A step kind that reads inputs while writing (conv/GEMM-like) claims
+    /// in-place execution — only elementwise-aligned steps may alias.
+    InplaceKind {
+        /// Offending step id.
+        id: usize,
+    },
+    /// Two pool workers' write sets overlap within one step's dispatch.
+    WriteOverlap {
+        /// Step id whose dispatch races.
+        id: usize,
+        /// First worker (chunk / part index).
+        worker_a: usize,
+        /// Second worker (chunk / part index).
+        worker_b: usize,
+        /// Overlapping output range `[start, end)` in elements.
+        range: (usize, usize),
+    },
+    /// A worker's write range extends past the step's output slot.
+    WriteOutOfBounds {
+        /// Step id.
+        id: usize,
+        /// Worker (chunk / part index).
+        worker: usize,
+        /// Offending write range `[start, end)` relative to the slot.
+        range: (usize, usize),
+        /// The output slot's length in elements.
+        len: usize,
+    },
+    /// A step schedule selects an ISA this host cannot execute.
+    IsaUnavailable {
+        /// Step id.
+        id: usize,
+        /// The unavailable ISA.
+        isa: Isa,
+    },
+    /// A step schedule breaks the plan-level ISA policy (steps may mix
+    /// only {`Scalar`, plan ISA}; dense steps are pinned to the plan ISA).
+    IsaPolicy {
+        /// Step id.
+        id: usize,
+        /// The step's ISA.
+        isa: Isa,
+        /// The plan's ISA.
+        plan_isa: Isa,
+    },
+    /// A step schedule is outside the sanitized bitwise-safe space.
+    UnsanitizedSchedule {
+        /// Step id.
+        id: usize,
+    },
+    /// A pre-sized scratch region does not cover a step's worst case —
+    /// steady state would have to allocate (or overrun).
+    ScratchUndersized {
+        /// Step id whose requirement is uncovered.
+        id: usize,
+        /// Which scratch region.
+        kind: ScratchKind,
+        /// Elements the step needs.
+        need: usize,
+        /// Elements the plan reserved.
+        have: usize,
+    },
+    /// A step reads a `Step::Fused` placeholder, which never
+    /// materializes a value.
+    FusedPlaceholderRead {
+        /// Reading step id.
+        id: usize,
+        /// The placeholder value id being read.
+        input: usize,
+    },
+    /// A `Step::Fused` placeholder carries state it must not have
+    /// (inputs, a tail, or an in-place claim).
+    PlaceholderMisuse {
+        /// Placeholder step id.
+        id: usize,
+        /// What it carries.
+        detail: &'static str,
+    },
+    /// A step reads a value defined at or after itself (non-topological
+    /// dataflow — the read would observe garbage).
+    ForwardInput {
+        /// Reading step id.
+        id: usize,
+        /// The forward-referenced input id.
+        input: usize,
+    },
+    /// A fused epilogue (a compound step's `StepTail`) sits on a step
+    /// that cannot legally carry one.
+    TailIllegal {
+        /// Step id.
+        id: usize,
+        /// Why the tail is illegal.
+        detail: &'static str,
+    },
+    /// A step's kernel geometry disagrees with its inferred output shape
+    /// (the dispatch would compute a different element count).
+    StepGeometry {
+        /// Step id.
+        id: usize,
+        /// What disagrees.
+        detail: &'static str,
+    },
+}
+
+impl Violation {
+    /// Stable machine-readable tag for this violation class (used by the
+    /// CLI JSON report and the mutation suite).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Violation::ArenaOverlap { .. } => "arena-overlap",
+            Violation::SlotOutOfBounds { .. } => "slot-oob",
+            Violation::SlotSizeMismatch { .. } => "slot-size",
+            Violation::InplaceNotAliased { .. } => "inplace-alias",
+            Violation::InplaceLiveness { .. } => "inplace-liveness",
+            Violation::InplaceKind { .. } => "inplace-kind",
+            Violation::WriteOverlap { .. } => "write-overlap",
+            Violation::WriteOutOfBounds { .. } => "write-oob",
+            Violation::IsaUnavailable { .. } => "isa-unavailable",
+            Violation::IsaPolicy { .. } => "isa-policy",
+            Violation::UnsanitizedSchedule { .. } => "unsanitized-schedule",
+            Violation::ScratchUndersized { .. } => "scratch-undersized",
+            Violation::FusedPlaceholderRead { .. } => "fused-read",
+            Violation::PlaceholderMisuse { .. } => "placeholder-misuse",
+            Violation::ForwardInput { .. } => "forward-input",
+            Violation::TailIllegal { .. } => "tail-illegal",
+            Violation::StepGeometry { .. } => "step-geometry",
+        }
+    }
+
+    /// The primary step/value id the violation anchors on.
+    pub fn id(&self) -> usize {
+        match self {
+            Violation::ArenaOverlap { b, .. } => *b,
+            Violation::SlotOutOfBounds { id, .. }
+            | Violation::SlotSizeMismatch { id, .. }
+            | Violation::InplaceNotAliased { id, .. }
+            | Violation::InplaceLiveness { id, .. }
+            | Violation::InplaceKind { id }
+            | Violation::WriteOverlap { id, .. }
+            | Violation::WriteOutOfBounds { id, .. }
+            | Violation::IsaUnavailable { id, .. }
+            | Violation::IsaPolicy { id, .. }
+            | Violation::UnsanitizedSchedule { id }
+            | Violation::ScratchUndersized { id, .. }
+            | Violation::FusedPlaceholderRead { id, .. }
+            | Violation::PlaceholderMisuse { id, .. }
+            | Violation::ForwardInput { id, .. }
+            | Violation::TailIllegal { id, .. }
+            | Violation::StepGeometry { id, .. } => *id,
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::ArenaOverlap { a, b, a_range, b_range } => write!(
+                f,
+                "arena overlap: value {} [{}, {}) and value {} [{}, {}) are live together",
+                a, a_range.0, a_range.1, b, b_range.0, b_range.1
+            ),
+            Violation::SlotOutOfBounds { id, range, arena_len } => write!(
+                f,
+                "value {} slot [{}, {}) exceeds arena length {}",
+                id, range.0, range.1, arena_len
+            ),
+            Violation::SlotSizeMismatch { id, len, expected } => write!(
+                f,
+                "value {} slot holds {} elements, shape demands {}",
+                id, len, expected
+            ),
+            Violation::InplaceNotAliased { id, out, input } => write!(
+                f,
+                "step {} claims in-place but output ({}, {}) != input 0 ({}, {})",
+                id, out.0, out.1, input.0, input.1
+            ),
+            Violation::InplaceLiveness { id, input, last_use } => write!(
+                f,
+                "step {} overwrites value {} in place, but step {} still reads it",
+                id, input, last_use
+            ),
+            Violation::InplaceKind { id } => {
+                write!(f, "step {} kind cannot execute in place", id)
+            }
+            Violation::WriteOverlap { id, worker_a, worker_b, range } => write!(
+                f,
+                "step {}: workers {} and {} both write [{}, {})",
+                id, worker_a, worker_b, range.0, range.1
+            ),
+            Violation::WriteOutOfBounds { id, worker, range, len } => write!(
+                f,
+                "step {}: worker {} writes [{}, {}) past slot length {}",
+                id, worker, range.0, range.1, len
+            ),
+            Violation::IsaUnavailable { id, isa } => {
+                write!(f, "step {} schedules {} which this host cannot run", id, isa.tag())
+            }
+            Violation::IsaPolicy { id, isa, plan_isa } => write!(
+                f,
+                "step {} schedules {} outside the plan's {{scalar, {}}} policy",
+                id,
+                isa.tag(),
+                plan_isa.tag()
+            ),
+            Violation::UnsanitizedSchedule { id } => {
+                write!(f, "step {} schedule is outside the sanitized space", id)
+            }
+            Violation::ScratchUndersized { id, kind, need, have } => write!(
+                f,
+                "step {} needs {} {} elements but the plan reserved {}",
+                id, need, kind, have
+            ),
+            Violation::FusedPlaceholderRead { id, input } => {
+                write!(f, "step {} reads fused placeholder {}", id, input)
+            }
+            Violation::PlaceholderMisuse { id, detail } => {
+                write!(f, "fused placeholder {} carries {}", id, detail)
+            }
+            Violation::ForwardInput { id, input } => {
+                write!(f, "step {} reads value {} defined at or after it", id, input)
+            }
+            Violation::TailIllegal { id, detail } => {
+                write!(f, "step {} fused tail is illegal: {}", id, detail)
+            }
+            Violation::StepGeometry { id, detail } => {
+                write!(f, "step {} geometry mismatch: {}", id, detail)
+            }
+        }
+    }
+}
+
+/// Run every static check on a compiled plan and return all violations
+/// found (empty = the plan is proven safe under the analyzer's model).
+///
+/// The checks are independent: one corruption commonly trips several
+/// (e.g. an overlapped slot is both an [`Violation::ArenaOverlap`] and,
+/// if shrunk, a [`Violation::SlotSizeMismatch`]). Order within the vector
+/// follows the check families, not severity.
+pub fn verify_plan(plan: &ExecutionPlan) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_slots(plan, &mut out);
+    check_liveness(plan, &mut out);
+    check_dataflow(plan, &mut out);
+    check_schedules(plan, &mut out);
+    check_scratch(plan, &mut out);
+    check_races(plan, &mut out);
+    out
+}
+
+/// Element count each value's shape demands.
+fn elems(plan: &ExecutionPlan, id: usize) -> usize {
+    plan.shapes[id].iter().product()
+}
+
+/// Last step id that reads each value; `n` (one past the last step) for
+/// plan outputs, which the context reads after the whole sweep; the
+/// defining step itself for dead values.
+fn last_uses(plan: &ExecutionPlan) -> Vec<usize> {
+    let n = plan.steps.len();
+    let mut last: Vec<usize> = (0..n).collect();
+    for (id, st) in plan.steps.iter().enumerate() {
+        for &v in &st.inputs {
+            if v < id && last[v] < id {
+                last[v] = id;
+            }
+        }
+    }
+    for &o in &plan.output_ids {
+        if o < n {
+            last[o] = n;
+        }
+    }
+    last
+}
+
+/// Slot bounds + slot-vs-shape checks (family 1, per-value part).
+fn check_slots(plan: &ExecutionPlan, out: &mut Vec<Violation>) {
+    let arena_len = plan.arena_len();
+    for (id, st) in plan.steps.iter().enumerate() {
+        let slot = plan.values[id];
+        let expected = if matches!(st.step, Step::Fused) { 0 } else { elems(plan, id) };
+        if slot.len != expected {
+            out.push(Violation::SlotSizeMismatch { id, len: slot.len, expected });
+        }
+        if slot.len > 0 && slot.offset + slot.len > arena_len {
+            out.push(Violation::SlotOutOfBounds {
+                id,
+                range: (slot.offset, slot.offset + slot.len),
+                arena_len,
+            });
+        }
+    }
+}
+
+/// Arena liveness + in-place legality (family 1, cross-value part).
+fn check_liveness(plan: &ExecutionPlan, out: &mut Vec<Violation>) {
+    let last = last_uses(plan);
+    let n = plan.steps.len();
+
+    // In-place claims: exact alias, eligible kind, and liveness permit.
+    for (id, st) in plan.steps.iter().enumerate() {
+        if !st.inplace {
+            continue;
+        }
+        let eligible = matches!(
+            st.step,
+            Step::Act(_)
+                | Step::BatchNorm { .. }
+                | Step::InstanceNorm { .. }
+                | Step::Add
+                | Step::Output
+        );
+        if !eligible {
+            out.push(Violation::InplaceKind { id });
+        }
+        let slot = plan.values[id];
+        match st.inputs.first() {
+            Some(&v) => {
+                let iv = plan.values[v];
+                if slot.offset != iv.offset || slot.len != iv.len {
+                    out.push(Violation::InplaceNotAliased {
+                        id,
+                        out: (slot.offset, slot.len),
+                        input: (iv.offset, iv.len),
+                    });
+                }
+                if v < n && last[v] > id {
+                    out.push(Violation::InplaceLiveness { id, input: v, last_use: last[v] });
+                }
+            }
+            None => out.push(Violation::InplaceNotAliased {
+                id,
+                out: (slot.offset, slot.len),
+                input: (0, 0),
+            }),
+        }
+    }
+
+    // Pairwise live-range overlap. Values are live from their defining
+    // step through their last consumer (plan outputs: to the end). The
+    // one sanctioned overlap is an in-place alias: consumer `b` takes
+    // over its input's range at exactly the input's last use.
+    for a in 0..n {
+        let va = plan.values[a];
+        if va.len == 0 {
+            continue;
+        }
+        for b in (a + 1)..n {
+            let vb = plan.values[b];
+            if vb.len == 0 || b > last[a] {
+                continue;
+            }
+            let overlap = va.offset < vb.offset + vb.len && vb.offset < va.offset + va.len;
+            if !overlap {
+                continue;
+            }
+            let sanctioned = plan.steps[b].inplace
+                && plan.steps[b].inputs.first() == Some(&a)
+                && last[a] == b
+                && va.offset == vb.offset
+                && va.len == vb.len;
+            if !sanctioned {
+                out.push(Violation::ArenaOverlap {
+                    a,
+                    b,
+                    a_range: (va.offset, va.offset + va.len),
+                    b_range: (vb.offset, vb.offset + vb.len),
+                });
+            }
+        }
+    }
+}
+
+/// Topological dataflow + placeholder/tail consistency (family 4).
+fn check_dataflow(plan: &ExecutionPlan, out: &mut Vec<Violation>) {
+    for (id, st) in plan.steps.iter().enumerate() {
+        for &v in &st.inputs {
+            if v >= id {
+                out.push(Violation::ForwardInput { id, input: v });
+            } else if matches!(plan.steps[v].step, Step::Fused) {
+                out.push(Violation::FusedPlaceholderRead { id, input: v });
+            }
+        }
+        if matches!(st.step, Step::Fused) {
+            if !st.inputs.is_empty() {
+                out.push(Violation::PlaceholderMisuse { id, detail: "inputs" });
+            }
+            if st.tail.is_some() {
+                out.push(Violation::PlaceholderMisuse { id, detail: "a fused tail" });
+            }
+            if st.inplace {
+                out.push(Violation::PlaceholderMisuse { id, detail: "an in-place claim" });
+            }
+        }
+        if let Some(tail) = &st.tail {
+            if !matches!(st.step, Step::Conv { .. } | Step::DwConv { .. } | Step::Dense { .. }) {
+                out.push(Violation::TailIllegal { id, detail: "carrier is not a kernel step" });
+            }
+            if !st.sched.fuse {
+                out.push(Violation::TailIllegal { id, detail: "schedule has fuse disabled" });
+            }
+            if st.inplace {
+                out.push(Violation::TailIllegal { id, detail: "compound step claims in-place" });
+            }
+            if tail.residual && st.inputs.len() < 2 {
+                out.push(Violation::TailIllegal { id, detail: "residual without operand" });
+            }
+        }
+    }
+}
+
+/// Schedule sanity + ISA policy (family 3, schedule part).
+fn check_schedules(plan: &ExecutionPlan, out: &mut Vec<Violation>) {
+    let plan_isa = plan.isa();
+    for (id, st) in plan.steps.iter().enumerate() {
+        if st.sched != st.sched.sanitized() {
+            out.push(Violation::UnsanitizedSchedule { id });
+        }
+        if !st.sched.isa.available() {
+            out.push(Violation::IsaUnavailable { id, isa: st.sched.isa });
+        }
+        let pinned = matches!(st.step, Step::Dense { .. });
+        let legal = if pinned {
+            st.sched.isa == plan_isa
+        } else {
+            st.sched.isa == Isa::Scalar || st.sched.isa == plan_isa
+        };
+        if !legal {
+            out.push(Violation::IsaPolicy { id, isa: st.sched.isa, plan_isa });
+        }
+    }
+}
+
+/// Scratch coverage: re-derive every step's worst-case scratch demand
+/// exactly as the kernels consume it and prove the plan's pre-sized
+/// regions cover it (family 3, zero-alloc part).
+fn check_scratch(plan: &ExecutionPlan, out: &mut Vec<Violation>) {
+    for (id, st) in plan.steps.iter().enumerate() {
+        let Step::Conv { exec, geom, .. } = &st.step else { continue };
+        let sh = &plan.shapes[id];
+        if sh.len() != 4 {
+            continue; // flagged by check_races
+        }
+        let (nb, oc) = (sh[0], sh[1]);
+        let opx = geom.out_px();
+        let patch_rows = match exec {
+            ConvExec::Column { cc } => cc.kept(),
+            ConvExec::QColumn { qcc } => qcc.kept(),
+            _ => geom.cols(),
+        };
+        let direct = st.sched.lowering == Lowering::Direct
+            && matches!(exec, ConvExec::Dense { .. })
+            && geom.identity_lowering();
+        if !direct {
+            let need = nb * patch_rows * opx;
+            if need > plan.scratch_len() {
+                out.push(Violation::ScratchUndersized {
+                    id,
+                    kind: ScratchKind::Im2col,
+                    need,
+                    have: plan.scratch_len(),
+                });
+            }
+        }
+        if matches!(
+            exec,
+            ConvExec::QDense { .. } | ConvExec::QCsr { .. } | ConvExec::QColumn { .. }
+        ) {
+            let need_patch = nb * patch_rows * opx;
+            if need_patch > plan.qpatch_len() {
+                out.push(Violation::ScratchUndersized {
+                    id,
+                    kind: ScratchKind::QPatch,
+                    need: need_patch,
+                    have: plan.qpatch_len(),
+                });
+            }
+            let need_acc = nb * oc * opx;
+            if need_acc > plan.qacc_len() {
+                out.push(Violation::ScratchUndersized {
+                    id,
+                    kind: ScratchKind::QAcc,
+                    need: need_acc,
+                    have: plan.qacc_len(),
+                });
+            }
+        }
+        if let ConvExec::Reordered { plan: rp, .. } = exec {
+            let need =
+                crate::kernels::sparse_gemm::reordered_panel_len(rp, opx, plan.threads());
+            if need > plan.panel_len() {
+                out.push(Violation::ScratchUndersized {
+                    id,
+                    kind: ScratchKind::Panel,
+                    need,
+                    have: plan.panel_len(),
+                });
+            }
+        }
+    }
+}
+
+/// The contiguous chunk partition `ComputePool::parallel_chunks` computes
+/// for `n` items on `threads` workers (same formula, re-derived here so
+/// the analyzer proves the property of the *actual* partition).
+fn pool_chunks(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = threads.max(1).min(n);
+    if chunks == 1 {
+        return vec![(0, n)];
+    }
+    let base = n / chunks;
+    let rem = n % chunks;
+    (0..chunks)
+        .map(|t| {
+            let start = t * base + t.min(rem);
+            (start, start + base + usize::from(t < rem))
+        })
+        .collect()
+}
+
+/// Walk a `[gs, ge)` range of a `per`-sized-per-sample global space,
+/// yielding `(sample, lo, hi)` segments — mirrors
+/// `kernels::for_each_sample_segment`.
+fn sample_segments(per: usize, gs: usize, ge: usize, mut f: impl FnMut(usize, usize, usize)) {
+    let mut g = gs;
+    while g < ge {
+        let s = g / per;
+        let lo = g % per;
+        let hi = (ge - s * per).min(per);
+        f(s, lo, hi);
+        g = s * per + hi;
+    }
+}
+
+/// One worker's write interval: `(worker, start, end)` in elements
+/// relative to the step's output slot.
+type Write = (usize, usize, usize);
+
+/// Parallel-write race detection (family 2): per kernel-backed step,
+/// symbolically enumerate the per-worker output write sets the schedule
+/// implies and prove they are pairwise disjoint and in bounds. (Kernels
+/// zero-fill the output before accumulating, so full coverage is not an
+/// invariant — disjointness and bounds are.)
+fn check_races(plan: &ExecutionPlan, out: &mut Vec<Violation>) {
+    let threads = plan.threads();
+    for (id, st) in plan.steps.iter().enumerate() {
+        let mut writes: Vec<Write> = Vec::new();
+        match &st.step {
+            Step::Conv { exec, geom, .. } => {
+                let sh = &plan.shapes[id];
+                if sh.len() != 4 {
+                    out.push(Violation::StepGeometry { id, detail: "conv output is not NCHW" });
+                    continue;
+                }
+                let (nb, oc) = (sh[0], sh[1]);
+                let opx = sh[2] * sh[3];
+                if opx != geom.out_px() {
+                    out.push(Violation::StepGeometry {
+                        id,
+                        detail: "conv geometry out_px != output shape",
+                    });
+                    continue;
+                }
+                let rows = match exec {
+                    ConvExec::Dense { w } => w.dim(0),
+                    ConvExec::Csr { csr } => csr.rows,
+                    ConvExec::Column { cc } => cc.rows,
+                    ConvExec::Pattern { plan: pp } => pp.out_c,
+                    ConvExec::Reordered { plan: rp, .. } => rp.rows,
+                    ConvExec::QDense { qw } => qw.rows,
+                    ConvExec::QCsr { qcsr } => qcsr.rows,
+                    ConvExec::QColumn { qcc } => qcc.rows,
+                };
+                if rows != oc {
+                    out.push(Violation::StepGeometry {
+                        id,
+                        detail: "weight rows != output channels",
+                    });
+                    continue;
+                }
+                match exec {
+                    // GEMM-backed and quantized drivers honor the split
+                    // axis over the combined batch × rows (or × cols)
+                    // space.
+                    ConvExec::Dense { .. }
+                    | ConvExec::Column { .. }
+                    | ConvExec::QDense { .. }
+                    | ConvExec::QCsr { .. }
+                    | ConvExec::QColumn { .. } => match st.sched.split {
+                        SplitAxis::Rows => {
+                            let chunks = pool_chunks(nb * oc, threads);
+                            for (w, (gs, ge)) in chunks.into_iter().enumerate() {
+                                writes.push((w, gs * opx, ge * opx));
+                            }
+                        }
+                        SplitAxis::Cols => {
+                            let chunks = pool_chunks(nb * opx, threads);
+                            for (w, (gs, ge)) in chunks.into_iter().enumerate() {
+                                sample_segments(opx, gs, ge, |s, c0, c1| {
+                                    for r in 0..oc {
+                                        let base = (s * oc + r) * opx;
+                                        writes.push((w, base + c0, base + c1));
+                                    }
+                                });
+                            }
+                        }
+                    },
+                    // The f32 CSR and pattern kernels always chunk the
+                    // combined row space (the split knob is a no-op).
+                    ConvExec::Csr { .. } | ConvExec::Pattern { .. } => {
+                        let chunks = pool_chunks(nb * oc, threads);
+                        for (w, (gs, ge)) in chunks.into_iter().enumerate() {
+                            writes.push((w, gs * opx, ge * opx));
+                        }
+                    }
+                    // The reordered tier dispatches the combined
+                    // batch × lane part space; each work item owns rows
+                    // `group.rows[row_start..row_end]` of its sample.
+                    ConvExec::Reordered { plan: rp, lanes } => {
+                        let lane_count = lanes.threads().max(1);
+                        for s in 0..nb {
+                            for (lane, items) in lanes.items.iter().enumerate() {
+                                let u = s * lane_count + lane;
+                                for item in items {
+                                    let Some(grp) = rp.groups.get(item.group) else {
+                                        out.push(Violation::WriteOutOfBounds {
+                                            id,
+                                            worker: u,
+                                            range: (item.group, item.group + 1),
+                                            len: rp.groups.len(),
+                                        });
+                                        continue;
+                                    };
+                                    let bad_span = item.row_start > item.row_end
+                                        || item.row_end > grp.rows.len();
+                                    if bad_span {
+                                        out.push(Violation::WriteOutOfBounds {
+                                            id,
+                                            worker: u,
+                                            range: (item.row_start, item.row_end),
+                                            len: grp.rows.len(),
+                                        });
+                                        continue;
+                                    }
+                                    for &row in &grp.rows[item.row_start..item.row_end] {
+                                        let row = row as usize;
+                                        if row >= rp.rows {
+                                            out.push(Violation::WriteOutOfBounds {
+                                                id,
+                                                worker: u,
+                                                range: (row, row + 1),
+                                                len: rp.rows,
+                                            });
+                                            continue;
+                                        }
+                                        let base = (s * oc + row) * opx;
+                                        writes.push((u, base, base + opx));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Step::DwConv { .. } => {
+                let sh = &plan.shapes[id];
+                if sh.len() != 4 {
+                    out.push(Violation::StepGeometry { id, detail: "dw output is not NCHW" });
+                    continue;
+                }
+                let (nb, c, oh, ow) = (sh[0], sh[1], sh[2], sh[3]);
+                match st.sched.split {
+                    // Rows: one chunk of whole channel planes per worker.
+                    SplitAxis::Rows => {
+                        let chunks = pool_chunks(nb * c, threads);
+                        for (w, (cs, ce)) in chunks.into_iter().enumerate() {
+                            writes.push((w, cs * oh * ow, ce * oh * ow));
+                        }
+                    }
+                    // Cols: finer grain — output rows across all planes.
+                    SplitAxis::Cols => {
+                        let chunks = pool_chunks(nb * c * oh, threads);
+                        for (w, (rs, re)) in chunks.into_iter().enumerate() {
+                            writes.push((w, rs * ow, re * ow));
+                        }
+                    }
+                }
+            }
+            Step::Dense { out_f, .. } => {
+                let sh = &plan.shapes[id];
+                let nb = sh.first().copied().unwrap_or(1);
+                if sh.iter().product::<usize>() != nb * *out_f {
+                    out.push(Violation::StepGeometry {
+                        id,
+                        detail: "dense output shape != batch × out_f",
+                    });
+                    continue;
+                }
+                if st.sched.split == SplitAxis::Cols && nb > 1 {
+                    let chunks = pool_chunks(nb, threads);
+                    for (w, (bs, be)) in chunks.into_iter().enumerate() {
+                        writes.push((w, bs * out_f, be * out_f));
+                    }
+                } else {
+                    let chunks = pool_chunks(nb * out_f, threads);
+                    for (w, (gs, ge)) in chunks.into_iter().enumerate() {
+                        writes.push((w, gs, ge));
+                    }
+                }
+            }
+            // Elementwise / data-movement steps partition their flat
+            // output space with the same contiguous chunk formula — their
+            // disjointness is the formula's, proven by the kernel-step
+            // cases above. Placeholders write nothing.
+            _ => continue,
+        }
+        let len = plan.values[id].len;
+        writes.retain(|&(w, s, e)| {
+            if e > len {
+                out.push(Violation::WriteOutOfBounds { id, worker: w, range: (s, e), len });
+                false
+            } else {
+                true
+            }
+        });
+        writes.sort_by_key(|&(_, s, e)| (s, e));
+        for pair in writes.windows(2) {
+            let (wa, _, ea) = pair[0];
+            let (wb, sb, eb) = pair[1];
+            if sb < ea {
+                out.push(Violation::WriteOverlap {
+                    id,
+                    worker_a: wa,
+                    worker_b: wb,
+                    range: (sb, ea.min(eb)),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Deliberate plan corruption — the verifier's negative test harness.
+//!
+//! [`PlanMutator`] takes a *valid* [`ExecutionPlan`] and breaks exactly one
+//! invariant per method, deterministically (always the first applicable
+//! site). The mutation suite (`rust/tests/verifier.rs`) plans real graphs,
+//! applies each corruption class, and asserts [`verify_plan`] reports the
+//! matching [`Violation`] — proving the analyzer actually *detects* what
+//! it claims to prove, not merely that clean plans pass.
+//!
+//! This type exists for testing only: it is never constructed on any
+//! production path (nothing in the crate calls it), but it must be `pub`
+//! so the out-of-crate integration suite can drive it.
+
+use crate::executor::plan::{ConvExec, ExecutionPlan, Step, ValueSlot};
+use crate::kernels::micro::Isa;
+
+#[cfg(doc)]
+use super::{verify_plan, Violation};
+
+/// Test-only plan corruptor; see the module docs.
+pub struct PlanMutator<'p> {
+    plan: &'p mut ExecutionPlan,
+}
+
+impl<'p> PlanMutator<'p> {
+    /// Wrap a plan for mutation.
+    pub fn new(plan: &'p mut ExecutionPlan) -> Self {
+        PlanMutator { plan }
+    }
+
+    /// Corruption class 1 — **arena overlap**: move a step's output slot
+    /// onto its first live input's range, so two simultaneously-live
+    /// values share bytes. Expected: [`Violation::ArenaOverlap`].
+    ///
+    /// Returns `false` when the plan has no applicable site.
+    pub fn overlap_live_ranges(&mut self) -> bool {
+        for id in 0..self.plan.steps.len() {
+            let st = &self.plan.steps[id];
+            if st.inplace || self.plan.values[id].len == 0 {
+                continue;
+            }
+            let Some(&v) = st.inputs.first() else { continue };
+            if v >= id || self.plan.values[v].len == 0 {
+                continue;
+            }
+            if self.plan.values[v].offset == self.plan.values[id].offset {
+                continue;
+            }
+            self.plan.values[id].offset = self.plan.values[v].offset;
+            return true;
+        }
+        false
+    }
+
+    /// Corruption class 2 — **split disjointness**: skew a reordered-tier
+    /// lane boundary so one output row is claimed by two work items
+    /// (extend an item's `row_end` into its neighbor's range, or — when
+    /// every item already spans its whole group — duplicate an item into
+    /// the last lane). Expected: [`Violation::WriteOverlap`].
+    pub fn skew_lane_boundary(&mut self) -> bool {
+        for st in &mut self.plan.steps {
+            let Step::Conv { exec: ConvExec::Reordered { plan: rp, lanes }, .. } = &mut st.step
+            else {
+                continue;
+            };
+            // Prefer a genuine boundary skew: an item covering a prefix of
+            // its group grows one row into the neighbor item's range.
+            for lane in lanes.items.iter_mut() {
+                for item in lane.iter_mut() {
+                    if item.row_end < rp.groups[item.group].rows.len() {
+                        item.row_end += 1;
+                        return true;
+                    }
+                }
+            }
+            // Every item spans its whole group: duplicate one, so the same
+            // rows are claimed twice.
+            let Some(item) = lanes.items.iter().flatten().next().cloned() else { continue };
+            if let Some(last) = lanes.items.last_mut() {
+                last.push(item);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Corruption class 3 — **ISA swap**: reschedule a kernel step onto a
+    /// SIMD tier the running host cannot execute (there is always at least
+    /// one: a host detects at most one SIMD tier). Expected:
+    /// [`Violation::IsaUnavailable`] (plus the policy/sanitizer checks).
+    pub fn swap_step_isa(&mut self) -> bool {
+        let Some(foreign) = [Isa::Avx2, Isa::Neon].into_iter().find(|i| !i.available()) else {
+            return false;
+        };
+        for st in &mut self.plan.steps {
+            if matches!(st.step, Step::Conv { .. } | Step::DwConv { .. } | Step::Dense { .. }) {
+                st.sched.isa = foreign;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Corruption class 4 — **scratch shrink**: knock one element off a
+    /// non-empty pre-sized scratch region (im2col scratch, reorder panel,
+    /// or quant scratch), so some step's worst case no longer fits and
+    /// steady state would allocate. Expected:
+    /// [`Violation::ScratchUndersized`].
+    pub fn shrink_scratch(&mut self) -> bool {
+        if self.plan.scratch_len > 0 {
+            self.plan.scratch_len -= 1;
+            return true;
+        }
+        if self.plan.panel_len > 0 {
+            self.plan.panel_len -= 1;
+            return true;
+        }
+        if self.plan.qpatch_len > 0 {
+            self.plan.qpatch_len -= 1;
+            return true;
+        }
+        if self.plan.qacc_len > 0 {
+            self.plan.qacc_len -= 1;
+            return true;
+        }
+        false
+    }
+
+    /// Corruption class 5 — **placeholder read**: rewire a later step's
+    /// first input onto a `Step::Fused` placeholder, which never
+    /// materializes a value. Expected: [`Violation::FusedPlaceholderRead`].
+    /// Requires a fused plan (returns `false` otherwise).
+    pub fn read_fused_placeholder(&mut self) -> bool {
+        let placeholder = self
+            .plan
+            .steps
+            .iter()
+            .position(|s| matches!(s.step, Step::Fused));
+        let Some(f) = placeholder else { return false };
+        for id in (f + 1)..self.plan.steps.len() {
+            let st = &mut self.plan.steps[id];
+            if matches!(st.step, Step::Fused) || st.inputs.is_empty() {
+                continue;
+            }
+            st.inputs[0] = f;
+            return true;
+        }
+        false
+    }
+
+    /// Corruption class 6 — **illegal in-place claim**: alias a step's
+    /// output onto its first input although later steps still read that
+    /// input. Expected: [`Violation::InplaceLiveness`] (and, for
+    /// non-elementwise carriers, [`Violation::InplaceKind`]).
+    pub fn claim_illegal_inplace(&mut self) -> bool {
+        let last = {
+            let n = self.plan.steps.len();
+            let mut last: Vec<usize> = (0..n).collect();
+            for (id, st) in self.plan.steps.iter().enumerate() {
+                for &v in &st.inputs {
+                    if v < id && last[v] < id {
+                        last[v] = id;
+                    }
+                }
+            }
+            for &o in &self.plan.output_ids {
+                if o < n {
+                    last[o] = n;
+                }
+            }
+            last
+        };
+        for id in 0..self.plan.steps.len() {
+            let st = &self.plan.steps[id];
+            if st.inplace || self.plan.values[id].len == 0 {
+                continue;
+            }
+            let Some(&v) = st.inputs.first() else { continue };
+            if v >= id || last[v] <= id || self.plan.values[v].len == 0 {
+                continue;
+            }
+            let len = self.plan.values[id].len;
+            self.plan.values[id] = ValueSlot { offset: self.plan.values[v].offset, len };
+            self.plan.steps[id].inplace = true;
+            return true;
+        }
+        false
+    }
+
+    /// Corruption class 7 — **slot shrink**: halve a kernel step's output
+    /// slot, so the dispatch's write space no longer fits the buffer.
+    /// Expected: [`Violation::WriteOutOfBounds`] (and
+    /// [`Violation::SlotSizeMismatch`]).
+    pub fn shrink_slot(&mut self) -> bool {
+        for id in 0..self.plan.steps.len() {
+            let st = &self.plan.steps[id];
+            let kernel = matches!(
+                st.step,
+                Step::Conv { .. } | Step::DwConv { .. } | Step::Dense { .. }
+            );
+            if kernel && self.plan.values[id].len > 1 {
+                self.plan.values[id].len /= 2;
+                return true;
+            }
+        }
+        false
+    }
+}

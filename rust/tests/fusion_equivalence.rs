@@ -152,6 +152,14 @@ fn assert_fused_equivalence(tag: &str, g: &Graph, cfg: &ExecConfig) -> usize {
         .unwrap_or_else(|e| panic!("{}: unfused plan: {}", tag, e));
     fused.validate_layout().unwrap();
     unfused.validate_layout().unwrap();
+    // Both plans must pass the static verifier (arena / race / schedule /
+    // fusion invariants) before any bitwise comparison: a verifier hit
+    // here localizes a planner bug that the output diff would only show
+    // as unexplained corruption.
+    let fv = prt_dnn::verify::verify_plan(&fused);
+    assert!(fv.is_empty(), "{}: fused plan failed static verification: {:?}", tag, fv);
+    let uv = prt_dnn::verify::verify_plan(&unfused);
+    assert!(uv.is_empty(), "{}: unfused plan failed static verification: {:?}", tag, uv);
     assert_eq!(unfused.fused_steps(), 0, "{}", tag);
     assert!(
         fused.arena_len() <= unfused.arena_len(),

@@ -24,6 +24,15 @@ fn tmp(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("prt-tuner-eq-{}-{}.json", std::process::id(), name))
 }
 
+/// Every plan this suite compares must first pass the static verifier
+/// (arena / race / schedule / fusion invariants): a tuned schedule that
+/// races or overflows would otherwise only surface as an unexplained
+/// bitwise diff downstream.
+fn assert_verified(tag: &str, plan: &prt_dnn::executor::ExecutionPlan) {
+    let v = prt_dnn::verify::verify_plan(plan);
+    assert!(v.is_empty(), "{}: static verification failed: {:?}", tag, v);
+}
+
 fn structured_input(shape: &[usize]) -> Tensor {
     let mut x = Tensor::zeros(shape);
     for (i, v) in x.data_mut().iter_mut().enumerate() {
@@ -60,6 +69,8 @@ fn tuned_plans_match_default_bitwise_on_all_apps() {
 
             let p0 = Planner::plan(&g, &base_cfg).unwrap();
             let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+            assert_verified(&format!("{} t={} base", app, threads), &p0);
+            assert_verified(&format!("{} t={} tuned", app, threads), &p1);
             assert!(!p0.tuned() && p1.tuned());
 
             let x = structured_input(&p0.input_shapes()[0]);
@@ -130,6 +141,8 @@ fn dense_steps_are_tuned_and_match_default_bitwise() {
 
         let p0 = Planner::plan(&g, &base_cfg).unwrap();
         let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+        assert_verified(&format!("fc t={} base", threads), &p0);
+        assert_verified(&format!("fc t={} tuned", threads), &p1);
         assert!(p1.tuned());
         // A TuneRequest was issued for the dense step: its schedule shows
         // up in the plan-side serialization, and the search missed the
@@ -203,6 +216,8 @@ fn depthwise_steps_are_tuned_and_match_default_bitwise() {
 
         let p0 = Planner::plan(&g, &base_cfg).unwrap();
         let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+        assert_verified(&format!("dw t={} base", threads), &p0);
+        assert_verified(&format!("dw t={} tuned", threads), &p1);
         assert!(p1.tuned());
         // A TuneRequest was issued for the depthwise step: its schedule
         // shows up in the plan-side serialization, and the cold cache
@@ -280,6 +295,8 @@ fn reordered_group_order_is_tuned_and_matches_default_bitwise() {
 
         let p0 = Planner::plan(&g, &base_cfg).unwrap();
         let p1 = Planner::plan(&g, &tuned_cfg).unwrap();
+        assert_verified(&format!("reord t={} base", threads), &p0);
+        assert_verified(&format!("reord t={} tuned", threads), &p1);
         assert!(p1.tuned());
         let sched = p1.schedules_json();
         assert!(
@@ -365,6 +382,9 @@ fn fused_steps_are_tuned_and_match_default_bitwise() {
         );
         let p2 = Planner::plan(&g, &ExecConfig::dense(threads).with_fuse(false)).unwrap();
         assert_eq!(p2.fused_steps(), 0);
+        assert_verified(&format!("fuse t={} default", threads), &p0);
+        assert_verified(&format!("fuse t={} tuned", threads), &p1);
+        assert_verified(&format!("fuse t={} no-fuse", threads), &p2);
 
         let x = structured_input(&p0.input_shapes()[0]);
         let o0 = ExecContext::for_plan(&p0).run(&p0, std::slice::from_ref(&x)).unwrap();
@@ -428,6 +448,7 @@ fn tuner_smoke_cache_hit_on_second_plan() {
     let cfg = ExecConfig::compact(2, schemes).with_tuning(opts);
 
     let p1 = Planner::plan(&g, &cfg).unwrap();
+    assert_verified("smoke cold", &p1);
     assert!(p1.tuned());
     let s1 = p1.tune_stats();
     assert!(s1.cache_misses > 0, "cold cache must miss");
@@ -435,6 +456,7 @@ fn tuner_smoke_cache_hit_on_second_plan() {
     assert!(cache.exists(), "cache file not written");
 
     let p2 = Planner::plan(&g, &cfg).unwrap();
+    assert_verified("smoke warm", &p2);
     let s2 = p2.tune_stats();
     assert_eq!(s2.bench_runs, 0, "warm cache must perform zero benchmark runs");
     assert_eq!(s2.cache_misses, 0, "warm cache must not miss");

@@ -1,0 +1,196 @@
+//! Acceptance suite for the static plan verifier (`prt_dnn::verify`):
+//!
+//! 1. **Clean sweep** — every knob combination the runtime can emit
+//!    (3 apps × {dense, csr, compact} × batch {1, 4} × threads {1, 4} ×
+//!    {f32, int8} × {fused, unfused}) plans to zero violations. This is
+//!    the soundness half: the analyzer must not cry wolf on any plan the
+//!    planner actually produces.
+//! 2. **Mutation detection** — `PlanMutator` corrupts a valid plan one
+//!    invariant at a time (arena overlap, lane-boundary skew, foreign
+//!    ISA, scratch shrink, fused-placeholder read, illegal in-place
+//!    claim, slot shrink) and the verifier must flag each with the
+//!    matching typed `Violation`. This is the completeness half: passing
+//!    clean plans means nothing unless broken plans actually fail.
+
+use prt_dnn::apps::builders::build_style;
+use prt_dnn::apps::Variant;
+use prt_dnn::dsl::op::{Activation, Op, PadMode};
+use prt_dnn::dsl::Graph;
+use prt_dnn::executor::{ExecConfig, ExecutionPlan, Planner};
+use prt_dnn::pruning::scheme::project_scheme;
+use prt_dnn::pruning::verify::apply_mask;
+use prt_dnn::session::{Model, Quantization};
+use prt_dnn::tensor::Tensor;
+use prt_dnn::util::rng::Rng;
+use prt_dnn::verify::{verify_plan, PlanMutator};
+
+/// A small style-transfer plan (convs, residual adds, upsampling) — the
+/// richest step mix of the three apps. Verified clean before returning,
+/// so every mutation test starts from a provably good baseline.
+fn style_plan(cfg: &ExecConfig) -> ExecutionPlan {
+    let g = build_style(32, 0.25, 301);
+    let p = Planner::plan(&g, cfg).unwrap();
+    assert!(verify_plan(&p).is_empty(), "baseline style plan must verify clean");
+    p
+}
+
+/// A one-conv graph filter-pruned by hand: filter/channel schemes are what
+/// compile to the `Reordered` kernel (the stock apps use column/pattern),
+/// and only that kernel has per-lane work-item boundaries to skew.
+fn reordered_plan(threads: usize) -> ExecutionPlan {
+    let mut rng = Rng::new(90);
+    let mut g = Graph::new("reord-net");
+    let x = g.add("x", Op::Input { shape: vec![1, 6, 12, 12] }, &[]);
+    let c1 = g.add(
+        "c1",
+        Op::Conv2d {
+            out_c: 16,
+            in_c: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            pad_mode: PadMode::Zeros,
+            fused_act: Activation::Relu,
+        },
+        &[x],
+    );
+    g.add("out", Op::Output, &[c1]);
+    let w = Tensor::randn(&[16, 6, 3, 3], &mut rng);
+    let scheme = project_scheme(&w, "filter", 0.5, None);
+    g.set_param("c1.weight", apply_mask(&w, &scheme));
+    let cfg = ExecConfig::compact(threads, vec![("c1".to_string(), scheme)]);
+    let p = Planner::plan(&g, &cfg).unwrap();
+    assert!(verify_plan(&p).is_empty(), "baseline reordered plan must verify clean");
+    p
+}
+
+/// The corrupted plan must produce at least one violation carrying one of
+/// the expected codes (a mutation may legitimately trip secondary checks
+/// too — e.g. a shrunk slot is both a size mismatch and a write overflow).
+fn assert_detects(plan: &ExecutionPlan, codes: &[&str], what: &str) {
+    let found = verify_plan(plan);
+    assert!(!found.is_empty(), "{}: verifier missed the corruption entirely", what);
+    assert!(
+        codes.iter().any(|c| found.iter().any(|v| v.code() == *c)),
+        "{}: expected one of {:?}, got {:?}",
+        what,
+        codes,
+        found
+    );
+    // Every violation renders a non-empty human-readable message.
+    for v in &found {
+        assert!(!v.to_string().is_empty(), "{}: empty Display for {:?}", what, v);
+    }
+}
+
+#[test]
+fn clean_sweep_every_knob_combination_verifies_zero_violations() {
+    for app in ["style", "coloring", "sr"] {
+        for variant in [Variant::Unpruned, Variant::Pruned, Variant::PrunedCompiler] {
+            let model = Model::for_app_scaled(app, variant, 0.25, 42).unwrap();
+            for batch in [1usize, 4] {
+                for threads in [1usize, 4] {
+                    for quant in [Quantization::None, Quantization::Int8] {
+                        for fuse in [true, false] {
+                            let session = model
+                                .session()
+                                .threads(threads)
+                                .batch(batch)
+                                .fuse(fuse)
+                                .quantize(quant)
+                                .build()
+                                .unwrap();
+                            let v = session.verify();
+                            assert!(
+                                v.is_empty(),
+                                "{}[{}] batch={} threads={} {:?} fuse={}: {:?}",
+                                app,
+                                variant.name(),
+                                batch,
+                                threads,
+                                quant,
+                                fuse,
+                                v
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn detects_arena_overlap() {
+    let mut p = style_plan(&ExecConfig::dense(2));
+    assert!(PlanMutator::new(&mut p).overlap_live_ranges(), "no mutation site");
+    assert_detects(&p, &["arena-overlap"], "overlap_live_ranges");
+}
+
+#[test]
+fn detects_skewed_lane_boundary_as_write_overlap() {
+    // threads = 4 so the reordered step actually has multiple lanes with
+    // per-lane row boundaries to skew.
+    let mut p = reordered_plan(4);
+    assert!(PlanMutator::new(&mut p).skew_lane_boundary(), "no reordered step to skew");
+    assert_detects(&p, &["write-overlap"], "skew_lane_boundary t=4");
+
+    // Single-lane plans fall back to duplicating a work item — the same
+    // rows claimed twice is still a write overlap.
+    let mut p1 = reordered_plan(1);
+    assert!(PlanMutator::new(&mut p1).skew_lane_boundary(), "no reordered step to skew");
+    assert_detects(&p1, &["write-overlap"], "skew_lane_boundary t=1");
+}
+
+#[test]
+fn detects_foreign_isa() {
+    let mut p = style_plan(&ExecConfig::dense(1));
+    assert!(PlanMutator::new(&mut p).swap_step_isa(), "no kernel step to retarget");
+    assert_detects(&p, &["isa-unavailable"], "swap_step_isa");
+}
+
+#[test]
+fn detects_undersized_scratch() {
+    let mut p = style_plan(&ExecConfig::dense(2));
+    assert!(PlanMutator::new(&mut p).shrink_scratch(), "plan has no scratch to shrink");
+    assert_detects(&p, &["scratch-undersized"], "shrink_scratch");
+}
+
+#[test]
+fn detects_read_of_fused_placeholder() {
+    let p0 = style_plan(&ExecConfig::dense(1));
+    assert!(p0.fused_steps() > 0, "style plan must fuse for this test");
+    let mut p = p0;
+    assert!(PlanMutator::new(&mut p).read_fused_placeholder(), "no placeholder to rewire");
+    assert_detects(&p, &["fused-read"], "read_fused_placeholder");
+}
+
+#[test]
+fn detects_illegal_inplace_claim() {
+    // --no-fuse keeps the residual adds as standalone steps, so some
+    // value is read after the first step that consumes it — the liveness
+    // conflict the mutation needs.
+    let mut p = style_plan(&ExecConfig::dense(1).with_fuse(false));
+    assert!(PlanMutator::new(&mut p).claim_illegal_inplace(), "no in-place site");
+    assert_detects(&p, &["inplace-liveness"], "claim_illegal_inplace");
+}
+
+#[test]
+fn detects_shrunken_output_slot() {
+    let mut p = style_plan(&ExecConfig::dense(2));
+    assert!(PlanMutator::new(&mut p).shrink_slot(), "no kernel slot to shrink");
+    assert_detects(&p, &["slot-size", "write-oob"], "shrink_slot");
+}
+
+#[test]
+fn violations_carry_stable_codes_and_anchor_ids() {
+    let mut p = style_plan(&ExecConfig::dense(2));
+    assert!(PlanMutator::new(&mut p).shrink_slot());
+    let found = verify_plan(&p);
+    assert!(!found.is_empty());
+    for v in &found {
+        assert!(!v.code().is_empty(), "{:?}: empty code", v);
+        assert!(v.id() < p.len(), "{:?}: anchor id outside the plan's steps", v);
+    }
+}
